@@ -1,0 +1,55 @@
+//! Quickstart: the ResMoE pipeline on one MoE layer in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use resmoe::compress::{CompressCtx, Compressor, ResMoE};
+use resmoe::moe::{ExpertArch, MoeLayer};
+use resmoe::tensor::Matrix;
+use resmoe::util::format_bytes;
+use resmoe::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    // A Mixtral-style MoE layer: 8 upcycled SwiGLU experts, top-2 routing.
+    let layer = MoeLayer::random(ExpertArch::SwiGlu, 64, 224, 8, 2, true, false, &mut rng);
+    println!(
+        "original layer: 8 experts x {} params = {}",
+        layer.experts[0].n_params(),
+        format_bytes(layer.expert_params() * 4)
+    );
+
+    // ResMoE (Alg. 1): Wasserstein-barycenter center + pruned residuals,
+    // keeping 25 % of the expert parameters.
+    let mut ctx = CompressCtx::new(0.25, &mut rng);
+    let compressed = ResMoE::up().compress(&layer, &mut ctx);
+    println!(
+        "compressed:    barycenter ({}) + residuals = {}",
+        format_bytes(compressed.base.as_ref().unwrap().n_params() * 4),
+        format_bytes(compressed.memory_bytes())
+    );
+    println!(
+        "approximation error (Table-1 metric): {:.4}",
+        compressed.approx_error(&layer)
+    );
+
+    // Restore (Alg. 2) and compare outputs on a token batch.
+    let restored = compressed.to_layer(&layer);
+    let mut xrng = Rng::new(7);
+    let x = Matrix::randn(16, 64, 1.0, &mut xrng);
+    let y0 = layer.forward(&x, None);
+    let y1 = restored.forward(&x, None);
+    let rel = y0.sq_dist(&y1) / y0.frob_norm_sq();
+    println!("relative output distortion at 4x compression: {rel:.5}");
+
+    // Versus pruning the experts directly (no barycenter).
+    let mut ctx = CompressCtx::new(0.25, &mut rng);
+    let plain =
+        resmoe::compress::prune::UnstructuredPruning { concat: true }.compress(&layer, &mut ctx);
+    println!(
+        "plain UP error {:.4}  vs  ResMoE(UP) error {:.4}  — the residual trick",
+        plain.approx_error(&layer),
+        compressed.approx_error(&layer)
+    );
+}

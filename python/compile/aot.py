@@ -1,0 +1,198 @@
+"""AOT lowering (build path): JAX/Pallas → HLO **text** artifacts the rust
+runtime loads via the PJRT C API.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (manifest.json indexes them):
+* `lm_score_<model>_b<B>.hlo.txt` — batched scoring: tokens i32 [B, T] plus
+  the model weights (arguments, in manifest order) → logits f32 [B, T, V].
+* `moe_block_dense_<arch>.hlo.txt` — one MoE layer, dense routing, inner
+  compute through the Pallas grouped_expert_forward kernel.
+* `moe_block_resmoe_<arch>.hlo.txt` — the ResMoE(SVD) factored layer
+  through the Pallas grouped_residual_matmul kernel (Alg. 2, fused).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import checkpoint
+from .common import ALL_CONFIGS
+from .model import batched_logits, moe_block_dense, moe_block_resmoe
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_lm_score(cfg, params, batch_sizes, out_dir, manifest):
+    names = sorted(k for k in params.keys() if not k.startswith("head."))
+    weights = [jnp.asarray(params[n], jnp.float32) for n in names]
+
+    def fn(tokens, *ws):
+        p = dict(zip(names, ws))
+        return (batched_logits(p, cfg, tokens),)
+
+    for b in batch_sizes:
+        tok_spec = jax.ShapeDtypeStruct((b, cfg.max_seq), jnp.int32)
+        w_specs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+        lowered = jax.jit(fn).lower(tok_spec, *w_specs)
+        fname = f"lm_score_{cfg.name}_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            {
+                "name": f"lm_score_{cfg.name}_b{b}",
+                "kind": "lm_score",
+                "model": cfg.name,
+                "file": fname,
+                "batch": b,
+                "seq": cfg.max_seq,
+                "vocab": cfg.vocab_size,
+                "inputs": [{"name": "tokens", "shape": [b, cfg.max_seq], "dtype": "int32"}]
+                + [{"name": n, **spec_of(w)} for n, w in zip(names, weights)],
+                "output": {"shape": [b, cfg.max_seq, cfg.vocab_size], "dtype": "float32"},
+            }
+        )
+        print(f"  wrote {fname}", flush=True)
+
+
+def lower_moe_blocks(out_dir, manifest):
+    """Fixed mini-geometry MoE blocks (the kernel-path artifacts used by
+    the rust↔python agreement tests and the serving hot path)."""
+    b, p, pi, n, top_k, r = 16, 64, 224, 8, 2, 24
+    f32 = jnp.float32
+
+    # ---- dense block (Pallas grouped_expert_forward inside).
+    def dense_fn(x, w_g, w1, b1, w3, b3, w2, b2):
+        return (
+            moe_block_dense(x, w_g, w1, b1, w2, b2, w3, b3, top_k=top_k, use_kernel=True),
+        )
+
+    specs = [
+        jax.ShapeDtypeStruct(s, f32)
+        for s in [
+            (b, p),
+            (n, p),
+            (n, pi, p),
+            (n, pi),
+            (n, pi, p),
+            (n, pi),
+            (n, p, pi),
+            (n, p),
+        ]
+    ]
+    lowered = jax.jit(dense_fn).lower(*specs)
+    fname = "moe_block_dense_swiglu.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    input_names = ["x", "w_g", "w1", "b1", "w3", "b3", "w2", "b2"]
+    manifest["artifacts"].append(
+        {
+            "name": "moe_block_dense_swiglu",
+            "kind": "moe_block",
+            "file": fname,
+            "geometry": {"b": b, "p": p, "pi": pi, "n": n, "top_k": top_k},
+            "inputs": [
+                {"name": nm, "shape": list(s.shape), "dtype": "float32"}
+                for nm, s in zip(input_names, specs)
+            ],
+            "output": {"shape": [b, p], "dtype": "float32"},
+        }
+    )
+    print(f"  wrote {fname}", flush=True)
+
+    # ---- resmoe factored block (Pallas grouped_residual_matmul inside).
+    def resmoe_fn(x, w_g, bw1, bb1, u1, v1, bw3, bb3, u3, v3, bw2, u2, v2, b2):
+        return (
+            moe_block_resmoe(
+                x, w_g, bw1, bb1, u1, v1, bw2, u2, v2, b2,
+                base_w3=bw3, base_b3=bb3, u3=u3, v3=v3,
+                top_k=top_k, use_kernel=True,
+            ),
+        )
+
+    r2 = r
+    shapes = [
+        (b, p), (n, p),
+        (pi, p), (pi,), (n, pi, r), (n, r, p),
+        (pi, p), (pi,), (n, pi, r), (n, r, p),
+        (p, pi), (n, p, r2), (n, r2, pi), (n, p),
+    ]
+    rspecs = [jax.ShapeDtypeStruct(s, f32) for s in shapes]
+    lowered = jax.jit(resmoe_fn).lower(*rspecs)
+    fname = "moe_block_resmoe_swiglu.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    rnames = [
+        "x", "w_g", "base_w1", "base_b1", "u1", "v1",
+        "base_w3", "base_b3", "u3", "v3", "base_w2", "u2", "v2", "b2",
+    ]
+    manifest["artifacts"].append(
+        {
+            "name": "moe_block_resmoe_swiglu",
+            "kind": "moe_block_resmoe",
+            "file": fname,
+            "geometry": {"b": b, "p": p, "pi": pi, "n": n, "top_k": top_k, "rank": r},
+            "inputs": [
+                {"name": nm, "shape": list(s.shape), "dtype": "float32"}
+                for nm, s in zip(rnames, rspecs)
+            ],
+            "output": {"shape": [b, p], "dtype": "float32"},
+        }
+    )
+    print(f"  wrote {fname}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", default="1,4,16")
+    ap.add_argument("--models", default="mixtral-mini,switch-mini-8")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    batch_sizes = [int(x) for x in args.batches.split(",")]
+    for name in args.models.split(","):
+        cfg = ALL_CONFIGS[name]
+        ckpt_path = os.path.join(args.out, f"{name}.rmw")
+        if not os.path.exists(ckpt_path):
+            print(f"  skipping {name}: checkpoint missing (run pretrain first)")
+            continue
+        _, tensors = checkpoint.load_checkpoint(ckpt_path)
+        params = {k: np.asarray(v) for k, v in tensors.items()}
+        # Restore vector shapes (1×n → n) for model application.
+        for k in list(params.keys()):
+            if params[k].shape[0] == 1 and (
+                k.endswith((".b1", ".b2", ".b3", "norm1", "norm2")) or k == "final_norm"
+            ):
+                params[k] = params[k][0]
+        print(f"== lowering lm_score for {name} ==", flush=True)
+        lower_lm_score(cfg, params, batch_sizes, args.out, manifest)
+    print("== lowering MoE block kernels ==", flush=True)
+    lower_moe_blocks(args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""RMW1 checkpoint writer/reader — the python half of
+`rust/src/moe/model_io.rs`.
+
+Layout: ``b"RMW1" | u32 header_len | JSON header | f32-LE blob``.
+Tensor names follow the rust module paths (``blocks.3.ffn.experts.5.w1``).
+Vectors are 1×n tensors; all matrices are ``[out, in]``.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"RMW1"
+
+
+def save_checkpoint(path: str, config_dict: dict, tensors: dict) -> None:
+    """tensors: name -> 1-D or 2-D float32 numpy array."""
+    directory = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        a = np.asarray(arr, dtype=np.float32)
+        if a.ndim == 1:
+            a = a.reshape(1, -1)
+        if a.ndim != 2:
+            raise ValueError(f"tensor {name} has ndim {a.ndim}")
+        directory.append(
+            {"name": name, "rows": int(a.shape[0]), "cols": int(a.shape[1]), "offset": offset}
+        )
+        offset += a.size
+        blobs.append(np.ascontiguousarray(a).tobytes())
+    header = json.dumps(
+        {"config": config_dict, "tensors": directory}, sort_keys=True, separators=(",", ":")
+    ).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def load_checkpoint(path: str):
+    """Returns (config_dict, {name: np.ndarray[rows, cols]})."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (header_len,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(header_len))
+        blob = np.frombuffer(f.read(), dtype="<f4")
+    tensors = {}
+    for t in header["tensors"]:
+        n = t["rows"] * t["cols"]
+        tensors[t["name"]] = blob[t["offset"] : t["offset"] + n].reshape(
+            t["rows"], t["cols"]
+        ).copy()
+    return header["config"], tensors

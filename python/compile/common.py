@@ -1,0 +1,95 @@
+"""Shared model configurations, mirroring `rust/src/moe/config.rs` presets.
+
+Every linear layer stores weights as ``[out, in]`` and applies ``x @ W.T``
+(the rust convention), so checkpoints round-trip bit-exactly.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int      # p
+    d_inner: int      # p_I
+    n_layers: int
+    n_heads: int
+    max_seq: int
+    n_experts: int    # N
+    top_k: int
+    arch: str         # "relu" | "swiglu"
+    expert_init: str  # "independent" | "upcycled"
+    moe_every: int
+    shared_expert: bool
+
+    def is_moe_layer(self, layer: int) -> bool:
+        return (layer + 1) % self.moe_every == 0
+
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json_dict(self) -> dict:
+        return asdict(self)
+
+
+def switch_mini(n_experts: int = 8) -> ModelConfig:
+    return ModelConfig(
+        name=f"switch-mini-{n_experts}",
+        vocab_size=256,
+        d_model=64,
+        d_inner=256,
+        n_layers=6,
+        n_heads=4,
+        max_seq=128,
+        n_experts=n_experts,
+        top_k=1,
+        arch="relu",
+        expert_init="independent",
+        moe_every=2,
+        shared_expert=False,
+    )
+
+
+def mixtral_mini() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-mini",
+        vocab_size=256,
+        d_model=64,
+        d_inner=224,
+        n_layers=6,
+        n_heads=4,
+        max_seq=128,
+        n_experts=8,
+        top_k=2,
+        arch="swiglu",
+        expert_init="upcycled",
+        moe_every=1,
+        shared_expert=False,
+    )
+
+
+def deepseek_mini() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-mini",
+        vocab_size=256,
+        d_model=64,
+        d_inner=44,
+        n_layers=4,
+        n_heads=4,
+        max_seq=128,
+        n_experts=64,
+        top_k=6,
+        arch="swiglu",
+        expert_init="upcycled",
+        moe_every=1,
+        shared_expert=True,
+    )
+
+
+ALL_CONFIGS = {
+    "switch-mini-8": switch_mini(8),
+    "switch-mini-16": switch_mini(16),
+    "mixtral-mini": mixtral_mini(),
+    "deepseek-mini": deepseek_mini(),
+}

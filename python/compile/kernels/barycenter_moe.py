@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels for the ResMoE inference hot-spot.
+
+Two kernels:
+
+* :func:`grouped_residual_matmul` — the barycenter-shared grouped matmul.
+  The shared contribution ``hbase = x @ W1w.T`` is computed once at L2 (XLA
+  fuses it); the kernel adds each expert's thin low-rank residual
+  correction. Grid = (experts, token tiles).
+
+* :func:`grouped_expert_forward` — fused dense forward of all experts on a
+  shared batch (the *uncompressed* comparison path and the dense-routing
+  MoE block's inner loop).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the BlockSpecs below keep the
+barycenter tile resident across the expert grid dimension (index map
+ignores `e` for `hbase`/`x`), so on a real TPU the W1w tile stays in VMEM
+while only the small U/V factors stream from HBM per expert — the
+HBM-traffic analog of "load the barycenter once, residuals on demand".
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter and real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_kernel(x_ref, hbase_ref, u_ref, v_ref, o_ref):
+    # Block shapes: x [Bt, p], hbase [Bt, pI], u [1, pI, r], v [1, r, p],
+    # o [1, Bt, pI]. One grid step = one (expert, token-tile) pair.
+    x = x_ref[...]
+    u = u_ref[0]
+    v = v_ref[0]
+    t = jnp.dot(x, v.T)                      # [Bt, r]   — thin
+    corr = jnp.dot(t, u.T)                   # [Bt, pI]
+    o_ref[0] = hbase_ref[...] + corr
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def grouped_residual_matmul(x, hbase, u, v, block_b: int = 0):
+    """h[e] = hbase + (x @ v[e].T) @ u[e].T for all experts.
+
+    Args:
+      x:     [B, p] float32
+      hbase: [B, pI] float32 — shared barycenter term (computed once)
+      u:     [N, pI, r] float32
+      v:     [N, r, p] float32
+      block_b: token tile size (0 = whole batch per grid step)
+    Returns: [N, B, pI] float32
+    """
+    b, p = x.shape
+    n, pi, r = u.shape
+    bt = block_b if block_b and block_b < b else b
+    assert b % bt == 0, f"batch {b} not divisible by tile {bt}"
+    grid = (n, b // bt)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, p), lambda e, tb: (tb, 0)),        # x: reused across e
+            pl.BlockSpec((bt, pi), lambda e, tb: (tb, 0)),       # hbase: reused across e
+            pl.BlockSpec((1, pi, r), lambda e, tb: (e, 0, 0)),   # u: streams per expert
+            pl.BlockSpec((1, r, p), lambda e, tb: (e, 0, 0)),    # v: streams per expert
+        ],
+        out_specs=pl.BlockSpec((1, bt, pi), lambda e, tb: (e, tb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, pi), x.dtype),
+        interpret=True,
+    )(x, hbase, u, v)
+
+
+def _expert_fwd_kernel_relu(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[0].T) + b1_ref[0][None, :]
+    h = jnp.maximum(h, 0.0)
+    o_ref[0] = jnp.dot(h, w2_ref[0].T) + b2_ref[0][None, :]
+
+
+def _expert_fwd_kernel_swiglu(x_ref, w1_ref, b1_ref, w3_ref, b3_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[0].T) + b1_ref[0][None, :]
+    g = jnp.dot(x, w3_ref[0].T) + b3_ref[0][None, :]
+    h = (h / (1.0 + jnp.exp(-h))) * g
+    o_ref[0] = jnp.dot(h, w2_ref[0].T) + b2_ref[0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def grouped_expert_forward(x, w1, b1, w2, b2, w3=None, b3=None, block_b: int = 0):
+    """Dense forward of all experts on a shared batch: [N, B, p].
+
+    Args mirror :func:`ref.grouped_expert_forward_ref`.
+    """
+    b, p = x.shape
+    n, pi, _ = w1.shape
+    bt = block_b if block_b and block_b < b else b
+    assert b % bt == 0
+    grid = (n, b // bt)
+    x_spec = pl.BlockSpec((bt, p), lambda e, tb: (tb, 0))
+    mat_spec = lambda rows, cols: pl.BlockSpec((1, rows, cols), lambda e, tb: (e, 0, 0))
+    vec_spec = lambda cols: pl.BlockSpec((1, cols), lambda e, tb: (e, 0))
+    out_spec = pl.BlockSpec((1, bt, p), lambda e, tb: (e, tb, 0))
+    out_shape = jax.ShapeDtypeStruct((n, b, p), x.dtype)
+    if w3 is None:
+        return pl.pallas_call(
+            _expert_fwd_kernel_relu,
+            grid=grid,
+            in_specs=[x_spec, mat_spec(pi, p), vec_spec(pi), mat_spec(p, pi), vec_spec(p)],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, w1, b1, w2, b2)
+    return pl.pallas_call(
+        _expert_fwd_kernel_swiglu,
+        grid=grid,
+        in_specs=[
+            x_spec,
+            mat_spec(pi, p),
+            vec_spec(pi),
+            mat_spec(pi, p),
+            vec_spec(pi),
+            mat_spec(p, pi),
+            vec_spec(p),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, w1, b1, w3, b3, w2, b2)
+
+
+def vmem_bytes_per_step(b, p, pi, r, n_experts=None):
+    """Analytic VMEM footprint of one grid step of the residual kernel —
+    the §Perf structural metric (interpret-mode wallclock is not a TPU
+    proxy).
+
+    Returns (bytes_resident, bytes_streamed_per_expert): the x/hbase tiles
+    are resident across the expert dimension; u/v stream per expert.
+    """
+    resident = 4 * (b * p + b * pi)          # x + hbase tiles
+    streamed = 4 * (pi * r + r * p + b * pi) # u + v + output tile
+    return resident, streamed
+
+
+def mxu_utilization_estimate(b, p, pi, r):
+    """Fraction of MACs in MXU-shaped (≥8×128-tileable) matmuls for one
+    expert's residual correction, vs. the dense-restore alternative.
+
+    The two thin matmuls perform ``b·r·(p+pi)`` MACs vs the dense
+    ``b·p·pi``; utilization of the systolic array degrades when r < 8
+    (sub-sublane tiles), which this estimate charges as r/8 efficiency.
+    """
+    thin_macs = b * r * (p + pi)
+    dense_macs = b * p * pi
+    eff = min(1.0, r / 8.0)
+    return {
+        "thin_macs": thin_macs,
+        "dense_macs": dense_macs,
+        "flop_ratio": thin_macs / dense_macs,
+        "mxu_efficiency": eff,
+        "effective_speedup": dense_macs / (thin_macs / max(eff, 1e-9)),
+    }

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Everything here is straight-line jnp with no pallas, used by pytest to
+validate the kernels under hypothesis-driven shape/value sweeps, and by
+`model.py` as the fallback path when kernels are disabled.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def grouped_residual_matmul_ref(x, hbase, u, v):
+    """h[e] = hbase + (x @ v[e].T) @ u[e].T  for every expert e.
+
+    The ResMoE(SVD) inference hot-spot: the barycenter contribution
+    ``hbase`` is computed ONCE and shared by every expert; each expert only
+    adds a thin rank-r correction.
+
+    Args:
+      x:     [B, p]   token activations
+      hbase: [B, pI]  shared barycenter contribution  (x @ W1w.T)
+      u:     [N, pI, r] residual left factors
+      v:     [N, r, p]  residual right factors (singular values folded in)
+    Returns: [N, B, pI]
+    """
+    t = jnp.einsum("bp,nrp->nbr", x, v)
+    corr = jnp.einsum("nbr,nir->nbi", t, u)
+    return hbase[None, :, :] + corr
+
+
+def grouped_expert_forward_ref(x, w1, b1, w2, b2, w3=None, b3=None):
+    """Dense forward of ALL experts on the same batch.
+
+    Args:
+      x:  [B, p]
+      w1: [N, pI, p], b1: [N, pI]
+      w2: [N, p, pI], b2: [N, p]
+      w3/b3: gated path (swiglu) or None (relu)
+    Returns: [N, B, p]
+    """
+    h = jnp.einsum("bp,nip->nbi", x, w1) + b1[:, None, :]
+    if w3 is None:
+        h = jnp.maximum(h, 0.0)
+    else:
+        g = jnp.einsum("bp,nip->nbi", x, w3) + b3[:, None, :]
+        h = silu(h) * g
+    return jnp.einsum("nbi,npi->nbp", h, w2) + b2[:, None, :]
+
+
+def resmoe_expert_hidden_ref(x, w1_base, b1_base, u1, v1):
+    """Hidden pre-activation of restored experts:
+    ``h[e] = x @ (W1w + U1[e] V1[e]).T + b1w`` — the factored ResMoE(SVD)
+    form of Alg. 2 (restore-then-matmul, algebraically fused).
+
+    Args:
+      x: [B, p]; w1_base: [pI, p]; b1_base: [pI]
+      u1: [N, pI, r]; v1: [N, r, p]
+    Returns: [N, B, pI]
+    """
+    hbase = x @ w1_base.T + b1_base[None, :]
+    return grouped_residual_matmul_ref(x, hbase, u1, v1)

@@ -1,0 +1,245 @@
+"""Layer-2 JAX model: the decoder-only MoE LM, mirroring
+`rust/src/moe/transformer.rs` op-for-op (RMSNorm eps 1e-6, learned
+positional embeddings, pre-norm blocks, `x @ W.T` linear convention) so that
+checkpoints trained here evaluate identically in rust.
+
+Also defines the two MoE-block formulations that get AOT-lowered:
+
+* :func:`moe_block_dense` — dense routing over the original experts, inner
+  compute through the Pallas :func:`grouped_expert_forward` kernel.
+* :func:`moe_block_resmoe` — the ResMoE(SVD) factored form: one shared
+  barycenter expert plus per-expert low-rank residual corrections through
+  the Pallas :func:`grouped_residual_matmul` kernel (Alg. 2 fused).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .kernels import barycenter_moe as kernels
+from .kernels import ref
+
+
+def rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + 1e-6) * gain
+
+
+def router_probs(x, w_g, top_k):
+    """Dense top-k routing weights: [B, N] with exactly top_k nonzeros/row,
+    softmax-normalized over the selected logits (paper §3.1).
+
+    Implemented with `sort` rather than `lax.top_k`: jax lowers top_k to the
+    HLO `topk` instruction, which the xla_extension-0.5.1 text parser (the
+    rust runtime's loader) does not know. `sort` round-trips fine.
+    """
+    logits = x @ w_g.T                                   # [B, N]
+    sorted_logits = jnp.sort(logits, axis=-1)            # ascending
+    thresh = sorted_logits[:, -top_k][:, None]
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(logits >= thresh, logits, neg)
+    return jax.nn.softmax(masked, axis=-1)
+
+
+def moe_block_dense(x, w_g, w1, b1, w2, b2, w3=None, b3=None, top_k=2, use_kernel=True):
+    """Dense-dispatch MoE layer: every expert computes the whole batch, the
+    router weights combine. Clean HLO for AOT; N× FLOPs is fine at mini
+    scale.
+
+    x [B,p]; w_g [N,p]; w1 [N,pI,p]; b1 [N,pI]; w2 [N,p,pI]; b2 [N,p].
+    Returns [B, p].
+    """
+    probs = router_probs(x, w_g, top_k)                  # [B, N]
+    fwd = kernels.grouped_expert_forward if use_kernel else ref.grouped_expert_forward_ref
+    y = fwd(x, w1, b1, w2, b2, w3, b3)                   # [N, B, p]
+    return jnp.einsum("bn,nbp->bp", probs, y)
+
+
+def moe_block_resmoe(
+    x,
+    w_g,
+    base_w1,
+    base_b1,
+    u1,
+    v1,
+    base_w2,
+    u2,
+    v2,
+    b2,
+    base_w3=None,
+    base_b3=None,
+    u3=None,
+    v3=None,
+    top_k=2,
+    use_kernel=True,
+):
+    """ResMoE(SVD)-compressed MoE layer in factored form.
+
+    Restored weights are ``W1_k = W1w + U1[k] V1[k]`` etc. The shared
+    barycenter matmuls are computed ONCE per batch; per-expert corrections
+    are rank-r. This is Algorithm 2 with the restore fused into the matmul.
+
+    Shapes: base_w1 [pI,p], u1 [N,pI,r], v1 [N,r,p]; base_w2 [p,pI],
+    u2 [N,p,r2], v2 [N,r2,pI]; b2 [N,p].
+    """
+    n = u1.shape[0]
+    probs = router_probs(x, w_g, top_k)                  # [B, N]
+    grm = kernels.grouped_residual_matmul if use_kernel else ref.grouped_residual_matmul_ref
+    # --- hidden pre-activation: shared base + per-expert correction.
+    hbase1 = x @ base_w1.T + base_b1[None, :]            # [B, pI] (once!)
+    h = grm(x, hbase1, u1, v1)                           # [N, B, pI]
+    if base_w3 is None:
+        h = jnp.maximum(h, 0.0)
+    else:
+        hbase3 = x @ base_w3.T + base_b3[None, :]
+        g = grm(x, hbase3, u3, v3)
+        h = (h / (1.0 + jnp.exp(-h))) * g
+    # --- output projection: shared base W2w on the MEAN activation cannot
+    # be shared exactly (h differs per expert), so the base matmul runs per
+    # expert but the residual stays rank-r2: y[k] = h[k] @ (W2w + U2 V2).T.
+    y_base = jnp.einsum("nbi,pi->nbp", h, base_w2)       # [N, B, p]
+    t = jnp.einsum("nbi,nri->nbr", h, v2)                # [N, B, r2]
+    y_corr = jnp.einsum("nbr,npr->nbp", t, u2)
+    y = y_base + y_corr + b2[:, None, :]
+    _ = n
+    return jnp.einsum("bn,nbp->bp", probs, y)
+
+
+# --------------------------------------------------------------- full model
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize full-model parameters as a pytree of jnp arrays keyed by
+    the RMW1 tensor names (flat dict)."""
+    import numpy as np
+
+    rng = np.random.default_rng(np.asarray(jax.random.key_data(key)).sum() % (2**63))
+    d, pi, v = cfg.d_model, cfg.d_inner, cfg.vocab_size
+    s_emb = 0.02
+    p = {}
+
+    def mat(shape, std):
+        return jnp.array(rng.normal(0.0, std, size=shape), jnp.float32)
+
+    p["embed"] = mat((v, d), s_emb)
+    p["pos"] = mat((cfg.max_seq, d), s_emb)
+    p["lm_head"] = mat((v, d), s_emb)
+    p["final_norm"] = jnp.ones((d,), jnp.float32)
+    s1 = 1.0 / d**0.5
+    s2 = 1.0 / pi**0.5
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        p[f"{pre}.norm1"] = jnp.ones((d,), jnp.float32)
+        p[f"{pre}.norm2"] = jnp.ones((d,), jnp.float32)
+        for w in ("wq", "wk", "wv", "wo"):
+            p[f"{pre}.attn.{w}"] = mat((d, d), s1)
+        def expert(prefix, base=None, noise=0.0):
+            if base is None:
+                p[f"{prefix}.w1"] = mat((pi, d), s1)
+                p[f"{prefix}.b1"] = jnp.zeros((pi,), jnp.float32)
+                if cfg.arch == "swiglu":
+                    p[f"{prefix}.w3"] = mat((pi, d), s1)
+                    p[f"{prefix}.b3"] = jnp.zeros((pi,), jnp.float32)
+                p[f"{prefix}.w2"] = mat((d, pi), s2)
+                p[f"{prefix}.b2"] = jnp.zeros((d,), jnp.float32)
+            else:
+                for name in base:
+                    p[f"{prefix}.{name}"] = base[name] + mat(base[name].shape, noise)
+        if cfg.is_moe_layer(i):
+            p[f"{pre}.ffn.router.w_g"] = mat((cfg.n_experts, d), s1)
+            if cfg.expert_init == "upcycled":
+                base = {}
+                base["w1"] = mat((pi, d), s1)
+                base["b1"] = jnp.zeros((pi,), jnp.float32)
+                if cfg.arch == "swiglu":
+                    base["w3"] = mat((pi, d), s1)
+                    base["b3"] = jnp.zeros((pi,), jnp.float32)
+                base["w2"] = mat((d, pi), s2)
+                base["b2"] = jnp.zeros((d,), jnp.float32)
+                for k in range(cfg.n_experts):
+                    expert(f"{pre}.ffn.experts.{k}", base=base, noise=0.02)
+            else:
+                for k in range(cfg.n_experts):
+                    expert(f"{pre}.ffn.experts.{k}")
+            if cfg.shared_expert:
+                expert(f"{pre}.ffn.shared")
+        else:
+            expert(f"{pre}.ffn.dense")
+    return p
+
+
+def _expert_stack(params, prefix, n, names):
+    return {
+        name: jnp.stack([params[f"{prefix}.experts.{k}.{name}"] for k in range(n)])
+        for name in names
+    }
+
+
+def _expert_apply(params, prefix, cfg, x):
+    """Dense FFN expert at `prefix` applied to [T, d]."""
+    h = x @ params[f"{prefix}.w1"].T + params[f"{prefix}.b1"][None, :]
+    if cfg.arch == "swiglu":
+        g = x @ params[f"{prefix}.w3"].T + params[f"{prefix}.b3"][None, :]
+        h = (h / (1.0 + jnp.exp(-h))) * g
+    else:
+        h = jnp.maximum(h, 0.0)
+    return h @ params[f"{prefix}.w2"].T + params[f"{prefix}.b2"][None, :]
+
+
+def _moe_apply(params, prefix, cfg, x):
+    names = ["w1", "b1", "w2", "b2"] + (["w3", "b3"] if cfg.arch == "swiglu" else [])
+    st = _expert_stack(params, prefix, cfg.n_experts, names)
+    y = moe_block_dense(
+        x,
+        params[f"{prefix}.router.w_g"],
+        st["w1"],
+        st["b1"],
+        st["w2"],
+        st["b2"],
+        st.get("w3"),
+        st.get("b3"),
+        top_k=cfg.top_k,
+        use_kernel=False,  # training path: plain jnp (fast to trace/grad)
+    )
+    if cfg.shared_expert:
+        y = y + _expert_apply(params, f"{prefix}.shared", cfg, x)
+    return y
+
+
+def hidden_states(params, cfg: ModelConfig, tokens):
+    """tokens [T] int32 → final-norm hidden states [T, d]."""
+    t = tokens.shape[0]
+    h = params["embed"][tokens] + params["pos"][:t]
+    hd = cfg.head_dim()
+    scale = 1.0 / hd**0.5
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg.n_layers):
+        pre = f"blocks.{i}"
+        hn = rmsnorm(h, params[f"{pre}.norm1"])
+        q = hn @ params[f"{pre}.attn.wq"].T
+        k = hn @ params[f"{pre}.attn.wk"].T
+        v = hn @ params[f"{pre}.attn.wv"].T
+        q = q.reshape(t, cfg.n_heads, hd).transpose(1, 0, 2)
+        k = k.reshape(t, cfg.n_heads, hd).transpose(1, 0, 2)
+        v = v.reshape(t, cfg.n_heads, hd).transpose(1, 0, 2)
+        scores = jnp.einsum("htd,hsd->hts", q, k) * scale
+        scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("hts,hsd->htd", probs, v).transpose(1, 0, 2).reshape(t, cfg.d_model)
+        h = h + ctx @ params[f"{pre}.attn.wo"].T
+        hn = rmsnorm(h, params[f"{pre}.norm2"])
+        if cfg.is_moe_layer(i):
+            ffn = _moe_apply(params, f"{pre}.ffn", cfg, hn)
+        else:
+            ffn = _expert_apply(params, f"{pre}.ffn.dense", cfg, hn)
+        h = h + ffn
+    return rmsnorm(h, params["final_norm"])
+
+
+def logits_fn(params, cfg: ModelConfig, tokens):
+    """tokens [T] → next-token logits [T, vocab]."""
+    return hidden_states(params, cfg, tokens) @ params["lm_head"].T
+
+
+def batched_logits(params, cfg: ModelConfig, token_batch):
+    """[B, T] → [B, T, vocab] (the AOT scoring artifact's body)."""
+    return jax.vmap(lambda t: logits_fn(params, cfg, t))(token_batch)

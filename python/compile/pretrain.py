@@ -1,0 +1,213 @@
+"""Build-time pretraining (L2): train the mini MoE LMs on the synthetic
+corpus with Adam, train frozen-backbone classification heads for the NLU
+tasks, and save RMW1 checkpoints the rust runtime loads.
+
+Runs ONCE under `make artifacts`; never on the request path. The corpus and
+task datasets are produced by `resmoe datagen` (rust is the single source
+of truth for data) — this script only consumes them.
+
+Usage: python -m compile.pretrain --out ../artifacts [--steps N] [--fast]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkpoint
+from .common import ALL_CONFIGS, ModelConfig
+from .model import batched_logits, hidden_states, init_params
+
+
+def load_corpus(data_dir):
+    with open(os.path.join(data_dir, "corpus.json")) as f:
+        c = json.load(f)
+    return np.array(c["train"], np.int32), np.array(c["valid"], np.int32)
+
+
+def load_task(data_dir, task):
+    with open(os.path.join(data_dir, f"{task}.json")) as f:
+        d = json.load(f)
+    return d
+
+
+def sample_windows(stream, batch, seq, rng):
+    starts = rng.integers(0, len(stream) - seq - 1, size=batch)
+    return np.stack([stream[s : s + seq] for s in starts])
+
+
+def ce_loss(params, cfg, tokens):
+    """Mean next-token cross-entropy over a [B, T] batch."""
+    logits = batched_logits(params, cfg, tokens)  # [B, T, V]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps) + wd * p),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_lm(cfg: ModelConfig, train_stream, valid_stream, steps, batch, seq, lr, log):
+    key = jax.random.key(hash(cfg.name) % (2**31))
+    params = init_params(cfg, key)
+    state = adam_init(params)
+    rng = np.random.default_rng(0xC0DE)
+    warmup = 8  # paper Table 6
+
+    @jax.jit
+    def step_fn(params, state, tokens, lr_t):
+        loss, grads = jax.value_and_grad(ce_loss)(params, cfg, tokens)
+        params, state = adam_step(params, grads, state, lr_t)
+        return params, state, loss
+
+    t0 = time.time()
+    for step in range(steps):
+        lr_t = lr * min(1.0, (step + 1) / warmup)
+        tokens = jnp.array(sample_windows(train_stream, batch, seq, rng))
+        params, state, loss = step_fn(params, state, tokens, lr_t)
+        if step % 10 == 0 or step == steps - 1:
+            log["loss_curve"].append({"step": step, "loss": float(loss)})
+            print(
+                f"  [{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+    # Validation PPL.
+    vwin = (len(valid_stream) // seq) * seq
+    vtok = jnp.array(valid_stream[:vwin].reshape(-1, seq))
+    vloss = float(
+        np.mean([float(ce_loss(params, cfg, vtok[i : i + batch])) for i in range(0, len(vtok), batch)])
+    )
+    log["valid_ppl"] = float(np.exp(vloss))
+    print(f"  [{cfg.name}] valid ppl {log['valid_ppl']:.3f}", flush=True)
+    return params
+
+
+def features_for_examples(params, cfg, examples, batch=32):
+    """Final-position hidden states for classification examples.
+    Right-padding is safe under causal attention: the hidden state at the
+    last REAL position never attends to padding."""
+    max_len = min(cfg.max_seq, max(len(e["tokens"]) for e in examples))
+    feats = []
+    labels = []
+
+    @jax.jit
+    def hs(tokens):
+        return jax.vmap(lambda t: hidden_states(params, cfg, t))(tokens)
+
+    for i in range(0, len(examples), batch):
+        chunk = examples[i : i + batch]
+        toks = np.zeros((len(chunk), max_len), np.int32)
+        idx = np.zeros(len(chunk), np.int32)
+        for j, e in enumerate(chunk):
+            t = e["tokens"][-max_len:]
+            toks[j, : len(t)] = t
+            idx[j] = len(t) - 1
+        h = np.asarray(hs(jnp.array(toks)))
+        feats.append(h[np.arange(len(chunk)), idx])
+        labels.extend(e["label"] for e in chunk)
+    return np.concatenate(feats), np.array(labels, np.int32)
+
+
+def train_head(feats, labels, n_classes, steps=400, lr=0.05):
+    """Multinomial logistic regression head (experts/backbone frozen, per
+    the paper's fine-tuning protocol §5.1)."""
+    d = feats.shape[1]
+    w = jnp.zeros((n_classes, d), jnp.float32)
+    x = jnp.array(feats)
+    y = jnp.array(labels)
+
+    @jax.jit
+    def loss_fn(w):
+        logits = x @ w.T
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    m = jnp.zeros_like(w)
+    for _ in range(steps):
+        g = grad_fn(w)
+        m = 0.9 * m + g
+        w = w - lr * m
+    acc = float(jnp.mean((x @ w.T).argmax(-1) == y))
+    return np.asarray(w), acc
+
+
+# Which heads to train per model (paper: NLU on Switch; MRPC-only for the
+# 16-expert scale test, Table 5).
+HEAD_TASKS = {
+    "switch-mini-8": ["sst2", "mrpc", "cola", "mnli"],
+    "switch-mini-16": ["mrpc"],
+    "mixtral-mini": [],
+    "deepseek-mini": [],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("RESMOE_STEPS", 220)))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--fast", action="store_true", help="smoke-test sizes")
+    ap.add_argument("--models", default="switch-mini-8,switch-mini-16,mixtral-mini,deepseek-mini")
+    args = ap.parse_args()
+    data_dir = os.path.join(args.out, "data")
+    if not os.path.exists(os.path.join(data_dir, "corpus.json")):
+        raise SystemExit(
+            f"{data_dir}/corpus.json missing — run `cargo run --release -- datagen` "
+            "(the Makefile `artifacts` target does this)"
+        )
+    train_stream, valid_stream = load_corpus(data_dir)
+    steps = 20 if args.fast else args.steps
+    full_log = {}
+    for name in args.models.split(","):
+        cfg = ALL_CONFIGS[name]
+        print(f"== pretraining {name} ({steps} steps) ==", flush=True)
+        log = {"model": name, "steps": steps, "loss_curve": []}
+        params = train_lm(cfg, train_stream, valid_stream, steps, args.batch, args.seq, args.lr, log)
+        tensors = {k: np.asarray(v) for k, v in params.items()}
+        # Heads on frozen features.
+        log["heads"] = {}
+        for task in HEAD_TASKS[name]:
+            d = load_task(data_dir, task)
+            tr = d["train"][: 400 if args.fast else len(d["train"])]
+            feats, labels = features_for_examples(params, cfg, tr)
+            w, acc = train_head(feats, labels, d["n_classes"])
+            tensors[f"head.{task}"] = w
+            log["heads"][task] = {"train_acc": acc}
+            print(f"  [{name}] head {task}: train acc {acc:.3f}", flush=True)
+        path = os.path.join(args.out, f"{name}.rmw")
+        checkpoint.save_checkpoint(path, cfg.to_json_dict(), tensors)
+        print(f"  wrote {path}", flush=True)
+        full_log[name] = log
+    with open(os.path.join(args.out, "pretrain_log.json"), "w") as f:
+        json.dump(full_log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""AOT lowering tests: HLO text generation works for both the plain and the
+Pallas-kernel paths (interpret=True lowers to plain HLO ops executable on
+any PJRT backend)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import to_hlo_text
+from compile.kernels import barycenter_moe as bm
+
+
+def test_plain_fn_lowers_to_hlo_text():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_pallas_kernel_lowers_to_hlo_text():
+    def fn(x, hbase, u, v):
+        return (bm.grouped_residual_matmul(x, hbase, u, v),)
+
+    specs = [
+        jax.ShapeDtypeStruct(s, jnp.float32)
+        for s in [(4, 8), (4, 12), (2, 12, 3), (2, 3, 8)]
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "HloModule" in text
+    # interpret=True means NO mosaic custom-call in the lowered module.
+    assert "mosaic" not in text.lower()
+
+
+def test_lowered_module_is_executable_by_jax_cpu():
+    # Round-trip sanity: execute the jitted fn and compare with numpy.
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(4, 8)), jnp.float32)
+    hbase = jnp.array(rng.normal(size=(4, 12)), jnp.float32)
+    u = jnp.array(rng.normal(size=(2, 12, 3)), jnp.float32)
+    v = jnp.array(rng.normal(size=(2, 3, 8)), jnp.float32)
+    out = bm.grouped_residual_matmul(x, hbase, u, v)
+    want = np.asarray(hbase)[None] + np.einsum(
+        "bp,nrp,nir->nbi", np.asarray(x), np.asarray(v), np.asarray(u)
+    )
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,63 @@
+"""RMW1 checkpoint format tests (python side of the rust↔python contract)."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import checkpoint
+from compile.common import switch_mini
+
+
+def test_roundtrip():
+    cfg = switch_mini(4)
+    tensors = {
+        "embed": np.random.default_rng(0).normal(size=(8, 4)).astype(np.float32),
+        "final_norm": np.ones(4, np.float32),  # 1-D becomes 1×4
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.rmw")
+        checkpoint.save_checkpoint(path, cfg.to_json_dict(), tensors)
+        cfg2, t2 = checkpoint.load_checkpoint(path)
+        assert cfg2["name"] == cfg.name
+        assert t2["embed"].shape == (8, 4)
+        np.testing.assert_array_equal(t2["embed"], tensors["embed"])
+        assert t2["final_norm"].shape == (1, 4)
+
+
+def test_header_is_json_with_magic():
+    cfg = switch_mini(4)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.rmw")
+        checkpoint.save_checkpoint(path, cfg.to_json_dict(), {"a": np.zeros((2, 2), np.float32)})
+        with open(path, "rb") as f:
+            assert f.read(4) == b"RMW1"
+            (n,) = struct.unpack("<I", f.read(4))
+            header = f.read(n)
+            import json
+
+            h = json.loads(header)
+            assert h["tensors"][0]["name"] == "a"
+            assert h["config"]["arch"] == "relu"
+
+
+def test_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.rmw")
+        with open(path, "wb") as f:
+            f.write(b"NOPE1234")
+        with pytest.raises(ValueError):
+            checkpoint.load_checkpoint(path)
+
+
+def test_rejects_3d_tensor():
+    cfg = switch_mini(4)
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError):
+            checkpoint.save_checkpoint(
+                os.path.join(d, "x.rmw"),
+                cfg.to_json_dict(),
+                {"bad": np.zeros((2, 2, 2), np.float32)},
+            )

@@ -1,0 +1,123 @@
+"""L2 model tests: routing semantics, dense-vs-kernel block agreement,
+ResMoE factored-block equivalence with explicit restoration, and full-model
+shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.common import ModelConfig
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="tiny",
+        vocab_size=32,
+        d_model=16,
+        d_inner=24,
+        n_layers=2,
+        n_heads=2,
+        max_seq=16,
+        n_experts=4,
+        top_k=2,
+        arch="relu",
+        expert_init="independent",
+        moe_every=2,
+        shared_expert=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def rand(rng, *shape):
+    return jnp.array(rng.normal(size=shape), jnp.float32)
+
+
+def test_router_probs_topk_support():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 10, 8)
+    w_g = rand(rng, 6, 8)
+    probs = model.router_probs(x, w_g, 2)
+    nz = np.asarray(probs > 1e-9).sum(axis=1)
+    assert (nz == 2).all()
+    assert_allclose(np.asarray(probs.sum(axis=1)), np.ones(10), rtol=1e-5)
+
+
+def test_moe_block_kernel_matches_jnp_path():
+    rng = np.random.default_rng(1)
+    b, p, pi, n = 8, 16, 24, 4
+    x = rand(rng, b, p)
+    w_g = rand(rng, n, p)
+    w1 = rand(rng, n, pi, p)
+    b1 = rand(rng, n, pi)
+    w2 = rand(rng, n, p, pi)
+    b2 = rand(rng, n, p)
+    w3 = rand(rng, n, pi, p)
+    b3 = rand(rng, n, pi)
+    y_kernel = model.moe_block_dense(x, w_g, w1, b1, w2, b2, w3, b3, top_k=2, use_kernel=True)
+    y_jnp = model.moe_block_dense(x, w_g, w1, b1, w2, b2, w3, b3, top_k=2, use_kernel=False)
+    assert_allclose(np.asarray(y_kernel), np.asarray(y_jnp), rtol=1e-4, atol=1e-4)
+
+
+def test_resmoe_block_equals_restored_dense():
+    """moe_block_resmoe(factored) == moe_block_dense(restored weights) —
+    the L2 statement of Algorithm 2."""
+    rng = np.random.default_rng(2)
+    b, p, pi, n, r = 8, 12, 18, 3, 4
+    x = rand(rng, b, p)
+    w_g = rand(rng, n, p)
+    bw1, bb1 = rand(rng, pi, p), rand(rng, pi)
+    bw3, bb3 = rand(rng, pi, p), rand(rng, pi)
+    bw2 = rand(rng, p, pi)
+    u1, v1 = rand(rng, n, pi, r), rand(rng, n, r, p)
+    u3, v3 = rand(rng, n, pi, r), rand(rng, n, r, p)
+    u2, v2 = rand(rng, n, p, r), rand(rng, n, r, pi)
+    b2 = rand(rng, n, p)
+    y_fact = model.moe_block_resmoe(
+        x, w_g, bw1, bb1, u1, v1, bw2, u2, v2, b2,
+        base_w3=bw3, base_b3=bb3, u3=u3, v3=v3, top_k=2, use_kernel=True,
+    )
+    # Restore dense weights per expert.
+    w1 = jnp.stack([bw1 + u1[e] @ v1[e] for e in range(n)])
+    w3 = jnp.stack([bw3 + u3[e] @ v3[e] for e in range(n)])
+    w2 = jnp.stack([bw2 + u2[e] @ v2[e] for e in range(n)])
+    b1s = jnp.stack([bb1] * n)
+    b3s = jnp.stack([bb3] * n)
+    y_dense = model.moe_block_dense(x, w_g, w1, b1s, w2, b2, w3, b3s, top_k=2, use_kernel=False)
+    assert_allclose(np.asarray(y_fact), np.asarray(y_dense), rtol=2e-3, atol=2e-3)
+
+
+def test_full_model_shapes_and_determinism():
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.key(0))
+    tokens = jnp.array(np.arange(10) % 32, jnp.int32)
+    logits = model.logits_fn(params, cfg, tokens)
+    assert logits.shape == (10, 32)
+    logits2 = model.logits_fn(params, cfg, tokens)
+    assert_allclose(np.asarray(logits), np.asarray(logits2))
+
+
+def test_upcycled_init_is_tighter_than_independent():
+    cfg_up = tiny_cfg(expert_init="upcycled", arch="swiglu")
+    cfg_ind = tiny_cfg(expert_init="independent", arch="swiglu")
+    p_up = model.init_params(cfg_up, jax.random.key(1))
+    p_ind = model.init_params(cfg_ind, jax.random.key(1))
+
+    def spread(p):
+        ws = [np.asarray(p[f"blocks.1.ffn.experts.{k}.w1"]) for k in range(4)]
+        mean = np.mean(ws, axis=0)
+        return float(np.mean([np.sum((w - mean) ** 2) for w in ws]))
+
+    assert spread(p_up) * 10 < spread(p_ind)
+
+
+def test_batched_logits_matches_single():
+    cfg = tiny_cfg()
+    params = model.init_params(cfg, jax.random.key(2))
+    toks = jnp.array(np.random.default_rng(3).integers(0, 32, size=(3, 8)), jnp.int32)
+    batched = model.batched_logits(params, cfg, toks)
+    for i in range(3):
+        single = model.logits_fn(params, cfg, toks[i])
+        assert_allclose(np.asarray(batched[i]), np.asarray(single), rtol=1e-5, atol=1e-5)

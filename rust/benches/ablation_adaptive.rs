@@ -1,0 +1,46 @@
+//! Ablation (paper §6 future work): per-layer ADAPTIVE compression rates vs
+//! the uniform protocol, at the same global parameter budget.
+
+use resmoe::compress::{adaptive, ResMoE};
+use resmoe::eval::{perplexity, tablegen, Assets};
+use resmoe::moe::ModelConfig;
+use resmoe::util::bench::Table;
+use resmoe::Rng;
+
+fn main() {
+    let assets = Assets::load(&ModelConfig::mixtral_mini());
+    let n = tablegen::bench_n(150);
+    let lam = assets.lambada(n);
+    let mut t = Table::new(
+        "Ablation — uniform vs adaptive per-layer rates (ResMoE-UP, 25 % budget)",
+        &["allocation", "mean layer err", "params kept", "PPL", "LAMBADA (ACC)"],
+    );
+    let top = 5;
+    // Uniform.
+    let uni = tablegen::compress_with(&assets, "resmoe-up", 0.25, 0);
+    t.row(vec![
+        "uniform 25 %".into(),
+        format!("{:.4}", uni.report.mean_approx_error()),
+        format!("{}", uni.report.total_params_after()),
+        format!("{:.3}", perplexity(&uni.model, &assets.valid, 128)),
+        format!("{:.2}", resmoe::eval::lambada_accuracy(&uni.model, &lam) * 100.0),
+    ]);
+    // Adaptive.
+    let mut rng = Rng::new(0);
+    let ada = adaptive::compress_model_with_budget(&assets.model, &ResMoE::up(), 0.25, top, None, &mut rng);
+    let rates: Vec<String> = ada
+        .report
+        .layers
+        .iter()
+        .map(|l| format!("L{}:{:.0}%", l.block, 100.0 * l.params_after as f64 / l.params_before as f64))
+        .collect();
+    t.row(vec![
+        format!("adaptive ({})", rates.join(" ")),
+        format!("{:.4}", ada.report.mean_approx_error()),
+        format!("{}", ada.report.total_params_after()),
+        format!("{:.3}", perplexity(&ada.model, &assets.valid, 128)),
+        format!("{:.2}", resmoe::eval::lambada_accuracy(&ada.model, &lam) * 100.0),
+    ]);
+    t.print();
+    t.save_json("ablation_adaptive");
+}

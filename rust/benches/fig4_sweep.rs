@@ -1,0 +1,16 @@
+//! Regenerates Figure 4: accuracy vs compression rate sweep on the
+//! LAMBADA analog (eval::tablegen::fig4).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let fast = std::env::args().any(|a| a == "--fast") || std::env::var("RESMOE_FAST").is_ok();
+    let rates: &[f64] = if fast {
+        &[0.10, 0.25, 0.50]
+    } else {
+        &[0.10, 0.15, 0.20, 0.25, 0.30, 0.40, 0.50]
+    };
+    let table = resmoe::eval::tablegen::fig4(rates);
+    table.print();
+    table.save_json("fig4_sweep");
+    eprintln!("(fig4_sweep generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

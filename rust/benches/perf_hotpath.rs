@@ -1,0 +1,117 @@
+//! §Perf micro-benchmarks over the L3 hot paths: matmul kernels, the
+//! barycenter solver (ResMoE's joint solve vs OT-Fusion's layer-by-layer
+//! procedure — the paper's §5.5/B.2 ">4 days vs <1 day" claim in relative
+//! time), expert restoration, the restore cache, and end-to-end engine
+//! scoring. Results feed EXPERIMENTS.md §Perf.
+
+use resmoe::baselines::OtFusion;
+use resmoe::compress::{compress_model, CompressCtx, Compressor, ResMoE};
+use resmoe::coordinator::{Engine, ExpertCache, Request};
+use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
+use resmoe::tensor::Matrix;
+use resmoe::util::bench::{BenchRunner, Table};
+use resmoe::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast") || std::env::var("RESMOE_FAST").is_ok();
+    let iters = if fast { 3 } else { 10 };
+    let mut runner = BenchRunner::new();
+    let mut rng = Rng::new(0);
+
+    // --- L3 matmul substrate (sizes from the mixtral-mini hot path).
+    let a = Matrix::randn(64, 64, 1.0, &mut rng);
+    let b = Matrix::randn(64, 224, 1.0, &mut rng);
+    runner.run("matmul 64x64 @ 64x224 (expert up-proj)", 3, iters * 10, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    // §Perf before/after in one run: the serial-dot reference kernel vs the
+    // 4-column-blocked matmul_nt used on the expert-forward hot path.
+    let wt = Matrix::randn(224, 64, 1.0, &mut rng); // expert W1 [pI, p]
+    let xs = Matrix::randn(96, 64, 1.0, &mut rng); // 96-token batch
+    runner.run("matmul_nt NAIVE  96x64 @ (224x64)^T", 3, iters * 10, || {
+        std::hint::black_box(xs.matmul_nt_naive(&wt));
+    });
+    runner.run("matmul_nt 4-col  96x64 @ (224x64)^T", 3, iters * 10, || {
+        std::hint::black_box(xs.matmul_nt(&wt));
+    });
+    let big_a = Matrix::randn(512, 256, 1.0, &mut rng);
+    let big_b = Matrix::randn(256, 512, 1.0, &mut rng);
+    runner.run("matmul 512x256 @ 256x512 (parallel path)", 2, iters, || {
+        std::hint::black_box(big_a.matmul(&big_b));
+    });
+
+    // --- barycenter: ResMoE joint solve vs OT-Fusion layer-by-layer.
+    let layer = MoeLayer::random(ExpertArch::SwiGlu, 64, 224, 8, 2, true, false, &mut rng);
+    runner.run("ResMoE(UP) compress one mixtral-mini layer", 1, iters.min(5), || {
+        let mut r = Rng::new(1);
+        let mut ctx = CompressCtx::new(0.25, &mut r);
+        std::hint::black_box(ResMoE::up().compress(&layer, &mut ctx));
+    });
+    runner.run("OT-Fusion merge one mixtral-mini layer", 1, iters.min(5), || {
+        let mut r = Rng::new(1);
+        let mut ctx = CompressCtx::new(0.25, &mut r);
+        std::hint::black_box(OtFusion.compress(&layer, &mut ctx));
+    });
+
+    // --- restoration (Alg. 2 hot path).
+    let cl = {
+        let mut r = Rng::new(2);
+        let mut ctx = CompressCtx::new(0.25, &mut r);
+        ResMoE::up().compress(&layer, &mut ctx)
+    };
+    runner.run("restore one expert (W_w + sparse residual)", 3, iters * 10, || {
+        std::hint::black_box(cl.restore_expert(3));
+    });
+    let cl_svd = {
+        let mut r = Rng::new(2);
+        let mut ctx = CompressCtx::new(0.25, &mut r);
+        ResMoE::svd().compress(&layer, &mut ctx)
+    };
+    runner.run("restore one expert (W_w + low-rank residual)", 3, iters * 10, || {
+        std::hint::black_box(cl_svd.restore_expert(3));
+    });
+
+    // --- cache under thrash vs warm.
+    let expert_bytes = layer.experts[0].n_params() * 4;
+    runner.run("cache get (warm, hit)", 1, iters * 10, || {
+        let mut cache = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        cache.get(0, 0);
+        for _ in 0..100 {
+            std::hint::black_box(cache.get(0, 0));
+        }
+    });
+    runner.run("cache get (thrash, budget=1 expert)", 1, iters.min(5), || {
+        let mut cache = ExpertCache::new(vec![(0, cl.clone())], expert_bytes);
+        for i in 0..20 {
+            std::hint::black_box(cache.get(0, i % 8));
+        }
+    });
+
+    // --- end-to-end engine scoring.
+    let cfg = ModelConfig::mixtral_mini();
+    let mut mrng = Rng::new(3);
+    let model = Model::random(&cfg, &mut mrng);
+    let cm = compress_model(&model, &ResMoE::up(), 0.25, 4, None, &mut mrng);
+    let engine = Engine::compressed(model.clone(), cm.layers, usize::MAX);
+    let tokens: Vec<u32> = (0..96).map(|i| (i * 7 % 256) as u32).collect();
+    runner.run("engine score 96 tokens (cached restore path)", 1, iters.min(5), || {
+        std::hint::black_box(engine.handle(&Request::Score { tokens: tokens.clone() }));
+    });
+    let dense_engine = Engine::dense(model);
+    runner.run("engine score 96 tokens (dense baseline)", 1, iters.min(5), || {
+        std::hint::black_box(dense_engine.handle(&Request::Score { tokens: tokens.clone() }));
+    });
+
+    // Summarize as a table for the reports directory.
+    let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
+    for r in &runner.results {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.3}", r.mean_ms()),
+            format!("{:.3}", r.p50_ms()),
+            format!("{:.3}", r.p99_ms()),
+        ]);
+    }
+    t.print();
+    t.save_json("perf_hotpath");
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's table10 (see eval::tablegen::table10 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table10();
+    table.print();
+    table.save_json("table10_memory");
+    eprintln!("(table10_memory generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's table11 (see eval::tablegen::table11 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table11();
+    table.print();
+    table.save_json("table11_runtime");
+    eprintln!("(table11_runtime generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's table12 (see eval::tablegen::table12 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table12();
+    table.print();
+    table.save_json("table12_flops");
+    eprintln!("(table12_flops generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

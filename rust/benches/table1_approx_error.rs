@@ -1,0 +1,10 @@
+//! Regenerates the paper's table1 (see eval::tablegen::table1 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table1();
+    table.print();
+    table.save_json("table1_approx_error");
+    eprintln!("(table1_approx_error generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

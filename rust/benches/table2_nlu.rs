@@ -1,0 +1,10 @@
+//! Regenerates the paper's table2 (see eval::tablegen::table2 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table2();
+    table.print();
+    table.save_json("table2_nlu");
+    eprintln!("(table2_nlu generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

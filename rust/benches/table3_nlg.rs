@@ -1,0 +1,10 @@
+//! Regenerates the paper's table3 (see eval::tablegen::table3 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table3();
+    table.print();
+    table.save_json("table3_nlg");
+    eprintln!("(table3_nlg generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's table4 (see eval::tablegen::table4 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table4();
+    table.print();
+    table.save_json("table4_ablation");
+    eprintln!("(table4_ablation generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

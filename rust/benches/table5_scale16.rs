@@ -1,0 +1,10 @@
+//! Regenerates the paper's table5 (see eval::tablegen::table5 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table5();
+    table.print();
+    table.save_json("table5_scale16");
+    eprintln!("(table5_scale16 generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's table7 (see eval::tablegen::table7 for the
+//! workload and protocol). harness=false: criterion is not vendored.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = resmoe::eval::tablegen::table7();
+    table.print();
+    table.save_json("table7_deepseek");
+    eprintln!("(table7_deepseek generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,111 @@
+//! Expert pruning (Lu et al. 2024, "Not All Experts are Equal"): drop the
+//! least-used experts entirely, keeping `⌈rate·N⌉`. Tokens routed to a
+//! dropped expert are redirected to the surviving expert with the most
+//! similar router gate (the paper applies this baseline only to Mixtral
+//! because the 25 % setting is harsher than the method's native 50 %).
+
+use super::{group_count, usage_scores};
+use crate::compress::{CompressCtx, CompressedExpert, CompressedLayer, Compressor, ResidualRepr};
+use crate::moe::MoeLayer;
+
+pub struct ExpertPruning;
+
+impl Compressor for ExpertPruning {
+    fn name(&self) -> String {
+        "expert-pruning".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let keep = group_count(n, ctx.rate);
+        let scores = usage_scores(layer, ctx.stats);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        let kept: Vec<usize> = order.iter().copied().take(keep).collect();
+        // Redirect dropped slots to the most gate-similar kept expert.
+        let gate = &layer.router.w_g;
+        let cos = |a: usize, b: usize| -> f64 {
+            let (ra, rb) = (gate.row(a), gate.row(b));
+            let dot: f32 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+            let na: f32 = ra.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = rb.iter().map(|x| x * x).sum::<f32>().sqrt();
+            (dot / (na * nb + 1e-12)) as f64
+        };
+        let mut expert_map = vec![0usize; n];
+        for k in 0..n {
+            if let Some(j) = kept.iter().position(|&ke| ke == k) {
+                expert_map[k] = j;
+            } else {
+                expert_map[k] = (0..keep)
+                    .max_by(|&x, &y| cos(k, kept[x]).partial_cmp(&cos(k, kept[y])).unwrap())
+                    .unwrap();
+            }
+        }
+        let experts = kept
+            .iter()
+            .map(|&k| {
+                let dm = layer.experts[k].design_matrix();
+                CompressedExpert {
+                    accounted_params: dm.n_params(),
+                    residual: ResidualRepr::Dense(dm),
+                    b2: layer.experts[k].b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: layer.experts[0].d_model(),
+            base: None,
+            experts,
+            expert_map,
+            aligns: CompressedLayer::identity_aligns(n, pi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::{ExpertArch, Route, RouterStats};
+    use crate::util::Rng;
+
+    #[test]
+    fn keeps_most_used_experts() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let mut stats = RouterStats::new(8);
+        for _ in 0..5 {
+            stats.record(&Route { experts: vec![2, 6], weights: vec![0.6, 0.4] });
+        }
+        let mut rng2 = Rng::new(2);
+        let mut ctx = CompressCtx::new(0.25, &mut rng2);
+        ctx.stats = Some(&stats);
+        let cl = ExpertPruning.compress(&l, &mut ctx);
+        assert_eq!(cl.experts.len(), 2);
+        // Kept experts restore exactly; 2 and 6 map to themselves.
+        assert!(cl.restore_design(2).sq_dist(&l.experts[2].design_matrix()) < 1e-12);
+        assert!(cl.restore_design(6).sq_dist(&l.experts[6].design_matrix()) < 1e-12);
+    }
+
+    #[test]
+    fn dropped_slots_redirect_to_kept() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&ExpertPruning, &l, 0.25, 3);
+        assert!(cl.expert_map.iter().all(|&m| m < 2));
+        let frac = cl.n_params_stored() as f64 / l.expert_params() as f64;
+        assert!((frac - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn kept_experts_have_zero_error_dropped_positive() {
+        let mut rng = Rng::new(4);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 1, false, false, &mut rng);
+        let cl = quick_compress(&ExpertPruning, &l, 0.5, 4);
+        // Overall error positive (dropped experts approximated by others).
+        assert!(cl.approx_error(&l) > 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Git Re-Basin (Ainsworth et al., ICLR 2023) adapted as an expert-merge
+//! baseline, as the paper does (§5.1: "dynamically apply it as a fusion
+//! (merging) method").
+//!
+//! Within each group, experts are aligned to a running center by greedy
+//! weight matching computed **layer-by-layer** — here, from the first
+//! linear layer only — then averaged. The layer-local view (ignoring the
+//! W1/W2 coupling) is precisely the limitation §4.1 argues against.
+
+use super::{group_by_usage_rank, group_count, mean_b2, merged_layer};
+use crate::compress::resmoe::git_rebasin_center;
+use crate::compress::{CompressCtx, CompressedLayer, Compressor};
+use crate::moe::MoeLayer;
+use crate::tensor::Matrix;
+
+pub struct GitReBasinMerge;
+
+impl Compressor for GitReBasinMerge {
+    fn name(&self) -> String {
+        "git-re-basin".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let p = layer.experts[0].d_model();
+        let g = group_count(n, ctx.rate);
+        let groups = group_by_usage_rank(layer, g, ctx.stats);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let mut aligns: Vec<Vec<usize>> = vec![(0..pi).collect(); n];
+        let mut centers = Vec::with_capacity(g);
+        for members in &groups {
+            let group_dms: Vec<Matrix> = members.iter().map(|&k| dms[k].clone()).collect();
+            let (center, perms) = git_rebasin_center(&group_dms, p + 1, 2);
+            for (&k, perm) in members.iter().zip(perms) {
+                aligns[k] = perm;
+            }
+            centers.push(center);
+        }
+        let b2s = groups.iter().map(|m| mean_b2(layer, m)).collect();
+        merged_layer(layer, "git-re-basin", &groups, centers, aligns, b2s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::{ExpertArch, ExpertWeights, Router};
+    use crate::util::Rng;
+
+    #[test]
+    fn structure_and_budget() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&GitReBasinMerge, &l, 0.25, 1);
+        assert_eq!(cl.experts.len(), 2);
+        let frac = cl.n_params_stored() as f64 / l.expert_params() as f64;
+        assert!(frac < 0.27);
+    }
+
+    #[test]
+    fn recovers_pure_w1_permutations() {
+        // If experts differ ONLY by permutation and W2 happens to follow W1
+        // (same joint permutation), the W1-only matching suffices.
+        let mut rng = Rng::new(2);
+        let base = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let experts: Vec<ExpertWeights> =
+            (0..4).map(|_| base.permuted(&rng.permutation(16))).collect();
+        let l = MoeLayer {
+            router: Router::random(4, 8, 1, &mut rng),
+            experts,
+            shared_expert: None,
+        };
+        let cl = quick_compress(&GitReBasinMerge, &l, 0.25, 3);
+        assert!(cl.approx_error(&l) < 1e-6, "err={}", cl.approx_error(&l));
+    }
+
+    #[test]
+    fn degrades_when_w1_uninformative() {
+        // Make W1 carry NO matching signal (all rows identical) while W2
+        // distinguishes the sub-MLPs; experts are joint permutations of a
+        // base. W1-only matching is then blind to the true alignment — the
+        // §4.1 layer-by-layer failure mode — while full-design-matrix
+        // matching (M-SMoE) recovers it near-exactly.
+        let mut rng = Rng::new(3);
+        let mut base = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let shared_row: Vec<f32> = base.w1.row(0).to_vec();
+        for r in 0..16 {
+            base.w1.row_mut(r).copy_from_slice(&shared_row);
+        }
+        base.b1 = vec![0.0; 16];
+        let experts: Vec<ExpertWeights> =
+            (0..4).map(|_| base.permuted(&rng.permutation(16))).collect();
+        let l = MoeLayer {
+            router: Router::random(4, 8, 1, &mut rng),
+            experts,
+            shared_expert: None,
+        };
+        let e_git = quick_compress(&GitReBasinMerge, &l, 0.125, 4).approx_error(&l);
+        let e_msmoe = quick_compress(&crate::baselines::MSmoe, &l, 0.125, 4).approx_error(&l);
+        assert!(
+            e_msmoe < 0.5 * e_git + 1e-9,
+            "msmoe={e_msmoe} should be far below git={e_git}"
+        );
+    }
+}

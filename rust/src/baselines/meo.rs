@@ -1,0 +1,79 @@
+//! MEO — "Merging Experts into One" (He et al., EMNLP 2023).
+//!
+//! Merges each expert group by straight parameter averaging, with no
+//! permutation alignment: the computational-efficiency-first merge the
+//! paper compares against (Tables 2–3).
+
+use super::{group_by_usage_rank, group_count, mean_b2, merged_layer};
+use crate::compress::{CompressCtx, CompressedLayer, Compressor};
+use crate::moe::MoeLayer;
+use crate::tensor::Matrix;
+
+pub struct Meo;
+
+impl Compressor for Meo {
+    fn name(&self) -> String {
+        "meo".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let g = group_count(n, ctx.rate);
+        let groups = group_by_usage_rank(layer, g, ctx.stats);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let centers: Vec<Matrix> = groups
+            .iter()
+            .map(|members| {
+                let refs: Vec<&Matrix> = members.iter().map(|&k| &dms[k]).collect();
+                Matrix::mean_of(&refs)
+            })
+            .collect();
+        let b2s = groups.iter().map(|m| mean_b2(layer, m)).collect();
+        let aligns = CompressedLayer::identity_aligns(n, pi);
+        merged_layer(layer, "meo", &groups, centers, aligns, b2s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    #[test]
+    fn reduces_to_expected_group_count() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&Meo, &l, 0.25, 1);
+        assert_eq!(cl.experts.len(), 2);
+        assert_eq!(cl.expert_map.len(), 8);
+        // Params stored ≈ 25 % of the original experts.
+        let frac = cl.n_params_stored() as f64 / l.expert_params() as f64;
+        assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn exact_when_experts_identical() {
+        let mut rng = Rng::new(2);
+        let base = crate::moe::ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let l = MoeLayer {
+            router: crate::moe::Router::random(4, 8, 1, &mut rng),
+            experts: vec![base.clone(), base.clone(), base.clone(), base],
+            shared_expert: None,
+        };
+        let cl = quick_compress(&Meo, &l, 0.25, 2);
+        assert!(cl.approx_error(&l) < 1e-10);
+    }
+
+    #[test]
+    fn merged_layer_still_runs() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::SwiGlu, 8, 14, 8, 2, true, false, &mut rng);
+        let cl = quick_compress(&Meo, &l, 0.25, 3);
+        let restored = cl.to_layer(&l);
+        let x = Matrix::randn(5, 8, 1.0, &mut rng);
+        assert!(restored.forward(&x, None).data.iter().all(|v| v.is_finite()));
+    }
+}

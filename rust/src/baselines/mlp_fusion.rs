@@ -1,0 +1,186 @@
+//! MLP Fusion (Ai et al. 2025): reduce the intermediate dimension of each
+//! expert by clustering its `pI` sub-MLPs into `c = rate·pI` clusters and
+//! replacing each sub-MLP by its cluster centroid (`C_kᵀ W̃_k`, App. A.5).
+//!
+//! Storage per expert: the centroid matrix `W̃` (c × D) plus `pI` narrow
+//! cluster indices (accounted in bytes, negligible in params).
+
+use crate::compress::{CompressCtx, CompressedExpert, CompressedLayer, Compressor, ResidualRepr};
+use crate::moe::MoeLayer;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Plain k-means on matrix rows with k-means++ seeding.
+/// Returns (centroids k×d, assignment per row).
+pub fn kmeans_rows(m: &Matrix, k: usize, iters: usize, rng: &mut Rng) -> (Matrix, Vec<usize>) {
+    let n = m.rows;
+    let d = m.cols;
+    let k = k.clamp(1, n);
+    // k-means++ seeding.
+    let mut centroids = Matrix::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(m.row(first));
+    let mut dist2 = vec![f32::INFINITY; n];
+    for c in 1..k {
+        for r in 0..n {
+            let prev = centroids.row(c - 1);
+            let dd: f32 = m.row(r).iter().zip(prev).map(|(a, b)| (a - b) * (a - b)).sum();
+            dist2[r] = dist2[r].min(dd);
+        }
+        let next = rng.categorical(&dist2);
+        centroids.row_mut(c).copy_from_slice(m.row(next));
+    }
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // Assignment.
+        let mut changed = false;
+        for r in 0..n {
+            let row = m.row(r);
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dd: f32 = row
+                    .iter()
+                    .zip(centroids.row(c))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            if assign[r] != best {
+                assign[r] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, d);
+        for r in 0..n {
+            counts[assign[r]] += 1;
+            let dst = sums.row_mut(assign[r]);
+            for (o, &v) in dst.iter_mut().zip(m.row(r)) {
+                *o += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let dst = centroids.row_mut(c);
+                dst.copy_from_slice(sums.row(c));
+                for v in dst.iter_mut() {
+                    *v /= counts[c] as f32;
+                }
+            } else {
+                // Re-seed empty cluster at a random row.
+                let r = rng.below(n);
+                centroids.row_mut(c).copy_from_slice(m.row(r));
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    (centroids, assign)
+}
+
+pub struct MlpFusion;
+
+impl Compressor for MlpFusion {
+    fn name(&self) -> String {
+        "mlp-fusion".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let c = ((ctx.rate * pi as f64).round() as usize).clamp(1, pi);
+        let experts = layer
+            .experts
+            .iter()
+            .map(|e| {
+                let dm = e.design_matrix();
+                let (centroids, assign) = kmeans_rows(&dm, c, 25, ctx.rng);
+                // Reconstruction C^T W̃: every row replaced by its centroid.
+                let mut restored = Matrix::zeros(pi, dm.cols);
+                for (r, &a) in assign.iter().enumerate() {
+                    restored.row_mut(r).copy_from_slice(centroids.row(a));
+                }
+                CompressedExpert {
+                    accounted_params: c * dm.cols,
+                    residual: ResidualRepr::Dense(restored),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: layer.experts[0].d_model(),
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(n),
+            aligns: CompressedLayer::identity_aligns(n, pi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::ExpertArch;
+
+    #[test]
+    fn kmeans_partitions_and_converges() {
+        let mut rng = Rng::new(1);
+        // Two well-separated blobs.
+        let m = Matrix::from_fn(20, 3, |r, _| {
+            if r < 10 {
+                rng.normal_scaled(0.1)
+            } else {
+                10.0 + rng.normal_scaled(0.1)
+            }
+        });
+        let (centroids, assign) = kmeans_rows(&m, 2, 50, &mut rng);
+        // The two halves land in different clusters.
+        assert!(assign[..10].iter().all(|&a| a == assign[0]));
+        assert!(assign[10..].iter().all(|&a| a == assign[10]));
+        assert_ne!(assign[0], assign[10]);
+        let d = (centroids.row(0)[0] - centroids.row(1)[0]).abs();
+        assert!(d > 5.0);
+    }
+
+    #[test]
+    fn kmeans_k_equals_n_is_lossless() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::randn(8, 4, 1.0, &mut rng);
+        let (centroids, assign) = kmeans_rows(&m, 8, 30, &mut rng);
+        let mut restored = Matrix::zeros(8, 4);
+        for (r, &a) in assign.iter().enumerate() {
+            restored.row_mut(r).copy_from_slice(centroids.row(a));
+        }
+        assert!(restored.sq_dist(&m) < 1e-6);
+    }
+
+    #[test]
+    fn fusion_respects_budget_and_runs() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 1, false, false, &mut rng);
+        let cl = quick_compress(&MlpFusion, &l, 0.25, 3);
+        let frac = cl.n_params_stored() as f64 / l.expert_params() as f64;
+        assert!((frac - 0.25).abs() < 0.05, "frac={frac}");
+        let restored = cl.to_layer(&l);
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        assert!(restored.forward(&x, None).data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn error_shrinks_with_more_clusters() {
+        let mut rng = Rng::new(4);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 32, 2, 1, false, false, &mut rng);
+        let e_low = quick_compress(&MlpFusion, &l, 0.125, 5).approx_error(&l);
+        let e_high = quick_compress(&MlpFusion, &l, 0.75, 5).approx_error(&l);
+        assert!(e_high < e_low, "high-rate {e_high} vs low-rate {e_low}");
+    }
+}

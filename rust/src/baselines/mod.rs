@@ -1,0 +1,212 @@
+//! Baseline compression methods from the paper's evaluation (§5.1):
+//! expert merging (M-SMoE, MEO, Git Re-Basin, OT Fusion), expert pruning,
+//! and MLP Fusion. Pruning/SVD/Wanda baselines live in [`crate::compress`]
+//! since ResMoE shares their machinery.
+//!
+//! Merge baselines reduce the expert count from `N` to `G = ⌈rate·N⌉`
+//! (8 → 2 at the paper's 25 % setting, App. A.3); the router keeps its `N`
+//! slots and `expert_map` redirects merged slots to their group center.
+
+pub mod expert_prune;
+pub mod git_rebasin;
+pub mod meo;
+pub mod mlp_fusion;
+pub mod msmoe;
+pub mod otfusion;
+
+pub use expert_prune::ExpertPruning;
+pub use git_rebasin::GitReBasinMerge;
+pub use meo::Meo;
+pub use mlp_fusion::MlpFusion;
+pub use msmoe::MSmoe;
+pub use otfusion::OtFusion;
+
+use crate::compress::{CompressCtx, CompressedExpert, CompressedLayer, ResidualRepr};
+use crate::moe::{MoeLayer, RouterStats};
+use crate::tensor::Matrix;
+
+/// Number of groups for a merge method at retention `rate`.
+pub fn group_count(n_experts: usize, rate: f64) -> usize {
+    ((rate * n_experts as f64).round() as usize).clamp(1, n_experts)
+}
+
+/// Per-expert usage score: router stats if available, otherwise the gate
+/// row norm (a data-free proxy).
+pub fn usage_scores(layer: &MoeLayer, stats: Option<&RouterStats>) -> Vec<f64> {
+    match stats {
+        Some(s) if s.tokens > 0 => s.weight_sums.clone(),
+        _ => (0..layer.n_experts())
+            .map(|k| {
+                layer.router.w_g.row(k).iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+            })
+            .collect(),
+    }
+}
+
+/// Group experts around the `g` highest-usage "dominant" experts, assigning
+/// the rest by cosine similarity of their router gate rows (M-SMoE's
+/// routing-policy grouping).
+pub fn group_by_router_similarity(
+    layer: &MoeLayer,
+    g: usize,
+    stats: Option<&RouterStats>,
+) -> Vec<Vec<usize>> {
+    let n = layer.n_experts();
+    let scores = usage_scores(layer, stats);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let dominants: Vec<usize> = order.iter().copied().take(g).collect();
+    let gate = &layer.router.w_g;
+    let cos = |a: usize, b: usize| -> f64 {
+        let (ra, rb) = (gate.row(a), gate.row(b));
+        let dot: f32 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+        let na: f32 = ra.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = rb.iter().map(|x| x * x).sum::<f32>().sqrt();
+        (dot / (na * nb + 1e-12)) as f64
+    };
+    let mut groups: Vec<Vec<usize>> = dominants.iter().map(|&d| vec![d]).collect();
+    for k in 0..n {
+        if dominants.contains(&k) {
+            continue;
+        }
+        let best = (0..g)
+            .max_by(|&x, &y| cos(k, dominants[x]).partial_cmp(&cos(k, dominants[y])).unwrap())
+            .unwrap();
+        groups[best].push(k);
+    }
+    groups
+}
+
+/// Contiguous usage-ranked groups of (near-)equal size (MEO / Git Re-Basin
+/// merge grouping).
+pub fn group_by_usage_rank(
+    layer: &MoeLayer,
+    g: usize,
+    stats: Option<&RouterStats>,
+) -> Vec<Vec<usize>> {
+    let n = layer.n_experts();
+    let scores = usage_scores(layer, stats);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let size = n.div_ceil(g);
+    order.chunks(size).map(|c| c.to_vec()).collect()
+}
+
+/// Assemble a merged [`CompressedLayer`] from group centers.
+///
+/// * `groups[j]` — member slots of group `j`.
+/// * `centers[j]` — the group's merged design matrix.
+/// * `aligns[k]` — per-slot permutation used by the error metric.
+/// * `b2s[j]` — merged output bias.
+pub fn merged_layer(
+    layer: &MoeLayer,
+    method: &str,
+    groups: &[Vec<usize>],
+    centers: Vec<Matrix>,
+    aligns: Vec<Vec<usize>>,
+    b2s: Vec<Vec<f32>>,
+) -> CompressedLayer {
+    let n = layer.n_experts();
+    let mut expert_map = vec![usize::MAX; n];
+    for (j, members) in groups.iter().enumerate() {
+        for &k in members {
+            expert_map[k] = j;
+        }
+    }
+    assert!(expert_map.iter().all(|&m| m != usize::MAX), "ungrouped expert");
+    let experts = centers
+        .into_iter()
+        .zip(b2s)
+        .map(|(c, b2)| CompressedExpert {
+            accounted_params: c.n_params(),
+            residual: ResidualRepr::Dense(c),
+            b2,
+        })
+        .collect();
+    CompressedLayer {
+        method: method.to_string(),
+        arch: layer.experts[0].arch,
+        d_model: layer.experts[0].d_model(),
+        base: None,
+        experts,
+        expert_map,
+        aligns,
+    }
+}
+
+/// Mean b2 over group members.
+pub fn mean_b2(layer: &MoeLayer, members: &[usize]) -> Vec<f32> {
+    let p = layer.experts[0].d_model();
+    let mut out = vec![0.0f32; p];
+    for &k in members {
+        for (o, &v) in out.iter_mut().zip(&layer.experts[k].b2) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= members.len() as f32;
+    }
+    out
+}
+
+/// Convenience for tests/benches: compress with a default context.
+pub fn quick_compress(
+    comp: &dyn crate::compress::Compressor,
+    layer: &MoeLayer,
+    rate: f64,
+    seed: u64,
+) -> CompressedLayer {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut ctx = CompressCtx::new(rate, &mut rng);
+    comp.compress(layer, &mut ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    fn layer(seed: u64) -> MoeLayer {
+        let mut rng = Rng::new(seed);
+        MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng)
+    }
+
+    #[test]
+    fn group_count_matches_paper() {
+        assert_eq!(group_count(8, 0.25), 2); // 8 experts → 2 at 25 %
+        assert_eq!(group_count(8, 0.10), 1);
+        assert_eq!(group_count(64, 0.25), 16);
+    }
+
+    #[test]
+    fn router_similarity_groups_partition() {
+        let l = layer(1);
+        let groups = group_by_router_similarity(&l, 3, None);
+        let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        assert_eq!(groups.len(), 3);
+    }
+
+    #[test]
+    fn usage_rank_groups_partition() {
+        let l = layer(2);
+        let groups = group_by_usage_rank(&l, 2, None);
+        let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stats_override_norm_proxy() {
+        let l = layer(3);
+        let mut stats = RouterStats::new(8);
+        // Make expert 5 dominant.
+        for _ in 0..10 {
+            stats.record(&crate::moe::Route { experts: vec![5], weights: vec![1.0] });
+        }
+        let groups = group_by_router_similarity(&l, 1, Some(&stats));
+        assert_eq!(groups[0][0], 5);
+    }
+}

@@ -1,0 +1,113 @@
+//! M-SMoE — the (uncompressed) merging stage of MC-SMoE (Li et al. 2023),
+//! "Merge, then Compress": group experts by **routing policy** (dominant =
+//! most-used experts, members assigned by router-gate similarity), align
+//! each member to its group dominant by permutation matching, and merge
+//! with usage-weighted averaging.
+
+use super::{group_by_router_similarity, group_count, merged_layer, usage_scores};
+use crate::compress::{CompressCtx, CompressedLayer, Compressor};
+use crate::moe::MoeLayer;
+use crate::ot::{cost::sq_euclidean, hungarian};
+use crate::tensor::Matrix;
+
+pub struct MSmoe;
+
+impl Compressor for MSmoe {
+    fn name(&self) -> String {
+        "m-smoe".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let g = group_count(n, ctx.rate);
+        let groups = group_by_router_similarity(layer, g, ctx.stats);
+        let scores = usage_scores(layer, ctx.stats);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let mut aligns: Vec<Vec<usize>> = vec![(0..pi).collect(); n];
+        let mut centers = Vec::with_capacity(g);
+        let mut b2s = Vec::with_capacity(g);
+        for members in &groups {
+            let dominant = members[0];
+            // Align each member to the dominant expert's row order.
+            let mut acc = Matrix::zeros(pi, dms[0].cols);
+            let mut total_w = 0.0f64;
+            let mut b2 = vec![0.0f32; layer.experts[0].d_model()];
+            for &k in members {
+                let perm: Vec<usize> = if k == dominant {
+                    (0..pi).collect()
+                } else {
+                    let cost = sq_euclidean(&dms[dominant], &dms[k]);
+                    hungarian::solve(&cost).row_to_col
+                };
+                let w = scores[k].max(1e-9);
+                acc.axpy(w as f32, &dms[k].permute_rows(&perm));
+                for (o, &v) in b2.iter_mut().zip(&layer.experts[k].b2) {
+                    *o += w as f32 * v;
+                }
+                total_w += w;
+                aligns[k] = perm;
+            }
+            centers.push(acc.scale(1.0 / total_w as f32));
+            b2s.push(b2.iter().map(|v| v / total_w as f32).collect());
+        }
+        merged_layer(layer, "m-smoe", &groups, centers, aligns, b2s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::{ExpertArch, ExpertWeights, Router};
+    use crate::util::Rng;
+
+    #[test]
+    fn group_structure_and_budget() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&MSmoe, &l, 0.25, 1);
+        assert_eq!(cl.experts.len(), 2);
+        let frac = cl.n_params_stored() as f64 / l.expert_params() as f64;
+        assert!(frac < 0.27, "frac={frac}");
+    }
+
+    #[test]
+    fn alignment_beats_meo_on_permuted_clones() {
+        // Experts that are row-permutations of one another: M-SMoE's
+        // permutation alignment should merge them near-losslessly while
+        // MEO's unaligned average cannot.
+        let mut rng = Rng::new(2);
+        let base = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let experts: Vec<ExpertWeights> = (0..4)
+            .map(|_| {
+                let perm = rng.permutation(16);
+                base.permuted(&perm).perturbed(0.01, &mut rng)
+            })
+            .collect();
+        let l = MoeLayer {
+            router: Router::random(4, 8, 1, &mut rng),
+            experts,
+            shared_expert: None,
+        };
+        // Merge everything into ONE group so grouping differences vanish.
+        let e_msmoe = quick_compress(&MSmoe, &l, 0.125, 3).approx_error(&l);
+        let e_meo = quick_compress(&crate::baselines::Meo, &l, 0.125, 3).approx_error(&l);
+        assert!(
+            e_msmoe < 0.5 * e_meo,
+            "msmoe={e_msmoe} should be far below meo={e_meo}"
+        );
+    }
+
+    #[test]
+    fn aligns_are_permutations() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&MSmoe, &l, 0.25, 4);
+        for a in &cl.aligns {
+            let mut s = a.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..16).collect::<Vec<_>>());
+        }
+    }
+}

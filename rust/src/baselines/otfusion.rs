@@ -1,0 +1,118 @@
+//! OT Fusion (Singh & Jaggi, NeurIPS 2020) as an expert-merge baseline,
+//! implemented the layer-by-layer way the original prescribes (App. B.2):
+//! a free-support Wasserstein barycenter of the **first-layer weights
+//! alone** produces the permutations, second layers are pre-aligned with
+//! those permutations, and the fused expert is the average of the aligned
+//! stacks.
+//!
+//! The per-layer barycenter iterations are what the paper's §5.5 measures
+//! as the >4-day overhead on Mixtral (vs <1 day for ResMoE's single
+//! joint-design-matrix barycenter) — `perf_hotpath` reproduces that gap in
+//! relative time.
+
+use super::{group_by_usage_rank, group_count, mean_b2, merged_layer};
+use crate::compress::{CompressCtx, CompressedLayer, Compressor};
+use crate::moe::MoeLayer;
+use crate::ot::{free_support_barycenter, BarycenterConfig};
+use crate::tensor::Matrix;
+
+pub struct OtFusion;
+
+impl Compressor for OtFusion {
+    fn name(&self) -> String {
+        "ot-fusion".into()
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let p = layer.experts[0].d_model();
+        let g = group_count(n, ctx.rate);
+        let groups = group_by_usage_rank(layer, g, ctx.stats);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        // Column ranges of the per-linear-layer blocks inside the design
+        // matrix: first layer(s) = everything before W2^T.
+        let w2_off = dms[0].cols - p;
+        let mut aligns: Vec<Vec<usize>> = vec![(0..pi).collect(); n];
+        let mut centers = Vec::with_capacity(g);
+        let cfg = BarycenterConfig::default();
+        for members in &groups {
+            // Layer 1: barycenter over the [W1|b1(|W3|b3)] blocks only.
+            let first_blocks: Vec<Matrix> =
+                members.iter().map(|&k| dms[k].slice_cols(0, w2_off)).collect();
+            let refs: Vec<&Matrix> = first_blocks.iter().collect();
+            let bc1 = free_support_barycenter(&refs, &cfg, ctx.rng);
+            // Pre-align each expert's FULL design matrix with T_k from layer
+            // 1, then fuse layer 2 with a second barycenter over the aligned
+            // W2^T blocks (support already aligned, so this refines within
+            // the aligned frame).
+            let aligned_full: Vec<Matrix> = members
+                .iter()
+                .zip(&bc1.perms)
+                .map(|(&k, perm)| dms[k].permute_rows(perm))
+                .collect();
+            let second_blocks: Vec<Matrix> = aligned_full
+                .iter()
+                .map(|m| m.slice_cols(w2_off, m.cols))
+                .collect();
+            let refs2: Vec<&Matrix> = second_blocks.iter().collect();
+            let bc2 = free_support_barycenter(&refs2, &cfg, ctx.rng);
+            // Compose the two permutations per member.
+            for ((&k, p1), p2) in members.iter().zip(&bc1.perms).zip(&bc2.perms) {
+                aligns[k] = p2.iter().map(|&i| p1[i]).collect();
+            }
+            // Fused center: mean of fully (twice-)aligned design matrices.
+            let fully_aligned: Vec<Matrix> = members
+                .iter()
+                .map(|&k| dms[k].permute_rows(&aligns[k]))
+                .collect();
+            centers.push(Matrix::mean_of(&fully_aligned.iter().collect::<Vec<_>>()));
+        }
+        let b2s = groups.iter().map(|m| mean_b2(layer, m)).collect();
+        merged_layer(layer, "ot-fusion", &groups, centers, aligns, b2s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::moe::{ExpertArch, ExpertWeights, Router};
+    use crate::util::Rng;
+
+    #[test]
+    fn structure_and_budget() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 8, 2, false, false, &mut rng);
+        let cl = quick_compress(&OtFusion, &l, 0.25, 1);
+        assert_eq!(cl.experts.len(), 2);
+        assert!(cl.n_params_stored() < l.expert_params() / 3);
+    }
+
+    #[test]
+    fn merges_permuted_clones_well() {
+        let mut rng = Rng::new(2);
+        let base = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let experts: Vec<ExpertWeights> =
+            (0..4).map(|_| base.permuted(&rng.permutation(16))).collect();
+        let l = MoeLayer {
+            router: Router::random(4, 8, 1, &mut rng),
+            experts,
+            shared_expert: None,
+        };
+        let cl = quick_compress(&OtFusion, &l, 0.125, 3);
+        assert!(cl.approx_error(&l) < 1e-4, "err={}", cl.approx_error(&l));
+    }
+
+    #[test]
+    fn aligns_are_permutations() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&OtFusion, &l, 0.5, 4);
+        for a in &cl.aligns {
+            let mut s = a.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..12).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Per-layer adaptive compression rates — the paper's §6 future-work item
+//! ("exploration of adopting different compression rates for each layer").
+//!
+//! Given a global parameter budget, allocate per-layer retention rates in
+//! proportion to each layer's *compression sensitivity*: the approximation
+//! error a probe compression at the uniform rate would incur, normalized by
+//! the layer's weight energy. Layers whose residuals are hard to sparsify
+//! keep more parameters; easy layers give budget back. A water-filling pass
+//! keeps the total exactly on budget.
+
+use super::{compress_model, CompressCtx, CompressedModel, CompressionReport, Compressor, LayerReport};
+use crate::moe::{Ffn, Model};
+use crate::util::Rng;
+
+/// Sensitivity-weighted per-layer rate allocation.
+#[derive(Debug, Clone)]
+pub struct RatePlan {
+    /// (block index, retention rate), aligned with the compressed layers.
+    pub rates: Vec<(usize, f64)>,
+}
+
+/// Probe each candidate layer at `global_rate` and allocate rates so that
+/// `Σ rate_l · params_l = global_rate · Σ params_l`, with per-layer rates
+/// clamped to `[min_rate, max_rate]`.
+pub fn plan_rates(
+    model: &Model,
+    comp: &dyn Compressor,
+    blocks: &[usize],
+    global_rate: f64,
+    min_rate: f64,
+    max_rate: f64,
+    rng: &mut Rng,
+) -> RatePlan {
+    assert!(min_rate <= global_rate && global_rate <= max_rate);
+    // Probe sensitivities.
+    let mut sens = Vec::with_capacity(blocks.len());
+    let mut params = Vec::with_capacity(blocks.len());
+    for &bi in blocks {
+        let Ffn::Moe(layer) = &model.blocks[bi].ffn else {
+            sens.push(0.0);
+            params.push(0);
+            continue;
+        };
+        let mut ctx = CompressCtx::new(global_rate, rng);
+        let cl = comp.compress(layer, &mut ctx);
+        let energy: f64 = layer
+            .experts
+            .iter()
+            .map(|e| e.design_matrix().frob_norm_sq())
+            .sum::<f64>()
+            / layer.experts[0].d_inner() as f64;
+        sens.push(cl.approx_error(layer) / energy.max(1e-12));
+        params.push(layer.expert_params());
+    }
+    let total_params: usize = params.iter().sum();
+    let budget = global_rate * total_params as f64;
+    // Initial proportional-to-sensitivity allocation around the mean.
+    let mean_sens = sens.iter().sum::<f64>() / sens.len().max(1) as f64;
+    let mut rates: Vec<f64> = sens
+        .iter()
+        .map(|&s| {
+            let tilt = if mean_sens > 0.0 { s / mean_sens } else { 1.0 };
+            (global_rate * tilt).clamp(min_rate, max_rate)
+        })
+        .collect();
+    // Water-filling: scale unclamped layers until the budget matches.
+    for _ in 0..32 {
+        let spent: f64 = rates.iter().zip(&params).map(|(r, &p)| r * p as f64).sum();
+        let err = budget - spent;
+        if err.abs() < 1e-6 * budget.max(1.0) {
+            break;
+        }
+        let adjustable: f64 = rates
+            .iter()
+            .zip(&params)
+            .filter(|(r, _)| **r > min_rate + 1e-9 && **r < max_rate - 1e-9)
+            .map(|(_, &p)| p as f64)
+            .sum();
+        if adjustable == 0.0 {
+            // Fall back to adjusting everything proportionally.
+            let scale = budget / spent.max(1e-12);
+            for r in rates.iter_mut() {
+                *r = (*r * scale).clamp(min_rate, max_rate);
+            }
+            break;
+        }
+        let delta = err / adjustable;
+        for (r, &_p) in rates.iter_mut().zip(&params) {
+            if *r > min_rate + 1e-9 && *r < max_rate - 1e-9 {
+                *r = (*r + delta).clamp(min_rate, max_rate);
+            }
+        }
+    }
+    RatePlan { rates: blocks.iter().copied().zip(rates).collect() }
+}
+
+/// Compress with per-layer rates from a [`RatePlan`].
+pub fn compress_model_adaptive(
+    model: &Model,
+    comp: &dyn Compressor,
+    plan: &RatePlan,
+    calib_tokens: Option<&[u32]>,
+    rng: &mut Rng,
+) -> CompressedModel {
+    let (ffn_inputs, stats) = match calib_tokens {
+        Some(tokens) => {
+            let inputs = model.collect_ffn_inputs(tokens);
+            let mut st = model.fresh_stats();
+            model.hidden_states(tokens, Some(&mut st));
+            (Some(inputs), Some(st))
+        }
+        None => (None, None),
+    };
+    let mut out = model.clone();
+    let mut layers = Vec::new();
+    let mut reports = Vec::new();
+    for &(bi, rate) in &plan.rates {
+        let Ffn::Moe(layer) = &model.blocks[bi].ffn else { continue };
+        let mut ctx = CompressCtx::new(rate, rng);
+        ctx.calib = ffn_inputs.as_ref().map(|v| &v[bi]);
+        ctx.stats = stats.as_ref().map(|s| &s[bi]);
+        let cl = comp.compress(layer, &mut ctx);
+        let params_before = layer.expert_params();
+        reports.push(LayerReport {
+            block: bi,
+            approx_error: cl.approx_error(layer),
+            params_before,
+            params_after: cl.n_params_stored(),
+            bytes_before: params_before * 4,
+            bytes_after: cl.memory_bytes(),
+        });
+        out.blocks[bi].ffn = Ffn::Moe(cl.to_layer(layer));
+        layers.push((bi, cl));
+    }
+    CompressedModel {
+        model: out,
+        layers,
+        report: CompressionReport {
+            method: format!("{}+adaptive", comp.name()),
+            rate: plan.rates.iter().map(|(_, r)| r).sum::<f64>() / plan.rates.len().max(1) as f64,
+            layers: reports,
+        },
+    }
+}
+
+/// Convenience: plan + compress in one call, budget-matched to
+/// `compress_model(model, comp, global_rate, ...)`.
+pub fn compress_model_with_budget(
+    model: &Model,
+    comp: &dyn Compressor,
+    global_rate: f64,
+    top_layers: usize,
+    calib_tokens: Option<&[u32]>,
+    rng: &mut Rng,
+) -> CompressedModel {
+    let moe_blocks = model.moe_blocks();
+    let blocks: Vec<usize> = moe_blocks
+        .iter()
+        .copied()
+        .rev()
+        .take(top_layers)
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    let plan = plan_rates(model, comp, &blocks, global_rate, global_rate * 0.4, (global_rate * 2.0).min(0.95), rng);
+    compress_model_adaptive(model, comp, &plan, calib_tokens, rng)
+}
+
+/// Uniform-rate baseline with identical reporting (ablation helper).
+pub fn compress_model_uniform(
+    model: &Model,
+    comp: &dyn Compressor,
+    rate: f64,
+    top_layers: usize,
+    rng: &mut Rng,
+) -> CompressedModel {
+    compress_model(model, comp, rate, top_layers, None, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ResMoE;
+    use crate::moe::ModelConfig;
+
+    fn model_with_uneven_layers(seed: u64) -> Model {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 4;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        let mut m = Model::random(&cfg, &mut rng);
+        // Make block 1's experts near-identical (easy to compress) and
+        // block 3's heterogeneous (hard).
+        if let Ffn::Moe(l) = &mut m.blocks[1].ffn {
+            let base = l.experts[0].clone();
+            for e in l.experts.iter_mut() {
+                *e = base.perturbed(0.001, &mut rng);
+            }
+        }
+        if let Ffn::Moe(l) = &mut m.blocks[3].ffn {
+            for (i, e) in l.experts.iter_mut().enumerate() {
+                for v in e.w1.data.iter_mut() {
+                    *v *= 1.0 + i as f32;
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn plan_meets_global_budget() {
+        let m = model_with_uneven_layers(1);
+        let mut rng = Rng::new(2);
+        let blocks = m.moe_blocks();
+        let plan = plan_rates(&m, &ResMoE::up(), &blocks, 0.25, 0.1, 0.5, &mut rng);
+        let params: Vec<usize> = blocks
+            .iter()
+            .map(|&b| {
+                let Ffn::Moe(l) = &m.blocks[b].ffn else { panic!() };
+                l.expert_params()
+            })
+            .collect();
+        let spent: f64 = plan
+            .rates
+            .iter()
+            .zip(&params)
+            .map(|(&(_, r), &p)| r * p as f64)
+            .sum();
+        let budget = 0.25 * params.iter().sum::<usize>() as f64;
+        assert!(
+            (spent - budget).abs() < 0.02 * budget,
+            "spent {spent} vs budget {budget}"
+        );
+    }
+
+    #[test]
+    fn hard_layer_gets_more_budget() {
+        let m = model_with_uneven_layers(3);
+        let mut rng = Rng::new(4);
+        let blocks = m.moe_blocks();
+        let plan = plan_rates(&m, &ResMoE::up(), &blocks, 0.25, 0.1, 0.5, &mut rng);
+        let easy = plan.rates.iter().find(|(b, _)| *b == 1).unwrap().1;
+        let hard = plan.rates.iter().find(|(b, _)| *b == 3).unwrap().1;
+        assert!(hard > easy, "hard layer rate {hard} <= easy {easy}");
+    }
+
+    #[test]
+    fn adaptive_no_worse_than_uniform_at_same_budget() {
+        let m = model_with_uneven_layers(5);
+        let mut rng = Rng::new(6);
+        let adaptive = compress_model_with_budget(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let uniform = compress_model_uniform(&m, &ResMoE::up(), 0.25, 2, &mut Rng::new(6));
+        // Compare total weighted error.
+        let total = |cm: &CompressedModel| -> f64 {
+            cm.report.layers.iter().map(|l| l.approx_error).sum()
+        };
+        assert!(
+            total(&adaptive) <= total(&uniform) * 1.05,
+            "adaptive {} vs uniform {}",
+            total(&adaptive),
+            total(&uniform)
+        );
+        // And the budgets actually match (within the sparse-format slack).
+        let pa = adaptive.report.total_params_after() as f64;
+        let pu = uniform.report.total_params_after() as f64;
+        assert!((pa - pu).abs() < 0.08 * pu, "adaptive {pa} vs uniform {pu} params");
+    }
+
+    #[test]
+    fn report_marks_method_adaptive() {
+        let m = model_with_uneven_layers(7);
+        let mut rng = Rng::new(8);
+        let cm = compress_model_with_budget(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        assert!(cm.report.method.contains("adaptive"));
+        assert_eq!(cm.layers.len(), 2);
+    }
+}

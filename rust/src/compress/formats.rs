@@ -1,0 +1,350 @@
+//! Compressed layer representations and restoration (paper Alg. 1 output /
+//! Alg. 2 input).
+//!
+//! Every compression method in this repo — ResMoE and all baselines —
+//! produces a [`CompressedLayer`]: an optional shared *center* design
+//! matrix, one [`CompressedExpert`] per stored expert, and a router-slot →
+//! stored-expert map (non-identity only for merge baselines that reduce the
+//! expert count). Restoration (`W_ω + Δ_k`) yields dense [`ExpertWeights`]
+//! that drop into the original [`MoeLayer`] unchanged: the router never
+//! needs to know the layer was compressed.
+
+use crate::moe::{ExpertArch, ExpertWeights, MoeLayer};
+use crate::tensor::{Csr, Matrix, Svd};
+
+/// How one expert's stored matrix (full design matrix or residual) is kept.
+#[derive(Debug, Clone)]
+pub enum ResidualRepr {
+    /// Dense matrix; `accounted_params` on the expert tracks how many
+    /// entries the method actually pays for (e.g. structured pruning zeroes
+    /// whole rows but stores only the kept ones).
+    Dense(Matrix),
+    /// Unstructured-pruned matrix in CSR with narrow indices (App. A.7).
+    SparseCsr(Csr),
+    /// Truncated-SVD factors (App. A.4).
+    LowRank(Svd),
+}
+
+impl ResidualRepr {
+    /// Materialize to a dense matrix.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            ResidualRepr::Dense(m) => m.clone(),
+            ResidualRepr::SparseCsr(c) => c.to_dense(),
+            ResidualRepr::LowRank(s) => s.reconstruct(),
+        }
+    }
+
+    /// Add into an existing dense matrix (the restore hot path — avoids a
+    /// temporary for sparse residuals).
+    pub fn add_into(&self, dense: &mut Matrix) {
+        match self {
+            ResidualRepr::Dense(m) => dense.add_assign(m),
+            ResidualRepr::SparseCsr(c) => c.add_to_dense(dense),
+            ResidualRepr::LowRank(s) => dense.add_assign(&s.reconstruct()),
+        }
+    }
+
+    /// Parameters the representation stores.
+    pub fn n_params(&self) -> usize {
+        match self {
+            ResidualRepr::Dense(m) => m.n_params(),
+            ResidualRepr::SparseCsr(c) => c.nnz(),
+            ResidualRepr::LowRank(s) => s.n_params(),
+        }
+    }
+
+    /// Bytes the representation occupies (f32 values; sparse index overhead
+    /// per its configured width).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ResidualRepr::Dense(m) => m.n_params() * 4,
+            ResidualRepr::SparseCsr(c) => c.memory_bytes(),
+            ResidualRepr::LowRank(s) => s.n_params() * 4,
+        }
+    }
+}
+
+/// One stored expert.
+#[derive(Debug, Clone)]
+pub struct CompressedExpert {
+    pub residual: ResidualRepr,
+    /// Output bias, kept uncompressed (p values; excluded from the design
+    /// matrix per Eq. 3).
+    pub b2: Vec<f32>,
+    /// Parameters the method pays for (≤ `residual.n_params()` for Dense
+    /// reprs with structural zeros).
+    pub accounted_params: usize,
+}
+
+/// A compressed MoE layer.
+#[derive(Debug, Clone)]
+pub struct CompressedLayer {
+    pub method: String,
+    pub arch: ExpertArch,
+    pub d_model: usize,
+    /// Shared center design matrix `W_ω` (barycenter / average / Git
+    /// Re-Basin center), `None` for direct methods.
+    pub base: Option<Matrix>,
+    pub experts: Vec<CompressedExpert>,
+    /// Router slot `k` → index into `experts` (identity unless a merge
+    /// method reduced the expert count).
+    pub expert_map: Vec<usize>,
+    /// Per-slot alignment `T_k`: `aligns[k][i] = j` means design row `i` of
+    /// the restored expert for slot `k` corresponds to row `j` of the
+    /// ORIGINAL expert `k`. Identity for permutation-free methods. Only the
+    /// Table-1 error metric needs it (restored experts are function-
+    /// equivalent in any row order).
+    pub aligns: Vec<Vec<usize>>,
+}
+
+impl CompressedLayer {
+    /// Identity expert map of size n.
+    pub fn identity_map(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    /// Identity alignments: n slots × pI rows.
+    pub fn identity_aligns(n: usize, pi: usize) -> Vec<Vec<usize>> {
+        (0..n).map(|_| (0..pi).collect()).collect()
+    }
+
+    /// Restore the design matrix for router slot `k` (`W_ω + Δ_k`).
+    pub fn restore_design(&self, slot: usize) -> Matrix {
+        let e = &self.experts[self.expert_map[slot]];
+        match &self.base {
+            Some(base) => {
+                let mut out = base.clone();
+                e.residual.add_into(&mut out);
+                out
+            }
+            None => e.residual.to_dense(),
+        }
+    }
+
+    /// Restore full expert weights for router slot `k` (Alg. 2 step 1).
+    pub fn restore_expert(&self, slot: usize) -> ExpertWeights {
+        let e = &self.experts[self.expert_map[slot]];
+        let dm = self.restore_design(slot);
+        ExpertWeights::from_design_matrix(self.arch, self.d_model, &dm, e.b2.clone())
+    }
+
+    /// Materialize a full [`MoeLayer`] with every expert restored — the
+    /// offline-eval path (the serving path restores lazily via the
+    /// coordinator cache instead).
+    pub fn to_layer(&self, original: &MoeLayer) -> MoeLayer {
+        let experts = (0..self.expert_map.len())
+            .map(|k| self.restore_expert(k))
+            .collect();
+        MoeLayer {
+            router: original.router.clone(),
+            experts,
+            shared_expert: original.shared_expert.clone(),
+        }
+    }
+
+    /// Parameters stored for the experts (center + residuals + b2), the
+    /// quantity the paper's compression rate is defined over.
+    pub fn n_params_stored(&self) -> usize {
+        let base = self.base.as_ref().map(|b| b.n_params()).unwrap_or(0);
+        base + self
+            .experts
+            .iter()
+            .map(|e| e.accounted_params + e.b2.len())
+            .sum::<usize>()
+    }
+
+    /// Bytes stored (center dense f32 + per-expert representation bytes).
+    pub fn memory_bytes(&self) -> usize {
+        let base = self.base.as_ref().map(|b| b.n_params() * 4).unwrap_or(0);
+        base + self
+            .experts
+            .iter()
+            .map(|e| {
+                let repr = match &e.residual {
+                    // Dense with structural zeros pays only for accounted
+                    // entries (they are stored contiguously after packing).
+                    ResidualRepr::Dense(_) => e.accounted_params * 4,
+                    other => other.memory_bytes(),
+                };
+                repr + e.b2.len() * 4
+            })
+            .sum::<usize>()
+    }
+
+    /// The paper's Table-1 approximation error for this layer:
+    /// `ε = 1/N Σ_k ||T_k W_k − Ŵ_k||_F²`, normalized by `pI`.
+    pub fn approx_error(&self, original: &MoeLayer) -> f64 {
+        let n = self.expert_map.len();
+        let pi = original.experts[0].d_inner();
+        let mut total = 0.0f64;
+        for k in 0..n {
+            let aligned = original.experts[k].design_matrix().permute_rows(&self.aligns[k]);
+            let restored = self.restore_design(k);
+            total += aligned.sq_dist(&restored);
+        }
+        total / n as f64 / pi as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{sparse::IndexWidth, svd::jacobi_svd};
+    use crate::util::Rng;
+
+    fn test_layer(rng: &mut Rng) -> MoeLayer {
+        MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, false, false, rng)
+    }
+
+    fn dense_identity_compression(layer: &MoeLayer) -> CompressedLayer {
+        let experts = layer
+            .experts
+            .iter()
+            .map(|e| {
+                let dm = e.design_matrix();
+                CompressedExpert {
+                    accounted_params: dm.n_params(),
+                    residual: ResidualRepr::Dense(dm),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: "identity".into(),
+            arch: layer.experts[0].arch,
+            d_model: 8,
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(4),
+            aligns: CompressedLayer::identity_aligns(4, 16),
+        }
+    }
+
+    #[test]
+    fn identity_compression_is_lossless() {
+        let mut rng = Rng::new(1);
+        let layer = test_layer(&mut rng);
+        let cl = dense_identity_compression(&layer);
+        assert!(cl.approx_error(&layer) < 1e-12);
+        let restored = cl.to_layer(&layer);
+        let x = Matrix::randn(5, 8, 1.0, &mut rng);
+        assert!(layer.forward(&x, None).sq_dist(&restored.forward(&x, None)) < 1e-10);
+    }
+
+    #[test]
+    fn base_plus_residual_restores_exactly() {
+        let mut rng = Rng::new(2);
+        let layer = test_layer(&mut rng);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let base = Matrix::mean_of(&dms.iter().collect::<Vec<_>>());
+        let experts = layer
+            .experts
+            .iter()
+            .zip(&dms)
+            .map(|(e, dm)| {
+                let resid = dm.sub(&base);
+                CompressedExpert {
+                    accounted_params: resid.n_params(),
+                    residual: ResidualRepr::Dense(resid),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        let cl = CompressedLayer {
+            method: "avg+dense".into(),
+            arch: ExpertArch::Relu,
+            d_model: 8,
+            base: Some(base),
+            experts,
+            expert_map: CompressedLayer::identity_map(4),
+            aligns: CompressedLayer::identity_aligns(4, 16),
+        };
+        assert!(cl.approx_error(&layer) < 1e-10);
+    }
+
+    #[test]
+    fn sparse_and_lowrank_reprs_roundtrip() {
+        let mut rng = Rng::new(3);
+        let m = Matrix::from_fn(10, 12, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let sp = ResidualRepr::SparseCsr(Csr::from_dense(&m, IndexWidth::U16));
+        assert!(sp.to_dense().sq_dist(&m) < 1e-12);
+        let lr = ResidualRepr::LowRank(jacobi_svd(&m));
+        assert!(lr.to_dense().sq_dist(&m) < 1e-6);
+        let mut acc = Matrix::zeros(10, 12);
+        sp.add_into(&mut acc);
+        assert!(acc.sq_dist(&m) < 1e-12);
+    }
+
+    #[test]
+    fn merged_map_shares_experts() {
+        let mut rng = Rng::new(4);
+        let layer = test_layer(&mut rng);
+        // Merge 4 experts into 2 (slots 0,1 -> 0; slots 2,3 -> 1).
+        let centers = [
+            Matrix::mean_of(&[
+                &layer.experts[0].design_matrix(),
+                &layer.experts[1].design_matrix(),
+            ]),
+            Matrix::mean_of(&[
+                &layer.experts[2].design_matrix(),
+                &layer.experts[3].design_matrix(),
+            ]),
+        ];
+        let experts = centers
+            .iter()
+            .map(|c| CompressedExpert {
+                accounted_params: c.n_params(),
+                residual: ResidualRepr::Dense(c.clone()),
+                b2: vec![0.0; 8],
+            })
+            .collect();
+        let cl = CompressedLayer {
+            method: "merge2".into(),
+            arch: ExpertArch::Relu,
+            d_model: 8,
+            base: None,
+            experts,
+            expert_map: vec![0, 0, 1, 1],
+            aligns: CompressedLayer::identity_aligns(4, 16),
+        };
+        let r0 = cl.restore_design(0);
+        let r1 = cl.restore_design(1);
+        assert!(r0.sq_dist(&r1) < 1e-12);
+        assert!(cl.approx_error(&layer) > 0.0);
+        // Stored params = 2 experts, not 4.
+        assert_eq!(
+            cl.n_params_stored(),
+            2 * (16 * 17 + 8)
+        );
+    }
+
+    #[test]
+    fn memory_accounting_prefers_sparse() {
+        let mut rng = Rng::new(5);
+        let layer = test_layer(&mut rng);
+        let dense = dense_identity_compression(&layer);
+        // 25 %-density CSR version.
+        let experts = layer
+            .experts
+            .iter()
+            .map(|e| {
+                let dm = e.design_matrix().map(|v| if v.abs() > 0.15 { v } else { 0.0 });
+                let csr = Csr::from_dense(&dm, IndexWidth::U16);
+                CompressedExpert {
+                    accounted_params: csr.nnz(),
+                    residual: ResidualRepr::SparseCsr(csr),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        let sparse = CompressedLayer { experts, ..dense.clone() };
+        assert!(sparse.memory_bytes() < dense.memory_bytes());
+    }
+}

@@ -1,0 +1,275 @@
+//! Parallelism adaptability (paper App. B.1):
+//!
+//! * **Expert parallelism** — "assign different center experts to each GPU,
+//!   allowing each center expert to handle the experts on its respective
+//!   GPU": experts are partitioned into shards, each shard gets its OWN
+//!   barycenter + residuals. More centers ⇒ tighter residuals per shard at
+//!   the cost of extra center storage — [`ShardedResMoE`] implements and
+//!   measures this trade.
+//! * **Tensor parallelism** — Eq. (3) writes the expert as a sum of
+//!   bottleneck-1 sub-MLPs, so center + residual can be partitioned along
+//!   the `pI` axis into chunks whose partial outputs sum to the full
+//!   result (Megatron-style). [`tensor_shards`]/[`tensor_parallel_forward`]
+//!   implement the split and verify the partial-sum identity.
+
+use super::formats::{CompressedExpert, CompressedLayer, ResidualRepr};
+use super::prune::magnitude_prune_joint;
+use super::{CompressCtx, Compressor};
+use crate::moe::{ExpertWeights, MoeLayer};
+use crate::ot::free_support_barycenter;
+use crate::tensor::{sparse::IndexWidth, Csr, Matrix};
+
+/// ResMoE with `n_shards` independent centers (App. B.1 expert
+/// parallelism). Shard `s` owns router slots `{k : k mod n_shards == s}`,
+/// mirroring the usual round-robin expert placement.
+pub struct ShardedResMoE {
+    pub n_shards: usize,
+}
+
+impl Compressor for ShardedResMoE {
+    fn name(&self) -> String {
+        format!("resmoe-up-ep{}", self.n_shards)
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let p = layer.experts[0].d_model();
+        let shards = self.n_shards.clamp(1, n);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        // Per-shard barycenters + aligned residuals.
+        let mut aligns: Vec<Vec<usize>> = vec![(0..pi).collect(); n];
+        let mut residuals: Vec<Option<Matrix>> = vec![None; n];
+        let mut centers: Vec<Matrix> = Vec::with_capacity(shards);
+        let mut shard_of = vec![0usize; n];
+        for s in 0..shards {
+            let members: Vec<usize> = (0..n).filter(|k| k % shards == s).collect();
+            let refs: Vec<&Matrix> = members.iter().map(|&k| &dms[k]).collect();
+            let bc = free_support_barycenter(&refs, &Default::default(), ctx.rng);
+            for (&k, perm) in members.iter().zip(&bc.perms) {
+                residuals[k] = Some(dms[k].permute_rows(perm).sub(&bc.support));
+                aligns[k] = perm.clone();
+                shard_of[k] = s;
+            }
+            centers.push(bc.support);
+        }
+        // Joint magnitude prune across ALL residuals at the retention rate.
+        let mut resid: Vec<Matrix> = residuals.into_iter().map(|r| r.unwrap()).collect();
+        let total: usize = resid.iter().map(|r| r.n_params()).sum();
+        let keep = (ctx.rate * total as f64).round() as usize;
+        let mut refs: Vec<&mut Matrix> = resid.iter_mut().collect();
+        magnitude_prune_joint(&mut refs, keep);
+        // Fold each shard's center into the stored residual (the generic
+        // CompressedLayer supports one `base`; per-shard bases are expressed
+        // by storing `center_s − base0` dense? No — store per-expert dense
+        // restored = center_s + Δ_k with accounted params = nnz + amortized
+        // center share).
+        //
+        // We keep exactness instead: base = None, each expert's repr is the
+        // SPARSE residual paired with its shard center via a dense add at
+        // restore time. To stay within the shared format we materialize
+        // restored = center + residual as the Dense repr, but account only
+        // nnz + center/|shard| parameters, which is what a sharded
+        // deployment stores.
+        let per_shard_count = |s: usize| (0..n).filter(|k| k % shards == s).count();
+        let experts = layer
+            .experts
+            .iter()
+            .enumerate()
+            .zip(resid)
+            .map(|((k, e), delta)| {
+                let s = shard_of[k];
+                let mut restored = centers[s].clone();
+                restored.add_assign(&delta);
+                let csr = Csr::from_dense(&delta, IndexWidth::narrowest_for(delta.cols));
+                let center_share =
+                    (centers[s].n_params() as f64 / per_shard_count(s) as f64).ceil() as usize;
+                CompressedExpert {
+                    accounted_params: csr.nnz() + center_share,
+                    residual: ResidualRepr::Dense(restored),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: p,
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(n),
+            aligns,
+        }
+    }
+}
+
+/// One tensor-parallel shard of an expert: rows `[lo, hi)` of the sub-MLP
+/// axis (W1/b1/W3/b3 rows, W2 columns). Eq. (3) guarantees the full output
+/// is the SUM of shard outputs plus a single b2.
+#[derive(Debug, Clone)]
+pub struct TensorShard {
+    pub lo: usize,
+    pub hi: usize,
+    pub expert: ExpertWeights,
+}
+
+/// Split an expert into `n` row-range shards (b2 kept on shard 0 only).
+pub fn tensor_shards(e: &ExpertWeights, n: usize) -> Vec<TensorShard> {
+    let pi = e.d_inner();
+    let n = n.clamp(1, pi);
+    let chunk = pi.div_ceil(n);
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    while lo < pi {
+        let hi = (lo + chunk).min(pi);
+        let slice_rows = |m: &Matrix| m.slice_rows(lo, hi);
+        let shard = ExpertWeights {
+            arch: e.arch,
+            w1: slice_rows(&e.w1),
+            b1: e.b1[lo..hi].to_vec(),
+            w3: e.w3.as_ref().map(slice_rows),
+            b3: e.b3.as_ref().map(|b| b[lo..hi].to_vec()),
+            w2: e.w2.slice_cols(lo, hi),
+            b2: if lo == 0 { e.b2.clone() } else { vec![0.0; e.d_model()] },
+        };
+        out.push(TensorShard { lo, hi, expert: shard });
+        lo = hi;
+    }
+    out
+}
+
+/// Megatron-style forward: each shard computes its partial output, partials
+/// are all-reduced (summed).
+pub fn tensor_parallel_forward(shards: &[TensorShard], x: &Matrix) -> Matrix {
+    let mut acc: Option<Matrix> = None;
+    for s in shards {
+        let y = s.expert.forward(x);
+        match &mut acc {
+            Some(a) => a.add_assign(&y),
+            None => acc = Some(y),
+        }
+    }
+    acc.expect("at least one shard")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::resmoe::ResMoE;
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    fn upcycled_layer(seed: u64, n_experts: usize) -> MoeLayer {
+        let mut rng = Rng::new(seed);
+        MoeLayer::random(ExpertArch::Relu, 8, 16, n_experts, 2, true, false, &mut rng)
+    }
+
+    #[test]
+    fn sharded_is_exact_at_full_rate() {
+        let l = upcycled_layer(1, 8);
+        for shards in [1, 2, 4] {
+            let cl = quick_compress(&ShardedResMoE { n_shards: shards }, &l, 1.0, 1);
+            assert!(
+                cl.approx_error(&l) < 1e-9,
+                "shards={shards}: err {}",
+                cl.approx_error(&l)
+            );
+        }
+    }
+
+    #[test]
+    fn more_centers_tighter_residuals() {
+        // App. B.1's hypothesis: per-shard centers capture "more diverse
+        // patterns" — at a fixed residual budget, more centers must not
+        // increase the error on heterogeneous experts.
+        let mut rng = Rng::new(2);
+        // Two distinct families of experts (bimodal).
+        let base_a = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let base_b = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let experts: Vec<ExpertWeights> = (0..8)
+            .map(|k| {
+                // Interleave families so round-robin shards s=2 separate them.
+                if k % 2 == 0 {
+                    base_a.perturbed(0.02, &mut rng)
+                } else {
+                    base_b.perturbed(0.02, &mut rng)
+                }
+            })
+            .collect();
+        let l = MoeLayer {
+            router: crate::moe::Router::random(8, 8, 2, &mut rng),
+            experts,
+            shared_expert: None,
+        };
+        let e1 = quick_compress(&ShardedResMoE { n_shards: 1 }, &l, 0.25, 3).approx_error(&l);
+        let e2 = quick_compress(&ShardedResMoE { n_shards: 2 }, &l, 0.25, 3).approx_error(&l);
+        assert!(e2 < e1 * 0.8, "2 shards {e2} should beat 1 shard {e1} on bimodal experts");
+    }
+
+    #[test]
+    fn sharded_accounts_center_share() {
+        let l = upcycled_layer(3, 8);
+        let one = quick_compress(&ShardedResMoE { n_shards: 1 }, &l, 0.25, 4);
+        let four = quick_compress(&ShardedResMoE { n_shards: 4 }, &l, 0.25, 4);
+        // More shards store more center parameters at the same residual
+        // budget.
+        assert!(four.n_params_stored() > one.n_params_stored());
+    }
+
+    #[test]
+    fn sharded_matches_single_center_resmoe_at_one_shard() {
+        let l = upcycled_layer(4, 4);
+        let sharded = quick_compress(&ShardedResMoE { n_shards: 1 }, &l, 0.25, 5);
+        let plain = quick_compress(&ResMoE::up(), &l, 0.25, 5);
+        assert!(
+            (sharded.approx_error(&l) - plain.approx_error(&l)).abs() < 1e-9,
+            "{} vs {}",
+            sharded.approx_error(&l),
+            plain.approx_error(&l)
+        );
+    }
+
+    #[test]
+    fn tensor_parallel_partial_sums_are_exact() {
+        // The Eq.-(3) identity behind App. B.1's tensor-parallel claim.
+        let mut rng = Rng::new(6);
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let e = ExpertWeights::random(arch, 8, 13, &mut rng);
+            let x = Matrix::randn(5, 8, 1.0, &mut rng);
+            let want = e.forward(&x);
+            for n in [1, 2, 3, 5, 13] {
+                let shards = tensor_shards(&e, n);
+                let got = tensor_parallel_forward(&shards, &x);
+                assert!(
+                    got.sq_dist(&want) < 1e-8,
+                    "arch {arch:?} n={n}: {}",
+                    got.sq_dist(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_shards_partition_rows() {
+        let mut rng = Rng::new(7);
+        let e = ExpertWeights::random(ExpertArch::Relu, 8, 16, &mut rng);
+        let shards = tensor_shards(&e, 3);
+        assert_eq!(shards[0].lo, 0);
+        assert_eq!(shards.last().unwrap().hi, 16);
+        let covered: usize = shards.iter().map(|s| s.hi - s.lo).sum();
+        assert_eq!(covered, 16);
+        // b2 only on shard 0.
+        assert!(shards[1].expert.b2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn restored_sharded_layer_functions() {
+        let l = upcycled_layer(8, 8);
+        let cl = quick_compress(&ShardedResMoE { n_shards: 2 }, &l, 0.3, 9);
+        let restored = cl.to_layer(&l);
+        let mut rng = Rng::new(10);
+        let x = Matrix::randn(4, 8, 1.0, &mut rng);
+        assert!(restored.forward(&x, None).data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,306 @@
+//! Pruning compressors: unstructured magnitude pruning (UP) in the paper's
+//! "concat" and "sep" variants, and structured (neuron-wise) pruning (SP).
+//!
+//! Following Han et al. (2015) as the paper does, UP zeroes the smallest-
+//! magnitude weights. "concat" thresholds over the concatenation of all
+//! experts' matrices in the layer (preserving expert-level relationships —
+//! the variant the paper finds markedly better, Table 2); "sep" thresholds
+//! within each expert separately.
+
+use super::formats::{CompressedExpert, CompressedLayer, ResidualRepr};
+use super::{CompressCtx, Compressor};
+use crate::moe::{ExpertWeights, MoeLayer};
+use crate::tensor::{sparse::IndexWidth, Csr, Matrix};
+
+/// Zero all but the `keep` largest-|v| entries of the matrices in `mats`
+/// (joint threshold across all of them).
+pub fn magnitude_prune_joint(mats: &mut [&mut Matrix], keep: usize) {
+    let total: usize = mats.iter().map(|m| m.n_params()).sum();
+    if keep >= total {
+        return;
+    }
+    // Select the threshold = (total-keep)-th smallest |v|.
+    let mut mags: Vec<f32> = Vec::with_capacity(total);
+    for m in mats.iter() {
+        mags.extend(m.data.iter().map(|v| v.abs()));
+    }
+    let cut_idx = total - keep; // entries strictly below threshold are dropped
+    mags.select_nth_unstable_by(cut_idx.saturating_sub(1).min(total - 1), |a, b| {
+        a.partial_cmp(b).unwrap()
+    });
+    let thresh = mags[cut_idx.saturating_sub(1).min(total - 1)];
+    // Zero entries below the threshold; among ties keep first-seen until the
+    // budget is met.
+    let mut kept = mats
+        .iter()
+        .map(|m| m.data.iter().filter(|v| v.abs() > thresh).count())
+        .sum::<usize>();
+    for m in mats.iter_mut() {
+        for v in m.data.iter_mut() {
+            let a = v.abs();
+            if a < thresh || a == 0.0 {
+                *v = 0.0;
+            } else if a == thresh {
+                if kept < keep {
+                    kept += 1;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Magnitude-prune a single matrix to `keep` entries.
+pub fn magnitude_prune(m: &Matrix, keep: usize) -> Matrix {
+    let mut out = m.clone();
+    magnitude_prune_joint(&mut [&mut out], keep);
+    out
+}
+
+/// Unstructured pruning baseline.
+pub struct UnstructuredPruning {
+    /// Joint threshold across the layer's experts (paper's "concat").
+    pub concat: bool,
+}
+
+impl Compressor for UnstructuredPruning {
+    fn name(&self) -> String {
+        format!("up-{}", if self.concat { "concat" } else { "sep" })
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let mut dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        if self.concat {
+            let total: usize = dms.iter().map(|m| m.n_params()).sum();
+            let keep = (ctx.rate * total as f64).round() as usize;
+            let mut refs: Vec<&mut Matrix> = dms.iter_mut().collect();
+            magnitude_prune_joint(&mut refs, keep);
+        } else {
+            for dm in dms.iter_mut() {
+                let keep = (ctx.rate * dm.n_params() as f64).round() as usize;
+                magnitude_prune_joint(&mut [dm], keep);
+            }
+        }
+        let experts = layer
+            .experts
+            .iter()
+            .zip(dms)
+            .map(|(e, dm)| {
+                let csr = Csr::from_dense(&dm, IndexWidth::narrowest_for(dm.cols));
+                CompressedExpert {
+                    accounted_params: csr.nnz(),
+                    residual: ResidualRepr::SparseCsr(csr),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: layer.experts[0].d_model(),
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(n),
+            aligns: CompressedLayer::identity_aligns(n, pi),
+        }
+    }
+}
+
+/// Structured pruning: drop whole sub-MLPs (design-matrix rows) with the
+/// smallest L2 norm, keeping `rate · pI` neurons per expert. Restored
+/// experts keep full shape with zero rows (function-identical to physically
+/// shrinking `pI`), but only kept rows are accounted/stored.
+pub struct StructuredPruning {
+    pub concat: bool,
+}
+
+impl Compressor for StructuredPruning {
+    fn name(&self) -> String {
+        format!("sp-{}", if self.concat { "concat" } else { "sep" })
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        // Row norms per expert.
+        let norms: Vec<Vec<f64>> = dms.iter().map(crate::tensor::linalg::row_norms).collect();
+        let keep_rows_per_expert: Vec<Vec<bool>> = if self.concat {
+            // Rank all (expert, row) pairs jointly.
+            let keep_total = ((ctx.rate * (n * pi) as f64).round() as usize).min(n * pi);
+            let mut all: Vec<(usize, usize, f64)> = Vec::with_capacity(n * pi);
+            for (k, ns) in norms.iter().enumerate() {
+                for (r, &v) in ns.iter().enumerate() {
+                    all.push((k, r, v));
+                }
+            }
+            all.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            let mut keep = vec![vec![false; pi]; n];
+            for &(k, r, _) in all.iter().take(keep_total) {
+                keep[k][r] = true;
+            }
+            keep
+        } else {
+            let keep_k = ((ctx.rate * pi as f64).round() as usize).min(pi);
+            norms
+                .iter()
+                .map(|ns| {
+                    let mut idx: Vec<usize> = (0..pi).collect();
+                    idx.sort_by(|&a, &b| ns[b].partial_cmp(&ns[a]).unwrap());
+                    let mut keep = vec![false; pi];
+                    for &r in idx.iter().take(keep_k) {
+                        keep[r] = true;
+                    }
+                    keep
+                })
+                .collect()
+        };
+        let experts = layer
+            .experts
+            .iter()
+            .zip(dms.iter().zip(&keep_rows_per_expert))
+            .map(|(e, (dm, keep))| {
+                let mut pruned = dm.clone();
+                let mut kept_rows = 0usize;
+                for r in 0..pi {
+                    if keep[r] {
+                        kept_rows += 1;
+                    } else {
+                        pruned.row_mut(r).fill(0.0);
+                    }
+                }
+                CompressedExpert {
+                    accounted_params: kept_rows * dm.cols,
+                    residual: ResidualRepr::Dense(pruned),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: layer.experts[0].d_model(),
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(n),
+            aligns: CompressedLayer::identity_aligns(n, pi),
+        }
+    }
+}
+
+/// Share of nonzero weights in a restored expert — test helper.
+pub fn density(e: &ExpertWeights) -> f64 {
+    let dm = e.design_matrix();
+    dm.data.iter().filter(|v| **v != 0.0).count() as f64 / dm.n_params() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    fn layer(seed: u64) -> (MoeLayer, Rng) {
+        let mut rng = Rng::new(seed);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, false, false, &mut rng);
+        (l, rng)
+    }
+
+    #[test]
+    fn magnitude_prune_keeps_exact_budget() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(10, 10, 1.0, &mut rng);
+        let pruned = magnitude_prune(&m, 25);
+        assert_eq!(pruned.data.iter().filter(|v| **v != 0.0).count(), 25);
+        // The kept entries are the largest in magnitude.
+        let mut mags: Vec<f32> = m.data.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = mags[24];
+        for (orig, kept) in m.data.iter().zip(&pruned.data) {
+            if orig.abs() > thresh {
+                assert_eq!(orig, kept);
+            }
+        }
+    }
+
+    #[test]
+    fn magnitude_prune_handles_ties() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let pruned = magnitude_prune(&m, 4);
+        assert_eq!(pruned.data.iter().filter(|v| **v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn up_respects_rate() {
+        let (l, mut rng) = layer(2);
+        let mut ctx = CompressCtx::new(0.25, &mut rng);
+        for concat in [true, false] {
+            let cl = UnstructuredPruning { concat }.compress(&l, &mut ctx);
+            let stored = cl.n_params_stored() as f64;
+            let orig = l.expert_params() as f64;
+            // b2 (p values/expert) is kept uncompressed, so the stored
+            // fraction sits slightly above the nominal rate.
+            assert!(
+                (stored / orig - 0.25).abs() < 0.035,
+                "concat={concat}: stored fraction {}",
+                stored / orig
+            );
+        }
+    }
+
+    #[test]
+    fn up_concat_beats_sep_on_heterogeneous_experts() {
+        // Give one expert much larger weights: concat keeps more of it.
+        let (mut l, mut rng) = layer(3);
+        for v in l.experts[0].w1.data.iter_mut() {
+            *v *= 10.0;
+        }
+        let mut ctx = CompressCtx::new(0.25, &mut rng);
+        let e_concat = UnstructuredPruning { concat: true }.compress(&l, &mut ctx).approx_error(&l);
+        let e_sep = UnstructuredPruning { concat: false }.compress(&l, &mut ctx).approx_error(&l);
+        assert!(e_concat < e_sep, "concat={e_concat} sep={e_sep}");
+    }
+
+    #[test]
+    fn sp_zeroes_whole_rows() {
+        let (l, mut rng) = layer(4);
+        let mut ctx = CompressCtx::new(0.25, &mut rng);
+        let cl = StructuredPruning { concat: false }.compress(&l, &mut ctx);
+        for k in 0..4 {
+            let dm = cl.restore_design(k);
+            let nonzero_rows = (0..dm.rows)
+                .filter(|&r| dm.row(r).iter().any(|v| *v != 0.0))
+                .count();
+            assert_eq!(nonzero_rows, 4); // 25 % of 16
+        }
+        // Restored layer still runs.
+        let restored = cl.to_layer(&l);
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        assert!(restored.forward(&x, None).data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn up_error_lower_than_sp() {
+        // Unstructured pruning has strictly more freedom than structured.
+        let (l, mut rng) = layer(5);
+        let mut ctx = CompressCtx::new(0.25, &mut rng);
+        let e_up = UnstructuredPruning { concat: true }.compress(&l, &mut ctx).approx_error(&l);
+        let e_sp = StructuredPruning { concat: true }.compress(&l, &mut ctx).approx_error(&l);
+        assert!(e_up < e_sp, "up={e_up} sp={e_sp}");
+    }
+
+    #[test]
+    fn error_decreases_with_rate() {
+        let (l, mut rng) = layer(6);
+        let mut prev = f64::INFINITY;
+        for rate in [0.1, 0.25, 0.5, 0.9] {
+            let mut ctx = CompressCtx::new(rate, &mut rng);
+            let e = UnstructuredPruning { concat: true }.compress(&l, &mut ctx).approx_error(&l);
+            assert!(e <= prev, "rate {rate}: {e} > {prev}");
+            prev = e;
+        }
+    }
+}

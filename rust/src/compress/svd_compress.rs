@@ -1,0 +1,170 @@
+//! Truncated-SVD compressor (Denton et al. 2014 as used by the paper), in
+//! "concat" (SVD of the full design matrix) and "sep" (SVD of each weight
+//! matrix separately) variants, with the rank chosen per Appendix A.4 so the
+//! factored parameter count matches the retention rate.
+
+use super::formats::{CompressedExpert, CompressedLayer, ResidualRepr};
+use super::{CompressCtx, Compressor};
+use crate::moe::MoeLayer;
+use crate::tensor::svd::jacobi_svd;
+use crate::tensor::Matrix;
+
+/// Rank such that `rows·k + k + k·cols ≤ rate · rows·cols` (App. A.4).
+pub fn rank_for_rate(rows: usize, cols: usize, rate: f64) -> usize {
+    let budget = rate * (rows * cols) as f64;
+    let per_rank = (rows + 1 + cols) as f64;
+    ((budget / per_rank).floor() as usize).max(1).min(rows.min(cols))
+}
+
+/// SVD over a matrix truncated to the rate-matched rank.
+pub fn svd_at_rate(m: &Matrix, rate: f64) -> crate::tensor::Svd {
+    let k = rank_for_rate(m.rows, m.cols, rate);
+    jacobi_svd(m).truncate(k)
+}
+
+pub struct SvdCompression {
+    /// concat: one SVD of the design matrix per expert. sep: separate SVDs
+    /// of W1 / (W3) / W2 (ranks split so the budget matches).
+    pub concat: bool,
+}
+
+impl Compressor for SvdCompression {
+    fn name(&self) -> String {
+        format!("svd-{}", if self.concat { "concat" } else { "sep" })
+    }
+
+    fn compress(&self, layer: &MoeLayer, ctx: &mut CompressCtx) -> CompressedLayer {
+        let n = layer.n_experts();
+        let pi = layer.experts[0].d_inner();
+        let p = layer.experts[0].d_model();
+        let experts = layer
+            .experts
+            .iter()
+            .map(|e| {
+                let dm = e.design_matrix();
+                let (residual, accounted) = if self.concat {
+                    let svd = svd_at_rate(&dm, ctx.rate);
+                    let params = svd.n_params();
+                    (ResidualRepr::LowRank(svd), params)
+                } else {
+                    // Per-matrix SVDs, reassembled into one design matrix.
+                    // Column ranges: w1 [0,p), b1 [p], (w3 (p+1..2p+1], b3), w2^T tail.
+                    let mut parts: Vec<(usize, usize)> = vec![(0, p)];
+                    let w2_off = if e.w3.is_some() { 2 * p + 2 } else { p + 1 };
+                    if e.w3.is_some() {
+                        parts.push((p + 1, 2 * p + 1));
+                    }
+                    parts.push((w2_off, dm.cols));
+                    let mut restored = dm.clone();
+                    let mut accounted = 0usize;
+                    for &(lo, hi) in &parts {
+                        let sub = dm.slice_cols(lo, hi);
+                        let svd = svd_at_rate(&sub, ctx.rate);
+                        accounted += svd.n_params();
+                        let rec = svd.reconstruct();
+                        for r in 0..pi {
+                            restored.row_mut(r)[lo..hi].copy_from_slice(rec.row(r));
+                        }
+                    }
+                    // Bias columns stay exact and are accounted.
+                    accounted += pi * (dm.cols - parts.iter().map(|(l, h)| h - l).sum::<usize>());
+                    (ResidualRepr::Dense(restored), accounted)
+                };
+                CompressedExpert {
+                    residual,
+                    b2: e.b2.clone(),
+                    accounted_params: accounted,
+                }
+            })
+            .collect();
+        CompressedLayer {
+            method: self.name(),
+            arch: layer.experts[0].arch,
+            d_model: p,
+            base: None,
+            experts,
+            expert_map: CompressedLayer::identity_map(n),
+            aligns: CompressedLayer::identity_aligns(n, pi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    #[test]
+    fn rank_formula_matches_appendix_a4() {
+        // Switch: pI = 4p ⇒ k ≈ s·pI/3 for the [W1|W2ᵀ] matrix of width 2p.
+        let p = 64;
+        let pi = 4 * p;
+        let k = rank_for_rate(pi, 2 * p, 0.25);
+        let expected = (0.25 * pi as f64 / 3.0) as usize;
+        assert!((k as i64 - expected as i64).abs() <= 1, "k={k} expected≈{expected}");
+        // Mixtral: pI = 3.5p ⇒ k ≈ (6/13)·s·pI for width 3p.
+        let p = 64;
+        let pi = 224;
+        let k = rank_for_rate(pi, 3 * p, 0.25);
+        let expected = (6.0 / 13.0 * 0.25 * pi as f64) as usize;
+        assert!((k as i64 - expected as i64).abs() <= 1, "k={k} expected≈{expected}");
+    }
+
+    #[test]
+    fn respects_param_budget() {
+        let mut rng = Rng::new(1);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 32, 4, 1, false, false, &mut rng);
+        let mut ctx = CompressCtx::new(0.25, &mut rng);
+        let cl = SvdCompression { concat: true }.compress(&l, &mut ctx);
+        let stored = cl.n_params_stored() as f64;
+        let orig = l.expert_params() as f64;
+        assert!(stored <= orig * 0.27, "stored fraction {}", stored / orig);
+    }
+
+    #[test]
+    fn error_matches_optimal_rank_k_truncation() {
+        // The compressor must achieve exactly the Eckart–Young optimum for
+        // its chosen rank (SVD truncation is the best rank-k approximation).
+        let mut rng = Rng::new(2);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 2, 1, false, false, &mut rng);
+        let mut ctx = CompressCtx::new(0.5, &mut rng);
+        let cl = SvdCompression { concat: true }.compress(&l, &mut ctx);
+        let dm0 = l.experts[0].design_matrix();
+        let k = rank_for_rate(dm0.rows, dm0.cols, 0.5);
+        let optimal: f64 = l
+            .experts
+            .iter()
+            .map(|e| crate::tensor::svd::rank_k_error_sq(&e.design_matrix(), k))
+            .sum::<f64>()
+            / l.experts.len() as f64
+            / 16.0;
+        let got = cl.approx_error(&l);
+        assert!((got - optimal).abs() < 1e-3 * optimal.max(1e-9), "got={got} opt={optimal}");
+    }
+
+    #[test]
+    fn sep_variant_runs_on_swiglu() {
+        let mut rng = Rng::new(3);
+        let l = MoeLayer::random(ExpertArch::SwiGlu, 8, 14, 2, 1, true, false, &mut rng);
+        let mut ctx = CompressCtx::new(0.3, &mut rng);
+        let cl = SvdCompression { concat: false }.compress(&l, &mut ctx);
+        let restored = cl.to_layer(&l);
+        let x = Matrix::randn(4, 8, 1.0, &mut rng);
+        assert!(restored.forward(&x, None).data.iter().all(|v| v.is_finite()));
+        assert!(cl.approx_error(&l).is_finite());
+    }
+
+    #[test]
+    fn error_shrinks_with_rate() {
+        let mut rng = Rng::new(4);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 24, 2, 1, false, false, &mut rng);
+        let mut prev = f64::INFINITY;
+        for rate in [0.1, 0.3, 0.6, 1.0] {
+            let mut ctx = CompressCtx::new(rate, &mut rng);
+            let e = SvdCompression { concat: true }.compress(&l, &mut ctx).approx_error(&l);
+            assert!(e <= prev + 1e-9);
+            prev = e;
+        }
+    }
+}

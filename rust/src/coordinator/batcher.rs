@@ -1,0 +1,85 @@
+//! Dynamic request batcher: greedily drains the queue up to `batch_max`,
+//! waiting at most `batch_wait` for stragglers once the first request of a
+//! batch arrives (the vLLM-style latency/throughput knob).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Collect the next batch from `rx`. Blocks until at least one item
+/// arrives (or the channel closes → `None`), then keeps accepting items
+/// until `batch_max` is reached or `batch_wait` elapses.
+pub fn next_batch<T>(rx: &Receiver<T>, batch_max: usize, batch_wait: Duration) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + batch_wait;
+    while batch.len() < batch_max {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn returns_none_on_closed_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let batch = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_after_wait() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn stragglers_join_within_window() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+            tx.send(3).unwrap();
+        });
+        let batch = next_batch(&rx, 8, Duration::from_millis(100)).unwrap();
+        sender.join().unwrap();
+        assert!(batch.len() >= 3, "batch={batch:?}");
+    }
+
+    #[test]
+    fn closed_mid_batch_returns_partial() {
+        let (tx, rx) = channel();
+        tx.send(7u32).unwrap();
+        drop(tx);
+        let batch = next_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(batch, vec![7]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Restored-expert LRU cache — the paper's Algorithm 2 ("reconstruct and
+//! dynamically load the compressed experts") as a serving-runtime feature.
+//!
+//! Resident set: the per-layer barycenter `W_ω` lives inside the
+//! [`CompressedLayer`] (always in memory, small); restored dense experts
+//! are materialized on router demand into an LRU cache bounded by a byte
+//! budget. When the budget is smaller than the full restored model, the
+//! cache trades restore latency for memory — exactly the knob the paper's
+//! space-efficiency argument is about.
+
+use crate::compress::CompressedLayer;
+use crate::moe::ExpertWeights;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// (block index, router slot) → restored expert.
+type Key = (usize, usize);
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheMetrics {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub restore_ns: u64,
+}
+
+impl CacheMetrics {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    expert: Arc<ExpertWeights>,
+    bytes: usize,
+    /// LRU stamp (monotone counter).
+    last_used: u64,
+}
+
+/// LRU cache of restored experts over a set of compressed layers.
+pub struct ExpertCache {
+    layers: HashMap<usize, CompressedLayer>,
+    entries: HashMap<Key, Entry>,
+    budget_bytes: usize,
+    used_bytes: usize,
+    clock: u64,
+    pub metrics: CacheMetrics,
+}
+
+fn expert_bytes(e: &ExpertWeights) -> usize {
+    e.n_params() * 4
+}
+
+impl ExpertCache {
+    pub fn new(layers: Vec<(usize, CompressedLayer)>, budget_bytes: usize) -> ExpertCache {
+        ExpertCache {
+            layers: layers.into_iter().collect(),
+            entries: HashMap::new(),
+            budget_bytes,
+            used_bytes: 0,
+            clock: 0,
+            metrics: CacheMetrics::default(),
+        }
+    }
+
+    pub fn has_layer(&self, block: usize) -> bool {
+        self.layers.contains_key(&block)
+    }
+
+    pub fn layer(&self, block: usize) -> Option<&CompressedLayer> {
+        self.layers.get(&block)
+    }
+
+    /// Bytes of the always-resident compressed representations.
+    pub fn compressed_bytes(&self) -> usize {
+        self.layers.values().map(|l| l.memory_bytes()).sum()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Fetch (restoring if needed) the expert for `(block, slot)`.
+    pub fn get(&mut self, block: usize, slot: usize) -> Arc<ExpertWeights> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&(block, slot)) {
+            e.last_used = clock;
+            self.metrics.hits += 1;
+            return e.expert.clone();
+        }
+        self.metrics.misses += 1;
+        let t0 = std::time::Instant::now();
+        let layer = self.layers.get(&block).expect("block not compressed");
+        let restored = Arc::new(layer.restore_expert(slot));
+        self.metrics.restore_ns += t0.elapsed().as_nanos() as u64;
+        let bytes = expert_bytes(&restored);
+        // Evict LRU entries until the new expert fits (a single expert
+        // larger than the whole budget is allowed in alone).
+        while self.used_bytes + bytes > self.budget_bytes && !self.entries.is_empty() {
+            let (&victim, _) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .expect("nonempty");
+            let removed = self.entries.remove(&victim).unwrap();
+            self.used_bytes -= removed.bytes;
+            self.metrics.evictions += 1;
+        }
+        self.used_bytes += bytes;
+        self.entries.insert(
+            (block, slot),
+            Entry { expert: restored.clone(), bytes, last_used: clock },
+        );
+        restored
+    }
+
+    /// Pre-warm the cache for the given (block, slot) pairs (the scheduler
+    /// calls this with router predictions).
+    pub fn prefetch(&mut self, keys: &[Key]) {
+        for &(b, s) in keys {
+            if self.has_layer(b) {
+                let _ = self.get(b, s);
+            }
+        }
+    }
+
+    pub fn resident_experts(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::ResMoE;
+    use crate::moe::{ExpertArch, MoeLayer};
+    use crate::util::Rng;
+
+    fn compressed(seed: u64) -> (MoeLayer, CompressedLayer) {
+        let mut rng = Rng::new(seed);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &l, 0.25, seed);
+        (l, cl)
+    }
+
+    fn one_expert_bytes() -> usize {
+        // relu p=8 pi=16 → (16*8 + 16 + 8*16 + 8) * 4
+        (16 * 8 + 16 + 8 * 16 + 8) * 4
+    }
+
+    #[test]
+    fn restores_correct_experts() {
+        let (l, cl) = compressed(1);
+        let mut cache = ExpertCache::new(vec![(3, cl.clone())], usize::MAX);
+        for slot in 0..4 {
+            let e = cache.get(3, slot);
+            let direct = cl.restore_expert(slot);
+            assert_eq!(*e, direct);
+        }
+        let _ = l;
+        assert_eq!(cache.metrics.misses, 4);
+        assert_eq!(cache.metrics.hits, 0);
+    }
+
+    #[test]
+    fn hits_after_warm() {
+        let (_, cl) = compressed(2);
+        let mut cache = ExpertCache::new(vec![(0, cl)], usize::MAX);
+        cache.get(0, 1);
+        cache.get(0, 1);
+        cache.get(0, 1);
+        assert_eq!(cache.metrics.hits, 2);
+        assert_eq!(cache.metrics.misses, 1);
+        assert!(cache.metrics.hit_rate() > 0.6);
+    }
+
+    #[test]
+    fn budget_forces_eviction_lru_order() {
+        let (_, cl) = compressed(3);
+        // Budget for exactly two restored experts.
+        let mut cache = ExpertCache::new(vec![(0, cl)], 2 * one_expert_bytes());
+        cache.get(0, 0);
+        cache.get(0, 1);
+        assert_eq!(cache.resident_experts(), 2);
+        cache.get(0, 0); // refresh 0 → LRU victim is 1
+        cache.get(0, 2); // evicts 1
+        assert_eq!(cache.metrics.evictions, 1);
+        cache.get(0, 0); // still resident → hit
+        assert_eq!(cache.metrics.hits, 2);
+        cache.get(0, 1); // miss again (was evicted)
+        assert_eq!(cache.metrics.misses, 4);
+    }
+
+    #[test]
+    fn tiny_budget_still_serves() {
+        let (_, cl) = compressed(4);
+        let mut cache = ExpertCache::new(vec![(0, cl)], 1);
+        let e = cache.get(0, 3);
+        assert!(e.n_params() > 0);
+        assert_eq!(cache.resident_experts(), 1); // single over-budget entry allowed
+    }
+
+    #[test]
+    fn prefetch_warms() {
+        let (_, cl) = compressed(5);
+        let mut cache = ExpertCache::new(vec![(2, cl)], usize::MAX);
+        cache.prefetch(&[(2, 0), (2, 1), (9, 0)]); // block 9 ignored
+        assert_eq!(cache.resident_experts(), 2);
+        cache.get(2, 0);
+        assert_eq!(cache.metrics.hits, 1);
+    }
+
+    #[test]
+    fn compressed_bytes_below_restored() {
+        let (l, cl) = compressed(6);
+        let cache = ExpertCache::new(vec![(0, cl)], usize::MAX);
+        assert!(cache.compressed_bytes() < l.expert_params() * 4);
+    }
+}

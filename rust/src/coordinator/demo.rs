@@ -1,0 +1,90 @@
+//! End-to-end serving demo used by `resmoe serve` and
+//! `examples/serving_demo.rs`: compress the model, stand up the server with
+//! a bounded restore cache, fire a mixed workload from client threads, and
+//! report throughput/latency plus the memory story.
+
+use super::server::{Engine, Request, Response, Server, ServerConfig};
+use crate::compress::{compress_model, ResMoE};
+use crate::eval::Assets;
+use crate::util::{format_bytes, Rng};
+use anyhow::Result;
+
+pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result<()> {
+    let model = &assets.model;
+    let moe_blocks = model.moe_blocks().len();
+    let top = (moe_blocks * 3).div_ceil(4);
+    let mut rng = Rng::new(0);
+    println!(
+        "serving {} ({}) — compressing top {top} MoE layers with resmoe-up @ 25 %",
+        model.cfg.name,
+        if assets.pretrained { "pretrained" } else { "random fallback" }
+    );
+    let cm = compress_model(model, &ResMoE::up(), 0.25, top, None, &mut rng);
+    let full_expert_bytes: usize = cm.report.total_bytes_before();
+    let engine = Engine::compressed(model.clone(), cm.layers, cfg.cache_budget_bytes);
+    let (compressed_bytes, _) = engine.resident_expert_bytes().unwrap();
+    println!(
+        "  resident compressed experts: {} (dense originals: {}); restore-cache budget {}",
+        format_bytes(compressed_bytes),
+        format_bytes(full_expert_bytes),
+        format_bytes(cfg.cache_budget_bytes),
+    );
+    let server = Server::start(engine.clone(), cfg);
+    // Mixed workload from 4 client threads.
+    let lang = assets.language.clone();
+    let max_seq = model.cfg.max_seq;
+    let replies: Vec<_> = std::thread::scope(|scope| {
+        let server = &server;
+        let mut handles = Vec::new();
+        for c in 0..4usize {
+            let lang = lang.clone();
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                let mut out = Vec::new();
+                for i in 0..n_requests / 4 {
+                    let tokens = lang.generate(16 + rng.below(max_seq / 2), &mut rng);
+                    let req = match i % 3 {
+                        0 => Request::Score { tokens },
+                        1 => Request::Generate {
+                            prompt: tokens[..8.min(tokens.len())].to_vec(),
+                            max_new: 8,
+                        },
+                        _ => Request::Score { tokens },
+                    };
+                    out.push(server.submit(req));
+                }
+                out
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let mut errors = 0usize;
+    for r in &replies {
+        let (resp, _) = r.recv().expect("reply");
+        if matches!(resp, Response::Error(_)) {
+            errors += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    println!("  {}", metrics.summary());
+    if let Some(cm) = engine.cache_metrics() {
+        println!(
+            "  restore cache: {:.1} % hit rate, {} restores ({:.2} ms total restore time), {} evictions",
+            cm.hit_rate() * 100.0,
+            cm.misses,
+            cm.restore_ns as f64 / 1e6,
+            cm.evictions
+        );
+    }
+    if let Some((cb, used)) = engine.resident_expert_bytes() {
+        println!(
+            "  steady-state expert memory: {} compressed + {} cache = {} (dense: {})",
+            format_bytes(cb),
+            format_bytes(used),
+            format_bytes(cb + used),
+            format_bytes(full_expert_bytes)
+        );
+    }
+    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    Ok(())
+}

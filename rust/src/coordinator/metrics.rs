@@ -1,0 +1,97 @@
+//! Serving metrics: latency percentiles, throughput, batch-size histogram.
+
+use crate::util::stats::percentile;
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct ServerMetrics {
+    pub latencies_s: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    pub tokens_processed: u64,
+    pub wall_s: f64,
+}
+
+impl ServerMetrics {
+    pub fn record_request(&mut self, latency: Duration) {
+        self.latencies_s.push(latency.as_secs_f64());
+    }
+
+    pub fn record_batch(&mut self, size: usize, tokens: u64) {
+        self.batch_sizes.push(size);
+        self.tokens_processed += tokens;
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_s, 50.0) * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_s, 99.0) * 1e3
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.latencies_s.len() as f64 / self.wall_s
+        }
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_processed as f64 / self.wall_s
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests | {:.1} req/s | {:.0} tok/s | p50 {:.2} ms | p99 {:.2} ms | mean batch {:.1}",
+            self.latencies_s.len(),
+            self.requests_per_s(),
+            self.tokens_per_s(),
+            self.p50_ms(),
+            self.p99_ms(),
+            self.mean_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_rates() {
+        let mut m = ServerMetrics::default();
+        for i in 1..=100 {
+            m.record_request(Duration::from_millis(i));
+        }
+        m.record_batch(4, 400);
+        m.record_batch(8, 800);
+        m.wall_s = 2.0;
+        assert!((m.p50_ms() - 50.5).abs() < 1.0);
+        assert!(m.p99_ms() > 98.0);
+        assert_eq!(m.mean_batch(), 6.0);
+        assert_eq!(m.requests_per_s(), 50.0);
+        assert_eq!(m.tokens_per_s(), 600.0);
+        assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.p50_ms(), 0.0);
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.requests_per_s(), 0.0);
+    }
+}

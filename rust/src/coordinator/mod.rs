@@ -1,0 +1,14 @@
+//! L3 serving coordinator: dynamic batching, a thread-pool server, and the
+//! restored-expert LRU cache that turns the paper's Algorithm 2 into a
+//! first-class runtime feature ("barycenter resident, residuals restored on
+//! router demand under a byte budget").
+
+pub mod batcher;
+pub mod cache;
+pub mod demo;
+pub mod metrics;
+pub mod server;
+
+pub use cache::{CacheMetrics, ExpertCache};
+pub use metrics::ServerMetrics;
+pub use server::{Engine, Request, Response, Server, ServerConfig};

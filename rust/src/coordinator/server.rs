@@ -1,0 +1,418 @@
+//! The serving coordinator: request types, the cache-backed inference
+//! engine (paper Alg. 2 on the hot path), a dynamic batcher, and a
+//! thread-pool server. Pure std — no async runtime exists in the offline
+//! vendor set, and a thread-per-worker loop over an mpsc queue is exactly
+//! the right shape at this scale.
+
+use super::batcher::next_batch;
+use super::cache::{CacheMetrics, ExpertCache};
+use super::metrics::ServerMetrics;
+use crate::compress::CompressedLayer;
+use crate::moe::{Ffn, FfnHook, Model};
+use crate::tensor::Matrix;
+use crate::util::stats::logsumexp;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub batch_max: usize,
+    pub batch_wait_us: u64,
+    /// Byte budget for the restored-expert cache.
+    pub cache_budget_bytes: usize,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_max: 8,
+            batch_wait_us: 500,
+            cache_budget_bytes: 64 * 1024 * 1024,
+            workers: 2,
+        }
+    }
+}
+
+/// Inference requests.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Mean next-token log-prob of a sequence (scoring / PPL serving).
+    Score { tokens: Vec<u32> },
+    /// Greedy generation.
+    Generate { prompt: Vec<u32>, max_new: usize },
+    /// Classification through a stored task head.
+    Classify { task: String, tokens: Vec<u32> },
+}
+
+impl Request {
+    pub fn token_count(&self) -> u64 {
+        match self {
+            Request::Score { tokens } => tokens.len() as u64,
+            Request::Generate { prompt, max_new } => (prompt.len() + max_new) as u64,
+            Request::Classify { tokens, .. } => tokens.len() as u64,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Score(f64),
+    Generate(Vec<u32>),
+    Classify(usize),
+    Error(String),
+}
+
+/// The cache-backed engine: holds the backbone with compressed MoE blocks
+/// *stripped of their dense experts* (only routers + shared experts stay
+/// resident) plus the compressed representations and the restore cache.
+#[derive(Clone)]
+pub struct Engine {
+    model: Arc<Model>,
+    cache: Option<Arc<Mutex<ExpertCache>>>,
+}
+
+/// Strip the dense experts out of the compressed blocks (the router and
+/// shared expert stay) so the resident model no longer carries them.
+fn strip_experts(mut model: Model, blocks: &[usize]) -> Model {
+    for &bi in blocks {
+        if let Ffn::Moe(layer) = &mut model.blocks[bi].ffn {
+            layer.experts = Vec::new();
+        }
+    }
+    model
+}
+
+impl Engine {
+    /// Plain engine over a dense model (no compression).
+    pub fn dense(model: Model) -> Engine {
+        Engine { model: Arc::new(model), cache: None }
+    }
+
+    /// Engine over compressed layers with a restore cache. `model` is the
+    /// ORIGINAL (or restored) model; its compressed blocks are stripped.
+    pub fn compressed(
+        model: Model,
+        layers: Vec<(usize, CompressedLayer)>,
+        cache_budget_bytes: usize,
+    ) -> Engine {
+        let blocks: Vec<usize> = layers.iter().map(|(b, _)| *b).collect();
+        let stripped = strip_experts(model, &blocks);
+        Engine {
+            model: Arc::new(stripped),
+            cache: Some(Arc::new(Mutex::new(ExpertCache::new(layers, cache_budget_bytes)))),
+        }
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    pub fn cache_metrics(&self) -> Option<CacheMetrics> {
+        self.cache.as_ref().map(|c| c.lock().unwrap().metrics.clone())
+    }
+
+    pub fn resident_expert_bytes(&self) -> Option<(usize, usize)> {
+        self.cache.as_ref().map(|c| {
+            let g = c.lock().unwrap();
+            (g.compressed_bytes(), g.used_bytes())
+        })
+    }
+
+    fn hook(&self) -> EngineHook<'_> {
+        EngineHook { model: &self.model, cache: self.cache.as_deref() }
+    }
+
+    pub fn handle(&self, req: &Request) -> Response {
+        match req {
+            Request::Score { tokens } => {
+                if tokens.len() < 2 || tokens.len() > self.model.cfg.max_seq {
+                    return Response::Error("score: need 2..=max_seq tokens".into());
+                }
+                let hook = self.hook();
+                let h = self.model.hidden_states_hooked(tokens, None, &hook);
+                let logits = h.matmul_nt(&self.model.lm_head);
+                let mut total = 0.0f64;
+                for i in 0..tokens.len() - 1 {
+                    let row = logits.row(i);
+                    total += (row[tokens[i + 1] as usize] - logsumexp(row)) as f64;
+                }
+                Response::Score(total / (tokens.len() - 1) as f64)
+            }
+            Request::Generate { prompt, max_new } => {
+                if prompt.is_empty() || prompt.len() >= self.model.cfg.max_seq {
+                    return Response::Error("generate: bad prompt length".into());
+                }
+                let hook = self.hook();
+                let mut caches = self.model.fresh_caches();
+                let mut logits = vec![0.0f32; self.model.cfg.vocab_size];
+                for &t in prompt {
+                    logits = self.model.decode_step_hooked(t, &mut caches, &hook);
+                }
+                let mut out = Vec::new();
+                for _ in 0..*max_new {
+                    if caches[0].len >= self.model.cfg.max_seq {
+                        break;
+                    }
+                    let next = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as u32)
+                        .unwrap();
+                    out.push(next);
+                    logits = self.model.decode_step_hooked(next, &mut caches, &hook);
+                }
+                Response::Generate(out)
+            }
+            Request::Classify { task, tokens } => {
+                let Some(head) = self.model.head(task) else {
+                    return Response::Error(format!("no head for task '{task}'"));
+                };
+                let head = head.clone();
+                let hook = self.hook();
+                let h = self.model.hidden_states_hooked(tokens, None, &hook);
+                let logits = head.matvec(h.row(h.rows - 1));
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                Response::Classify(pred)
+            }
+        }
+    }
+}
+
+/// The FFN hook routing compressed blocks through the restore cache.
+struct EngineHook<'a> {
+    model: &'a Model,
+    cache: Option<&'a Mutex<ExpertCache>>,
+}
+
+impl FfnHook for EngineHook<'_> {
+    fn ffn_forward(&self, block: usize, x: &Matrix) -> Option<Matrix> {
+        let cache = self.cache?;
+        let Ffn::Moe(layer) = &self.model.blocks[block].ffn else {
+            return None;
+        };
+        {
+            let guard = cache.lock().unwrap();
+            if !guard.has_layer(block) {
+                return None;
+            }
+        }
+        // Route tokens with the resident router, restore experts on demand.
+        let logits = layer.router.logits(x);
+        let n = layer.router.n_experts();
+        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
+        for t in 0..x.rows {
+            let route = layer.router.route_logits(logits.row(t));
+            for (e, w) in route.experts.iter().zip(&route.weights) {
+                groups[*e].push((t, *w));
+            }
+        }
+        let mut out = match &layer.shared_expert {
+            Some(se) => se.forward(x),
+            None => Matrix::zeros(x.rows, x.cols),
+        };
+        let mut guard = cache.lock().unwrap();
+        for (slot, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let expert = guard.get(block, slot);
+            let mut sub = Matrix::zeros(group.len(), x.cols);
+            for (i, &(t, _)) in group.iter().enumerate() {
+                sub.row_mut(i).copy_from_slice(x.row(t));
+            }
+            let y = expert.forward(&sub);
+            for (i, &(t, w)) in group.iter().enumerate() {
+                let dst = out.row_mut(t);
+                for (d, &s) in dst.iter_mut().zip(y.row(i)) {
+                    *d += w * s;
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+// ------------------------------------------------------------------ server
+
+struct Job {
+    req: Request,
+    submitted: Instant,
+    reply: Sender<(Response, Duration)>,
+}
+
+/// Thread-pool server with dynamic batching.
+pub struct Server {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    started: Instant,
+}
+
+impl Server {
+    pub fn start(engine: Engine, cfg: ServerConfig) -> Server {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let mut handles = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let engine = engine.clone();
+            let metrics = metrics.clone();
+            let wait = Duration::from_micros(cfg.batch_wait_us);
+            let batch_max = cfg.batch_max.max(1);
+            handles.push(std::thread::spawn(move || loop {
+                // Hold the receiver lock only while draining one batch; the
+                // actual compute runs unlocked so workers overlap.
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    next_batch(&guard, batch_max, wait)
+                };
+                let Some(batch) = batch else { break };
+                let mut tokens = 0u64;
+                let size = batch.len();
+                for job in batch {
+                    tokens += job.req.token_count();
+                    let resp = engine.handle(&job.req);
+                    let latency = job.submitted.elapsed();
+                    let _ = job.reply.send((resp, latency));
+                    metrics.lock().unwrap().record_request(latency);
+                }
+                metrics.lock().unwrap().record_batch(size, tokens);
+            }));
+        }
+        Server { tx: Some(tx), handles, metrics, started: Instant::now() }
+    }
+
+    /// Submit a request; the receiver yields (response, latency).
+    pub fn submit(&self, req: Request) -> Receiver<(Response, Duration)> {
+        let (reply_tx, reply_rx) = channel();
+        let job = Job { req, submitted: Instant::now(), reply: reply_tx };
+        self.tx.as_ref().expect("server running").send(job).expect("workers alive");
+        reply_rx
+    }
+
+    /// Drain and stop, returning the aggregated metrics.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall_s = self.started.elapsed().as_secs_f64();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_model, ResMoE};
+    use crate::moe::ModelConfig;
+    use crate::util::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        Model::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn cached_engine_matches_restored_model() {
+        // The serving hot path (lazy restore through the cache) must produce
+        // EXACTLY the offline restored model's outputs.
+        let m = tiny_model(1);
+        let mut rng = Rng::new(2);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        let tokens: Vec<u32> = vec![1, 5, 9, 2, 8, 3];
+        let hook_out = match engine.handle(&Request::Score { tokens: tokens.clone() }) {
+            Response::Score(s) => s,
+            other => panic!("{other:?}"),
+        };
+        // Offline: fully restored model.
+        let offline = Engine::dense(cm.model.clone());
+        let want = match offline.handle(&Request::Score { tokens }) {
+            Response::Score(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert!((hook_out - want).abs() < 1e-5, "{hook_out} vs {want}");
+    }
+
+    #[test]
+    fn generate_matches_restored_model() {
+        let m = tiny_model(3);
+        let mut rng = Rng::new(4);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        let got = engine.handle(&Request::Generate { prompt: vec![1, 2, 3], max_new: 6 });
+        let want = Response::Generate(cm.model.generate(&[1, 2, 3], 6));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn error_responses() {
+        let engine = Engine::dense(tiny_model(5));
+        assert!(matches!(
+            engine.handle(&Request::Score { tokens: vec![1] }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            engine.handle(&Request::Classify { task: "none".into(), tokens: vec![1, 2] }),
+            Response::Error(_)
+        ));
+    }
+
+    #[test]
+    fn server_roundtrip_under_load() {
+        let m = tiny_model(6);
+        let mut rng = Rng::new(7);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m, cm.layers, 1 << 20);
+        let server = Server::start(
+            engine,
+            ServerConfig { batch_max: 4, batch_wait_us: 200, workers: 2, ..Default::default() },
+        );
+        let replies: Vec<_> = (0..16)
+            .map(|i| {
+                server.submit(Request::Score {
+                    tokens: (0..8).map(|t| ((t + i) % 32) as u32).collect(),
+                })
+            })
+            .collect();
+        for r in replies {
+            let (resp, latency) = r.recv().unwrap();
+            assert!(matches!(resp, Response::Score(_)), "{resp:?}");
+            assert!(latency.as_secs() < 5);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.latencies_s.len(), 16);
+        assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn stripped_engine_is_smaller_resident() {
+        let m = tiny_model(8);
+        let full_params = m.n_params();
+        let mut rng = Rng::new(9);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m, cm.layers, 0);
+        assert!(engine.model().n_params() < full_params);
+        let (compressed_bytes, cached) = engine.resident_expert_bytes().unwrap();
+        assert!(compressed_bytes > 0);
+        assert_eq!(cached, 0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Synthetic corpus — the stand-in for WikiText/C4 (DESIGN.md §2).
+//!
+//! A "language" is a Zipf-weighted lexicon of multi-token words over a byte
+//! vocabulary, emitted with first-order word-level Markov structure and a
+//! separator token. The corpus is learnable by a small LM (so PPL deltas
+//! under compression are meaningful), deterministic from a seed, and admits
+//! a natural LAMBADA analog (predict a word's final token from its prefix).
+//!
+//! Token map: 0 = separator, 1..vocab-1 = content tokens.
+
+use crate::util::Rng;
+
+pub const SEP: u32 = 0;
+
+/// A synthetic language: lexicon + Markov transitions.
+#[derive(Debug, Clone)]
+pub struct Language {
+    pub vocab_size: usize,
+    /// Lexicon words (each 2..=5 tokens, no separator inside).
+    pub words: Vec<Vec<u32>>,
+    /// Unnormalized Zipf weights per word.
+    pub weights: Vec<f32>,
+    /// Markov transition weights between words: trans[i] lists (j, w).
+    pub trans: Vec<Vec<(usize, f32)>>,
+}
+
+impl Language {
+    /// Build a language with `n_words` lexicon entries.
+    pub fn new(vocab_size: usize, n_words: usize, seed: u64) -> Language {
+        let mut rng = Rng::new(seed);
+        let mut words = Vec::with_capacity(n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < n_words {
+            let len = 2 + rng.below(4);
+            let w: Vec<u32> = (0..len)
+                .map(|_| 1 + rng.below(vocab_size - 1) as u32)
+                .collect();
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        // Zipf weights: w_i ∝ 1 / rank.
+        let weights: Vec<f32> = (0..n_words).map(|i| 1.0 / (i + 1) as f32).collect();
+        // Sparse Markov structure: each word links to ~8 successors.
+        let fanout = 8.min(n_words);
+        let trans = (0..n_words)
+            .map(|_| {
+                let succ = rng.choose_k(n_words, fanout);
+                succ.into_iter()
+                    .map(|j| (j, rng.uniform_in(0.2, 1.0) * weights[j]))
+                    .collect()
+            })
+            .collect();
+        Language { vocab_size, words, weights, trans }
+    }
+
+    /// Sample a word index following `prev` (or from the unigram prior).
+    fn next_word(&self, prev: Option<usize>, rng: &mut Rng) -> usize {
+        match prev {
+            Some(p) => {
+                let choices = &self.trans[p];
+                let ws: Vec<f32> = choices.iter().map(|&(_, w)| w).collect();
+                choices[rng.categorical(&ws)].0
+            }
+            None => rng.categorical(&self.weights),
+        }
+    }
+
+    /// Generate a token stream of (at least) `n_tokens` tokens.
+    pub fn generate(&self, n_tokens: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_tokens + 8);
+        let mut prev = None;
+        while out.len() < n_tokens {
+            let w = self.next_word(prev, rng);
+            out.extend_from_slice(&self.words[w]);
+            out.push(SEP);
+            prev = Some(w);
+        }
+        out.truncate(n_tokens);
+        out
+    }
+
+    /// Generate a sequence of exactly `n_words` words (with separators).
+    pub fn generate_words(&self, n_words: usize, rng: &mut Rng) -> (Vec<u32>, Vec<usize>) {
+        let mut tokens = Vec::new();
+        let mut word_ids = Vec::with_capacity(n_words);
+        let mut prev = None;
+        for _ in 0..n_words {
+            let w = self.next_word(prev, rng);
+            tokens.extend_from_slice(&self.words[w]);
+            tokens.push(SEP);
+            word_ids.push(w);
+            prev = Some(w);
+        }
+        (tokens, word_ids)
+    }
+}
+
+/// Train/validation corpus with fixed-length windows.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub language: Language,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+}
+
+impl Corpus {
+    pub fn generate(vocab_size: usize, train_tokens: usize, valid_tokens: usize, seed: u64) -> Corpus {
+        let language = Language::new(vocab_size, 200, seed);
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        let train = language.generate(train_tokens, &mut rng);
+        let valid = language.generate(valid_tokens, &mut rng);
+        Corpus { language, train, valid }
+    }
+
+    /// Non-overlapping windows of length `len` from a stream.
+    pub fn windows(stream: &[u32], len: usize) -> Vec<&[u32]> {
+        stream.chunks_exact(len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = Corpus::generate(64, 1000, 200, 7);
+        let b = Corpus::generate(64, 1000, 200, 7);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.valid, b.valid);
+        let c = Corpus::generate(64, 1000, 200, 8);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = Corpus::generate(64, 2000, 100, 1);
+        assert_eq!(c.train.len(), 2000);
+        assert!(c.train.iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn zipf_head_words_dominate() {
+        let lang = Language::new(64, 100, 2);
+        let mut rng = Rng::new(3);
+        let (_, word_ids) = lang.generate_words(5000, &mut rng);
+        let head = word_ids.iter().filter(|&&w| w < 10).count();
+        let tail = word_ids.iter().filter(|&&w| w >= 90).count();
+        assert!(head > 5 * tail.max(1), "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn corpus_is_learnable_structure() {
+        // Bigram statistics must be far from uniform (so an LM can learn).
+        let c = Corpus::generate(32, 20_000, 100, 4);
+        let mut counts = vec![vec![0u32; 32]; 32];
+        for w in c.train.windows(2) {
+            counts[w[0] as usize][w[1] as usize] += 1;
+        }
+        // For several contexts the max successor should dominate uniform.
+        let mut peaked = 0;
+        for row in &counts {
+            let total: u32 = row.iter().sum();
+            if total > 50 {
+                let max = *row.iter().max().unwrap();
+                if max as f64 > 4.0 * total as f64 / 32.0 {
+                    peaked += 1;
+                }
+            }
+        }
+        assert!(peaked > 5, "peaked={peaked}");
+    }
+
+    #[test]
+    fn windows_are_exact() {
+        let c = Corpus::generate(32, 1000, 512, 5);
+        let w = Corpus::windows(&c.valid, 128);
+        assert_eq!(w.len(), 4);
+        assert!(w.iter().all(|x| x.len() == 128));
+    }
+}

@@ -1,0 +1,116 @@
+//! Dataset export for the build-time JAX pretrainer.
+//!
+//! Rust owns the data generators (single source of truth); `resmoe datagen`
+//! dumps the corpus and task datasets as JSON under `artifacts/data/`, and
+//! `python/compile/pretrain.py` consumes them. This guarantees the python
+//! training distribution and the rust evaluation distribution are
+//! bit-identical.
+
+use super::corpus::Corpus;
+use super::tasks::{self, Example, NLU_TASKS};
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+fn tokens_json(tokens: &[u32]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect())
+}
+
+fn examples_json(examples: &[Example]) -> Json {
+    Json::Arr(
+        examples
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("tokens", tokens_json(&e.tokens)),
+                    ("label", Json::num(e.label as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Export the corpus + NLU training sets for one model family.
+pub fn export_datasets(dir: &Path, vocab_size: usize, max_len: usize, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let corpus = Corpus::generate(vocab_size, 300_000, 20_000, seed);
+    let write = |name: &str, j: Json| -> Result<()> {
+        std::fs::write(dir.join(name), j.to_string())
+            .with_context(|| format!("write {name}"))?;
+        Ok(())
+    };
+    write(
+        "corpus.json",
+        Json::obj(vec![
+            ("vocab_size", Json::num(vocab_size as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("train", tokens_json(&corpus.train)),
+            ("valid", tokens_json(&corpus.valid)),
+        ]),
+    )?;
+    let mut rng = Rng::new(seed ^ 0x7A5C5);
+    for task in NLU_TASKS {
+        let train = tasks::gen_nlu(task, &corpus.language, 2000, max_len, &mut rng);
+        let test = tasks::gen_nlu(task, &corpus.language, 400, max_len, &mut rng);
+        write(
+            &format!("{task}.json"),
+            Json::obj(vec![
+                ("task", Json::str(task)),
+                ("n_classes", Json::num(tasks::n_classes(task) as f64)),
+                ("train", examples_json(&train)),
+                ("test", examples_json(&test)),
+            ]),
+        )?;
+    }
+    Ok(())
+}
+
+/// Load exported classification examples back (used by the eval harness so
+/// heads trained in python are evaluated on the *identical* test split).
+pub fn load_examples(path: &Path, split: &str) -> Result<Vec<Example>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let arr = j
+        .get(split)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing split {split}"))?;
+    arr.iter()
+        .map(|e| {
+            let tokens = e
+                .get("tokens")
+                .and_then(|t| t.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("bad tokens"))?
+                .iter()
+                .map(|v| v.as_usize().map(|u| u as u32))
+                .collect::<Option<Vec<u32>>>()
+                .ok_or_else(|| anyhow::anyhow!("bad token value"))?;
+            let label = e
+                .get("label")
+                .and_then(|l| l.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("bad label"))?;
+            Ok(Example { tokens, label })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_and_reload_roundtrip() {
+        let dir = std::env::temp_dir().join("resmoe-export-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        export_datasets(&dir, 64, 96, 11).unwrap();
+        assert!(dir.join("corpus.json").exists());
+        for task in NLU_TASKS {
+            let train = load_examples(&dir.join(format!("{task}.json")), "train").unwrap();
+            let test = load_examples(&dir.join(format!("{task}.json")), "test").unwrap();
+            assert_eq!(train.len(), 2000);
+            assert_eq!(test.len(), 400);
+            assert!(test.iter().all(|e| e.tokens.iter().all(|&t| t < 64)));
+        }
+    }
+}

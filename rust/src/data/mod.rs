@@ -1,0 +1,10 @@
+//! Synthetic data: the corpus (WikiText/C4 stand-in), the NLU/NLG task
+//! generators (GLUE / LAMBADA / PIQA / WinoGrande analogs), and the JSON
+//! export consumed by the JAX pretrainer.
+
+pub mod corpus;
+pub mod export;
+pub mod tasks;
+
+pub use corpus::{Corpus, Language, SEP};
+pub use tasks::{ChoiceExample, Example, LambadaExample};

@@ -1,0 +1,345 @@
+//! Synthetic evaluation tasks — analogs of the paper's benchmarks over the
+//! synthetic language (substitution table in DESIGN.md §2).
+//!
+//! NLU (classification, heads trained at build time in JAX):
+//! * `sst2`  — sentiment: does the sequence carry more positive than
+//!   negative marker words? (binary)
+//! * `mrpc`  — paraphrase: is the second segment a shuffled copy of the
+//!   first? (binary)
+//! * `cola`  — acceptability: lexicon words vs corrupted token soup (binary)
+//! * `mnli`  — entailment: hypothesis ⊂ premise / contradiction marker /
+//!   disjoint (3-way)
+//!
+//! Zero-shot NLG (LM-scored, no heads):
+//! * `lambada`    — predict a word's final token from the passage
+//! * `piqa`       — 2-choice: true word completion vs corrupted
+//! * `winogrande` — 2-choice: consistent vs inconsistent continuation in
+//!   context
+
+use super::corpus::{Language, SEP};
+use crate::util::Rng;
+
+/// One classification example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    pub label: usize,
+}
+
+/// A 2-choice LM-scored example: `prefix + choices[label]` is correct.
+#[derive(Debug, Clone)]
+pub struct ChoiceExample {
+    pub prefix: Vec<u32>,
+    pub choices: [Vec<u32>; 2],
+    pub label: usize,
+}
+
+/// A last-token-prediction example (LAMBADA analog).
+#[derive(Debug, Clone)]
+pub struct LambadaExample {
+    pub context: Vec<u32>,
+    pub target: u32,
+}
+
+pub const NLU_TASKS: [&str; 4] = ["sst2", "mrpc", "cola", "mnli"];
+
+pub fn n_classes(task: &str) -> usize {
+    match task {
+        "mnli" => 3,
+        _ => 2,
+    }
+}
+
+fn cap(mut tokens: Vec<u32>, max_len: usize) -> Vec<u32> {
+    if tokens.len() > max_len {
+        tokens.drain(..tokens.len() - max_len);
+    }
+    tokens
+}
+
+/// Marker words for sentiment: the first `n_markers` lexicon words are
+/// "positive", the next `n_markers` are "negative".
+const N_MARKERS: usize = 8;
+
+pub fn gen_sst2(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<Example> {
+    (0..n)
+        .map(|_| {
+            let label = rng.below(2);
+            let (mut tokens, _) = lang.generate_words(4, rng);
+            let strong = 2 + rng.below(2);
+            let weak = rng.below(2);
+            let (majority, minority) =
+                if label == 1 { (0, N_MARKERS) } else { (N_MARKERS, 0) };
+            for _ in 0..strong {
+                let w = majority + rng.below(N_MARKERS);
+                tokens.extend_from_slice(&lang.words[w]);
+                tokens.push(SEP);
+            }
+            for _ in 0..weak {
+                let w = minority + rng.below(N_MARKERS);
+                tokens.extend_from_slice(&lang.words[w]);
+                tokens.push(SEP);
+            }
+            Example { tokens: cap(tokens, max_len), label }
+        })
+        .collect()
+}
+
+pub fn gen_mrpc(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<Example> {
+    (0..n)
+        .map(|_| {
+            let label = rng.below(2);
+            let (_, ids_a) = lang.generate_words(4, rng);
+            let mut a_tokens = Vec::new();
+            for &w in &ids_a {
+                a_tokens.extend_from_slice(&lang.words[w]);
+                a_tokens.push(SEP);
+            }
+            let b_tokens = if label == 1 {
+                // Paraphrase: the same words, shuffled.
+                let mut ids = ids_a.clone();
+                rng.shuffle(&mut ids);
+                let mut t = Vec::new();
+                for &w in &ids {
+                    t.extend_from_slice(&lang.words[w]);
+                    t.push(SEP);
+                }
+                t
+            } else {
+                let (t, _) = lang.generate_words(4, rng);
+                t
+            };
+            let mut tokens = a_tokens;
+            tokens.push(SEP); // segment boundary = double separator
+            tokens.extend(b_tokens);
+            Example { tokens: cap(tokens, max_len), label }
+        })
+        .collect()
+}
+
+pub fn gen_cola(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<Example> {
+    (0..n)
+        .map(|_| {
+            let label = rng.below(2);
+            let tokens = if label == 1 {
+                lang.generate_words(6, rng).0
+            } else {
+                // Unacceptable: uniform token soup with misplaced separators.
+                let len = 12 + rng.below(12);
+                (0..len)
+                    .map(|_| {
+                        if rng.uniform() < 0.08 {
+                            SEP
+                        } else {
+                            1 + rng.below(lang.vocab_size - 1) as u32
+                        }
+                    })
+                    .collect()
+            };
+            Example { tokens: cap(tokens, max_len), label }
+        })
+        .collect()
+}
+
+/// Contradiction marker word id (a reserved mid-frequency lexicon word).
+const NEG_MARKER: usize = 2 * N_MARKERS;
+
+pub fn gen_mnli(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<Example> {
+    (0..n)
+        .map(|_| {
+            let label = rng.below(3);
+            let (_, premise_ids) = lang.generate_words(5, rng);
+            let mut tokens = Vec::new();
+            for &w in &premise_ids {
+                tokens.extend_from_slice(&lang.words[w]);
+                tokens.push(SEP);
+            }
+            tokens.push(SEP);
+            let hyp_ids: Vec<usize> = match label {
+                0 => {
+                    // Entailment: subset of the premise.
+                    let k = 2 + rng.below(2);
+                    rng.choose_k(premise_ids.len(), k.min(premise_ids.len()))
+                        .into_iter()
+                        .map(|i| premise_ids[i])
+                        .collect()
+                }
+                1 => {
+                    // Contradiction: premise overlap + negation marker.
+                    let mut ids =
+                        vec![premise_ids[rng.below(premise_ids.len())], NEG_MARKER];
+                    ids.push(premise_ids[rng.below(premise_ids.len())]);
+                    ids
+                }
+                _ => {
+                    // Neutral: fresh words (likely disjoint).
+                    lang.generate_words(3, rng).1
+                }
+            };
+            for &w in &hyp_ids {
+                tokens.extend_from_slice(&lang.words[w]);
+                tokens.push(SEP);
+            }
+            Example { tokens: cap(tokens, max_len), label }
+        })
+        .collect()
+}
+
+pub fn gen_nlu(task: &str, lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<Example> {
+    match task {
+        "sst2" => gen_sst2(lang, n, max_len, rng),
+        "mrpc" => gen_mrpc(lang, n, max_len, rng),
+        "cola" => gen_cola(lang, n, max_len, rng),
+        "mnli" => gen_mnli(lang, n, max_len, rng),
+        other => panic!("unknown NLU task {other}"),
+    }
+}
+
+// ---------------------------------------------------------------- zero-shot
+
+pub fn gen_lambada(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<LambadaExample> {
+    (0..n)
+        .map(|_| {
+            loop {
+                let (tokens, ids) = lang.generate_words(8, rng);
+                let last_word = &lang.words[*ids.last().unwrap()];
+                if last_word.len() >= 2 {
+                    // Cut right before the final token of the last word
+                    // (tokens end with [..., last_word..., SEP]).
+                    let cut = tokens.len() - 2;
+                    let target = tokens[cut];
+                    let context = cap(tokens[..cut].to_vec(), max_len);
+                    return LambadaExample { context, target };
+                }
+            }
+        })
+        .collect()
+}
+
+pub fn gen_piqa(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<ChoiceExample> {
+    (0..n)
+        .map(|_| {
+            let (prefix, ids) = lang.generate_words(5, rng);
+            let label = rng.below(2);
+            // True continuation: a plausible successor word; corrupted:
+            // random tokens of the same length.
+            let succ = lang.next_word_public(*ids.last().unwrap(), rng);
+            let good: Vec<u32> = lang.words[succ].clone();
+            let bad: Vec<u32> = (0..good.len())
+                .map(|_| 1 + rng.below(lang.vocab_size - 1) as u32)
+                .collect();
+            let choices = if label == 0 { [good, bad] } else { [bad, good] };
+            ChoiceExample { prefix: cap(prefix, max_len), choices, label }
+        })
+        .collect()
+}
+
+pub fn gen_winogrande(lang: &Language, n: usize, max_len: usize, rng: &mut Rng) -> Vec<ChoiceExample> {
+    (0..n)
+        .map(|_| {
+            // Longer context; the consistent choice repeats an earlier word
+            // (coreference-ish), the inconsistent one is fresh.
+            let (prefix, ids) = lang.generate_words(10, rng);
+            let label = rng.below(2);
+            let referent = ids[rng.below(ids.len())];
+            let mut good = lang.words[referent].clone();
+            good.push(SEP);
+            let fresh = lang.next_word_public(referent, rng);
+            let mut bad = lang.words[(fresh + 97) % lang.words.len()].clone();
+            bad.push(SEP);
+            let choices = if label == 0 { [good, bad] } else { [bad, good] };
+            ChoiceExample { prefix: cap(prefix, max_len), choices, label }
+        })
+        .collect()
+}
+
+impl Language {
+    /// Public successor sampler for task generators.
+    pub fn next_word_public(&self, prev: usize, rng: &mut Rng) -> usize {
+        let choices = &self.trans[prev];
+        let ws: Vec<f32> = choices.iter().map(|&(_, w)| w).collect();
+        choices[rng.categorical(&ws)].0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lang() -> Language {
+        Language::new(64, 100, 42)
+    }
+
+    #[test]
+    fn all_nlu_tasks_generate() {
+        let l = lang();
+        let mut rng = Rng::new(1);
+        for task in NLU_TASKS {
+            let ex = gen_nlu(task, &l, 50, 96, &mut rng);
+            assert_eq!(ex.len(), 50);
+            for e in &ex {
+                assert!(e.label < n_classes(task));
+                assert!(!e.tokens.is_empty() && e.tokens.len() <= 96);
+                assert!(e.tokens.iter().all(|&t| (t as usize) < 64));
+            }
+            // Both/all classes present.
+            let classes: std::collections::HashSet<usize> =
+                ex.iter().map(|e| e.label).collect();
+            assert_eq!(classes.len(), n_classes(task), "task {task}");
+        }
+    }
+
+    #[test]
+    fn sst2_markers_separate_classes() {
+        let l = lang();
+        let mut rng = Rng::new(2);
+        let ex = gen_sst2(&l, 200, 96, &mut rng);
+        // Count positive-marker tokens per class: label-1 examples should
+        // contain far more of them.
+        let marker_tokens: std::collections::HashSet<u32> = (0..N_MARKERS)
+            .flat_map(|w| l.words[w].clone())
+            .collect();
+        let score = |e: &Example| {
+            e.tokens.iter().filter(|t| marker_tokens.contains(t)).count() as f64
+        };
+        let pos: f64 = ex.iter().filter(|e| e.label == 1).map(score).sum();
+        let neg: f64 = ex.iter().filter(|e| e.label == 0).map(score).sum();
+        assert!(pos > 1.5 * neg, "pos={pos} neg={neg}");
+    }
+
+    #[test]
+    fn lambada_targets_are_predictable_in_principle() {
+        let l = lang();
+        let mut rng = Rng::new(3);
+        let ex = gen_lambada(&l, 100, 120, &mut rng);
+        for e in &ex {
+            assert!(!e.context.is_empty());
+            assert!((e.target as usize) < 64);
+            assert_ne!(e.target, SEP);
+        }
+    }
+
+    #[test]
+    fn choice_tasks_balanced() {
+        let l = lang();
+        let mut rng = Rng::new(4);
+        let piqa = gen_piqa(&l, 200, 96, &mut rng);
+        let ones = piqa.iter().filter(|e| e.label == 1).count();
+        assert!(ones > 60 && ones < 140, "ones={ones}");
+        let wino = gen_winogrande(&l, 100, 120, &mut rng);
+        for e in &wino {
+            assert_ne!(e.choices[0], e.choices[1]);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let l = lang();
+        let a = gen_mnli(&l, 20, 96, &mut Rng::new(9));
+        let b = gen_mnli(&l, 20, 96, &mut Rng::new(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Analytic FLOPs accounting (paper Table 12, App. A.8).
+//!
+//! Counts multiply-accumulates ×2 for a single token through one MoE layer
+//! under each storage scheme. Mirrors the paper's observations: merge
+//! methods keep full FLOPs (they only reduce the expert *count*, the routed
+//! computation per token is unchanged), SP/MLP-Fusion cut FLOPs via the
+//! intermediate dimension, SVD replaces one matmul with two thin ones, and
+//! ResMoE(UP) restores to dense so FLOPs match the full model while
+//! ResMoE(SVD) adds the center's dense cost to the thin residual factors.
+
+use crate::compress::{CompressedLayer, ResidualRepr};
+use crate::moe::{ExpertArch, MoeLayer};
+
+/// FLOPs for one token through one dense expert.
+pub fn dense_expert_flops(arch: ExpertArch, p: usize, pi: usize) -> usize {
+    let gates = if arch == ExpertArch::SwiGlu { 2 } else { 1 };
+    // gates × (W1-like matmuls) + W2.
+    2 * pi * p * gates + 2 * p * pi
+}
+
+/// FLOPs for one token through an original MoE layer (`top_k` experts +
+/// optional shared expert).
+pub fn layer_flops(layer: &MoeLayer, top_k: usize) -> usize {
+    let e = &layer.experts[0];
+    let per = dense_expert_flops(e.arch, e.d_model(), e.d_inner());
+    let shared = layer.shared_expert.as_ref().map(|_| per).unwrap_or(0);
+    let router = 2 * layer.n_experts() * e.d_model();
+    top_k * per + shared + router
+}
+
+/// FLOPs for one token through a compressed layer at inference, assuming
+/// the execution strategy native to each representation:
+/// * Dense (incl. restored UP / merge centers) → dense expert cost over the
+///   *effective* intermediate dimension (`accounted_params / cols` rows).
+/// * SparseCsr executed as restored-dense (the paper: UP "does not reduce
+///   FLOPs" when stored restored) — unless `sparse_exec` is set, in which
+///   case nnz MACs are counted (the paper's Table-12 UP row).
+/// * LowRank → two thin matmuls per factor application **plus** the shared
+///   center's dense cost when a base is present (ResMoE(SVD) row).
+pub fn compressed_layer_flops(
+    cl: &CompressedLayer,
+    original: &MoeLayer,
+    top_k: usize,
+    sparse_exec: bool,
+) -> usize {
+    let e0 = &original.experts[0];
+    let (p, pi) = (e0.d_model(), e0.d_inner());
+    let dense = dense_expert_flops(cl.arch, p, pi);
+    let per_expert = |idx: usize| -> usize {
+        let ce = &cl.experts[idx];
+        match &ce.residual {
+            ResidualRepr::Dense(m) => {
+                // Effective rows actually stored (SP / MLP fusion shrink pI).
+                let eff_rows = (ce.accounted_params / m.cols.max(1)).min(pi);
+                let scale = eff_rows as f64 / pi as f64;
+                let base = if cl.base.is_some() { dense } else { 0 };
+                base + (dense as f64 * scale) as usize
+            }
+            ResidualRepr::SparseCsr(csr) => {
+                if sparse_exec {
+                    let base = if cl.base.is_some() { dense } else { 0 };
+                    base + 2 * csr.nnz()
+                } else {
+                    // Restored to dense before the matmul (App. A.8: same
+                    // runtime/FLOPs as the full model).
+                    dense
+                }
+            }
+            ResidualRepr::LowRank(svd) => {
+                let k = svd.s.len();
+                // x → Vᵀx (k·cols) → U(Σ·) (rows·k), applied on the design
+                // matrix's factored form.
+                let factors = 2 * k * svd.vt.cols + 2 * svd.u.rows * k;
+                let base = if cl.base.is_some() { dense } else { 0 };
+                base + factors
+            }
+        }
+    };
+    // Average over router slots (slots may share stored experts).
+    let avg: f64 = (0..cl.expert_map.len())
+        .map(|s| per_expert(cl.expert_map[s]) as f64)
+        .sum::<f64>()
+        / cl.expert_map.len() as f64;
+    let shared = original.shared_expert.as_ref().map(|_| dense).unwrap_or(0);
+    let router = 2 * original.n_experts() * p;
+    (top_k as f64 * avg) as usize + shared + router
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::{prune::UnstructuredPruning, svd_compress::SvdCompression, ResMoE};
+    use crate::util::Rng;
+
+    fn layer(seed: u64) -> MoeLayer {
+        let mut rng = Rng::new(seed);
+        MoeLayer::random(ExpertArch::Relu, 16, 64, 8, 2, false, false, &mut rng)
+    }
+
+    #[test]
+    fn dense_formula() {
+        assert_eq!(dense_expert_flops(ExpertArch::Relu, 4, 8), 2 * 8 * 4 + 2 * 4 * 8);
+        assert_eq!(
+            dense_expert_flops(ExpertArch::SwiGlu, 4, 8),
+            2 * (2 * 8 * 4) + 2 * 4 * 8
+        );
+    }
+
+    #[test]
+    fn paper_table12_ordering() {
+        // Full == merge == ResMoE(UP, restored) > ResMoE(SVD) > SVD > SP.
+        let l = layer(1);
+        let full = layer_flops(&l, 2);
+        let meo = compressed_layer_flops(&quick_compress(&crate::baselines::Meo, &l, 0.25, 1), &l, 2, false);
+        let up = compressed_layer_flops(
+            &quick_compress(&UnstructuredPruning { concat: true }, &l, 0.25, 1),
+            &l,
+            2,
+            false,
+        );
+        let resmoe_up =
+            compressed_layer_flops(&quick_compress(&ResMoE::up(), &l, 0.25, 1), &l, 2, false);
+        let resmoe_svd =
+            compressed_layer_flops(&quick_compress(&ResMoE::svd(), &l, 0.25, 1), &l, 2, false);
+        let svd = compressed_layer_flops(
+            &quick_compress(&SvdCompression { concat: true }, &l, 0.25, 1),
+            &l,
+            2,
+            false,
+        );
+        let sp = compressed_layer_flops(
+            &quick_compress(&crate::compress::prune::StructuredPruning { concat: true }, &l, 0.25, 1),
+            &l,
+            2,
+            false,
+        );
+        assert_eq!(meo, full);
+        assert_eq!(up, full);
+        assert_eq!(resmoe_up, full);
+        assert!(resmoe_svd > svd, "resmoe_svd={resmoe_svd} svd={svd}");
+        assert!(resmoe_svd < full + full, "bounded by 2x full");
+        assert!(svd < full);
+        assert!(sp < full);
+    }
+
+    #[test]
+    fn sparse_exec_reduces_up_flops() {
+        let l = layer(2);
+        let cl = quick_compress(&UnstructuredPruning { concat: true }, &l, 0.25, 2);
+        let restored = compressed_layer_flops(&cl, &l, 2, false);
+        let sparse = compressed_layer_flops(&cl, &l, 2, true);
+        assert!(sparse < restored / 2, "sparse={sparse} restored={restored}");
+    }
+}

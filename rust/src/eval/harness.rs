@@ -1,0 +1,196 @@
+//! Evaluation harness: the method registry shared by every table bench and
+//! the CLI, plus asset loading (pretrained checkpoints from `artifacts/`,
+//! with a deterministic random-model fallback so tests and benches run
+//! before `make artifacts`).
+
+use crate::baselines::{ExpertPruning, GitReBasinMerge, Meo, MlpFusion, MSmoe, OtFusion};
+use crate::compress::{
+    prune::{StructuredPruning, UnstructuredPruning},
+    svd_compress::SvdCompression,
+    wanda::Wanda,
+    CenterKind, Compressor, ResMoE, ResidualKind,
+};
+use crate::data::{tasks as dgen, Corpus, Language};
+use crate::moe::{model_io, Model, ModelConfig};
+use crate::util::Rng;
+use std::path::{Path, PathBuf};
+
+/// All method names in the order the paper's tables list them.
+pub const ALL_METHODS: [&str; 14] = [
+    "up-concat",
+    "up-sep",
+    "wanda",
+    "sp-concat",
+    "sp-sep",
+    "svd-concat",
+    "svd-sep",
+    "m-smoe",
+    "git-re-basin",
+    "meo",
+    "expert-pruning",
+    "mlp-fusion",
+    "resmoe-up",
+    "resmoe-svd",
+];
+
+/// Instantiate a compressor by its registry name.
+pub fn method_by_name(name: &str) -> Option<Box<dyn Compressor>> {
+    Some(match name {
+        "up-concat" => Box::new(UnstructuredPruning { concat: true }),
+        "up-sep" => Box::new(UnstructuredPruning { concat: false }),
+        "sp-concat" => Box::new(StructuredPruning { concat: true }),
+        "sp-sep" => Box::new(StructuredPruning { concat: false }),
+        "svd-concat" => Box::new(SvdCompression { concat: true }),
+        "svd-sep" => Box::new(SvdCompression { concat: false }),
+        "wanda" => Box::new(Wanda),
+        "m-smoe" => Box::new(MSmoe),
+        "git-re-basin" => Box::new(GitReBasinMerge),
+        "meo" => Box::new(Meo),
+        "expert-pruning" => Box::new(ExpertPruning),
+        "mlp-fusion" => Box::new(MlpFusion),
+        "resmoe-up" => Box::new(ResMoE::up()),
+        "resmoe-svd" => Box::new(ResMoE::svd()),
+        "resmoe-avg+up" => Box::new(ResMoE::with_center(CenterKind::Average, ResidualKind::PruneConcat)),
+        "resmoe-git+up" => {
+            Box::new(ResMoE::with_center(CenterKind::GitReBasin, ResidualKind::PruneConcat))
+        }
+        "ot-fusion" => Box::new(OtFusion),
+        _ => return None,
+    })
+}
+
+/// Everything needed to evaluate one model family.
+pub struct Assets {
+    pub model: Model,
+    pub language: Language,
+    /// Held-out token stream for PPL.
+    pub valid: Vec<u32>,
+    /// Whether the model came from a pretrained checkpoint (vs random
+    /// fallback).
+    pub pretrained: bool,
+}
+
+/// Artifacts directory (env `RESMOE_ARTIFACTS` overrides `artifacts/`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("RESMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Shared data seed — must match `resmoe datagen` and pretrain.py.
+pub const DATA_SEED: u64 = 20250703;
+
+impl Assets {
+    /// Load the pretrained checkpoint for `cfg` if present, else fall back
+    /// to a deterministic random model (tests, pre-artifact runs).
+    pub fn load(cfg: &ModelConfig) -> Assets {
+        let path = artifacts_dir().join(format!("{}.rmw", cfg.name));
+        Self::load_from(cfg, &path)
+    }
+
+    pub fn load_from(cfg: &ModelConfig, path: &Path) -> Assets {
+        let (model, pretrained) = match model_io::load_model(path) {
+            Ok(m) => (m, true),
+            Err(_) => {
+                let mut rng = Rng::new(0xBA5E ^ cfg.n_experts as u64);
+                (Model::random(cfg, &mut rng), false)
+            }
+        };
+        let corpus = Corpus::generate(cfg.vocab_size, 2_000, 4_096, DATA_SEED);
+        Assets { model, language: corpus.language, valid: corpus.valid, pretrained }
+    }
+
+    /// Calibration tokens (C4-analog) for data-dependent methods.
+    pub fn calibration_tokens(&self, len: usize) -> Vec<u32> {
+        let mut rng = Rng::new(DATA_SEED ^ 0xCA11B);
+        self.language.generate(len.min(self.model.cfg.max_seq), &mut rng)
+    }
+
+    /// Zero-shot datasets (deterministic).
+    pub fn lambada(&self, n: usize) -> Vec<crate::data::LambadaExample> {
+        let mut rng = Rng::new(DATA_SEED ^ 1);
+        dgen::gen_lambada(&self.language, n, self.model.cfg.max_seq - 4, &mut rng)
+    }
+
+    pub fn piqa(&self, n: usize) -> Vec<crate::data::ChoiceExample> {
+        let mut rng = Rng::new(DATA_SEED ^ 2);
+        dgen::gen_piqa(&self.language, n, self.model.cfg.max_seq - 8, &mut rng)
+    }
+
+    pub fn winogrande(&self, n: usize) -> Vec<crate::data::ChoiceExample> {
+        let mut rng = Rng::new(DATA_SEED ^ 3);
+        dgen::gen_winogrande(&self.language, n, self.model.cfg.max_seq - 8, &mut rng)
+    }
+
+    /// NLU test split: prefers the exported artifacts (identical to what the
+    /// python heads were trained against), falls back to regeneration.
+    pub fn nlu_test(&self, task: &str, n: usize) -> Vec<crate::data::Example> {
+        let path = artifacts_dir().join("data").join(format!("{task}.json"));
+        if let Ok(examples) = crate::data::export::load_examples(&path, "test") {
+            return examples.into_iter().take(n).collect();
+        }
+        let mut rng = Rng::new(DATA_SEED ^ 0x7A5C5);
+        // Mirror export ordering: train (2000) then test (400) per task, in
+        // NLU_TASKS order.
+        let mut out = Vec::new();
+        for t in dgen::NLU_TASKS {
+            let _train = dgen::gen_nlu(t, &self.language, 2000, 96, &mut rng);
+            let test = dgen::gen_nlu(t, &self.language, 400, 96, &mut rng);
+            if t == task {
+                out = test;
+            }
+        }
+        out.into_iter().take(n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_instantiates_everything() {
+        for name in ALL_METHODS {
+            let m = method_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(m.name().is_empty(), false);
+        }
+        assert!(method_by_name("resmoe-avg+up").is_some());
+        assert!(method_by_name("ot-fusion").is_some());
+        assert!(method_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn assets_fallback_is_deterministic() {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let a = Assets::load_from(&cfg, Path::new("/nonexistent/x.rmw"));
+        let b = Assets::load_from(&cfg, Path::new("/nonexistent/x.rmw"));
+        assert!(!a.pretrained);
+        let t: Vec<u32> = vec![1, 2, 3, 4];
+        assert!(a.model.forward(&t).sq_dist(&b.model.forward(&t)) < 1e-12);
+        assert_eq!(a.valid, b.valid);
+    }
+
+    #[test]
+    fn zero_shot_datasets_fit_context() {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let a = Assets::load_from(&cfg, Path::new("/nonexistent/x.rmw"));
+        for e in a.lambada(20) {
+            assert!(e.context.len() <= 48);
+        }
+        for e in a.piqa(20) {
+            assert!(e.prefix.len() + e.choices[0].len().max(e.choices[1].len()) <= 56);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Memory accounting (paper Table 10 and App. A.7).
+//!
+//! Reports the bytes one compressed MoE layer occupies under each storage
+//! scheme, including the App.-A.7 pathologies: COO with int64 indices makes
+//! a 75 %-pruned layer LARGER than dense; CSR with int16 indices realizes
+//! the saving.
+
+use crate::compress::{CompressedLayer, ResidualRepr};
+use crate::moe::MoeLayer;
+use crate::tensor::sparse::{Coo, IndexWidth};
+
+/// Bytes of the original dense layer's experts.
+pub fn dense_layer_bytes(layer: &MoeLayer) -> usize {
+    layer.expert_params() * 4
+}
+
+/// Storage-scheme variants for sparse residuals/matrices (App. A.7 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseScheme {
+    /// PyTorch-default COO with int64 indices.
+    CooI64,
+    /// COO with int16 indices.
+    CooI16,
+    /// CSR with int16 column indices (our default).
+    CsrI16,
+}
+
+/// Bytes of a compressed layer if its sparse parts used `scheme`.
+pub fn layer_bytes_under_scheme(cl: &CompressedLayer, scheme: SparseScheme) -> usize {
+    let base = cl.base.as_ref().map(|b| b.n_params() * 4).unwrap_or(0);
+    base + cl
+        .experts
+        .iter()
+        .map(|e| {
+            let repr = match &e.residual {
+                ResidualRepr::SparseCsr(csr) => match scheme {
+                    SparseScheme::CsrI16 => {
+                        let mut c = csr.clone();
+                        c.index_width = IndexWidth::U16;
+                        c.memory_bytes()
+                    }
+                    SparseScheme::CooI64 => {
+                        let coo = Coo::from_dense(&csr.to_dense(), IndexWidth::U64);
+                        coo.memory_bytes()
+                    }
+                    SparseScheme::CooI16 => {
+                        let coo = Coo::from_dense(&csr.to_dense(), IndexWidth::U16);
+                        coo.memory_bytes()
+                    }
+                },
+                ResidualRepr::Dense(_) => e.accounted_params * 4,
+                ResidualRepr::LowRank(s) => s.n_params() * 4,
+            };
+            repr + e.b2.len() * 4
+        })
+        .sum::<usize>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::{prune::UnstructuredPruning, ResMoE};
+    use crate::moe::ExpertArch;
+    use crate::util::Rng;
+
+    fn layer(seed: u64) -> MoeLayer {
+        let mut rng = Rng::new(seed);
+        MoeLayer::random(ExpertArch::Relu, 16, 64, 8, 2, false, false, &mut rng)
+    }
+
+    #[test]
+    fn appendix_a7_coo64_blowup() {
+        // At 25 % density, COO+int64 exceeds the dense layer; CSR+int16
+        // stays well under half.
+        let l = layer(1);
+        let cl = quick_compress(&UnstructuredPruning { concat: true }, &l, 0.25, 1);
+        let dense = dense_layer_bytes(&l);
+        let coo64 = layer_bytes_under_scheme(&cl, SparseScheme::CooI64);
+        let csr16 = layer_bytes_under_scheme(&cl, SparseScheme::CsrI16);
+        let coo16 = layer_bytes_under_scheme(&cl, SparseScheme::CooI16);
+        assert!(coo64 > dense, "coo64={coo64} dense={dense}");
+        assert!(csr16 < dense / 2, "csr16={csr16} dense={dense}");
+        assert!(coo16 < coo64 && csr16 < coo16);
+    }
+
+    #[test]
+    fn resmoe_center_overhead_diminishes_with_experts() {
+        // Table 10's narrative: the barycenter overhead amortizes as the
+        // expert count grows (8 experts vs 64).
+        let overhead_fraction = |n_experts: usize, seed: u64| -> f64 {
+            let mut rng = Rng::new(seed);
+            let l = MoeLayer::random(ExpertArch::Relu, 8, 16, n_experts, 2, true, false, &mut rng);
+            let cl = quick_compress(&ResMoE::up(), &l, 0.25, seed);
+            let center = cl.base.as_ref().unwrap().n_params() * 4;
+            center as f64 / cl.memory_bytes() as f64
+        };
+        let few = overhead_fraction(4, 2);
+        let many = overhead_fraction(32, 3);
+        assert!(many < few, "few={few} many={many}");
+    }
+
+    #[test]
+    fn resmoe_up_between_svd_and_full() {
+        // Table 10 shape: ResMoE(UP) costs more than plain SVD-style dense
+        // reduction (center + sparse indices) but far less than full.
+        let l = layer(4);
+        let full = dense_layer_bytes(&l);
+        let resmoe_up = quick_compress(&ResMoE::up(), &l, 0.25, 4).memory_bytes();
+        let resmoe_svd = quick_compress(&ResMoE::svd(), &l, 0.25, 4).memory_bytes();
+        assert!(resmoe_up < full, "resmoe_up={resmoe_up} full={full}");
+        assert!(resmoe_svd < resmoe_up, "svd variant stores fewer bytes");
+    }
+}

@@ -1,0 +1,14 @@
+//! Evaluation: LM metrics (PPL, LAMBADA/PIQA/WinoGrande analogs),
+//! classification accuracy, FLOPs and memory accounting, and the method
+//! registry/harness the table benches are built on.
+
+pub mod flops;
+pub mod harness;
+pub mod memory;
+pub mod perplexity;
+pub mod tasks;
+
+pub mod tablegen;
+pub use harness::{method_by_name, Assets, ALL_METHODS, DATA_SEED};
+pub use perplexity::{choice_accuracy, continuation_score, lambada_accuracy, perplexity};
+pub use tasks::{classification_accuracy, task_accuracy};

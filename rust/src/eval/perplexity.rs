@@ -1,0 +1,161 @@
+//! Language-model metrics: perplexity over a token stream (WikiText analog)
+//! and the zero-shot LM-scored tasks (LAMBADA / PIQA / WinoGrande analogs).
+
+use crate::data::{ChoiceExample, Corpus, LambadaExample};
+use crate::moe::Model;
+use crate::util::stats::logsumexp;
+
+/// Log-probability of each next token in a window; returns (sum, count).
+fn window_log_prob(model: &Model, window: &[u32]) -> (f64, usize) {
+    let logits = model.forward(window);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..window.len() - 1 {
+        let row = logits.row(i);
+        let lse = logsumexp(row);
+        total += (row[window[i + 1] as usize] - lse) as f64;
+        count += 1;
+    }
+    (total, count)
+}
+
+/// Perplexity over a stream, evaluated in non-overlapping `window` chunks.
+pub fn perplexity(model: &Model, stream: &[u32], window: usize) -> f64 {
+    let window = window.min(model.cfg.max_seq);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for w in Corpus::windows(stream, window) {
+        let (t, c) = window_log_prob(model, w);
+        total += t;
+        count += c;
+    }
+    (-(total / count.max(1) as f64)).exp()
+}
+
+/// LAMBADA-analog accuracy: argmax next-token prediction of the final word
+/// token.
+pub fn lambada_accuracy(model: &Model, examples: &[LambadaExample]) -> f64 {
+    let mut correct = 0usize;
+    for e in examples {
+        let logits = model.forward(&e.context);
+        let last = logits.row(logits.rows - 1);
+        let pred = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u32)
+            .unwrap();
+        if pred == e.target {
+            correct += 1;
+        }
+    }
+    correct as f64 / examples.len().max(1) as f64
+}
+
+/// Sum log-prob of `continuation` given `prefix` (length-normalized), the
+/// standard multiple-choice LM scoring rule.
+pub fn continuation_score(model: &Model, prefix: &[u32], continuation: &[u32]) -> f64 {
+    let mut seq = prefix.to_vec();
+    seq.extend_from_slice(continuation);
+    let max = model.cfg.max_seq;
+    if seq.len() > max {
+        seq.drain(..seq.len() - max);
+    }
+    let start = seq.len() - continuation.len();
+    let logits = model.forward(&seq);
+    let mut total = 0.0f64;
+    for i in start..seq.len() {
+        let row = logits.row(i - 1);
+        total += (row[seq[i] as usize] - logsumexp(row)) as f64;
+    }
+    total / continuation.len() as f64
+}
+
+/// Accuracy on 2-choice LM-scored tasks (PIQA / WinoGrande analogs).
+pub fn choice_accuracy(model: &Model, examples: &[ChoiceExample]) -> f64 {
+    let mut correct = 0usize;
+    for e in examples {
+        let s0 = continuation_score(model, &e.prefix, &e.choices[0]);
+        let s1 = continuation_score(model, &e.prefix, &e.choices[1]);
+        let pred = if s0 >= s1 { 0 } else { 1 };
+        if pred == e.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / examples.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ModelConfig;
+    use crate::util::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        Model::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab_size() {
+        // An untrained model is ~uniform → PPL ≈ vocab size.
+        let m = tiny_model(1);
+        let c = Corpus::generate(32, 512, 0, 2);
+        let ppl = perplexity(&m, &c.train, 32);
+        assert!(ppl > 16.0 && ppl < 64.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn oracle_bigram_model_beats_random() {
+        // A model whose lm_head copies the embedding of the next-likely
+        // token would do better; here we just check PPL moves with logits
+        // sharpness: scaling lm_head changes PPL.
+        let m = tiny_model(3);
+        let c = Corpus::generate(32, 256, 0, 4);
+        let ppl_base = perplexity(&m, &c.train, 32);
+        let mut sharper = m.clone();
+        sharper.lm_head = sharper.lm_head.scale(3.0);
+        let ppl_sharp = perplexity(&sharper, &c.train, 32);
+        assert!((ppl_base - ppl_sharp).abs() > 1e-6);
+    }
+
+    #[test]
+    fn lambada_random_near_chance() {
+        let m = tiny_model(5);
+        let lang = crate::data::Language::new(32, 50, 6);
+        let mut rng = Rng::new(7);
+        let ex = crate::data::tasks::gen_lambada(&lang, 40, 30, &mut rng);
+        let acc = lambada_accuracy(&m, &ex);
+        assert!(acc < 0.5, "untrained acc={acc}");
+    }
+
+    #[test]
+    fn choice_accuracy_bounds() {
+        let m = tiny_model(8);
+        let lang = crate::data::Language::new(32, 50, 9);
+        let mut rng = Rng::new(10);
+        let ex = crate::data::tasks::gen_piqa(&lang, 30, 24, &mut rng);
+        let acc = choice_accuracy(&m, &ex);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn continuation_score_prefers_repeated_pattern() {
+        // Make the model's embedding/lm_head aligned so that repeating the
+        // same token is high-probability: score(same) > score(random) on
+        // average for a model with tied-ish structure. Here we only check
+        // the function is finite and sensitive to input.
+        let m = tiny_model(11);
+        let s1 = continuation_score(&m, &[1, 2, 3], &[4, 5]);
+        let s2 = continuation_score(&m, &[1, 2, 3], &[9, 9]);
+        assert!(s1.is_finite() && s2.is_finite());
+        assert_ne!(s1, s2);
+    }
+}

@@ -1,0 +1,81 @@
+//! Classification-task evaluation (the paper's NLU tables): apply a trained
+//! task head to the final hidden state and measure accuracy.
+
+use crate::data::Example;
+use crate::moe::Model;
+use crate::tensor::Matrix;
+
+/// Accuracy of `head` (n_classes × d) on classification examples.
+pub fn classification_accuracy(model: &Model, head: &Matrix, examples: &[Example]) -> f64 {
+    let mut correct = 0usize;
+    for e in examples {
+        let logits = model.classify(&e.tokens, head);
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == e.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / examples.len().max(1) as f64
+}
+
+/// Accuracy using the model's stored head for `task`; `None` if missing.
+pub fn task_accuracy(model: &Model, task: &str, examples: &[Example]) -> Option<f64> {
+    let head = model.head(task)?.clone();
+    Some(classification_accuracy(model, &head, examples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ModelConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn random_head_near_chance_perfect_head_wins() {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 24;
+        let mut rng = Rng::new(1);
+        let m = Model::random(&cfg, &mut rng);
+        // Labels decided by a fixed head => that head scores 100 %.
+        let head = Matrix::randn(2, 16, 1.0, &mut rng);
+        let examples: Vec<Example> = (0..40)
+            .map(|i| {
+                let tokens: Vec<u32> = (0..10).map(|t| ((t * (i + 3)) % 32) as u32).collect();
+                let logits = m.classify(&tokens, &head);
+                let label = if logits[1] > logits[0] { 1 } else { 0 };
+                Example { tokens, label }
+            })
+            .collect();
+        assert_eq!(classification_accuracy(&m, &head, &examples), 1.0);
+        // An unrelated random head is imperfect.
+        let other = Matrix::randn(2, 16, 1.0, &mut rng);
+        let acc = classification_accuracy(&m, &other, &examples);
+        assert!(acc < 1.0);
+    }
+
+    #[test]
+    fn task_accuracy_uses_stored_head() {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 24;
+        let mut rng = Rng::new(2);
+        let mut m = Model::random(&cfg, &mut rng);
+        assert!(task_accuracy(&m, "sst2", &[]).is_none());
+        m.heads.push(("sst2".into(), Matrix::randn(2, 16, 0.1, &mut rng)));
+        assert!(task_accuracy(&m, "sst2", &[]).is_some());
+    }
+}

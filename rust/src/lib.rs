@@ -1,0 +1,34 @@
+//! # resmoe
+//!
+//! Production-oriented reproduction of **ResMoE: Space-efficient Compression
+//! of Mixture-of-Experts LLMs via Residual Restoration** (Ai, Wei, Chen et
+//! al., KDD 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the compression toolkit (Wasserstein-barycenter
+//!   expert extraction, residual compressors, every baseline from the
+//!   paper's evaluation), the MoE model substrate it operates on, the eval
+//!   harness that regenerates each paper table/figure, and a serving
+//!   coordinator whose restored-expert cache turns the paper's Algorithm 2
+//!   into a first-class runtime feature.
+//! * **L2/L1 (python/, build-time only)** — the JAX MoE block and the Pallas
+//!   barycenter-MoE kernel, AOT-lowered to HLO text consumed by
+//!   [`runtime`] through the PJRT CPU client. Python never runs on the
+//!   request path.
+//!
+//! Entry points: [`compress`] for the algorithm, [`coordinator`] for
+//! serving, `rust/benches/*` for the paper's tables, and
+//! `examples/end_to_end.rs` for the full pipeline.
+
+pub mod baselines;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod moe;
+pub mod ot;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Matrix;
+pub use util::Rng;

@@ -1,0 +1,196 @@
+//! `resmoe` CLI — the L3 launcher.
+//!
+//! Subcommands:
+//! * `datagen`  — export the synthetic corpus + task datasets (consumed by
+//!   the build-time JAX pretrainer; rust is the data source of truth).
+//! * `compress` — compress a checkpoint with a named method and report.
+//! * `eval`     — PPL + zero-shot metrics for a (compressed) model.
+//! * `serve`    — run the serving coordinator demo on a checkpoint.
+
+use anyhow::{anyhow, Result};
+use resmoe::compress::{compress_model, Compressor};
+use resmoe::coordinator::ServerConfig;
+use resmoe::data::export::export_datasets;
+use resmoe::eval::{self, method_by_name, Assets};
+use resmoe::moe::ModelConfig;
+use resmoe::util::cli::Args;
+use resmoe::util::format_bytes;
+use resmoe::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "fast", "pretrained-only"]);
+    let result = match args.subcommand.as_deref() {
+        Some("datagen") => cmd_datagen(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("table") => cmd_table(&args),
+        Some(other) => Err(anyhow!("unknown subcommand '{other}'")),
+        None => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "resmoe — ResMoE (KDD'25) reproduction\n\n\
+         USAGE: resmoe <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+           datagen  --out artifacts/data [--seed N]\n\
+           compress --model mixtral-mini --method resmoe-up --rate 0.25 [--layers N]\n\
+           eval     --model mixtral-mini [--method resmoe-up --rate 0.25]\n\
+           serve    --model mixtral-mini [--requests N --batch-max N]\n\
+           table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
+         (tables also regenerate via `cargo bench --bench table1_approx_error` etc.)"
+    );
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "artifacts/data"));
+    let seed = args.get_u64("seed", eval::DATA_SEED);
+    export_datasets(&out, 256, 96, seed)?;
+    println!("datagen: wrote corpus + NLU datasets to {}", out.display());
+    Ok(())
+}
+
+fn parse_model(args: &Args) -> Result<ModelConfig> {
+    let name = args.get_or("model", "mixtral-mini");
+    ModelConfig::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+}
+
+fn method_of(args: &Args) -> Result<Box<dyn Compressor>> {
+    let name = args.get_or("method", "resmoe-up");
+    method_by_name(name).ok_or_else(|| anyhow!("unknown method '{name}'"))
+}
+
+fn top_layers_default(cfg: &ModelConfig) -> usize {
+    // Paper protocol: top ¾ of Mixtral's layers; top 8 MoE layers of Switch.
+    (cfg.moe_layer_indices().len() * 3).div_ceil(4)
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let cfg = parse_model(args)?;
+    let assets = Assets::load(&cfg);
+    if args.flag("pretrained-only") && !assets.pretrained {
+        return Err(anyhow!("no pretrained checkpoint for {}", cfg.name));
+    }
+    let comp = method_of(args)?;
+    let rate = args.get_f64("rate", 0.25);
+    let layers = args.get_usize("layers", top_layers_default(&cfg));
+    let calib = assets.calibration_tokens(cfg.max_seq);
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let t0 = std::time::Instant::now();
+    let cm = compress_model(&assets.model, comp.as_ref(), rate, layers, Some(&calib), &mut rng);
+    println!(
+        "compressed {} with {} at rate {rate} over {} layers in {:.2}s",
+        cfg.name,
+        cm.report.method,
+        cm.report.layers.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  approx error (Table-1 metric): {:.4}",
+        cm.report.mean_approx_error()
+    );
+    println!(
+        "  expert params: {} -> {} ({:.1} %)",
+        cm.report.total_params_before(),
+        cm.report.total_params_after(),
+        100.0 * cm.report.total_params_after() as f64 / cm.report.total_params_before() as f64
+    );
+    println!(
+        "  expert bytes:  {} -> {}",
+        format_bytes(cm.report.total_bytes_before()),
+        format_bytes(cm.report.total_bytes_after())
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = parse_model(args)?;
+    let assets = Assets::load(&cfg);
+    println!(
+        "model {} ({})",
+        cfg.name,
+        if assets.pretrained {
+            "pretrained checkpoint"
+        } else {
+            "RANDOM fallback — run `make artifacts`"
+        }
+    );
+    let model = if let Some(method) = args.get("method") {
+        let comp =
+            method_by_name(method).ok_or_else(|| anyhow!("unknown method '{method}'"))?;
+        let rate = args.get_f64("rate", 0.25);
+        let layers = args.get_usize("layers", top_layers_default(&cfg));
+        let calib = assets.calibration_tokens(cfg.max_seq);
+        let mut rng = Rng::new(args.get_u64("seed", 0));
+        let cm =
+            compress_model(&assets.model, comp.as_ref(), rate, layers, Some(&calib), &mut rng);
+        println!(
+            "compressed with {method} at rate {rate}: err {:.4}",
+            cm.report.mean_approx_error()
+        );
+        cm.model
+    } else {
+        assets.model.clone()
+    };
+    let n = args.get_usize("n", if args.flag("fast") { 50 } else { 200 });
+    let ppl = eval::perplexity(&model, &assets.valid, cfg.max_seq);
+    println!("  wikitext-analog PPL: {ppl:.3}");
+    let lam = eval::lambada_accuracy(&model, &assets.lambada(n));
+    println!("  lambada-analog ACC:  {:.2} %", lam * 100.0);
+    let piqa = eval::choice_accuracy(&model, &assets.piqa(n));
+    println!("  piqa-analog ACC:     {:.2} %", piqa * 100.0);
+    let wino = eval::choice_accuracy(&model, &assets.winogrande(n));
+    println!("  winogrande-analog:   {:.2} %", wino * 100.0);
+    for task in resmoe::data::tasks::NLU_TASKS {
+        if model.head(task).is_some() {
+            let examples = assets.nlu_test(task, n);
+            if let Some(acc) = eval::task_accuracy(&model, task, &examples) {
+                println!("  {task} ACC:           {:.2} %", acc * 100.0);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    use resmoe::eval::tablegen as tg;
+    let id = args.get_or("id", args.positional.first().map(|s| s.as_str()).unwrap_or("1"));
+    let table = match id {
+        "1" => tg::table1(),
+        "2" => tg::table2(),
+        "3" => tg::table3(),
+        "4" => tg::table4(),
+        "5" => tg::table5(),
+        "7" => tg::table7(),
+        "10" => tg::table10(),
+        "11" => tg::table11(),
+        "12" => tg::table12(),
+        "fig4" => tg::fig4(&[0.10, 0.25, 0.50]),
+        other => return Err(anyhow!("unknown table id '{other}'")),
+    };
+    table.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = parse_model(args)?;
+    let assets = Assets::load(&cfg);
+    let sc = ServerConfig {
+        batch_max: args.get_usize("batch-max", 8),
+        batch_wait_us: args.get_u64("batch-wait-us", 500),
+        cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
+        workers: args.get_usize("workers", 2),
+    };
+    let n_requests = args.get_usize("requests", 64);
+    resmoe::coordinator::demo::run_demo(&assets, sc, n_requests)
+}

@@ -1,0 +1,221 @@
+//! Multi-head causal self-attention with an optional KV cache, used by the
+//! decoder-only evaluation models.
+
+use crate::tensor::Matrix;
+use crate::util::stats::softmax;
+use crate::util::Rng;
+
+/// Attention projection weights; all `d × d`, stored `[out, in]` so
+/// application is `x.matmul_nt(w)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attention {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub n_heads: usize,
+}
+
+/// Per-layer KV cache for incremental decoding.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Matrix,
+    pub v: Matrix,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(max_seq: usize, d: usize) -> KvCache {
+        KvCache { k: Matrix::zeros(max_seq, d), v: Matrix::zeros(max_seq, d), len: 0 }
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl Attention {
+    pub fn random(d: usize, n_heads: usize, rng: &mut Rng) -> Attention {
+        assert_eq!(d % n_heads, 0);
+        let s = 1.0 / (d as f32).sqrt();
+        Attention {
+            wq: Matrix::randn(d, d, s, rng),
+            wk: Matrix::randn(d, d, s, rng),
+            wv: Matrix::randn(d, d, s, rng),
+            wo: Matrix::randn(d, d, s, rng),
+            n_heads,
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.wq.rows
+    }
+
+    pub fn n_params(&self) -> usize {
+        4 * self.wq.n_params()
+    }
+
+    /// Full-sequence causal attention: `x` (T × d) → (T × d).
+    pub fn forward_full(&self, x: &Matrix) -> Matrix {
+        let t = x.rows;
+        let d = self.d_model();
+        let hd = d / self.n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let q = x.matmul_nt(&self.wq);
+        let k = x.matmul_nt(&self.wk);
+        let v = x.matmul_nt(&self.wv);
+        let mut ctx = Matrix::zeros(t, d);
+        // §Perf: one reusable score buffer + in-place softmax instead of a
+        // fresh Vec per (head, position) — the T² small allocations
+        // dominated the profile at decode-context lengths.
+        let mut scores: Vec<f32> = Vec::with_capacity(t);
+        for h in 0..self.n_heads {
+            let lo = h * hd;
+            let hi = lo + hd;
+            for i in 0..t {
+                // scores over j <= i
+                let qi = &q.row(i)[lo..hi];
+                scores.clear();
+                let mut max = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let kj = &k.row(j)[lo..hi];
+                    let s = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    max = max.max(s);
+                    scores.push(s);
+                }
+                let mut sum = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                let dst = &mut ctx.row_mut(i)[lo..hi];
+                for (j, &p) in scores.iter().enumerate() {
+                    let pv = p * inv;
+                    let vj = &v.row(j)[lo..hi];
+                    for (o, &vv) in dst.iter_mut().zip(vj) {
+                        *o += pv * vv;
+                    }
+                }
+            }
+        }
+        ctx.matmul_nt(&self.wo)
+    }
+
+    /// Single-token decode step against a KV cache. `x` is (1 × d); the new
+    /// K/V rows are appended to the cache.
+    pub fn forward_step(&self, x: &Matrix, cache: &mut KvCache) -> Matrix {
+        assert_eq!(x.rows, 1);
+        let d = self.d_model();
+        let hd = d / self.n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let q = x.matmul_nt(&self.wq);
+        let k_new = x.matmul_nt(&self.wk);
+        let v_new = x.matmul_nt(&self.wv);
+        let pos = cache.len;
+        assert!(pos < cache.k.rows, "KV cache overflow");
+        cache.k.row_mut(pos).copy_from_slice(k_new.row(0));
+        cache.v.row_mut(pos).copy_from_slice(v_new.row(0));
+        cache.len += 1;
+        let mut ctx = Matrix::zeros(1, d);
+        for h in 0..self.n_heads {
+            let lo = h * hd;
+            let hi = lo + hd;
+            let qh = &q.row(0)[lo..hi];
+            let scores: Vec<f32> = (0..cache.len)
+                .map(|j| {
+                    let kj = &cache.k.row(j)[lo..hi];
+                    qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let probs = softmax(&scores);
+            let dst = &mut ctx.row_mut(0)[lo..hi];
+            for (j, &p) in probs.iter().enumerate() {
+                let vj = &cache.v.row(j)[lo..hi];
+                for (o, &vv) in dst.iter_mut().zip(vj) {
+                    *o += p * vv;
+                }
+            }
+        }
+        ctx.matmul_nt(&self.wo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_forward_shape() {
+        let mut rng = Rng::new(1);
+        let a = Attention::random(16, 4, &mut rng);
+        let x = Matrix::randn(10, 16, 1.0, &mut rng);
+        let y = a.forward_full(&x);
+        assert_eq!(y.shape(), (10, 16));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Output at position i must not depend on tokens after i.
+        let mut rng = Rng::new(2);
+        let a = Attention::random(16, 4, &mut rng);
+        let x_full = Matrix::randn(8, 16, 1.0, &mut rng);
+        let y_full = a.forward_full(&x_full);
+        let x_prefix = x_full.slice_rows(0, 5);
+        let y_prefix = a.forward_full(&x_prefix);
+        for i in 0..5 {
+            for c in 0..16 {
+                assert!(
+                    (y_full.at(i, c) - y_prefix.at(i, c)).abs() < 1e-5,
+                    "pos {i} col {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kv_cache_decode_matches_full_forward() {
+        let mut rng = Rng::new(3);
+        let a = Attention::random(12, 3, &mut rng);
+        let x = Matrix::randn(6, 12, 1.0, &mut rng);
+        let y_full = a.forward_full(&x);
+        let mut cache = KvCache::new(16, 12);
+        for i in 0..6 {
+            let xi = x.slice_rows(i, i + 1);
+            let yi = a.forward_step(&xi, &mut cache);
+            for c in 0..12 {
+                assert!(
+                    (y_full.at(i, c) - yi.at(0, c)).abs() < 1e-4,
+                    "pos {i} col {c}: {} vs {}",
+                    y_full.at(i, c),
+                    yi.at(0, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cache_clear_resets() {
+        let mut rng = Rng::new(4);
+        let a = Attention::random(8, 2, &mut rng);
+        let x = Matrix::randn(1, 8, 1.0, &mut rng);
+        let mut cache = KvCache::new(4, 8);
+        let y1 = a.forward_step(&x, &mut cache);
+        cache.clear();
+        let y2 = a.forward_step(&x, &mut cache);
+        assert!(y1.sq_dist(&y2) < 1e-12);
+        assert_eq!(cache.len, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache overflow")]
+    fn cache_overflow_panics() {
+        let mut rng = Rng::new(5);
+        let a = Attention::random(8, 2, &mut rng);
+        let x = Matrix::randn(1, 8, 1.0, &mut rng);
+        let mut cache = KvCache::new(1, 8);
+        a.forward_step(&x, &mut cache);
+        a.forward_step(&x, &mut cache);
+    }
+}

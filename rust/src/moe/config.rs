@@ -1,0 +1,274 @@
+//! Model configurations mirroring the paper's three backbones at laptop
+//! scale (the substitution table in DESIGN.md §2).
+
+use crate::util::json::Json;
+
+/// Expert MLP architecture (paper §3.1 and App. B.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpertArch {
+    /// `W2 · relu(W1 x + b1) + b2` — Switch Transformer style.
+    Relu,
+    /// `W2 · (silu(W1 x + b1) ⊙ (W3 x + b3)) + b2` — Llama/Mixtral/DeepSeek
+    /// gated style.
+    SwiGlu,
+}
+
+impl ExpertArch {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExpertArch::Relu => "relu",
+            ExpertArch::SwiGlu => "swiglu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ExpertArch> {
+        match s {
+            "relu" => Some(ExpertArch::Relu),
+            "swiglu" => Some(ExpertArch::SwiGlu),
+            _ => None,
+        }
+    }
+}
+
+/// Expert initialization style — the paper attributes merge-method behaviour
+/// differences to this (§5.4: Mixtral experts are "copy-and-paste"
+/// upcycled → near-uniform weights; Switch experts are independent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpertInit {
+    /// Independent Gaussian experts (Switch Transformer style).
+    Independent,
+    /// One base expert cloned with small noise then drifted (Mixtral-style
+    /// sparse upcycling).
+    Upcycled,
+}
+
+/// Full model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,      // p in the paper
+    pub d_inner: usize,      // p_I in the paper
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub n_experts: usize,    // N
+    pub top_k: usize,
+    pub arch: ExpertArch,
+    pub expert_init: ExpertInit,
+    /// Every `moe_every`-th FFN is a sparse MoE layer (Switch uses 2).
+    pub moe_every: usize,
+    /// DeepSeekMoE's always-on shared expert (App. A.2) — excluded from
+    /// compression.
+    pub shared_expert: bool,
+}
+
+impl ModelConfig {
+    /// switch-base-8 analog: ReLU experts, top-1 routing, pI = 4p, MoE every
+    /// other layer, independent expert init.
+    pub fn switch_mini(n_experts: usize) -> ModelConfig {
+        ModelConfig {
+            name: format!("switch-mini-{n_experts}"),
+            vocab_size: 256,
+            d_model: 64,
+            d_inner: 256,
+            n_layers: 6,
+            n_heads: 4,
+            max_seq: 128,
+            n_experts,
+            top_k: 1,
+            arch: ExpertArch::Relu,
+            expert_init: ExpertInit::Independent,
+            moe_every: 2,
+            shared_expert: false,
+        }
+    }
+
+    /// Mixtral analog: SwiGLU experts, 8 experts top-2, pI = 3.5p, every FFN
+    /// sparse, upcycled init.
+    pub fn mixtral_mini() -> ModelConfig {
+        ModelConfig {
+            name: "mixtral-mini".into(),
+            vocab_size: 256,
+            d_model: 64,
+            d_inner: 224,
+            n_layers: 6,
+            n_heads: 4,
+            max_seq: 128,
+            n_experts: 8,
+            top_k: 2,
+            arch: ExpertArch::SwiGlu,
+            expert_init: ExpertInit::Upcycled,
+            moe_every: 1,
+            shared_expert: false,
+        }
+    }
+
+    /// DeepSeekMoE analog: 64 fine-grained SwiGLU experts (pI = 11/16·p),
+    /// top-6 plus a shared expert.
+    pub fn deepseek_mini() -> ModelConfig {
+        ModelConfig {
+            name: "deepseek-mini".into(),
+            vocab_size: 256,
+            d_model: 64,
+            d_inner: 44,
+            n_layers: 4,
+            n_heads: 4,
+            max_seq: 128,
+            n_experts: 64,
+            top_k: 6,
+            arch: ExpertArch::SwiGlu,
+            expert_init: ExpertInit::Upcycled,
+            moe_every: 1,
+            shared_expert: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "switch-mini-8" => Some(ModelConfig::switch_mini(8)),
+            "switch-mini-16" => Some(ModelConfig::switch_mini(16)),
+            "mixtral-mini" => Some(ModelConfig::mixtral_mini()),
+            "deepseek-mini" => Some(ModelConfig::deepseek_mini()),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Whether FFN layer `layer` is a sparse MoE layer.
+    pub fn is_moe_layer(&self, layer: usize) -> bool {
+        (layer + 1) % self.moe_every == 0
+    }
+
+    pub fn moe_layer_indices(&self) -> Vec<usize> {
+        (0..self.n_layers).filter(|&l| self.is_moe_layer(l)).collect()
+    }
+
+    /// Parameters of one expert (paper: Mixtral expert = 176.2 M at scale).
+    pub fn params_per_expert(&self) -> usize {
+        let (p, pi) = (self.d_model, self.d_inner);
+        let gates = if self.arch == ExpertArch::SwiGlu { 2 } else { 1 };
+        gates * (pi * p + pi) + p * pi + p
+    }
+
+    // ------------------------------------------------------------- JSON io
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("d_inner", Json::num(self.d_inner as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("arch", Json::str(self.arch.name())),
+            (
+                "expert_init",
+                Json::str(match self.expert_init {
+                    ExpertInit::Independent => "independent",
+                    ExpertInit::Upcycled => "upcycled",
+                }),
+            ),
+            ("moe_every", Json::num(self.moe_every as f64)),
+            ("shared_expert", Json::Bool(self.shared_expert)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow::anyhow!("config missing field '{k}'"))
+        };
+        let num = |k: &str| -> anyhow::Result<usize> {
+            field(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("config field '{k}' not a usize"))
+        };
+        Ok(ModelConfig {
+            name: field("name")?.as_str().unwrap_or("unnamed").to_string(),
+            vocab_size: num("vocab_size")?,
+            d_model: num("d_model")?,
+            d_inner: num("d_inner")?,
+            n_layers: num("n_layers")?,
+            n_heads: num("n_heads")?,
+            max_seq: num("max_seq")?,
+            n_experts: num("n_experts")?,
+            top_k: num("top_k")?,
+            arch: ExpertArch::from_name(field("arch")?.as_str().unwrap_or(""))
+                .ok_or_else(|| anyhow::anyhow!("bad arch"))?,
+            expert_init: match field("expert_init")?.as_str() {
+                Some("upcycled") => ExpertInit::Upcycled,
+                _ => ExpertInit::Independent,
+            },
+            moe_every: num("moe_every")?,
+            shared_expert: field("shared_expert")?.as_bool().unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_follow_paper_ratios() {
+        let sw = ModelConfig::switch_mini(8);
+        assert_eq!(sw.d_inner, 4 * sw.d_model); // Switch: pI = 4p
+        let mx = ModelConfig::mixtral_mini();
+        assert_eq!(mx.d_inner * 2, 7 * mx.d_model); // Mixtral: pI = 3.5p
+        let ds = ModelConfig::deepseek_mini();
+        assert_eq!(ds.d_inner * 16, 11 * ds.d_model); // DeepSeek: pI = 11/16 p
+        assert!(ds.shared_expert);
+        assert_eq!(ds.n_experts, 64);
+    }
+
+    #[test]
+    fn moe_layer_placement() {
+        let sw = ModelConfig::switch_mini(8);
+        assert_eq!(sw.moe_layer_indices(), vec![1, 3, 5]);
+        let mx = ModelConfig::mixtral_mini();
+        assert_eq!(mx.moe_layer_indices().len(), mx.n_layers);
+    }
+
+    #[test]
+    fn params_per_expert_counts() {
+        let sw = ModelConfig::switch_mini(8);
+        // relu: W1 (256x64) + b1 (256) + W2 (64x256) + b2 (64)
+        assert_eq!(sw.params_per_expert(), 256 * 64 + 256 + 64 * 256 + 64);
+        let mx = ModelConfig::mixtral_mini();
+        // swiglu adds W3/b3
+        assert_eq!(
+            mx.params_per_expert(),
+            2 * (224 * 64 + 224) + 64 * 224 + 64
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            ModelConfig::switch_mini(16),
+            ModelConfig::mixtral_mini(),
+            ModelConfig::deepseek_mini(),
+        ] {
+            let j = cfg.to_json();
+            let back = ModelConfig::from_json(&j).unwrap();
+            assert_eq!(back.name, cfg.name);
+            assert_eq!(back.d_inner, cfg.d_inner);
+            assert_eq!(back.arch, cfg.arch);
+            assert_eq!(back.shared_expert, cfg.shared_expert);
+            assert_eq!(back.top_k, cfg.top_k);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelConfig::by_name("mixtral-mini").is_some());
+        assert!(ModelConfig::by_name("switch-mini-16").unwrap().n_experts == 16);
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

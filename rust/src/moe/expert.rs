@@ -1,0 +1,308 @@
+//! Expert MLPs and their design-matrix (distributional) view.
+//!
+//! The paper's key representational move (§4.2, Eq. 3) is that an MLP is an
+//! order-invariant ensemble of bottleneck-1 sub-MLPs: row `i` of `W1` (and
+//! `b1`, and `W3/b3` for gated experts) together with column `i` of `W2`
+//! form one sub-MLP. Concatenating them row-wise gives the *design matrix*
+//! `W_k = [W1, b1, (W3, b3,) W2^T] ∈ R^{pI×D}`; permuting its rows leaves
+//! the expert's function unchanged. The barycenter is computed over these
+//! design matrices.
+
+use super::config::ExpertArch;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Weights of one expert MLP.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertWeights {
+    pub arch: ExpertArch,
+    /// `pI × p` — rows are sub-MLP input weights.
+    pub w1: Matrix,
+    /// `pI`.
+    pub b1: Vec<f32>,
+    /// Gated path (`SwiGlu` only): `pI × p` / `pI`.
+    pub w3: Option<Matrix>,
+    pub b3: Option<Vec<f32>>,
+    /// `p × pI` — columns are sub-MLP output weights.
+    pub w2: Matrix,
+    /// `p`.
+    pub b2: Vec<f32>,
+}
+
+impl ExpertWeights {
+    pub fn d_model(&self) -> usize {
+        self.w1.cols
+    }
+
+    pub fn d_inner(&self) -> usize {
+        self.w1.rows
+    }
+
+    /// Random expert; std follows 1/sqrt(fan_in).
+    pub fn random(arch: ExpertArch, p: usize, pi: usize, rng: &mut Rng) -> ExpertWeights {
+        let s1 = 1.0 / (p as f32).sqrt();
+        let s2 = 1.0 / (pi as f32).sqrt();
+        ExpertWeights {
+            arch,
+            w1: Matrix::randn(pi, p, s1, rng),
+            b1: vec![0.0; pi],
+            w3: (arch == ExpertArch::SwiGlu).then(|| Matrix::randn(pi, p, s1, rng)),
+            b3: (arch == ExpertArch::SwiGlu).then(|| vec![0.0; pi]),
+            w2: Matrix::randn(p, pi, s2, rng),
+            b2: vec![0.0; p],
+        }
+    }
+
+    /// Clone with i.i.d. Gaussian noise added — models Mixtral's upcycled
+    /// ("copy-and-paste then diverge") expert initialization.
+    pub fn perturbed(&self, noise_std: f32, rng: &mut Rng) -> ExpertWeights {
+        let jitter = |m: &Matrix, rng: &mut Rng| {
+            let mut out = m.clone();
+            for v in out.data.iter_mut() {
+                *v += rng.normal_scaled(noise_std);
+            }
+            out
+        };
+        let jitter_vec = |v: &[f32], rng: &mut Rng| -> Vec<f32> {
+            v.iter().map(|x| x + rng.normal_scaled(noise_std)).collect()
+        };
+        ExpertWeights {
+            arch: self.arch,
+            w1: jitter(&self.w1, rng),
+            b1: jitter_vec(&self.b1, rng),
+            w3: self.w3.as_ref().map(|m| jitter(m, rng)),
+            b3: self.b3.as_ref().map(|v| jitter_vec(v, rng)),
+            w2: jitter(&self.w2, rng),
+            b2: jitter_vec(&self.b2, rng),
+        }
+    }
+
+    /// Forward pass over a batch `x` (B × p) → (B × p).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut h = x.matmul_nt(&self.w1); // B × pI
+        for r in 0..h.rows {
+            let row = h.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += self.b1[c];
+            }
+        }
+        match self.arch {
+            ExpertArch::Relu => {
+                for v in h.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            ExpertArch::SwiGlu => {
+                let w3 = self.w3.as_ref().expect("SwiGlu expert missing w3");
+                let b3 = self.b3.as_ref().expect("SwiGlu expert missing b3");
+                let mut g = x.matmul_nt(w3);
+                for r in 0..g.rows {
+                    let row = g.row_mut(r);
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v += b3[c];
+                    }
+                }
+                for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+                    *hv = silu(*hv) * gv;
+                }
+            }
+        }
+        let mut out = h.matmul_nt(&self.w2); // B × p
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += self.b2[c];
+            }
+        }
+        out
+    }
+
+    /// Number of parameters (incl. biases).
+    pub fn n_params(&self) -> usize {
+        let mut n = self.w1.n_params() + self.b1.len() + self.w2.n_params() + self.b2.len();
+        if let Some(w3) = &self.w3 {
+            n += w3.n_params();
+        }
+        if let Some(b3) = &self.b3 {
+            n += b3.len();
+        }
+        n
+    }
+
+    // -------------------------------------------------- design-matrix view
+    /// Column width of the design matrix: p+1 (+p+1 gated) + p.
+    pub fn design_cols(arch: ExpertArch, p: usize) -> usize {
+        match arch {
+            ExpertArch::Relu => 2 * p + 1,
+            ExpertArch::SwiGlu => 3 * p + 2,
+        }
+    }
+
+    /// `W_k = [W1, b1, (W3, b3,) W2^T]` — the row-permutable representation
+    /// (paper §4.2 and App. B.3). `b2` is excluded (it is not part of the
+    /// row-sum, Eq. 3) and carried alongside.
+    pub fn design_matrix(&self) -> Matrix {
+        let pi = self.d_inner();
+        let b1 = Matrix::from_vec(pi, 1, self.b1.clone());
+        let mut dm = self.w1.hcat(&b1);
+        if let (Some(w3), Some(b3)) = (&self.w3, &self.b3) {
+            let b3m = Matrix::from_vec(pi, 1, b3.clone());
+            dm = dm.hcat(w3).hcat(&b3m);
+        }
+        dm.hcat(&self.w2.transpose())
+    }
+
+    /// Rebuild an expert from a design matrix (inverse of
+    /// [`Self::design_matrix`]); `b2` is supplied separately.
+    pub fn from_design_matrix(
+        arch: ExpertArch,
+        p: usize,
+        dm: &Matrix,
+        b2: Vec<f32>,
+    ) -> ExpertWeights {
+        assert_eq!(dm.cols, Self::design_cols(arch, p), "design matrix width");
+        let w1 = dm.slice_cols(0, p);
+        let b1: Vec<f32> = dm.col(p);
+        let (w3, b3, w2t_off) = match arch {
+            ExpertArch::Relu => (None, None, p + 1),
+            ExpertArch::SwiGlu => {
+                let w3 = dm.slice_cols(p + 1, 2 * p + 1);
+                let b3 = dm.col(2 * p + 1);
+                (Some(w3), Some(b3), 2 * p + 2)
+            }
+        };
+        let w2 = dm.slice_cols(w2t_off, dm.cols).transpose();
+        ExpertWeights { arch, w1, b1, w3, b3, w2, b2 }
+    }
+
+    /// Apply a sub-MLP permutation: `perm[i] = j` moves sub-MLP `j` to slot
+    /// `i` (rows of W1/b1/W3/b3, columns of W2). Function-preserving.
+    pub fn permuted(&self, perm: &[usize]) -> ExpertWeights {
+        let inv_col_perm = perm; // permute_cols uses out[:, i] = in[:, perm[i]]
+        ExpertWeights {
+            arch: self.arch,
+            w1: self.w1.permute_rows(perm),
+            b1: perm.iter().map(|&j| self.b1[j]).collect(),
+            w3: self.w3.as_ref().map(|m| m.permute_rows(perm)),
+            b3: self.b3.as_ref().map(|v| perm.iter().map(|&j| v[j]).collect()),
+            w2: self.w2.permute_cols(inv_col_perm),
+            b2: self.b2.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(arch: ExpertArch, seed: u64) -> (ExpertWeights, Rng) {
+        let mut rng = Rng::new(seed);
+        let e = ExpertWeights::random(arch, 8, 12, &mut rng);
+        (e, rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let (e, mut rng) = mk(arch, 1);
+            let x = Matrix::randn(5, 8, 1.0, &mut rng);
+            let y = e.forward(&x);
+            assert_eq!(y.shape(), (5, 8));
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn relu_forward_matches_manual() {
+        let (e, mut rng) = mk(ExpertArch::Relu, 2);
+        let x = Matrix::randn(1, 8, 1.0, &mut rng);
+        let y = e.forward(&x);
+        // Manual single-vector computation.
+        let h: Vec<f32> = (0..12)
+            .map(|i| {
+                let dot: f32 = e.w1.row(i).iter().zip(x.row(0)).map(|(a, b)| a * b).sum();
+                (dot + e.b1[i]).max(0.0)
+            })
+            .collect();
+        for o in 0..8 {
+            let manual: f32 =
+                (0..12).map(|i| e.w2.at(o, i) * h[i]).sum::<f32>() + e.b2[o];
+            assert!((y.at(0, o) - manual).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn swiglu_uses_gate() {
+        let (mut e, mut rng) = mk(ExpertArch::SwiGlu, 3);
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        let y1 = e.forward(&x);
+        // Zeroing the gate path must change the output to b2 only.
+        e.w3 = Some(Matrix::zeros(12, 8));
+        e.b3 = Some(vec![0.0; 12]);
+        let y2 = e.forward(&x);
+        for r in 0..3 {
+            for c in 0..8 {
+                assert!((y2.at(r, c) - e.b2[c]).abs() < 1e-6);
+            }
+        }
+        assert!(y1.sq_dist(&y2) > 1e-4);
+    }
+
+    #[test]
+    fn design_matrix_roundtrip() {
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let (e, _) = mk(arch, 4);
+            let dm = e.design_matrix();
+            assert_eq!(dm.shape(), (12, ExpertWeights::design_cols(arch, 8)));
+            let back = ExpertWeights::from_design_matrix(arch, 8, &dm, e.b2.clone());
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_function() {
+        // The distributional claim of Eq. (3): permuting sub-MLPs leaves the
+        // expert's output bit-identical up to float addition order.
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let (e, mut rng) = mk(arch, 5);
+            let perm = rng.permutation(12);
+            let ep = e.permuted(&perm);
+            let x = Matrix::randn(6, 8, 1.0, &mut rng);
+            let y0 = e.forward(&x);
+            let y1 = ep.forward(&x);
+            assert!(y0.sq_dist(&y1) < 1e-8, "arch {arch:?}: {}", y0.sq_dist(&y1));
+        }
+    }
+
+    #[test]
+    fn permutation_commutes_with_design_matrix() {
+        let (e, mut rng) = mk(ExpertArch::SwiGlu, 6);
+        let perm = rng.permutation(12);
+        let a = e.permuted(&perm).design_matrix();
+        let b = e.design_matrix().permute_rows(&perm);
+        assert!(a.sq_dist(&b) < 1e-12);
+    }
+
+    #[test]
+    fn n_params_matches_config_formula() {
+        use crate::moe::config::ModelConfig;
+        let cfg = ModelConfig::mixtral_mini();
+        let mut rng = Rng::new(7);
+        let e = ExpertWeights::random(cfg.arch, cfg.d_model, cfg.d_inner, &mut rng);
+        assert_eq!(e.n_params(), cfg.params_per_expert());
+    }
+
+    #[test]
+    fn perturbed_is_close_but_different() {
+        let (e, mut rng) = mk(ExpertArch::Relu, 8);
+        let e2 = e.perturbed(0.01, &mut rng);
+        let d = e.design_matrix().sq_dist(&e2.design_matrix());
+        assert!(d > 0.0);
+        assert!(d < 0.1 * e.design_matrix().frob_norm_sq());
+    }
+}

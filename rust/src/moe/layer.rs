@@ -1,0 +1,183 @@
+//! Sparse MoE FFN layer: router + N experts (+ optional shared expert).
+//!
+//! The forward pass groups tokens by activated expert so each expert runs
+//! one batched matmul over its assigned tokens (the standard dispatch/
+//! combine formulation) — this is also the layout the Pallas kernel mirrors.
+
+use super::config::ExpertArch;
+use super::expert::ExpertWeights;
+use super::router::{Router, RouterStats};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeLayer {
+    pub router: Router,
+    pub experts: Vec<ExpertWeights>,
+    /// DeepSeekMoE-style always-on shared expert (not routed, excluded from
+    /// compression per App. A.2).
+    pub shared_expert: Option<ExpertWeights>,
+}
+
+impl MoeLayer {
+    pub fn random(
+        arch: ExpertArch,
+        p: usize,
+        pi: usize,
+        n_experts: usize,
+        top_k: usize,
+        upcycled: bool,
+        shared: bool,
+        rng: &mut Rng,
+    ) -> MoeLayer {
+        let experts: Vec<ExpertWeights> = if upcycled {
+            // Mixtral-style: one base expert, cloned with noise.
+            let base = ExpertWeights::random(arch, p, pi, rng);
+            (0..n_experts).map(|_| base.perturbed(0.02, rng)).collect()
+        } else {
+            (0..n_experts)
+                .map(|_| ExpertWeights::random(arch, p, pi, rng))
+                .collect()
+        };
+        MoeLayer {
+            router: Router::random(n_experts, p, top_k, rng),
+            experts,
+            shared_expert: shared.then(|| ExpertWeights::random(arch, p, pi, rng)),
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Forward over a batch of token activations `x` (B × p), optionally
+    /// recording router statistics.
+    pub fn forward(&self, x: &Matrix, stats: Option<&mut RouterStats>) -> Matrix {
+        let b = x.rows;
+        let n = self.n_experts();
+        let logits = self.router.logits(x);
+        // Token routing; group token indices per expert.
+        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
+        let mut stats = stats;
+        for t in 0..b {
+            let route = self.router.route_logits(logits.row(t));
+            if let Some(s) = stats.as_deref_mut() {
+                s.record(&route);
+            }
+            for (e, w) in route.experts.iter().zip(&route.weights) {
+                groups[*e].push((t, *w));
+            }
+        }
+        let mut out = Matrix::zeros(b, x.cols);
+        // Shared expert contributes to every token.
+        if let Some(se) = &self.shared_expert {
+            out = se.forward(x);
+        }
+        // Dispatch → expert batched forward → weighted combine.
+        for (e, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let mut sub = Matrix::zeros(group.len(), x.cols);
+            for (i, &(t, _)) in group.iter().enumerate() {
+                sub.row_mut(i).copy_from_slice(x.row(t));
+            }
+            let y = self.experts[e].forward(&sub);
+            for (i, &(t, w)) in group.iter().enumerate() {
+                let dst = out.row_mut(t);
+                for (d, &s) in dst.iter_mut().zip(y.row(i)) {
+                    *d += w * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Total parameters in the routed experts (what compression targets).
+    pub fn expert_params(&self) -> usize {
+        self.experts.iter().map(|e| e.n_params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(seed: u64, top_k: usize) -> (MoeLayer, Rng) {
+        let mut rng = Rng::new(seed);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, top_k, false, false, &mut rng);
+        (l, rng)
+    }
+
+    #[test]
+    fn forward_shape_and_finiteness() {
+        let (l, mut rng) = layer(1, 2);
+        let x = Matrix::randn(10, 8, 1.0, &mut rng);
+        let y = l.forward(&x, None);
+        assert_eq!(y.shape(), (10, 8));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn matches_naive_per_token_computation() {
+        let (l, mut rng) = layer(2, 2);
+        let x = Matrix::randn(7, 8, 1.0, &mut rng);
+        let y = l.forward(&x, None);
+        for t in 0..7 {
+            let xt = x.slice_rows(t, t + 1);
+            let route = l.router.route(x.row(t));
+            let mut want = vec![0.0f32; 8];
+            for (e, w) in route.experts.iter().zip(&route.weights) {
+                let ye = l.experts[*e].forward(&xt);
+                for (o, &v) in want.iter_mut().zip(ye.row(0)) {
+                    *o += w * v;
+                }
+            }
+            for c in 0..8 {
+                assert!((y.at(t, c) - want[c]).abs() < 1e-4, "token {t} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_cover_all_tokens() {
+        let (l, mut rng) = layer(3, 2);
+        let x = Matrix::randn(32, 8, 1.0, &mut rng);
+        let mut stats = RouterStats::new(4);
+        l.forward(&x, Some(&mut stats));
+        assert_eq!(stats.tokens, 32);
+        assert_eq!(stats.activations.iter().sum::<u64>(), 64); // top-2
+    }
+
+    #[test]
+    fn shared_expert_always_contributes() {
+        let mut rng = Rng::new(4);
+        let mut l =
+            MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 1, true, true, &mut rng);
+        let x = Matrix::randn(5, 8, 1.0, &mut rng);
+        let y_with = l.forward(&x, None);
+        let se = l.shared_expert.take().unwrap();
+        let y_without = l.forward(&x, None);
+        let se_out = se.forward(&x);
+        assert!(y_with.sq_dist(&y_without.add(&se_out)) < 1e-6);
+    }
+
+    #[test]
+    fn upcycled_experts_are_similar() {
+        let mut rng = Rng::new(5);
+        let up = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 1, true, false, &mut rng);
+        let ind = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 1, false, false, &mut rng);
+        let spread = |l: &MoeLayer| -> f64 {
+            let dms: Vec<Matrix> = l.experts.iter().map(|e| e.design_matrix()).collect();
+            let mean = Matrix::mean_of(&dms.iter().collect::<Vec<_>>());
+            dms.iter().map(|d| d.sq_dist(&mean)).sum::<f64>() / dms.len() as f64
+        };
+        assert!(spread(&up) * 10.0 < spread(&ind), "up={} ind={}", spread(&up), spread(&ind));
+    }
+
+    #[test]
+    fn expert_params_sum() {
+        let (l, _) = layer(6, 1);
+        assert_eq!(l.expert_params(), 4 * l.experts[0].n_params());
+    }
+}

@@ -1,0 +1,18 @@
+//! The MoE transformer substrate being compressed: expert MLPs with their
+//! design-matrix (distributional) view, top-k routing, attention, the full
+//! decoder-only LM, and the checkpoint format shared with the JAX
+//! pretrainer.
+
+pub mod attention;
+pub mod config;
+pub mod expert;
+pub mod layer;
+pub mod model_io;
+pub mod router;
+pub mod transformer;
+
+pub use config::{ExpertArch, ExpertInit, ModelConfig};
+pub use expert::ExpertWeights;
+pub use layer::MoeLayer;
+pub use router::{Route, Router, RouterStats};
+pub use transformer::{Block, Ffn, FfnHook, Model, NoHook};

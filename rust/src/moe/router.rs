@@ -1,0 +1,174 @@
+//! Top-k softmax router (paper §3.1: `G(x) = Softmax(TopK(W_g x))`).
+
+use crate::tensor::Matrix;
+use crate::util::stats::{softmax, top_k_indices};
+use crate::util::Rng;
+
+/// Router gate network for one MoE layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Router {
+    /// `N × p` logit projection.
+    pub w_g: Matrix,
+    pub top_k: usize,
+}
+
+/// Routing decision for a single token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    /// Selected expert indices (length top_k, descending by logit).
+    pub experts: Vec<usize>,
+    /// Softmax-normalized weights over the selected experts (sums to 1).
+    pub weights: Vec<f32>,
+}
+
+impl Router {
+    pub fn random(n_experts: usize, p: usize, top_k: usize, rng: &mut Rng) -> Router {
+        Router {
+            w_g: Matrix::randn(n_experts, p, 1.0 / (p as f32).sqrt(), rng),
+            top_k,
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.w_g.rows
+    }
+
+    /// Route one token.
+    pub fn route(&self, x: &[f32]) -> Route {
+        let logits = self.w_g.matvec(x);
+        self.route_logits(&logits)
+    }
+
+    /// Route from precomputed logits (used by the batched layer forward).
+    pub fn route_logits(&self, logits: &[f32]) -> Route {
+        let experts = top_k_indices(logits, self.top_k);
+        let selected: Vec<f32> = experts.iter().map(|&e| logits[e]).collect();
+        let weights = softmax(&selected);
+        Route { experts, weights }
+    }
+
+    /// Batched logits for `x` (B × p) → (B × N).
+    pub fn logits(&self, x: &Matrix) -> Matrix {
+        x.matmul_nt(&self.w_g)
+    }
+}
+
+/// Accumulated router statistics — activation frequency and mean gate score
+/// per expert. Drives the usage-based baselines (expert pruning, M-SMoE
+/// grouping) and the coordinator's prefetch policy.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub activations: Vec<u64>,
+    pub weight_sums: Vec<f64>,
+    pub tokens: u64,
+}
+
+impl RouterStats {
+    pub fn new(n_experts: usize) -> RouterStats {
+        RouterStats {
+            activations: vec![0; n_experts],
+            weight_sums: vec![0.0; n_experts],
+            tokens: 0,
+        }
+    }
+
+    pub fn record(&mut self, route: &Route) {
+        self.tokens += 1;
+        for (e, w) in route.experts.iter().zip(&route.weights) {
+            self.activations[*e] += 1;
+            self.weight_sums[*e] += *w as f64;
+        }
+    }
+
+    /// Activation frequency per expert (fraction of tokens that used it).
+    pub fn frequency(&self) -> Vec<f64> {
+        self.activations
+            .iter()
+            .map(|&a| a as f64 / self.tokens.max(1) as f64)
+            .collect()
+    }
+
+    /// Experts sorted by ascending usage (first = least used).
+    pub fn by_ascending_usage(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.activations.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.weight_sums[a]
+                .partial_cmp(&self.weight_sums[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_selects_top_logits() {
+        let mut rng = Rng::new(1);
+        let r = Router::random(8, 16, 2, &mut rng);
+        let x = rng.normal_vec(16, 1.0);
+        let logits = r.w_g.matvec(&x);
+        let route = r.route(&x);
+        assert_eq!(route.experts.len(), 2);
+        // The two selected logits dominate all others.
+        let min_sel = route.experts.iter().map(|&e| logits[e]).fold(f32::INFINITY, f32::min);
+        for (i, &l) in logits.iter().enumerate() {
+            if !route.experts.contains(&i) {
+                assert!(l <= min_sel + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one_and_ordered() {
+        let mut rng = Rng::new(2);
+        let r = Router::random(8, 16, 3, &mut rng);
+        for _ in 0..20 {
+            let x = rng.normal_vec(16, 1.0);
+            let route = r.route(&x);
+            let s: f32 = route.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            for w in route.weights.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn top1_routing_weight_is_one() {
+        let mut rng = Rng::new(3);
+        let r = Router::random(4, 8, 1, &mut rng);
+        let x = rng.normal_vec(8, 1.0);
+        let route = r.route(&x);
+        assert_eq!(route.experts.len(), 1);
+        assert!((route.weights[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batched_logits_match_single() {
+        let mut rng = Rng::new(4);
+        let r = Router::random(6, 10, 2, &mut rng);
+        let x = Matrix::randn(5, 10, 1.0, &mut rng);
+        let logits = r.logits(&x);
+        for b in 0..5 {
+            let single = r.w_g.matvec(x.row(b));
+            for e in 0..6 {
+                assert!((logits.at(b, e) - single[e]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut stats = RouterStats::new(4);
+        stats.record(&Route { experts: vec![1, 2], weights: vec![0.7, 0.3] });
+        stats.record(&Route { experts: vec![1, 0], weights: vec![0.6, 0.4] });
+        assert_eq!(stats.tokens, 2);
+        assert_eq!(stats.activations, vec![1, 2, 1, 0]);
+        assert!((stats.frequency()[1] - 1.0).abs() < 1e-12);
+        assert_eq!(stats.by_ascending_usage()[0], 3);
+    }
+}

@@ -1,0 +1,446 @@
+//! Decoder-only MoE transformer used as the evaluation substrate.
+//!
+//! Architecture (mirrored exactly by `python/compile/model.py`, which trains
+//! the weights we load at eval time):
+//!
+//! ```text
+//! h = embed[token] + pos[position]
+//! for each block: h += attn(rmsnorm(h)); h += ffn(rmsnorm(h))
+//! logits = rmsnorm(h) @ lm_head^T
+//! ```
+//!
+//! FFNs alternate dense/sparse per `ModelConfig::moe_every`.
+
+use super::attention::{Attention, KvCache};
+use super::config::{ExpertInit, ModelConfig};
+use super::expert::ExpertWeights;
+use super::layer::MoeLayer;
+use super::router::RouterStats;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// RMS normalization with learned gain.
+pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
+}
+
+fn rmsnorm_mat(x: &Matrix, gain: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        rmsnorm(x.row(r), gain, out.row_mut(r));
+    }
+    out
+}
+
+/// Override point for FFN computation — the serving coordinator routes MoE
+/// blocks through its restored-expert cache by returning `Some(output)`;
+/// `None` falls through to the block's own weights.
+pub trait FfnHook {
+    fn ffn_forward(&self, block: usize, x: &Matrix) -> Option<Matrix>;
+}
+
+/// No-op hook (the default offline path).
+pub struct NoHook;
+
+impl FfnHook for NoHook {
+    fn ffn_forward(&self, _block: usize, _x: &Matrix) -> Option<Matrix> {
+        None
+    }
+}
+
+/// FFN sub-layer: dense MLP or sparse MoE.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ffn {
+    Dense(ExpertWeights),
+    Moe(MoeLayer),
+}
+
+impl Ffn {
+    pub fn forward(&self, x: &Matrix, stats: Option<&mut RouterStats>) -> Matrix {
+        match self {
+            Ffn::Dense(e) => e.forward(x),
+            Ffn::Moe(l) => l.forward(x, stats),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            Ffn::Dense(e) => e.n_params(),
+            Ffn::Moe(l) => {
+                l.expert_params()
+                    + l.router.w_g.n_params()
+                    + l.shared_expert.as_ref().map(|e| e.n_params()).unwrap_or(0)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub norm1: Vec<f32>,
+    pub attn: Attention,
+    pub norm2: Vec<f32>,
+    pub ffn: Ffn,
+}
+
+/// The full decoder-only LM.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// `vocab × d` token embeddings.
+    pub embed: Matrix,
+    /// `max_seq × d` learned positional embeddings.
+    pub pos: Matrix,
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+    /// `vocab × d` output projection (untied).
+    pub lm_head: Matrix,
+    /// Optional classification heads (`n_classes × d`), keyed by task name;
+    /// applied to the last position's hidden state.
+    pub heads: Vec<(String, Matrix)>,
+}
+
+impl Model {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Model {
+        let d = cfg.d_model;
+        let s = 0.02;
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                let ffn = if cfg.is_moe_layer(l) {
+                    Ffn::Moe(MoeLayer::random(
+                        cfg.arch,
+                        d,
+                        cfg.d_inner,
+                        cfg.n_experts,
+                        cfg.top_k,
+                        cfg.expert_init == ExpertInit::Upcycled,
+                        cfg.shared_expert,
+                        rng,
+                    ))
+                } else {
+                    Ffn::Dense(ExpertWeights::random(cfg.arch, d, cfg.d_inner, rng))
+                };
+                Block {
+                    norm1: vec![1.0; d],
+                    attn: Attention::random(d, cfg.n_heads, rng),
+                    norm2: vec![1.0; d],
+                    ffn,
+                }
+            })
+            .collect();
+        Model {
+            cfg: cfg.clone(),
+            embed: Matrix::randn(cfg.vocab_size, d, s, rng),
+            pos: Matrix::randn(cfg.max_seq, d, s, rng),
+            blocks,
+            final_norm: vec![1.0; d],
+            lm_head: Matrix::randn(cfg.vocab_size, d, s, rng),
+            heads: Vec::new(),
+        }
+    }
+
+    /// Indices of MoE blocks.
+    pub fn moe_blocks(&self) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| matches!(b.ffn, Ffn::Moe(_)))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Hidden states after the final norm for a token sequence (T × d).
+    pub fn hidden_states(&self, tokens: &[u32], stats: Option<&mut Vec<RouterStats>>) -> Matrix {
+        self.hidden_states_hooked(tokens, stats, &NoHook)
+    }
+
+    /// [`Self::hidden_states`] with an FFN override hook.
+    pub fn hidden_states_hooked(
+        &self,
+        tokens: &[u32],
+        stats: Option<&mut Vec<RouterStats>>,
+        hook: &dyn FfnHook,
+    ) -> Matrix {
+        let t = tokens.len();
+        assert!(t <= self.cfg.max_seq, "sequence longer than max_seq");
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(i);
+            for (o, (&ev, &pv)) in h.row_mut(i).iter_mut().zip(e.iter().zip(p)) {
+                *o = ev + pv;
+            }
+        }
+        let mut stats = stats;
+        for (bi, block) in self.blocks.iter().enumerate() {
+            let normed = rmsnorm_mat(&h, &block.norm1);
+            let attn_out = block.attn.forward_full(&normed);
+            h.add_assign(&attn_out);
+            let normed = rmsnorm_mat(&h, &block.norm2);
+            let ffn_out = match hook.ffn_forward(bi, &normed) {
+                Some(out) => out,
+                None => {
+                    let block_stats = stats.as_deref_mut().map(|v| &mut v[bi]);
+                    block.ffn.forward(&normed, block_stats)
+                }
+            };
+            h.add_assign(&ffn_out);
+        }
+        rmsnorm_mat(&h, &self.final_norm)
+    }
+
+    /// Next-token logits for every position (T × vocab).
+    pub fn forward(&self, tokens: &[u32]) -> Matrix {
+        self.hidden_states(tokens, None).matmul_nt(&self.lm_head)
+    }
+
+    /// Per-block FFN *input* activations (post-norm2) for a calibration
+    /// sequence — feeds Wanda's `|W|·||x||` metric and M-SMoE's
+    /// activation-aware grouping.
+    pub fn collect_ffn_inputs(&self, tokens: &[u32]) -> Vec<Matrix> {
+        let t = tokens.len();
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(i);
+            for (o, (&ev, &pv)) in h.row_mut(i).iter_mut().zip(e.iter().zip(p)) {
+                *o = ev + pv;
+            }
+        }
+        let mut out = Vec::with_capacity(self.blocks.len());
+        for block in &self.blocks {
+            let normed = rmsnorm_mat(&h, &block.norm1);
+            let attn_out = block.attn.forward_full(&normed);
+            h.add_assign(&attn_out);
+            let normed = rmsnorm_mat(&h, &block.norm2);
+            out.push(normed.clone());
+            let ffn_out = block.ffn.forward(&normed, None);
+            h.add_assign(&ffn_out);
+        }
+        out
+    }
+
+    /// Fresh router stats (one per block; dense blocks get zero-sized stats).
+    pub fn fresh_stats(&self) -> Vec<RouterStats> {
+        self.blocks
+            .iter()
+            .map(|b| match &b.ffn {
+                Ffn::Moe(l) => RouterStats::new(l.n_experts()),
+                Ffn::Dense(_) => RouterStats::new(0),
+            })
+            .collect()
+    }
+
+    /// Classification logits from a task head applied to the final position.
+    pub fn classify(&self, tokens: &[u32], head: &Matrix) -> Vec<f32> {
+        let h = self.hidden_states(tokens, None);
+        head.matvec(h.row(h.rows - 1))
+    }
+
+    pub fn head(&self, task: &str) -> Option<&Matrix> {
+        self.heads.iter().find(|(n, _)| n == task).map(|(_, m)| m)
+    }
+
+    // ------------------------------------------------------- decode path
+    pub fn fresh_caches(&self) -> Vec<KvCache> {
+        self.blocks
+            .iter()
+            .map(|_| KvCache::new(self.cfg.max_seq, self.cfg.d_model))
+            .collect()
+    }
+
+    /// Single-token decode step (position = caches[0].len). Returns
+    /// next-token logits (vocab).
+    pub fn decode_step(&self, token: u32, caches: &mut [KvCache]) -> Vec<f32> {
+        self.decode_step_hooked(token, caches, &NoHook)
+    }
+
+    /// [`Self::decode_step`] with an FFN override hook.
+    pub fn decode_step_hooked(
+        &self,
+        token: u32,
+        caches: &mut [KvCache],
+        hook: &dyn FfnHook,
+    ) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let posn = caches[0].len;
+        assert!(posn < self.cfg.max_seq);
+        let mut h = Matrix::zeros(1, d);
+        for ((o, &e), &p) in h
+            .row_mut(0)
+            .iter_mut()
+            .zip(self.embed.row(token as usize))
+            .zip(self.pos.row(posn))
+        {
+            *o = e + p;
+        }
+        for (bi, (block, cache)) in self.blocks.iter().zip(caches.iter_mut()).enumerate() {
+            let normed = rmsnorm_mat(&h, &block.norm1);
+            let attn_out = block.attn.forward_step(&normed, cache);
+            h.add_assign(&attn_out);
+            let normed = rmsnorm_mat(&h, &block.norm2);
+            let ffn_out = match hook.ffn_forward(bi, &normed) {
+                Some(out) => out,
+                None => block.ffn.forward(&normed, None),
+            };
+            h.add_assign(&ffn_out);
+        }
+        let final_h = rmsnorm_mat(&h, &self.final_norm);
+        self.lm_head.matvec(final_h.row(0))
+    }
+
+    /// Greedy generation from a prompt.
+    pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut caches = self.fresh_caches();
+        let mut logits = vec![0.0f32; self.cfg.vocab_size];
+        for &t in prompt {
+            logits = self.decode_step(t, &mut caches);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            if caches[0].len >= self.cfg.max_seq {
+                break;
+            }
+            let next = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            out.push(next);
+            logits = self.decode_step(next, &mut caches);
+        }
+        out
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        let mut n = self.embed.n_params() + self.pos.n_params() + self.lm_head.n_params();
+        n += self.final_norm.len();
+        for b in &self.blocks {
+            n += b.norm1.len() + b.norm2.len() + b.attn.n_params() + b.ffn.n_params();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.max_seq = 24;
+        cfg.vocab_size = 32;
+        cfg
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let m = Model::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..10).map(|i| i % 32).collect();
+        let logits = m.forward(&tokens);
+        assert_eq!(logits.shape(), (10, 32));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn moe_placement_matches_config() {
+        let cfg = tiny_cfg(); // moe_every = 2, n_layers = 2 → block 1 is MoE
+        let mut rng = Rng::new(2);
+        let m = Model::random(&cfg, &mut rng);
+        assert_eq!(m.moe_blocks(), vec![1]);
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(3);
+        let m = Model::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = vec![3, 7, 1, 30, 12, 8];
+        let full = m.forward(&tokens);
+        let mut caches = m.fresh_caches();
+        for (i, &t) in tokens.iter().enumerate() {
+            let logits = m.decode_step(t, &mut caches);
+            for v in 0..32 {
+                assert!(
+                    (full.at(i, v) - logits[v]).abs() < 1e-3,
+                    "pos {i} vocab {v}: {} vs {}",
+                    full.at(i, v),
+                    logits[v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_bounded() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(4);
+        let m = Model::random(&cfg, &mut rng);
+        let a = m.generate(&[1, 2, 3], 8);
+        let b = m.generate(&[1, 2, 3], 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| (t as usize) < cfg.vocab_size));
+    }
+
+    #[test]
+    fn generate_respects_max_seq() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(5);
+        let m = Model::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..20).map(|i| i % 32).collect();
+        let out = m.generate(&prompt, 100);
+        assert_eq!(out.len(), cfg.max_seq - prompt.len());
+    }
+
+    #[test]
+    fn router_stats_collected_per_moe_block() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(6);
+        let m = Model::random(&cfg, &mut rng);
+        let mut stats = m.fresh_stats();
+        let tokens: Vec<u32> = (0..12).map(|i| i % 32).collect();
+        m.hidden_states(&tokens, Some(&mut stats));
+        assert_eq!(stats[1].tokens, 12);
+        assert_eq!(stats[0].tokens, 0); // dense block untouched
+    }
+
+    #[test]
+    fn classify_shape() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(7);
+        let mut m = Model::random(&cfg, &mut rng);
+        let head = Matrix::randn(3, cfg.d_model, 0.1, &mut rng);
+        m.heads.push(("nli".into(), head.clone()));
+        let logits = m.classify(&[1, 2, 3, 4], &head);
+        assert_eq!(logits.len(), 3);
+        assert!(m.head("nli").is_some());
+        assert!(m.head("other").is_none());
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, -4.0];
+        let gain = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rmsnorm(&x, &gain, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((out[1] + 4.0 / rms).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,269 @@
+//! Free-support Wasserstein barycenter (Cuturi & Doucet 2014) for uniform
+//! point clouds of equal support size — the heart of ResMoE §4.2.
+//!
+//! Because every input distribution and the barycenter are uniform on the
+//! same number of points, each OT plan rescales to a permutation
+//! (Prop. 4.1), and the Cuturi–Doucet alternating scheme reduces to:
+//!
+//! 1. **Assignment step** — for each cloud `W_k`, solve a Hungarian problem
+//!    between the barycenter rows and `W_k`'s rows (exact `T_k`).
+//! 2. **Update step** — each barycenter row becomes the mean of its matched
+//!    rows across clouds (the closed-form minimizer of problem (4) for
+//!    fixed `T_k`).
+//!
+//! The objective `1/N Σ_k W2²(μ_k, μ_ω)` is monotonically non-increasing,
+//! which the tests assert.
+
+use super::cost::sq_euclidean;
+use super::hungarian;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Configuration for the alternating barycenter solver.
+#[derive(Debug, Clone, Copy)]
+pub struct BarycenterConfig {
+    pub max_iter: usize,
+    /// Stop when the relative objective improvement drops below this.
+    pub rel_tol: f64,
+    /// Initialization strategy.
+    pub init: BarycenterInit,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarycenterInit {
+    /// Start from the first cloud (deterministic).
+    FirstCloud,
+    /// Start from the element-wise mean of the clouds (no alignment).
+    Mean,
+    /// Start from a random cloud.
+    RandomCloud,
+}
+
+impl Default for BarycenterConfig {
+    fn default() -> Self {
+        BarycenterConfig { max_iter: 25, rel_tol: 1e-6, init: BarycenterInit::FirstCloud }
+    }
+}
+
+/// Output of the barycenter solve.
+#[derive(Debug, Clone)]
+pub struct Barycenter {
+    /// Barycenter support points (n×d) — the rows of `W_ω`.
+    pub support: Matrix,
+    /// Per-cloud alignment: `perms[k][i] = j` means barycenter row `i` is
+    /// matched to row `j` of cloud `k`, i.e. `(T_k W_k)[i] = W_k[perms[k][i]]`.
+    pub perms: Vec<Vec<usize>>,
+    /// Final objective `1/N Σ_k W2²(μ_k, μ_ω)` (un-normalized point masses:
+    /// mean over rows).
+    pub objective: f64,
+    /// Objective value after each iteration (for convergence diagnostics).
+    pub history: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Compute the free-support barycenter of `clouds` (all n×d with the same n).
+pub fn free_support_barycenter(
+    clouds: &[&Matrix],
+    cfg: &BarycenterConfig,
+    rng: &mut Rng,
+) -> Barycenter {
+    assert!(!clouds.is_empty(), "need at least one cloud");
+    let n = clouds[0].rows;
+    let d = clouds[0].cols;
+    for c in clouds {
+        assert_eq!(c.shape(), (n, d), "all clouds must share the same shape");
+    }
+    let mut support = match cfg.init {
+        BarycenterInit::FirstCloud => clouds[0].clone(),
+        BarycenterInit::Mean => Matrix::mean_of(clouds),
+        BarycenterInit::RandomCloud => clouds[rng.below(clouds.len())].clone(),
+    };
+    let nk = clouds.len();
+    let mut perms: Vec<Vec<usize>> = vec![(0..n).collect(); nk];
+    let mut history = Vec::new();
+    let mut prev_obj = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.max_iter {
+        iterations = it + 1;
+        // --- assignment step: barycenter rows -> cloud rows.
+        let mut obj = 0.0f64;
+        for (k, cloud) in clouds.iter().enumerate() {
+            let cost = sq_euclidean(&support, cloud);
+            let asg = hungarian::solve(&cost);
+            obj += asg.cost / n as f64;
+            perms[k] = asg.row_to_col;
+        }
+        obj /= nk as f64;
+        history.push(obj);
+        // --- update step: each barycenter row = mean of matched rows.
+        let mut new_support = Matrix::zeros(n, d);
+        for (k, cloud) in clouds.iter().enumerate() {
+            for i in 0..n {
+                let src = cloud.row(perms[k][i]);
+                let dst = new_support.row_mut(i);
+                for (o, &s) in dst.iter_mut().zip(src.iter()) {
+                    *o += s;
+                }
+            }
+        }
+        support = new_support.scale(1.0 / nk as f32);
+        if prev_obj.is_finite() && (prev_obj - obj).abs() <= cfg.rel_tol * prev_obj.abs().max(1e-12)
+        {
+            break;
+        }
+        prev_obj = obj;
+    }
+    // Final objective/alignments against the updated support.
+    let mut obj = 0.0f64;
+    for (k, cloud) in clouds.iter().enumerate() {
+        let cost = sq_euclidean(&support, cloud);
+        let asg = hungarian::solve(&cost);
+        obj += asg.cost / n as f64;
+        perms[k] = asg.row_to_col;
+    }
+    obj /= nk as f64;
+    history.push(obj);
+    Barycenter { support, perms, objective: obj, history, iterations }
+}
+
+/// `W2²` between two equal-size uniform clouds (exact, via assignment).
+pub fn wasserstein2_sq(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let cost = sq_euclidean(a, b);
+    hungarian::solve(&cost).cost / a.rows as f64
+}
+
+/// The aligned objective of problem (4) for a given barycenter + alignments:
+/// `1/N Σ_k ||T_k W_k - W_ω||_F²` — used to verify Prop. 4.1 numerically.
+pub fn alignment_objective(clouds: &[&Matrix], bc: &Barycenter) -> f64 {
+    let n = bc.support.rows;
+    let mut total = 0.0f64;
+    for (k, cloud) in clouds.iter().enumerate() {
+        let aligned = cloud.permute_rows(&bc.perms[k]);
+        total += aligned.sq_dist(&bc.support) / n as f64;
+    }
+    total / clouds.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shifted_clouds(rng: &mut Rng, n: usize, d: usize, n_clouds: usize) -> Vec<Matrix> {
+        // A base cloud plus per-cloud row permutation and small shift.
+        let base = Matrix::randn(n, d, 1.0, rng);
+        (0..n_clouds)
+            .map(|k| {
+                let perm = rng.permutation(n);
+                let shift = (k as f32 - (n_clouds as f32 - 1.0) / 2.0) * 0.01;
+                base.permute_rows(&perm).map(|x| x + shift)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_cloud_is_its_own_barycenter() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(10, 4, 1.0, &mut rng);
+        let bc = free_support_barycenter(&[&a], &BarycenterConfig::default(), &mut rng);
+        assert!(bc.objective < 1e-10);
+        assert!(bc.support.sq_dist(&a) < 1e-10);
+    }
+
+    #[test]
+    fn recovers_common_structure_under_permutation() {
+        // Clouds are the SAME point set under different row permutations →
+        // the barycenter must recover that set (objective ≈ per-cloud shift
+        // variance only).
+        let mut rng = Rng::new(2);
+        let clouds = shifted_clouds(&mut rng, 16, 5, 4);
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let bc = free_support_barycenter(&refs, &BarycenterConfig::default(), &mut rng);
+        // shift magnitudes 0.015 max per coordinate → tiny residual objective
+        assert!(bc.objective < 1e-2, "objective={}", bc.objective);
+        // And alignment maps every cloud onto the barycenter almost exactly.
+        for (k, cloud) in clouds.iter().enumerate() {
+            let aligned = cloud.permute_rows(&bc.perms[k]);
+            assert!(aligned.sq_dist(&bc.support) / 16.0 < 1e-2, "cloud {k}");
+        }
+    }
+
+    #[test]
+    fn objective_monotonically_decreases() {
+        let mut rng = Rng::new(3);
+        let clouds: Vec<Matrix> = (0..5).map(|_| Matrix::randn(12, 6, 1.0, &mut rng)).collect();
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let bc = free_support_barycenter(&refs, &BarycenterConfig::default(), &mut rng);
+        for w in bc.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "history not monotone: {:?}", bc.history);
+        }
+    }
+
+    #[test]
+    fn proposition_4_1_objectives_coincide() {
+        // The WB objective (5) equals the alignment objective (4) at the
+        // solution — the numerical content of Prop 4.1.
+        let mut rng = Rng::new(4);
+        let clouds: Vec<Matrix> = (0..4).map(|_| Matrix::randn(10, 3, 1.0, &mut rng)).collect();
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let bc = free_support_barycenter(&refs, &BarycenterConfig::default(), &mut rng);
+        let align_obj = alignment_objective(&refs, &bc);
+        assert!(
+            (align_obj - bc.objective).abs() < 1e-6 * bc.objective.max(1e-9),
+            "alignment={} wb={}",
+            align_obj,
+            bc.objective
+        );
+    }
+
+    #[test]
+    fn barycenter_beats_unaligned_mean() {
+        // With permuted clouds the naive mean destroys structure; the WB
+        // objective must be strictly better than the mean-center objective.
+        let mut rng = Rng::new(5);
+        let clouds = shifted_clouds(&mut rng, 20, 8, 4);
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let bc = free_support_barycenter(&refs, &BarycenterConfig::default(), &mut rng);
+        let mean = Matrix::mean_of(&refs);
+        let mean_obj: f64 = refs.iter().map(|c| wasserstein2_sq(&mean, c)).sum::<f64>()
+            / refs.len() as f64;
+        assert!(
+            bc.objective < 0.5 * mean_obj,
+            "wb={} mean={}",
+            bc.objective,
+            mean_obj
+        );
+    }
+
+    #[test]
+    fn perms_are_permutations() {
+        let mut rng = Rng::new(6);
+        let clouds: Vec<Matrix> = (0..3).map(|_| Matrix::randn(15, 4, 1.0, &mut rng)).collect();
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let bc = free_support_barycenter(&refs, &BarycenterConfig::default(), &mut rng);
+        for p in &bc.perms {
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..15).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn mean_init_also_converges() {
+        let mut rng = Rng::new(7);
+        let clouds = shifted_clouds(&mut rng, 12, 4, 3);
+        let refs: Vec<&Matrix> = clouds.iter().collect();
+        let cfg = BarycenterConfig { init: BarycenterInit::Mean, ..Default::default() };
+        let bc = free_support_barycenter(&refs, &cfg, &mut rng);
+        assert!(bc.objective < 1e-2);
+    }
+
+    #[test]
+    fn w2_of_identical_clouds_is_zero_even_permuted() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(9, 3, 1.0, &mut rng);
+        let p = rng.permutation(9);
+        let b = a.permute_rows(&p);
+        assert!(wasserstein2_sq(&a, &b) < 1e-10);
+    }
+}

@@ -1,0 +1,67 @@
+//! Cost matrices for optimal transport between point clouds.
+
+use crate::tensor::Matrix;
+
+/// Pairwise squared Euclidean distances between the rows of `a` (n×d) and
+/// the rows of `b` (m×d): `C[i,j] = ||a_i - b_j||^2`.
+///
+/// Computed as `||a_i||^2 + ||b_j||^2 - 2 a_i·b_j` with a single matmul so
+/// the dominant term vectorizes; negatives from float cancellation are
+/// clamped to zero.
+pub fn sq_euclidean(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "point dims differ");
+    let a_sq: Vec<f32> = (0..a.rows)
+        .map(|i| a.row(i).iter().map(|x| x * x).sum())
+        .collect();
+    let b_sq: Vec<f32> = (0..b.rows)
+        .map(|j| b.row(j).iter().map(|x| x * x).sum())
+        .collect();
+    let ab = a.matmul_nt(b); // n×m of dot products
+    Matrix::from_fn(a.rows, b.rows, |i, j| {
+        (a_sq[i] + b_sq[j] - 2.0 * ab.at(i, j)).max(0.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(7, 5, 1.0, &mut rng);
+        let b = Matrix::randn(9, 5, 1.0, &mut rng);
+        let c = sq_euclidean(&a, &b);
+        for i in 0..7 {
+            for j in 0..9 {
+                let naive: f32 = a
+                    .row(i)
+                    .iter()
+                    .zip(b.row(j))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!((c.at(i, j) - naive).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn self_distance_zero_diagonal() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let c = sq_euclidean(&a, &a);
+        for i in 0..6 {
+            assert!(c.at(i, i).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nonnegative() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(20, 3, 10.0, &mut rng);
+        let b = Matrix::randn(20, 3, 10.0, &mut rng);
+        let c = sq_euclidean(&a, &b);
+        assert!(c.data.iter().all(|&x| x >= 0.0));
+    }
+}

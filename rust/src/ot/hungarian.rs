@@ -1,0 +1,223 @@
+//! Exact minimum-cost assignment (Hungarian algorithm, Jonker–Volgenant
+//! style shortest-augmenting-path formulation, O(n^3)).
+//!
+//! This is the workhorse behind Proposition 4.1: for two uniform discrete
+//! distributions with equal support size the optimal transport plan is a
+//! permutation (Peyré–Cuturi Prop. 2.1), so `W2^2` and the alignment `T_k`
+//! reduce to one assignment solve on the squared-Euclidean cost matrix.
+
+use crate::tensor::Matrix;
+
+/// Solution of an assignment problem.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// `row_to_col[i] = j` — row i is matched to column j.
+    pub row_to_col: Vec<usize>,
+    /// Total cost of the matching.
+    pub cost: f64,
+}
+
+impl Assignment {
+    /// Inverse mapping: `col_to_row[j] = i`.
+    pub fn col_to_row(&self) -> Vec<usize> {
+        let mut inv = vec![usize::MAX; self.row_to_col.len()];
+        for (i, &j) in self.row_to_col.iter().enumerate() {
+            inv[j] = i;
+        }
+        inv
+    }
+}
+
+/// Solve the square min-cost assignment problem for `cost` (n×n).
+///
+/// Classic potentials formulation (e-maxx / KACTL): for each row, grow an
+/// alternating tree of tight edges via Dijkstra-like scans until an
+/// unmatched column is reached, then augment.
+pub fn solve(cost: &Matrix) -> Assignment {
+    assert_eq!(cost.rows, cost.cols, "assignment requires a square cost matrix");
+    let n = cost.rows;
+    if n == 0 {
+        return Assignment { row_to_col: vec![], cost: 0.0 };
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-based arrays; p[j] = row matched to column j (0 = none).
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            let row = cost.row(i0 - 1);
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = row[j - 1] as f64 - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut row_to_col = vec![usize::MAX; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            row_to_col[p[j] - 1] = j - 1;
+        }
+    }
+    let total: f64 = row_to_col
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| cost.at(i, j) as f64)
+        .sum();
+    Assignment { row_to_col, cost: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Brute-force minimum over all permutations (for n <= 8).
+    fn brute_force(cost: &Matrix) -> f64 {
+        fn rec(cost: &Matrix, row: usize, used: &mut Vec<bool>, acc: f64, best: &mut f64) {
+            if row == cost.rows {
+                *best = best.min(acc);
+                return;
+            }
+            if acc >= *best {
+                return;
+            }
+            for j in 0..cost.cols {
+                if !used[j] {
+                    used[j] = true;
+                    rec(cost, row + 1, used, acc + cost.at(row, j) as f64, best);
+                    used[j] = false;
+                }
+            }
+        }
+        let mut best = f64::INFINITY;
+        rec(cost, 0, &mut vec![false; cost.cols], 0.0, &mut best);
+        best
+    }
+
+    #[test]
+    fn trivial_identity() {
+        // Diagonal is clearly optimal.
+        let c = Matrix::from_fn(4, 4, |i, j| if i == j { 0.0 } else { 10.0 });
+        let a = solve(&c);
+        assert_eq!(a.row_to_col, vec![0, 1, 2, 3]);
+        assert_eq!(a.cost, 0.0);
+    }
+
+    #[test]
+    fn known_small_case() {
+        let c = Matrix::from_vec(3, 3, vec![4.0, 1.0, 3.0, 2.0, 0.0, 5.0, 3.0, 2.0, 2.0]);
+        let a = solve(&c);
+        assert!((a.cost - 5.0).abs() < 1e-9, "cost={}", a.cost);
+    }
+
+    #[test]
+    fn matches_brute_force_randomly() {
+        let mut rng = Rng::new(42);
+        for trial in 0..30 {
+            let n = 2 + rng.below(6);
+            let c = Matrix::from_fn(n, n, |_, _| rng.uniform() as f32 * 10.0);
+            let a = solve(&c);
+            let bf = brute_force(&c);
+            assert!(
+                (a.cost - bf).abs() < 1e-4,
+                "trial {trial}: hungarian={} brute={}",
+                a.cost,
+                bf
+            );
+        }
+    }
+
+    #[test]
+    fn output_is_permutation() {
+        let mut rng = Rng::new(7);
+        let c = Matrix::from_fn(50, 50, |_, _| rng.uniform() as f32);
+        let a = solve(&c);
+        let mut seen = vec![false; 50];
+        for &j in &a.row_to_col {
+            assert!(!seen[j], "column {j} assigned twice");
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn recovers_planted_permutation() {
+        // Cost = 0 on a planted permutation, positive elsewhere.
+        let mut rng = Rng::new(9);
+        let n = 32;
+        let planted = rng.permutation(n);
+        let c = Matrix::from_fn(n, n, |i, j| {
+            if planted[i] == j {
+                0.0
+            } else {
+                0.1 + rng.uniform() as f32
+            }
+        });
+        let a = solve(&c);
+        assert_eq!(a.row_to_col, planted);
+    }
+
+    #[test]
+    fn handles_negative_costs() {
+        let c = Matrix::from_vec(2, 2, vec![-5.0, 1.0, 1.0, -5.0]);
+        let a = solve(&c);
+        assert!((a.cost + 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn col_to_row_inverse() {
+        let mut rng = Rng::new(11);
+        let c = Matrix::from_fn(10, 10, |_, _| rng.uniform() as f32);
+        let a = solve(&c);
+        let inv = a.col_to_row();
+        for (i, &j) in a.row_to_col.iter().enumerate() {
+            assert_eq!(inv[j], i);
+        }
+    }
+
+    #[test]
+    fn empty_problem() {
+        let a = solve(&Matrix::zeros(0, 0));
+        assert!(a.row_to_col.is_empty());
+        assert_eq!(a.cost, 0.0);
+    }
+}

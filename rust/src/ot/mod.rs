@@ -1,0 +1,14 @@
+//! Optimal transport: cost matrices, exact assignment (Hungarian/JV),
+//! entropic Sinkhorn, and the free-support Wasserstein barycenter used to
+//! extract the ResMoE barycenter expert (§3.2, §4.2, Prop. 4.1).
+
+pub mod barycenter;
+pub mod cost;
+pub mod hungarian;
+pub mod sinkhorn;
+
+pub use barycenter::{
+    alignment_objective, free_support_barycenter, wasserstein2_sq, Barycenter, BarycenterConfig,
+    BarycenterInit,
+};
+pub use hungarian::Assignment;

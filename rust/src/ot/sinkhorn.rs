@@ -1,0 +1,164 @@
+//! Entropic optimal transport via log-domain Sinkhorn iterations.
+//!
+//! Used (a) as a differentiable/soft alternative to the exact assignment in
+//! the barycenter ablations and (b) to cross-check the Hungarian solver:
+//! as the regularization `eps → 0`, the Sinkhorn cost approaches the exact
+//! OT cost from above.
+
+use crate::tensor::Matrix;
+
+/// Result of a Sinkhorn solve.
+#[derive(Debug, Clone)]
+pub struct SinkhornPlan {
+    /// Transport plan (n×m), rows sum to `a`, columns to `b` (approximately).
+    pub plan: Matrix,
+    /// `<plan, cost>` — the regularized transport cost (without the entropy
+    /// term).
+    pub cost: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Log-domain Sinkhorn for marginals `a` (len n) and `b` (len m) under
+/// `cost` (n×m) with entropic regularization `eps`.
+pub fn sinkhorn(
+    cost: &Matrix,
+    a: &[f64],
+    b: &[f64],
+    eps: f64,
+    max_iter: usize,
+    tol: f64,
+) -> SinkhornPlan {
+    let (n, m) = cost.shape();
+    assert_eq!(a.len(), n);
+    assert_eq!(b.len(), m);
+    assert!(eps > 0.0);
+    let log_a: Vec<f64> = a.iter().map(|x| x.max(1e-300).ln()).collect();
+    let log_b: Vec<f64> = b.iter().map(|x| x.max(1e-300).ln()).collect();
+    // Scaled negative cost in f64.
+    let mk = |i: usize, j: usize| -(cost.at(i, j) as f64) / eps;
+    let mut f = vec![0.0f64; n]; // dual potentials / eps
+    let mut g = vec![0.0f64; m];
+    let mut iterations = 0;
+    let mut converged = false;
+    let logsumexp_row = |f_: &[f64], g_: &[f64], i: usize| {
+        let mut max = f64::NEG_INFINITY;
+        for j in 0..m {
+            max = max.max(mk(i, j) + g_[j]);
+        }
+        if max.is_infinite() {
+            return max;
+        }
+        let s: f64 = (0..m).map(|j| (mk(i, j) + g_[j] - max).exp()).sum();
+        let _ = f_;
+        max + s.ln()
+    };
+    let logsumexp_col = |f_: &[f64], j: usize| {
+        let mut max = f64::NEG_INFINITY;
+        for i in 0..n {
+            max = max.max(mk(i, j) + f_[i]);
+        }
+        if max.is_infinite() {
+            return max;
+        }
+        let s: f64 = (0..n).map(|i| (mk(i, j) + f_[i] - max).exp()).sum();
+        max + s.ln()
+    };
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // f update: f_i = log a_i - logsumexp_j (M_ij + g_j)
+        for i in 0..n {
+            f[i] = log_a[i] - logsumexp_row(&f, &g, i);
+        }
+        // g update.
+        let mut max_violation = 0.0f64;
+        for j in 0..m {
+            let new_g = log_b[j] - logsumexp_col(&f, j);
+            max_violation = max_violation.max((new_g - g[j]).abs());
+            g[j] = new_g;
+        }
+        if max_violation < tol {
+            converged = true;
+            break;
+        }
+    }
+    // Plan P_ij = exp(f_i + g_j + M_ij).
+    let mut plan = Matrix::zeros(n, m);
+    let mut total_cost = 0.0f64;
+    for i in 0..n {
+        for j in 0..m {
+            let p = (f[i] + g[j] + mk(i, j)).exp();
+            *plan.at_mut(i, j) = p as f32;
+            total_cost += p * cost.at(i, j) as f64;
+        }
+    }
+    SinkhornPlan { plan, cost: total_cost, iterations, converged }
+}
+
+/// Uniform-marginal convenience wrapper.
+pub fn sinkhorn_uniform(cost: &Matrix, eps: f64, max_iter: usize, tol: f64) -> SinkhornPlan {
+    let (n, m) = cost.shape();
+    let a = vec![1.0 / n as f64; n];
+    let b = vec![1.0 / m as f64; m];
+    sinkhorn(cost, &a, &b, eps, max_iter, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::{cost::sq_euclidean, hungarian};
+    use crate::util::Rng;
+
+    #[test]
+    fn marginals_are_respected() {
+        let mut rng = Rng::new(1);
+        let c = Matrix::from_fn(6, 6, |_, _| rng.uniform() as f32);
+        // Generous eps: the entropic contraction rate degrades like
+        // exp(-osc(C)/eps), so tiny eps converges impractically slowly.
+        let sp = sinkhorn_uniform(&c, 0.5, 5000, 1e-9);
+        assert!(sp.converged, "no convergence in {} iters", sp.iterations);
+        for i in 0..6 {
+            let row_sum: f32 = sp.plan.row(i).iter().sum();
+            assert!((row_sum - 1.0 / 6.0).abs() < 1e-5, "row {i}: {row_sum}");
+        }
+        for j in 0..6 {
+            let col_sum: f32 = sp.plan.col(j).iter().sum();
+            assert!((col_sum - 1.0 / 6.0).abs() < 1e-5, "col {j}: {col_sum}");
+        }
+    }
+
+    #[test]
+    fn approaches_exact_ot_as_eps_shrinks() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(8, 3, 1.0, &mut rng);
+        let b = Matrix::randn(8, 3, 1.0, &mut rng);
+        let c = sq_euclidean(&a, &b);
+        let exact = hungarian::solve(&c).cost / 8.0; // uniform masses 1/8
+        let loose = sinkhorn_uniform(&c, 1.0, 3000, 1e-11).cost;
+        let tight = sinkhorn_uniform(&c, 0.01, 6000, 1e-11).cost;
+        assert!(tight <= loose + 1e-9, "tight={tight} loose={loose}");
+        assert!(
+            (tight - exact).abs() < 0.05 * exact.max(1e-9) + 1e-3,
+            "sinkhorn={tight} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn plan_concentrates_on_cheap_edges() {
+        // Two points each, one obviously optimal matching.
+        let c = Matrix::from_vec(2, 2, vec![0.0, 10.0, 10.0, 0.0]);
+        let sp = sinkhorn_uniform(&c, 0.1, 2000, 1e-10);
+        assert!(sp.plan.at(0, 0) > 10.0 * sp.plan.at(0, 1));
+        assert!(sp.plan.at(1, 1) > 10.0 * sp.plan.at(1, 0));
+    }
+
+    #[test]
+    fn rectangular_problem() {
+        let mut rng = Rng::new(3);
+        let c = Matrix::from_fn(4, 7, |_, _| rng.uniform() as f32);
+        let sp = sinkhorn_uniform(&c, 0.1, 2000, 1e-9);
+        assert!(sp.converged);
+        let total: f32 = sp.plan.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,166 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output_shape: Vec<usize>,
+    /// Extra metadata (model name, batch, geometry...) as raw JSON.
+    pub meta: Json,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("input missing name"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("input missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?,
+        dtype: j
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .unwrap_or("float32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let artifacts = arts
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    file: dir.join(
+                        a.get("file")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("artifact missing file"))?,
+                    ),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect::<Result<_>>()?,
+                    output_shape: a
+                        .get("output")
+                        .and_then(|o| o.get("shape"))
+                        .and_then(|v| v.as_arr())
+                        .map(|dims| {
+                            dims.iter()
+                                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                                .collect::<Result<Vec<_>>>()
+                        })
+                        .transpose()?
+                        .unwrap_or_default(),
+                    meta: a.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// lm_score artifacts for a model, sorted by batch size ascending.
+    pub fn lm_score_batches(&self, model: &str) -> Vec<(usize, &ArtifactSpec)> {
+        let mut out: Vec<(usize, &ArtifactSpec)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "lm_score")
+            .filter(|a| a.meta.get("model").and_then(|m| m.as_str()) == Some(model))
+            .filter_map(|a| a.meta.get("batch").and_then(|b| b.as_usize()).map(|b| (b, a)))
+            .collect();
+        out.sort_by_key(|(b, _)| *b);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("resmoe-manifest-test");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[
+                {"name":"lm_score_m_b4","kind":"lm_score","model":"m","batch":4,
+                 "file":"a.hlo.txt",
+                 "inputs":[{"name":"tokens","shape":[4,16],"dtype":"int32"}],
+                 "output":{"shape":[4,16,32],"dtype":"float32"}},
+                {"name":"lm_score_m_b1","kind":"lm_score","model":"m","batch":1,
+                 "file":"b.hlo.txt","inputs":[],"output":{"shape":[1]}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("lm_score_m_b4").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 16]);
+        assert_eq!(a.inputs[0].dtype, "int32");
+        assert_eq!(a.output_shape, vec![4, 16, 32]);
+        let batches: Vec<usize> = m.lm_score_batches("m").iter().map(|(b, _)| *b).collect();
+        assert_eq!(batches, vec![1, 4]);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        let dir = std::env::temp_dir().join("resmoe-manifest-bad");
+        write_manifest(&dir, r#"{"artifacts": [{"name": 7}]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (L2 JAX model + L1 Pallas kernels) and executes
+//! them from the rust request path. Python never runs at serving time.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod scorer;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::{ArtifactInput, LoadedArtifact, PjrtRuntime};
+pub use scorer::LmScorer;

@@ -1,0 +1,101 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client via the `xla` crate (the pattern from /opt/xla-example/load_hlo).
+//!
+//! Python is never involved here — artifacts were lowered once at build
+//! time, and this module is the only place the request path touches XLA.
+
+use super::artifacts::ArtifactSpec;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::Path;
+
+/// A typed input buffer for an artifact call.
+pub enum ArtifactInput<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+impl ArtifactInput<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            ArtifactInput::F32(data, shape) => {
+                xla::Literal::vec1(data).reshape(shape).context("reshape f32 input")?
+            }
+            ArtifactInput::I32(data, shape) => {
+                xla::Literal::vec1(data).reshape(shape).context("reshape i32 input")?
+            }
+        })
+    }
+}
+
+/// The PJRT CPU runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact, ready to execute.
+pub struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<LoadedArtifact> {
+        self.load_file(&spec.file, spec.clone())
+    }
+
+    pub fn load_file(&self, path: &Path, spec: ArtifactSpec) -> Result<LoadedArtifact> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedArtifact { exe, spec })
+    }
+}
+
+impl LoadedArtifact {
+    /// Execute with the given inputs (manifest order) and return the f32
+    /// output buffer (artifacts are lowered with `return_tuple=True` and a
+    /// single element — unwrapped here).
+    pub fn execute_f32(&self, inputs: &[ArtifactInput]) -> Result<Vec<f32>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = literal.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+    }
+}
+
+/// Build the input list for an artifact from named f32 buffers plus the
+/// leading token buffer (used by the LM scorer).
+pub fn shape_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}

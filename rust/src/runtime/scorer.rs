@@ -1,0 +1,130 @@
+//! Batched LM scoring through the PJRT artifacts: the serving path that
+//! runs the JAX/Pallas-lowered model end-to-end from rust (tokens in,
+//! logits out), with weights fed once from the RMW1 checkpoint.
+
+use super::artifacts::Manifest;
+use super::pjrt::{shape_i64, ArtifactInput, LoadedArtifact, PjrtRuntime};
+use crate::moe::model_io;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::Path;
+
+/// A compiled lm_score artifact for one batch size, plus the weight buffers
+/// in manifest order.
+pub struct LmScorer {
+    /// (batch size, artifact), ascending.
+    artifacts: Vec<(usize, LoadedArtifact)>,
+    /// Weight buffers in manifest input order (after `tokens`): flattened
+    /// f32 data + shape.
+    weights: Vec<(Vec<f32>, Vec<i64>)>,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl LmScorer {
+    /// Load every lm_score artifact for `model_name` and bind the weights
+    /// from the RMW1 checkpoint.
+    pub fn load(
+        runtime: &PjrtRuntime,
+        manifest: &Manifest,
+        model_name: &str,
+        checkpoint_path: &Path,
+    ) -> Result<LmScorer> {
+        let specs = manifest.lm_score_batches(model_name);
+        ensure!(!specs.is_empty(), "no lm_score artifacts for {model_name}");
+        let ckpt = model_io::load_checkpoint(checkpoint_path)
+            .with_context(|| format!("checkpoint {}", checkpoint_path.display()))?;
+        // Weight order comes from the first artifact's manifest inputs
+        // (identical across batch sizes).
+        let first = specs[0].1;
+        let seq = first.inputs[0].shape[1];
+        let vocab = *first.output_shape.last().ok_or_else(|| anyhow!("no output shape"))?;
+        let mut weights = Vec::new();
+        for input in &first.inputs[1..] {
+            let tensor = ckpt
+                .tensors
+                .get(&input.name)
+                .ok_or_else(|| anyhow!("checkpoint missing tensor {}", input.name))?;
+            let expect: usize = input.shape.iter().product();
+            ensure!(
+                tensor.n_params() == expect,
+                "tensor {} has {} elements, manifest expects {:?}",
+                input.name,
+                tensor.n_params(),
+                input.shape
+            );
+            weights.push((tensor.data.clone(), shape_i64(&input.shape)));
+        }
+        let mut artifacts = Vec::new();
+        for (b, spec) in specs {
+            artifacts.push((b, runtime.load(spec)?));
+        }
+        Ok(LmScorer { artifacts, weights, seq, vocab })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.artifacts.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Smallest compiled batch size that fits `n` sequences (or the largest
+    /// available, for chunking).
+    fn pick_batch(&self, n: usize) -> usize {
+        for (b, _) in &self.artifacts {
+            if *b >= n {
+                return *b;
+            }
+        }
+        self.artifacts.last().unwrap().0
+    }
+
+    /// Score sequences: returns per-sequence logits [T × V] flattened.
+    /// Sequences are right-padded to `seq` with token 0 and processed in
+    /// padded batches; callers slice by true length.
+    pub fn score(&self, sequences: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(sequences.len());
+        let mut i = 0usize;
+        while i < sequences.len() {
+            let remaining = sequences.len() - i;
+            let b = self.pick_batch(remaining);
+            let chunk = &sequences[i..(i + b.min(remaining))];
+            let artifact = self
+                .artifacts
+                .iter()
+                .find(|(ab, _)| *ab == b)
+                .map(|(_, a)| a)
+                .unwrap();
+            let mut tokens = vec![0i32; b * self.seq];
+            for (j, seq) in chunk.iter().enumerate() {
+                ensure!(seq.len() <= self.seq, "sequence longer than artifact seq");
+                for (t, &tok) in seq.iter().enumerate() {
+                    tokens[j * self.seq + t] = tok as i32;
+                }
+            }
+            let mut inputs: Vec<ArtifactInput> =
+                vec![ArtifactInput::I32(&tokens, vec![b as i64, self.seq as i64])];
+            for (data, shape) in &self.weights {
+                inputs.push(ArtifactInput::F32(data, shape.clone()));
+            }
+            let logits = artifact.execute_f32(&inputs)?;
+            let per_seq = self.seq * self.vocab;
+            for j in 0..chunk.len() {
+                out.push(logits[j * per_seq..(j + 1) * per_seq].to_vec());
+            }
+            i += chunk.len();
+        }
+        Ok(out)
+    }
+
+    /// Mean next-token log-prob of one sequence via the PJRT path.
+    pub fn mean_log_prob(&self, tokens: &[u32]) -> Result<f64> {
+        ensure!(tokens.len() >= 2, "need at least 2 tokens");
+        let logits = &self.score(std::slice::from_ref(&tokens.to_vec()))?[0];
+        let v = self.vocab;
+        let mut total = 0.0f64;
+        for i in 0..tokens.len() - 1 {
+            let row = &logits[i * v..(i + 1) * v];
+            let lse = crate::util::stats::logsumexp(row);
+            total += (row[tokens[i + 1] as usize] - lse) as f64;
+        }
+        Ok(total / (tokens.len() - 1) as f64)
+    }
+}

@@ -1,0 +1,144 @@
+//! Dense linear algebra: Householder QR and helpers used by the SVD module
+//! and the analysis tooling. No external LAPACK is available offline.
+
+use super::matrix::Matrix;
+
+/// Thin QR decomposition via Householder reflections: `a = q @ r` with
+/// `q` (m×n, orthonormal columns) and `r` (n×n upper triangular). Requires
+/// m >= n.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires m >= n, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the reflector for column k from rows k..m.
+        let mut v: Vec<f32> = (k..m).map(|i| r.at(i, k)).collect();
+        let norm = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
+        if norm > 0.0 {
+            let sign = if v[0] >= 0.0 { 1.0 } else { -1.0 };
+            v[0] += sign * norm;
+            let vnorm_sq: f32 = v.iter().map(|x| x * x).sum();
+            if vnorm_sq > 0.0 {
+                // Apply H = I - 2 v v^T / (v^T v) to R[k.., k..].
+                for j in k..n {
+                    let mut dot = 0.0f32;
+                    for i in k..m {
+                        dot += v[i - k] * r.at(i, j);
+                    }
+                    let coef = 2.0 * dot / vnorm_sq;
+                    for i in k..m {
+                        *r.at_mut(i, j) -= coef * v[i - k];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Accumulate Q by applying the reflectors to the identity (thin: first n
+    // columns only).
+    let mut q = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm_sq: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i - k] * q.at(i, j);
+            }
+            let coef = 2.0 * dot / vnorm_sq;
+            for i in k..m {
+                *q.at_mut(i, j) -= coef * v[i - k];
+            }
+        }
+    }
+    // Zero the strictly-lower part of the top n×n of R.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *r_out.at_mut(i, j) = r.at(i, j);
+        }
+    }
+    (q, r_out)
+}
+
+/// Squared column norms of a matrix.
+pub fn col_norms_sq(a: &Matrix) -> Vec<f64> {
+    let mut out = vec![0.0f64; a.cols];
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for (c, &v) in row.iter().enumerate() {
+            out[c] += (v as f64) * (v as f64);
+        }
+    }
+    out
+}
+
+/// Row L2 norms.
+pub fn row_norms(a: &Matrix) -> Vec<f64> {
+    (0..a.rows)
+        .map(|r| a.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(20, 8, 1.0, &mut rng);
+        let (q, r) = qr_thin(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.sq_dist(&a) < 1e-6, "dist={}", qr.sq_dist(&a));
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(30, 10, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.matmul_tn(&q);
+        let eye = Matrix::identity(10);
+        assert!(qtq.sq_dist(&eye) < 1e-6, "dist={}", qtq.sq_dist(&eye));
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(12, 6, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_square_and_rank_deficient() {
+        // A rank-1 square matrix should still factor with small residual.
+        let u = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let v = Matrix::from_vec(1, 4, vec![1.0, 0.5, -1.0, 2.0]);
+        let a = u.matmul(&v);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).sq_dist(&a) < 1e-8);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 1.0]);
+        let cn = col_norms_sq(&a);
+        assert!((cn[0] - 25.0).abs() < 1e-9);
+        assert!((cn[1] - 1.0).abs() < 1e-9);
+        let rn = row_norms(&a);
+        assert!((rn[0] - 3.0).abs() < 1e-9);
+        assert!((rn[1] - (17.0f64).sqrt()).abs() < 1e-9);
+    }
+}

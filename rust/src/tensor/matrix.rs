@@ -1,0 +1,598 @@
+//! Dense row-major `f32` matrix — the arithmetic substrate for everything
+//! (no BLAS is available offline).
+//!
+//! The matmul kernel uses the i-k-j loop order (C[i,:] += A[i,k] * B[k,:]),
+//! which streams both C and B rows sequentially so LLVM auto-vectorizes the
+//! inner loop, plus row-parallelism over a scoped thread pool for large
+//! outputs. This is the L3 hot path profiled in EXPERIMENTS.md §Perf.
+
+use crate::util::threads::parallel_rows_mut;
+use crate::util::Rng;
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix[{}x{}]", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+/// Output rows below this threshold run single-threaded (thread spawn costs
+/// more than the work for tiny matrices in the decode hot loop).
+const PAR_MIN_FLOPS: usize = 1 << 20;
+
+impl Matrix {
+    // ------------------------------------------------------------ creation
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian init with the given std (the Switch-Transformer-style init).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    // ------------------------------------------------------------- access
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    // -------------------------------------------------------------- matmul
+    /// C = self @ other.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch {:?} @ {:?}", self.shape(), other.shape());
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        matmul_into(self, other, &mut out);
+        out
+    }
+
+    /// C = self @ other^T (other stored row-major; its rows are the columns
+    /// of the product).
+    ///
+    /// §Perf: the kernel processes FOUR output columns per pass with four
+    /// independent accumulators — a plain dot-product loop is a serial
+    /// reduction LLVM cannot vectorize, while the 4-wide form exposes ILP
+    /// and reuses each `a[kk]` load across four rows of `other` (~2×
+    /// measured on the expert up-projection shape, EXPERIMENTS.md §Perf).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
+        let (m, n, k) = (self.rows, other.rows, self.cols);
+        let mut out = Matrix::zeros(m, n);
+        let run = |r: usize, row_out: &mut [f32]| {
+            let a = self.row(r);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let b0 = other.row(j);
+                let b1 = other.row(j + 1);
+                let b2 = other.row(j + 2);
+                let b3 = other.row(j + 3);
+                let b4 = other.row(j + 4);
+                let b5 = other.row(j + 5);
+                let b6 = other.row(j + 6);
+                let b7 = other.row(j + 7);
+                let mut s = [0.0f32; 8];
+                for kk in 0..k {
+                    let av = a[kk];
+                    s[0] += av * b0[kk];
+                    s[1] += av * b1[kk];
+                    s[2] += av * b2[kk];
+                    s[3] += av * b3[kk];
+                    s[4] += av * b4[kk];
+                    s[5] += av * b5[kk];
+                    s[6] += av * b6[kk];
+                    s[7] += av * b7[kk];
+                }
+                row_out[j..j + 8].copy_from_slice(&s);
+                j += 8;
+            }
+            while j + 4 <= n {
+                let b0 = other.row(j);
+                let b1 = other.row(j + 1);
+                let b2 = other.row(j + 2);
+                let b3 = other.row(j + 3);
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for kk in 0..k {
+                    let av = a[kk];
+                    s0 += av * b0[kk];
+                    s1 += av * b1[kk];
+                    s2 += av * b2[kk];
+                    s3 += av * b3[kk];
+                }
+                row_out[j] = s0;
+                row_out[j + 1] = s1;
+                row_out[j + 2] = s2;
+                row_out[j + 3] = s3;
+                j += 4;
+            }
+            while j < n {
+                let b = other.row(j);
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[kk] * b[kk];
+                }
+                row_out[j] = acc;
+                j += 1;
+            }
+        };
+        if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+            parallel_rows_mut(&mut out.data, m, n, |r, row| run(r, row));
+        } else {
+            for r in 0..m {
+                let row = &mut out.data[r * n..(r + 1) * n];
+                run(r, row);
+            }
+        }
+        out
+    }
+
+    /// Reference (pre-optimization) form of [`Self::matmul_nt`]: one serial
+    /// dot product per output element. Kept for §Perf before/after
+    /// benchmarking and as a correctness cross-check in tests.
+    pub fn matmul_nt_naive(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
+        let (m, n, k) = (self.rows, other.rows, self.cols);
+        let mut out = Matrix::zeros(m, n);
+        for r in 0..m {
+            let a = self.row(r);
+            let row_out = out.row_mut(r);
+            for (j, out_v) in row_out.iter_mut().enumerate() {
+                let b = other.row(j);
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[kk] * b[kk];
+                }
+                *out_v = acc;
+            }
+        }
+        out
+    }
+
+    /// C = self^T @ other.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn dim mismatch");
+        let (m, n, k) = (self.cols, other.cols, self.rows);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = other.row(kk);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = self @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut acc = 0.0f32;
+                for (a, b) in row.iter().zip(x.iter()) {
+                    acc += a * b;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    // ---------------------------------------------------------- elementwise
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        let data = self.data.iter().map(|a| a * alpha).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        let data = self.data.iter().map(|&a| f(a)).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    // --------------------------------------------------------------- norms
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.frob_norm_sq().sqrt()
+    }
+
+    /// ||self - other||_F^2 — the paper's approximation-error building block.
+    pub fn sq_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    // ------------------------------------------------------------ reshaping
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Columns `[lo, hi)` as a new matrix.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Matrix::zeros(self.rows, hi - lo);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
+    /// Rows `[lo, hi)` as a new matrix (cheap contiguous copy).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Rows permuted: out[i, :] = self[perm[i], :]  (i.e. out = P @ self where
+    /// P[i, perm[i]] = 1 — the `T_k W_k` operation of the paper).
+    pub fn permute_rows(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (i, &src) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Columns permuted: out[:, j] = self[:, perm[j]] (= self @ P^T for the
+    /// same P as `permute_rows` — used for `W2_k T_k^T`).
+    pub fn permute_cols(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Mean of a set of equally shaped matrices.
+    pub fn mean_of(mats: &[&Matrix]) -> Matrix {
+        assert!(!mats.is_empty());
+        let mut out = Matrix::zeros(mats[0].rows, mats[0].cols);
+        for m in mats {
+            out.add_assign(m);
+        }
+        out.scale(1.0 / mats.len() as f32)
+    }
+}
+
+/// Core i-k-j matmul kernel with optional row-parallelism.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (m, n));
+    let kernel = |r: usize, out_row: &mut [f32]| {
+        out_row.fill(0.0);
+        let a_row = a.row(r);
+        for kk in 0..k {
+            let av = a_row[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b.data[kk * n..kk * n + n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                *o += av * bv;
+            }
+        }
+    };
+    if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_rows_mut(&mut out.data, m, n, |r, row| kernel(r, row));
+    } else {
+        for r in 0..m {
+            let row = &mut out.data[r * n..(r + 1) * n];
+            kernel(r, row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_eq(a: &Matrix, b: &Matrix, tol: f64) -> bool {
+        a.shape() == b.shape() && a.sq_dist(b).sqrt() < tol
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(7, 5, 1.0, &mut rng);
+        let i = Matrix::identity(5);
+        assert!(approx_eq(&a.matmul(&i), &a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(9, 6, 1.0, &mut rng);
+        let b = Matrix::randn(6, 11, 1.0, &mut rng);
+        let c0 = a.matmul(&b);
+        let c1 = a.matmul_nt(&b.transpose());
+        let c2 = a.transpose().matmul_tn(&b);
+        let c3 = a.matmul_nt_naive(&b.transpose());
+        assert!(approx_eq(&c0, &c1, 1e-4));
+        assert!(approx_eq(&c0, &c2, 1e-4));
+        assert!(approx_eq(&c0, &c3, 1e-4));
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial() {
+        // Large enough to trigger the parallel path.
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(128, 96, 1.0, &mut rng);
+        let b = Matrix::randn(96, 128, 1.0, &mut rng);
+        let big = a.matmul(&b);
+        // Serial reference via explicit loop.
+        let mut refm = Matrix::zeros(128, 128);
+        for i in 0..128 {
+            for j in 0..128 {
+                let mut acc = 0.0f32;
+                for kk in 0..96 {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                *refm.at_mut(i, j) = acc;
+            }
+        }
+        assert!(approx_eq(&big, &refm, 1e-3));
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(8, 5, 1.0, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(5, 1.0);
+        let xm = Matrix::from_vec(5, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..8 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(33, 65, 1.0, &mut rng);
+        assert!(approx_eq(&a.transpose().transpose(), &a, 1e-9));
+    }
+
+    #[test]
+    fn hcat_slice_roundtrip() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(4, 3, 1.0, &mut rng);
+        let b = Matrix::randn(4, 2, 1.0, &mut rng);
+        let cat = a.hcat(&b);
+        assert_eq!(cat.shape(), (4, 5));
+        assert!(approx_eq(&cat.slice_cols(0, 3), &a, 1e-9));
+        assert!(approx_eq(&cat.slice_cols(3, 5), &b, 1e-9));
+    }
+
+    #[test]
+    fn vcat_slice_rows_roundtrip() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(3, 4, 1.0, &mut rng);
+        let b = Matrix::randn(2, 4, 1.0, &mut rng);
+        let cat = a.vcat(&b);
+        assert!(approx_eq(&cat.slice_rows(0, 3), &a, 1e-9));
+        assert!(approx_eq(&cat.slice_rows(3, 5), &b, 1e-9));
+    }
+
+    #[test]
+    fn permute_rows_then_cols_is_conjugation() {
+        // (P A) then undoing with inverse perm restores A.
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(6, 6, 1.0, &mut rng);
+        let perm = rng.permutation(6);
+        let mut inv = vec![0usize; 6];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        let pa = a.permute_rows(&perm);
+        assert!(approx_eq(&pa.permute_rows(&inv), &a, 1e-9));
+    }
+
+    #[test]
+    fn permute_cols_matches_matmul_with_permutation_matrix() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(4, 5, 1.0, &mut rng);
+        let perm = rng.permutation(5);
+        // P with P[i, perm[i]] = 1; permute_cols(perm) must equal A @ P^T.
+        let mut p = Matrix::zeros(5, 5);
+        for (i, &j) in perm.iter().enumerate() {
+            *p.at_mut(i, j) = 1.0;
+        }
+        let via_mm = a.matmul(&p.transpose());
+        assert!(approx_eq(&a.permute_cols(&perm), &via_mm, 1e-6));
+    }
+
+    #[test]
+    fn permute_rows_matches_matmul_with_permutation_matrix() {
+        let mut rng = Rng::new(10);
+        let a = Matrix::randn(5, 4, 1.0, &mut rng);
+        let perm = rng.permutation(5);
+        let mut p = Matrix::zeros(5, 5);
+        for (i, &j) in perm.iter().enumerate() {
+            *p.at_mut(i, j) = 1.0;
+        }
+        let via_mm = p.matmul(&a);
+        assert!(approx_eq(&a.permute_rows(&perm), &via_mm, 1e-6));
+    }
+
+    #[test]
+    fn norms_and_distance() {
+        let a = Matrix::from_vec(1, 3, vec![3.0, 0.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-9);
+        let b = Matrix::zeros(1, 3);
+        assert!((a.sq_dist(&b) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_of_matrices() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        let m = Matrix::mean_of(&[&a, &b]);
+        assert_eq!(m.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dim mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,11 @@
+//! Numeric substrate: dense matrices, sparse formats (COO/CSR with
+//! narrow-index accounting per paper App. A.7), QR, and SVD.
+
+pub mod linalg;
+pub mod matrix;
+pub mod sparse;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use sparse::{Coo, Csr, IndexWidth};
+pub use svd::Svd;

@@ -1,0 +1,316 @@
+//! Sparse matrix storage for pruned residuals.
+//!
+//! The paper's Appendix A.7 observes that PyTorch's COO format with int64
+//! indices makes a 75 %-pruned Mixtral MLP *larger* than the dense original
+//! (840 MB vs 672 MB) and that int16 indices + CSR would shrink it to 252 MB.
+//! We implement exactly that spectrum so Table 10 can report real bytes:
+//!
+//! * [`Coo`] with configurable index width (16/32/64-bit),
+//! * [`Csr`] with u32 row pointers and 16/32-bit column indices,
+//! * dense round-trips, `A @ x`, `A^T x`, dense accumulation (`restore`).
+
+use super::matrix::Matrix;
+
+/// Index bit-width for sparse coordinates — the storage knob from App. A.7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexWidth {
+    U16,
+    U32,
+    U64,
+}
+
+impl IndexWidth {
+    pub fn bytes(self) -> usize {
+        match self {
+            IndexWidth::U16 => 2,
+            IndexWidth::U32 => 4,
+            IndexWidth::U64 => 8,
+        }
+    }
+
+    /// Narrowest width able to address `max_dim`.
+    pub fn narrowest_for(max_dim: usize) -> IndexWidth {
+        if max_dim <= u16::MAX as usize + 1 {
+            IndexWidth::U16
+        } else if max_dim <= u32::MAX as usize + 1 {
+            IndexWidth::U32
+        } else {
+            IndexWidth::U64
+        }
+    }
+}
+
+/// COO sparse matrix (sorted by (row, col); indices stored as u32 in memory,
+/// `index_width` only affects the *accounted/serialized* byte size).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+    pub index_width: IndexWidth,
+}
+
+impl Coo {
+    /// Extract nonzeros from a dense matrix.
+    pub fn from_dense(m: &Matrix, index_width: IndexWidth) -> Coo {
+        let mut row_idx = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let v = m.at(r, c);
+                if v != 0.0 {
+                    row_idx.push(r as u32);
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+        }
+        Coo { rows: m.rows, cols: m.cols, row_idx, col_idx, values, index_width }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.nnz() {
+            *out.at_mut(self.row_idx[i] as usize, self.col_idx[i] as usize) = self.values[i];
+        }
+        out
+    }
+
+    /// Storage bytes at the accounted index width (2 indices + 1 f32 per nnz).
+    pub fn memory_bytes(&self) -> usize {
+        self.nnz() * (2 * self.index_width.bytes() + 4)
+    }
+
+    /// dense += self (the ResMoE `W_ω + Δ_k` restore step).
+    pub fn add_to_dense(&self, dense: &mut Matrix) {
+        assert_eq!((dense.rows, dense.cols), (self.rows, self.cols));
+        for i in 0..self.nnz() {
+            *dense.at_mut(self.row_idx[i] as usize, self.col_idx[i] as usize) += self.values[i];
+        }
+    }
+}
+
+/// CSR sparse matrix: u32 row pointers, configurable column-index width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+    pub index_width: IndexWidth,
+}
+
+impl Csr {
+    pub fn from_dense(m: &Matrix, index_width: IndexWidth) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let v = m.at(r, c);
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr { rows: m.rows, cols: m.cols, row_ptr, col_idx, values, index_width }
+    }
+
+    pub fn from_coo(coo: &Coo) -> Csr {
+        Csr::from_dense(&coo.to_dense(), coo.index_width)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                *out.at_mut(r, self.col_idx[i] as usize) = self.values[i];
+            }
+        }
+        out
+    }
+
+    /// Storage bytes: col indices at accounted width + f32 values + u32 row
+    /// pointers (the CSR layout from App. A.7's 252 MB estimate).
+    pub fn memory_bytes(&self) -> usize {
+        self.nnz() * (self.index_width.bytes() + 4) + (self.rows + 1) * 4
+    }
+
+    /// y = self @ x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                acc += self.values[i] * x[self.col_idx[i] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// dense += self.
+    pub fn add_to_dense(&self, dense: &mut Matrix) {
+        assert_eq!((dense.rows, dense.cols), (self.rows, self.cols));
+        for r in 0..self.rows {
+            let row = dense.row_mut(r);
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                row[self.col_idx[i] as usize] += self.values[i];
+            }
+        }
+    }
+
+    /// C = self @ dense  (sparse-dense matmul; used when applying a pruned
+    /// residual directly to a batch of activations).
+    pub fn matmul_dense(&self, dense: &Matrix) -> Matrix {
+        assert_eq!(self.cols, dense.rows);
+        let mut out = Matrix::zeros(self.rows, dense.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let v = self.values[i];
+                let k = self.col_idx[i] as usize;
+                let src = dense.row(k);
+                let dst = out.row_mut(r);
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    *d += v * s;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| {
+            if rng.uniform() < density {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = sparse_random(17, 23, 0.2, &mut rng);
+        let coo = Coo::from_dense(&m, IndexWidth::U16);
+        assert_eq!(coo.to_dense(), m);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = sparse_random(31, 9, 0.3, &mut rng);
+        let csr = Csr::from_dense(&m, IndexWidth::U16);
+        assert_eq!(csr.to_dense(), m);
+        assert_eq!(csr.nnz(), Coo::from_dense(&m, IndexWidth::U16).nnz());
+    }
+
+    #[test]
+    fn coo_to_csr() {
+        let mut rng = Rng::new(3);
+        let m = sparse_random(12, 12, 0.25, &mut rng);
+        let coo = Coo::from_dense(&m, IndexWidth::U32);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.to_dense(), m);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(4);
+        let m = sparse_random(20, 15, 0.3, &mut rng);
+        let x = rng.normal_vec(15, 1.0);
+        let csr = Csr::from_dense(&m, IndexWidth::U16);
+        let y_sparse = csr.matvec(&x);
+        let y_dense = m.matvec(&x);
+        for (a, b) in y_sparse.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let mut rng = Rng::new(5);
+        let m = sparse_random(10, 8, 0.4, &mut rng);
+        let d = Matrix::randn(8, 6, 1.0, &mut rng);
+        let csr = Csr::from_dense(&m, IndexWidth::U16);
+        let got = csr.matmul_dense(&d);
+        let want = m.matmul(&d);
+        assert!(got.sq_dist(&want) < 1e-8);
+    }
+
+    #[test]
+    fn restore_add_to_dense() {
+        let mut rng = Rng::new(6);
+        let base = Matrix::randn(9, 9, 1.0, &mut rng);
+        let delta = sparse_random(9, 9, 0.2, &mut rng);
+        let coo = Coo::from_dense(&delta, IndexWidth::U16);
+        let mut restored = base.clone();
+        coo.add_to_dense(&mut restored);
+        assert!(restored.sq_dist(&base.add(&delta)) < 1e-10);
+
+        let csr = Csr::from_dense(&delta, IndexWidth::U16);
+        let mut restored2 = base.clone();
+        csr.add_to_dense(&mut restored2);
+        assert!(restored2.sq_dist(&base.add(&delta)) < 1e-10);
+    }
+
+    #[test]
+    fn paper_a7_memory_accounting() {
+        // Reproduce App. A.7's arithmetic shape: at 25 % density, COO+int64
+        // is LARGER than dense; CSR+int16 is much smaller.
+        let rows = 1024;
+        let cols = 1024;
+        let dense_bytes = rows * cols * 4;
+        let mut rng = Rng::new(7);
+        let m = sparse_random(rows, cols, 0.25, &mut rng);
+        let coo64 = Coo::from_dense(&m, IndexWidth::U64);
+        let csr16 = Csr::from_dense(&m, IndexWidth::U16);
+        assert!(
+            coo64.memory_bytes() > dense_bytes,
+            "COO int64 at 25% density should exceed dense: {} vs {}",
+            coo64.memory_bytes(),
+            dense_bytes
+        );
+        assert!(csr16.memory_bytes() < dense_bytes / 2);
+    }
+
+    #[test]
+    fn narrowest_index_width() {
+        assert_eq!(IndexWidth::narrowest_for(1000), IndexWidth::U16);
+        assert_eq!(IndexWidth::narrowest_for(65536), IndexWidth::U16);
+        assert_eq!(IndexWidth::narrowest_for(65537), IndexWidth::U32);
+        assert_eq!(IndexWidth::narrowest_for(1 << 40), IndexWidth::U64);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let m = Matrix::zeros(5, 5);
+        let coo = Coo::from_dense(&m, IndexWidth::U16);
+        assert_eq!(coo.nnz(), 0);
+        assert_eq!(coo.memory_bytes(), 0);
+        assert_eq!(coo.to_dense(), m);
+    }
+}

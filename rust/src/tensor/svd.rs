@@ -1,0 +1,264 @@
+//! Singular value decomposition.
+//!
+//! Two engines:
+//! * [`jacobi_svd`] — one-sided Jacobi rotations; exact (to f32 precision),
+//!   used for the residual design matrices (a few hundred columns).
+//! * [`randomized_svd`] — Halko-style subspace iteration for a cheap
+//!   rank-k sketch; used where only the top of the spectrum matters.
+//!
+//! Both return the thin factorization `a ≈ u @ diag(s) @ vt`.
+
+use super::linalg::qr_thin;
+use super::matrix::Matrix;
+use crate::util::Rng;
+
+/// Result of a (possibly truncated) SVD.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,  // m × k
+    pub s: Vec<f32>, // k, descending
+    pub vt: Matrix, // k × n
+}
+
+impl Svd {
+    /// Reconstruct `u @ diag(s) @ vt`.
+    pub fn reconstruct(&self) -> Matrix {
+        let mut us = self.u.clone();
+        for r in 0..us.rows {
+            let row = us.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v *= self.s[c];
+            }
+        }
+        us.matmul(&self.vt)
+    }
+
+    /// Keep only the top `k` components.
+    pub fn truncate(&self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        Svd {
+            u: self.u.slice_cols(0, k),
+            s: self.s[..k].to_vec(),
+            vt: self.vt.slice_rows(0, k),
+        }
+    }
+
+    /// Parameter count of the factored representation (paper App. A.4:
+    /// `m·k + k + k·n`).
+    pub fn n_params(&self) -> usize {
+        let k = self.s.len();
+        self.u.rows * k + k + k * self.vt.cols
+    }
+}
+
+/// Full thin SVD via one-sided Jacobi. Operates on the transposed problem
+/// when `rows < cols` so the rotation loop always runs over the smaller
+/// dimension's Gram matrix.
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    if a.rows < a.cols {
+        let t = jacobi_svd(&a.transpose());
+        // a = (a^T)^T = (U S V^T)^T = V S U^T
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    let (m, n) = a.shape();
+    // Work on columns of W = A (m >= n); accumulate V.
+    let mut w = a.clone();
+    let mut v = Matrix::identity(n);
+    let max_sweeps = 60;
+    let eps = 1e-10f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q.
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    let wp = w.at(i, p) as f64;
+                    let wq = w.at(i, q) as f64;
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    *w.at_mut(i, p) = cf * wp - sf * wq;
+                    *w.at_mut(i, q) = sf * wp + cf * wq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = cf * vp - sf * vq;
+                    *v.at_mut(i, q) = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    // Singular values = column norms of W; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|c| (0..m).map(|r| (w.at(r, c) as f64).powi(2)).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut s = vec![0.0f32; n];
+    let mut vt = Matrix::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        let norm = norms[old_c];
+        s[new_c] = norm as f32;
+        if norm > 1e-20 {
+            for r in 0..m {
+                *u.at_mut(r, new_c) = (w.at(r, old_c) as f64 / norm) as f32;
+            }
+        }
+        for r in 0..n {
+            *vt.at_mut(new_c, r) = v.at(r, old_c);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Randomized truncated SVD: rank `k`, `oversample` extra dims, `n_iter`
+/// power iterations (Halko, Martinsson, Tropp 2011).
+pub fn randomized_svd(a: &Matrix, k: usize, oversample: usize, n_iter: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = a.shape();
+    let l = (k + oversample).min(n.min(m));
+    // Range finder: Y = A Ω, orthonormalize, power-iterate.
+    let omega = Matrix::randn(n, l, 1.0, rng);
+    let mut q = qr_thin(&a.matmul(&omega)).0;
+    for _ in 0..n_iter {
+        let z = qr_thin(&a.matmul_tn(&q)).0; // A^T Q  → n × l
+        q = qr_thin(&a.matmul(&z)).0;
+    }
+    // Project: B = Q^T A (l × n); small exact SVD of B.
+    let b = q.matmul_tn(&a); // q^T @ a → l × n
+    let svd_b = jacobi_svd(&b);
+    let u = q.matmul(&svd_b.u);
+    Svd { u, s: svd_b.s, vt: svd_b.vt }.truncate(k)
+}
+
+/// Best rank-k approximation error (squared Frobenius) — used in tests and
+/// the ablation benches to sanity-check compressor optimality.
+pub fn rank_k_error_sq(a: &Matrix, k: usize) -> f64 {
+    let svd = jacobi_svd(a);
+    svd.s.iter().skip(k).map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruction_error(a: &Matrix, svd: &Svd) -> f64 {
+        svd.reconstruct().sq_dist(a)
+    }
+
+    #[test]
+    fn svd_exact_reconstruction() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(12, 7, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        assert!(reconstruction_error(&a, &svd) < 1e-6);
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(5, 13, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        assert_eq!(svd.u.shape(), (5, 5));
+        assert_eq!(svd.vt.shape(), (5, 13));
+        assert!(reconstruction_error(&a, &svd) < 1e-6);
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(10, 10, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(15, 8, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let utu = svd.u.matmul_tn(&svd.u);
+        let vvt = svd.vt.matmul_nt(&svd.vt);
+        assert!(utu.sq_dist(&Matrix::identity(8)) < 1e-6);
+        assert!(vvt.sq_dist(&Matrix::identity(8)) < 1e-6);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in a rectangular matrix.
+        let mut a = Matrix::zeros(5, 3);
+        *a.at_mut(0, 0) = 3.0;
+        *a.at_mut(1, 1) = 2.0;
+        *a.at_mut(2, 2) = 1.0;
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_error_matches_tail_energy() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let k = 5;
+        let err = svd.truncate(k).reconstruct().sq_dist(&a);
+        let tail: f64 = svd.s.iter().skip(k).map(|&x| (x as f64) * (x as f64)).sum();
+        assert!((err - tail).abs() / tail.max(1e-9) < 1e-3, "err={err} tail={tail}");
+    }
+
+    #[test]
+    fn randomized_close_to_exact_on_low_rank() {
+        let mut rng = Rng::new(6);
+        // Build an exactly rank-4 matrix.
+        let u = Matrix::randn(30, 4, 1.0, &mut rng);
+        let v = Matrix::randn(4, 25, 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let svd = randomized_svd(&a, 4, 4, 2, &mut rng);
+        assert!(reconstruction_error(&a, &svd) < 1e-4 * a.frob_norm_sq());
+    }
+
+    #[test]
+    fn n_params_formula() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(16, 9, 1.0, &mut rng);
+        let svd = jacobi_svd(&a).truncate(3);
+        assert_eq!(svd.n_params(), 16 * 3 + 3 + 3 * 9);
+    }
+
+    #[test]
+    fn rank_k_error_decreasing_in_k() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(14, 10, 1.0, &mut rng);
+        let errs: Vec<f64> = (0..=10).map(|k| rank_k_error_sq(&a, k)).collect();
+        for w in errs.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        assert!(errs[10] < 1e-6);
+        assert!((errs[0] - a.frob_norm_sq()).abs() < 1e-3 * a.frob_norm_sq());
+    }
+}

@@ -1,0 +1,185 @@
+//! In-tree benchmark runner (criterion is not in the offline vendor set).
+//!
+//! Every `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! [`time_fn`] / [`BenchRunner`] for timing and [`Table`] to print the
+//! corresponding paper table in aligned markdown. Reports are also dumped to
+//! `reports/*.json` for EXPERIMENTS.md bookkeeping.
+
+use super::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// Time a closure: warmup runs, then `iters` measured runs (seconds each).
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Named timing result with percentile helpers.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.samples, 50.0) * 1e3
+    }
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.samples, 99.0) * 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.summary().mean * 1e3
+    }
+}
+
+/// Collects timed benches and prints a summary block.
+#[derive(Default)]
+pub struct BenchRunner {
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        let samples = time_fn(warmup, iters, f);
+        let r = BenchResult { name: name.to_string(), samples };
+        eprintln!(
+            "  bench {:<40} mean {:>9.3} ms   p50 {:>9.3} ms   p99 {:>9.3} ms ({} iters)",
+            r.name,
+            r.mean_ms(),
+            r.p50_ms(),
+            r.p99_ms(),
+            r.samples.len()
+        );
+        self.results.push(r);
+    }
+}
+
+/// Aligned markdown table, mirroring the layout of a paper table.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i].saturating_sub(c.chars().count());
+                line.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Persist as JSON under `reports/` (best-effort; benches still succeed
+    /// when the directory cannot be created, e.g. read-only checkouts).
+    pub fn save_json(&self, stem: &str) {
+        use super::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+        ]);
+        if std::fs::create_dir_all("reports").is_ok() {
+            let _ = std::fs::write(format!("reports/{stem}.json"), doc.to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut n = 0usize;
+        let samples = time_fn(2, 5, || n += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn table_render_is_aligned() {
+        let mut t = Table::new("Demo", &["method", "score"]);
+        t.row(vec!["resmoe-up".into(), "1.0".into()]);
+        t.row(vec!["up".into(), "12.5".into()]);
+        let r = t.render();
+        assert!(r.contains("| method    | score |"));
+        assert!(r.contains("| resmoe-up | 1.0   |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

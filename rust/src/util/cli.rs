@@ -1,0 +1,124 @@
+//! Tiny argv parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `resmoe <subcommand> [--flag] [--key value] [positional...]`.
+//! Both `--key value` and `--key=value` are accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["compress", "model.bin", "out.bin"], &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("compress"));
+        assert_eq!(a.positional, vec!["model.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["eval", "--rate", "0.25", "--method=resmoe-up"], &[]);
+        assert_eq!(a.get("rate"), Some("0.25"));
+        assert_eq!(a.get("method"), Some("resmoe-up"));
+        assert_eq!(a.get_f64("rate", 0.0), 0.25);
+    }
+
+    #[test]
+    fn declared_flags_consume_no_value() {
+        let a = parse(&["serve", "--verbose", "model.bin"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["model.bin"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--fast"], &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--fast", "--k", "3"], &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"], &[]);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,44 @@
+//! Infrastructure substrate: deterministic RNG, stats, JSON, CLI parsing,
+//! bench runner, property-test harness, and thread-pool helpers.
+//!
+//! These exist in-tree because the sandbox's vendored crate set carries no
+//! rand / serde / clap / criterion / proptest / rayon; each module documents
+//! which external crate it replaces.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+
+pub use rng::Rng;
+
+/// Human-readable byte size (Table 10 formatting).
+pub fn format_bytes(bytes: usize) -> String {
+    const KB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(2048), "2.0 KB");
+        assert_eq!(format_bytes(5 * 1024 * 1024), "5.0 MB");
+        assert_eq!(format_bytes(3 * 1024 * 1024 * 1024), "3.00 GB");
+    }
+}

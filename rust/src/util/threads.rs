@@ -1,0 +1,125 @@
+//! Data-parallel helpers over `std::thread::scope` (rayon is not vendored).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and runs
+//! a worker per chunk; the degree of parallelism defaults to the number of
+//! physical cores and can be pinned through `RESMOE_THREADS` (used by the
+//! benches to report single- vs multi-thread numbers).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `RESMOE_THREADS` overrides).
+pub fn num_threads() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHE.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("RESMOE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    CACHE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
+/// `f` must be `Sync` (immutable captures) — output goes through interior
+/// mutability or per-chunk ownership (see `parallel_map_mut`).
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map over mutable disjoint row chunks: splits `data` (length
+/// `rows * row_len`) into per-row-chunk mutable slices processed in parallel.
+pub fn parallel_rows_mut<F>(data: &mut [f32], rows: usize, row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(data.len(), rows * row_len);
+    let workers = num_threads().min(rows.max(1));
+    if workers <= 1 || rows < 2 {
+        for (r, row) in data.chunks_mut(row_len.max(1)).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = chunk_rows.min(rows - row0);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            let f = &f;
+            let base = row0;
+            scope.spawn(move || {
+                for (i, row) in head.chunks_mut(row_len).enumerate() {
+                    f(base + i, row);
+                }
+            });
+            rest = tail;
+            row0 += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_range_is_fine() {
+        parallel_for_chunks(0, |_s, _e| {});
+    }
+
+    #[test]
+    fn rows_mut_processes_every_row() {
+        let rows = 37;
+        let row_len = 5;
+        let mut data = vec![0.0f32; rows * row_len];
+        parallel_rows_mut(&mut data, rows, row_len, |r, row| {
+            for v in row.iter_mut() {
+                *v = r as f32;
+            }
+        });
+        for r in 0..rows {
+            for c in 0..row_len {
+                assert_eq!(data[r * row_len + c], r as f32);
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Serving-coordinator integration: correctness of the cache-backed hot
+//! path under concurrency, memory-budget behaviour, and batching policy.
+
+use resmoe::compress::{compress_model, ResMoE};
+use resmoe::coordinator::{Engine, Request, Response, Server, ServerConfig};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::Rng;
+use std::time::Duration;
+
+fn model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::switch_mini(4);
+    cfg.d_model = 16;
+    cfg.d_inner = 32;
+    cfg.n_layers = 4;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 32;
+    cfg.max_seq = 40;
+    let mut rng = Rng::new(seed);
+    Model::random(&cfg, &mut rng)
+}
+
+fn compressed_engine(m: &Model, budget: usize, seed: u64) -> Engine {
+    let mut rng = Rng::new(seed);
+    let cm = compress_model(m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    Engine::compressed(m.clone(), cm.layers, budget)
+}
+
+#[test]
+fn concurrent_requests_equal_serial_answers() {
+    let m = model(1);
+    let engine = compressed_engine(&m, 1 << 22, 2);
+    // Serial ground truth.
+    let requests: Vec<Request> = (0..24)
+        .map(|i| Request::Score {
+            tokens: (0..10).map(|t| ((t * (i + 1)) % 32) as u32).collect(),
+        })
+        .collect();
+    let want: Vec<Response> = requests.iter().map(|r| engine.handle(r)).collect();
+    // Through the concurrent server.
+    let server = Server::start(
+        engine,
+        ServerConfig { batch_max: 4, batch_wait_us: 100, workers: 3, ..Default::default() },
+    );
+    let replies: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, want) in replies.into_iter().zip(want) {
+        let (got, _) = rx.recv().unwrap();
+        match (got, want) {
+            (Response::Score(a), Response::Score(b)) => {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tiny_cache_budget_still_correct_just_slower() {
+    let m = model(3);
+    let roomy = compressed_engine(&m, usize::MAX, 4);
+    let tiny = compressed_engine(&m, 1, 4); // thrashes: every access restores
+    let tokens: Vec<u32> = (0..12).map(|t| (t % 32) as u32).collect();
+    // Repeat the request: the roomy cache turns later passes into hits,
+    // the 1-byte cache keeps restoring.
+    let (mut a, mut b) = (Response::Error("".into()), Response::Error("".into()));
+    for _ in 0..3 {
+        a = roomy.handle(&Request::Score { tokens: tokens.clone() });
+        b = tiny.handle(&Request::Score { tokens: tokens.clone() });
+    }
+    match (a, b) {
+        (Response::Score(x), Response::Score(y)) => assert!((x - y).abs() < 1e-9),
+        other => panic!("{other:?}"),
+    }
+    let tm = tiny.cache_metrics().unwrap();
+    let rm = roomy.cache_metrics().unwrap();
+    assert!(tm.misses > rm.misses, "tiny budget must restore more often");
+    assert!(tm.evictions > 0);
+}
+
+#[test]
+fn cache_hit_rate_improves_across_repeated_traffic() {
+    let m = model(5);
+    let engine = compressed_engine(&m, usize::MAX, 6);
+    let tokens: Vec<u32> = (0..16).map(|t| (t % 32) as u32).collect();
+    for _ in 0..5 {
+        engine.handle(&Request::Score { tokens: tokens.clone() });
+    }
+    let cm = engine.cache_metrics().unwrap();
+    assert!(cm.hit_rate() > 0.5, "hit rate {:.2}", cm.hit_rate());
+}
+
+#[test]
+fn generate_and_classify_through_server() {
+    let mut m = model(7);
+    let mut rng = Rng::new(8);
+    m.heads.push((
+        "sst2".into(),
+        resmoe::Matrix::randn(2, m.cfg.d_model, 0.2, &mut rng),
+    ));
+    let engine = compressed_engine(&m, usize::MAX, 9);
+    let server = Server::start(engine, ServerConfig::default());
+    let g = server.submit(Request::Generate { prompt: vec![1, 2, 3], max_new: 5 });
+    let c = server.submit(Request::Classify { task: "sst2".into(), tokens: vec![4, 5, 6, 7] });
+    match g.recv().unwrap().0 {
+        Response::Generate(tokens) => assert_eq!(tokens.len(), 5),
+        other => panic!("{other:?}"),
+    }
+    match c.recv().unwrap().0 {
+        Response::Classify(label) => assert!(label < 2),
+        other => panic!("{other:?}"),
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.latencies_s.len(), 2);
+}
+
+#[test]
+fn batching_amortizes_under_burst() {
+    let m = model(10);
+    let engine = compressed_engine(&m, usize::MAX, 11);
+    let server = Server::start(
+        engine,
+        ServerConfig { batch_max: 8, batch_wait_us: 3000, workers: 1, ..Default::default() },
+    );
+    // Burst of 16 requests: with one worker and max batch 8, batches should
+    // average well above 1.
+    let replies: Vec<_> = (0..16)
+        .map(|i| {
+            server.submit(Request::Score {
+                tokens: (0..8).map(|t| ((t + i) % 32) as u32).collect(),
+            })
+        })
+        .collect();
+    for r in replies {
+        r.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let metrics = server.shutdown();
+    assert!(
+        metrics.mean_batch() > 1.5,
+        "mean batch {:.2} — batching not engaging",
+        metrics.mean_batch()
+    );
+}
+
+#[test]
+fn shutdown_drains_cleanly() {
+    let m = model(12);
+    let engine = Engine::dense(m);
+    let server = Server::start(engine, ServerConfig::default());
+    let rx = server.submit(Request::Score { tokens: vec![1, 2, 3, 4] });
+    let metrics = server.shutdown();
+    // The in-flight request completed before shutdown returned.
+    assert!(rx.try_recv().is_ok());
+    assert_eq!(metrics.latencies_s.len(), 1);
+    assert!(metrics.wall_s > 0.0);
+}

@@ -1,0 +1,88 @@
+//! Evaluation integration against the PRETRAINED checkpoints: the learned
+//! model must beat chance, and compression quality must order the same way
+//! the paper's Tables 2–3 do. Skips gracefully before `make artifacts`.
+
+use resmoe::compress::compress_model;
+use resmoe::eval::{self, method_by_name, Assets};
+use resmoe::moe::ModelConfig;
+use resmoe::Rng;
+
+/// Shortened validation slice — integration tests must stay fast even in
+/// dev builds; the benches use the full stream.
+fn valid_slice(assets: &Assets) -> &[u32] {
+    &assets.valid[..2048.min(assets.valid.len())]
+}
+
+fn pretrained_or_skip(name: &str) -> Option<Assets> {
+    let cfg = ModelConfig::by_name(name)?;
+    let assets = Assets::load(&cfg);
+    if !assets.pretrained {
+        eprintln!("SKIP eval integration: no pretrained {name} (run `make artifacts`)");
+        return None;
+    }
+    Some(assets)
+}
+
+#[test]
+fn pretrained_lm_beats_chance() {
+    let Some(assets) = pretrained_or_skip("mixtral-mini") else { return };
+    let ppl = eval::perplexity(&assets.model, valid_slice(&assets), 128);
+    // Uniform over 256 tokens would be PPL 256; the corpus is highly
+    // structured so a trained model lands far below.
+    assert!(ppl < 64.0, "pretrained PPL {ppl} suspiciously high");
+    let lam = eval::lambada_accuracy(&assets.model, &assets.lambada(60));
+    assert!(lam > 1.5 / 256.0 * 10.0, "lambada acc {lam} at chance level");
+}
+
+#[test]
+fn compression_preserves_most_quality_at_25pct() {
+    let Some(assets) = pretrained_or_skip("mixtral-mini") else { return };
+    let base_ppl = eval::perplexity(&assets.model, valid_slice(&assets), 128);
+    let mut rng = Rng::new(0);
+    let calib = assets.calibration_tokens(128);
+    let resmoe = method_by_name("resmoe-up").unwrap();
+    let cm = compress_model(&assets.model, resmoe.as_ref(), 0.25, 2, Some(&calib), &mut rng);
+    let comp_ppl = eval::perplexity(&cm.model, valid_slice(&assets), 128);
+    assert!(
+        comp_ppl < base_ppl * 3.0,
+        "resmoe-up PPL blew up: {base_ppl} -> {comp_ppl}"
+    );
+}
+
+#[test]
+fn table3_ordering_resmoe_beats_plain_up_and_svd() {
+    let Some(assets) = pretrained_or_skip("mixtral-mini") else { return };
+    let calib = assets.calibration_tokens(128);
+    let ppl_of = |name: &str| {
+        let comp = method_by_name(name).unwrap();
+        let mut rng = Rng::new(1);
+        let cm =
+            compress_model(&assets.model, comp.as_ref(), 0.25, 2, Some(&calib), &mut rng);
+        eval::perplexity(&cm.model, valid_slice(&assets), 128)
+    };
+    let resmoe_up = ppl_of("resmoe-up");
+    let up = ppl_of("up-concat");
+    let svd = ppl_of("svd-concat");
+    let resmoe_svd = ppl_of("resmoe-svd");
+    assert!(
+        resmoe_up <= up * 1.05,
+        "Table-3 shape violated: resmoe-up {resmoe_up} vs up {up}"
+    );
+    assert!(
+        resmoe_svd <= svd * 1.05,
+        "Table-3 shape violated: resmoe-svd {resmoe_svd} vs svd {svd}"
+    );
+}
+
+#[test]
+fn nlu_heads_beat_chance_on_switch() {
+    let Some(assets) = pretrained_or_skip("switch-mini-8") else { return };
+    for task in ["sst2", "mrpc", "cola"] {
+        let Some(acc) = eval::task_accuracy(&assets.model, task, &assets.nlu_test(task, 120))
+        else {
+            eprintln!("SKIP: no head for {task}");
+            continue;
+        };
+        assert!(acc > 0.55, "{task} head at chance: {acc}");
+    }
+}

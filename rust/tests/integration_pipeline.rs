@@ -1,0 +1,138 @@
+//! End-to-end compression pipeline integration: every registered method
+//! compresses a full model, restores, and evaluates; ResMoE's headline
+//! ordering claims hold on upcycled (Mixtral-like) experts.
+
+use resmoe::compress::{compress_model, ResMoE};
+use resmoe::eval::{method_by_name, ALL_METHODS};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::Rng;
+
+fn mixtral_like(seed: u64) -> (Model, ModelConfig, Rng) {
+    let mut cfg = ModelConfig::mixtral_mini();
+    cfg.d_model = 16;
+    cfg.d_inner = 56;
+    cfg.n_layers = 3;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 48;
+    cfg.n_experts = 4;
+    let mut rng = Rng::new(seed);
+    let m = Model::random(&cfg, &mut rng);
+    (m, cfg, rng)
+}
+
+#[test]
+fn every_method_compresses_and_restores() {
+    let (m, cfg, mut rng) = mixtral_like(1);
+    let calib: Vec<u32> = (0..32).map(|i| (i * 5 % cfg.vocab_size) as u32).collect();
+    let tokens: Vec<u32> = (0..24).map(|i| (i * 3 % cfg.vocab_size) as u32).collect();
+    for name in ALL_METHODS {
+        let comp = method_by_name(name).unwrap();
+        let cm = compress_model(&m, comp.as_ref(), 0.25, 2, Some(&calib), &mut rng);
+        assert_eq!(cm.layers.len(), 2, "{name}");
+        assert!(cm.report.mean_approx_error().is_finite(), "{name}");
+        assert!(
+            cm.report.total_params_after() < cm.report.total_params_before(),
+            "{name}: no reduction"
+        );
+        let logits = cm.model.forward(&tokens);
+        assert!(
+            logits.data.iter().all(|v| v.is_finite()),
+            "{name}: non-finite output"
+        );
+    }
+}
+
+#[test]
+fn resmoe_wins_table1_on_upcycled_experts() {
+    // Table 1's qualitative claim: ResMoE(UP) attains the lowest
+    // approximation error among all methods on Mixtral-style layers.
+    let (m, _, _) = mixtral_like(2);
+    let calib: Vec<u32> = (0..32).map(|i| (i % 60) as u32).collect();
+    let mut errors = Vec::new();
+    for name in ALL_METHODS {
+        let comp = method_by_name(name).unwrap();
+        let mut r = Rng::new(7);
+        let cm = compress_model(&m, comp.as_ref(), 0.25, 2, Some(&calib), &mut r);
+        errors.push((name, cm.report.mean_approx_error()));
+    }
+    let resmoe_up = errors.iter().find(|(n, _)| *n == "resmoe-up").unwrap().1;
+    for (name, err) in &errors {
+        if *name != "resmoe-up" {
+            assert!(
+                resmoe_up <= *err + 1e-12,
+                "resmoe-up ({resmoe_up:.5}) should beat {name} ({err:.5})"
+            );
+        }
+    }
+}
+
+#[test]
+fn rate_sweep_is_monotone_for_resmoe() {
+    // Figure 4's x-axis: error strictly improves with retention rate.
+    let (m, _, mut rng) = mixtral_like(3);
+    let mut prev = f64::INFINITY;
+    for rate in [0.10, 0.25, 0.50, 0.75] {
+        let cm = compress_model(&m, &ResMoE::up(), rate, 2, None, &mut rng);
+        let err = cm.report.mean_approx_error();
+        assert!(err <= prev + 1e-9, "rate {rate}: {err} > {prev}");
+        prev = err;
+    }
+}
+
+#[test]
+fn compressed_model_output_degrades_gracefully() {
+    // Relative output distortion should shrink as rate grows.
+    let (m, cfg, mut rng) = mixtral_like(4);
+    let tokens: Vec<u32> = (0..32).map(|i| (i * 7 % cfg.vocab_size) as u32).collect();
+    let base = m.forward(&tokens);
+    let mut dist = |rate: f64, rng: &mut Rng| {
+        let cm = compress_model(&m, &ResMoE::up(), rate, 3, None, rng);
+        cm.model.forward(&tokens).sq_dist(&base) / base.frob_norm_sq()
+    };
+    let lo = dist(0.1, &mut rng);
+    let hi = dist(0.6, &mut rng);
+    assert!(hi < lo, "rate 0.6 distortion {hi} should be below rate 0.1 {lo}");
+}
+
+#[test]
+fn shared_expert_is_never_compressed() {
+    // DeepSeek protocol (App. A.2): the shared expert stays intact.
+    let mut cfg = ModelConfig::deepseek_mini();
+    cfg.d_model = 16;
+    cfg.d_inner = 11;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 32;
+    cfg.n_experts = 8;
+    cfg.top_k = 2;
+    let mut rng = Rng::new(5);
+    let m = Model::random(&cfg, &mut rng);
+    let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    for (bi, _) in &cm.layers {
+        let resmoe::moe::Ffn::Moe(orig) = &m.blocks[*bi].ffn else { panic!() };
+        let resmoe::moe::Ffn::Moe(new) = &cm.model.blocks[*bi].ffn else { panic!() };
+        assert_eq!(
+            orig.shared_expert.as_ref().unwrap().w1,
+            new.shared_expert.as_ref().unwrap().w1
+        );
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_compressed_eval() {
+    // save → load → compress must equal compress directly.
+    let (m, _, mut rng) = mixtral_like(6);
+    let dir = std::env::temp_dir().join("resmoe-integ");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.rmw");
+    resmoe::moe::model_io::save_model(&m, &path).unwrap();
+    let m2 = resmoe::moe::model_io::load_model(&path).unwrap();
+    let cm1 = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut Rng::new(9));
+    let cm2 = compress_model(&m2, &ResMoE::up(), 0.25, 2, None, &mut Rng::new(9));
+    assert!(
+        (cm1.report.mean_approx_error() - cm2.report.mean_approx_error()).abs() < 1e-12
+    );
+    let _ = &mut rng;
+}

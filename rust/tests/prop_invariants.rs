@@ -1,0 +1,270 @@
+//! Property-based invariants (in-tree mini-prop harness; proptest is not in
+//! the offline vendor set). Focus: coordinator state invariants, compression
+//! restoration identities, and OT solver optimality — the "L3 proptest on
+//! routing/batching/state" requirement.
+
+use resmoe::baselines::quick_compress;
+use resmoe::compress::{CompressCtx, Compressor, ResMoE};
+use resmoe::coordinator::ExpertCache;
+use resmoe::eval::{method_by_name, ALL_METHODS};
+use resmoe::moe::{ExpertArch, ExpertWeights, MoeLayer};
+use resmoe::ot::{cost::sq_euclidean, hungarian, wasserstein2_sq};
+use resmoe::tensor::Matrix;
+use resmoe::util::prop::{check, gen, PropConfig};
+use resmoe::Rng;
+
+fn random_layer(rng: &mut Rng) -> MoeLayer {
+    let arch = if rng.below(2) == 0 { ExpertArch::Relu } else { ExpertArch::SwiGlu };
+    let p = 4 + rng.below(8);
+    let pi = 6 + rng.below(12);
+    let n = 2 + rng.below(4);
+    let top_k = 1 + rng.below(n.min(2));
+    let upcycled = rng.below(2) == 0;
+    MoeLayer::random(arch, p, pi, n, top_k, upcycled, false, rng)
+}
+
+#[test]
+fn prop_restored_layers_are_function_preserving_at_full_rate() {
+    // At rate 1.0 the ResMoE pipeline is exact restoration (Prop 4.1 +
+    // permutation invariance): outputs match to float tolerance for ANY
+    // random layer geometry.
+    check(
+        PropConfig { cases: 24, seed: 0xA11CE },
+        |rng| {
+            let layer = random_layer(rng);
+            let x = Matrix::randn(5, layer.experts[0].d_model(), 1.0, rng);
+            (layer, x)
+        },
+        |(layer, x)| {
+            let cl = quick_compress(&ResMoE::up(), layer, 1.0, 1);
+            let restored = cl.to_layer(layer);
+            let d = layer.forward(x, None).sq_dist(&restored.forward(x, None));
+            if d < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("function not preserved: sq dist {d}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_every_method_respects_monotone_error_in_rate() {
+    check(
+        PropConfig { cases: 10, seed: 0xB0B },
+        |rng| (random_layer(rng), ["resmoe-up", "up-concat", "svd-concat"][rng.below(3)]),
+        |(layer, method)| {
+            let comp = method_by_name(method).unwrap();
+            let lo = quick_compress(comp.as_ref(), layer, 0.15, 3).approx_error(layer);
+            let hi = quick_compress(comp.as_ref(), layer, 0.6, 3).approx_error(layer);
+            if hi <= lo + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{method}: error not monotone ({lo} -> {hi})"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_expert_map_and_aligns_are_well_formed() {
+    check(
+        PropConfig { cases: 20, seed: 0xC0DE },
+        |rng| {
+            let layer = random_layer(rng);
+            let name = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let seed = rng.next_u64();
+            (layer, name, seed)
+        },
+        |(layer, name, seed)| {
+            let comp = method_by_name(name).unwrap();
+            let mut rng = Rng::new(*seed);
+            let mut ctx = CompressCtx::new(0.3, &mut rng);
+            let calib = Matrix::randn(8, layer.experts[0].d_model(), 1.0, &mut Rng::new(1));
+            ctx.calib = Some(&calib);
+            let cl = comp.compress(layer, &mut ctx);
+            let n = layer.n_experts();
+            let pi = layer.experts[0].d_inner();
+            if cl.expert_map.len() != n {
+                return Err(format!("{name}: map len {}", cl.expert_map.len()));
+            }
+            if cl.expert_map.iter().any(|&m| m >= cl.experts.len()) {
+                return Err(format!("{name}: map out of range"));
+            }
+            if cl.aligns.len() != n {
+                return Err(format!("{name}: aligns len {}", cl.aligns.len()));
+            }
+            for a in &cl.aligns {
+                let mut s = a.clone();
+                s.sort_unstable();
+                if s != (0..pi).collect::<Vec<_>>() {
+                    return Err(format!("{name}: align not a permutation"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_never_exceeds_budget_and_stays_correct() {
+    // Random access sequences under random budgets: the cache's used bytes
+    // never exceed budget (except a single over-budget entry), and every
+    // returned expert equals direct restoration.
+    check(
+        PropConfig { cases: 16, seed: 0xCAFE },
+        |rng| {
+            let layer = random_layer(rng);
+            let seed = rng.next_u64();
+            let ops: Vec<usize> = (0..30).map(|_| rng.below(layer.n_experts())).collect();
+            let budget_experts = 1 + rng.below(3);
+            (layer, seed, ops, budget_experts)
+        },
+        |(layer, seed, ops, budget_experts)| {
+            let cl = quick_compress(&ResMoE::up(), layer, 0.3, *seed);
+            let expert_bytes = layer.experts[0].n_params() * 4;
+            let budget = budget_experts * expert_bytes;
+            let mut cache = ExpertCache::new(vec![(0, cl.clone())], budget);
+            for &slot in ops {
+                let got = cache.get(0, slot);
+                let want = cl.restore_expert(slot);
+                if *got != want {
+                    return Err(format!("slot {slot}: cached expert differs"));
+                }
+                if cache.resident_experts() > 1 && cache.used_bytes() > budget {
+                    return Err(format!(
+                        "over budget: {} > {budget} with {} resident",
+                        cache.used_bytes(),
+                        cache.resident_experts()
+                    ));
+                }
+            }
+            let m = &cache.metrics;
+            if m.hits + m.misses != ops.len() as u64 {
+                return Err("hit+miss accounting broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hungarian_beats_random_permutations() {
+    check(
+        PropConfig { cases: 30, seed: 0xD1CE },
+        |rng| {
+            let n = 2 + rng.below(10);
+            let cost = Matrix::from_fn(n, n, |_, _| rng.uniform() as f32 * 5.0);
+            let probe = rng.permutation(n);
+            (cost, probe)
+        },
+        |(cost, probe)| {
+            let opt = hungarian::solve(cost);
+            let probe_cost: f64 = probe
+                .iter()
+                .enumerate()
+                .map(|(i, &j)| cost.at(i, j) as f64)
+                .sum();
+            if opt.cost <= probe_cost + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("assignment {:.4} worse than random {probe_cost:.4}", opt.cost))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_w2_is_a_metric_on_point_clouds() {
+    // Symmetry + triangle inequality (sqrt of W2²) on small clouds.
+    check(
+        PropConfig { cases: 20, seed: 0xE7C },
+        |rng| {
+            let n = 3 + rng.below(6);
+            let d = 2 + rng.below(4);
+            (
+                Matrix::randn(n, d, 1.0, rng),
+                Matrix::randn(n, d, 1.0, rng),
+                Matrix::randn(n, d, 1.0, rng),
+            )
+        },
+        |(a, b, c)| {
+            let dab = wasserstein2_sq(a, b).sqrt();
+            let dba = wasserstein2_sq(b, a).sqrt();
+            if (dab - dba).abs() > 1e-5 {
+                return Err(format!("not symmetric: {dab} vs {dba}"));
+            }
+            let dac = wasserstein2_sq(a, c).sqrt();
+            let dcb = wasserstein2_sq(c, b).sqrt();
+            if dab > dac + dcb + 1e-5 {
+                return Err(format!("triangle violated: {dab} > {dac} + {dcb}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_design_matrix_roundtrip_any_geometry() {
+    check(
+        PropConfig { cases: 30, seed: 0xF00D },
+        |rng| {
+            let arch = if rng.below(2) == 0 { ExpertArch::Relu } else { ExpertArch::SwiGlu };
+            let p = 1 + rng.below(12);
+            let pi = 1 + rng.below(16);
+            let seed = rng.next_u64();
+            (arch, p, pi, seed)
+        },
+        |&(arch, p, pi, seed)| {
+            let mut rng = Rng::new(seed);
+            let e = ExpertWeights::random(arch, p, pi, &mut rng);
+            let back =
+                ExpertWeights::from_design_matrix(arch, p, &e.design_matrix(), e.b2.clone());
+            if back == e {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_barycenter_alignment_cost_equals_w2_alignment() {
+    // For any two clouds, the Hungarian alignment cost on the sq-euclidean
+    // matrix equals n·W2² (the Prop 4.1 bridge).
+    check(
+        PropConfig { cases: 20, seed: 0xABCD },
+        |rng| {
+            let n = 3 + rng.below(8);
+            let d = 2 + rng.below(5);
+            (Matrix::randn(n, d, 1.0, rng), Matrix::randn(n, d, 1.0, rng))
+        },
+        |(a, b)| {
+            let direct = hungarian::solve(&sq_euclidean(a, b)).cost;
+            let via_w2 = wasserstein2_sq(a, b) * a.rows as f64;
+            if (direct - via_w2).abs() < 1e-6 * direct.max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("{direct} vs {via_w2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_generators_are_seed_deterministic() {
+    check(
+        PropConfig { cases: 10, seed: 0x5EED },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let a = gen::f32_vec(&mut Rng::new(seed), 32, 1.0);
+            let b = gen::f32_vec(&mut Rng::new(seed), 32, 1.0);
+            if a == b {
+                Ok(())
+            } else {
+                Err("generator not deterministic".into())
+            }
+        },
+    );
+}
