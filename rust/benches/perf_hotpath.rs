@@ -1,14 +1,18 @@
 //! §Perf micro-benchmarks over the L3 hot paths: matmul kernels, the
 //! barycenter solver (ResMoE's joint solve vs OT-Fusion's layer-by-layer
 //! procedure — the paper's §5.5/B.2 ">4 days vs <1 day" claim in relative
-//! time), expert restoration, the restore cache, and end-to-end engine
-//! scoring. Results feed EXPERIMENTS.md §Perf.
+//! time), expert restoration vs the fused restore-free forward, the
+//! SpMM-vs-dense crossover as a function of residual density, the restore
+//! cache, and end-to-end engine scoring at warm/thrashed cache budgets.
+//! Results feed EXPERIMENTS.md §Perf and are persisted as `reports/
+//! BENCH_*.json` so successive PRs track a trajectory.
 
 use resmoe::baselines::OtFusion;
 use resmoe::compress::{compress_model, CompressCtx, Compressor, ResMoE};
 use resmoe::coordinator::{Engine, ExpertCache, Request};
 use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
-use resmoe::tensor::Matrix;
+use resmoe::tensor::matrix::matmul_nt_into;
+use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
 use resmoe::util::bench::{BenchRunner, Table};
 use resmoe::Rng;
 
@@ -71,6 +75,78 @@ fn main() {
         std::hint::black_box(cl_svd.restore_expert(3));
     });
 
+    // --- fused restore-free forward vs the restore-then-dense miss path.
+    // Same work as a cache miss serving a 96-token sub-batch.
+    let xs96 = Matrix::randn(96, 64, 1.0, &mut rng);
+    runner.run("miss fwd 96 tok: restore+dense (UP)", 2, iters * 5, || {
+        let e = cl.restore_expert(3);
+        std::hint::black_box(e.forward(&xs96));
+    });
+    let fused = cl.fused().expect("resmoe layer has a center");
+    runner.run("miss fwd 96 tok: fused (UP, incl shared)", 2, iters * 5, || {
+        let sh = fused.shared_act(&xs96);
+        std::hint::black_box(fused.forward_slot(3, &xs96, &sh));
+    });
+    // Shared term amortized over all 8 experts of the layer (the per-batch
+    // serving shape: one SharedAct, eight corrections).
+    runner.run("miss fwd 96 tok x8 experts: restore+dense (UP)", 1, iters.min(5), || {
+        for slot in 0..8 {
+            let e = cl.restore_expert(slot);
+            std::hint::black_box(e.forward(&xs96));
+        }
+    });
+    runner.run("miss fwd 96 tok x8 experts: fused (UP)", 1, iters.min(5), || {
+        let sh = fused.shared_act(&xs96);
+        for slot in 0..8 {
+            std::hint::black_box(fused.forward_slot(slot, &xs96, &sh));
+        }
+    });
+    let fused_svd = cl_svd.fused().expect("resmoe layer has a center");
+    runner.run("miss fwd 96 tok: restore+dense (SVD)", 2, iters * 5, || {
+        let e = cl_svd.restore_expert(3);
+        std::hint::black_box(e.forward(&xs96));
+    });
+    runner.run("miss fwd 96 tok: fused (SVD, incl shared)", 2, iters * 5, || {
+        let sh = fused_svd.shared_act(&xs96);
+        std::hint::black_box(fused_svd.forward_slot(3, &xs96, &sh));
+    });
+
+    // --- SpMM vs dense sweep over residual density (B=96, Δ1 is 224x64).
+    let mut spmm_table = Table::new(
+        "SpMM vs dense by residual density (out += x @ D^T, x 96x64, D 224x64)",
+        &["density", "dense (ms)", "spmm (ms)", "speedup"],
+    );
+    for density in [0.05, 0.15, 0.25] {
+        let mut drng = Rng::new(42);
+        let delta = Matrix::from_fn(224, 64, |_, _| {
+            if drng.uniform() < density {
+                drng.normal()
+            } else {
+                0.0
+            }
+        });
+        let csr = Csr::from_dense(&delta, IndexWidth::narrowest_for(delta.cols));
+        // Symmetric comparison: both kernels write (non-accumulating) into
+        // the same preallocated buffer — neither pays allocation.
+        let mut out = Matrix::zeros(96, 224);
+        runner.run(&format!("spmm sweep dense d={density}"), 2, iters * 5, || {
+            matmul_nt_into(&xs96, &delta, &mut out, false);
+            std::hint::black_box(&out);
+        });
+        let dense_ms = runner.results.last().unwrap().mean_ms();
+        runner.run(&format!("spmm sweep csr   d={density}"), 2, iters * 5, || {
+            csr.matmul_nt_into(&xs96, &mut out, false);
+            std::hint::black_box(&out);
+        });
+        let spmm_ms = runner.results.last().unwrap().mean_ms();
+        spmm_table.row(vec![
+            format!("{density:.2}"),
+            format!("{dense_ms:.4}"),
+            format!("{spmm_ms:.4}"),
+            format!("{:.2}x", dense_ms / spmm_ms.max(1e-9)),
+        ]);
+    }
+
     // --- cache under thrash vs warm.
     let expert_bytes = layer.experts[0].n_params() * 4;
     runner.run("cache get (warm, hit)", 1, iters * 10, || {
@@ -87,22 +163,42 @@ fn main() {
         }
     });
 
-    // --- end-to-end engine scoring.
+    // --- end-to-end engine scoring: warm cache, thrashed cache with the
+    // seed's restore-on-every-miss policy, and thrashed cache with the
+    // fused restore-free policy (the acceptance comparison).
     let cfg = ModelConfig::mixtral_mini();
     let mut mrng = Rng::new(3);
     let model = Model::random(&cfg, &mut mrng);
     let cm = compress_model(&model, &ResMoE::up(), 0.25, 4, None, &mut mrng);
-    let engine = Engine::compressed(model.clone(), cm.layers, usize::MAX);
+    let engine = Engine::compressed(model.clone(), cm.layers.clone(), usize::MAX);
     let tokens: Vec<u32> = (0..96).map(|i| (i * 7 % 256) as u32).collect();
-    runner.run("engine score 96 tokens (cached restore path)", 1, iters.min(5), || {
+    runner.run("engine score 96 tokens (warm cache)", 1, iters.min(5), || {
         std::hint::black_box(engine.handle(&Request::Score { tokens: tokens.clone() }));
     });
+    // Thrash: budget below ONE restored expert, so every lookup misses.
+    let thrash_budget = expert_bytes / 2;
+    let engine_restore = Engine::compressed(model.clone(), cm.layers.clone(), thrash_budget);
+    engine_restore.set_fused(false);
+    runner.run("engine score 96 tokens (thrashed, restore)", 1, iters.min(5), || {
+        std::hint::black_box(engine_restore.handle(&Request::Score { tokens: tokens.clone() }));
+    });
+    let engine_fused = Engine::compressed(model.clone(), cm.layers.clone(), thrash_budget);
+    runner.run("engine score 96 tokens (thrashed, fused)", 1, iters.min(5), || {
+        std::hint::black_box(engine_fused.handle(&Request::Score { tokens: tokens.clone() }));
+    });
+    if let Some(m) = engine_fused.cache_metrics() {
+        eprintln!(
+            "  thrashed-fused decisions: {} fused / {} restored ({} misses)",
+            m.fused_serves, m.restore_serves, m.misses
+        );
+    }
     let dense_engine = Engine::dense(model);
     runner.run("engine score 96 tokens (dense baseline)", 1, iters.min(5), || {
         std::hint::black_box(dense_engine.handle(&Request::Score { tokens: tokens.clone() }));
     });
 
-    // Summarize as a table for the reports directory.
+    // Summarize as tables for the reports directory. The BENCH_* stems are
+    // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
     for r in &runner.results {
         t.row(vec![
@@ -114,4 +210,7 @@ fn main() {
     }
     t.print();
     t.save_json("perf_hotpath");
+    t.save_json("BENCH_perf_hotpath");
+    spmm_table.print();
+    spmm_table.save_json("BENCH_spmm_density_sweep");
 }

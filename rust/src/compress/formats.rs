@@ -1,5 +1,5 @@
-//! Compressed layer representations and restoration (paper Alg. 1 output /
-//! Alg. 2 input).
+//! Compressed layer representations, restoration (paper Alg. 1 output /
+//! Alg. 2 input), and the **fused restore-free forward**.
 //!
 //! Every compression method in this repo — ResMoE and all baselines —
 //! produces a [`CompressedLayer`]: an optional shared *center* design
@@ -8,9 +8,21 @@
 //! expert count). Restoration (`W_ω + Δ_k`) yields dense [`ExpertWeights`]
 //! that drop into the original [`MoeLayer`] unchanged: the router never
 //! needs to know the layer was compressed.
+//!
+//! The fused path exploits the linearity of Alg. 2 instead of executing it:
+//! `x @ Ŵ_kᵀ = x @ W_ωᵀ + x @ Δ_kᵀ`. The center term is identical for
+//! every expert of the layer, so [`FusedLayer`] computes it ONCE per batch
+//! ([`SharedAct`]) and each expert only pays a per-weight residual
+//! correction at O(nnz) (CSR) or O(rank) (SVD) cost — no dense expert is
+//! ever materialized. This is the serving coordinator's cache-miss fast
+//! path; equivalence with restore-then-dense is property-tested in
+//! `rust/tests/prop_invariants.rs`.
 
+use crate::moe::expert::{add_bias_rows, silu, ExpertForward};
 use crate::moe::{ExpertArch, ExpertWeights, MoeLayer};
+use crate::tensor::matrix::{matmul_acc_into, matmul_nt_into};
 use crate::tensor::{Csr, Matrix, Svd};
+use std::sync::Arc;
 
 /// How one expert's stored matrix (full design matrix or residual) is kept.
 #[derive(Debug, Clone)]
@@ -172,6 +184,30 @@ impl CompressedLayer {
             .sum::<usize>()
     }
 
+    /// Build the fused (restore-free) forward state: the center expert in
+    /// dense form plus per-stored-expert residual pieces. `None` when the
+    /// layer has no shared center (direct methods store full matrices, so
+    /// "restoring" them is already a plain densification with nothing to
+    /// share). Cheap — O(stored bytes) — and cached by the serving
+    /// coordinator per block.
+    pub fn fused(&self) -> Option<FusedLayer> {
+        let base_dm = self.base.as_ref()?;
+        let p = self.d_model;
+        let base = ExpertWeights::from_design_matrix(self.arch, p, base_dm, vec![0.0; p]);
+        let experts = self.experts.iter().map(|e| e.fused(self.arch, p)).collect();
+        FusedLayer { base, experts, expert_map: self.expert_map.clone() }.into()
+    }
+
+    /// Restore-free forward for router slot `slot` — convenience entry that
+    /// rebuilds the fused state and the shared term for this one call. The
+    /// serving path holds a [`FusedLayer`] and shares [`SharedAct`] across
+    /// the layer's slots instead.
+    pub fn fused_forward(&self, slot: usize, x: &Matrix) -> Option<Matrix> {
+        let fl = self.fused()?;
+        let shared = fl.shared_act(x);
+        Some(fl.forward_slot(slot, x, &shared))
+    }
+
     /// The paper's Table-1 approximation error for this layer:
     /// `ε = 1/N Σ_k ||T_k W_k − Ŵ_k||_F²`, normalized by `pI`.
     pub fn approx_error(&self, original: &MoeLayer) -> f64 {
@@ -184,6 +220,312 @@ impl CompressedLayer {
             total += aligned.sq_dist(&restored);
         }
         total / n as f64 / pi as f64
+    }
+}
+
+// ----------------------------------------------------- fused forward path
+
+/// One weight-block slice of a compressed residual (Δ_k restricted to a
+/// design-matrix column range), kept in its structured form so the fused
+/// forward applies it without densification.
+#[derive(Debug, Clone)]
+pub enum FusedPiece {
+    /// No stored entries in this block (fully pruned residual).
+    Empty,
+    /// CSR slice with rebased column indices.
+    Sparse(Csr),
+    /// Low-rank factors: `u` (pI × r), `s` (r), `vt` (r × w) with `vt`
+    /// already sliced to the block's columns. `u`/`s` are Arc-shared by all
+    /// pieces of one expert — only the thin `vt` slice is per-piece.
+    LowRank { u: Arc<Matrix>, s: Arc<Vec<f32>>, vt: Matrix },
+    /// Dense slice (Dense residual reprs / merge baselines).
+    Dense(Matrix),
+}
+
+impl FusedPiece {
+    fn from_csr(c: &Csr, lo: usize, hi: usize) -> FusedPiece {
+        let s = c.slice_cols(lo, hi);
+        if s.nnz() == 0 {
+            FusedPiece::Empty
+        } else {
+            FusedPiece::Sparse(s)
+        }
+    }
+
+    fn from_svd(svd: &Svd, u: &Arc<Matrix>, s: &Arc<Vec<f32>>, lo: usize, hi: usize) -> FusedPiece {
+        if s.is_empty() {
+            return FusedPiece::Empty;
+        }
+        FusedPiece::LowRank {
+            u: Arc::clone(u),
+            s: Arc::clone(s),
+            vt: svd.vt.slice_cols(lo, hi),
+        }
+    }
+
+    fn from_dense(m: &Matrix, lo: usize, hi: usize) -> FusedPiece {
+        FusedPiece::Dense(m.slice_cols(lo, hi))
+    }
+
+    /// Bytes this piece stores, with Arc-shared low-rank factors excluded
+    /// (counted once at the expert level).
+    fn piece_bytes(&self) -> usize {
+        match self {
+            FusedPiece::Empty => 0,
+            FusedPiece::Sparse(c) => c.memory_bytes(),
+            FusedPiece::LowRank { vt, .. } => vt.n_params() * 4,
+            FusedPiece::Dense(m) => m.n_params() * 4,
+        }
+    }
+
+    /// out += x @ selfᵀ — up/gate correction (x: B × w, self: pI × w,
+    /// out: B × pI).
+    pub fn apply_nt_acc(&self, x: &Matrix, out: &mut Matrix) {
+        match self {
+            FusedPiece::Empty => {}
+            FusedPiece::Sparse(c) => c.matmul_nt_into(x, out, true),
+            FusedPiece::LowRank { u, s, vt } => {
+                // x @ (U S Vt)ᵀ = ((x @ Vtᵀ) · s) @ Uᵀ — two thin matmuls.
+                let mut t = x.matmul_nt(vt); // B × r
+                scale_cols(&mut t, s.as_slice());
+                matmul_nt_into(&t, u.as_ref(), out, true);
+            }
+            FusedPiece::Dense(m) => matmul_nt_into(x, m, out, true),
+        }
+    }
+
+    /// out += h @ self — down-projection correction (h: B × pI,
+    /// self: pI × w, out: B × w).
+    pub fn apply_acc(&self, h: &Matrix, out: &mut Matrix) {
+        match self {
+            FusedPiece::Empty => {}
+            FusedPiece::Sparse(c) => c.matmul_acc_into(h, out),
+            FusedPiece::LowRank { u, s, vt } => {
+                let mut t = h.matmul(u.as_ref()); // B × r
+                scale_cols(&mut t, s.as_slice());
+                matmul_acc_into(&t, vt, out);
+            }
+            FusedPiece::Dense(m) => matmul_acc_into(h, m, out),
+        }
+    }
+}
+
+fn scale_cols(m: &mut Matrix, s: &[f32]) {
+    debug_assert_eq!(m.cols, s.len());
+    for r in 0..m.rows {
+        for (v, &sv) in m.row_mut(r).iter_mut().zip(s) {
+            *v *= sv;
+        }
+    }
+}
+
+/// A compressed expert split once into per-weight residual pieces —
+/// everything the restore-free forward needs, at compressed size (low-rank
+/// U/s factors are shared across pieces, CSR pieces total the original
+/// nnz).
+#[derive(Debug, Clone)]
+pub struct FusedExpert {
+    /// Δ(W1): pI × p.
+    pub d_up: FusedPiece,
+    /// Δ(b1): pI.
+    pub db1: Vec<f32>,
+    /// Δ(W3) / Δ(b3) for gated experts.
+    pub d_gate: Option<FusedPiece>,
+    pub db3: Option<Vec<f32>>,
+    /// The `dm[:, w2_off..]` block, i.e. Δ(W2ᵀ) (pI × p) — applied as
+    /// `h @ piece`.
+    pub d_down: FusedPiece,
+    /// Full (uncompressed) output bias.
+    pub b2: Vec<f32>,
+}
+
+impl FusedExpert {
+    /// Bytes this split representation occupies (Arc-shared low-rank
+    /// factors counted once).
+    pub fn memory_bytes(&self) -> usize {
+        let mut bytes = self.d_up.piece_bytes()
+            + self.d_down.piece_bytes()
+            + self.d_gate.as_ref().map(|p| p.piece_bytes()).unwrap_or(0)
+            + (self.db1.len()
+                + self.db3.as_ref().map(|v| v.len()).unwrap_or(0)
+                + self.b2.len())
+                * 4;
+        // The shared U/s factors, once per expert.
+        if let FusedPiece::LowRank { u, s, .. } = &self.d_up {
+            bytes += (u.n_params() + s.len()) * 4;
+        } else if let FusedPiece::LowRank { u, s, .. } = &self.d_down {
+            bytes += (u.n_params() + s.len()) * 4;
+        }
+        bytes
+    }
+}
+
+impl CompressedExpert {
+    /// Split the stored residual into the per-weight pieces of the fused
+    /// forward. `p` is the model width (design-matrix column ranges follow
+    /// [`ExpertWeights::design_matrix`]).
+    pub fn fused(&self, arch: ExpertArch, p: usize) -> FusedExpert {
+        let gated = arch == ExpertArch::SwiGlu;
+        let w2_off = if gated { 2 * p + 2 } else { p + 1 };
+        match &self.residual {
+            ResidualRepr::SparseCsr(c) => FusedExpert {
+                d_up: FusedPiece::from_csr(c, 0, p),
+                db1: c.col_dense(p),
+                d_gate: gated.then(|| FusedPiece::from_csr(c, p + 1, 2 * p + 1)),
+                db3: gated.then(|| c.col_dense(2 * p + 1)),
+                d_down: FusedPiece::from_csr(c, w2_off, c.cols),
+                b2: self.b2.clone(),
+            },
+            ResidualRepr::LowRank(svd) => {
+                // One shared copy of the U/s factors for all three pieces.
+                let u = Arc::new(svd.u.clone());
+                let s = Arc::new(svd.s.clone());
+                FusedExpert {
+                    d_up: FusedPiece::from_svd(svd, &u, &s, 0, p),
+                    db1: svd_col(svd, p),
+                    d_gate: gated
+                        .then(|| FusedPiece::from_svd(svd, &u, &s, p + 1, 2 * p + 1)),
+                    db3: gated.then(|| svd_col(svd, 2 * p + 1)),
+                    d_down: FusedPiece::from_svd(svd, &u, &s, w2_off, svd.vt.cols),
+                    b2: self.b2.clone(),
+                }
+            }
+            ResidualRepr::Dense(m) => FusedExpert {
+                d_up: FusedPiece::from_dense(m, 0, p),
+                db1: m.col(p),
+                d_gate: gated.then(|| FusedPiece::from_dense(m, p + 1, 2 * p + 1)),
+                db3: gated.then(|| m.col(2 * p + 1)),
+                d_down: FusedPiece::from_dense(m, w2_off, m.cols),
+                b2: self.b2.clone(),
+            },
+        }
+    }
+}
+
+/// Column `c` of the reconstructed low-rank matrix: `U · (s ⊙ vt[:, c])`.
+fn svd_col(svd: &Svd, c: usize) -> Vec<f32> {
+    let r = svd.s.len();
+    (0..svd.u.rows)
+        .map(|i| {
+            let mut acc = 0.0f32;
+            for k in 0..r {
+                acc += svd.u.at(i, k) * svd.s[k] * svd.vt.at(k, c);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// The per-batch shared term of the fused forward: `x @ W_ω¹ᵀ + b_ω¹` (and
+/// the gate analog) — computed once per layer per batch and reused by every
+/// expert the router activates.
+#[derive(Debug, Clone)]
+pub struct SharedAct {
+    /// B × pI pre-activation from the center's up-projection.
+    pub a0: Matrix,
+    /// Gate analog for SwiGLU centers.
+    pub g0: Option<Matrix>,
+}
+
+impl SharedAct {
+    /// Rows `rows[i]` gathered into a new (len × pI) pair — aligns the
+    /// batch-level shared term with an expert's routed sub-batch.
+    pub fn gather(&self, rows: &[usize]) -> SharedAct {
+        SharedAct {
+            a0: gather_rows(&self.a0, rows),
+            g0: self.g0.as_ref().map(|g| gather_rows(g, rows)),
+        }
+    }
+}
+
+fn gather_rows(m: &Matrix, rows: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(rows.len(), m.cols);
+    for (i, &r) in rows.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(m.row(r));
+    }
+    out
+}
+
+/// Fused (restore-free) forward state for one compressed layer: the center
+/// `W_ω` as a dense expert (b2 = 0, shared by every slot) plus per-expert
+/// residual pieces.
+#[derive(Debug, Clone)]
+pub struct FusedLayer {
+    pub base: ExpertWeights,
+    pub experts: Vec<FusedExpert>,
+    pub expert_map: Vec<usize>,
+}
+
+impl FusedLayer {
+    /// Bytes of this fused state beyond the always-resident
+    /// [`CompressedLayer`]: the densified center expert plus the split
+    /// residual pieces. The serving cache reports (but does not budget)
+    /// this — see `coordinator/cache.rs`.
+    pub fn memory_bytes(&self) -> usize {
+        self.base.n_params() * 4
+            + self.experts.iter().map(|e| e.memory_bytes()).sum::<usize>()
+    }
+
+    /// The once-per-batch center term (see [`SharedAct`]).
+    pub fn shared_act(&self, x: &Matrix) -> SharedAct {
+        let mut a0 = x.matmul_nt(&self.base.w1);
+        add_bias_rows(&mut a0, &self.base.b1);
+        let g0 = self.base.w3.as_ref().map(|w3| {
+            let mut g = x.matmul_nt(w3);
+            add_bias_rows(&mut g, self.base.b3.as_ref().expect("gated center has b3"));
+            g
+        });
+        SharedAct { a0, g0 }
+    }
+
+    /// Forward router slot `slot` over `x` (B × p), given the shared center
+    /// term for the SAME rows. Numerically equals
+    /// `restore_expert(slot).forward(x)` up to f32 reassociation.
+    pub fn forward_slot(&self, slot: usize, x: &Matrix, shared: &SharedAct) -> Matrix {
+        let e = &self.experts[self.expert_map[slot]];
+        debug_assert_eq!(shared.a0.rows, x.rows);
+        let mut h = shared.a0.clone();
+        e.d_up.apply_nt_acc(x, &mut h);
+        add_bias_rows(&mut h, &e.db1);
+        match self.base.arch {
+            ExpertArch::Relu => {
+                for v in h.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            ExpertArch::SwiGlu => {
+                let mut g = shared.g0.clone().expect("gated layer has shared gate term");
+                if let Some(piece) = &e.d_gate {
+                    piece.apply_nt_acc(x, &mut g);
+                }
+                add_bias_rows(&mut g, e.db3.as_ref().expect("gated expert has db3"));
+                for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+                    *hv = silu(*hv) * gv;
+                }
+            }
+        }
+        // out = h @ (W_ω² + Δ²)ᵀ + b2, with the center part dense and the
+        // residual part structured.
+        let mut out = h.matmul_nt(&self.base.w2);
+        e.d_down.apply_acc(&h, &mut out);
+        add_bias_rows(&mut out, &e.b2);
+        out
+    }
+}
+
+/// A `(FusedLayer, slot)` pair viewed as a standalone expert: computes its
+/// own shared term per call. This is the [`ExpertForward`] face of the
+/// fused path for offline/equivalence use; the serving hot path shares
+/// [`SharedAct`] across a layer's slots instead.
+pub struct FusedSlot<'a> {
+    pub layer: &'a FusedLayer,
+    pub slot: usize,
+}
+
+impl ExpertForward for FusedSlot<'_> {
+    fn expert_forward(&self, x: &Matrix) -> Matrix {
+        let shared = self.layer.shared_act(x);
+        self.layer.forward_slot(self.slot, x, &shared)
     }
 }
 
@@ -323,6 +665,123 @@ mod tests {
             cl.n_params_stored(),
             2 * (16 * 17 + 8)
         );
+    }
+
+    #[test]
+    fn fused_forward_matches_restore_for_every_repr() {
+        use crate::compress::resmoe::ResMoE;
+        use crate::baselines::quick_compress;
+        let mut rng = Rng::new(7);
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let layer = MoeLayer::random(arch, 8, 16, 4, 2, true, false, &mut rng);
+            for comp in [ResMoE::up(), ResMoE::svd()] {
+                let cl = quick_compress(&comp, &layer, 0.3, 11);
+                let fl = cl.fused().expect("resmoe layers have a center");
+                let x = Matrix::randn(5, 8, 1.0, &mut rng);
+                let shared = fl.shared_act(&x);
+                for slot in 0..4 {
+                    let want = cl.restore_expert(slot).forward(&x);
+                    let got = fl.forward_slot(slot, &x, &shared);
+                    assert!(
+                        got.sq_dist(&want) < 1e-8,
+                        "{arch:?}/{}: slot {slot} dist {}",
+                        cl.method,
+                        got.sq_dist(&want)
+                    );
+                    // Convenience entry agrees too.
+                    let via = cl.fused_forward(slot, &x).unwrap();
+                    assert!(via.sq_dist(&want) < 1e-8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_slot_implements_expert_forward() {
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(8);
+        let layer = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &layer, 0.25, 3);
+        let fl = cl.fused().unwrap();
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        let via_trait = FusedSlot { layer: &fl, slot: 2 }.expert_forward(&x);
+        let dense = cl.restore_expert(2);
+        assert!(via_trait.sq_dist(&dense.expert_forward(&x)) < 1e-8);
+    }
+
+    #[test]
+    fn fused_handles_dense_residual_and_shared_gather() {
+        // Dense residual repr (base + dense Δ) exercises the FusedPiece::Dense
+        // arms; gather aligns the shared term with a routed sub-batch.
+        let mut rng = Rng::new(9);
+        let layer = test_layer(&mut rng);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let base = Matrix::mean_of(&dms.iter().collect::<Vec<_>>());
+        let experts = layer
+            .experts
+            .iter()
+            .zip(&dms)
+            .map(|(e, dm)| CompressedExpert {
+                accounted_params: dm.n_params(),
+                residual: ResidualRepr::Dense(dm.sub(&base)),
+                b2: e.b2.clone(),
+            })
+            .collect();
+        let cl = CompressedLayer {
+            method: "avg+dense".into(),
+            arch: ExpertArch::Relu,
+            d_model: 8,
+            base: Some(base),
+            experts,
+            expert_map: CompressedLayer::identity_map(4),
+            aligns: CompressedLayer::identity_aligns(4, 16),
+        };
+        let fl = cl.fused().unwrap();
+        let x = Matrix::randn(6, 8, 1.0, &mut rng);
+        let shared = fl.shared_act(&x);
+        let rows = vec![1usize, 4, 5];
+        let sub = {
+            let mut s = Matrix::zeros(3, 8);
+            for (i, &r) in rows.iter().enumerate() {
+                s.row_mut(i).copy_from_slice(x.row(r));
+            }
+            s
+        };
+        let got = fl.forward_slot(1, &sub, &shared.gather(&rows));
+        let want = cl.restore_expert(1).forward(&sub);
+        assert!(got.sq_dist(&want) < 1e-8);
+    }
+
+    #[test]
+    fn fused_empty_residual_equals_center_forward() {
+        // Rate 0 prunes every residual entry: the fused forward must reduce
+        // to the center expert plus the stored b2.
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(10);
+        let layer = MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &layer, 0.0, 4);
+        let fl = cl.fused().unwrap();
+        for e in &fl.experts {
+            assert!(matches!(e.d_up, FusedPiece::Empty));
+        }
+        let x = Matrix::randn(4, 8, 1.0, &mut rng);
+        let shared = fl.shared_act(&x);
+        for slot in 0..4 {
+            let want = cl.restore_expert(slot).forward(&x);
+            let got = fl.forward_slot(slot, &x, &shared);
+            assert!(got.sq_dist(&want) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn direct_methods_have_no_fused_path() {
+        let mut rng = Rng::new(11);
+        let layer = test_layer(&mut rng);
+        let cl = dense_identity_compression(&layer); // base: None
+        assert!(cl.fused().is_none());
+        assert!(cl.fused_forward(0, &Matrix::zeros(2, 8)).is_none());
     }
 
     #[test]

@@ -11,7 +11,10 @@ pub mod resmoe;
 pub mod svd_compress;
 pub mod wanda;
 
-pub use formats::{CompressedExpert, CompressedLayer, ResidualRepr};
+pub use formats::{
+    CompressedExpert, CompressedLayer, FusedExpert, FusedLayer, FusedPiece, FusedSlot,
+    ResidualRepr, SharedAct,
+};
 pub use resmoe::{CenterKind, ResMoE, ResidualKind};
 
 use crate::moe::{Ffn, Model, MoeLayer, RouterStats};

@@ -18,6 +18,8 @@ use super::{CompressCtx, Compressor};
 use crate::moe::{ExpertWeights, MoeLayer};
 use crate::ot::free_support_barycenter;
 use crate::tensor::{sparse::IndexWidth, Csr, Matrix};
+use crate::util::threads::parallel_map;
+use crate::util::Rng;
 
 /// ResMoE with `n_shards` independent centers (App. B.1 expert
 /// parallelism). Shard `s` owns router slots `{k : k mod n_shards == s}`,
@@ -37,15 +39,30 @@ impl Compressor for ShardedResMoE {
         let p = layer.experts[0].d_model();
         let shards = self.n_shards.clamp(1, n);
         let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
-        // Per-shard barycenters + aligned residuals.
+        // Per-shard barycenters + aligned residuals. Shards are independent
+        // solves, so they fan out over the persistent worker pool; each gets
+        // a child rng seeded from the ctx stream. The 1-shard case keeps
+        // using ctx.rng directly so it stays bit-identical to plain ResMoE.
+        let shard_members: Vec<Vec<usize>> =
+            (0..shards).map(|s| (0..n).filter(|k| k % shards == s).collect()).collect();
+        let barycenters = if shards == 1 {
+            let refs: Vec<&Matrix> = shard_members[0].iter().map(|&k| &dms[k]).collect();
+            vec![free_support_barycenter(&refs, &Default::default(), ctx.rng)]
+        } else {
+            let jobs: Vec<(&Vec<usize>, u64)> = shard_members
+                .iter()
+                .map(|m| (m, ctx.rng.next_u64()))
+                .collect();
+            parallel_map(jobs, |(members, seed)| {
+                let refs: Vec<&Matrix> = members.iter().map(|&k| &dms[k]).collect();
+                free_support_barycenter(&refs, &Default::default(), &mut Rng::new(seed))
+            })
+        };
         let mut aligns: Vec<Vec<usize>> = vec![(0..pi).collect(); n];
         let mut residuals: Vec<Option<Matrix>> = vec![None; n];
         let mut centers: Vec<Matrix> = Vec::with_capacity(shards);
         let mut shard_of = vec![0usize; n];
-        for s in 0..shards {
-            let members: Vec<usize> = (0..n).filter(|k| k % shards == s).collect();
-            let refs: Vec<&Matrix> = members.iter().map(|&k| &dms[k]).collect();
-            let bc = free_support_barycenter(&refs, &Default::default(), ctx.rng);
+        for (s, (members, bc)) in shard_members.iter().zip(barycenters).enumerate() {
             for (&k, perm) in members.iter().zip(&bc.perms) {
                 residuals[k] = Some(dms[k].permute_rows(perm).sub(&bc.support));
                 aligns[k] = perm.clone();

@@ -1,5 +1,6 @@
 //! Restored-expert LRU cache — the paper's Algorithm 2 ("reconstruct and
-//! dynamically load the compressed experts") as a serving-runtime feature.
+//! dynamically load the compressed experts") as a serving-runtime feature —
+//! plus the **fused-vs-restore cost model** for cache misses.
 //!
 //! Resident set: the per-layer barycenter `W_ω` lives inside the
 //! [`CompressedLayer`] (always in memory, small); restored dense experts
@@ -7,8 +8,16 @@
 //! budget. When the budget is smaller than the full restored model, the
 //! cache trades restore latency for memory — exactly the knob the paper's
 //! space-efficiency argument is about.
+//!
+//! A miss no longer has to restore: [`ExpertCache::serve`] can answer with
+//! the layer's [`FusedLayer`] instead, scoring tokens straight from the
+//! compressed representation. The policy (see `should_restore`): restoring
+//! pays a dense materialization once and makes every future hit free, so it
+//! wins for experts that will stay resident; the fused path wins when the
+//! budget cannot hold the expert anyway (thrash) or the expert is cold.
+//! Decisions are recorded in [`CacheMetrics`].
 
-use crate::compress::CompressedLayer;
+use crate::compress::{CompressedLayer, FusedLayer};
 use crate::moe::ExpertWeights;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -22,6 +31,10 @@ pub struct CacheMetrics {
     pub misses: u64,
     pub evictions: u64,
     pub restore_ns: u64,
+    /// Misses answered by restoring + caching a dense expert.
+    pub restore_serves: u64,
+    /// Misses answered restore-free through the fused path.
+    pub fused_serves: u64,
 }
 
 impl CacheMetrics {
@@ -35,6 +48,15 @@ impl CacheMetrics {
     }
 }
 
+/// How [`ExpertCache::serve`] answers a lookup.
+pub enum Serve {
+    /// Dense weights: a cache hit, or a miss the policy chose to restore
+    /// (and cache).
+    Dense(Arc<ExpertWeights>),
+    /// Restore-free: forward through [`FusedLayer::forward_slot`].
+    Fused(Arc<FusedLayer>),
+}
+
 struct Entry {
     expert: Arc<ExpertWeights>,
     bytes: usize,
@@ -46,6 +68,16 @@ struct Entry {
 pub struct ExpertCache {
     layers: HashMap<usize, CompressedLayer>,
     entries: HashMap<Key, Entry>,
+    /// Lazily built fused state per block (`None` = layer has no center).
+    fused: HashMap<usize, Option<Arc<FusedLayer>>>,
+    /// Decayed per-key access counts driving the restore-vs-fused choice.
+    heat: HashMap<Key, u32>,
+    /// serve() calls so far — the decay clock for `heat`. Deliberately NOT
+    /// the LRU `clock` (which get()/prefetch() also advance): decay must
+    /// tick every HEAT_DECAY_PERIOD serves regardless of interleaving.
+    serve_accesses: u64,
+    /// Master switch for the fused path (benches compare both policies).
+    fused_enabled: bool,
     budget_bytes: usize,
     used_bytes: usize,
     clock: u64,
@@ -56,16 +88,36 @@ fn expert_bytes(e: &ExpertWeights) -> usize {
     e.n_params() * 4
 }
 
+/// Accesses in the decay window after which a key counts as hot enough to
+/// evict colder residents for (see `should_restore`).
+const HOT_ACCESSES: u32 = 3;
+/// Halve every heat counter each time this many accesses elapse, so "hot"
+/// tracks the recent request mix rather than all of history.
+const HEAT_DECAY_PERIOD: u64 = 256;
+/// Sub-batches at least this large amortize a restore within the single
+/// call, so restore regardless of heat.
+const RESTORE_AMORTIZE_TOKENS: usize = 512;
+
 impl ExpertCache {
     pub fn new(layers: Vec<(usize, CompressedLayer)>, budget_bytes: usize) -> ExpertCache {
         ExpertCache {
             layers: layers.into_iter().collect(),
             entries: HashMap::new(),
+            fused: HashMap::new(),
+            heat: HashMap::new(),
+            serve_accesses: 0,
+            fused_enabled: true,
             budget_bytes,
             used_bytes: 0,
             clock: 0,
             metrics: CacheMetrics::default(),
         }
+    }
+
+    /// Enable/disable the fused serve path (`true` by default). With it off
+    /// every miss restores — the seed's behavior, kept for A/B benching.
+    pub fn set_fused_enabled(&mut self, enabled: bool) {
+        self.fused_enabled = enabled;
     }
 
     pub fn has_layer(&self, block: usize) -> bool {
@@ -81,20 +133,66 @@ impl ExpertCache {
         self.layers.values().map(|l| l.memory_bytes()).sum()
     }
 
+    /// Bytes of the lazily-built fused state (densified center expert +
+    /// split residual pieces per block that has served fused). This is
+    /// center-sized, per-layer — NOT per-expert — so it is reported here
+    /// rather than charged against the LRU budget, which governs the
+    /// per-expert restored set; a deployment sizing memory should add
+    /// `compressed_bytes + fused_bytes + budget`.
+    pub fn fused_bytes(&self) -> usize {
+        self.fused
+            .values()
+            .filter_map(|f| f.as_ref())
+            .map(|f| f.memory_bytes())
+            .sum()
+    }
+
     pub fn used_bytes(&self) -> usize {
         self.used_bytes
     }
 
-    /// Fetch (restoring if needed) the expert for `(block, slot)`.
+    /// Fetch (restoring if needed) the expert for `(block, slot)` — the
+    /// plain Algorithm-2 path: every miss restores and caches.
     pub fn get(&mut self, block: usize, slot: usize) -> Arc<ExpertWeights> {
         self.clock += 1;
-        let clock = self.clock;
-        if let Some(e) = self.entries.get_mut(&(block, slot)) {
-            e.last_used = clock;
-            self.metrics.hits += 1;
-            return e.expert.clone();
+        if let Some(e) = self.hit(block, slot) {
+            return e;
         }
         self.metrics.misses += 1;
+        self.restore_and_cache(block, slot)
+    }
+
+    /// Serve `(block, slot)` for a sub-batch of `batch_tokens` tokens,
+    /// choosing between the cached/restored dense expert and the
+    /// restore-free fused path per the cost model. Decisions land in
+    /// [`CacheMetrics::restore_serves`] / [`CacheMetrics::fused_serves`].
+    pub fn serve(&mut self, block: usize, slot: usize, batch_tokens: usize) -> Serve {
+        self.clock += 1;
+        self.bump_heat((block, slot));
+        if let Some(e) = self.hit(block, slot) {
+            return Serve::Dense(e);
+        }
+        self.metrics.misses += 1;
+        if self.fused_enabled && !self.should_restore(block, slot, batch_tokens) {
+            if let Some(fl) = self.fused_layer(block) {
+                self.metrics.fused_serves += 1;
+                return Serve::Fused(fl);
+            }
+        }
+        self.metrics.restore_serves += 1;
+        Serve::Dense(self.restore_and_cache(block, slot))
+    }
+
+    fn hit(&mut self, block: usize, slot: usize) -> Option<Arc<ExpertWeights>> {
+        let clock = self.clock;
+        let e = self.entries.get_mut(&(block, slot))?;
+        e.last_used = clock;
+        self.metrics.hits += 1;
+        Some(e.expert.clone())
+    }
+
+    fn restore_and_cache(&mut self, block: usize, slot: usize) -> Arc<ExpertWeights> {
+        let clock = self.clock;
         let t0 = std::time::Instant::now();
         let layer = self.layers.get(&block).expect("block not compressed");
         let restored = Arc::new(layer.restore_expert(slot));
@@ -118,6 +216,71 @@ impl ExpertCache {
             Entry { expert: restored.clone(), bytes, last_used: clock },
         );
         restored
+    }
+
+    /// The restore-vs-fused cost model (EXPERIMENTS.md §Perf). Restoring
+    /// materializes `pI × D` floats once and makes every later hit free;
+    /// fused forwards pay O(nnz)/O(rank) extra per call but never touch the
+    /// budget. Restore therefore wins iff the dense expert is likely to be
+    /// resident when the next request for it arrives — or the current
+    /// sub-batch alone amortizes the materialization.
+    fn should_restore(&self, block: usize, slot: usize, batch_tokens: usize) -> bool {
+        // 1. A large enough sub-batch amortizes the restore immediately.
+        if batch_tokens >= RESTORE_AMORTIZE_TOKENS {
+            return true;
+        }
+        let bytes = self.restored_bytes(block, slot);
+        // 2. Fits without evicting anyone → it will stick; restore.
+        if self.used_bytes + bytes <= self.budget_bytes {
+            return true;
+        }
+        // 3. Larger than the whole budget → guaranteed thrash; stay fused.
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        // 4. Tight budget: evict colder residents only for keys with shown
+        //    reuse — a cold expert would displace a hotter one just to be
+        //    displaced right back.
+        self.heat.get(&(block, slot)).copied().unwrap_or(0) >= HOT_ACCESSES
+    }
+
+    /// Bytes a restored dense expert for `(block, slot)` would occupy
+    /// (pI·D design params + b2), computed without restoring.
+    fn restored_bytes(&self, block: usize, slot: usize) -> usize {
+        let layer = self.layers.get(&block).expect("block not compressed");
+        let e = &layer.experts[layer.expert_map[slot]];
+        let (pi, d) = match &e.residual {
+            crate::compress::ResidualRepr::Dense(m) => (m.rows, m.cols),
+            crate::compress::ResidualRepr::SparseCsr(c) => (c.rows, c.cols),
+            crate::compress::ResidualRepr::LowRank(s) => (s.u.rows, s.vt.cols),
+        };
+        (pi * d + e.b2.len()) * 4
+    }
+
+    fn fused_layer(&mut self, block: usize) -> Option<Arc<FusedLayer>> {
+        if let Some(f) = self.fused.get(&block) {
+            return f.clone();
+        }
+        let built = self
+            .layers
+            .get(&block)
+            .expect("block not compressed")
+            .fused()
+            .map(Arc::new);
+        self.fused.insert(block, built.clone());
+        built
+    }
+
+    fn bump_heat(&mut self, key: Key) {
+        self.serve_accesses += 1;
+        let h = self.heat.entry(key).or_insert(0);
+        *h = h.saturating_add(1);
+        if self.serve_accesses % HEAT_DECAY_PERIOD == 0 {
+            for v in self.heat.values_mut() {
+                *v /= 2;
+            }
+            self.heat.retain(|_, v| *v > 0);
+        }
     }
 
     /// Pre-warm the cache for the given (block, slot) pairs (the scheduler
@@ -215,6 +378,91 @@ mod tests {
         assert_eq!(cache.resident_experts(), 2);
         cache.get(2, 0);
         assert_eq!(cache.metrics.hits, 1);
+    }
+
+    #[test]
+    fn serve_restores_when_budget_has_room() {
+        let (_, cl) = compressed(7);
+        let mut cache = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        let Serve::Dense(e) = cache.serve(0, 1, 4) else {
+            panic!("room in budget must restore")
+        };
+        assert_eq!(*e, cl.restore_expert(1));
+        assert_eq!(cache.metrics.restore_serves, 1);
+        assert_eq!(cache.resident_experts(), 1);
+        // Second serve is a hit, not a new decision.
+        let Serve::Dense(_) = cache.serve(0, 1, 4) else { panic!("hit") };
+        assert_eq!(cache.metrics.hits, 1);
+        assert_eq!(cache.metrics.restore_serves, 1);
+    }
+
+    #[test]
+    fn serve_goes_fused_under_thrash_budget() {
+        // Budget below one restored expert: every miss must take the fused
+        // path and never evict/restore.
+        let (_, cl) = compressed(8);
+        let budget = one_expert_bytes() / 2;
+        let mut cache = ExpertCache::new(vec![(0, cl.clone())], budget);
+        let mut rng = Rng::new(1);
+        let x = crate::tensor::Matrix::randn(5, 8, 1.0, &mut rng);
+        for slot in [0usize, 1, 2, 3, 0, 1] {
+            match cache.serve(0, slot, x.rows) {
+                Serve::Fused(fl) => {
+                    let shared = fl.shared_act(&x);
+                    let got = fl.forward_slot(slot, &x, &shared);
+                    let want = cl.restore_expert(slot).forward(&x);
+                    assert!(got.sq_dist(&want) < 1e-8, "slot {slot}");
+                }
+                Serve::Dense(_) => panic!("thrash budget must serve fused"),
+            }
+        }
+        assert_eq!(cache.metrics.fused_serves, 6);
+        assert_eq!(cache.metrics.restore_serves, 0);
+        assert_eq!(cache.metrics.evictions, 0);
+        assert_eq!(cache.used_bytes(), 0);
+        // The fused state is accounted: roughly one densified center plus
+        // the compressed residual pieces, and it is reported, not budgeted.
+        let fb = cache.fused_bytes();
+        assert!(fb >= one_expert_bytes(), "fused state includes the dense center: {fb}");
+        assert!(fb < 4 * one_expert_bytes(), "fused state must stay near compressed size: {fb}");
+    }
+
+    #[test]
+    fn serve_restores_hot_keys_on_tight_budget() {
+        // Budget for one expert, two slots competing: the repeatedly-hit
+        // slot earns a restore after HOT_ACCESSES, the cold one stays fused.
+        let (_, cl) = compressed(9);
+        let mut cache = ExpertCache::new(vec![(0, cl)], one_expert_bytes());
+        // Fill the single cache slot with expert 3.
+        assert!(matches!(cache.serve(0, 3, 1), Serve::Dense(_)));
+        // Expert 0 is cold: first misses go fused...
+        assert!(matches!(cache.serve(0, 0, 1), Serve::Fused(_)));
+        assert!(matches!(cache.serve(0, 0, 1), Serve::Fused(_)));
+        // ...until its heat crosses the threshold and it earns the eviction.
+        assert!(matches!(cache.serve(0, 0, 1), Serve::Dense(_)));
+        assert_eq!(cache.metrics.evictions, 1);
+        assert_eq!(cache.metrics.fused_serves, 2);
+        assert_eq!(cache.metrics.restore_serves, 2);
+    }
+
+    #[test]
+    fn serve_big_batches_restore_even_when_thrashing() {
+        let (_, cl) = compressed(10);
+        let mut cache = ExpertCache::new(vec![(0, cl)], 1);
+        assert!(matches!(cache.serve(0, 2, 4096), Serve::Dense(_)));
+        assert_eq!(cache.metrics.restore_serves, 1);
+    }
+
+    #[test]
+    fn serve_with_fused_disabled_always_restores() {
+        let (_, cl) = compressed(11);
+        let mut cache = ExpertCache::new(vec![(0, cl)], 1);
+        cache.set_fused_enabled(false);
+        for slot in 0..4 {
+            assert!(matches!(cache.serve(0, slot, 1), Serve::Dense(_)));
+        }
+        assert_eq!(cache.metrics.restore_serves, 4);
+        assert_eq!(cache.metrics.fused_serves, 0);
     }
 
     #[test]

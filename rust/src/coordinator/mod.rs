@@ -9,6 +9,6 @@ pub mod demo;
 pub mod metrics;
 pub mod server;
 
-pub use cache::{CacheMetrics, ExpertCache};
+pub use cache::{CacheMetrics, ExpertCache, Serve};
 pub use metrics::ServerMetrics;
 pub use server::{Engine, Request, Response, Server, ServerConfig};

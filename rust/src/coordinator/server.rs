@@ -5,10 +5,10 @@
 //! the right shape at this scale.
 
 use super::batcher::next_batch;
-use super::cache::{CacheMetrics, ExpertCache};
+use super::cache::{CacheMetrics, ExpertCache, Serve};
 use super::metrics::ServerMetrics;
-use crate::compress::CompressedLayer;
-use crate::moe::{Ffn, FfnHook, Model};
+use crate::compress::{CompressedLayer, SharedAct};
+use crate::moe::{route_dispatch_combine, Ffn, FfnHook, Model};
 use crate::tensor::Matrix;
 use crate::util::stats::logsumexp;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -113,6 +113,14 @@ impl Engine {
         self.cache.as_ref().map(|c| c.lock().unwrap().metrics.clone())
     }
 
+    /// Toggle the restore-free fused serve path (on by default; benches
+    /// compare against the restore-only policy by switching it off).
+    pub fn set_fused(&self, enabled: bool) {
+        if let Some(c) = &self.cache {
+            c.lock().unwrap().set_fused_enabled(enabled);
+        }
+    }
+
     pub fn resident_expert_bytes(&self) -> Option<(usize, usize)> {
         self.cache.as_ref().map(|c| {
             let g = c.lock().unwrap();
@@ -186,7 +194,10 @@ impl Engine {
     }
 }
 
-/// The FFN hook routing compressed blocks through the restore cache.
+/// The FFN hook routing compressed blocks through the restore cache's
+/// cost-model serve path: hot experts run dense from the cache, cold ones
+/// run restore-free through the fused layer, with the center term computed
+/// at most once per batch.
 struct EngineHook<'a> {
     model: &'a Model,
     cache: Option<&'a Mutex<ExpertCache>>,
@@ -204,38 +215,30 @@ impl FfnHook for EngineHook<'_> {
                 return None;
             }
         }
-        // Route tokens with the resident router, restore experts on demand.
-        let logits = layer.router.logits(x);
-        let n = layer.router.n_experts();
-        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
-        for t in 0..x.rows {
-            let route = layer.router.route_logits(logits.row(t));
-            for (e, w) in route.experts.iter().zip(&route.weights) {
-                groups[*e].push((t, *w));
-            }
-        }
-        let mut out = match &layer.shared_expert {
-            Some(se) => se.forward(x),
-            None => Matrix::zeros(x.rows, x.cols),
-        };
-        let mut guard = cache.lock().unwrap();
-        for (slot, group) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            let expert = guard.get(block, slot);
-            let mut sub = Matrix::zeros(group.len(), x.cols);
-            for (i, &(t, _)) in group.iter().enumerate() {
-                sub.row_mut(i).copy_from_slice(x.row(t));
-            }
-            let y = expert.forward(&sub);
-            for (i, &(t, w)) in group.iter().enumerate() {
-                let dst = out.row_mut(t);
-                for (d, &s) in dst.iter_mut().zip(y.row(i)) {
-                    *d += w * s;
+        // Route with the resident router; serve each activated slot through
+        // the cache's fused-vs-restore decision. The mutex is held only for
+        // the serve() bookkeeping/restore itself — routing, the shared
+        // expert, and every expert forward run unlocked so concurrent
+        // requests overlap (the Arc'd weights outlive the guard). The
+        // shared center term is built lazily on the first fused slot and
+        // reused by the rest of the batch.
+        let mut shared: Option<SharedAct> = None;
+        let out = route_dispatch_combine(
+            &layer.router,
+            x,
+            None,
+            layer.shared_expert.as_ref(),
+            |slot, sub, rows| {
+                let decision = cache.lock().unwrap().serve(block, slot, sub.rows);
+                match decision {
+                    Serve::Dense(expert) => expert.forward(sub),
+                    Serve::Fused(fl) => {
+                        let sh = shared.get_or_insert_with(|| fl.shared_act(x));
+                        fl.forward_slot(slot, sub, &sh.gather(rows))
+                    }
                 }
-            }
-        }
+            },
+        );
         Some(out)
     }
 }
@@ -361,6 +364,43 @@ mod tests {
         let got = engine.handle(&Request::Generate { prompt: vec![1, 2, 3], max_new: 6 });
         let want = Response::Generate(cm.model.generate(&[1, 2, 3], 6));
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn thrashed_engine_serves_fused_and_matches_restored_model() {
+        // Budget below one restored expert: every MoE block runs restore-
+        // free, and the score must still equal the offline restored model.
+        let m = tiny_model(10);
+        let mut rng = Rng::new(11);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let expert_bytes = 0; // force thrash with a zero budget
+        let engine = Engine::compressed(m.clone(), cm.layers.clone(), expert_bytes);
+        let tokens: Vec<u32> = vec![2, 7, 1, 9, 4, 3, 8];
+        let got = match engine.handle(&Request::Score { tokens: tokens.clone() }) {
+            Response::Score(s) => s,
+            other => panic!("{other:?}"),
+        };
+        let offline = Engine::dense(cm.model.clone());
+        let want = match offline.handle(&Request::Score { tokens }) {
+            Response::Score(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        let metrics = engine.cache_metrics().unwrap();
+        assert!(metrics.fused_serves > 0, "thrash budget must use the fused path");
+        assert_eq!(metrics.restore_serves, 0);
+        // Restore-only policy agrees numerically (A/B switch).
+        let engine_restore = Engine::compressed(m, cm.layers, expert_bytes);
+        engine_restore.set_fused(false);
+        let got_restore =
+            match engine_restore.handle(&Request::Score { tokens: vec![2, 7, 1, 9, 4, 3, 8] }) {
+                Response::Score(s) => s,
+                other => panic!("{other:?}"),
+            };
+        assert!((got_restore - want).abs() < 1e-5);
+        let m2 = engine_restore.cache_metrics().unwrap();
+        assert_eq!(m2.fused_serves, 0);
+        assert!(m2.restore_serves > 0);
     }
 
     #[test]

@@ -17,6 +17,32 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// row-broadcast `m[r, :] += bias` (shared by the dense and fused forwards).
+pub fn add_bias_rows(m: &mut Matrix, bias: &[f32]) {
+    debug_assert_eq!(m.cols, bias.len());
+    for r in 0..m.rows {
+        for (v, &b) in m.row_mut(r).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// The one interface every expert representation serves tokens through —
+/// dense restored weights ([`ExpertWeights`]) and the restore-free fused
+/// path (`compress::formats::FusedSlot`) both implement it, so the MoE
+/// layer and the serving hook dispatch without knowing which backing a
+/// slot has.
+pub trait ExpertForward {
+    /// Forward a token batch `x` (B × p) → (B × p).
+    fn expert_forward(&self, x: &Matrix) -> Matrix;
+}
+
+impl ExpertForward for ExpertWeights {
+    fn expert_forward(&self, x: &Matrix) -> Matrix {
+        self.forward(x)
+    }
+}
+
 /// Weights of one expert MLP.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExpertWeights {
@@ -85,12 +111,7 @@ impl ExpertWeights {
     /// Forward pass over a batch `x` (B × p) → (B × p).
     pub fn forward(&self, x: &Matrix) -> Matrix {
         let mut h = x.matmul_nt(&self.w1); // B × pI
-        for r in 0..h.rows {
-            let row = h.row_mut(r);
-            for (c, v) in row.iter_mut().enumerate() {
-                *v += self.b1[c];
-            }
-        }
+        add_bias_rows(&mut h, &self.b1);
         match self.arch {
             ExpertArch::Relu => {
                 for v in h.data.iter_mut() {
@@ -101,24 +122,14 @@ impl ExpertWeights {
                 let w3 = self.w3.as_ref().expect("SwiGlu expert missing w3");
                 let b3 = self.b3.as_ref().expect("SwiGlu expert missing b3");
                 let mut g = x.matmul_nt(w3);
-                for r in 0..g.rows {
-                    let row = g.row_mut(r);
-                    for (c, v) in row.iter_mut().enumerate() {
-                        *v += b3[c];
-                    }
-                }
+                add_bias_rows(&mut g, b3);
                 for (hv, gv) in h.data.iter_mut().zip(&g.data) {
                     *hv = silu(*hv) * gv;
                 }
             }
         }
         let mut out = h.matmul_nt(&self.w2); // B × p
-        for r in 0..out.rows {
-            let row = out.row_mut(r);
-            for (c, v) in row.iter_mut().enumerate() {
-                *v += self.b2[c];
-            }
-        }
+        add_bias_rows(&mut out, &self.b2);
         out
     }
 
@@ -166,13 +177,18 @@ impl ExpertWeights {
         b2: Vec<f32>,
     ) -> ExpertWeights {
         assert_eq!(dm.cols, Self::design_cols(arch, p), "design matrix width");
+        let pi = dm.rows;
         let w1 = dm.slice_cols(0, p);
-        let b1: Vec<f32> = dm.col(p);
+        // col_into: this runs once per restore-cache miss; the strided
+        // in-place copy avoids the per-call Vec the old col() allocated.
+        let mut b1 = vec![0.0f32; pi];
+        dm.col_into(p, &mut b1);
         let (w3, b3, w2t_off) = match arch {
             ExpertArch::Relu => (None, None, p + 1),
             ExpertArch::SwiGlu => {
                 let w3 = dm.slice_cols(p + 1, 2 * p + 1);
-                let b3 = dm.col(2 * p + 1);
+                let mut b3 = vec![0.0f32; pi];
+                dm.col_into(2 * p + 1, &mut b3);
                 (Some(w3), Some(b3), 2 * p + 2)
             }
         };

@@ -5,10 +5,61 @@
 //! combine formulation) — this is also the layout the Pallas kernel mirrors.
 
 use super::config::ExpertArch;
-use super::expert::ExpertWeights;
+use super::expert::{ExpertForward, ExpertWeights};
 use super::router::{Router, RouterStats};
 use crate::tensor::Matrix;
 use crate::util::Rng;
+
+/// The dispatch/combine plumbing shared by the plain layer forward and the
+/// serving coordinator's cache hook: route every token, group token indices
+/// by activated expert slot, run `forward_slot(slot, sub_batch, token_rows)`
+/// once per non-empty group, and weighted-combine into the output (on top
+/// of the always-on shared expert when present). `token_rows` carries each
+/// sub-batch row's original row index in `x` so callers can gather
+/// batch-level precomputations (the fused path's shared activations).
+pub fn route_dispatch_combine(
+    router: &Router,
+    x: &Matrix,
+    mut stats: Option<&mut RouterStats>,
+    shared_expert: Option<&ExpertWeights>,
+    mut forward_slot: impl FnMut(usize, &Matrix, &[usize]) -> Matrix,
+) -> Matrix {
+    let n = router.n_experts();
+    let logits = router.logits(x);
+    let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
+    for t in 0..x.rows {
+        let route = router.route_logits(logits.row(t));
+        if let Some(s) = stats.as_deref_mut() {
+            s.record(&route);
+        }
+        for (e, w) in route.experts.iter().zip(&route.weights) {
+            groups[*e].push((t, *w));
+        }
+    }
+    let mut out = match shared_expert {
+        Some(se) => se.forward(x),
+        None => Matrix::zeros(x.rows, x.cols),
+    };
+    for (slot, group) in groups.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        let rows: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
+        let mut sub = Matrix::zeros(group.len(), x.cols);
+        for (i, &t) in rows.iter().enumerate() {
+            sub.row_mut(i).copy_from_slice(x.row(t));
+        }
+        let y = forward_slot(slot, &sub, &rows);
+        debug_assert_eq!(y.shape(), sub.shape());
+        for (i, &(t, w)) in group.iter().enumerate() {
+            let dst = out.row_mut(t);
+            for (d, &s) in dst.iter_mut().zip(y.row(i)) {
+                *d += w * s;
+            }
+        }
+    }
+    out
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct MoeLayer {
@@ -53,44 +104,13 @@ impl MoeLayer {
     /// Forward over a batch of token activations `x` (B × p), optionally
     /// recording router statistics.
     pub fn forward(&self, x: &Matrix, stats: Option<&mut RouterStats>) -> Matrix {
-        let b = x.rows;
-        let n = self.n_experts();
-        let logits = self.router.logits(x);
-        // Token routing; group token indices per expert.
-        let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
-        let mut stats = stats;
-        for t in 0..b {
-            let route = self.router.route_logits(logits.row(t));
-            if let Some(s) = stats.as_deref_mut() {
-                s.record(&route);
-            }
-            for (e, w) in route.experts.iter().zip(&route.weights) {
-                groups[*e].push((t, *w));
-            }
-        }
-        let mut out = Matrix::zeros(b, x.cols);
-        // Shared expert contributes to every token.
-        if let Some(se) = &self.shared_expert {
-            out = se.forward(x);
-        }
-        // Dispatch → expert batched forward → weighted combine.
-        for (e, group) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            let mut sub = Matrix::zeros(group.len(), x.cols);
-            for (i, &(t, _)) in group.iter().enumerate() {
-                sub.row_mut(i).copy_from_slice(x.row(t));
-            }
-            let y = self.experts[e].forward(&sub);
-            for (i, &(t, w)) in group.iter().enumerate() {
-                let dst = out.row_mut(t);
-                for (d, &s) in dst.iter_mut().zip(y.row(i)) {
-                    *d += w * s;
-                }
-            }
-        }
-        out
+        route_dispatch_combine(
+            &self.router,
+            x,
+            stats,
+            self.shared_expert.as_ref(),
+            |slot, sub, _rows| self.experts[slot].expert_forward(sub),
+        )
     }
 
     /// Total parameters in the routed experts (what compression targets).

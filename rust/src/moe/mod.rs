@@ -12,7 +12,7 @@ pub mod router;
 pub mod transformer;
 
 pub use config::{ExpertArch, ExpertInit, ModelConfig};
-pub use expert::ExpertWeights;
-pub use layer::MoeLayer;
+pub use expert::{ExpertForward, ExpertWeights};
+pub use layer::{route_dispatch_combine, MoeLayer};
 pub use router::{Route, Router, RouterStats};
 pub use transformer::{Block, Ffn, FfnHook, Model, NoHook};

@@ -1,0 +1,58 @@
+//! API-identical stand-in for [`pjrt`](super::pjrt) when the `xla` crate is
+//! not vendored (the default offline build). Every constructor reports the
+//! runtime as unavailable; the integration tests and `examples/end_to_end`
+//! skip on the missing artifacts manifest before ever reaching these, so
+//! the rest of the suite stays green without XLA.
+
+use super::artifacts::ArtifactSpec;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// A typed input buffer for an artifact call.
+pub enum ArtifactInput<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+/// The PJRT CPU runtime (stub: construction always fails).
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+/// One compiled artifact, ready to execute (stub: never constructed).
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: resmoe was built without the `xla` feature";
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&self, _spec: &ArtifactSpec) -> Result<LoadedArtifact> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn load_file(&self, _path: &Path, _spec: ArtifactSpec) -> Result<LoadedArtifact> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+impl LoadedArtifact {
+    pub fn execute_f32(&self, _inputs: &[ArtifactInput]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Build the i64 shape vector for an artifact input (shared helper, same as
+/// the real module's).
+pub fn shape_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}

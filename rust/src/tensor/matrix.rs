@@ -3,10 +3,12 @@
 //!
 //! The matmul kernel uses the i-k-j loop order (C[i,:] += A[i,k] * B[k,:]),
 //! which streams both C and B rows sequentially so LLVM auto-vectorizes the
-//! inner loop, plus row-parallelism over a scoped thread pool for large
-//! outputs. This is the L3 hot path profiled in EXPERIMENTS.md §Perf.
+//! inner loop, plus row-parallelism over the persistent worker pool for
+//! large outputs. `matmul_nt` is cache-blocked: `other` is packed into
+//! j×k panels that stay L1/L2-resident across a worker's whole row chunk.
+//! This is the L3 hot path profiled in EXPERIMENTS.md §Perf.
 
-use crate::util::threads::parallel_rows_mut;
+use crate::util::threads::{parallel_row_chunks_mut, parallel_rows_mut};
 use crate::util::Rng;
 use std::fmt;
 
@@ -27,9 +29,9 @@ impl fmt::Debug for Matrix {
     }
 }
 
-/// Output rows below this threshold run single-threaded (thread spawn costs
-/// more than the work for tiny matrices in the decode hot loop).
-const PAR_MIN_FLOPS: usize = 1 << 20;
+/// Work below this threshold runs single-threaded (pool dispatch costs
+/// more than the arithmetic for tiny matrices in the decode hot loop).
+pub(crate) const PAR_MIN_FLOPS: usize = 1 << 20;
 
 impl Matrix {
     // ------------------------------------------------------------ creation
@@ -85,7 +87,20 @@ impl Matrix {
     }
 
     pub fn col(&self, c: usize) -> Vec<f32> {
-        (0..self.rows).map(|r| self.at(r, c)).collect()
+        let mut out = vec![0.0f32; self.rows];
+        self.col_into(c, &mut out);
+        out
+    }
+
+    /// Strided copy of column `c` into `out` — the allocation-free variant
+    /// of [`Self::col`] for the restore hot path (design-matrix bias
+    /// extraction runs once per cache miss).
+    pub fn col_into(&self, c: usize, out: &mut [f32]) {
+        assert!(c < self.cols, "col_into: column {c} out of range");
+        assert_eq!(out.len(), self.rows, "col_into: length mismatch");
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = self.data[r * self.cols + c];
+        }
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -108,80 +123,17 @@ impl Matrix {
     /// C = self @ other^T (other stored row-major; its rows are the columns
     /// of the product).
     ///
-    /// §Perf: the kernel processes FOUR output columns per pass with four
-    /// independent accumulators — a plain dot-product loop is a serial
-    /// reduction LLVM cannot vectorize, while the 4-wide form exposes ILP
-    /// and reuses each `a[kk]` load across four rows of `other` (~2×
-    /// measured on the expert up-projection shape, EXPERIMENTS.md §Perf).
+    /// §Perf: cache-blocked and panel-packed — see [`matmul_nt_into`].
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
-        let (m, n, k) = (self.rows, other.rows, self.cols);
-        let mut out = Matrix::zeros(m, n);
-        let run = |r: usize, row_out: &mut [f32]| {
-            let a = self.row(r);
-            let mut j = 0usize;
-            while j + 8 <= n {
-                let b0 = other.row(j);
-                let b1 = other.row(j + 1);
-                let b2 = other.row(j + 2);
-                let b3 = other.row(j + 3);
-                let b4 = other.row(j + 4);
-                let b5 = other.row(j + 5);
-                let b6 = other.row(j + 6);
-                let b7 = other.row(j + 7);
-                let mut s = [0.0f32; 8];
-                for kk in 0..k {
-                    let av = a[kk];
-                    s[0] += av * b0[kk];
-                    s[1] += av * b1[kk];
-                    s[2] += av * b2[kk];
-                    s[3] += av * b3[kk];
-                    s[4] += av * b4[kk];
-                    s[5] += av * b5[kk];
-                    s[6] += av * b6[kk];
-                    s[7] += av * b7[kk];
-                }
-                row_out[j..j + 8].copy_from_slice(&s);
-                j += 8;
-            }
-            while j + 4 <= n {
-                let b0 = other.row(j);
-                let b1 = other.row(j + 1);
-                let b2 = other.row(j + 2);
-                let b3 = other.row(j + 3);
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for kk in 0..k {
-                    let av = a[kk];
-                    s0 += av * b0[kk];
-                    s1 += av * b1[kk];
-                    s2 += av * b2[kk];
-                    s3 += av * b3[kk];
-                }
-                row_out[j] = s0;
-                row_out[j + 1] = s1;
-                row_out[j + 2] = s2;
-                row_out[j + 3] = s3;
-                j += 4;
-            }
-            while j < n {
-                let b = other.row(j);
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += a[kk] * b[kk];
-                }
-                row_out[j] = acc;
-                j += 1;
-            }
-        };
-        if m * n * k >= PAR_MIN_FLOPS && m > 1 {
-            parallel_rows_mut(&mut out.data, m, n, |r, row| run(r, row));
-        } else {
-            for r in 0..m {
-                let row = &mut out.data[r * n..(r + 1) * n];
-                run(r, row);
-            }
-        }
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        matmul_nt_into(self, other, &mut out, false);
         out
+    }
+
+    /// out += self @ other^T (accumulating form for the fused residual
+    /// corrections).
+    pub fn matmul_nt_acc(&self, other: &Matrix, out: &mut Matrix) {
+        matmul_nt_into(self, other, out, true);
     }
 
     /// Reference (pre-optimization) form of [`Self::matmul_nt`]: one serial
@@ -402,13 +354,24 @@ impl Matrix {
     }
 }
 
-/// Core i-k-j matmul kernel with optional row-parallelism.
+/// Core i-k-j matmul kernel with optional row-parallelism: C = A @ B.
 pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    matmul_into_impl(a, b, out, false);
+}
+
+/// Accumulating i-k-j matmul: out += A @ B (the fused low-rank path).
+pub fn matmul_acc_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    matmul_into_impl(a, b, out, true);
+}
+
+fn matmul_into_impl(a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    assert_eq!(a.cols, b.rows);
-    assert_eq!((out.rows, out.cols), (m, n));
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch {:?} @ {:?}", a.shape(), b.shape());
+    assert_eq!((out.rows, out.cols), (m, n), "matmul output shape");
     let kernel = |r: usize, out_row: &mut [f32]| {
-        out_row.fill(0.0);
+        if !accumulate {
+            out_row.fill(0.0);
+        }
         let a_row = a.row(r);
         for kk in 0..k {
             let av = a_row[kk];
@@ -428,6 +391,140 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
             let row = &mut out.data[r * n..(r + 1) * n];
             kernel(r, row);
         }
+    }
+}
+
+/// j-tile width (rows of `other` processed per packed panel) and k-panel
+/// depth of the blocked `matmul_nt` kernel. 64×256 f32 ≈ 64 KB — the panel
+/// plus the active A-row slice stay L2-resident while being reused across a
+/// worker's whole row chunk.
+const NT_JB: usize = 64;
+const NT_KB: usize = 256;
+
+/// out (+)= a @ otherᵀ — the cache-blocked, panel-packed upgrade of the
+/// 4-column kernel.
+///
+/// §Perf: per (j-tile, k-panel) pair the relevant rows of `other` are
+/// packed once into a contiguous scratch panel and reused for every row of
+/// the worker's chunk (the seed's kernel re-streamed all of `other` per
+/// output row). The inner loop keeps the 8-/4-wide independent accumulators
+/// that expose ILP to LLVM's auto-vectorizer.
+pub fn matmul_nt_into(a: &Matrix, other: &Matrix, out: &mut Matrix, accumulate: bool) {
+    assert_eq!(a.cols, other.cols, "matmul_nt dim mismatch");
+    let (m, n, k) = (a.rows, other.rows, a.cols);
+    assert_eq!((out.rows, out.cols), (m, n), "matmul_nt output shape");
+    if n == 0 {
+        return;
+    }
+    let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        if !accumulate {
+            chunk.fill(0.0);
+        }
+        // Single k-panel (covers every decode-shape matmul): `other`'s
+        // contiguous rows already ARE the packed layout, so run the tile
+        // kernel straight over them — zero allocation, zero copy.
+        if k <= NT_KB {
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + NT_JB).min(n);
+                let jw = je - jb;
+                for i in 0..rows {
+                    let a_row = a.row(r0 + i);
+                    let out_row = &mut chunk[i * n + jb..i * n + je];
+                    nt_tile(a_row, &other.data[jb * k..], k, jw, out_row);
+                }
+                jb = je;
+            }
+            return;
+        }
+        let mut pack = vec![0.0f32; NT_JB * NT_KB];
+        let mut kb = 0usize;
+        while kb < k {
+            let ke = (kb + NT_KB).min(k);
+            let kw = ke - kb;
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + NT_JB).min(n);
+                let jw = je - jb;
+                for (t, j) in (jb..je).enumerate() {
+                    pack[t * kw..(t + 1) * kw].copy_from_slice(&other.row(j)[kb..ke]);
+                }
+                for i in 0..rows {
+                    let a_row = &a.row(r0 + i)[kb..ke];
+                    let out_row = &mut chunk[i * n + jb..i * n + je];
+                    nt_tile(a_row, &pack, kw, jw, out_row);
+                }
+                jb = je;
+            }
+            kb = ke;
+        }
+    };
+    if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_row_chunks_mut(&mut out.data, m, n, |r0, chunk| chunk_kernel(r0, chunk));
+    } else {
+        chunk_kernel(0, &mut out.data);
+    }
+}
+
+/// One packed tile: out[j] += dot(a_row, pack row j) for `jw` columns, with
+/// 8-/4-wide independent accumulators.
+#[inline]
+fn nt_tile(a_row: &[f32], pack: &[f32], kw: usize, jw: usize, out: &mut [f32]) {
+    let mut j = 0usize;
+    while j + 8 <= jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
+        let b4 = &pack[(j + 4) * kw..(j + 5) * kw];
+        let b5 = &pack[(j + 5) * kw..(j + 6) * kw];
+        let b6 = &pack[(j + 6) * kw..(j + 7) * kw];
+        let b7 = &pack[(j + 7) * kw..(j + 8) * kw];
+        let mut s = [0.0f32; 8];
+        for kk in 0..kw {
+            let av = a_row[kk];
+            s[0] += av * b0[kk];
+            s[1] += av * b1[kk];
+            s[2] += av * b2[kk];
+            s[3] += av * b3[kk];
+            s[4] += av * b4[kk];
+            s[5] += av * b5[kk];
+            s[6] += av * b6[kk];
+            s[7] += av * b7[kk];
+        }
+        for (o, sv) in out[j..j + 8].iter_mut().zip(s) {
+            *o += sv;
+        }
+        j += 8;
+    }
+    while j + 4 <= jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for kk in 0..kw {
+            let av = a_row[kk];
+            s0 += av * b0[kk];
+            s1 += av * b1[kk];
+            s2 += av * b2[kk];
+            s3 += av * b3[kk];
+        }
+        out[j] += s0;
+        out[j + 1] += s1;
+        out[j + 2] += s2;
+        out[j + 3] += s3;
+        j += 4;
+    }
+    while j < jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let mut acc = 0.0f32;
+        for kk in 0..kw {
+            acc += a_row[kk] * b0[kk];
+        }
+        out[j] += acc;
+        j += 1;
     }
 }
 
@@ -594,5 +691,58 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn blocked_matmul_nt_crosses_tile_boundaries() {
+        // Shapes straddling the NT_JB/NT_KB tile edges (63..65 around 64,
+        // 255..300 around 256) must agree with the naive kernel.
+        let mut rng = Rng::new(11);
+        for (m, n, k) in [(3, 63, 255), (5, 64, 256), (7, 65, 300), (2, 130, 257), (1, 9, 1)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let got = a.matmul_nt(&b);
+            let want = a.matmul_nt_naive(&b);
+            assert!(
+                got.sq_dist(&want) < 1e-4 * want.frob_norm_sq().max(1.0),
+                "{m}x{k} @ ({n}x{k})^T: {}",
+                got.sq_dist(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_nt_acc_accumulates() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(6, 20, 1.0, &mut rng);
+        let b = Matrix::randn(10, 20, 1.0, &mut rng);
+        let seed = Matrix::randn(6, 10, 1.0, &mut rng);
+        let mut out = seed.clone();
+        a.matmul_nt_acc(&b, &mut out);
+        let want = seed.add(&a.matmul_nt_naive(&b));
+        assert!(out.sq_dist(&want) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_acc_into_accumulates() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(4, 7, 1.0, &mut rng);
+        let b = Matrix::randn(7, 9, 1.0, &mut rng);
+        let seed = Matrix::randn(4, 9, 1.0, &mut rng);
+        let mut out = seed.clone();
+        matmul_acc_into(&a, &b, &mut out);
+        let want = seed.add(&a.matmul(&b));
+        assert!(out.sq_dist(&want) < 1e-6);
+    }
+
+    #[test]
+    fn col_into_matches_col() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(17, 5, 1.0, &mut rng);
+        for c in 0..5 {
+            let mut buf = vec![0.0f32; 17];
+            a.col_into(c, &mut buf);
+            assert_eq!(buf, a.col(c));
+        }
     }
 }

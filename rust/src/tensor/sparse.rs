@@ -194,6 +194,119 @@ impl Csr {
         }
         out
     }
+
+    /// out (+)= x @ selfᵀ — the fused-forward SpMM (restore-free expert
+    /// up/gate projection). `self` is the (pI × p) sparse residual piece,
+    /// `x` the (B × p) activations, `out` (B × pI). Runs at O(B · nnz)
+    /// instead of the O(B · pI · p) a restored dense weight would cost;
+    /// large batches fan out over the worker pool.
+    pub fn matmul_nt_into(&self, x: &Matrix, out: &mut Matrix, accumulate: bool) {
+        assert_eq!(x.cols, self.cols, "csr matmul_nt dim mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (x.rows, self.rows),
+            "csr matmul_nt output shape"
+        );
+        if !accumulate {
+            out.data.fill(0.0);
+        }
+        if self.rows == 0 {
+            return;
+        }
+        let row_kernel = |b: usize, out_row: &mut [f32]| {
+            let x_row = x.row(b);
+            for r in 0..self.rows {
+                let lo = self.row_ptr[r] as usize;
+                let hi = self.row_ptr[r + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for i in lo..hi {
+                    acc += self.values[i] * x_row[self.col_idx[i] as usize];
+                }
+                out_row[r] += acc;
+            }
+        };
+        if x.rows * self.nnz() >= crate::tensor::matrix::PAR_MIN_FLOPS && x.rows > 1 {
+            crate::util::threads::parallel_rows_mut(
+                &mut out.data,
+                x.rows,
+                self.rows,
+                |b, row| row_kernel(b, row),
+            );
+        } else {
+            for b in 0..x.rows {
+                let row = &mut out.data[b * self.rows..(b + 1) * self.rows];
+                row_kernel(b, row);
+            }
+        }
+    }
+
+    /// out += h @ self — the fused-forward down-projection correction
+    /// (h: B × pI, self: pI × p, out: B × p). Row-scatter form: zero
+    /// activations (ReLU) skip their whole CSR row.
+    pub fn matmul_acc_into(&self, h: &Matrix, out: &mut Matrix) {
+        assert_eq!(h.cols, self.rows, "csr matmul_acc dim mismatch");
+        assert_eq!((out.rows, out.cols), (h.rows, self.cols), "csr matmul_acc output shape");
+        for b in 0..h.rows {
+            let h_row = h.row(b);
+            let out_row = out.row_mut(b);
+            for r in 0..self.rows {
+                let hv = h_row[r];
+                if hv == 0.0 {
+                    continue;
+                }
+                for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                    out_row[self.col_idx[i] as usize] += hv * self.values[i];
+                }
+            }
+        }
+    }
+
+    /// Columns `[lo, hi)` as a new CSR with rebased column indices — the
+    /// fused forward splits the design-matrix residual into per-weight
+    /// pieces once at build time.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.cols, "csr slice_cols range");
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let c = self.col_idx[i] as usize;
+                if c >= lo && c < hi {
+                    col_idx.push((c - lo) as u32);
+                    values.push(self.values[i]);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr {
+            rows: self.rows,
+            cols: hi - lo,
+            row_ptr,
+            col_idx,
+            values,
+            index_width: self.index_width,
+        }
+    }
+
+    /// Column `c` densified (splits the b1/b3 bias deltas out of the
+    /// residual design matrix).
+    pub fn col_dense(&self, c: usize) -> Vec<f32> {
+        assert!(c < self.cols, "csr col_dense range");
+        let mut out = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                if self.col_idx[i] as usize == c {
+                    out[r] = self.values[i];
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +416,55 @@ mod tests {
         assert_eq!(IndexWidth::narrowest_for(65536), IndexWidth::U16);
         assert_eq!(IndexWidth::narrowest_for(65537), IndexWidth::U32);
         assert_eq!(IndexWidth::narrowest_for(1 << 40), IndexWidth::U64);
+    }
+
+    #[test]
+    fn spmm_nt_matches_dense() {
+        // x @ Δᵀ through the CSR kernel == densified matmul_nt, with and
+        // without accumulation, across densities incl. empty.
+        let mut rng = Rng::new(8);
+        for density in [0.0, 0.05, 0.25, 1.0] {
+            let delta = sparse_random(14, 9, density, &mut rng);
+            let csr = Csr::from_dense(&delta, IndexWidth::U16);
+            let x = Matrix::randn(6, 9, 1.0, &mut rng);
+            let mut got = Matrix::zeros(6, 14);
+            csr.matmul_nt_into(&x, &mut got, false);
+            let want = x.matmul_nt(&delta);
+            assert!(got.sq_dist(&want) < 1e-8, "density {density}");
+
+            let seed = Matrix::randn(6, 14, 1.0, &mut rng);
+            let mut acc = seed.clone();
+            csr.matmul_nt_into(&x, &mut acc, true);
+            assert!(acc.sq_dist(&seed.add(&want)) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spmm_acc_matches_dense() {
+        let mut rng = Rng::new(9);
+        let delta = sparse_random(12, 7, 0.3, &mut rng);
+        let csr = Csr::from_dense(&delta, IndexWidth::U16);
+        let h = Matrix::randn(5, 12, 1.0, &mut rng);
+        let seed = Matrix::randn(5, 7, 1.0, &mut rng);
+        let mut got = seed.clone();
+        csr.matmul_acc_into(&h, &mut got);
+        let want = seed.add(&h.matmul(&delta));
+        assert!(got.sq_dist(&want) < 1e-8);
+    }
+
+    #[test]
+    fn slice_cols_and_col_dense() {
+        let mut rng = Rng::new(10);
+        let m = sparse_random(11, 13, 0.3, &mut rng);
+        let csr = Csr::from_dense(&m, IndexWidth::U16);
+        let sliced = csr.slice_cols(3, 9);
+        assert_eq!(sliced.to_dense(), m.slice_cols(3, 9));
+        // Degenerate slices.
+        assert_eq!(csr.slice_cols(5, 5).nnz(), 0);
+        assert_eq!(csr.slice_cols(0, 13).to_dense(), m);
+        for c in 0..13 {
+            assert_eq!(csr.col_dense(c), m.col(c));
+        }
     }
 
     #[test]

@@ -1,11 +1,24 @@
-//! Data-parallel helpers over `std::thread::scope` (rayon is not vendored).
+//! Data-parallel helpers over a **persistent worker pool** (rayon is not
+//! vendored).
 //!
-//! `parallel_for_chunks` splits an index range into contiguous chunks and runs
-//! a worker per chunk; the degree of parallelism defaults to the number of
-//! physical cores and can be pinned through `RESMOE_THREADS` (used by the
-//! benches to report single- vs multi-thread numbers).
+//! The seed spawned scoped threads per matmul; at decode batch sizes the
+//! spawn/join cost rivaled the arithmetic. The pool here is lazily
+//! initialized on first parallel call, holds `RESMOE_THREADS` (or
+//! `available_parallelism`) workers for the life of the process, and is fed
+//! through an mpsc channel — the same workers serve the dense matmul
+//! kernels, the sparse/low-rank fused-forward SpMMs, and the per-shard
+//! compression in `compress/parallel.rs`.
+//!
+//! Nested parallel sections (a pool worker reaching a parallel helper) run
+//! inline on the worker: tasks never block on other tasks, so the pool
+//! cannot deadlock and needs no work-stealing.
 
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (env `RESMOE_THREADS` overrides).
 pub fn num_threads() -> usize {
@@ -25,64 +38,215 @@ pub fn num_threads() -> usize {
     n
 }
 
+thread_local! {
+    /// Set on pool workers so nested parallel calls degrade to inline
+    /// serial execution instead of re-entering the pool.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    tx: Mutex<Sender<Job>>,
+}
+
+/// The process-wide pool, created on first use.
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..num_threads() {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("resmoe-worker-{i}"))
+                .spawn(move || {
+                    IN_POOL.with(|f| f.set(true));
+                    loop {
+                        // Hold the receiver lock only to dequeue.
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn resmoe worker");
+        }
+        Pool { tx: Mutex::new(tx) }
+    })
+}
+
+/// Countdown latch: the submitting thread blocks until every task of its
+/// batch ran (or panicked — the drop guard still counts it down).
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn done(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct DoneGuard(Arc<Latch>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        self.0.done();
+    }
+}
+
+/// Run a batch of borrowing closures on the pool and block until all
+/// completed. Safety: the closures may borrow the caller's stack because
+/// this function does not return before every task has finished — the same
+/// contract `std::thread::scope` enforces, with the lifetime erased to
+/// cross the channel. Panics inside tasks are caught on the worker (so the
+/// pool thread survives) and re-raised here after the batch drains, like
+/// `thread::scope`'s join would.
+fn run_scoped<'scope>(tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    if tasks.is_empty() {
+        return;
+    }
+    let latch = Arc::new(Latch { remaining: Mutex::new(tasks.len()), cv: Condvar::new() });
+    let panic_slot: Arc<Mutex<Option<Box<dyn Any + Send>>>> = Arc::new(Mutex::new(None));
+    let p = pool();
+    for task in tasks {
+        // Erase the scope lifetime; soundness comes from latch.wait() below.
+        let task: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(task) };
+        let guard = DoneGuard(Arc::clone(&latch));
+        let panic_slot = Arc::clone(&panic_slot);
+        let job: Job = Box::new(move || {
+            let _guard = guard;
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                let mut slot = panic_slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        });
+        p.tx.lock().unwrap().send(job).expect("worker pool alive");
+    }
+    latch.wait();
+    let payload = panic_slot.lock().unwrap().take();
+    if let Some(payload) = payload {
+        resume_unwind(payload);
+    }
+}
+
 /// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
 /// `f` must be `Sync` (immutable captures) — output goes through interior
-/// mutability or per-chunk ownership (see `parallel_map_mut`).
+/// mutability or per-chunk ownership (see `parallel_map`).
 pub fn parallel_for_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
     let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n < 2 {
+    if workers <= 1 || n < 2 || in_pool() {
         f(0, n);
         return;
     }
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            scope.spawn(move || f(start, end));
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let start = w * chunk;
+        let end = ((w + 1) * chunk).min(n);
+        if start >= end {
+            break;
         }
-    });
+        let f = &f;
+        tasks.push(Box::new(move || f(start, end)));
+    }
+    run_scoped(tasks);
 }
 
-/// Parallel map over mutable disjoint row chunks: splits `data` (length
-/// `rows * row_len`) into per-row-chunk mutable slices processed in parallel.
-pub fn parallel_rows_mut<F>(data: &mut [f32], rows: usize, row_len: usize, f: F)
+/// Split `data` (length `rows * row_len`) into at most `num_threads`
+/// contiguous row chunks and run `f(first_row, chunk)` per chunk in
+/// parallel — the blocked-matmul entry point (a worker keeps its packed
+/// panel hot across its whole chunk).
+pub fn parallel_row_chunks_mut<F>(data: &mut [f32], rows: usize, row_len: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     assert_eq!(data.len(), rows * row_len);
-    let workers = num_threads().min(rows.max(1));
-    if workers <= 1 || rows < 2 {
-        for (r, row) in data.chunks_mut(row_len.max(1)).enumerate() {
-            f(r, row);
-        }
+    if rows == 0 || row_len == 0 {
+        return;
+    }
+    let workers = num_threads().min(rows);
+    if workers <= 1 || in_pool() {
+        f(0, data);
         return;
     }
     let chunk_rows = rows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let mut rest = data;
-        let mut row0 = 0usize;
-        while row0 < rows {
-            let take = chunk_rows.min(rows - row0);
-            let (head, tail) = rest.split_at_mut(take * row_len);
-            let f = &f;
-            let base = row0;
-            scope.spawn(move || {
-                for (i, row) in head.chunks_mut(row_len).enumerate() {
-                    f(base + i, row);
-                }
-            });
-            rest = tail;
-            row0 += take;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    let mut rest = data;
+    let mut row0 = 0usize;
+    while row0 < rows {
+        let take = chunk_rows.min(rows - row0);
+        let (head, tail) = rest.split_at_mut(take * row_len);
+        let f = &f;
+        let base = row0;
+        tasks.push(Box::new(move || f(base, head)));
+        rest = tail;
+        row0 += take;
+    }
+    run_scoped(tasks);
+}
+
+/// Parallel map over mutable disjoint rows: `f(row_index, row)` for every
+/// row of `data`, chunked across the pool.
+pub fn parallel_rows_mut<F>(data: &mut [f32], rows: usize, row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    parallel_row_chunks_mut(data, rows, row_len, |row0, chunk| {
+        for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+            f(row0 + i, row);
         }
     });
+}
+
+/// Map `f` over owned items on the pool, preserving order. Used by the
+/// per-shard compression path; falls back to a serial map when the pool
+/// would not help (single item, one thread, already on a worker).
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n <= 1 || num_threads() <= 1 || in_pool() {
+        return items.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+        for (slot, item) in slots.iter_mut().zip(items) {
+            let f = &f;
+            tasks.push(Box::new(move || {
+                *slot = Some(f(item));
+            }));
+        }
+        run_scoped(tasks);
+    }
+    slots.into_iter().map(|s| s.expect("pool task completed")).collect()
 }
 
 #[cfg(test)]
@@ -120,6 +284,52 @@ mod tests {
             for c in 0..row_len {
                 assert_eq!(data[r * row_len + c], r as f32);
             }
+        }
+    }
+
+    #[test]
+    fn row_chunks_partition_contiguously() {
+        let rows = 23;
+        let row_len = 3;
+        let mut data = vec![0.0f32; rows * row_len];
+        parallel_row_chunks_mut(&mut data, rows, row_len, |row0, chunk| {
+            assert_eq!(chunk.len() % row_len, 0);
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (row0 * row_len + i) as f32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(items, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_parallelism_runs_inline_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        parallel_for_chunks(8, |s, e| {
+            for _ in s..e {
+                // Nested call: must run inline on the worker.
+                parallel_for_chunks(4, |s2, e2| {
+                    total.fetch_add(e2 - s2, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        for round in 0..50 {
+            let mut data = vec![0.0f32; 64];
+            parallel_rows_mut(&mut data, 16, 4, |r, row| row.fill((r + round) as f32));
+            assert_eq!(data[63], (15 + round) as f32);
         }
     }
 }

@@ -107,6 +107,106 @@ fn prop_expert_map_and_aligns_are_well_formed() {
 }
 
 #[test]
+fn prop_fused_forward_matches_restore_then_dense() {
+    // The tentpole equivalence: for BOTH residual kinds (UP sparse / SVD
+    // low-rank), scoring straight from the compressed representation must
+    // match restore-then-dense within 1e-4 for any layer geometry and batch
+    // size — including rate extremes that produce empty and (near-)dense
+    // residuals.
+    check(
+        PropConfig { cases: 24, seed: 0xF05ED },
+        |rng| {
+            let layer = random_layer(rng);
+            let svd = rng.below(2) == 1;
+            let rate = [0.0, 0.15, 0.4, 1.0][rng.below(4)];
+            let batch = 1 + rng.below(7);
+            let seed = rng.next_u64();
+            (layer, svd, rate, batch, seed)
+        },
+        |(layer, svd, rate, batch, seed)| {
+            let comp = if *svd { ResMoE::svd() } else { ResMoE::up() };
+            let cl = quick_compress(&comp, layer, *rate, *seed);
+            let Some(fl) = cl.fused() else {
+                return Err("resmoe layer must expose a fused path".into());
+            };
+            let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+            let x = Matrix::randn(*batch, layer.experts[0].d_model(), 1.0, &mut rng);
+            let shared = fl.shared_act(&x);
+            for slot in 0..layer.n_experts() {
+                let want = cl.restore_expert(slot).forward(&x);
+                let got = fl.forward_slot(slot, &x, &shared);
+                let dist = got.sq_dist(&want).sqrt();
+                let tol = 1e-4 * (1.0 + want.frob_norm());
+                if dist > tol {
+                    return Err(format!(
+                        "slot {slot} ({}, rate {rate}): |fused - restored| = {dist:.3e} > {tol:.3e}",
+                        cl.method
+                    ));
+                }
+            }
+            // The convenience entry agrees with the shared-act path.
+            let via = cl.fused_forward(0, &x).expect("fused path exists");
+            if via.sq_dist(&fl.forward_slot(0, &x, &shared)) > 1e-10 {
+                return Err("fused_forward disagrees with forward_slot".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_decisions_are_consistent_and_correct() {
+    // Random access sequences under random budgets through the cost-model
+    // serve path: every answer (dense or fused) must equal direct
+    // restoration, and the decision metrics must account for every miss.
+    use resmoe::coordinator::Serve;
+    check(
+        PropConfig { cases: 12, seed: 0x5E4E },
+        |rng| {
+            let layer = random_layer(rng);
+            let seed = rng.next_u64();
+            let ops: Vec<usize> = (0..24).map(|_| rng.below(layer.n_experts())).collect();
+            let budget_experts = rng.below(3); // 0 = pure thrash
+            let batch = 1 + rng.below(5);
+            (layer, seed, ops, budget_experts, batch)
+        },
+        |(layer, seed, ops, budget_experts, batch)| {
+            let cl = quick_compress(&ResMoE::up(), layer, 0.3, *seed);
+            let expert_bytes = layer.experts[0].n_params() * 4;
+            let budget = budget_experts * expert_bytes;
+            let mut cache = ExpertCache::new(vec![(0, cl.clone())], budget);
+            let mut rng = Rng::new(*seed);
+            let x = Matrix::randn(*batch, layer.experts[0].d_model(), 1.0, &mut rng);
+            for &slot in ops {
+                let want = cl.restore_expert(slot).forward(&x);
+                let got = match cache.serve(0, slot, x.rows) {
+                    Serve::Dense(e) => e.forward(&x),
+                    Serve::Fused(fl) => {
+                        let sh = fl.shared_act(&x);
+                        fl.forward_slot(slot, &x, &sh)
+                    }
+                };
+                let tol = 1e-4 * (1.0 + want.frob_norm());
+                if got.sq_dist(&want).sqrt() > tol {
+                    return Err(format!("slot {slot}: serve output diverged"));
+                }
+            }
+            let m = &cache.metrics;
+            if m.hits + m.misses != ops.len() as u64 {
+                return Err("hit+miss accounting broken".into());
+            }
+            if m.restore_serves + m.fused_serves != m.misses {
+                return Err(format!(
+                    "every miss needs a recorded decision: {} + {} != {}",
+                    m.restore_serves, m.fused_serves, m.misses
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_cache_never_exceeds_budget_and_stays_correct() {
     // Random access sequences under random budgets: the cache's used bytes
     // never exceed budget (except a single over-budget entry), and every

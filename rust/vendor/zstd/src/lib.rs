@@ -1,0 +1,296 @@
+//! Minimal in-tree stand-in for the `zstd` crate (offline build).
+//!
+//! Exposes the two functions the repo uses — [`encode_all`] / [`decode_all`]
+//! — backed by an order-0 canonical-Huffman byte coder instead of real
+//! zstd. That is enough for the checkpoint use case: f32 weight blobs have
+//! near-constant exponent bytes and a JSON header, so entropy coding
+//! shrinks them losslessly (typically 10–25 %). The container format is our
+//! own (`RZH1` magic); it is NOT zstd-compatible on disk, which is fine
+//! because this repo is the only reader and writer.
+
+use std::io::{Error, ErrorKind, Read, Result};
+
+const MAGIC: &[u8; 4] = b"RZH1";
+/// Cap on canonical code length. Huffman depth is bounded by
+/// log_phi(total_count) ≈ 1.44·log2(total), far below 64 for any input that
+/// fits in memory; the cap is asserted, not enforced by reshaping.
+const MAX_LEN: usize = 63;
+
+/// Compress everything readable from `source`. `level` is accepted for API
+/// compatibility and ignored (the coder has no quality knob).
+pub fn encode_all<R: Read>(mut source: R, _level: i32) -> Result<Vec<u8>> {
+    let mut data = Vec::new();
+    source.read_to_end(&mut data)?;
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 512);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    if data.is_empty() {
+        out.extend_from_slice(&[0u8; 256]);
+        return Ok(out);
+    }
+
+    let mut freq = [0u64; 256];
+    for &b in &data {
+        freq[b as usize] += 1;
+    }
+    let lengths = huffman_lengths(&freq);
+    out.extend_from_slice(&lengths);
+
+    let codes = canonical_codes(&lengths);
+    let mut bits = BitWriter::new();
+    for &b in &data {
+        let (code, len) = codes[b as usize];
+        bits.push(code, len);
+    }
+    out.extend_from_slice(&bits.finish());
+    Ok(out)
+}
+
+/// Decompress a buffer produced by [`encode_all`].
+pub fn decode_all<R: Read>(mut source: R) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    source.read_to_end(&mut buf)?;
+    let bad = |msg: &str| Error::new(ErrorKind::InvalidData, format!("rzh1: {msg}"));
+    if buf.len() < 4 + 8 + 256 || &buf[..4] != MAGIC {
+        return Err(bad("bad magic or truncated header"));
+    }
+    let raw_len = u64::from_le_bytes(buf[4..12].try_into().unwrap()) as usize;
+    if raw_len == 0 {
+        return Ok(Vec::new());
+    }
+    let mut lengths = [0u8; 256];
+    lengths.copy_from_slice(&buf[12..268]);
+    let payload = &buf[268..];
+
+    // Canonical decode tables: per-length first code and symbol list.
+    let mut count = [0usize; MAX_LEN + 1];
+    let mut by_len: Vec<Vec<u8>> = vec![Vec::new(); MAX_LEN + 1];
+    for sym in 0..256usize {
+        let l = lengths[sym] as usize;
+        if l > 0 {
+            if l > MAX_LEN {
+                return Err(bad("code length out of range"));
+            }
+            count[l] += 1;
+            by_len[l].push(sym as u8);
+        }
+    }
+    if count.iter().sum::<usize>() == 0 {
+        return Err(bad("no symbols in table"));
+    }
+    // first[l] = smallest code of length l (same recurrence the encoder's
+    // `canonical_codes` uses).
+    let mut first = [0u64; MAX_LEN + 1];
+    for l in 2..=MAX_LEN {
+        first[l] = (first[l - 1] + count[l - 1] as u64) << 1;
+    }
+
+    let mut out = Vec::with_capacity(raw_len);
+    let mut code = 0u64;
+    let mut len = 0usize;
+    'outer: for &byte in payload {
+        for bit in (0..8).rev() {
+            code = (code << 1) | ((byte >> bit) & 1) as u64;
+            len += 1;
+            if len > MAX_LEN {
+                return Err(bad("code runs past max length"));
+            }
+            if count[len] > 0 {
+                // Complete canonical codes of length `len` occupy exactly
+                // [first[len], first[len] + count[len]); prefixes of longer
+                // codes sort above that window.
+                let offset = code.wrapping_sub(first[len]);
+                if offset < count[len] as u64 {
+                    out.push(by_len[len][offset as usize]);
+                    if out.len() == raw_len {
+                        break 'outer;
+                    }
+                    code = 0;
+                    len = 0;
+                }
+            }
+        }
+    }
+    if out.len() != raw_len {
+        return Err(bad("truncated payload"));
+    }
+    Ok(out)
+}
+
+/// Huffman code lengths for the given byte frequencies (0 for unused).
+fn huffman_lengths(freq: &[u64; 256]) -> [u8; 256] {
+    let mut lengths = [0u8; 256];
+    // Arena of (weight, parent); leaves first.
+    let mut weight: Vec<u64> = Vec::new();
+    let mut parent: Vec<usize> = Vec::new();
+    let mut leaf_of_sym = [usize::MAX; 256];
+    let mut heap = std::collections::BinaryHeap::new();
+    for sym in 0..256usize {
+        if freq[sym] > 0 {
+            let id = weight.len();
+            leaf_of_sym[sym] = id;
+            weight.push(freq[sym]);
+            parent.push(usize::MAX);
+            heap.push(std::cmp::Reverse((freq[sym], id)));
+        }
+    }
+    if heap.len() == 1 {
+        // Single distinct byte: give it a 1-bit code.
+        for sym in 0..256usize {
+            if leaf_of_sym[sym] != usize::MAX {
+                lengths[sym] = 1;
+            }
+        }
+        return lengths;
+    }
+    while heap.len() > 1 {
+        let std::cmp::Reverse((w1, i1)) = heap.pop().unwrap();
+        let std::cmp::Reverse((w2, i2)) = heap.pop().unwrap();
+        let id = weight.len();
+        weight.push(w1 + w2);
+        parent.push(usize::MAX);
+        parent[i1] = id;
+        parent[i2] = id;
+        heap.push(std::cmp::Reverse((w1 + w2, id)));
+    }
+    for sym in 0..256usize {
+        let mut node = leaf_of_sym[sym];
+        if node == usize::MAX {
+            continue;
+        }
+        let mut depth = 0u8;
+        while parent[node] != usize::MAX {
+            node = parent[node];
+            depth += 1;
+        }
+        assert!((depth as usize) <= MAX_LEN, "huffman depth {depth} exceeds cap");
+        lengths[sym] = depth;
+    }
+    lengths
+}
+
+/// Canonical (code, length) per symbol: symbols sorted by (length, symbol)
+/// get consecutive codes, lengths bump with a left shift — the scheme the
+/// decoder's `first[]` table mirrors exactly.
+fn canonical_codes(lengths: &[u8; 256]) -> [(u64, u8); 256] {
+    let mut count = [0u64; MAX_LEN + 1];
+    for &l in lengths.iter() {
+        if l > 0 {
+            count[l as usize] += 1;
+        }
+    }
+    let mut next = [0u64; MAX_LEN + 1];
+    let mut code = 0u64;
+    for l in 1..=MAX_LEN {
+        code = (code + count[l - 1]) << 1;
+        next[l] = code;
+    }
+    let mut codes = [(0u64, 0u8); 256];
+    for sym in 0..256usize {
+        let l = lengths[sym];
+        if l > 0 {
+            codes[sym] = (next[l as usize], l);
+            next[l as usize] += 1;
+        }
+    }
+    codes
+}
+
+/// MSB-first bit accumulator.
+struct BitWriter {
+    bytes: Vec<u8>,
+    cur: u8,
+    used: u8,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { bytes: Vec::new(), cur: 0, used: 0 }
+    }
+
+    fn push(&mut self, code: u64, len: u8) {
+        for bit in (0..len).rev() {
+            self.cur = (self.cur << 1) | ((code >> bit) & 1) as u8;
+            self.used += 1;
+            if self.used == 8 {
+                self.bytes.push(self.cur);
+                self.cur = 0;
+                self.used = 0;
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.used > 0 {
+            self.cur <<= 8 - self.used;
+            self.bytes.push(self.cur);
+        }
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let enc = encode_all(data, 3).unwrap();
+        decode_all(&enc[..]).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"a"), b"a");
+        assert_eq!(roundtrip(b"aaaaaaaa"), b"aaaaaaaa");
+        assert_eq!(roundtrip(b"ab"), b"ab");
+    }
+
+    #[test]
+    fn roundtrip_all_bytes() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn roundtrip_pseudorandom() {
+        // xorshift stream — near-incompressible, exercises long codes.
+        let mut x = 0x9E3779B97F4A7C15u64;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x & 0xFF) as u8
+            })
+            .collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn biased_data_shrinks() {
+        // 75 % of bytes drawn from a 4-symbol alphabet — the f32-exponent
+        // pattern the checkpoint writer relies on.
+        let mut x = 1u64;
+        let data: Vec<u8> = (0..100_000)
+            .map(|i| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                if i % 4 == 3 {
+                    0x3C + ((x >> 33) & 1) as u8
+                } else {
+                    (x >> 40) as u8
+                }
+            })
+            .collect();
+        let enc = encode_all(&data[..], 3).unwrap();
+        assert!(enc.len() < data.len(), "{} !< {}", enc.len(), data.len());
+        assert_eq!(decode_all(&enc[..]).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode_all(&b"NOPE"[..]).is_err());
+        assert!(decode_all(&[0u8; 300][..]).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 CI for the resmoe repo: release build, full test suite, and a fast
+# perf smoke that exercises BOTH the serial path (RESMOE_THREADS=1) and the
+# persistent worker pool (RESMOE_THREADS=2). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== tests =="
+cargo test -q
+
+echo "== tests (serial kernels, RESMOE_THREADS=1) =="
+RESMOE_THREADS=1 cargo test -q --lib tensor
+
+echo "== perf smoke (pooled, RESMOE_THREADS=2) =="
+RESMOE_THREADS=2 cargo bench --bench perf_hotpath -- --fast
+
+echo "CI OK"
