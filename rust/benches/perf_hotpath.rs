@@ -10,7 +10,9 @@
 use resmoe::baselines::OtFusion;
 use resmoe::compress::{compress_model, CompressCtx, Compressor, ResMoE};
 use resmoe::coordinator::{Engine, ExpertCache, Request};
+use resmoe::moe::model_io::{load_model, save_model_compressed};
 use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
+use resmoe::store::{pack_compressed_model, ExpertStore};
 use resmoe::tensor::matrix::matmul_nt_into;
 use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
 use resmoe::util::bench::{BenchRunner, Table};
@@ -192,10 +194,67 @@ fn main() {
             m.fused_serves, m.restore_serves, m.misses
         );
     }
-    let dense_engine = Engine::dense(model);
+    let dense_engine = Engine::dense(model.clone());
     runner.run("engine score 96 tokens (dense baseline)", 1, iters.min(5), || {
         std::hint::black_box(dense_engine.handle(&Request::Score { tokens: tokens.clone() }));
     });
+
+    // --- cold start: monolithic RMWZ load vs demand-paged RMES artifact.
+    // Both serve the same compressed model. The monolithic path must read +
+    // entropy-decode the WHOLE restored model before the first token; the
+    // packed path opens the index, loads backbone + skeletons, and pages in
+    // only the expert shards the first request routes to.
+    let cold_dir = std::env::temp_dir().join("resmoe-bench-coldstart");
+    std::fs::create_dir_all(&cold_dir).ok();
+    let rmwz = cold_dir.join("cold.rmwz");
+    let rmes = cold_dir.join("cold.rmes");
+    save_model_compressed(&cm.model, &rmwz, 3).expect("write rmwz");
+    pack_compressed_model(&model, &cm.layers, 0.25, &rmes).expect("pack rmes");
+    let first_tokens: Vec<u32> = (0..16).map(|i| (i * 11 % 256) as u32).collect();
+    let paged_budget = {
+        let store = ExpertStore::open(&rmes).unwrap();
+        (store.total_expert_raw_bytes() / 4) as usize // well below full residency
+    };
+    runner.run("cold start: RMWZ load + dense engine + 16-tok score", 1, iters.min(5), || {
+        let m = load_model(&rmwz).expect("load rmwz");
+        let e = Engine::dense(m);
+        std::hint::black_box(e.handle(&Request::Score { tokens: first_tokens.clone() }));
+    });
+    let mono_cold_ms = runner.results.last().unwrap().mean_ms();
+    runner.run("cold start: RMES open + paged engine + 16-tok score", 1, iters.min(5), || {
+        let mut e = Engine::from_store(&rmes, paged_budget).expect("open rmes");
+        e.disable_prefetch(); // measure pure demand paging
+        std::hint::black_box(e.handle(&Request::Score { tokens: first_tokens.clone() }));
+    });
+    let paged_cold_ms = runner.results.last().unwrap().mean_ms();
+    // Peak resident expert bytes after first token, each path.
+    let mono_resident = cm.report.total_bytes_before(); // every dense expert in RAM
+    let (paged_resident, paged_read, artifact_bytes) = {
+        let mut e = Engine::from_store(&rmes, paged_budget).unwrap();
+        e.disable_prefetch();
+        e.handle(&Request::Score { tokens: first_tokens.clone() });
+        let (skel, dense, paged) = e.resident_breakdown().unwrap();
+        let store = e.backing_store().unwrap();
+        (skel + dense + paged, store.bytes_read(), store.file_bytes())
+    };
+    let mut cold_table = Table::new(
+        "Cold start: monolithic RMWZ vs demand-paged RMES (mixtral-mini, 4 compressed layers)",
+        &["path", "artifact (bytes)", "open+first-score (ms)", "resident expert bytes", "bytes read"],
+    );
+    cold_table.row(vec![
+        "monolithic RMWZ".into(),
+        format!("{}", std::fs::metadata(&rmwz).map(|m| m.len()).unwrap_or(0)),
+        format!("{mono_cold_ms:.3}"),
+        format!("{mono_resident}"),
+        "full file".into(),
+    ]);
+    cold_table.row(vec![
+        "demand-paged RMES".into(),
+        format!("{artifact_bytes}"),
+        format!("{paged_cold_ms:.3}"),
+        format!("{paged_resident}"),
+        format!("{paged_read}"),
+    ]);
 
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
@@ -213,4 +272,6 @@ fn main() {
     t.save_json("BENCH_perf_hotpath");
     spmm_table.print();
     spmm_table.save_json("BENCH_spmm_density_sweep");
+    cold_table.print();
+    cold_table.save_json("BENCH_coldstart");
 }

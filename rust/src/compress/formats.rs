@@ -21,11 +21,14 @@
 use crate::moe::expert::{add_bias_rows, silu, ExpertForward};
 use crate::moe::{ExpertArch, ExpertWeights, MoeLayer};
 use crate::tensor::matrix::{matmul_acc_into, matmul_nt_into};
+use crate::tensor::sparse::IndexWidth;
 use crate::tensor::{Csr, Matrix, Svd};
+use crate::util::bytes::{ByteReader, PutLe};
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// How one expert's stored matrix (full design matrix or residual) is kept.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ResidualRepr {
     /// Dense matrix; `accounted_params` on the expert tracks how many
     /// entries the method actually pays for (e.g. structured pruning zeroes
@@ -77,8 +80,143 @@ impl ResidualRepr {
     }
 }
 
+// ------------------------------------------------- shard wire format
+// Binary payloads for the `store` artifact (`RMES`): one matrix per center
+// shard, one `CompressedExpert` per residual shard. Little-endian, self-
+// delimiting, exact f32 bit round-trip (checked by `expect_done` on decode
+// and the pack/load property tests).
+
+fn encode_matrix(m: &Matrix, out: &mut Vec<u8>) {
+    out.put_u32(m.rows as u32);
+    out.put_u32(m.cols as u32);
+    out.put_f32s(&m.data);
+}
+
+fn decode_matrix(r: &mut ByteReader) -> Result<Matrix> {
+    let rows = r.len()?;
+    let cols = r.len()?;
+    let n = rows.checked_mul(cols).ok_or_else(|| anyhow::anyhow!("matrix dims overflow"))?;
+    Ok(Matrix::from_vec(rows, cols, r.f32s(n)?))
+}
+
+/// Wire-encode one bare matrix (the store's center shard payload).
+pub fn encode_matrix_shard(m: &Matrix) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_matrix(m, &mut out);
+    out
+}
+
+/// Decode a payload produced by [`encode_matrix_shard`].
+pub fn decode_matrix_shard(bytes: &[u8]) -> Result<Matrix> {
+    let mut r = ByteReader::new(bytes);
+    let m = decode_matrix(&mut r)?;
+    r.expect_done()?;
+    Ok(m)
+}
+
+fn index_width_tag(w: IndexWidth) -> u8 {
+    match w {
+        IndexWidth::U16 => 2,
+        IndexWidth::U32 => 4,
+        IndexWidth::U64 => 8,
+    }
+}
+
+fn index_width_from_tag(t: u8) -> Result<IndexWidth> {
+    match t {
+        2 => Ok(IndexWidth::U16),
+        4 => Ok(IndexWidth::U32),
+        8 => Ok(IndexWidth::U64),
+        other => bail!("bad sparse index-width tag {other}"),
+    }
+}
+
+impl ResidualRepr {
+    /// Stable residual-kind name used in the store's JSON index.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ResidualRepr::Dense(_) => "dense",
+            ResidualRepr::SparseCsr(_) => "csr",
+            ResidualRepr::LowRank(_) => "svd",
+        }
+    }
+
+    /// Append the wire encoding of this representation.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ResidualRepr::Dense(m) => {
+                out.put_u8(0);
+                encode_matrix(m, out);
+            }
+            ResidualRepr::SparseCsr(c) => {
+                out.put_u8(1);
+                out.put_u32(c.rows as u32);
+                out.put_u32(c.cols as u32);
+                out.put_u8(index_width_tag(c.index_width));
+                out.put_u32(c.values.len() as u32);
+                out.put_u32s(&c.row_ptr);
+                out.put_u32s(&c.col_idx);
+                out.put_f32s(&c.values);
+            }
+            ResidualRepr::LowRank(s) => {
+                out.put_u8(2);
+                out.put_u32(s.s.len() as u32);
+                out.put_f32s(&s.s);
+                encode_matrix(&s.u, out);
+                encode_matrix(&s.vt, out);
+            }
+        }
+    }
+
+    /// Decode one representation from the cursor.
+    pub fn decode(r: &mut ByteReader) -> Result<ResidualRepr> {
+        match r.u8()? {
+            0 => Ok(ResidualRepr::Dense(decode_matrix(r)?)),
+            1 => {
+                let rows = r.len()?;
+                let cols = r.len()?;
+                let index_width = index_width_from_tag(r.u8()?)?;
+                let nnz = r.len()?;
+                let row_ptr = r.u32s(rows + 1)?;
+                if row_ptr.first().copied() != Some(0)
+                    || row_ptr.last().copied() != Some(nnz as u32)
+                    || row_ptr.windows(2).any(|w| w[0] > w[1])
+                {
+                    bail!("csr shard: row_ptr not a monotone 0..={nnz} prefix scan");
+                }
+                let col_idx = r.u32s(nnz)?;
+                if col_idx.iter().any(|&c| c as usize >= cols) {
+                    bail!("csr shard: column index out of range (cols {cols})");
+                }
+                let values = r.f32s(nnz)?;
+                Ok(ResidualRepr::SparseCsr(Csr { rows, cols, row_ptr, col_idx, values, index_width }))
+            }
+            2 => {
+                let rank = r.len()?;
+                let s = r.f32s(rank)?;
+                let u = decode_matrix(r)?;
+                let vt = decode_matrix(r)?;
+                if u.cols != rank || vt.rows != rank {
+                    bail!("svd shard: factor dims disagree with rank {rank}");
+                }
+                Ok(ResidualRepr::LowRank(Svd { u, s, vt }))
+            }
+            other => bail!("bad residual-kind tag {other}"),
+        }
+    }
+
+    /// Design-matrix shape `(pI, D)` of the expert this residual restores.
+    pub fn design_shape(&self) -> (usize, usize) {
+        match self {
+            ResidualRepr::Dense(m) => (m.rows, m.cols),
+            ResidualRepr::SparseCsr(c) => (c.rows, c.cols),
+            ResidualRepr::LowRank(s) => (s.u.rows, s.vt.cols),
+        }
+    }
+}
+
 /// One stored expert.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompressedExpert {
     pub residual: ResidualRepr,
     /// Output bias, kept uncompressed (p values; excluded from the design
@@ -89,8 +227,38 @@ pub struct CompressedExpert {
     pub accounted_params: usize,
 }
 
+impl CompressedExpert {
+    /// Wire-encode this expert as one store shard payload (residual + b2 +
+    /// accounted params).
+    pub fn encode_shard(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.put_u64(self.accounted_params as u64);
+        out.put_u32(self.b2.len() as u32);
+        out.put_f32s(&self.b2);
+        self.residual.encode(&mut out);
+        out
+    }
+
+    /// Decode a shard payload produced by [`CompressedExpert::encode_shard`].
+    pub fn decode_shard(bytes: &[u8]) -> Result<CompressedExpert> {
+        let mut r = ByteReader::new(bytes);
+        let accounted_params = r.u64()? as usize;
+        let nb2 = r.len()?;
+        let b2 = r.f32s(nb2)?;
+        let residual = ResidualRepr::decode(&mut r)?;
+        r.expect_done()?;
+        Ok(CompressedExpert { residual, b2, accounted_params })
+    }
+
+    /// In-memory bytes this expert occupies once decoded (the store cache's
+    /// paging unit).
+    pub fn memory_bytes(&self) -> usize {
+        self.residual.memory_bytes() + self.b2.len() * 4
+    }
+}
+
 /// A compressed MoE layer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompressedLayer {
     pub method: String,
     pub arch: ExpertArch,
@@ -123,7 +291,13 @@ impl CompressedLayer {
 
     /// Restore the design matrix for router slot `k` (`W_ω + Δ_k`).
     pub fn restore_design(&self, slot: usize) -> Matrix {
-        let e = &self.experts[self.expert_map[slot]];
+        self.restore_design_from(&self.experts[self.expert_map[slot]])
+    }
+
+    /// `W_ω + Δ` for an expert held OUTSIDE `self.experts` — the store-
+    /// backed cache pages residual shards in on demand and restores against
+    /// the resident center through this entry.
+    pub fn restore_design_from(&self, e: &CompressedExpert) -> Matrix {
         match &self.base {
             Some(base) => {
                 let mut out = base.clone();
@@ -136,8 +310,13 @@ impl CompressedLayer {
 
     /// Restore full expert weights for router slot `k` (Alg. 2 step 1).
     pub fn restore_expert(&self, slot: usize) -> ExpertWeights {
-        let e = &self.experts[self.expert_map[slot]];
-        let dm = self.restore_design(slot);
+        self.restore_expert_from(&self.experts[self.expert_map[slot]])
+    }
+
+    /// Restore full expert weights from an externally-paged expert (see
+    /// [`CompressedLayer::restore_design_from`]).
+    pub fn restore_expert_from(&self, e: &CompressedExpert) -> ExpertWeights {
+        let dm = self.restore_design_from(e);
         ExpertWeights::from_design_matrix(self.arch, self.d_model, &dm, e.b2.clone())
     }
 
@@ -191,11 +370,19 @@ impl CompressedLayer {
     /// share). Cheap — O(stored bytes) — and cached by the serving
     /// coordinator per block.
     pub fn fused(&self) -> Option<FusedLayer> {
+        let base = self.fused_center()?;
+        let experts = self.experts.iter().map(|e| e.fused(self.arch, self.d_model)).collect();
+        FusedLayer { base, experts, expert_map: self.expert_map.clone() }.into()
+    }
+
+    /// Densify ONLY the center expert (`W_ω`, b2 = 0) — the store-backed
+    /// cache builds this once per block and pairs it with per-expert fused
+    /// pieces paged in on demand, so no full [`FusedLayer`] (which would
+    /// need every residual shard) is ever materialized.
+    pub fn fused_center(&self) -> Option<ExpertWeights> {
         let base_dm = self.base.as_ref()?;
         let p = self.d_model;
-        let base = ExpertWeights::from_design_matrix(self.arch, p, base_dm, vec![0.0; p]);
-        let experts = self.experts.iter().map(|e| e.fused(self.arch, p)).collect();
-        FusedLayer { base, experts, expert_map: self.expert_map.clone() }.into()
+        Some(ExpertWeights::from_design_matrix(self.arch, p, base_dm, vec![0.0; p]))
     }
 
     /// Restore-free forward for router slot `slot` — convenience entry that
@@ -468,49 +655,68 @@ impl FusedLayer {
 
     /// The once-per-batch center term (see [`SharedAct`]).
     pub fn shared_act(&self, x: &Matrix) -> SharedAct {
-        let mut a0 = x.matmul_nt(&self.base.w1);
-        add_bias_rows(&mut a0, &self.base.b1);
-        let g0 = self.base.w3.as_ref().map(|w3| {
-            let mut g = x.matmul_nt(w3);
-            add_bias_rows(&mut g, self.base.b3.as_ref().expect("gated center has b3"));
-            g
-        });
-        SharedAct { a0, g0 }
+        center_shared_act(&self.base, x)
     }
 
     /// Forward router slot `slot` over `x` (B × p), given the shared center
     /// term for the SAME rows. Numerically equals
     /// `restore_expert(slot).forward(x)` up to f32 reassociation.
     pub fn forward_slot(&self, slot: usize, x: &Matrix, shared: &SharedAct) -> Matrix {
-        let e = &self.experts[self.expert_map[slot]];
-        debug_assert_eq!(shared.a0.rows, x.rows);
-        let mut h = shared.a0.clone();
-        e.d_up.apply_nt_acc(x, &mut h);
-        add_bias_rows(&mut h, &e.db1);
-        match self.base.arch {
-            ExpertArch::Relu => {
-                for v in h.data.iter_mut() {
-                    *v = v.max(0.0);
-                }
-            }
-            ExpertArch::SwiGlu => {
-                let mut g = shared.g0.clone().expect("gated layer has shared gate term");
-                if let Some(piece) = &e.d_gate {
-                    piece.apply_nt_acc(x, &mut g);
-                }
-                add_bias_rows(&mut g, e.db3.as_ref().expect("gated expert has db3"));
-                for (hv, gv) in h.data.iter_mut().zip(&g.data) {
-                    *hv = silu(*hv) * gv;
-                }
+        fused_forward_expert(&self.base, &self.experts[self.expert_map[slot]], x, shared)
+    }
+}
+
+/// The once-per-batch center term against a densified center expert —
+/// [`FusedLayer::shared_act`] and the store-backed paged serve path both
+/// funnel through here, so the two modes are bit-identical.
+pub fn center_shared_act(base: &ExpertWeights, x: &Matrix) -> SharedAct {
+    let mut a0 = x.matmul_nt(&base.w1);
+    add_bias_rows(&mut a0, &base.b1);
+    let g0 = base.w3.as_ref().map(|w3| {
+        let mut g = x.matmul_nt(w3);
+        add_bias_rows(&mut g, base.b3.as_ref().expect("gated center has b3"));
+        g
+    });
+    SharedAct { a0, g0 }
+}
+
+/// Restore-free forward of ONE fused expert against a densified center,
+/// given the shared center term for the same rows of `x`. The shared body
+/// behind [`FusedLayer::forward_slot`] and the store cache's
+/// `Serve::Paged` path.
+pub fn fused_forward_expert(
+    base: &ExpertWeights,
+    e: &FusedExpert,
+    x: &Matrix,
+    shared: &SharedAct,
+) -> Matrix {
+    debug_assert_eq!(shared.a0.rows, x.rows);
+    let mut h = shared.a0.clone();
+    e.d_up.apply_nt_acc(x, &mut h);
+    add_bias_rows(&mut h, &e.db1);
+    match base.arch {
+        ExpertArch::Relu => {
+            for v in h.data.iter_mut() {
+                *v = v.max(0.0);
             }
         }
-        // out = h @ (W_ω² + Δ²)ᵀ + b2, with the center part dense and the
-        // residual part structured.
-        let mut out = h.matmul_nt(&self.base.w2);
-        e.d_down.apply_acc(&h, &mut out);
-        add_bias_rows(&mut out, &e.b2);
-        out
+        ExpertArch::SwiGlu => {
+            let mut g = shared.g0.clone().expect("gated layer has shared gate term");
+            if let Some(piece) = &e.d_gate {
+                piece.apply_nt_acc(x, &mut g);
+            }
+            add_bias_rows(&mut g, e.db3.as_ref().expect("gated expert has db3"));
+            for (hv, gv) in h.data.iter_mut().zip(&g.data) {
+                *hv = silu(*hv) * gv;
+            }
+        }
     }
+    // out = h @ (W_ω² + Δ²)ᵀ + b2, with the center part dense and the
+    // residual part structured.
+    let mut out = h.matmul_nt(&base.w2);
+    e.d_down.apply_acc(&h, &mut out);
+    add_bias_rows(&mut out, &e.b2);
+    out
 }
 
 /// A `(FusedLayer, slot)` pair viewed as a standalone expert: computes its
@@ -805,5 +1011,71 @@ mod tests {
             .collect();
         let sparse = CompressedLayer { experts, ..dense.clone() };
         assert!(sparse.memory_bytes() < dense.memory_bytes());
+    }
+
+    #[test]
+    fn expert_shard_roundtrips_every_repr_bit_exact() {
+        let mut rng = Rng::new(20);
+        let dense = Matrix::randn(10, 12, 1.0, &mut rng);
+        let sparse = dense.map(|v| if v.abs() > 0.8 { v } else { 0.0 });
+        let reprs = vec![
+            ResidualRepr::Dense(dense.clone()),
+            ResidualRepr::SparseCsr(Csr::from_dense(&sparse, IndexWidth::U16)),
+            ResidualRepr::LowRank(jacobi_svd(&dense)),
+        ];
+        for residual in reprs {
+            let e = CompressedExpert {
+                accounted_params: residual.n_params(),
+                residual,
+                b2: (0..7).map(|_| rng.normal()).collect(),
+            };
+            let bytes = e.encode_shard();
+            let back = CompressedExpert::decode_shard(&bytes).unwrap();
+            assert_eq!(e, back, "shard roundtrip must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn expert_shard_rejects_truncation_and_trailing() {
+        let mut rng = Rng::new(21);
+        let m = Matrix::randn(4, 6, 1.0, &mut rng);
+        let e = CompressedExpert {
+            accounted_params: m.n_params(),
+            residual: ResidualRepr::Dense(m),
+            b2: vec![1.0, 2.0],
+        };
+        let bytes = e.encode_shard();
+        assert!(CompressedExpert::decode_shard(&bytes[..bytes.len() - 3]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(CompressedExpert::decode_shard(&extra).is_err());
+        // Unknown residual tag.
+        let mut bad = bytes;
+        let tag_pos = 8 + 4 + 2 * 4; // accounted u64 + b2 len + b2 values
+        bad[tag_pos] = 9;
+        assert!(CompressedExpert::decode_shard(&bad).is_err());
+    }
+
+    #[test]
+    fn fused_center_matches_fused_layer_base() {
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(22);
+        let layer = MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &layer, 0.25, 5);
+        let fl = cl.fused().unwrap();
+        let center = cl.fused_center().unwrap();
+        assert_eq!(center, fl.base);
+        // The free functions agree with the layer methods bit-for-bit.
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        let sh = center_shared_act(&center, &x);
+        let sh2 = fl.shared_act(&x);
+        assert_eq!(sh.a0, sh2.a0);
+        for slot in 0..4 {
+            let via_free =
+                fused_forward_expert(&center, &fl.experts[fl.expert_map[slot]], &x, &sh);
+            let via_layer = fl.forward_slot(slot, &x, &sh2);
+            assert_eq!(via_free, via_layer);
+        }
     }
 }

@@ -12,6 +12,7 @@ pub mod svd_compress;
 pub mod wanda;
 
 pub use formats::{
+    center_shared_act, decode_matrix_shard, encode_matrix_shard, fused_forward_expert,
     CompressedExpert, CompressedLayer, FusedExpert, FusedLayer, FusedPiece, FusedSlot,
     ResidualRepr, SharedAct,
 };

@@ -1,6 +1,7 @@
 //! Restored-expert LRU cache — the paper's Algorithm 2 ("reconstruct and
 //! dynamically load the compressed experts") as a serving-runtime feature —
-//! plus the **fused-vs-restore cost model** for cache misses.
+//! plus the **fused-vs-restore cost model** for cache misses and the
+//! **backing-store demand-paging mode**.
 //!
 //! Resident set: the per-layer barycenter `W_ω` lives inside the
 //! [`CompressedLayer`] (always in memory, small); restored dense experts
@@ -16,13 +17,29 @@
 //! wins for experts that will stay resident; the fused path wins when the
 //! budget cannot hold the expert anyway (thrash) or the expert is cold.
 //! Decisions are recorded in [`CacheMetrics`].
+//!
+//! **Backing-store mode** ([`ExpertCache::from_store`]): instead of holding
+//! every compressed residual in memory, the cache keeps only the per-layer
+//! skeletons (center + routing metadata) resident and pages individual
+//! expert residual shards in from an `RMES` artifact on demand. Paged
+//! shards share the byte budget with restored dense experts and are evicted
+//! first (they are cheap to refetch); the fused/restore cost model is
+//! unchanged and keyed on the dense-resident bytes alone, so a store-backed
+//! engine makes byte-identical serving decisions to a monolithic one under
+//! the same request stream. Fused misses answer with [`Serve::Paged`] — the
+//! densified center plus the one paged expert's split pieces — so no full
+//! [`FusedLayer`] (which would need every shard) is ever built.
 
-use crate::compress::{CompressedLayer, FusedLayer};
+use crate::compress::{CompressedExpert, CompressedLayer, FusedExpert, FusedLayer};
 use crate::moe::ExpertWeights;
+use crate::store::ExpertStore;
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// (block index, router slot) → restored expert.
+/// (block index, router slot) → restored expert. Paged shards are keyed by
+/// (block index, stored-expert index) — identical unless a merge method
+/// made `expert_map` non-injective.
 type Key = (usize, usize);
 
 #[derive(Debug, Default, Clone)]
@@ -35,6 +52,23 @@ pub struct CacheMetrics {
     pub restore_serves: u64,
     /// Misses answered restore-free through the fused path.
     pub fused_serves: u64,
+    /// Prefetch requests that found the key already resident.
+    pub prefetch_hits: u64,
+    /// Prefetch requests that had to load (or schedule loading of) the key.
+    pub prefetch_misses: u64,
+    /// Demand accesses served by an entry a prefetch brought in — the
+    /// prefetcher's effectiveness numerator.
+    pub prefetch_useful: u64,
+    /// Async prefetch results discarded (raced a demand fetch, or the
+    /// budget was full of demand-resident bytes).
+    pub prefetch_dropped: u64,
+    /// Residual shards fetched + decoded from the backing store.
+    pub shard_fetches: u64,
+    pub shard_fetch_ns: u64,
+    /// Decoded bytes of fetched shards.
+    pub shard_bytes: u64,
+    /// Paged shards evicted to make room.
+    pub shard_evictions: u64,
 }
 
 impl CacheMetrics {
@@ -46,6 +80,15 @@ impl CacheMetrics {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Fraction of prefetched entries that later served a demand access.
+    pub fn prefetch_usefulness(&self) -> f64 {
+        if self.prefetch_misses == 0 {
+            0.0
+        } else {
+            self.prefetch_useful as f64 / self.prefetch_misses as f64
+        }
+    }
 }
 
 /// How [`ExpertCache::serve`] answers a lookup.
@@ -55,6 +98,11 @@ pub enum Serve {
     Dense(Arc<ExpertWeights>),
     /// Restore-free: forward through [`FusedLayer::forward_slot`].
     Fused(Arc<FusedLayer>),
+    /// Restore-free in backing-store mode: the densified center plus the
+    /// single paged expert — forward through
+    /// [`crate::compress::fused_forward_expert`] with a
+    /// [`crate::compress::center_shared_act`] shared term.
+    Paged { center: Arc<ExpertWeights>, expert: Arc<FusedExpert> },
 }
 
 struct Entry {
@@ -62,14 +110,35 @@ struct Entry {
     bytes: usize,
     /// LRU stamp (monotone counter).
     last_used: u64,
+    /// Brought in by a prefetch and not yet demanded.
+    from_prefetch: bool,
 }
 
-/// LRU cache of restored experts over a set of compressed layers.
+struct ShardEntry {
+    expert: Arc<CompressedExpert>,
+    /// Lazily-split fused pieces for the paged serve path.
+    fused: Option<Arc<FusedExpert>>,
+    bytes: usize,
+    last_used: u64,
+    from_prefetch: bool,
+}
+
+/// LRU cache of restored experts over a set of compressed layers, with an
+/// optional backing artifact store for the residual shards.
 pub struct ExpertCache {
     layers: HashMap<usize, CompressedLayer>,
     entries: HashMap<Key, Entry>,
     /// Lazily built fused state per block (`None` = layer has no center).
+    /// Monolithic mode only — store mode uses `fused_centers` + per-shard
+    /// pieces instead.
     fused: HashMap<usize, Option<Arc<FusedLayer>>>,
+    /// Backing store (None = monolithic mode: every residual in memory).
+    store: Option<Arc<ExpertStore>>,
+    /// Store mode: paged residual shards, keyed by (block, expert index).
+    shards: HashMap<Key, ShardEntry>,
+    shard_used_bytes: usize,
+    /// Store mode: densified centers (`None` = layer has no center).
+    fused_centers: HashMap<usize, Option<Arc<ExpertWeights>>>,
     /// Decayed per-key access counts driving the restore-vs-fused choice.
     heat: HashMap<Key, u32>,
     /// serve() calls so far — the decay clock for `heat`. Deliberately NOT
@@ -104,6 +173,10 @@ impl ExpertCache {
             layers: layers.into_iter().collect(),
             entries: HashMap::new(),
             fused: HashMap::new(),
+            store: None,
+            shards: HashMap::new(),
+            shard_used_bytes: 0,
+            fused_centers: HashMap::new(),
             heat: HashMap::new(),
             serve_accesses: 0,
             fused_enabled: true,
@@ -112,6 +185,28 @@ impl ExpertCache {
             clock: 0,
             metrics: CacheMetrics::default(),
         }
+    }
+
+    /// Backing-store mode: load only the per-layer skeletons (center +
+    /// routing metadata) eagerly; every residual shard pages in on demand
+    /// through [`ExpertCache::serve`] / [`ExpertCache::prefetch`].
+    pub fn from_store(store: Arc<ExpertStore>, budget_bytes: usize) -> Result<ExpertCache> {
+        let mut layers = HashMap::new();
+        for block in store.blocks() {
+            let skeleton = store
+                .load_layer_skeleton(block)
+                .with_context(|| format!("load skeleton for block {block}"))?;
+            layers.insert(block, skeleton);
+        }
+        let mut cache = ExpertCache::new(Vec::new(), budget_bytes);
+        cache.layers = layers;
+        cache.store = Some(store);
+        Ok(cache)
+    }
+
+    /// The backing store, when in store mode.
+    pub fn backing_store(&self) -> Option<&Arc<ExpertStore>> {
+        self.store.as_ref()
     }
 
     /// Enable/disable the fused serve path (`true` by default). With it off
@@ -128,7 +223,25 @@ impl ExpertCache {
         self.layers.get(&block)
     }
 
-    /// Bytes of the always-resident compressed representations.
+    /// Stored-expert index behind router slot `slot` of `block`.
+    pub fn expert_index(&self, block: usize, slot: usize) -> Option<usize> {
+        self.layers.get(&block)?.expert_map.get(slot).copied()
+    }
+
+    /// Whether a demand access for `(block, slot)` would be answered from
+    /// memory (dense-restored entry, or paged shard in store mode).
+    pub fn is_resident(&self, block: usize, slot: usize) -> bool {
+        if self.entries.contains_key(&(block, slot)) {
+            return true;
+        }
+        match self.expert_index(block, slot) {
+            Some(eidx) => self.shards.contains_key(&(block, eidx)),
+            None => false,
+        }
+    }
+
+    /// Bytes of the always-resident compressed representations (store mode:
+    /// just the skeletons — centers + routing metadata).
     pub fn compressed_bytes(&self) -> usize {
         self.layers.values().map(|l| l.memory_bytes()).sum()
     }
@@ -140,15 +253,28 @@ impl ExpertCache {
     /// per-expert restored set; a deployment sizing memory should add
     /// `compressed_bytes + fused_bytes + budget`.
     pub fn fused_bytes(&self) -> usize {
-        self.fused
+        let monolithic: usize = self
+            .fused
             .values()
             .filter_map(|f| f.as_ref())
             .map(|f| f.memory_bytes())
-            .sum()
+            .sum();
+        let centers: usize = self
+            .fused_centers
+            .values()
+            .filter_map(|c| c.as_ref())
+            .map(|c| c.n_params() * 4)
+            .sum();
+        monolithic + centers
     }
 
     pub fn used_bytes(&self) -> usize {
         self.used_bytes
+    }
+
+    /// Bytes of paged residual shards currently resident (store mode).
+    pub fn paged_bytes(&self) -> usize {
+        self.shard_used_bytes
     }
 
     /// Fetch (restoring if needed) the expert for `(block, slot)` — the
@@ -159,47 +285,84 @@ impl ExpertCache {
             return e;
         }
         self.metrics.misses += 1;
-        self.restore_and_cache(block, slot)
+        self.restore_and_cache(block, slot).expect("expert shard fetch failed")
     }
 
     /// Serve `(block, slot)` for a sub-batch of `batch_tokens` tokens,
     /// choosing between the cached/restored dense expert and the
     /// restore-free fused path per the cost model. Decisions land in
     /// [`CacheMetrics::restore_serves`] / [`CacheMetrics::fused_serves`].
+    ///
+    /// Panics in store mode when a shard cannot be fetched or fails its
+    /// checksum — a corrupt artifact must never be silently served; use
+    /// [`ExpertCache::try_serve`] to handle the error instead.
     pub fn serve(&mut self, block: usize, slot: usize, batch_tokens: usize) -> Serve {
+        self.try_serve(block, slot, batch_tokens).expect("expert shard fetch failed")
+    }
+
+    /// Fallible [`ExpertCache::serve`] (store fetch / integrity errors).
+    pub fn try_serve(&mut self, block: usize, slot: usize, batch_tokens: usize) -> Result<Serve> {
         self.clock += 1;
         self.bump_heat((block, slot));
         if let Some(e) = self.hit(block, slot) {
-            return Serve::Dense(e);
+            return Ok(Serve::Dense(e));
         }
         self.metrics.misses += 1;
         if self.fused_enabled && !self.should_restore(block, slot, batch_tokens) {
-            if let Some(fl) = self.fused_layer(block) {
+            if self.store.is_some() {
+                if let Some(center) = self.fused_center(block) {
+                    let expert = self.fused_shard_expert(block, slot)?;
+                    self.metrics.fused_serves += 1;
+                    return Ok(Serve::Paged { center, expert });
+                }
+            } else if let Some(fl) = self.fused_layer(block) {
                 self.metrics.fused_serves += 1;
-                return Serve::Fused(fl);
+                return Ok(Serve::Fused(fl));
             }
         }
         self.metrics.restore_serves += 1;
-        Serve::Dense(self.restore_and_cache(block, slot))
+        Ok(Serve::Dense(self.restore_and_cache(block, slot)?))
     }
 
     fn hit(&mut self, block: usize, slot: usize) -> Option<Arc<ExpertWeights>> {
         let clock = self.clock;
         let e = self.entries.get_mut(&(block, slot))?;
         e.last_used = clock;
+        if e.from_prefetch {
+            e.from_prefetch = false;
+            self.metrics.prefetch_useful += 1;
+        }
         self.metrics.hits += 1;
         Some(e.expert.clone())
     }
 
-    fn restore_and_cache(&mut self, block: usize, slot: usize) -> Arc<ExpertWeights> {
+    fn restore_and_cache(&mut self, block: usize, slot: usize) -> Result<Arc<ExpertWeights>> {
         let clock = self.clock;
-        let t0 = std::time::Instant::now();
-        let layer = self.layers.get(&block).expect("block not compressed");
-        let restored = Arc::new(layer.restore_expert(slot));
-        self.metrics.restore_ns += t0.elapsed().as_nanos() as u64;
+        let restored = if self.store.is_some() {
+            // Err, not panic: a CRC-valid artifact whose expert map is
+            // shorter than the backbone router's slot count must fail this
+            // request, not poison the cache mutex for every later one.
+            let eidx = self.expert_index(block, slot).ok_or_else(|| {
+                anyhow::anyhow!("artifact expert map has no entry for block {block} slot {slot}")
+            })?;
+            let compressed = self.shard_expert(block, eidx)?;
+            let layer = self.layers.get(&block).expect("block not compressed");
+            let t0 = std::time::Instant::now();
+            let restored = Arc::new(layer.restore_expert_from(&compressed));
+            self.metrics.restore_ns += t0.elapsed().as_nanos() as u64;
+            restored
+        } else {
+            let layer = self.layers.get(&block).expect("block not compressed");
+            let t0 = std::time::Instant::now();
+            let restored = Arc::new(layer.restore_expert(slot));
+            self.metrics.restore_ns += t0.elapsed().as_nanos() as u64;
+            restored
+        };
         let bytes = expert_bytes(&restored);
         // Evict LRU entries until the new expert fits (a single expert
-        // larger than the whole budget is allowed in alone).
+        // larger than the whole budget is allowed in alone). Only dense
+        // residents count here — paged shards are trimmed separately below
+        // so the dense working set evolves identically to monolithic mode.
         while self.used_bytes + bytes > self.budget_bytes && !self.entries.is_empty() {
             let (&victim, _) = self
                 .entries
@@ -213,9 +376,98 @@ impl ExpertCache {
         self.used_bytes += bytes;
         self.entries.insert(
             (block, slot),
-            Entry { expert: restored.clone(), bytes, last_used: clock },
+            Entry { expert: restored.clone(), bytes, last_used: clock, from_prefetch: false },
         );
-        restored
+        self.trim_shards();
+        Ok(restored)
+    }
+
+    /// Evict paged shards (LRU) until dense + paged fit the budget.
+    fn trim_shards(&mut self) {
+        while self.used_bytes + self.shard_used_bytes > self.budget_bytes
+            && !self.shards.is_empty()
+        {
+            self.evict_lru_shard();
+        }
+    }
+
+    fn evict_lru_shard(&mut self) {
+        let victim = self
+            .shards
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&k, _)| k);
+        if let Some(victim) = victim {
+            let removed = self.shards.remove(&victim).unwrap();
+            self.shard_used_bytes -= removed.bytes;
+            self.metrics.shard_evictions += 1;
+        }
+    }
+
+    /// Paged compressed expert for `(block, expert index)` — fetch + decode
+    /// from the backing store on first touch, LRU thereafter.
+    fn shard_expert(&mut self, block: usize, eidx: usize) -> Result<Arc<CompressedExpert>> {
+        let clock = self.clock;
+        if let Some(s) = self.shards.get_mut(&(block, eidx)) {
+            s.last_used = clock;
+            if s.from_prefetch {
+                s.from_prefetch = false;
+                self.metrics.prefetch_useful += 1;
+            }
+            return Ok(s.expert.clone());
+        }
+        let store = self.store.clone().expect("shard_expert requires store mode");
+        let t0 = std::time::Instant::now();
+        let expert = Arc::new(store.load_expert(block, eidx)?);
+        self.metrics.shard_fetch_ns += t0.elapsed().as_nanos() as u64;
+        self.metrics.shard_fetches += 1;
+        let bytes = expert.memory_bytes();
+        self.metrics.shard_bytes += bytes as u64;
+        // Make room among the paged shards (never evicts dense residents —
+        // they are the hot set the cost model chose to keep).
+        while self.used_bytes + self.shard_used_bytes + bytes > self.budget_bytes
+            && !self.shards.is_empty()
+        {
+            self.evict_lru_shard();
+        }
+        self.shard_used_bytes += bytes;
+        self.shards.insert(
+            (block, eidx),
+            ShardEntry {
+                expert: expert.clone(),
+                fused: None,
+                bytes,
+                last_used: clock,
+                from_prefetch: false,
+            },
+        );
+        Ok(expert)
+    }
+
+    /// The lazily-split fused pieces of a paged expert.
+    fn fused_shard_expert(&mut self, block: usize, slot: usize) -> Result<Arc<FusedExpert>> {
+        let eidx = self.expert_index(block, slot).ok_or_else(|| {
+            anyhow::anyhow!("artifact expert map has no entry for block {block} slot {slot}")
+        })?;
+        let (arch, d_model) = {
+            let layer = self.layers.get(&block).expect("block not compressed");
+            (layer.arch, layer.d_model)
+        };
+        let compressed = self.shard_expert(block, eidx)?;
+        let entry = self.shards.get_mut(&(block, eidx)).expect("just paged in");
+        if let Some(fused) = &entry.fused {
+            return Ok(fused.clone());
+        }
+        // Split pieces are real memory (~ the compressed residual again):
+        // charge them to the entry so paged_bytes reports the truth and
+        // eviction releases the full footprint.
+        let fused = Arc::new(compressed.fused(arch, d_model));
+        let extra = fused.memory_bytes();
+        entry.fused = Some(fused.clone());
+        entry.bytes += extra;
+        self.shard_used_bytes += extra;
+        self.trim_shards();
+        Ok(fused)
     }
 
     /// The restore-vs-fused cost model (EXPERIMENTS.md §Perf). Restoring
@@ -245,15 +497,16 @@ impl ExpertCache {
     }
 
     /// Bytes a restored dense expert for `(block, slot)` would occupy
-    /// (pI·D design params + b2), computed without restoring.
+    /// (pI·D design params + b2), computed without restoring — in store
+    /// mode from the artifact index, so no shard fetch is needed.
     fn restored_bytes(&self, block: usize, slot: usize) -> usize {
         let layer = self.layers.get(&block).expect("block not compressed");
+        if let Some(store) = &self.store {
+            let entry = store.layer_entry(block).expect("stored layer");
+            return (entry.design_rows * entry.design_cols + layer.d_model) * 4;
+        }
         let e = &layer.experts[layer.expert_map[slot]];
-        let (pi, d) = match &e.residual {
-            crate::compress::ResidualRepr::Dense(m) => (m.rows, m.cols),
-            crate::compress::ResidualRepr::SparseCsr(c) => (c.rows, c.cols),
-            crate::compress::ResidualRepr::LowRank(s) => (s.u.rows, s.vt.cols),
-        };
+        let (pi, d) = e.residual.design_shape();
         (pi * d + e.b2.len()) * 4
     }
 
@@ -271,6 +524,22 @@ impl ExpertCache {
         built
     }
 
+    /// Store mode: the densified center expert of `block` (`None` when the
+    /// layer has no shared center).
+    fn fused_center(&mut self, block: usize) -> Option<Arc<ExpertWeights>> {
+        if let Some(c) = self.fused_centers.get(&block) {
+            return c.clone();
+        }
+        let built = self
+            .layers
+            .get(&block)
+            .expect("block not compressed")
+            .fused_center()
+            .map(Arc::new);
+        self.fused_centers.insert(block, built.clone());
+        built
+    }
+
     fn bump_heat(&mut self, key: Key) {
         self.serve_accesses += 1;
         let h = self.heat.entry(key).or_insert(0);
@@ -284,17 +553,142 @@ impl ExpertCache {
     }
 
     /// Pre-warm the cache for the given (block, slot) pairs (the scheduler
-    /// calls this with router predictions).
+    /// calls this with router predictions). Synchronous: monolithic mode
+    /// restores dense experts, store mode pages the residual shards in.
+    /// Effectiveness lands in [`CacheMetrics::prefetch_hits`] /
+    /// [`CacheMetrics::prefetch_misses`] / [`CacheMetrics::prefetch_useful`]
+    /// — demand hit/miss counters are NOT touched, so the serving hit rate
+    /// stays attributable to the request stream.
     pub fn prefetch(&mut self, keys: &[Key]) {
         for &(b, s) in keys {
-            if self.has_layer(b) {
-                let _ = self.get(b, s);
+            if !self.has_layer(b) {
+                continue;
+            }
+            self.clock += 1;
+            if self.is_resident(b, s) {
+                self.metrics.prefetch_hits += 1;
+                self.touch(b, s);
+                continue;
+            }
+            self.metrics.prefetch_misses += 1;
+            if self.store.is_some() {
+                let Some(eidx) = self.expert_index(b, s) else { continue };
+                if self.shard_expert(b, eidx).is_ok() {
+                    if let Some(e) = self.shards.get_mut(&(b, eidx)) {
+                        e.from_prefetch = true;
+                    }
+                } else {
+                    self.metrics.prefetch_dropped += 1;
+                }
+            } else if self.restore_and_cache(b, s).is_ok() {
+                if let Some(e) = self.entries.get_mut(&(b, s)) {
+                    e.from_prefetch = true;
+                }
             }
         }
     }
 
+    /// Refresh the LRU stamp of a resident key without counting a demand
+    /// hit.
+    fn touch(&mut self, block: usize, slot: usize) {
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&(block, slot)) {
+            e.last_used = clock;
+            return;
+        }
+        if let Some(eidx) = self.expert_index(block, slot) {
+            if let Some(s) = self.shards.get_mut(&(block, eidx)) {
+                s.last_used = clock;
+            }
+        }
+    }
+
+    /// Plan an async prefetch: record hit/miss metrics for `keys`
+    /// ((block, slot) pairs) and return the deduplicated
+    /// (block, expert-index) pairs that actually need a fetch. Keys whose
+    /// shard is resident OR already being fetched (`in_flight`, keyed by
+    /// (block, expert index)) count as prefetch hits — the original miss
+    /// was recorded when the fetch was scheduled, so usefulness stays an
+    /// honest per-load ratio. The [`crate::store::Prefetcher`] decodes the
+    /// returned keys off-thread and hands results back through
+    /// [`ExpertCache::insert_prefetched`].
+    pub fn plan_prefetch(
+        &mut self,
+        keys: &[Key],
+        in_flight: &std::collections::HashSet<Key>,
+    ) -> Vec<Key> {
+        let mut out = Vec::new();
+        for &(b, s) in keys {
+            if !self.has_layer(b) {
+                continue;
+            }
+            let Some(eidx) = self.expert_index(b, s) else { continue };
+            if self.entries.contains_key(&(b, s))
+                || self.shards.contains_key(&(b, eidx))
+                || in_flight.contains(&(b, eidx))
+                || out.contains(&(b, eidx))
+            {
+                self.metrics.prefetch_hits += 1;
+                // Refresh the resident entry's LRU stamp (as sync prefetch
+                // does): the prediction says this key is imminently needed,
+                // so it must not be the eviction victim of the very fetches
+                // this plan schedules.
+                self.clock += 1;
+                self.touch(b, s);
+            } else {
+                self.metrics.prefetch_misses += 1;
+                out.push((b, eidx));
+            }
+        }
+        out
+    }
+
+    /// Install a shard decoded by the async prefetcher. Never evicts dense
+    /// residents: if the budget is full of demand entries the result is
+    /// dropped (recorded in [`CacheMetrics::prefetch_dropped`]) rather than
+    /// displacing proven-hot state with a prediction.
+    pub fn insert_prefetched(&mut self, block: usize, eidx: usize, expert: CompressedExpert) {
+        if self.store.is_none() || self.shards.contains_key(&(block, eidx)) {
+            self.metrics.prefetch_dropped += 1;
+            return;
+        }
+        let bytes = expert.memory_bytes();
+        // Can it fit at all beside the dense residents? If not, drop the
+        // prediction BEFORE touching the shard pool — evicting every
+        // demand-proven shard only to discard the result anyway would be
+        // pure churn.
+        if self.used_bytes + bytes > self.budget_bytes {
+            self.metrics.prefetch_dropped += 1;
+            return;
+        }
+        while self.used_bytes + self.shard_used_bytes + bytes > self.budget_bytes
+            && !self.shards.is_empty()
+        {
+            self.evict_lru_shard();
+        }
+        self.clock += 1;
+        self.metrics.shard_fetches += 1;
+        self.metrics.shard_bytes += bytes as u64;
+        self.shard_used_bytes += bytes;
+        self.shards.insert(
+            (block, eidx),
+            ShardEntry {
+                expert: Arc::new(expert),
+                fused: None,
+                bytes,
+                last_used: self.clock,
+                from_prefetch: true,
+            },
+        );
+    }
+
     pub fn resident_experts(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Paged shards currently resident (store mode).
+    pub fn resident_shards(&self) -> usize {
+        self.shards.len()
     }
 }
 
@@ -302,8 +696,9 @@ impl ExpertCache {
 mod tests {
     use super::*;
     use crate::baselines::quick_compress;
-    use crate::compress::ResMoE;
+    use crate::compress::{center_shared_act, fused_forward_expert, ResMoE};
     use crate::moe::{ExpertArch, MoeLayer};
+    use crate::store::{pack_compressed_model, ExpertStore};
     use crate::util::Rng;
 
     fn compressed(seed: u64) -> (MoeLayer, CompressedLayer) {
@@ -371,13 +766,25 @@ mod tests {
     }
 
     #[test]
-    fn prefetch_warms() {
+    fn prefetch_warms_and_records_metrics() {
         let (_, cl) = compressed(5);
         let mut cache = ExpertCache::new(vec![(2, cl)], usize::MAX);
         cache.prefetch(&[(2, 0), (2, 1), (9, 0)]); // block 9 ignored
         assert_eq!(cache.resident_experts(), 2);
+        assert_eq!(cache.metrics.prefetch_misses, 2);
+        assert_eq!(cache.metrics.prefetch_hits, 0);
+        // Prefetch must not pollute the demand counters...
+        assert_eq!(cache.metrics.hits, 0);
+        assert_eq!(cache.metrics.misses, 0);
         cache.get(2, 0);
         assert_eq!(cache.metrics.hits, 1);
+        // ...and a demanded prefetched entry counts as useful exactly once.
+        cache.get(2, 0);
+        assert_eq!(cache.metrics.prefetch_useful, 1);
+        // Re-prefetching a resident key is a prefetch hit.
+        cache.prefetch(&[(2, 1)]);
+        assert_eq!(cache.metrics.prefetch_hits, 1);
+        assert!(cache.metrics.prefetch_usefulness() > 0.0);
     }
 
     #[test]
@@ -413,7 +820,7 @@ mod tests {
                     let want = cl.restore_expert(slot).forward(&x);
                     assert!(got.sq_dist(&want) < 1e-8, "slot {slot}");
                 }
-                Serve::Dense(_) => panic!("thrash budget must serve fused"),
+                _ => panic!("thrash budget must serve fused"),
             }
         }
         assert_eq!(cache.metrics.fused_serves, 6);
@@ -470,5 +877,149 @@ mod tests {
         let (l, cl) = compressed(6);
         let cache = ExpertCache::new(vec![(0, cl)], usize::MAX);
         assert!(cache.compressed_bytes() < l.expert_params() * 4);
+    }
+
+    // ------------------------------------------------ backing-store mode
+
+    fn store_cache(seed: u64, budget: usize) -> (CompressedLayer, ExpertCache) {
+        let mut rng = Rng::new(seed);
+        let mut cfg = crate::moe::ModelConfig::switch_mini(4);
+        cfg.d_model = 8;
+        cfg.d_inner = 16;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        let model = crate::moe::Model::random(&cfg, &mut rng);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &l, 0.25, seed);
+        let dir = std::env::temp_dir().join("resmoe-cache-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("cache-{seed}.rmes"));
+        pack_compressed_model(&model, &[(1, cl.clone())], 0.25, &path).unwrap();
+        let store = Arc::new(ExpertStore::open(&path).unwrap());
+        let cache = ExpertCache::from_store(store, budget).unwrap();
+        (cl, cache)
+    }
+
+    #[test]
+    fn store_mode_pages_only_demanded_shards() {
+        let (cl, mut cache) = store_cache(30, usize::MAX);
+        // Skeleton resident, no experts paged yet.
+        assert_eq!(cache.resident_shards(), 0);
+        assert!(cache.compressed_bytes() > 0);
+        let e = cache.get(1, 2);
+        assert_eq!(*e, cl.restore_expert(2));
+        assert_eq!(cache.metrics.shard_fetches, 1);
+        assert_eq!(cache.resident_shards(), 1);
+        // Same expert again: dense hit, no second fetch.
+        cache.get(1, 2);
+        assert_eq!(cache.metrics.shard_fetches, 1);
+        assert_eq!(cache.metrics.hits, 1);
+        // Different slot mapping to a different expert fetches its shard.
+        cache.get(1, 0);
+        assert_eq!(cache.metrics.shard_fetches, 2);
+    }
+
+    #[test]
+    fn store_mode_paged_serve_matches_restore() {
+        let (cl, mut cache) = store_cache(31, 0);
+        let mut rng = Rng::new(2);
+        let x = crate::tensor::Matrix::randn(5, 8, 1.0, &mut rng);
+        for slot in [0usize, 1, 2, 3, 1, 0] {
+            match cache.serve(1, slot, x.rows) {
+                Serve::Paged { center, expert } => {
+                    let sh = center_shared_act(&center, &x);
+                    let got = fused_forward_expert(&center, &expert, &x, &sh);
+                    let want = cl.restore_expert(slot).forward(&x);
+                    assert!(got.sq_dist(&want) < 1e-8, "slot {slot}");
+                }
+                _ => panic!("zero budget in store mode must serve paged"),
+            }
+        }
+        assert_eq!(cache.metrics.fused_serves, 6);
+        assert_eq!(cache.metrics.restore_serves, 0);
+        assert_eq!(cache.used_bytes(), 0);
+        // Paged shards were still fetched (and stayed within... budget 0
+        // admits a single over-budget shard at a time).
+        assert!(cache.metrics.shard_fetches >= 4);
+    }
+
+    #[test]
+    fn store_mode_budget_bounds_paged_bytes() {
+        // Budget = one restored expert: paged shards must never push total
+        // resident bytes past it (beyond the single-entry allowance).
+        let (_, mut cache) = store_cache(32, one_expert_bytes());
+        for slot in [0usize, 1, 2, 3, 0, 1, 2, 3] {
+            cache.serve(1, slot, 1);
+            assert!(
+                cache.resident_shards() <= 4,
+                "shards never exceed expert count"
+            );
+        }
+        assert!(cache.metrics.shard_evictions > 0, "tight budget must evict shards");
+        // A shard alone is far below one dense expert, so several fit, but
+        // the pool stays bounded by the budget.
+        assert!(cache.paged_bytes() + cache.used_bytes() <= one_expert_bytes() * 2);
+    }
+
+    #[test]
+    fn store_mode_sync_prefetch_pages_shards() {
+        let (_, mut cache) = store_cache(33, usize::MAX);
+        cache.prefetch(&[(1, 0), (1, 3), (1, 0)]);
+        assert_eq!(cache.resident_shards(), 2);
+        assert_eq!(cache.resident_experts(), 0, "store-mode prefetch pages, not restores");
+        assert_eq!(cache.metrics.prefetch_misses, 2);
+        assert_eq!(cache.metrics.prefetch_hits, 1);
+        // Demand serve of a prefetched shard is useful and fetch-free.
+        let fetches = cache.metrics.shard_fetches;
+        cache.serve(1, 0, 1);
+        assert_eq!(cache.metrics.shard_fetches, fetches);
+        assert_eq!(cache.metrics.prefetch_useful, 1);
+    }
+
+    #[test]
+    fn store_mode_plan_and_insert_prefetched() {
+        let (cl, mut cache) = store_cache(34, usize::MAX);
+        let none = std::collections::HashSet::new();
+        let plan = cache.plan_prefetch(&[(1, 0), (1, 2), (9, 0), (1, 0)], &none);
+        assert_eq!(plan.len(), 2, "deduped, unknown block dropped: {plan:?}");
+        assert_eq!(cache.metrics.prefetch_misses, 2, "batch duplicate is a hit, not a miss");
+        assert_eq!(cache.metrics.prefetch_hits, 1);
+        // A key already being fetched elsewhere is a hit too.
+        let inflight: std::collections::HashSet<_> = [(1usize, 3usize)].into_iter().collect();
+        assert!(cache.plan_prefetch(&[(1, 3)], &inflight).is_empty());
+        assert_eq!(cache.metrics.prefetch_hits, 2);
+        // Simulate the worker: decode off-thread, hand back.
+        let store = cache.backing_store().unwrap().clone();
+        for (b, eidx) in plan {
+            let expert = store.load_expert(b, eidx).unwrap();
+            cache.insert_prefetched(b, eidx, expert);
+        }
+        assert_eq!(cache.resident_shards(), 2);
+        // Demand path finds them without new fetches through the cache.
+        let before = cache.metrics.hits;
+        let e = cache.get(1, 0);
+        assert_eq!(*e, cl.restore_expert(0));
+        assert_eq!(cache.metrics.hits, before);
+        assert!(cache.metrics.prefetch_useful >= 1);
+        // Duplicate insert is dropped.
+        let dup = store.load_expert(1, 0).unwrap();
+        cache.insert_prefetched(1, 0, dup);
+        assert_eq!(cache.metrics.prefetch_dropped, 1);
+    }
+
+    #[test]
+    fn store_mode_insert_prefetched_never_evicts_dense() {
+        let (_, mut cache) = store_cache(35, one_expert_bytes());
+        // Fill the budget with a demanded dense expert.
+        cache.serve(1, 0, 4096);
+        assert_eq!(cache.resident_experts(), 1);
+        let store = cache.backing_store().unwrap().clone();
+        let expert = store.load_expert(1, 1).unwrap();
+        let dropped_before = cache.metrics.prefetch_dropped;
+        cache.insert_prefetched(1, 1, expert);
+        assert_eq!(cache.resident_experts(), 1, "dense resident untouched");
+        assert_eq!(cache.metrics.prefetch_dropped, dropped_before + 1);
     }
 }

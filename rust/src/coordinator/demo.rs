@@ -3,11 +3,38 @@
 //! a bounded restore cache, fire a mixed workload from client threads, and
 //! report throughput/latency plus the memory story.
 
+use super::metrics::cache_summary;
 use super::server::{Engine, Request, Response, Server, ServerConfig};
 use crate::compress::{compress_model, ResMoE};
 use crate::eval::Assets;
 use crate::util::{format_bytes, Rng};
 use anyhow::Result;
+use std::path::Path;
+
+/// Fire `n_requests` at the server from 4 client threads (remainder spread
+/// so every requested count is served), drain the replies, and return the
+/// error count. `make(client, i, rng)` builds each request.
+fn fire_workload<F>(server: &Server, n_requests: usize, seed_base: u64, make: F) -> usize
+where
+    F: Fn(usize, usize, &mut Rng) -> Request + Sync,
+{
+    let replies: Vec<_> = std::thread::scope(|scope| {
+        let make = &make;
+        let mut handles = Vec::new();
+        for c in 0..4usize {
+            let quota = n_requests / 4 + usize::from(c < n_requests % 4);
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(seed_base + c as u64);
+                (0..quota).map(|i| server.submit(make(c, i, &mut rng))).collect::<Vec<_>>()
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    replies
+        .iter()
+        .filter(|r| matches!(r.recv().expect("reply").0, Response::Error(_)))
+        .count()
+}
 
 pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result<()> {
     let model = &assets.model;
@@ -33,38 +60,14 @@ pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result
     // Mixed workload from 4 client threads.
     let lang = assets.language.clone();
     let max_seq = model.cfg.max_seq;
-    let replies: Vec<_> = std::thread::scope(|scope| {
-        let server = &server;
-        let mut handles = Vec::new();
-        for c in 0..4usize {
-            let lang = lang.clone();
-            handles.push(scope.spawn(move || {
-                let mut rng = Rng::new(100 + c as u64);
-                let mut out = Vec::new();
-                for i in 0..n_requests / 4 {
-                    let tokens = lang.generate(16 + rng.below(max_seq / 2), &mut rng);
-                    let req = match i % 3 {
-                        0 => Request::Score { tokens },
-                        1 => Request::Generate {
-                            prompt: tokens[..8.min(tokens.len())].to_vec(),
-                            max_new: 8,
-                        },
-                        _ => Request::Score { tokens },
-                    };
-                    out.push(server.submit(req));
-                }
-                out
-            }));
+    let errors = fire_workload(&server, n_requests, 100, |_, i, rng| {
+        let tokens = lang.generate(16 + rng.below(max_seq / 2), rng);
+        if i % 3 == 1 {
+            Request::Generate { prompt: tokens[..8.min(tokens.len())].to_vec(), max_new: 8 }
+        } else {
+            Request::Score { tokens }
         }
-        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
     });
-    let mut errors = 0usize;
-    for r in &replies {
-        let (resp, _) = r.recv().expect("reply");
-        if matches!(resp, Response::Error(_)) {
-            errors += 1;
-        }
-    }
     let metrics = server.shutdown();
     println!("  {}", metrics.summary());
     if let Some(cm) = engine.cache_metrics() {
@@ -85,6 +88,65 @@ pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result
             format_bytes(full_expert_bytes)
         );
     }
+    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    Ok(())
+}
+
+/// Serve straight from a packed `RMES` artifact: open the store, load only
+/// the backbone + skeletons, and let demand paging + async prefetch bring
+/// residual shards in as the workload routes to them. Prints the memory
+/// and paging story afterwards — the artifact-mode analog of [`run_demo`].
+pub fn run_packed_demo(artifact: &Path, cfg: ServerConfig, n_requests: usize) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let engine = Engine::from_store(artifact, cfg.cache_budget_bytes)?;
+    let store = engine.backing_store().expect("store-backed engine");
+    println!(
+        "serving packed artifact {} ({}, {} layers, {} expert shards) — opened in {:.1} ms",
+        artifact.display(),
+        format_bytes(store.file_bytes() as usize),
+        store.blocks().len(),
+        store.index().layers.iter().map(|l| l.experts.len()).sum::<usize>(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!(
+        "  demand-paged expert bytes: {} (decoded) under a {} cache budget",
+        format_bytes(store.total_expert_raw_bytes() as usize),
+        format_bytes(cfg.cache_budget_bytes),
+    );
+    let max_seq = engine.model().cfg.max_seq;
+    let vocab = engine.model().cfg.vocab_size;
+    let server = Server::start(engine.clone(), cfg);
+    let errors = fire_workload(&server, n_requests, 500, |_, i, rng| {
+        let len = 8 + rng.below(max_seq / 2);
+        let tokens: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+        if i % 3 == 1 {
+            Request::Generate { prompt: tokens[..6.min(tokens.len())].to_vec(), max_new: 6 }
+        } else {
+            Request::Score { tokens }
+        }
+    });
+    let metrics = server.shutdown();
+    engine.quiesce_prefetch();
+    println!("  {}", metrics.summary());
+    if let Some(cm) = engine.cache_metrics() {
+        println!("  {}", cache_summary(&cm));
+    }
+    if let Some((skeleton, dense, paged)) = engine.resident_breakdown() {
+        println!(
+            "  steady-state expert memory: {} skeletons + {} restored + {} paged shards = {} (full decoded experts: {})",
+            format_bytes(skeleton),
+            format_bytes(dense),
+            format_bytes(paged),
+            format_bytes(skeleton + dense + paged),
+            format_bytes(store.total_expert_raw_bytes() as usize)
+        );
+    }
+    println!(
+        "  artifact I/O: {} of {} read ({:.1} %)",
+        format_bytes(store.bytes_read() as usize),
+        format_bytes(store.file_bytes() as usize),
+        100.0 * store.bytes_read() as f64 / store.file_bytes().max(1) as f64
+    );
     anyhow::ensure!(errors == 0, "{errors} requests failed");
     Ok(())
 }

@@ -1,5 +1,7 @@
-//! Serving metrics: latency percentiles, throughput, batch-size histogram.
+//! Serving metrics: latency percentiles, throughput, batch-size histogram,
+//! and the cache/paging summary line.
 
+use super::cache::CacheMetrics;
 use crate::util::stats::percentile;
 use std::time::Duration;
 
@@ -66,6 +68,38 @@ impl ServerMetrics {
     }
 }
 
+/// One-line cache/paging story for demo + CLI output: hit rate, the
+/// fused-vs-restore decision split, shard paging traffic, and prefetch
+/// effectiveness.
+pub fn cache_summary(cm: &CacheMetrics) -> String {
+    let mut line = format!(
+        "cache: {:.1} % hit rate | {} restores / {} fused serves | {} evictions",
+        cm.hit_rate() * 100.0,
+        cm.restore_serves,
+        cm.fused_serves,
+        cm.evictions
+    );
+    if cm.shard_fetches > 0 {
+        line.push_str(&format!(
+            " | {} shard fetches ({:.2} ms, {} decoded), {} shard evictions",
+            cm.shard_fetches,
+            cm.shard_fetch_ns as f64 / 1e6,
+            crate::util::format_bytes(cm.shard_bytes as usize),
+            cm.shard_evictions
+        ));
+    }
+    if cm.prefetch_hits + cm.prefetch_misses > 0 {
+        line.push_str(&format!(
+            " | prefetch: {} hits / {} loads, {:.0} % useful, {} dropped",
+            cm.prefetch_hits,
+            cm.prefetch_misses,
+            cm.prefetch_usefulness() * 100.0,
+            cm.prefetch_dropped
+        ));
+    }
+    line
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +127,22 @@ mod tests {
         assert_eq!(m.p50_ms(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.requests_per_s(), 0.0);
+    }
+
+    #[test]
+    fn cache_summary_mentions_paging_and_prefetch_only_when_active() {
+        let mut cm = CacheMetrics::default();
+        cm.hits = 3;
+        cm.misses = 1;
+        let plain = cache_summary(&cm);
+        assert!(plain.contains("hit rate"));
+        assert!(!plain.contains("shard"));
+        assert!(!plain.contains("prefetch"));
+        cm.shard_fetches = 5;
+        cm.prefetch_misses = 2;
+        cm.prefetch_useful = 1;
+        let paged = cache_summary(&cm);
+        assert!(paged.contains("shard fetches"));
+        assert!(paged.contains("50 % useful"));
     }
 }

@@ -10,5 +10,5 @@ pub mod metrics;
 pub mod server;
 
 pub use cache::{CacheMetrics, ExpertCache, Serve};
-pub use metrics::ServerMetrics;
+pub use metrics::{cache_summary, ServerMetrics};
 pub use server::{Engine, Request, Response, Server, ServerConfig};

@@ -7,10 +7,15 @@
 use super::batcher::next_batch;
 use super::cache::{CacheMetrics, ExpertCache, Serve};
 use super::metrics::ServerMetrics;
-use crate::compress::{CompressedLayer, SharedAct};
+use crate::compress::{center_shared_act, fused_forward_expert, CompressedLayer, SharedAct};
 use crate::moe::{route_dispatch_combine, Ffn, FfnHook, Model};
+use crate::store::{ExpertStore, Prefetcher};
 use crate::tensor::Matrix;
 use crate::util::stats::logsumexp;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -67,27 +72,27 @@ pub enum Response {
 /// The cache-backed engine: holds the backbone with compressed MoE blocks
 /// *stripped of their dense experts* (only routers + shared experts stay
 /// resident) plus the compressed representations and the restore cache.
+/// In artifact mode ([`Engine::from_store`]) even the residuals live on
+/// disk: the cache demand-pages individual expert shards and an async
+/// prefetcher decodes router-predicted shards ahead of time.
 #[derive(Clone)]
 pub struct Engine {
     model: Arc<Model>,
     cache: Option<Arc<Mutex<ExpertCache>>>,
-}
-
-/// Strip the dense experts out of the compressed blocks (the router and
-/// shared expert stay) so the resident model no longer carries them.
-fn strip_experts(mut model: Model, blocks: &[usize]) -> Model {
-    for &bi in blocks {
-        if let Ffn::Moe(layer) = &mut model.blocks[bi].ffn {
-            layer.experts = Vec::new();
-        }
-    }
-    model
+    prefetcher: Option<Arc<Prefetcher>>,
+    /// block → next compressed block (the prefetch prediction target).
+    next_block: Arc<HashMap<usize, usize>>,
 }
 
 impl Engine {
     /// Plain engine over a dense model (no compression).
     pub fn dense(model: Model) -> Engine {
-        Engine { model: Arc::new(model), cache: None }
+        Engine {
+            model: Arc::new(model),
+            cache: None,
+            prefetcher: None,
+            next_block: Arc::new(HashMap::new()),
+        }
     }
 
     /// Engine over compressed layers with a restore cache. `model` is the
@@ -98,11 +103,57 @@ impl Engine {
         cache_budget_bytes: usize,
     ) -> Engine {
         let blocks: Vec<usize> = layers.iter().map(|(b, _)| *b).collect();
-        let stripped = strip_experts(model, &blocks);
+        let stripped = model.strip_experts(&blocks);
         Engine {
             model: Arc::new(stripped),
             cache: Some(Arc::new(Mutex::new(ExpertCache::new(layers, cache_budget_bytes)))),
+            prefetcher: None,
+            next_block: Arc::new(HashMap::new()),
         }
+    }
+
+    /// Construct-from-artifact: open an `RMES` store, load only the
+    /// expert-stripped backbone + per-layer skeletons, and serve with
+    /// demand-paged residual shards plus async prefetch. No full-file
+    /// decompression happens here or later on the serving path.
+    pub fn from_store(artifact: &Path, cache_budget_bytes: usize) -> Result<Engine> {
+        let store = Arc::new(ExpertStore::open(artifact)?);
+        let model = store.load_backbone()?;
+        let cache =
+            Arc::new(Mutex::new(ExpertCache::from_store(store.clone(), cache_budget_bytes)?));
+        let blocks = store.blocks();
+        let mut next_block = HashMap::new();
+        for w in blocks.windows(2) {
+            next_block.insert(w[0], w[1]);
+        }
+        let prefetcher = Arc::new(Prefetcher::new(cache.clone(), store));
+        Ok(Engine {
+            model: Arc::new(model),
+            cache: Some(cache),
+            prefetcher: Some(prefetcher),
+            next_block: Arc::new(next_block),
+        })
+    }
+
+    /// Disable async prefetch on THIS engine handle (clones made earlier
+    /// keep theirs) — determinism knob for tests and A/B benches.
+    pub fn disable_prefetch(&mut self) {
+        self.prefetcher = None;
+        self.next_block = Arc::new(HashMap::new());
+    }
+
+    /// Block until in-flight prefetches land (deterministic metric reads).
+    pub fn quiesce_prefetch(&self) {
+        if let Some(pf) = &self.prefetcher {
+            pf.quiesce();
+        }
+    }
+
+    /// The backing artifact store, in [`Engine::from_store`] mode.
+    pub fn backing_store(&self) -> Option<Arc<ExpertStore>> {
+        let cache = self.cache.as_ref()?;
+        let guard = cache.lock().unwrap();
+        guard.backing_store().cloned()
     }
 
     pub fn model(&self) -> &Model {
@@ -128,8 +179,22 @@ impl Engine {
         })
     }
 
+    /// (always-resident compressed bytes, restored dense bytes, paged shard
+    /// bytes) — the three-way memory story of a store-backed deployment.
+    pub fn resident_breakdown(&self) -> Option<(usize, usize, usize)> {
+        self.cache.as_ref().map(|c| {
+            let g = c.lock().unwrap();
+            (g.compressed_bytes(), g.used_bytes(), g.paged_bytes())
+        })
+    }
+
     fn hook(&self) -> EngineHook<'_> {
-        EngineHook { model: &self.model, cache: self.cache.as_deref() }
+        EngineHook {
+            model: &self.model,
+            cache: self.cache.as_deref(),
+            prefetcher: self.prefetcher.as_deref(),
+            next_block: &self.next_block,
+        }
     }
 
     pub fn handle(&self, req: &Request) -> Response {
@@ -196,11 +261,15 @@ impl Engine {
 
 /// The FFN hook routing compressed blocks through the restore cache's
 /// cost-model serve path: hot experts run dense from the cache, cold ones
-/// run restore-free through the fused layer, with the center term computed
-/// at most once per batch.
+/// run restore-free through the fused layer (monolithic mode) or the paged
+/// center + single-expert pieces (store mode), with the center term
+/// computed at most once per batch. In store mode the slots a block routed
+/// to become the prefetch prediction for the next compressed block.
 struct EngineHook<'a> {
     model: &'a Model,
     cache: Option<&'a Mutex<ExpertCache>>,
+    prefetcher: Option<&'a Prefetcher>,
+    next_block: &'a HashMap<usize, usize>,
 }
 
 impl FfnHook for EngineHook<'_> {
@@ -223,22 +292,54 @@ impl FfnHook for EngineHook<'_> {
         // shared center term is built lazily on the first fused slot and
         // reused by the rest of the batch.
         let mut shared: Option<SharedAct> = None;
+        let mut routed: Vec<usize> = Vec::new();
+        let mut serve_error: Option<anyhow::Error> = None;
         let out = route_dispatch_combine(
             &layer.router,
             x,
             None,
             layer.shared_expert.as_ref(),
             |slot, sub, rows| {
-                let decision = cache.lock().unwrap().serve(block, slot, sub.rows);
+                routed.push(slot);
+                // try_serve so a store fetch/integrity error returns through
+                // the guard instead of panicking inside it (a panic while
+                // the MutexGuard is alive would poison the cache for every
+                // future request). The error surfaces below, lock-free.
+                let decision = cache.lock().unwrap().try_serve(block, slot, sub.rows);
                 match decision {
-                    Serve::Dense(expert) => expert.forward(sub),
-                    Serve::Fused(fl) => {
+                    Ok(Serve::Dense(expert)) => expert.forward(sub),
+                    Ok(Serve::Fused(fl)) => {
                         let sh = shared.get_or_insert_with(|| fl.shared_act(x));
                         fl.forward_slot(slot, sub, &sh.gather(rows))
+                    }
+                    Ok(Serve::Paged { center, expert }) => {
+                        let sh = shared.get_or_insert_with(|| center_shared_act(&center, x));
+                        fused_forward_expert(&center, &expert, sub, &sh.gather(rows))
+                    }
+                    Err(e) => {
+                        if serve_error.is_none() {
+                            serve_error = Some(e);
+                        }
+                        Matrix::zeros(sub.rows, x.cols)
                     }
                 }
             },
         );
+        if let Some(e) = serve_error {
+            // No lock is held here: the panic fails THIS request (the server
+            // worker converts it to Response::Error) and the cache stays
+            // healthy for the next one. Never serve the zero-filled output.
+            panic!("expert serve failed for block {block}: {e:#}");
+        }
+        // Router-predicted prefetch: expert choice is strongly correlated
+        // across adjacent MoE blocks (upcycled experts in particular), so
+        // the slots this block activated are the best zero-cost prediction
+        // for the next compressed block. Fire-and-forget on the pool; the
+        // cache lock is NOT held here.
+        if let (Some(pf), Some(&nb)) = (self.prefetcher, self.next_block.get(&block)) {
+            let keys: Vec<(usize, usize)> = routed.iter().map(|&s| (nb, s)).collect();
+            pf.request(&keys);
+        }
         Some(out)
     }
 }
@@ -283,7 +384,20 @@ impl Server {
                 let size = batch.len();
                 for job in batch {
                     tokens += job.req.token_count();
-                    let resp = engine.handle(&job.req);
+                    // A panic while serving (e.g. a corrupt artifact shard
+                    // surfacing mid-request) must not take the worker down:
+                    // answer THIS request with an error — carrying the panic
+                    // message, so "checksum mismatch in block 3" reaches the
+                    // client, not just stderr — and keep draining.
+                    let resp = catch_unwind(AssertUnwindSafe(|| engine.handle(&job.req)))
+                        .unwrap_or_else(|payload| {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "unknown panic".into());
+                            Response::Error(format!("engine panicked while serving: {msg}"))
+                        });
                     let latency = job.submitted.elapsed();
                     let _ = job.reply.send((resp, latency));
                     metrics.lock().unwrap().record_request(latency);
@@ -441,6 +555,104 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.latencies_s.len(), 16);
         assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn store_engine_matches_monolithic_engine_bit_for_bit() {
+        // Pack → serve must equal the monolithic-load engine EXACTLY: the
+        // shard codec round-trips f32 bits, the cost model sees identical
+        // dense occupancy in both modes, and the paged fused path runs the
+        // same arithmetic as the monolithic fused path.
+        use crate::store::pack_compressed_model;
+        let m = tiny_model(20);
+        let mut rng = Rng::new(21);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let dir = std::env::temp_dir().join("resmoe-server-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("engine.rmes");
+        pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request::Score {
+                tokens: (0..10).map(|t| ((t * (i + 3) + 1) % 32) as u32).collect(),
+            })
+            .collect();
+        // Same budgets → same decisions → identical outputs, across warm,
+        // thrash, and tight budgets.
+        let one_expert = 32 * (2 * 16 + 1) * 4 + 16 * 4; // pi*(2p+1)+p floats
+        for budget in [usize::MAX, 0, one_expert, 2 * one_expert] {
+            let mono = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+            let mut packed = Engine::from_store(&artifact, budget).unwrap();
+            packed.disable_prefetch(); // deterministic decision sequence
+            for req in &reqs {
+                let a = mono.handle(req);
+                let b = packed.handle(req);
+                assert_eq!(a, b, "budget {budget}: packed engine must match exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn store_engine_pages_on_demand_without_full_decompression() {
+        use crate::store::pack_compressed_model;
+        let m = tiny_model(22);
+        let mut rng = Rng::new(23);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let dir = std::env::temp_dir().join("resmoe-server-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("paging.rmes");
+        pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+        let mut engine = Engine::from_store(&artifact, usize::MAX).unwrap();
+        engine.disable_prefetch();
+        let store = engine.backing_store().unwrap();
+        let after_open = store.bytes_read();
+        let resp = engine.handle(&Request::Score { tokens: vec![1, 5, 9, 2] });
+        assert!(matches!(resp, Response::Score(_)), "{resp:?}");
+        let served_read = store.bytes_read() - after_open;
+        assert!(served_read > 0, "must have fetched at least one shard");
+        // The serving path reads individual shards, never the whole file.
+        assert!(
+            store.bytes_read() < store.file_bytes(),
+            "serving read {} of a {}-byte artifact — demand paging must not scan it all",
+            store.bytes_read(),
+            store.file_bytes()
+        );
+        let metrics = engine.cache_metrics().unwrap();
+        assert!(metrics.shard_fetches > 0);
+        assert!(
+            (metrics.shard_fetches as usize) < 2 * 4,
+            "4 tokens cannot demand every expert of every block"
+        );
+    }
+
+    #[test]
+    fn store_engine_prefetches_next_block_shards() {
+        use crate::store::pack_compressed_model;
+        // Four layers → MoE blocks 1 and 3, so block 1's routing predicts
+        // block 3's demand.
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 4;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(24);
+        let m = Model::random(&cfg, &mut rng);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        assert_eq!(cm.layers.len(), 2);
+        let dir = std::env::temp_dir().join("resmoe-server-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("prefetch.rmes");
+        pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+        let engine = Engine::from_store(&artifact, usize::MAX).unwrap();
+        let resp = engine.handle(&Request::Score { tokens: vec![2, 7, 1, 9, 4, 3] });
+        assert!(matches!(resp, Response::Score(_)), "{resp:?}");
+        engine.quiesce_prefetch();
+        let metrics = engine.cache_metrics().unwrap();
+        assert!(
+            metrics.prefetch_hits + metrics.prefetch_misses > 0,
+            "serving across two compressed blocks must issue prefetch requests"
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod eval;
 pub mod moe;
 pub mod ot;
 pub mod runtime;
+pub mod store;
 pub mod tensor;
 pub mod util;
 

@@ -6,17 +6,23 @@
 //! * `compress` — compress a checkpoint with a named method and report.
 //! * `eval`     — PPL + zero-shot metrics for a (compressed) model.
 //! * `serve`    — run the serving coordinator demo on a checkpoint.
+//! * `pack`     — compress + shard a model/checkpoint into an `RMES`
+//!   artifact (one barycenter shard per layer, one residual shard per
+//!   expert).
+//! * `serve-packed` — serve straight from an `RMES` artifact with
+//!   demand-paged expert shards and async prefetch.
 
 use anyhow::{anyhow, Result};
 use resmoe::compress::{compress_model, Compressor};
 use resmoe::coordinator::ServerConfig;
 use resmoe::data::export::export_datasets;
 use resmoe::eval::{self, method_by_name, Assets};
-use resmoe::moe::ModelConfig;
+use resmoe::moe::{model_io, ModelConfig};
+use resmoe::store;
 use resmoe::util::cli::Args;
 use resmoe::util::format_bytes;
 use resmoe::Rng;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::from_env(&["verbose", "fast", "pretrained-only"]);
@@ -25,6 +31,8 @@ fn main() {
         Some("compress") => cmd_compress(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("pack") => cmd_pack(&args),
+        Some("serve-packed") => cmd_serve_packed(&args),
         Some("table") => cmd_table(&args),
         Some(other) => Err(anyhow!("unknown subcommand '{other}'")),
         None => {
@@ -47,6 +55,9 @@ fn print_help() {
            compress --model mixtral-mini --method resmoe-up --rate 0.25 [--layers N]\n\
            eval     --model mixtral-mini [--method resmoe-up --rate 0.25]\n\
            serve    --model mixtral-mini [--requests N --batch-max N]\n\
+           pack     --model mixtral-mini [--ckpt path.rmw[z]] --method resmoe-up \
+--rate 0.25 --out model.rmes\n\
+           serve-packed --artifact model.rmes [--cache-mb N --requests N]\n\
            table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
          (tables also regenerate via `cargo bench --bench table1_approx_error` etc.)"
     );
@@ -180,6 +191,66 @@ fn cmd_table(args: &Args) -> Result<()> {
     };
     table.print();
     Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "artifacts/model.rmes"));
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let comp = method_of(args)?;
+    let rate = args.get_f64("rate", 0.25);
+    let seed = args.get_u64("seed", 0);
+    let t0 = std::time::Instant::now();
+    let (summary, report) = if let Some(ckpt) = args.get("ckpt") {
+        let model = model_io::load_model(Path::new(ckpt))?;
+        let top = args.get_usize("layers", top_layers_default(&model.cfg));
+        store::pack_model(&model, comp.as_ref(), rate, top, None, seed, &out)?
+    } else {
+        let cfg = parse_model(args)?;
+        let assets = Assets::load(&cfg);
+        let top = args.get_usize("layers", top_layers_default(&cfg));
+        let calib = assets.calibration_tokens(cfg.max_seq);
+        store::pack_model(&assets.model, comp.as_ref(), rate, top, Some(&calib), seed, &out)?
+    };
+    println!(
+        "packed {} layers / {} expert shards with {} at rate {rate} in {:.2}s",
+        summary.n_layers,
+        summary.n_expert_shards,
+        report.method,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  artifact: {} ({}) — backbone {} + expert shards {} on disk ({} decoded)",
+        summary.path.display(),
+        format_bytes(summary.file_bytes as usize),
+        format_bytes(summary.backbone_disk_bytes as usize),
+        format_bytes(summary.expert_disk_bytes as usize),
+        format_bytes(summary.expert_raw_bytes as usize),
+    );
+    println!(
+        "  dense expert bytes before compression: {}",
+        format_bytes(report.total_bytes_before())
+    );
+    Ok(())
+}
+
+fn cmd_serve_packed(args: &Args) -> Result<()> {
+    let artifact = args
+        .get("artifact")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("serve-packed needs --artifact <path.rmes>"))?;
+    let sc = ServerConfig {
+        batch_max: args.get_usize("batch-max", 8),
+        batch_wait_us: args.get_u64("batch-wait-us", 500),
+        cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
+        workers: args.get_usize("workers", 2),
+    };
+    let n_requests = args.get_usize("requests", 64);
+    resmoe::coordinator::demo::run_packed_demo(Path::new(&artifact), sc, n_requests)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -84,8 +84,9 @@ fn collect_tensors(model: &Model) -> Vec<(String, Matrix)> {
     out
 }
 
-/// Serialize a model to the RMW1 format.
-pub fn save_model(model: &Model, path: &Path) -> Result<()> {
+/// Serialize a model to an in-memory RMW1 byte buffer — the unit the
+/// sharded artifact store embeds as its backbone shard.
+pub fn model_to_bytes(model: &Model) -> Vec<u8> {
     let tensors = collect_tensors(model);
     let mut dir = Vec::new();
     let mut offset = 0usize;
@@ -103,17 +104,25 @@ pub fn save_model(model: &Model, path: &Path) -> Result<()> {
         ("tensors", Json::Arr(dir)),
     ])
     .to_string();
+    let mut out = Vec::with_capacity(8 + header.len() + offset * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for (_, m) in &tensors {
+        for v in &m.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Serialize a model to the RMW1 format.
+pub fn save_model(model: &Model, path: &Path) -> Result<()> {
+    let bytes = model_to_bytes(model);
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
     );
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u32).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    for (_, m) in &tensors {
-        for v in &m.data {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
+    f.write_all(&bytes)?;
     f.flush()?;
     Ok(())
 }
@@ -123,10 +132,7 @@ pub fn save_model(model: &Model, path: &Path) -> Result<()> {
 /// shrink a further ~10–25 % losslessly. `load_checkpoint` reads both
 /// formats transparently.
 pub fn save_model_compressed(model: &Model, path: &Path, level: i32) -> Result<()> {
-    let tmp = path.with_extension("rmw.tmp");
-    save_model(model, &tmp)?;
-    let raw = std::fs::read(&tmp)?;
-    std::fs::remove_file(&tmp).ok();
+    let raw = model_to_bytes(model);
     let compressed = zstd::encode_all(&raw[..], level).context("zstd encode")?;
     let mut out = Vec::with_capacity(compressed.len() + 4);
     out.extend_from_slice(MAGIC_Z);
@@ -235,7 +241,17 @@ fn take_expert(
 
 /// Materialize a [`Model`] from a checkpoint.
 pub fn load_model(path: &Path) -> Result<Model> {
-    let Checkpoint { config: cfg, mut tensors } = load_checkpoint(path)?;
+    model_from_checkpoint(load_checkpoint(path)?)
+}
+
+/// Materialize a [`Model`] from in-memory RMW1 bytes (the store's backbone
+/// shard after decompression).
+pub fn model_from_bytes(bytes: &[u8]) -> Result<Model> {
+    model_from_checkpoint(load_checkpoint_bytes(bytes, Path::new("<memory>"))?)
+}
+
+fn model_from_checkpoint(ckpt: Checkpoint) -> Result<Model> {
+    let Checkpoint { config: cfg, mut tensors } = ckpt;
     let mut blocks = Vec::with_capacity(cfg.n_layers);
     for i in 0..cfg.n_layers {
         let p = format!("blocks.{i}");
@@ -369,6 +385,21 @@ mod tests {
             packed_len < plain_len,
             "compressed {packed_len} should be below plain {plain_len}"
         );
+    }
+
+    #[test]
+    fn bytes_roundtrip_without_disk() {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        let mut rng = Rng::new(17);
+        let m = Model::random(&cfg, &mut rng);
+        let m2 = model_from_bytes(&model_to_bytes(&m)).unwrap();
+        assert!(models_equal(&m, &m2));
     }
 
     #[test]

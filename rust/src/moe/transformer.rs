@@ -143,6 +143,19 @@ impl Model {
         }
     }
 
+    /// Drop the dense experts of the given MoE blocks (router and shared
+    /// expert stay) — the resident "backbone" of a compressed serving
+    /// deployment; experts come back through the restore cache or the
+    /// artifact store.
+    pub fn strip_experts(mut self, blocks: &[usize]) -> Model {
+        for &bi in blocks {
+            if let Ffn::Moe(layer) = &mut self.blocks[bi].ffn {
+                layer.experts = Vec::new();
+            }
+        }
+        self
+    }
+
     /// Indices of MoE blocks.
     pub fn moe_blocks(&self) -> Vec<usize> {
         self.blocks

@@ -1,0 +1,711 @@
+//! The `RMES` sharded expert-artifact container.
+//!
+//! Layout:
+//! ```text
+//! magic   b"RMES"
+//! u32 LE  format version (1)
+//! u64 LE  index offset (patched by the writer on finish)
+//! shard bytes (each shard independently zstd-compressed)
+//! index:  u32 LE length + JSON
+//! ```
+//!
+//! The JSON index records, for every shard, its absolute file offset, its
+//! on-disk (compressed) and raw (decoded) byte sizes, and a CRC-32 of the
+//! on-disk bytes — so any single expert residual is readable and
+//! verifiable **without touching any other shard**. One backbone shard
+//! (the expert-stripped model as RMW1 bytes), one center shard per
+//! compressed layer (the barycenter `W_ω`), one meta shard per layer
+//! (expert map + alignments), and one residual shard per stored expert.
+//!
+//! Corruption policy: a shard whose CRC, decoded length, or payload
+//! structure disagrees with the index is an error — never silently served.
+
+use crate::compress::{
+    decode_matrix_shard, encode_matrix_shard, CompressedExpert, CompressedLayer,
+};
+use crate::moe::model_io::{model_from_bytes, model_to_bytes};
+use crate::moe::{ExpertArch, Model, ModelConfig};
+use crate::util::bytes::{ByteReader, PutLe};
+use crate::util::crc32::crc32;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub const STORE_MAGIC: &[u8; 4] = b"RMES";
+pub const STORE_VERSION: u32 = 1;
+/// Byte offset where shard data starts (magic + version + index offset).
+const DATA_START: u64 = 4 + 4 + 8;
+/// zstd level passed to the vendored coder (accepted for API parity).
+const ZSTD_LEVEL: i32 = 3;
+
+/// Location + integrity data of one shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfo {
+    /// Absolute file offset of the compressed shard bytes.
+    pub offset: u64,
+    /// On-disk (compressed) size.
+    pub bytes: u64,
+    /// Decoded payload size.
+    pub raw_bytes: u64,
+    /// CRC-32 of the on-disk bytes.
+    pub crc32: u32,
+}
+
+impl ShardInfo {
+    fn to_json(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("offset", Json::num(self.offset as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("raw", Json::num(self.raw_bytes as f64)),
+            ("crc", Json::num(self.crc32 as f64)),
+        ]
+    }
+
+    fn from_json(j: &Json) -> Result<ShardInfo> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("shard entry missing numeric '{k}'"))
+        };
+        Ok(ShardInfo {
+            offset: field("offset")? as u64,
+            bytes: field("bytes")? as u64,
+            raw_bytes: field("raw")? as u64,
+            crc32: field("crc")? as u32,
+        })
+    }
+}
+
+/// One residual shard: location plus the residual kind recorded for
+/// index-only tooling (`dense` / `csr` / `svd`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertShardInfo {
+    pub shard: ShardInfo,
+    pub kind: String,
+}
+
+/// Index entry for one compressed layer.
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub block: usize,
+    pub method: String,
+    pub arch: ExpertArch,
+    pub d_model: usize,
+    /// Retention rate the layer was compressed at (informational).
+    pub rate: f64,
+    /// Design-matrix shape `(pI, D)` shared by every expert of the layer —
+    /// lets the cache size a restored expert without fetching its shard.
+    pub design_rows: usize,
+    pub design_cols: usize,
+    /// Shared barycenter shard (`None` for direct methods without a center).
+    pub center: Option<ShardInfo>,
+    /// Expert map + alignments shard.
+    pub meta: ShardInfo,
+    /// One residual shard per stored expert, in `experts` order.
+    pub experts: Vec<ExpertShardInfo>,
+}
+
+/// Parsed store index.
+#[derive(Debug, Clone)]
+pub struct StoreIndex {
+    pub version: u32,
+    pub config: ModelConfig,
+    pub backbone: ShardInfo,
+    pub layers: Vec<LayerEntry>,
+}
+
+// ------------------------------------------------------------------ writer
+
+/// Streaming writer: shards are appended as they are produced; the index
+/// is written (and the header offset patched) by [`StoreWriter::finish`].
+pub struct StoreWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+    offset: u64,
+    config: Option<ModelConfig>,
+    backbone: Option<ShardInfo>,
+    layers: Vec<LayerEntry>,
+}
+
+impl StoreWriter {
+    pub fn create(path: &Path) -> Result<StoreWriter> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut file = std::io::BufWriter::new(f);
+        file.write_all(STORE_MAGIC)?;
+        file.write_all(&STORE_VERSION.to_le_bytes())?;
+        file.write_all(&0u64.to_le_bytes())?; // index offset placeholder
+        Ok(StoreWriter {
+            file,
+            path: path.to_path_buf(),
+            offset: DATA_START,
+            config: None,
+            backbone: None,
+            layers: Vec::new(),
+        })
+    }
+
+    /// Compress + checksum + append one shard.
+    fn write_shard(&mut self, raw: &[u8]) -> Result<ShardInfo> {
+        let compressed = zstd::encode_all(raw, ZSTD_LEVEL).context("zstd encode shard")?;
+        let info = ShardInfo {
+            offset: self.offset,
+            bytes: compressed.len() as u64,
+            raw_bytes: raw.len() as u64,
+            crc32: crc32(&compressed),
+        };
+        self.file.write_all(&compressed)?;
+        self.offset += compressed.len() as u64;
+        Ok(info)
+    }
+
+    /// Store the expert-stripped backbone (RMW1 bytes in one shard). Must
+    /// be called exactly once; the model's config becomes the store config.
+    pub fn put_backbone(&mut self, backbone: &Model) -> Result<()> {
+        if self.backbone.is_some() {
+            bail!("backbone already written");
+        }
+        let raw = model_to_bytes(backbone);
+        let info = self.write_shard(&raw)?;
+        self.backbone = Some(info);
+        self.config = Some(backbone.cfg.clone());
+        Ok(())
+    }
+
+    /// Store one compressed layer: center shard (if any), meta shard, one
+    /// residual shard per stored expert.
+    pub fn put_layer(&mut self, block: usize, layer: &CompressedLayer, rate: f64) -> Result<()> {
+        if self.layers.iter().any(|l| l.block == block) {
+            bail!("block {block} already written");
+        }
+        if layer.experts.is_empty() {
+            bail!("block {block}: layer has no stored experts");
+        }
+        let center = match &layer.base {
+            Some(base) => Some(self.write_shard(&encode_matrix_shard(base))?),
+            None => None,
+        };
+        let meta = self.write_shard(&encode_layer_meta(layer))?;
+        let mut experts = Vec::with_capacity(layer.experts.len());
+        for e in &layer.experts {
+            let shard = self.write_shard(&e.encode_shard())?;
+            experts.push(ExpertShardInfo { shard, kind: e.residual.kind_name().to_string() });
+        }
+        let (design_rows, design_cols) = layer.experts[0].residual.design_shape();
+        self.layers.push(LayerEntry {
+            block,
+            method: layer.method.clone(),
+            arch: layer.arch,
+            d_model: layer.d_model,
+            rate,
+            design_rows,
+            design_cols,
+            center,
+            meta,
+            experts,
+        });
+        Ok(())
+    }
+
+    /// Write the JSON index, patch the header offset, and sync.
+    pub fn finish(mut self) -> Result<()> {
+        let backbone = self.backbone.take().ok_or_else(|| anyhow!("no backbone written"))?;
+        let config = self.config.take().expect("config set with backbone");
+        self.layers.sort_by_key(|l| l.block);
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let experts: Vec<Json> = l
+                    .experts
+                    .iter()
+                    .map(|e| {
+                        let mut fields = e.shard.to_json();
+                        fields.push(("kind", Json::str(&e.kind)));
+                        Json::obj(fields)
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("block", Json::num(l.block as f64)),
+                    ("method", Json::str(&l.method)),
+                    ("arch", Json::str(l.arch.name())),
+                    ("d_model", Json::num(l.d_model as f64)),
+                    ("rate", Json::num(l.rate)),
+                    ("design_rows", Json::num(l.design_rows as f64)),
+                    ("design_cols", Json::num(l.design_cols as f64)),
+                    (
+                        "center",
+                        match &l.center {
+                            Some(c) => Json::obj(c.to_json()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("meta", Json::obj(l.meta.to_json())),
+                    ("experts", Json::Arr(experts)),
+                ])
+            })
+            .collect();
+        let index = Json::obj(vec![
+            ("version", Json::num(STORE_VERSION as f64)),
+            ("config", config.to_json()),
+            ("backbone", Json::obj(backbone.to_json())),
+            ("layers", Json::Arr(layers)),
+        ])
+        .to_string();
+        let index_offset = self.offset;
+        self.file.write_all(&(index.len() as u32).to_le_bytes())?;
+        self.file.write_all(index.as_bytes())?;
+        self.file.flush()?;
+        let mut f = self.file.into_inner().map_err(|e| anyhow!("flush: {e}"))?;
+        f.seek(SeekFrom::Start(8))?;
+        f.write_all(&index_offset.to_le_bytes())?;
+        f.sync_all().with_context(|| format!("sync {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- layer meta shard
+
+fn encode_layer_meta(layer: &CompressedLayer) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.put_u32(layer.expert_map.len() as u32);
+    for &e in &layer.expert_map {
+        out.put_u32(e as u32);
+    }
+    out.put_u32(layer.aligns.len() as u32);
+    for align in &layer.aligns {
+        out.put_u32(align.len() as u32);
+        for &v in align {
+            out.put_u32(v as u32);
+        }
+    }
+    out
+}
+
+fn decode_layer_meta(bytes: &[u8]) -> Result<(Vec<usize>, Vec<Vec<usize>>)> {
+    let mut r = ByteReader::new(bytes);
+    let n_slots = r.len()?;
+    let expert_map: Vec<usize> = r.u32s(n_slots)?.into_iter().map(|v| v as usize).collect();
+    let n_aligns = r.len()?;
+    let mut aligns = Vec::with_capacity(n_aligns);
+    for _ in 0..n_aligns {
+        let len = r.len()?;
+        aligns.push(r.u32s(len)?.into_iter().map(|v| v as usize).collect());
+    }
+    r.expect_done()?;
+    Ok((expert_map, aligns))
+}
+
+// ------------------------------------------------------------------ reader
+
+/// Random-access reader over an `RMES` artifact. Opening parses only the
+/// header and JSON index; every shard is fetched, CRC-checked, and decoded
+/// on demand (the demand-paging substrate of the serving cache).
+pub struct ExpertStore {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+    index: StoreIndex,
+    by_block: HashMap<usize, usize>,
+    file_bytes: u64,
+    /// Compressed bytes fetched so far (observability: a demand-paged
+    /// serving session should read far less than `file_bytes`).
+    bytes_read: AtomicU64,
+}
+
+impl ExpertStore {
+    pub fn open(path: &Path) -> Result<ExpertStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let file_bytes = f.metadata()?.len();
+        let mut head = [0u8; DATA_START as usize];
+        f.read_exact(&mut head)
+            .map_err(|_| anyhow!("{}: truncated header", path.display()))?;
+        if &head[..4] != STORE_MAGIC {
+            bail!("{}: bad magic (not an RMES artifact)", path.display());
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != STORE_VERSION {
+            bail!("{}: unsupported store version {version}", path.display());
+        }
+        let index_offset = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        // Checked arithmetic throughout: the index/header fields are
+        // untrusted (not covered by the per-shard CRCs), and an overflowed
+        // range check must fail loudly, not wrap into a vacuous pass.
+        if index_offset < DATA_START
+            || index_offset.checked_add(4).map_or(true, |end| end > file_bytes)
+        {
+            bail!("{}: index offset {index_offset} out of range", path.display());
+        }
+        f.seek(SeekFrom::Start(index_offset))?;
+        let mut len_buf = [0u8; 4];
+        f.read_exact(&mut len_buf)?;
+        let index_len = u32::from_le_bytes(len_buf) as u64;
+        if (index_offset + 4).checked_add(index_len).map_or(true, |end| end > file_bytes) {
+            bail!("{}: truncated index", path.display());
+        }
+        let mut index_bytes = vec![0u8; index_len as usize];
+        f.read_exact(&mut index_bytes)?;
+        let index = parse_index(std::str::from_utf8(&index_bytes)?, file_bytes)
+            .with_context(|| format!("{}: bad index", path.display()))?;
+        let by_block = index
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.block, i))
+            .collect();
+        Ok(ExpertStore {
+            path: path.to_path_buf(),
+            file: Mutex::new(f),
+            index,
+            by_block,
+            file_bytes,
+            bytes_read: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.index.config
+    }
+
+    pub fn index(&self) -> &StoreIndex {
+        &self.index
+    }
+
+    /// Total artifact size on disk.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Compressed bytes fetched since open (all shard reads).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Blocks with stored layers, ascending.
+    pub fn blocks(&self) -> Vec<usize> {
+        self.index.layers.iter().map(|l| l.block).collect()
+    }
+
+    pub fn layer_entry(&self, block: usize) -> Option<&LayerEntry> {
+        self.by_block.get(&block).map(|&i| &self.index.layers[i])
+    }
+
+    /// Decoded (in-memory) bytes of every residual shard — what a cache
+    /// budget must exceed to hold all experts resident at once.
+    pub fn total_expert_raw_bytes(&self) -> u64 {
+        self.index
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|e| e.shard.raw_bytes)
+            .sum()
+    }
+
+    /// Read + verify + decompress one shard.
+    fn fetch_shard(&self, info: &ShardInfo, what: &str) -> Result<Vec<u8>> {
+        if info
+            .offset
+            .checked_add(info.bytes)
+            .map_or(true, |end| end > self.file_bytes)
+        {
+            bail!("{what}: shard range {}+{} beyond file end", info.offset, info.bytes);
+        }
+        let mut compressed = vec![0u8; info.bytes as usize];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(info.offset))?;
+            f.read_exact(&mut compressed)
+                .with_context(|| format!("{what}: short read"))?;
+        }
+        self.bytes_read.fetch_add(info.bytes, Ordering::Relaxed);
+        let got_crc = crc32(&compressed);
+        if got_crc != info.crc32 {
+            bail!(
+                "{what}: checksum mismatch (stored {:08x}, computed {got_crc:08x}) — refusing to serve corrupt shard",
+                info.crc32
+            );
+        }
+        let raw = zstd::decode_all(&compressed[..])
+            .with_context(|| format!("{what}: shard decompression failed"))?;
+        if raw.len() as u64 != info.raw_bytes {
+            bail!("{what}: decoded {} bytes, index says {}", raw.len(), info.raw_bytes);
+        }
+        Ok(raw)
+    }
+
+    /// Load the expert-stripped backbone model.
+    pub fn load_backbone(&self) -> Result<Model> {
+        let raw = self.fetch_shard(&self.index.backbone, "backbone")?;
+        model_from_bytes(&raw)
+    }
+
+    /// Load a layer WITHOUT its experts: center + routing metadata. This is
+    /// the always-resident part (center-sized); residual shards page in via
+    /// [`ExpertStore::load_expert`].
+    pub fn load_layer_skeleton(&self, block: usize) -> Result<CompressedLayer> {
+        let entry = self
+            .layer_entry(block)
+            .ok_or_else(|| anyhow!("no stored layer for block {block}"))?;
+        let base = match &entry.center {
+            Some(info) => Some(decode_matrix_shard(
+                &self.fetch_shard(info, &format!("block {block} center"))?,
+            )?),
+            None => None,
+        };
+        let (expert_map, aligns) =
+            decode_layer_meta(&self.fetch_shard(&entry.meta, &format!("block {block} meta"))?)?;
+        if expert_map.iter().any(|&e| e >= entry.experts.len()) {
+            bail!("block {block}: expert map references a missing shard");
+        }
+        Ok(CompressedLayer {
+            method: entry.method.clone(),
+            arch: entry.arch,
+            d_model: entry.d_model,
+            base,
+            experts: Vec::new(),
+            expert_map,
+            aligns,
+        })
+    }
+
+    /// Demand-fetch ONE expert's residual shard (by stored-expert index,
+    /// i.e. `expert_map[slot]`).
+    pub fn load_expert(&self, block: usize, expert_idx: usize) -> Result<CompressedExpert> {
+        let entry = self
+            .layer_entry(block)
+            .ok_or_else(|| anyhow!("no stored layer for block {block}"))?;
+        let info = entry
+            .experts
+            .get(expert_idx)
+            .ok_or_else(|| anyhow!("block {block}: no expert shard {expert_idx}"))?;
+        let raw = self.fetch_shard(&info.shard, &format!("block {block} expert {expert_idx}"))?;
+        CompressedExpert::decode_shard(&raw)
+            .with_context(|| format!("block {block} expert {expert_idx}: bad shard payload"))
+    }
+
+    /// Load a full [`CompressedLayer`] (skeleton + every expert) — the
+    /// offline path used by tests and round-trip tooling; serving never
+    /// needs it.
+    pub fn load_layer_full(&self, block: usize) -> Result<CompressedLayer> {
+        let mut layer = self.load_layer_skeleton(block)?;
+        let n = self.layer_entry(block).expect("entry exists").experts.len();
+        layer.experts = (0..n)
+            .map(|i| self.load_expert(block, i))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(layer)
+    }
+}
+
+fn parse_index(src: &str, file_bytes: u64) -> Result<StoreIndex> {
+    let j = Json::parse(src).map_err(|e| anyhow!("index json: {e}"))?;
+    let version = j
+        .get("version")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("index missing version"))? as u32;
+    let config = ModelConfig::from_json(
+        j.get("config").ok_or_else(|| anyhow!("index missing config"))?,
+    )?;
+    let backbone =
+        ShardInfo::from_json(j.get("backbone").ok_or_else(|| anyhow!("index missing backbone"))?)?;
+    let mut layers = Vec::new();
+    for lj in j
+        .get("layers")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("index missing layers"))?
+    {
+        let usize_field = |k: &str| {
+            lj.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("layer entry missing '{k}'"))
+        };
+        let arch_name = lj
+            .get("arch")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("layer entry missing arch"))?;
+        let center = match lj.get("center") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(ShardInfo::from_json(c)?),
+        };
+        let mut experts = Vec::new();
+        for ej in lj
+            .get("experts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("layer entry missing experts"))?
+        {
+            experts.push(ExpertShardInfo {
+                shard: ShardInfo::from_json(ej)?,
+                kind: ej
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+            });
+        }
+        let entry = LayerEntry {
+            block: usize_field("block")?,
+            method: lj
+                .get("method")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            arch: ExpertArch::from_name(arch_name)
+                .ok_or_else(|| anyhow!("bad arch '{arch_name}'"))?,
+            d_model: usize_field("d_model")?,
+            rate: lj.get("rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            design_rows: usize_field("design_rows")?,
+            design_cols: usize_field("design_cols")?,
+            center,
+            meta: ShardInfo::from_json(
+                lj.get("meta").ok_or_else(|| anyhow!("layer entry missing meta"))?,
+            )?,
+            experts,
+        };
+        for info in entry
+            .experts
+            .iter()
+            .map(|e| &e.shard)
+            .chain(entry.center.iter())
+            .chain(std::iter::once(&entry.meta))
+        {
+            if info
+                .offset
+                .checked_add(info.bytes)
+                .map_or(true, |end| end > file_bytes)
+            {
+                bail!("block {}: shard beyond file end", entry.block);
+            }
+        }
+        layers.push(entry);
+    }
+    Ok(StoreIndex { version, config, backbone, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::ResMoE;
+    use crate::moe::{ExpertArch, MoeLayer};
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("resmoe-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn tiny_model() -> Model {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        let mut rng = Rng::new(1);
+        Model::random(&cfg, &mut rng)
+    }
+
+    fn write_store(path: &Path, seed: u64) -> (Model, Vec<(usize, CompressedLayer)>) {
+        let model = tiny_model();
+        let mut rng = Rng::new(seed);
+        let layer = MoeLayer::random(ExpertArch::Relu, 16, 32, 4, 1, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &layer, 0.3, seed);
+        let cl_svd = quick_compress(&ResMoE::svd(), &layer, 0.3, seed + 1);
+        let mut w = StoreWriter::create(path).unwrap();
+        w.put_backbone(&model.clone().strip_experts(&[1])).unwrap();
+        w.put_layer(1, &cl, 0.3).unwrap();
+        w.put_layer(3, &cl_svd, 0.3).unwrap();
+        w.finish().unwrap();
+        (model, vec![(1, cl), (3, cl_svd)])
+    }
+
+    #[test]
+    fn roundtrips_layers_and_backbone() {
+        let path = tmp("roundtrip.rmes");
+        let (model, layers) = write_store(&path, 5);
+        let store = ExpertStore::open(&path).unwrap();
+        assert_eq!(store.blocks(), vec![1, 3]);
+        assert_eq!(store.config().name, model.cfg.name);
+        let backbone = store.load_backbone().unwrap();
+        assert!(backbone.n_params() < model.n_params());
+        for (block, want) in &layers {
+            let got = store.load_layer_full(*block).unwrap();
+            assert_eq!(&got, want, "block {block} must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn single_expert_fetch_reads_only_its_shard() {
+        let path = tmp("paged.rmes");
+        let (_, layers) = write_store(&path, 6);
+        let store = ExpertStore::open(&path).unwrap();
+        let before = store.bytes_read();
+        let e = store.load_expert(1, 2).unwrap();
+        assert_eq!(e, layers[0].1.experts[2]);
+        let read = store.bytes_read() - before;
+        let entry = store.layer_entry(1).unwrap();
+        assert_eq!(read, entry.experts[2].shard.bytes, "exactly one shard read");
+        assert!(read < store.file_bytes() / 4, "single fetch must not scan the file");
+    }
+
+    #[test]
+    fn corrupt_shard_is_rejected_with_checksum_error() {
+        let path = tmp("corrupt.rmes");
+        let (_, _) = write_store(&path, 7);
+        let store = ExpertStore::open(&path).unwrap();
+        let info = store.layer_entry(1).unwrap().experts[1].shard.clone();
+        drop(store);
+        // Flip one bit in the middle of expert (1,1)'s shard.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let pos = (info.offset + info.bytes / 2) as usize;
+        bytes[pos] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ExpertStore::open(&path).unwrap();
+        let err = store.load_expert(1, 1).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "err: {err}");
+        // Untouched shards still load.
+        assert!(store.load_expert(1, 0).is_ok());
+        assert!(store.load_expert(3, 1).is_ok());
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let path = tmp("trunc.rmes");
+        write_store(&path, 8);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        std::fs::write(&path, b"RMES").unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        std::fs::write(&path, b"NOPE1234").unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn writer_rejects_misuse() {
+        let path = tmp("misuse.rmes");
+        let model = tiny_model();
+        let mut rng = Rng::new(9);
+        let layer = MoeLayer::random(ExpertArch::Relu, 16, 32, 4, 1, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &layer, 0.3, 9);
+        let mut w = StoreWriter::create(&path).unwrap();
+        assert!(w.put_backbone(&model).is_ok());
+        assert!(w.put_backbone(&model).is_err(), "double backbone");
+        assert!(w.put_layer(1, &cl, 0.3).is_ok());
+        assert!(w.put_layer(1, &cl, 0.3).is_err(), "duplicate block");
+        w.finish().unwrap();
+        // Missing backbone fails at finish.
+        let path2 = tmp("misuse2.rmes");
+        let w2 = StoreWriter::create(&path2).unwrap();
+        assert!(w2.finish().is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Sharded on-disk expert artifact store (`RMES`) — the layer between
+//! checkpoint and cache that completes the paper's space-efficiency story
+//! end-to-end: inference no longer needs every expert's parameters resident
+//! OR on the load path.
+//!
+//! A packed artifact holds the expert-stripped backbone (RMW1 bytes), one
+//! shared barycenter shard per compressed layer, and one residual shard per
+//! expert — each independently zstd-compressed and CRC-32-checked, located
+//! by a JSON index, so any single expert is readable without touching the
+//! rest of the file ([`format`]). [`pack`] converts checkpoints / compressed
+//! models into artifacts; [`prefetch`] decodes router-predicted shards on
+//! the worker pool ahead of demand. The serving side lives in
+//! `coordinator::cache` ([`crate::coordinator::ExpertCache::from_store`])
+//! and `coordinator::server` (`Engine::from_store`), with `resmoe pack` /
+//! `resmoe serve-packed` as the CLI entry points.
+
+pub mod format;
+pub mod pack;
+pub mod prefetch;
+
+pub use format::{
+    ExpertShardInfo, ExpertStore, LayerEntry, ShardInfo, StoreIndex, StoreWriter, STORE_MAGIC,
+    STORE_VERSION,
+};
+pub use pack::{
+    pack_checkpoint, pack_compressed_model, pack_model, summarize, PackSummary,
+};
+pub use prefetch::Prefetcher;

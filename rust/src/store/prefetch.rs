@@ -1,0 +1,197 @@
+//! Async expert prefetch: decode router-predicted residual shards on the
+//! `util/threads` worker pool *ahead of demand*, so a store-backed engine
+//! hides artifact I/O + decompression behind compute.
+//!
+//! Flow: the serving hook observes which slots a block routed to and calls
+//! [`Prefetcher::request`] with predictions for a later block. The request
+//! plans against the cache under its lock (recording prefetch hit/miss
+//! metrics, deduplicating against resident state), then fans the actual
+//! fetch + CRC check + decode out as detached pool jobs — the cache lock is
+//! NOT held while a shard is read — and each finished shard is handed back
+//! through `ExpertCache::insert_prefetched`, which never displaces
+//! demand-proven residents.
+
+use super::format::ExpertStore;
+use crate::coordinator::cache::ExpertCache;
+use crate::util::threads::spawn_detached;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct Prefetcher {
+    cache: Arc<Mutex<ExpertCache>>,
+    store: Arc<ExpertStore>,
+    /// (block, expert index) fetches currently running on the pool.
+    inflight: Arc<Mutex<HashSet<(usize, usize)>>>,
+    /// Decoded shards discarded because the cache mutex was contended at
+    /// insert time (the jobs may not block on it — see `request`). Flushed
+    /// into `CacheMetrics::prefetch_dropped` on the next planning pass so
+    /// the effectiveness numbers stay honest.
+    contended_drops: Arc<AtomicU64>,
+}
+
+/// Removes its key from the inflight set on drop — runs even when the
+/// fetch job panics (spawn_detached catches the unwind AFTER locals drop),
+/// so `quiesce` can never spin on a leaked entry. Poison-tolerant: a
+/// panicked peer must not wedge the bookkeeping.
+struct InflightGuard {
+    inflight: Arc<Mutex<HashSet<(usize, usize)>>>,
+    key: (usize, usize),
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let mut g = match self.inflight.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.remove(&self.key);
+    }
+}
+
+impl Prefetcher {
+    pub fn new(cache: Arc<Mutex<ExpertCache>>, store: Arc<ExpertStore>) -> Prefetcher {
+        Prefetcher {
+            cache,
+            store,
+            inflight: Arc::new(Mutex::new(HashSet::new())),
+            contended_drops: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Request async paging of predicted `(block, slot)` keys. Returns the
+    /// number of fetches scheduled (0 when everything was already resident
+    /// or in flight — in-flight keys count as prefetch hits, not as a
+    /// second miss).
+    pub fn request(&self, keys: &[(usize, usize)]) -> usize {
+        // Lock order: inflight → cache. The fetch jobs never hold the cache
+        // lock while taking inflight (the guard drops after the job's cache
+        // block), so this cannot deadlock. Planning and the inflight
+        // reservation happen in ONE critical section: two concurrent
+        // requests predicting the same key must record one miss and one
+        // fetch, not two misses and one fetch.
+        let targets = {
+            let mut infl = self.inflight.lock().unwrap();
+            let mut cache = self.cache.lock().unwrap();
+            // Account shards that finished but could not be inserted since
+            // the last pass (cache mutex contended at insert time).
+            cache.metrics.prefetch_dropped += self.contended_drops.swap(0, Ordering::Relaxed);
+            let planned = cache.plan_prefetch(keys, &infl);
+            for key in &planned {
+                infl.insert(*key);
+            }
+            planned
+        };
+        let scheduled = targets.len();
+        for (block, eidx) in targets {
+            let cache = Arc::clone(&self.cache);
+            let store = Arc::clone(&self.store);
+            let guard =
+                InflightGuard { inflight: Arc::clone(&self.inflight), key: (block, eidx) };
+            let contended = Arc::clone(&self.contended_drops);
+            spawn_detached(move || {
+                let _guard = guard;
+                // Fetch + verify + decode WITHOUT the cache lock.
+                let result = store.load_expert(block, eidx);
+                // try_lock, never lock: this closure runs on the shared
+                // worker pool, and a serve holding the cache mutex may
+                // itself be blocked on pool capacity (restore matmuls run
+                // under the lock). A pool worker parked on that mutex
+                // would complete the cycle and deadlock the server, so on
+                // contention the prefetched shard is dropped — counted via
+                // `contended_drops`; the demand path fetches it if it was
+                // really needed.
+                match cache.try_lock() {
+                    Ok(mut cache) => match result {
+                        Ok(expert) => cache.insert_prefetched(block, eidx, expert),
+                        // A failed prefetch is not fatal: the demand path
+                        // will retry and surface the error if it persists.
+                        Err(_) => cache.metrics.prefetch_dropped += 1,
+                    },
+                    Err(_) => {
+                        contended.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        scheduled
+    }
+
+    /// Wait until no fetches are in flight (shutdown / deterministic tests),
+    /// then flush any contended-drop counts into the cache metrics so a
+    /// metrics read right after quiesce sees the complete story.
+    pub fn quiesce(&self) {
+        while !self.inflight.lock().unwrap().is_empty() {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        let drops = self.contended_drops.swap(0, Ordering::Relaxed);
+        if drops > 0 {
+            self.cache.lock().unwrap().metrics.prefetch_dropped += drops;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::quick_compress;
+    use crate::compress::ResMoE;
+    use crate::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
+    use crate::store::pack_compressed_model;
+    use crate::util::Rng;
+
+    fn store_cache(seed: u64) -> (Arc<Mutex<ExpertCache>>, Arc<ExpertStore>) {
+        let mut rng = Rng::new(seed);
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 8;
+        cfg.d_inner = 16;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        let model = Model::random(&cfg, &mut rng);
+        let l = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let cl = quick_compress(&ResMoE::up(), &l, 0.25, seed);
+        let dir = std::env::temp_dir().join("resmoe-prefetch-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("pf-{seed}.rmes"));
+        pack_compressed_model(&model, &[(1, cl)], 0.25, &path).unwrap();
+        let store = Arc::new(ExpertStore::open(&path).unwrap());
+        let cache =
+            Arc::new(Mutex::new(ExpertCache::from_store(store.clone(), usize::MAX).unwrap()));
+        (cache, store)
+    }
+
+    #[test]
+    fn prefetcher_pages_shards_in_background() {
+        let (cache, store) = store_cache(40);
+        let pf = Prefetcher::new(cache.clone(), store);
+        let scheduled = pf.request(&[(1, 0), (1, 2), (7, 0)]);
+        assert_eq!(scheduled, 2, "unknown block dropped, two fetches scheduled");
+        pf.quiesce();
+        let mut guard = cache.lock().unwrap();
+        assert_eq!(guard.resident_shards(), 2);
+        assert_eq!(guard.metrics.prefetch_misses, 2);
+        // Demand access hits the prefetched shard without a new fetch.
+        let fetches = guard.metrics.shard_fetches;
+        guard.get(1, 0);
+        assert_eq!(guard.metrics.shard_fetches, fetches);
+        assert!(guard.metrics.prefetch_useful >= 1);
+    }
+
+    #[test]
+    fn repeated_requests_do_not_double_fetch() {
+        let (cache, store) = store_cache(41);
+        let pf = Prefetcher::new(cache.clone(), store);
+        pf.request(&[(1, 1)]);
+        pf.quiesce();
+        // Resident now: further requests are prefetch hits, zero scheduled.
+        assert_eq!(pf.request(&[(1, 1)]), 0);
+        pf.quiesce();
+        let guard = cache.lock().unwrap();
+        assert_eq!(guard.resident_shards(), 1);
+        assert_eq!(guard.metrics.shard_fetches, 1);
+        assert_eq!(guard.metrics.prefetch_hits, 1);
+    }
+}

@@ -13,7 +13,7 @@ use super::matrix::Matrix;
 use crate::util::Rng;
 
 /// Result of a (possibly truncated) SVD.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Svd {
     pub u: Matrix,  // m × k
     pub s: Vec<f32>, // k, descending

@@ -1,0 +1,150 @@
+//! Little-endian byte (de)serialization helpers shared by the shard codecs
+//! in `compress/formats.rs` and the `store` artifact format. Reads are
+//! bounds-checked and return errors instead of panicking so a truncated or
+//! corrupt shard surfaces as a clean decode failure.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian writer over a `Vec<u8>`.
+pub trait PutLe {
+    fn put_u8(&mut self, v: u8);
+    fn put_u32(&mut self, v: u32);
+    fn put_u64(&mut self, v: u64);
+    fn put_f32(&mut self, v: f32);
+    fn put_f32s(&mut self, vs: &[f32]);
+    fn put_u32s(&mut self, vs: &[u32]);
+}
+
+impl PutLe for Vec<u8> {
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f32(&mut self, v: f32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f32s(&mut self, vs: &[f32]) {
+        self.reserve(vs.len() * 4);
+        for v in vs {
+            self.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn put_u32s(&mut self, vs: &[u32]) {
+        self.reserve(vs.len() * 4);
+        for v in vs {
+            self.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian cursor over a byte slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "byte reader underrun: need {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// u32 read as usize (all shard dimensions fit u32 by construction).
+    pub fn len(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let b = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Fail unless the reader consumed every byte — shard payloads are
+    /// self-delimiting, so trailing garbage means corruption.
+    pub fn expect_done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{} trailing bytes after decoded payload", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_slices() {
+        let mut buf = Vec::new();
+        buf.put_u8(7);
+        buf.put_u32(0xDEAD_BEEF);
+        buf.put_u64(1 << 40);
+        buf.put_f32(-1.5);
+        buf.put_f32s(&[0.0, 3.25]);
+        buf.put_u32s(&[1, 2, 3]);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32s(3).unwrap(), vec![-1.5, 0.0, 3.25]);
+        assert_eq!(r.u32s(3).unwrap(), vec![1, 2, 3]);
+        r.expect_done().unwrap();
+    }
+
+    #[test]
+    fn underrun_and_trailing_are_errors() {
+        let mut buf = Vec::new();
+        buf.put_u32(5);
+        let mut r = ByteReader::new(&buf);
+        assert!(r.u64().is_err());
+        assert_eq!(r.u32().unwrap(), 5);
+        let buf2 = [1u8, 2, 3];
+        let mut r2 = ByteReader::new(&buf2);
+        assert_eq!(r2.u8().unwrap(), 1);
+        assert!(r2.expect_done().is_err());
+    }
+}

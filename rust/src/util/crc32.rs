@@ -1,0 +1,106 @@
+//! Table-driven CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) for
+//! artifact-shard checksums in the [`crate::store`] format. The store must
+//! detect bit rot / truncation in any individual shard without reading the
+//! rest of the file, so every shard carries the CRC of its on-disk bytes.
+//!
+//! In-tree because the offline vendor set carries no `crc32fast`; the
+//! 256-entry table is built in a `const fn` so there is no runtime init.
+
+/// The standard reflected polynomial (zlib / PNG / gzip "CRC-32").
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Streaming CRC-32 state. `Crc32::new().update(a).update(b).finish()`
+/// equals [`crc32`] over the concatenation of `a` and `b`.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(mut self, bytes: &[u8]) -> Crc32 {
+        for &b in bytes {
+            let idx = ((self.state ^ b as u32) & 0xFF) as usize;
+            self.state = (self.state >> 8) ^ TABLE[idx];
+        }
+        self
+    }
+
+    pub fn finish(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    Crc32::new().update(bytes).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answers() {
+        // Reference vectors from the zlib/PNG CRC-32 definition.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"abc"), 0x3524_41C2);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let data = b"shard-checksum-streaming-equivalence";
+        let (a, b) = data.split_at(11);
+        assert_eq!(Crc32::new().update(a).update(b).finish(), crc32(data));
+        // Byte-at-a-time too.
+        let mut st = Crc32::new();
+        for byte in data.iter() {
+            st = st.update(std::slice::from_ref(byte));
+        }
+        assert_eq!(st.finish(), crc32(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![0x5Au8; 1024];
+        let clean = crc32(&data);
+        for byte in [0usize, 511, 1023] {
+            for bit in 0..8 {
+                data[byte] ^= 1 << bit;
+                assert_ne!(crc32(&data), clean, "flip at {byte}:{bit} undetected");
+                data[byte] ^= 1 << bit;
+            }
+        }
+        assert_eq!(crc32(&data), clean);
+    }
+}

@@ -6,7 +6,9 @@
 //! which external crate it replaces.
 
 pub mod bench;
+pub mod bytes;
 pub mod cli;
+pub mod crc32;
 pub mod json;
 pub mod prop;
 pub mod rng;

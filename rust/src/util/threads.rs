@@ -150,6 +150,26 @@ fn run_scoped<'scope>(tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
     }
 }
 
+/// Submit one fire-and-forget job to the pool — the async-prefetch entry
+/// point (`store::Prefetcher`). Unlike the scoped helpers this does NOT
+/// block: the closure must own its captures (`'static`) and report its
+/// result through whatever shared state it captured (e.g. the expert
+/// cache's mutex). Called from a pool worker it runs inline instead, so a
+/// pool saturated with blocking parallel batches cannot deadlock on its own
+/// prefetch traffic.
+pub fn spawn_detached(f: impl FnOnce() + Send + 'static) {
+    if in_pool() {
+        f();
+        return;
+    }
+    let job: Job = Box::new(move || {
+        // A panicking prefetch job must not kill the shared worker; the
+        // outcome (a missing cache entry) is already tolerated by design.
+        let _ = catch_unwind(AssertUnwindSafe(f));
+    });
+    pool().tx.lock().unwrap().send(job).expect("worker pool alive");
+}
+
 /// Run `f(start, end)` over disjoint chunks of `0..n` in parallel.
 /// `f` must be `Sync` (immutable captures) — output goes through interior
 /// mutability or per-chunk ownership (see `parallel_map`).
@@ -322,6 +342,25 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn detached_jobs_run_and_survive_panics() {
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel::<usize>();
+        // A panicking job must not take a worker down...
+        spawn_detached(|| panic!("intentional"));
+        // ...and later jobs still run on the same pool.
+        for i in 0..8 {
+            let tx = tx.clone();
+            spawn_detached(move || {
+                let _ = tx.send(i);
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.into_iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
     }
 
     #[test]

@@ -133,6 +133,71 @@ fn generate_and_classify_through_server() {
 }
 
 #[test]
+fn packed_engine_serves_concurrently_and_equals_monolithic() {
+    // End-to-end artifact path: pack → open → serve through the threaded
+    // server with a budget far below the decoded expert bytes. Every answer
+    // must equal the monolithic engine's serial answer, shards must page in
+    // on demand (never the whole file), and the prefetcher must be active.
+    use resmoe::store::pack_compressed_model;
+    let m = model(30);
+    let mut rng = Rng::new(31);
+    let cm = resmoe::compress::compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    let dir = std::env::temp_dir().join("resmoe-integration-store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("serving.rmes");
+    pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+
+    let budget = 2 * 32 * (2 * 16 + 1) * 4; // two dense experts' worth
+    let packed = Engine::from_store(&artifact, budget).unwrap();
+    let store = packed.backing_store().unwrap();
+    assert!(
+        (budget as u64) < store.total_expert_raw_bytes(),
+        "budget must be smaller than total expert bytes for this test to bite"
+    );
+    // Startup loads backbone + skeletons only — no expert shard, nothing
+    // near a full-file decompression.
+    let startup_read = store.bytes_read();
+    assert!(
+        startup_read < store.file_bytes(),
+        "construct-from-artifact must not read the whole file ({startup_read} of {})",
+        store.file_bytes()
+    );
+    let mono = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+    let requests: Vec<Request> = (0..24)
+        .map(|i| Request::Score {
+            tokens: (0..10).map(|t| ((t * (i + 2) + 1) % 32) as u32).collect(),
+        })
+        .collect();
+    let want: Vec<Response> = requests.iter().map(|r| mono.handle(r)).collect();
+
+    let server = Server::start(
+        packed.clone(),
+        ServerConfig { batch_max: 4, batch_wait_us: 100, workers: 3, ..Default::default() },
+    );
+    let replies: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, want) in replies.into_iter().zip(want) {
+        let (got, _) = rx.recv().unwrap();
+        match (got, want) {
+            (Response::Score(a), Response::Score(b)) => {
+                // Concurrent cache decisions may mix fused/restored serves,
+                // so allow float-reassociation tolerance here (the serial
+                // bit-identity check lives in the server unit tests).
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    server.shutdown();
+    packed.quiesce_prefetch();
+    let cm2 = packed.cache_metrics().unwrap();
+    assert!(cm2.shard_fetches > 0, "must have paged shards in");
+    assert!(
+        cm2.prefetch_hits + cm2.prefetch_misses > 0,
+        "two compressed blocks must trigger next-block prefetch"
+    );
+}
+
+#[test]
 fn batching_amortizes_under_burst() {
     let m = model(10);
     let engine = compressed_engine(&m, usize::MAX, 11);

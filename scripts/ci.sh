@@ -17,4 +17,12 @@ RESMOE_THREADS=1 cargo test -q --lib tensor
 echo "== perf smoke (pooled, RESMOE_THREADS=2) =="
 RESMOE_THREADS=2 cargo bench --bench perf_hotpath -- --fast
 
+echo "== pack → serve-packed round-trip smoke =="
+PACK_DIR=$(mktemp -d)
+trap 'rm -rf "$PACK_DIR"' EXIT
+cargo run --release --quiet -- pack --model switch-mini-8 --method resmoe-up \
+  --rate 0.25 --layers 1 --seed 0 --out "$PACK_DIR/model.rmes"
+cargo run --release --quiet -- serve-packed --artifact "$PACK_DIR/model.rmes" \
+  --requests 16 --cache-mb 1 --workers 2
+
 echo "CI OK"
