@@ -15,7 +15,9 @@ use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
 use resmoe::store::{pack_compressed_model, ExpertStore};
 use resmoe::tensor::matrix::matmul_nt_into;
 use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
+use resmoe::coordinator::Response;
 use resmoe::util::bench::{BenchRunner, Table};
+use resmoe::util::stats::percentile;
 use resmoe::Rng;
 
 fn main() {
@@ -152,14 +154,14 @@ fn main() {
     // --- cache under thrash vs warm.
     let expert_bytes = layer.experts[0].n_params() * 4;
     runner.run("cache get (warm, hit)", 1, iters * 10, || {
-        let mut cache = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        let cache = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
         cache.get(0, 0);
         for _ in 0..100 {
             std::hint::black_box(cache.get(0, 0));
         }
     });
     runner.run("cache get (thrash, budget=1 expert)", 1, iters.min(5), || {
-        let mut cache = ExpertCache::new(vec![(0, cl.clone())], expert_bytes);
+        let cache = ExpertCache::new(vec![(0, cl.clone())], expert_bytes);
         for i in 0..20 {
             std::hint::black_box(cache.get(0, i % 8));
         }
@@ -256,6 +258,36 @@ fn main() {
         format!("{paged_read}"),
     ]);
 
+    // --- multi-worker serving: p50/p99 serve latency + aggregate tok/s at
+    // 1/2/4/8 workers over the demand-paged engine, under a cold-start
+    // roomy budget (every miss restores) and a thrash budget (every miss is
+    // a paged fused serve) — each against a serialized baseline that wraps
+    // every request in one global mutex, i.e. the old "all heavy work under
+    // the cache lock" collapse the concurrent cache removes. Every cell
+    // opens a FRESH engine so the cold window is actually measured.
+    let conc_reqs = if fast { 6 } else { 24 };
+    let mut conc_table = Table::new(
+        "Concurrent serving: budget x workers, concurrent vs serialized baseline (24-tok scores, cold engine per cell)",
+        &["mode", "budget", "workers", "p50 (ms)", "p99 (ms)", "tok/s"],
+    );
+    let thrash_mode_budget = expert_bytes / 2;
+    for &(mode, serialize) in &[("concurrent", false), ("serialized", true)] {
+        for &(bname, budget) in &[("cold+roomy", usize::MAX), ("thrash", thrash_mode_budget)] {
+            for &workers in &[1usize, 2, 4, 8] {
+                let (p50, p99, toks) =
+                    concurrent_serve_stats(&rmes, budget, workers, conc_reqs, serialize);
+                conc_table.row(vec![
+                    mode.into(),
+                    bname.into(),
+                    format!("{workers}"),
+                    format!("{p50:.3}"),
+                    format!("{p99:.3}"),
+                    format!("{toks:.0}"),
+                ]);
+            }
+        }
+    }
+
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
@@ -274,4 +306,55 @@ fn main() {
     spmm_table.save_json("BENCH_spmm_density_sweep");
     cold_table.print();
     cold_table.save_json("BENCH_coldstart");
+    conc_table.print();
+    conc_table.save_json("BENCH_concurrency");
+}
+
+/// Drive `workers` client threads, each scoring `reqs` 24-token sequences
+/// against a fresh (cold) store-backed engine at `budget`. `serialize`
+/// additionally wraps every `handle()` in one global mutex — the
+/// collapsed-to-one-worker baseline the concurrent ExpertCache replaces.
+/// Returns (p50 ms, p99 ms, aggregate tok/s) over all requests.
+fn concurrent_serve_stats(
+    artifact: &std::path::Path,
+    budget: usize,
+    workers: usize,
+    reqs: usize,
+    serialize: bool,
+) -> (f64, f64, f64) {
+    use std::time::Instant;
+    let mut engine = Engine::from_store(artifact, budget).expect("open artifact");
+    engine.disable_prefetch(); // measure pure demand paging under contention
+    let gate = std::sync::Mutex::new(());
+    let t0 = Instant::now();
+    let lats: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let engine = engine.clone();
+                let gate = &gate;
+                s.spawn(move || {
+                    let mut lats = Vec::with_capacity(reqs);
+                    for i in 0..reqs {
+                        let tokens: Vec<u32> = (0..24)
+                            .map(|t| ((t * 7 + i * 13 + w * 5 + 1) % 256) as u32)
+                            .collect();
+                        let t = Instant::now();
+                        let resp = if serialize {
+                            let _g = gate.lock().unwrap();
+                            engine.handle(&Request::Score { tokens })
+                        } else {
+                            engine.handle(&Request::Score { tokens })
+                        };
+                        assert!(matches!(resp, Response::Score(_)), "{resp:?}");
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let toks = (workers * reqs * 24) as f64 / wall;
+    (percentile(&lats, 50.0) * 1e3, percentile(&lats, 99.0) * 1e3, toks)
 }

@@ -97,6 +97,12 @@ pub fn cache_summary(cm: &CacheMetrics) -> String {
             cm.prefetch_dropped
         ));
     }
+    if cm.singleflight_waits + cm.dedup_fetches + cm.publish_races_lost > 0 {
+        line.push_str(&format!(
+            " | singleflight: {} waits, {} deduped, {} publish races lost",
+            cm.singleflight_waits, cm.dedup_fetches, cm.publish_races_lost
+        ));
+    }
     line
 }
 
@@ -144,5 +150,10 @@ mod tests {
         let paged = cache_summary(&cm);
         assert!(paged.contains("shard fetches"));
         assert!(paged.contains("50 % useful"));
+        assert!(!paged.contains("singleflight"), "quiet until concurrency dedups something");
+        cm.singleflight_waits = 3;
+        cm.dedup_fetches = 4;
+        let contended = cache_summary(&cm);
+        assert!(contended.contains("singleflight: 3 waits, 4 deduped, 0 publish races lost"));
     }
 }

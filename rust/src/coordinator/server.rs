@@ -20,6 +20,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+// The ExpertCache is internally synchronized (short metadata critical
+// sections + per-key singleflight; see cache.rs module docs), so the engine
+// shares it as a plain `Arc` — N workers overlap their store fetches,
+// decodes, and restore matmuls instead of serializing on one cache mutex.
+
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub batch_max: usize,
@@ -78,7 +83,7 @@ pub enum Response {
 #[derive(Clone)]
 pub struct Engine {
     model: Arc<Model>,
-    cache: Option<Arc<Mutex<ExpertCache>>>,
+    cache: Option<Arc<ExpertCache>>,
     prefetcher: Option<Arc<Prefetcher>>,
     /// block → next compressed block (the prefetch prediction target).
     next_block: Arc<HashMap<usize, usize>>,
@@ -106,7 +111,7 @@ impl Engine {
         let stripped = model.strip_experts(&blocks);
         Engine {
             model: Arc::new(stripped),
-            cache: Some(Arc::new(Mutex::new(ExpertCache::new(layers, cache_budget_bytes)))),
+            cache: Some(Arc::new(ExpertCache::new(layers, cache_budget_bytes))),
             prefetcher: None,
             next_block: Arc::new(HashMap::new()),
         }
@@ -119,8 +124,7 @@ impl Engine {
     pub fn from_store(artifact: &Path, cache_budget_bytes: usize) -> Result<Engine> {
         let store = Arc::new(ExpertStore::open(artifact)?);
         let model = store.load_backbone()?;
-        let cache =
-            Arc::new(Mutex::new(ExpertCache::from_store(store.clone(), cache_budget_bytes)?));
+        let cache = Arc::new(ExpertCache::from_store(store.clone(), cache_budget_bytes)?);
         let blocks = store.blocks();
         let mut next_block = HashMap::new();
         for w in blocks.windows(2) {
@@ -151,9 +155,7 @@ impl Engine {
 
     /// The backing artifact store, in [`Engine::from_store`] mode.
     pub fn backing_store(&self) -> Option<Arc<ExpertStore>> {
-        let cache = self.cache.as_ref()?;
-        let guard = cache.lock().unwrap();
-        guard.backing_store().cloned()
+        self.cache.as_ref()?.backing_store().cloned()
     }
 
     pub fn model(&self) -> &Model {
@@ -161,31 +163,27 @@ impl Engine {
     }
 
     pub fn cache_metrics(&self) -> Option<CacheMetrics> {
-        self.cache.as_ref().map(|c| c.lock().unwrap().metrics.clone())
+        self.cache.as_ref().map(|c| c.metrics())
     }
 
     /// Toggle the restore-free fused serve path (on by default; benches
     /// compare against the restore-only policy by switching it off).
     pub fn set_fused(&self, enabled: bool) {
         if let Some(c) = &self.cache {
-            c.lock().unwrap().set_fused_enabled(enabled);
+            c.set_fused_enabled(enabled);
         }
     }
 
     pub fn resident_expert_bytes(&self) -> Option<(usize, usize)> {
-        self.cache.as_ref().map(|c| {
-            let g = c.lock().unwrap();
-            (g.compressed_bytes(), g.used_bytes())
-        })
+        self.cache.as_ref().map(|c| (c.compressed_bytes(), c.used_bytes()))
     }
 
     /// (always-resident compressed bytes, restored dense bytes, paged shard
     /// bytes) — the three-way memory story of a store-backed deployment.
     pub fn resident_breakdown(&self) -> Option<(usize, usize, usize)> {
-        self.cache.as_ref().map(|c| {
-            let g = c.lock().unwrap();
-            (g.compressed_bytes(), g.used_bytes(), g.paged_bytes())
-        })
+        self.cache
+            .as_ref()
+            .map(|c| (c.compressed_bytes(), c.used_bytes(), c.paged_bytes()))
     }
 
     fn hook(&self) -> EngineHook<'_> {
@@ -267,7 +265,7 @@ impl Engine {
 /// to become the prefetch prediction for the next compressed block.
 struct EngineHook<'a> {
     model: &'a Model,
-    cache: Option<&'a Mutex<ExpertCache>>,
+    cache: Option<&'a ExpertCache>,
     prefetcher: Option<&'a Prefetcher>,
     next_block: &'a HashMap<usize, usize>,
 }
@@ -278,19 +276,17 @@ impl FfnHook for EngineHook<'_> {
         let Ffn::Moe(layer) = &self.model.blocks[block].ffn else {
             return None;
         };
-        {
-            let guard = cache.lock().unwrap();
-            if !guard.has_layer(block) {
-                return None;
-            }
+        if !cache.has_layer(block) {
+            return None;
         }
         // Route with the resident router; serve each activated slot through
-        // the cache's fused-vs-restore decision. The mutex is held only for
-        // the serve() bookkeeping/restore itself — routing, the shared
-        // expert, and every expert forward run unlocked so concurrent
-        // requests overlap (the Arc'd weights outlive the guard). The
-        // shared center term is built lazily on the first fused slot and
-        // reused by the rest of the batch.
+        // the cache's fused-vs-restore decision. The cache synchronizes
+        // itself with short metadata critical sections and per-key
+        // singleflight — fetches, decodes, restores, and every expert
+        // forward here run without any global lock, so concurrent requests
+        // overlap even while cold-missing (the Arc'd weights outlive the
+        // cache's internal guards). The shared center term is built lazily
+        // on the first fused slot and reused by the rest of the batch.
         let mut shared: Option<SharedAct> = None;
         let mut routed: Vec<usize> = Vec::new();
         let mut serve_error: Option<anyhow::Error> = None;
@@ -301,11 +297,10 @@ impl FfnHook for EngineHook<'_> {
             layer.shared_expert.as_ref(),
             |slot, sub, rows| {
                 routed.push(slot);
-                // try_serve so a store fetch/integrity error returns through
-                // the guard instead of panicking inside it (a panic while
-                // the MutexGuard is alive would poison the cache for every
-                // future request). The error surfaces below, lock-free.
-                let decision = cache.lock().unwrap().try_serve(block, slot, sub.rows);
+                // try_serve so a store fetch/integrity error returns as a
+                // value instead of panicking mid-dispatch; the error
+                // surfaces below, after the combine finishes.
+                let decision = cache.try_serve(block, slot, sub.rows);
                 match decision {
                     Ok(Serve::Dense(expert)) => expert.forward(sub),
                     Ok(Serve::Fused(fl)) => {
@@ -326,9 +321,9 @@ impl FfnHook for EngineHook<'_> {
             },
         );
         if let Some(e) = serve_error {
-            // No lock is held here: the panic fails THIS request (the server
-            // worker converts it to Response::Error) and the cache stays
-            // healthy for the next one. Never serve the zero-filled output.
+            // The panic fails THIS request (the server worker converts it
+            // to Response::Error) and the cache stays healthy for the next
+            // one. Never serve the zero-filled output.
             panic!("expert serve failed for block {block}: {e:#}");
         }
         // Router-predicted prefetch: expert choice is strongly correlated

@@ -4,31 +4,33 @@
 //!
 //! Flow: the serving hook observes which slots a block routed to and calls
 //! [`Prefetcher::request`] with predictions for a later block. The request
-//! plans against the cache under its lock (recording prefetch hit/miss
-//! metrics, deduplicating against resident state), then fans the actual
-//! fetch + CRC check + decode out as detached pool jobs — the cache lock is
-//! NOT held while a shard is read — and each finished shard is handed back
-//! through `ExpertCache::insert_prefetched`, which never displaces
-//! demand-proven residents.
+//! plans against the cache (recording prefetch hit/miss metrics,
+//! deduplicating against resident state, the prefetcher's own in-flight
+//! set, AND live demand fetches), then fans the actual fetch + CRC check +
+//! decode out as detached pool jobs — no cache lock is held while a shard
+//! is read — and each finished shard is handed back through
+//! [`crate::coordinator::ExpertCache::insert_prefetched`], which never
+//! displaces demand-proven residents.
+//!
+//! Since the cache's metadata critical sections are map operations only
+//! (every fetch/decode/restore runs unlocked — see `coordinator/cache.rs`),
+//! the publish step takes the metadata lock *properly*: a pool worker
+//! parking there for a few map ops cannot deadlock against a serve, so
+//! contended prefetch results are no longer thrown away the way the old
+//! `try_lock`-and-drop scheme had to.
 
 use super::format::ExpertStore;
 use crate::coordinator::cache::ExpertCache;
 use crate::util::threads::spawn_detached;
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 pub struct Prefetcher {
-    cache: Arc<Mutex<ExpertCache>>,
+    cache: Arc<ExpertCache>,
     store: Arc<ExpertStore>,
     /// (block, expert index) fetches currently running on the pool.
     inflight: Arc<Mutex<HashSet<(usize, usize)>>>,
-    /// Decoded shards discarded because the cache mutex was contended at
-    /// insert time (the jobs may not block on it — see `request`). Flushed
-    /// into `CacheMetrics::prefetch_dropped` on the next planning pass so
-    /// the effectiveness numbers stay honest.
-    contended_drops: Arc<AtomicU64>,
 }
 
 /// Removes its key from the inflight set on drop — runs even when the
@@ -51,13 +53,8 @@ impl Drop for InflightGuard {
 }
 
 impl Prefetcher {
-    pub fn new(cache: Arc<Mutex<ExpertCache>>, store: Arc<ExpertStore>) -> Prefetcher {
-        Prefetcher {
-            cache,
-            store,
-            inflight: Arc::new(Mutex::new(HashSet::new())),
-            contended_drops: Arc::new(AtomicU64::new(0)),
-        }
+    pub fn new(cache: Arc<ExpertCache>, store: Arc<ExpertStore>) -> Prefetcher {
+        Prefetcher { cache, store, inflight: Arc::new(Mutex::new(HashSet::new())) }
     }
 
     /// Request async paging of predicted `(block, slot)` keys. Returns the
@@ -65,19 +62,16 @@ impl Prefetcher {
     /// or in flight — in-flight keys count as prefetch hits, not as a
     /// second miss).
     pub fn request(&self, keys: &[(usize, usize)]) -> usize {
-        // Lock order: inflight → cache. The fetch jobs never hold the cache
-        // lock while taking inflight (the guard drops after the job's cache
-        // block), so this cannot deadlock. Planning and the inflight
+        // Lock order: inflight → cache metadata (inside plan_prefetch).
+        // The fetch jobs take the cache metadata lock and release it BEFORE
+        // their InflightGuard drops (takes inflight), so the two locks are
+        // never nested in the opposite order. Planning and the inflight
         // reservation happen in ONE critical section: two concurrent
         // requests predicting the same key must record one miss and one
         // fetch, not two misses and one fetch.
         let targets = {
             let mut infl = self.inflight.lock().unwrap();
-            let mut cache = self.cache.lock().unwrap();
-            // Account shards that finished but could not be inserted since
-            // the last pass (cache mutex contended at insert time).
-            cache.metrics.prefetch_dropped += self.contended_drops.swap(0, Ordering::Relaxed);
-            let planned = cache.plan_prefetch(keys, &infl);
+            let planned = self.cache.plan_prefetch(keys, &infl);
             for key in &planned {
                 infl.insert(*key);
             }
@@ -89,45 +83,29 @@ impl Prefetcher {
             let store = Arc::clone(&self.store);
             let guard =
                 InflightGuard { inflight: Arc::clone(&self.inflight), key: (block, eidx) };
-            let contended = Arc::clone(&self.contended_drops);
             spawn_detached(move || {
                 let _guard = guard;
-                // Fetch + verify + decode WITHOUT the cache lock.
-                let result = store.load_expert(block, eidx);
-                // try_lock, never lock: this closure runs on the shared
-                // worker pool, and a serve holding the cache mutex may
-                // itself be blocked on pool capacity (restore matmuls run
-                // under the lock). A pool worker parked on that mutex
-                // would complete the cycle and deadlock the server, so on
-                // contention the prefetched shard is dropped — counted via
-                // `contended_drops`; the demand path fetches it if it was
-                // really needed.
-                match cache.try_lock() {
-                    Ok(mut cache) => match result {
-                        Ok(expert) => cache.insert_prefetched(block, eidx, expert),
-                        // A failed prefetch is not fatal: the demand path
-                        // will retry and surface the error if it persists.
-                        Err(_) => cache.metrics.prefetch_dropped += 1,
-                    },
-                    Err(_) => {
-                        contended.fetch_add(1, Ordering::Relaxed);
-                    }
+                // Fetch + verify + decode with no cache lock anywhere near.
+                match store.load_expert(block, eidx) {
+                    // Publish under the metadata lock — a short map insert.
+                    // Blocking here is safe: no serve holds that lock
+                    // across heavy work anymore, so the worker parks for
+                    // nanoseconds instead of dropping the decoded shard.
+                    Ok(expert) => cache.insert_prefetched(block, eidx, expert),
+                    // A failed prefetch is not fatal: the demand path will
+                    // retry and surface the error if it persists.
+                    Err(_) => cache.note_prefetch_dropped(),
                 }
             });
         }
         scheduled
     }
 
-    /// Wait until no fetches are in flight (shutdown / deterministic tests),
-    /// then flush any contended-drop counts into the cache metrics so a
-    /// metrics read right after quiesce sees the complete story.
+    /// Wait until no fetches are in flight (shutdown / deterministic
+    /// tests).
     pub fn quiesce(&self) {
         while !self.inflight.lock().unwrap().is_empty() {
             std::thread::sleep(Duration::from_micros(50));
-        }
-        let drops = self.contended_drops.swap(0, Ordering::Relaxed);
-        if drops > 0 {
-            self.cache.lock().unwrap().metrics.prefetch_dropped += drops;
         }
     }
 }
@@ -141,7 +119,7 @@ mod tests {
     use crate::store::pack_compressed_model;
     use crate::util::Rng;
 
-    fn store_cache(seed: u64) -> (Arc<Mutex<ExpertCache>>, Arc<ExpertStore>) {
+    fn store_cache(seed: u64) -> (Arc<ExpertCache>, Arc<ExpertStore>) {
         let mut rng = Rng::new(seed);
         let mut cfg = ModelConfig::switch_mini(4);
         cfg.d_model = 8;
@@ -158,8 +136,7 @@ mod tests {
         let path = dir.join(format!("pf-{seed}.rmes"));
         pack_compressed_model(&model, &[(1, cl)], 0.25, &path).unwrap();
         let store = Arc::new(ExpertStore::open(&path).unwrap());
-        let cache =
-            Arc::new(Mutex::new(ExpertCache::from_store(store.clone(), usize::MAX).unwrap()));
+        let cache = Arc::new(ExpertCache::from_store(store.clone(), usize::MAX).unwrap());
         (cache, store)
     }
 
@@ -170,14 +147,13 @@ mod tests {
         let scheduled = pf.request(&[(1, 0), (1, 2), (7, 0)]);
         assert_eq!(scheduled, 2, "unknown block dropped, two fetches scheduled");
         pf.quiesce();
-        let mut guard = cache.lock().unwrap();
-        assert_eq!(guard.resident_shards(), 2);
-        assert_eq!(guard.metrics.prefetch_misses, 2);
+        assert_eq!(cache.resident_shards(), 2);
+        assert_eq!(cache.metrics().prefetch_misses, 2);
         // Demand access hits the prefetched shard without a new fetch.
-        let fetches = guard.metrics.shard_fetches;
-        guard.get(1, 0);
-        assert_eq!(guard.metrics.shard_fetches, fetches);
-        assert!(guard.metrics.prefetch_useful >= 1);
+        let fetches = cache.metrics().shard_fetches;
+        cache.get(1, 0);
+        assert_eq!(cache.metrics().shard_fetches, fetches);
+        assert!(cache.metrics().prefetch_useful >= 1);
     }
 
     #[test]
@@ -189,9 +165,41 @@ mod tests {
         // Resident now: further requests are prefetch hits, zero scheduled.
         assert_eq!(pf.request(&[(1, 1)]), 0);
         pf.quiesce();
-        let guard = cache.lock().unwrap();
-        assert_eq!(guard.resident_shards(), 1);
-        assert_eq!(guard.metrics.shard_fetches, 1);
-        assert_eq!(guard.metrics.prefetch_hits, 1);
+        let m = cache.metrics();
+        assert_eq!(cache.resident_shards(), 1);
+        assert_eq!(m.shard_fetches, 1);
+        assert_eq!(m.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn contended_prefetches_are_not_dropped_under_concurrent_serves() {
+        // Regression for the old try_lock-and-drop publish: pool jobs
+        // racing a stream of demand serves used to lose their decoded
+        // shards to mutex contention (`prefetch_dropped`). With the short
+        // metadata critical section the publish parks briefly and always
+        // lands. Demand traffic (slots 0/1) is disjoint from the
+        // prefetched keys (2/3) and the budget is unbounded, so the ONLY
+        // way a prefetch could drop here is contention — assert none.
+        let (cache, store) = store_cache(42);
+        let pf = Prefetcher::new(cache.clone(), store);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let cache = &cache;
+                s.spawn(move || {
+                    for i in 0..50usize {
+                        let slot = (t + i) % 2;
+                        cache.try_serve(1, slot, 1).unwrap();
+                    }
+                });
+            }
+            for _ in 0..25 {
+                pf.request(&[(1, 2), (1, 3)]);
+            }
+        });
+        pf.quiesce();
+        let m = cache.metrics();
+        assert_eq!(m.prefetch_dropped, 0, "no contended drops: {m:?}");
+        assert_eq!(cache.resident_shards(), 4, "both prefetched keys resident");
+        assert!(m.prefetch_misses >= 2);
     }
 }

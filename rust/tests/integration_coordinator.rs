@@ -198,6 +198,49 @@ fn packed_engine_serves_concurrently_and_equals_monolithic() {
 }
 
 #[test]
+fn packed_concurrent_cold_start_is_bit_identical_with_roomy_budget() {
+    // With an unbounded budget every miss decides restore (cost-model
+    // rule 2) regardless of interleaving, and per-key singleflight hands
+    // racing workers the same restored Arc — so even the cold-start
+    // overlap is bit-identical to the serial answers, not merely within
+    // float tolerance. Also pins the dedup guarantee: 2 blocks × 4
+    // experts means at most 8 store fetches no matter how many workers
+    // collide.
+    use resmoe::store::pack_compressed_model;
+    let m = model(40);
+    let mut rng = Rng::new(41);
+    let cm = resmoe::compress::compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    let dir = std::env::temp_dir().join("resmoe-integration-store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("concurrent-bitident.rmes");
+    pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+    let requests: Vec<Request> = (0..24)
+        .map(|i| Request::Score {
+            tokens: (0..10).map(|t| ((t * (i % 5 + 2) + 1) % 32) as u32).collect(),
+        })
+        .collect();
+    // Serial ground truth from a second engine over the same artifact.
+    let mut serial = Engine::from_store(&artifact, usize::MAX).unwrap();
+    serial.disable_prefetch();
+    let want: Vec<Response> = requests.iter().map(|r| serial.handle(r)).collect();
+    let mut packed = Engine::from_store(&artifact, usize::MAX).unwrap();
+    packed.disable_prefetch(); // strict fetch accounting below
+    let server = Server::start(
+        packed.clone(),
+        ServerConfig { batch_max: 4, batch_wait_us: 100, workers: 4, ..Default::default() },
+    );
+    let replies: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, want) in replies.into_iter().zip(want) {
+        let (got, _) = rx.recv().unwrap();
+        assert_eq!(got, want, "concurrent cold serving must be bit-identical");
+    }
+    server.shutdown();
+    let cmx = packed.cache_metrics().unwrap();
+    assert!(cmx.shard_fetches <= 8, "singleflight must dedup cold fetches: {cmx:?}");
+    assert_eq!(cmx.restore_serves, cmx.misses, "roomy budget restores every miss");
+}
+
+#[test]
 fn batching_amortizes_under_burst() {
     let m = model(10);
     let engine = compressed_engine(&m, usize::MAX, 11);

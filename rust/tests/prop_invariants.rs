@@ -174,7 +174,7 @@ fn prop_serve_decisions_are_consistent_and_correct() {
             let cl = quick_compress(&ResMoE::up(), layer, 0.3, *seed);
             let expert_bytes = layer.experts[0].n_params() * 4;
             let budget = budget_experts * expert_bytes;
-            let mut cache = ExpertCache::new(vec![(0, cl.clone())], budget);
+            let cache = ExpertCache::new(vec![(0, cl.clone())], budget);
             let mut rng = Rng::new(*seed);
             let x = Matrix::randn(*batch, layer.experts[0].d_model(), 1.0, &mut rng);
             for &slot in ops {
@@ -194,7 +194,7 @@ fn prop_serve_decisions_are_consistent_and_correct() {
                     return Err(format!("slot {slot}: serve output diverged"));
                 }
             }
-            let m = &cache.metrics;
+            let m = cache.metrics();
             if m.hits + m.misses != ops.len() as u64 {
                 return Err("hit+miss accounting broken".into());
             }
@@ -227,7 +227,7 @@ fn prop_cache_never_exceeds_budget_and_stays_correct() {
             let cl = quick_compress(&ResMoE::up(), layer, 0.3, *seed);
             let expert_bytes = layer.experts[0].n_params() * 4;
             let budget = budget_experts * expert_bytes;
-            let mut cache = ExpertCache::new(vec![(0, cl.clone())], budget);
+            let cache = ExpertCache::new(vec![(0, cl.clone())], budget);
             for &slot in ops {
                 let got = cache.get(0, slot);
                 let want = cl.restore_expert(slot);
@@ -242,9 +242,104 @@ fn prop_cache_never_exceeds_budget_and_stays_correct() {
                     ));
                 }
             }
-            let m = &cache.metrics;
+            let m = cache.metrics();
             if m.hits + m.misses != ops.len() as u64 {
                 return Err("hit+miss accounting broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_concurrent_cold_misses_singleflight_and_match_serial_serve() {
+    // The concurrent-serving-core guarantee: N workers cold-missing the
+    // SAME expert of a store-backed cache trigger exactly ONE store fetch
+    // (per-key singleflight), and every worker's forward output is
+    // bit-identical to a serial reference serve of the same request.
+    use resmoe::coordinator::Serve;
+    use resmoe::moe::{Model, ModelConfig};
+    use resmoe::store::{pack_compressed_model, ExpertStore};
+    use std::sync::{Arc, Barrier};
+    let dir = std::env::temp_dir().join("resmoe-prop-singleflight");
+    std::fs::create_dir_all(&dir).unwrap();
+    check(
+        PropConfig { cases: 6, seed: 0x51F117 },
+        |rng| {
+            let layer = random_layer(rng);
+            let seed = rng.next_u64();
+            let slot = rng.below(layer.n_experts());
+            let threads = 2 + rng.below(7);
+            (layer, seed, slot, threads)
+        },
+        |(layer, seed, slot, threads)| {
+            let cl = quick_compress(&ResMoE::up(), layer, 0.3, *seed);
+            let p = layer.experts[0].d_model();
+            let mut cfg = ModelConfig::switch_mini(layer.n_experts());
+            cfg.d_model = p;
+            cfg.d_inner = layer.experts[0].d_inner();
+            cfg.n_layers = 2;
+            cfg.n_heads = 1;
+            cfg.vocab_size = 32;
+            cfg.max_seq = 16;
+            let mut mrng = Rng::new(*seed);
+            let model = Model::random(&cfg, &mut mrng);
+            let path = dir.join(format!("sf-{seed}.rmes"));
+            pack_compressed_model(&model, &[(1, cl.clone())], 0.3, &path)
+                .map_err(|e| format!("pack failed: {e:#}"))?;
+            let store =
+                Arc::new(ExpertStore::open(&path).map_err(|e| format!("open failed: {e:#}"))?);
+            let mut xrng = Rng::new(*seed ^ 1);
+            let x = Matrix::randn(3, p, 1.0, &mut xrng);
+            // Serial reference: one serve on a fresh cache. Batch 4096
+            // forces the restore decision (cost-model rule 1) so the
+            // concurrent run below decides identically from any state.
+            let serial = ExpertCache::from_store(store.clone(), usize::MAX)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = match serial.try_serve(1, *slot, 4096).map_err(|e| format!("{e:#}"))? {
+                Serve::Dense(e) => e.forward(&x),
+                _ => return Err("batch 4096 must restore".into()),
+            };
+            if serial.metrics().shard_fetches != 1 {
+                return Err("serial reference must fetch exactly once".into());
+            }
+            // Concurrent: N threads race the same cold key.
+            let cache = Arc::new(
+                ExpertCache::from_store(store.clone(), usize::MAX)
+                    .map_err(|e| format!("{e:#}"))?,
+            );
+            let barrier = Barrier::new(*threads);
+            let outs: Vec<Result<Matrix, String>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..*threads)
+                    .map(|_| {
+                        let cache = &cache;
+                        let barrier = &barrier;
+                        let x = &x;
+                        s.spawn(move || {
+                            barrier.wait();
+                            match cache.try_serve(1, *slot, 4096) {
+                                Ok(Serve::Dense(e)) => Ok(e.forward(x)),
+                                Ok(_) => Err("must restore".to_string()),
+                                Err(e) => Err(format!("{e:#}")),
+                            }
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            std::fs::remove_file(&path).ok();
+            for out in outs {
+                let out = out?;
+                if out.data != want.data {
+                    return Err("concurrent serve diverged from serial reference".into());
+                }
+            }
+            let m = cache.metrics();
+            if m.shard_fetches != 1 {
+                return Err(format!("singleflight broken: {} store fetches", m.shard_fetches));
+            }
+            if m.hits + m.misses != *threads as u64 {
+                return Err("every thread's serve must be accounted".into());
             }
             Ok(())
         },
