@@ -288,6 +288,75 @@ fn main() {
         }
     }
 
+    // --- continuous batching: one batched window vs per-request serving
+    // at 1/2/4/8 concurrent clients, over a warm monolithic engine and a
+    // cold demand-paged engine. Outputs are bit-identical (the
+    // differential tests pin that); this measures what the fused window
+    // buys — one routing pass, one SharedAct, and per-expert matmuls over
+    // the concatenated rows.
+    let batch_iters = if fast { 3 } else { 10 };
+    let mut batch_table = Table::new(
+        "Continuous batching: batched window vs per-request serving (24-tok scores)",
+        &["mode", "clients", "unbatched (ms)", "batched (ms)", "speedup", "rows/dispatch"],
+    );
+    for &clients in &[1usize, 2, 4, 8] {
+        let reqs: Vec<Request> = (0..clients)
+            .map(|c| Request::Score {
+                tokens: (0..24).map(|t| ((t * 7 + c * 13 + 1) % 256) as u32).collect(),
+            })
+            .collect();
+        // Warm monolithic: budget-resident experts, steady-state windows.
+        let warm = Engine::compressed(model.clone(), cm.layers.clone(), usize::MAX);
+        for r in &reqs {
+            warm.handle(r); // warm the cache once
+        }
+        runner.run(&format!("warm unbatched x{clients}"), 2, batch_iters, || {
+            for r in &reqs {
+                std::hint::black_box(warm.handle(r));
+            }
+        });
+        let warm_unbatched_ms = runner.results.last().unwrap().mean_ms();
+        runner.run(&format!("warm batched   x{clients}"), 2, batch_iters, || {
+            std::hint::black_box(warm.handle_batch(&reqs));
+        });
+        let warm_batched_ms = runner.results.last().unwrap().mean_ms();
+        let rows_per_dispatch = warm.batch_metrics().mean_rows_per_dispatch();
+        batch_table.row(vec![
+            "warm".into(),
+            format!("{clients}"),
+            format!("{warm_unbatched_ms:.3}"),
+            format!("{warm_batched_ms:.3}"),
+            format!("{:.2}x", warm_unbatched_ms / warm_batched_ms.max(1e-9)),
+            format!("{rows_per_dispatch:.2}"),
+        ]);
+        // Cold + demand-paged: every iteration opens a fresh engine, so
+        // the window also collapses the first-touch materializations.
+        runner.run(&format!("cold+paged unbatched x{clients}"), 1, batch_iters.min(5), || {
+            let mut e = Engine::from_store(&rmes, paged_budget).expect("open rmes");
+            e.disable_prefetch();
+            for r in &reqs {
+                std::hint::black_box(e.handle(r));
+            }
+        });
+        let cold_unbatched_ms = runner.results.last().unwrap().mean_ms();
+        let mut cold_rows = 0.0f64;
+        runner.run(&format!("cold+paged batched   x{clients}"), 1, batch_iters.min(5), || {
+            let mut e = Engine::from_store(&rmes, paged_budget).expect("open rmes");
+            e.disable_prefetch();
+            std::hint::black_box(e.handle_batch(&reqs));
+            cold_rows = e.batch_metrics().mean_rows_per_dispatch();
+        });
+        let cold_batched_ms = runner.results.last().unwrap().mean_ms();
+        batch_table.row(vec![
+            "cold+paged".into(),
+            format!("{clients}"),
+            format!("{cold_unbatched_ms:.3}"),
+            format!("{cold_batched_ms:.3}"),
+            format!("{:.2}x", cold_unbatched_ms / cold_batched_ms.max(1e-9)),
+            format!("{cold_rows:.2}"),
+        ]);
+    }
+
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
@@ -308,6 +377,8 @@ fn main() {
     cold_table.save_json("BENCH_coldstart");
     conc_table.print();
     conc_table.save_json("BENCH_concurrency");
+    batch_table.print();
+    batch_table.save_json("BENCH_batching");
 }
 
 /// Drive `workers` client threads, each scoring `reqs` 24-token sequences

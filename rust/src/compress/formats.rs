@@ -606,6 +606,15 @@ fn svd_col(svd: &Svd, c: usize) -> Vec<f32> {
 /// The per-batch shared term of the fused forward: `x @ W_ω¹ᵀ + b_ω¹` (and
 /// the gate analog) — computed once per layer per batch and reused by every
 /// expert the router activates.
+///
+/// The "batch" here may be a **row-concatenated design matrix spanning
+/// several requests** (continuous batching): because the center matmul and
+/// every fused piece are row-independent, a shared term built over the
+/// concatenated rows and gathered per sub-batch is bit-identical to one
+/// built per request — so the center term is computed once per layer per
+/// *window*, amortized across every concurrent client (the per-request
+/// offsets live in the dispatch groups; see `moe::group_parts` and the
+/// serving coordinator's batched hook).
 #[derive(Debug, Clone)]
 pub struct SharedAct {
     /// B × pI pre-activation from the center's up-projection.
@@ -615,6 +624,11 @@ pub struct SharedAct {
 }
 
 impl SharedAct {
+    /// Rows this shared term covers (the design batch's row count).
+    pub fn rows(&self) -> usize {
+        self.a0.rows
+    }
+
     /// Rows `rows[i]` gathered into a new (len × pI) pair — aligns the
     /// batch-level shared term with an expert's routed sub-batch.
     pub fn gather(&self, rows: &[usize]) -> SharedAct {
@@ -957,6 +971,44 @@ mod tests {
         let got = fl.forward_slot(1, &sub, &shared.gather(&rows));
         let want = cl.restore_expert(1).forward(&sub);
         assert!(got.sq_dist(&want) < 1e-8);
+    }
+
+    #[test]
+    fn fused_forward_over_concatenated_requests_is_bit_identical() {
+        // Continuous batching's fused contract: one SharedAct over a
+        // row-concatenated design matrix (several requests stacked), then
+        // per-sub-batch gathers, must equal per-request shared terms and
+        // forwards EXACTLY — same f32 bits, not just within tolerance.
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(12);
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let layer = MoeLayer::random(arch, 8, 16, 4, 2, true, false, &mut rng);
+            for cl in [
+                quick_compress(&ResMoE::up(), &layer, 0.25, 5),
+                quick_compress(&ResMoE::svd(), &layer, 0.25, 5),
+            ] {
+                let fl = cl.fused().unwrap();
+                let xa = Matrix::randn(4, 8, 1.0, &mut rng);
+                let xb = Matrix::randn(3, 8, 1.0, &mut rng);
+                let cat = xa.vcat(&xb);
+                let shared_cat = fl.shared_act(&cat);
+                assert_eq!(shared_cat.rows(), 7);
+                let (sa, sb) = (fl.shared_act(&xa), fl.shared_act(&xb));
+                assert_eq!(shared_cat.a0.slice_rows(0, 4).data, sa.a0.data);
+                assert_eq!(shared_cat.a0.slice_rows(4, 7).data, sb.a0.data);
+                for slot in 0..4 {
+                    // Combined sub-batch: all of request A's rows then all
+                    // of request B's (offsets 0/4/7) through one call.
+                    let rows: Vec<usize> = (0..7).collect();
+                    let got = fl.forward_slot(slot, &cat, &shared_cat.gather(&rows));
+                    let wa = fl.forward_slot(slot, &xa, &sa);
+                    let wb = fl.forward_slot(slot, &xb, &sb);
+                    assert_eq!(got.slice_rows(0, 4).data, wa.data, "{arch:?} slot {slot}");
+                    assert_eq!(got.slice_rows(4, 7).data, wb.data, "{arch:?} slot {slot}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,29 +1,205 @@
-//! Dynamic request batcher: greedily drains the queue up to `batch_max`,
-//! waiting at most `batch_wait` for stragglers once the first request of a
-//! batch arrives (the vLLM-style latency/throughput knob).
+//! Continuous-batching admission queue.
+//!
+//! The scheduling core is [`Batcher`] — a **pure, virtual-clock state
+//! machine** (no wall time, no I/O): requests are `push`ed with an explicit
+//! arrival timestamp, and `poll` decides when a window flushes. Window
+//! policy (the vLLM-style latency/throughput knob):
+//!
+//! - **Full flush**: `max_batch` requests are pending → flush immediately.
+//! - **Linger flush**: the oldest pending request has waited `linger_us` →
+//!   flush whatever is pending (a lone straggler ships as a window of 1).
+//! - **Close flush**: the queue is shut down → drain everything pending.
+//!
+//! Requests are never dropped and never reordered: a window is always a
+//! contiguous, arrival-ordered slice of the admission sequence — the
+//! serving engine's batched == serial bit-identity proof assumes exactly
+//! that.
+//!
+//! Determinism is the point of the split: the replay tests below drive the
+//! state machine over scripted arrival traces with a virtual clock and
+//! assert exact window compositions. Wall time enters only in
+//! [`next_window`], the thin mpsc driver the server's workers run.
+//!
+//! Knobs: [`BatchPolicy::from_env`] reads `RESMOE_BATCH` (max window size)
+//! and `RESMOE_LINGER_US` (max linger), so deployments tune the
+//! latency/throughput trade without a rebuild.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-/// Collect the next batch from `rx`. Blocks until at least one item
-/// arrives (or the channel closes → `None`), then keeps accepting items
-/// until `batch_max` is reached or `batch_wait` elapses.
-pub fn next_batch<T>(rx: &Receiver<T>, batch_max: usize, batch_wait: Duration) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + batch_wait;
-    while batch.len() < batch_max {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Window-forming policy: flush at `max_batch` requests, or once the
+/// oldest pending request has lingered `linger_us` microseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub linger_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, linger_us: 500 }
+    }
+}
+
+impl BatchPolicy {
+    /// Defaults overridden by `RESMOE_BATCH` / `RESMOE_LINGER_US` (invalid
+    /// or missing values keep the default; `RESMOE_BATCH=0` clamps to 1 —
+    /// a zero-wide window could never flush).
+    pub fn from_env() -> BatchPolicy {
+        Self::from_lookup(|name| std::env::var(name).ok())
+    }
+
+    /// [`BatchPolicy::from_env`] with the variable source injected — tests
+    /// exercise the parsing/clamping without mutating process-global env
+    /// (setenv races getenv in a multithreaded test harness).
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> BatchPolicy {
+        let d = BatchPolicy::default();
+        let parse = |name: &str, default: u64| -> u64 {
+            lookup(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        BatchPolicy {
+            max_batch: (parse("RESMOE_BATCH", d.max_batch as u64) as usize).max(1),
+            linger_us: parse("RESMOE_LINGER_US", d.linger_us),
         }
     }
-    Some(batch)
+}
+
+/// Why a window flushed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// `max_batch` requests were pending.
+    Full,
+    /// The oldest pending request hit the linger deadline.
+    Linger,
+    /// The queue was closed (shutdown drain).
+    Closed,
+}
+
+/// One flushed batch window.
+#[derive(Debug)]
+pub struct Window<T> {
+    /// The requests, in arrival order (never reordered, never dropped).
+    pub items: Vec<T>,
+    pub reason: FlushReason,
+    /// How long the window's oldest request waited before the flush.
+    pub waited_us: u64,
+}
+
+/// The deterministic admission-queue state machine. All methods take an
+/// explicit `now_us` virtual timestamp; nothing here reads a real clock.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    /// Pending requests with their arrival stamps, in arrival order.
+    pending: VecDeque<(T, u64)>,
+    closed: bool,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher { policy, pending: VecDeque::new(), closed: false }
+    }
+
+    /// Admit a request at virtual time `now_us`.
+    pub fn push(&mut self, item: T, now_us: u64) {
+        debug_assert!(!self.closed, "push after close");
+        self.pending.push_back((item, now_us));
+    }
+
+    /// No requests pending (a closed, drained batcher is idle forever).
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// The virtual time at which the current window must flush even if no
+    /// further request arrives (`None` when nothing is pending — the
+    /// driver blocks indefinitely for the first arrival).
+    pub fn deadline_us(&self) -> Option<u64> {
+        self.pending.front().map(|&(_, arrived)| arrived + self.policy.linger_us)
+    }
+
+    /// Mark the queue closed: no further `push`es; the next `poll` drains
+    /// whatever is pending.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Flush decision at virtual time `now_us`. Returns the next window,
+    /// or `None` if no flush condition holds yet. Full windows take
+    /// `max_batch` items and leave the remainder pending (their linger
+    /// clocks — per-item arrival stamps — keep running); linger and close
+    /// flushes drain up to `max_batch` of the oldest pending items.
+    pub fn poll(&mut self, now_us: u64) -> Option<Window<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let reason = if self.pending.len() >= self.policy.max_batch {
+            FlushReason::Full
+        } else if self.closed {
+            FlushReason::Closed
+        } else if now_us >= self.deadline_us().expect("nonempty") {
+            FlushReason::Linger
+        } else {
+            return None;
+        };
+        let take = self.pending.len().min(self.policy.max_batch);
+        let oldest = self.pending.front().expect("nonempty").1;
+        let items = self.pending.drain(..take).map(|(item, _)| item).collect();
+        Some(Window { items, reason, waited_us: now_us.saturating_sub(oldest) })
+    }
+}
+
+/// Wall-clock driver for the server's worker loop: block on `rx` for the
+/// first arrival, admit stragglers until the state machine flushes, and
+/// return the window. Returns `None` only when the channel is closed AND
+/// the batcher has fully drained — no request is ever dropped on shutdown.
+/// `epoch` anchors the virtual clock (shared across calls so per-item
+/// arrival stamps stay comparable).
+pub fn next_window<T>(
+    rx: &Receiver<T>,
+    batcher: &mut Batcher<T>,
+    epoch: Instant,
+) -> Option<Window<T>> {
+    loop {
+        let now_us = epoch.elapsed().as_micros() as u64;
+        if let Some(w) = batcher.poll(now_us) {
+            return Some(w);
+        }
+        if batcher.is_closed() {
+            // Closed and poll returned None → fully drained.
+            return None;
+        }
+        match batcher.deadline_us() {
+            // Nothing pending: block for the first arrival of the next
+            // window.
+            None => match rx.recv() {
+                Ok(item) => {
+                    let now = epoch.elapsed().as_micros() as u64;
+                    batcher.push(item, now);
+                }
+                Err(_) => batcher.close(),
+            },
+            // Window open: accept stragglers until the linger deadline.
+            Some(deadline) => {
+                let now = epoch.elapsed().as_micros() as u64;
+                if now >= deadline {
+                    continue; // next poll linger-flushes
+                }
+                match rx.recv_timeout(Duration::from_micros(deadline - now)) {
+                    Ok(item) => {
+                        let at = epoch.elapsed().as_micros() as u64;
+                        batcher.push(item, at);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {} // next poll flushes
+                    Err(RecvTimeoutError::Disconnected) => batcher.close(),
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -31,37 +207,179 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn policy(max_batch: usize, linger_us: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, linger_us }
+    }
+
+    // ---------------------------------------- deterministic replay traces
+    //
+    // The four scripted trace shapes of the scheduler-replay satellite:
+    // full-batch flush, linger-expiry flush, single straggler, and
+    // quiesce-on-shutdown — all driven by a virtual clock, asserting exact
+    // window compositions.
+
     #[test]
-    fn returns_none_on_closed_channel() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    fn replay_full_batch_flush() {
+        let mut b = Batcher::new(policy(4, 1000));
+        for (i, t) in [(0u32, 10u64), (1, 20), (2, 30)] {
+            b.push(i, t);
+            assert!(b.poll(t).is_none(), "below max and before linger");
+        }
+        b.push(3, 40);
+        let w = b.poll(40).expect("4th request fills the window");
+        assert_eq!(w.items, vec![0, 1, 2, 3]);
+        assert_eq!(w.reason, FlushReason::Full);
+        assert_eq!(w.waited_us, 30, "oldest waited 40 - 10");
+        assert!(b.is_idle());
+        // A second burst overflowing max_batch: flush takes exactly
+        // max_batch, remainder stays pending with its own linger clock.
+        for i in 0..6u32 {
+            b.push(10 + i, 100 + i as u64);
+        }
+        let w = b.poll(106).expect("over-full window");
+        assert_eq!(w.items, vec![10, 11, 12, 13]);
+        assert_eq!(w.reason, FlushReason::Full);
+        assert_eq!(b.deadline_us(), Some(104 + 1000), "remainder keeps its arrival stamp");
+        let w = b.poll(1104).expect("leftovers linger-flush at their own deadline");
+        assert_eq!(w.items, vec![14, 15]);
+        assert_eq!(w.reason, FlushReason::Linger);
     }
 
     #[test]
-    fn batches_up_to_max() {
+    fn replay_linger_expiry_flush() {
+        let mut b = Batcher::new(policy(8, 500));
+        b.push(1u32, 0);
+        b.push(2, 200);
+        b.push(3, 499);
+        assert!(b.poll(499).is_none(), "deadline is first arrival + linger");
+        let w = b.poll(500).expect("linger expiry");
+        assert_eq!(w.items, vec![1, 2, 3]);
+        assert_eq!(w.reason, FlushReason::Linger);
+        assert_eq!(w.waited_us, 500);
+        assert!(b.poll(10_000).is_none(), "nothing pending, nothing flushes");
+    }
+
+    #[test]
+    fn replay_single_straggler() {
+        // A lone request never joined by anyone must still ship — as a
+        // window of one, exactly at its linger deadline.
+        let mut b = Batcher::new(policy(8, 300));
+        b.push(42u32, 1000);
+        assert_eq!(b.deadline_us(), Some(1300));
+        assert!(b.poll(1299).is_none());
+        let w = b.poll(1300).expect("straggler flushes alone");
+        assert_eq!(w.items, vec![42]);
+        assert_eq!(w.reason, FlushReason::Linger);
+        assert_eq!(w.waited_us, 300);
+    }
+
+    #[test]
+    fn replay_quiesce_on_shutdown() {
+        // Close with work pending: everything drains (no drops), in order,
+        // before the batcher reports idle-and-closed.
+        let mut b = Batcher::new(policy(4, 1_000_000));
+        for i in 0..6u32 {
+            b.push(i, i as u64);
+        }
+        b.close();
+        let w = b.poll(10).expect("full window drains first");
+        assert_eq!(w.items, vec![0, 1, 2, 3]);
+        assert_eq!(w.reason, FlushReason::Full, "full beats closed while over max");
+        let w = b.poll(10).expect("remainder drains on close, ignoring linger");
+        assert_eq!(w.items, vec![4, 5]);
+        assert_eq!(w.reason, FlushReason::Closed);
+        assert!(b.poll(10).is_none());
+        assert!(b.is_idle() && b.is_closed());
+    }
+
+    #[test]
+    fn windows_preserve_admission_order_and_drop_nothing() {
+        // Randomized trace: any interleaving of pushes and polls yields
+        // windows that concatenate back to the exact admission sequence.
+        let mut b = Batcher::new(policy(3, 50));
+        let mut seen: Vec<u32> = Vec::new();
+        let mut next = 0u32;
+        let mut now = 0u64;
+        for step in 0..200u64 {
+            now += 1 + (step * 7) % 13;
+            if step % 3 != 2 {
+                b.push(next, now);
+                next += 1;
+            }
+            if let Some(w) = b.poll(now) {
+                seen.extend(&w.items);
+            }
+        }
+        b.close();
+        while let Some(w) = b.poll(now) {
+            seen.extend(&w.items);
+        }
+        let want: Vec<u32> = (0..next).collect();
+        assert_eq!(seen, want, "concatenated windows == admission order, nothing dropped");
+    }
+
+    #[test]
+    fn policy_from_lookup_parses_and_clamps() {
+        // Injected lookup — no process-global env mutation (setenv races
+        // getenv under the parallel test harness).
+        let env = |pairs: &'static [(&'static str, &'static str)]| {
+            move |name: &str| {
+                pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| v.to_string())
+            }
+        };
+        let p = BatchPolicy::from_lookup(env(&[("RESMOE_BATCH", "16"), ("RESMOE_LINGER_US", "250")]));
+        assert_eq!(p.max_batch, 16);
+        assert_eq!(p.linger_us, 250);
+        let p = BatchPolicy::from_lookup(env(&[("RESMOE_BATCH", "0")]));
+        assert_eq!(p.max_batch, 1, "zero-wide windows clamp to 1");
+        let p = BatchPolicy::from_lookup(env(&[("RESMOE_BATCH", "bogus")]));
+        assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
+        assert_eq!(p.linger_us, BatchPolicy::default().linger_us);
+        let p = BatchPolicy::from_lookup(|_| None);
+        assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
+    }
+
+    // ------------------------------------------------- wall-clock driver
+
+    #[test]
+    fn driver_returns_none_on_closed_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let mut b = Batcher::new(policy(4, 1000));
+        assert!(next_window(&rx, &mut b, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn driver_batches_up_to_max() {
         let (tx, rx) = channel();
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let batch = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
-        assert_eq!(batch, vec![0, 1, 2, 3]);
-        let batch = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
-        assert_eq!(batch, vec![4, 5, 6, 7]);
+        let epoch = Instant::now();
+        let mut b = Batcher::new(policy(4, 5000));
+        let w = next_window(&rx, &mut b, epoch).unwrap();
+        assert_eq!(w.items, vec![0, 1, 2, 3]);
+        assert_eq!(w.reason, FlushReason::Full);
+        let w = next_window(&rx, &mut b, epoch).unwrap();
+        assert_eq!(w.items, vec![4, 5, 6, 7]);
     }
 
     #[test]
-    fn flushes_partial_batch_after_wait() {
+    fn driver_flushes_partial_batch_after_linger() {
         let (tx, rx) = channel();
         tx.send(1u32).unwrap();
+        let epoch = Instant::now();
+        let mut b = Batcher::new(policy(8, 20_000));
         let t0 = Instant::now();
-        let batch = next_batch(&rx, 8, Duration::from_millis(20)).unwrap();
-        assert_eq!(batch, vec![1]);
+        let w = next_window(&rx, &mut b, epoch).unwrap();
+        assert_eq!(w.items, vec![1]);
+        assert_eq!(w.reason, FlushReason::Linger);
         assert!(t0.elapsed() >= Duration::from_millis(15));
+        drop(tx);
     }
 
     #[test]
-    fn stragglers_join_within_window() {
+    fn driver_stragglers_join_within_window() {
         let (tx, rx) = channel();
         tx.send(1u32).unwrap();
         let sender = std::thread::spawn(move || {
@@ -69,17 +387,20 @@ mod tests {
             tx.send(2).unwrap();
             tx.send(3).unwrap();
         });
-        let batch = next_batch(&rx, 8, Duration::from_millis(100)).unwrap();
+        let mut b = Batcher::new(policy(8, 100_000));
+        let w = next_window(&rx, &mut b, Instant::now()).unwrap();
         sender.join().unwrap();
-        assert!(batch.len() >= 3, "batch={batch:?}");
+        assert!(w.items.len() >= 3, "items={:?}", w.items);
     }
 
     #[test]
-    fn closed_mid_batch_returns_partial() {
+    fn driver_closed_mid_batch_returns_partial() {
         let (tx, rx) = channel();
         tx.send(7u32).unwrap();
         drop(tx);
-        let batch = next_batch(&rx, 8, Duration::from_millis(50)).unwrap();
-        assert_eq!(batch, vec![7]);
+        let mut b = Batcher::new(policy(8, 50_000));
+        let w = next_window(&rx, &mut b, Instant::now()).unwrap();
+        assert_eq!(w.items, vec![7]);
+        assert_eq!(w.reason, FlushReason::Closed);
     }
 }

@@ -1,7 +1,8 @@
 //! Restored-expert LRU cache — the paper's Algorithm 2 ("reconstruct and
 //! dynamically load the compressed experts") as a serving-runtime feature —
-//! plus the **fused-vs-restore cost model** for cache misses and the
-//! **backing-store demand-paging mode**.
+//! plus the **fused-vs-restore cost model** for cache misses, the
+//! **backing-store demand-paging mode**, and the **batched serve window**
+//! entry point behind cross-request continuous batching.
 //!
 //! Resident set: the per-layer barycenter `W_ω` lives inside the
 //! [`CompressedLayer`] (always in memory, small); restored dense experts
@@ -30,6 +31,42 @@
 //! densified center plus the one paged expert's split pieces — so no full
 //! [`FusedLayer`] (which would need every shard) is ever built.
 //!
+//! # Per-block state partitioning (the continuous-batching invariant)
+//!
+//! All mutable serving state — resident maps, LRU clock, heat counters and
+//! their decay clock, and the byte budget itself — is **partitioned per
+//! compressed block** ([`BlockState`]); the budget splits into equal
+//! per-block shares. Two reasons, one practical, one structural:
+//!
+//! - Layer access is cyclic (block 1, block 3, block 1, …): under a single
+//!   global LRU the coldest entry is always *the block about to be served
+//!   next*, so a global pool evicts exactly what the next layer needs.
+//!   Per-block shares keep each layer's hot set stable.
+//! - Serves of different blocks no longer interact through shared state, so
+//!   the cache's decision state machine evolves **identically whether a
+//!   window of requests is served request-major (serial: all of request
+//!   1's layers, then request 2's) or layer-major (batched: every
+//!   request's rows at layer 1, then layer 3)** — within one block both
+//!   orders visit the same serve sequence. This commutativity is what
+//!   makes cross-request batching bit-identical to serial serving under
+//!   every budget, not just roomy/thrash ones; the differential property
+//!   test `prop_batched_serve_matches_serial_bit_for_bit` pins it.
+//!
+//! # Batched windows
+//!
+//! [`ExpertCache::try_serve_batch`] serves one layer's whole batch window:
+//! the caller passes the per-(request, slot) serve sequence in serial
+//! (request-major) order and gets one [`Serve`] decision per entry. In the
+//! steady-state warm window every key is dense-resident and the entire
+//! window is answered in **one metadata critical section** (one
+//! decide/reserve per layer per batch, not per request). Cold and mixed
+//! windows fall back to an exact serial replay — each entry runs the full
+//! decide → materialize → publish protocol, and materializations collapse
+//! automatically because the first entry's publish turns the remaining
+//! entries for that key into hits (and concurrent windows collapse through
+//! the per-key singleflight), so every expert is materialized at most once
+//! per window.
+//!
 //! # Lock discipline (the concurrent serving core)
 //!
 //! The cache is internally synchronized and shared as a plain
@@ -38,12 +75,11 @@
 //! - **Immutable after construction** (`layers`, `store`): readable from
 //!   any thread with no lock at all — routing metadata, compressed
 //!   skeletons, and the artifact handle never change while serving.
-//! - **Metadata lock** (`Mutex<CacheState>`): the resident maps, LRU
-//!   clock, heat counters, cost-model accounting, in-flight table, and
-//!   metrics. Critical sections are map lookups and integer arithmetic
-//!   only — **no file read, CRC check, zstd decode, or restore matmul ever
-//!   runs while this lock is held** (debug builds assert it via a
-//!   thread-local lock-held flag).
+//! - **Metadata lock** (`Mutex<CacheState>`): the per-block partitions,
+//!   in-flight table, and metrics. Critical sections are map lookups and
+//!   integer arithmetic only — **no file read, CRC check, zstd decode, or
+//!   restore matmul ever runs while this lock is held** (debug builds
+//!   assert it via a thread-local lock-held flag).
 //! - **Materialized artifacts** (`Arc<ExpertWeights>`, `Arc<FusedExpert>`,
 //!   …): handed out of the lock by clone; readers never contend with the
 //!   metadata writers while doing the actual math.
@@ -77,9 +113,10 @@ use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
-/// (block index, router slot) → restored expert. Paged shards are keyed by
-/// (block index, stored-expert index) — identical unless a merge method
-/// made `expert_map` non-injective.
+/// (block index, router slot) — the public prefetch-API key. Inside the
+/// per-block partitions dense entries are keyed by slot and paged shards by
+/// stored-expert index (identical unless a merge method made `expert_map`
+/// non-injective).
 type Key = (usize, usize);
 
 #[derive(Debug, Default, Clone)]
@@ -90,11 +127,21 @@ pub struct CacheMetrics {
     pub restore_ns: u64,
     /// Misses answered by restoring + caching a dense expert. Under
     /// concurrency this counts cost-model *decisions*; the number of
-    /// restore matmuls actually executed is lower by the deduplicated
-    /// flights (see [`CacheMetrics::dedup_fetches`]).
+    /// restore matmuls actually executed is
+    /// [`CacheMetrics::restores_executed`].
     pub restore_serves: u64,
     /// Misses answered restore-free through the fused path.
     pub fused_serves: u64,
+    /// Dense restore matmuls actually executed. `restore_serves` counts
+    /// decisions; this counts work — singleflight dedup and batched
+    /// windows make it the smaller number, and "each expert is
+    /// materialized at most once per batch window" is asserted against it.
+    pub restores_executed: u64,
+    /// Batch windows served through [`ExpertCache::try_serve_batch`].
+    pub batch_windows: u64,
+    /// Batch windows answered entirely from dense-resident entries inside
+    /// a single metadata critical section (the warm fast path).
+    pub batch_warm_windows: u64,
     /// Prefetch requests that found the key already resident.
     pub prefetch_hits: u64,
     /// Prefetch requests that had to load (or schedule loading of) the key.
@@ -146,7 +193,9 @@ impl CacheMetrics {
     }
 }
 
-/// How [`ExpertCache::serve`] answers a lookup.
+/// How [`ExpertCache::serve`] answers a lookup. `Clone` is cheap (`Arc`s)
+/// so batched windows can hand one decision to several dispatch segments.
+#[derive(Clone)]
 pub enum Serve {
     /// Dense weights: a cache hit, or a miss the policy chose to restore
     /// (and cache).
@@ -160,10 +209,28 @@ pub enum Serve {
     Paged { center: Arc<ExpertWeights>, expert: Arc<FusedExpert> },
 }
 
+impl Serve {
+    /// Whether two serves dispatch through the exact same weight objects —
+    /// the batched hook fuses adjacent per-request row segments whose
+    /// serves agree (row-independent kernels make the combined matmul
+    /// bit-identical to per-request ones).
+    pub fn same_source(&self, other: &Serve) -> bool {
+        match (self, other) {
+            (Serve::Dense(a), Serve::Dense(b)) => Arc::ptr_eq(a, b),
+            (Serve::Fused(a), Serve::Fused(b)) => Arc::ptr_eq(a, b),
+            (
+                Serve::Paged { center: ca, expert: ea },
+                Serve::Paged { center: cb, expert: eb },
+            ) => Arc::ptr_eq(ca, cb) && Arc::ptr_eq(ea, eb),
+            _ => false,
+        }
+    }
+}
+
 struct Entry {
     expert: Arc<ExpertWeights>,
     bytes: usize,
-    /// LRU stamp (monotone counter).
+    /// LRU stamp (monotone per-block counter).
     last_used: u64,
     /// Brought in by a prefetch and not yet demanded.
     from_prefetch: bool,
@@ -308,96 +375,130 @@ impl Drop for StateGuard<'_> {
     }
 }
 
-// ------------------------------------------------------------ the cache
+// ---------------------------------------------------- per-block partition
 
-/// Everything mutable, behind the short metadata lock. Methods here run
-/// exclusively inside critical sections — keep them to map operations and
-/// integer arithmetic.
-struct CacheState {
-    entries: HashMap<Key, Entry>,
-    /// Lazily built fused state per block (`None` = layer has no center).
-    /// Monolithic mode only — store mode uses `fused_centers` + per-shard
-    /// pieces instead.
-    fused: HashMap<usize, Option<Arc<FusedLayer>>>,
-    /// Store mode: paged residual shards, keyed by (block, expert index).
-    shards: HashMap<Key, ShardEntry>,
-    shard_used_bytes: usize,
-    /// Store mode: densified centers (`None` = layer has no center).
-    fused_centers: HashMap<usize, Option<Arc<ExpertWeights>>>,
-    /// Decayed per-key access counts driving the restore-vs-fused choice.
-    heat: HashMap<Key, u32>,
-    /// serve() calls so far — the decay clock for `heat`. Deliberately NOT
-    /// the LRU `clock` (which get()/prefetch() also advance): decay must
-    /// tick every HEAT_DECAY_PERIOD serves regardless of interleaving.
+/// One compressed block's mutable serving state. Everything a serve of
+/// this block reads or writes lives here (plus the global metrics), so
+/// serves of different blocks commute — the invariant the batched-serving
+/// parity proof rests on (see the module docs).
+struct BlockState {
+    /// slot → restored dense expert.
+    entries: HashMap<usize, Entry>,
+    /// Store mode: expert index → paged residual shard.
+    shards: HashMap<usize, ShardEntry>,
+    /// Monolithic mode: lazily built fused layer (`Some(None)` = the layer
+    /// has no shared center).
+    fused: Option<Option<Arc<FusedLayer>>>,
+    /// Store mode: lazily densified center.
+    fused_center: Option<Option<Arc<ExpertWeights>>>,
+    /// Decayed per-slot access counts driving the restore-vs-fused choice.
+    heat: HashMap<usize, u32>,
+    /// serve() calls against this block — the decay clock for `heat`.
+    /// Deliberately NOT the LRU `clock` (which get()/prefetch() also
+    /// advance): decay must tick every HEAT_DECAY_PERIOD serves regardless
+    /// of interleaving.
     serve_accesses: u64,
-    /// Master switch for the fused path (benches compare both policies).
-    fused_enabled: bool,
+    /// This block's equal share of the cache byte budget.
     budget_bytes: usize,
     used_bytes: usize,
+    shard_used_bytes: usize,
+    /// LRU clock (monotone, per block).
     clock: u64,
-    /// Per-key singleflight table: reserved materializations in progress.
-    flights: HashMap<FlightKey, Arc<Flight>>,
-    metrics: CacheMetrics,
 }
 
-impl CacheState {
-    fn hit(&mut self, block: usize, slot: usize) -> Option<Arc<ExpertWeights>> {
-        let e = self.touch_dense_entry((block, slot), true)?;
-        self.metrics.hits += 1;
+impl BlockState {
+    fn new(budget_bytes: usize) -> BlockState {
+        BlockState {
+            entries: HashMap::new(),
+            shards: HashMap::new(),
+            fused: None,
+            fused_center: None,
+            heat: HashMap::new(),
+            serve_accesses: 0,
+            budget_bytes,
+            used_bytes: 0,
+            shard_used_bytes: 0,
+            clock: 0,
+        }
+    }
+
+    fn hit(&mut self, slot: usize, metrics: &mut CacheMetrics) -> Option<Arc<ExpertWeights>> {
+        let e = self.touch_dense_entry(slot, true, metrics)?;
+        metrics.hits += 1;
         Some(e)
     }
 
     /// Refresh + hand out a resident dense entry (LRU stamp at the current
     /// clock); `demand` marks prefetched entries useful.
-    fn touch_dense_entry(&mut self, key: Key, demand: bool) -> Option<Arc<ExpertWeights>> {
+    fn touch_dense_entry(
+        &mut self,
+        slot: usize,
+        demand: bool,
+        metrics: &mut CacheMetrics,
+    ) -> Option<Arc<ExpertWeights>> {
         let clock = self.clock;
-        let e = self.entries.get_mut(&key)?;
+        let e = self.entries.get_mut(&slot)?;
         e.last_used = clock;
         if demand && e.from_prefetch {
             e.from_prefetch = false;
-            self.metrics.prefetch_useful += 1;
+            metrics.prefetch_useful += 1;
         }
         Some(e.expert.clone())
     }
 
-    /// Shard-pool analog of [`CacheState::touch_dense_entry`].
-    fn touch_shard_entry(&mut self, key: Key, demand: bool) -> Option<Arc<CompressedExpert>> {
+    /// Shard-pool analog of [`BlockState::touch_dense_entry`].
+    fn touch_shard_entry(
+        &mut self,
+        eidx: usize,
+        demand: bool,
+        metrics: &mut CacheMetrics,
+    ) -> Option<Arc<CompressedExpert>> {
         let clock = self.clock;
-        let s = self.shards.get_mut(&key)?;
+        let s = self.shards.get_mut(&eidx)?;
         s.last_used = clock;
         if demand && s.from_prefetch {
             s.from_prefetch = false;
-            self.metrics.prefetch_useful += 1;
+            metrics.prefetch_useful += 1;
         }
         Some(s.expert.clone())
     }
 
     /// Hand out the already-split fused pieces of a resident shard, with
     /// demand-access bookkeeping.
-    fn touch_fused_shard(&mut self, key: Key) -> Option<Arc<FusedExpert>> {
+    fn touch_fused_shard(
+        &mut self,
+        eidx: usize,
+        metrics: &mut CacheMetrics,
+    ) -> Option<Arc<FusedExpert>> {
         let clock = self.clock;
-        let s = self.shards.get_mut(&key)?;
+        let s = self.shards.get_mut(&eidx)?;
         let f = s.fused.clone()?;
         s.last_used = clock;
         if s.from_prefetch {
             s.from_prefetch = false;
-            self.metrics.prefetch_useful += 1;
+            metrics.prefetch_useful += 1;
         }
         Some(f)
     }
 
     /// Attach freshly-split fused pieces to their (still-resident) shard
     /// entry, charging the extra bytes to the pool.
-    fn publish_fused_split(&mut self, key: Key, fused: &Arc<FusedExpert>, extra: usize) {
-        match self.shards.get_mut(&key) {
+    fn publish_fused_split(
+        &mut self,
+        eidx: usize,
+        fused: &Arc<FusedExpert>,
+        extra: usize,
+        metrics: &mut CacheMetrics,
+    ) {
+        match self.shards.get_mut(&eidx) {
             Some(s) if s.fused.is_none() => {
                 s.fused = Some(fused.clone());
                 s.bytes += extra;
                 self.shard_used_bytes += extra;
-                self.trim_shards();
+                self.trim_shards(metrics);
             }
             // Another path filled the pieces first; keep theirs.
-            Some(_) => self.metrics.publish_races_lost += 1,
+            Some(_) => metrics.publish_races_lost += 1,
             // The shard was evicted between fetch and split (tight budget
             // under concurrent pressure): serve the pieces uncached rather
             // than resurrect an evicted entry.
@@ -405,9 +506,9 @@ impl CacheState {
         }
     }
 
-    fn bump_heat(&mut self, key: Key) {
+    fn bump_heat(&mut self, slot: usize) {
         self.serve_accesses += 1;
-        let h = self.heat.entry(key).or_insert(0);
+        let h = self.heat.entry(slot).or_insert(0);
         *h = h.saturating_add(1);
         if self.serve_accesses % HEAT_DECAY_PERIOD == 0 {
             for v in self.heat.values_mut() {
@@ -418,10 +519,10 @@ impl CacheState {
     }
 
     /// Evict LRU dense entries until `bytes` more fit (a single expert
-    /// larger than the whole budget is allowed in alone). Only dense
+    /// larger than the whole share is allowed in alone). Only dense
     /// residents count here — paged shards are trimmed separately so the
     /// dense working set evolves identically to monolithic mode.
-    fn evict_dense_until_fits(&mut self, bytes: usize) {
+    fn evict_dense_until_fits(&mut self, bytes: usize, metrics: &mut CacheMetrics) {
         while self.used_bytes + bytes > self.budget_bytes && !self.entries.is_empty() {
             let (&victim, _) = self
                 .entries
@@ -430,20 +531,20 @@ impl CacheState {
                 .expect("nonempty");
             let removed = self.entries.remove(&victim).unwrap();
             self.used_bytes -= removed.bytes;
-            self.metrics.evictions += 1;
+            metrics.evictions += 1;
         }
     }
 
-    /// Evict paged shards (LRU) until dense + paged fit the budget.
-    fn trim_shards(&mut self) {
+    /// Evict paged shards (LRU) until dense + paged fit the share.
+    fn trim_shards(&mut self, metrics: &mut CacheMetrics) {
         while self.used_bytes + self.shard_used_bytes > self.budget_bytes
             && !self.shards.is_empty()
         {
-            self.evict_lru_shard();
+            self.evict_lru_shard(metrics);
         }
     }
 
-    fn evict_lru_shard(&mut self) {
+    fn evict_lru_shard(&mut self, metrics: &mut CacheMetrics) {
         let victim = self
             .shards
             .iter()
@@ -452,18 +553,56 @@ impl CacheState {
         if let Some(victim) = victim {
             let removed = self.shards.remove(&victim).unwrap();
             self.shard_used_bytes -= removed.bytes;
-            self.metrics.shard_evictions += 1;
+            metrics.shard_evictions += 1;
         }
     }
 
     /// Make room among the paged shards for `bytes` more (never evicts
     /// dense residents — they are the hot set the cost model chose).
-    fn make_room_for_shard(&mut self, bytes: usize) {
+    fn make_room_for_shard(&mut self, bytes: usize, metrics: &mut CacheMetrics) {
         while self.used_bytes + self.shard_used_bytes + bytes > self.budget_bytes
             && !self.shards.is_empty()
         {
-            self.evict_lru_shard();
+            self.evict_lru_shard(metrics);
         }
+    }
+
+    /// Refresh the LRU stamp of a resident key without counting a demand
+    /// hit (the prefetch paths).
+    fn touch_key(&mut self, slot: usize, eidx: Option<usize>) {
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&slot) {
+            e.last_used = clock;
+            return;
+        }
+        if let Some(eidx) = eidx {
+            if let Some(s) = self.shards.get_mut(&eidx) {
+                s.last_used = clock;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ the cache
+
+/// Everything mutable, behind the short metadata lock: the per-block
+/// partitions plus the global singleflight table and metrics. Methods here
+/// run exclusively inside critical sections — keep them to map operations
+/// and integer arithmetic.
+struct CacheState {
+    blocks: HashMap<usize, BlockState>,
+    /// Master switch for the fused path (benches compare both policies).
+    fused_enabled: bool,
+    /// Per-key singleflight table: reserved materializations in progress.
+    flights: HashMap<FlightKey, Arc<Flight>>,
+    metrics: CacheMetrics,
+}
+
+impl CacheState {
+    /// Split-borrow one block's partition alongside the global metrics.
+    fn parts(&mut self, block: usize) -> (&mut BlockState, &mut CacheMetrics) {
+        let CacheState { blocks, metrics, .. } = self;
+        (blocks.get_mut(&block).expect("block not compressed"), metrics)
     }
 }
 
@@ -483,6 +622,15 @@ fn expert_bytes(e: &ExpertWeights) -> usize {
     e.n_params() * 4
 }
 
+/// Equal share of the total cache budget per compressed block. The
+/// partition (vs one global pool) is deliberate — see the module docs:
+/// cyclic layer access makes a global LRU evict exactly the block about to
+/// be served, and independent per-block state is what makes batched
+/// (layer-major) serving commute with serial (request-major) serving.
+fn per_block_budget(total: usize, n_blocks: usize) -> usize {
+    total / n_blocks.max(1)
+}
+
 /// Accesses in the decay window after which a key counts as hot enough to
 /// evict colder residents for (see `should_restore`).
 const HOT_ACCESSES: u32 = 3;
@@ -490,30 +638,14 @@ const HOT_ACCESSES: u32 = 3;
 /// tracks the recent request mix rather than all of history.
 const HEAT_DECAY_PERIOD: u64 = 256;
 /// Sub-batches at least this large amortize a restore within the single
-/// call, so restore regardless of heat.
+/// call, so restore regardless of heat. Batched windows apply this to each
+/// request's OWN sub-batch rows, not the combined window — a deliberate
+/// parity choice so decisions match the serial reference exactly.
 const RESTORE_AMORTIZE_TOKENS: usize = 512;
 
 impl ExpertCache {
     pub fn new(layers: Vec<(usize, CompressedLayer)>, budget_bytes: usize) -> ExpertCache {
-        ExpertCache {
-            layers: layers.into_iter().collect(),
-            store: None,
-            state: Mutex::new(CacheState {
-                entries: HashMap::new(),
-                fused: HashMap::new(),
-                shards: HashMap::new(),
-                shard_used_bytes: 0,
-                fused_centers: HashMap::new(),
-                heat: HashMap::new(),
-                serve_accesses: 0,
-                fused_enabled: true,
-                budget_bytes,
-                used_bytes: 0,
-                clock: 0,
-                flights: HashMap::new(),
-                metrics: CacheMetrics::default(),
-            }),
-        }
+        Self::build(layers.into_iter().collect(), None, budget_bytes)
     }
 
     /// Backing-store mode: load only the per-layer skeletons (center +
@@ -527,10 +659,26 @@ impl ExpertCache {
                 .with_context(|| format!("load skeleton for block {block}"))?;
             layers.insert(block, skeleton);
         }
-        let mut cache = ExpertCache::new(Vec::new(), budget_bytes);
-        cache.layers = layers;
-        cache.store = Some(store);
-        Ok(cache)
+        Ok(Self::build(layers, Some(store), budget_bytes))
+    }
+
+    fn build(
+        layers: HashMap<usize, CompressedLayer>,
+        store: Option<Arc<ExpertStore>>,
+        budget_bytes: usize,
+    ) -> ExpertCache {
+        let share = per_block_budget(budget_bytes, layers.len());
+        let blocks = layers.keys().map(|&b| (b, BlockState::new(share))).collect();
+        ExpertCache {
+            layers,
+            store,
+            state: Mutex::new(CacheState {
+                blocks,
+                fused_enabled: true,
+                flights: HashMap::new(),
+                metrics: CacheMetrics::default(),
+            }),
+        }
     }
 
     fn lock_state(&self) -> StateGuard<'_> {
@@ -569,11 +717,12 @@ impl ExpertCache {
     /// memory (dense-restored entry, or paged shard in store mode).
     pub fn is_resident(&self, block: usize, slot: usize) -> bool {
         let st = self.lock_state();
-        if st.entries.contains_key(&(block, slot)) {
+        let Some(bs) = st.blocks.get(&block) else { return false };
+        if bs.entries.contains_key(&slot) {
             return true;
         }
         match self.expert_index(block, slot) {
-            Some(eidx) => st.shards.contains_key(&(block, eidx)),
+            Some(eidx) => bs.shards.contains_key(&eidx),
             None => false,
         }
     }
@@ -604,37 +753,42 @@ impl ExpertCache {
     /// `compressed_bytes + fused_bytes + budget`.
     pub fn fused_bytes(&self) -> usize {
         let st = self.lock_state();
-        let monolithic: usize = st
-            .fused
+        st.blocks
             .values()
-            .filter_map(|f| f.as_ref())
-            .map(|f| f.memory_bytes())
-            .sum();
-        let centers: usize = st
-            .fused_centers
-            .values()
-            .filter_map(|c| c.as_ref())
-            .map(|c| c.n_params() * 4)
-            .sum();
-        monolithic + centers
+            .map(|bs| {
+                let monolithic = bs
+                    .fused
+                    .as_ref()
+                    .and_then(|f| f.as_ref())
+                    .map(|f| f.memory_bytes())
+                    .unwrap_or(0);
+                let center = bs
+                    .fused_center
+                    .as_ref()
+                    .and_then(|c| c.as_ref())
+                    .map(|c| c.n_params() * 4)
+                    .unwrap_or(0);
+                monolithic + center
+            })
+            .sum()
     }
 
     pub fn used_bytes(&self) -> usize {
-        self.lock_state().used_bytes
+        self.lock_state().blocks.values().map(|bs| bs.used_bytes).sum()
     }
 
     /// Bytes of paged residual shards currently resident (store mode).
     pub fn paged_bytes(&self) -> usize {
-        self.lock_state().shard_used_bytes
+        self.lock_state().blocks.values().map(|bs| bs.shard_used_bytes).sum()
     }
 
     pub fn resident_experts(&self) -> usize {
-        self.lock_state().entries.len()
+        self.lock_state().blocks.values().map(|bs| bs.entries.len()).sum()
     }
 
     /// Paged shards currently resident (store mode).
     pub fn resident_shards(&self) -> usize {
-        self.lock_state().shards.len()
+        self.lock_state().blocks.values().map(|bs| bs.shards.len()).sum()
     }
 
     /// Fetch (restoring if needed) the expert for `(block, slot)` — the
@@ -642,11 +796,12 @@ impl ExpertCache {
     pub fn get(&self, block: usize, slot: usize) -> Arc<ExpertWeights> {
         {
             let mut st = self.lock_state();
-            st.clock += 1;
-            if let Some(e) = st.hit(block, slot) {
+            let (bs, metrics) = st.parts(block);
+            bs.clock += 1;
+            if let Some(e) = bs.hit(slot, metrics) {
                 return e;
             }
-            st.metrics.misses += 1;
+            metrics.misses += 1;
         }
         self.restore_and_cache(block, slot, false).expect("expert shard fetch failed")
     }
@@ -671,13 +826,15 @@ impl ExpertCache {
     pub fn try_serve(&self, block: usize, slot: usize, batch_tokens: usize) -> Result<Serve> {
         let wants_fused = {
             let mut st = self.lock_state();
-            st.clock += 1;
-            st.bump_heat((block, slot));
-            if let Some(e) = st.hit(block, slot) {
+            let fused_enabled = st.fused_enabled;
+            let (bs, metrics) = st.parts(block);
+            bs.clock += 1;
+            bs.bump_heat(slot);
+            if let Some(e) = bs.hit(slot, metrics) {
                 return Ok(Serve::Dense(e));
             }
-            st.metrics.misses += 1;
-            st.fused_enabled && !self.should_restore(&st, block, slot, batch_tokens)
+            metrics.misses += 1;
+            fused_enabled && !self.should_restore(bs, block, slot, batch_tokens)
         };
         if wants_fused {
             if self.store.is_some() {
@@ -693,6 +850,58 @@ impl ExpertCache {
         }
         self.lock_state().metrics.restore_serves += 1;
         Ok(Serve::Dense(self.restore_and_cache(block, slot, false)?))
+    }
+
+    /// Serve one layer's whole batch window. `wants` is the per-(request,
+    /// slot) serve sequence **in serial order** — requests in admission
+    /// order, each request's activated slots ascending, each entry carrying
+    /// that request's own sub-batch row count — and the result is one
+    /// [`Serve`] per entry, exactly what `wants.iter().map(|&(s, t)|
+    /// self.try_serve(block, s, t))` would return (bit-identical decisions
+    /// AND metrics; the differential tests compare against that loop).
+    ///
+    /// The batching win: a warm window (every wanted slot dense-resident)
+    /// is answered in ONE metadata critical section — one decide/reserve
+    /// per layer per batch instead of per request. Cold and mixed windows
+    /// fall back to the exact serial replay, where the first entry's
+    /// publish turns the rest of its key's entries into hits, so every
+    /// expert is still materialized at most once per window
+    /// ([`CacheMetrics::restores_executed`] / shard fetch counters bound
+    /// it).
+    pub fn try_serve_batch(
+        &self,
+        block: usize,
+        wants: &[(usize, usize)],
+    ) -> Result<Vec<Serve>> {
+        if wants.is_empty() {
+            return Ok(Vec::new());
+        }
+        {
+            let mut st = self.lock_state();
+            st.metrics.batch_windows += 1;
+            let (bs, metrics) = st.parts(block);
+            if wants.iter().all(|(slot, _)| bs.entries.contains_key(slot)) {
+                // Warm fast path: replay each want's serial bookkeeping
+                // (clock tick, heat bump + decay, hit count, LRU touch)
+                // without dropping the lock. No eviction can run here —
+                // hits never allocate — so residency checked once holds
+                // for the whole window.
+                let mut out = Vec::with_capacity(wants.len());
+                for &(slot, _) in wants {
+                    bs.clock += 1;
+                    bs.bump_heat(slot);
+                    let e = bs.hit(slot, metrics).expect("checked resident");
+                    out.push(Serve::Dense(e));
+                }
+                metrics.batch_warm_windows += 1;
+                return Ok(out);
+            }
+        }
+        // Cold/mixed window: exact serial replay. Materializations collapse
+        // across the window through residency (first restore publishes,
+        // later wants of the key hit) and across concurrent windows through
+        // the per-key singleflight.
+        wants.iter().map(|&(slot, tokens)| self.try_serve(block, slot, tokens)).collect()
     }
 
     /// Reserve a flight for `key` or join the one already in the air.
@@ -725,10 +934,11 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            if let Some(expert) = st.touch_dense_entry((block, slot), !from_prefetch) {
+            let (bs, metrics) = st.parts(block);
+            if let Some(expert) = bs.touch_dense_entry(slot, !from_prefetch, metrics) {
                 // A racing serve published this key between our miss
                 // bookkeeping and the reservation (never single-threaded).
-                st.metrics.dedup_fetches += 1;
+                metrics.dedup_fetches += 1;
                 return Ok(expert);
             }
             match self.join_or_lead(&mut st, FlightKey::Dense(block, slot)) {
@@ -771,21 +981,23 @@ impl ExpertCache {
         let bytes = expert_bytes(&restored);
         let mut st = self.lock_state();
         st.metrics.restore_ns += restore_ns;
-        if let Some(resident) = st.touch_dense_entry((block, slot), !from_prefetch) {
+        st.metrics.restores_executed += 1;
+        let (bs, metrics) = st.parts(block);
+        if let Some(resident) = bs.touch_dense_entry(slot, !from_prefetch, metrics) {
             // Lost the publish race (possible only against insert paths
             // outside this key's flight); serve the resident copy.
-            st.metrics.publish_races_lost += 1;
+            metrics.publish_races_lost += 1;
             lease.complete(&mut st, Ok(FlightPayload::Dense(resident.clone())));
             return Ok(resident);
         }
-        st.evict_dense_until_fits(bytes);
-        st.used_bytes += bytes;
-        let clock = st.clock;
-        st.entries.insert(
-            (block, slot),
+        bs.evict_dense_until_fits(bytes, metrics);
+        bs.used_bytes += bytes;
+        let clock = bs.clock;
+        bs.entries.insert(
+            slot,
             Entry { expert: restored.clone(), bytes, last_used: clock, from_prefetch },
         );
-        st.trim_shards();
+        bs.trim_shards(metrics);
         lease.complete(&mut st, Ok(FlightPayload::Dense(restored.clone())));
         Ok(restored)
     }
@@ -802,7 +1014,8 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            if let Some(expert) = st.touch_shard_entry((block, eidx), !from_prefetch) {
+            let (bs, metrics) = st.parts(block);
+            if let Some(expert) = bs.touch_shard_entry(eidx, !from_prefetch, metrics) {
                 return Ok(expert);
             }
             match self.join_or_lead(&mut st, FlightKey::Shard(block, eidx)) {
@@ -835,24 +1048,25 @@ impl ExpertCache {
                 return Err(e);
             }
         };
-        if let Some(resident) = st.touch_shard_entry((block, eidx), !from_prefetch) {
+        let (bs, metrics) = st.parts(block);
+        if let Some(resident) = bs.touch_shard_entry(eidx, !from_prefetch, metrics) {
             // An async prefetch published this key while we fetched: keep
             // the resident copy (decodes are bit-identical), drop ours —
             // charging neither the fetch count nor its time, so the
             // count/time/bytes triple in `cache_summary` stays consistent.
-            st.metrics.publish_races_lost += 1;
+            metrics.publish_races_lost += 1;
             lease.complete(&mut st, Ok(FlightPayload::Shard(resident.clone())));
             return Ok(resident);
         }
-        st.metrics.shard_fetch_ns += fetch_ns;
-        st.metrics.shard_fetches += 1;
+        metrics.shard_fetch_ns += fetch_ns;
+        metrics.shard_fetches += 1;
         let bytes = expert.memory_bytes();
-        st.metrics.shard_bytes += bytes as u64;
-        st.make_room_for_shard(bytes);
-        st.shard_used_bytes += bytes;
-        let clock = st.clock;
-        st.shards.insert(
-            (block, eidx),
+        metrics.shard_bytes += bytes as u64;
+        bs.make_room_for_shard(bytes, metrics);
+        bs.shard_used_bytes += bytes;
+        let clock = bs.clock;
+        bs.shards.insert(
+            eidx,
             ShardEntry {
                 expert: expert.clone(),
                 fused: None,
@@ -875,7 +1089,8 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            if let Some(fused) = st.touch_fused_shard((block, eidx)) {
+            let (bs, metrics) = st.parts(block);
+            if let Some(fused) = bs.touch_fused_shard(eidx, metrics) {
                 return Ok(fused);
             }
             match self.join_or_lead(&mut st, FlightKey::FusedShard(block, eidx)) {
@@ -903,7 +1118,8 @@ impl ExpertCache {
         // so paged_bytes reports the truth and eviction releases the full
         // footprint.
         let mut st = self.lock_state();
-        st.publish_fused_split((block, eidx), &fused, extra);
+        let (bs, metrics) = st.parts(block);
+        bs.publish_fused_split(eidx, &fused, extra, metrics);
         lease.complete(&mut st, Ok(FlightPayload::FusedShard(fused.clone())));
         Ok(fused)
     }
@@ -913,7 +1129,7 @@ impl ExpertCache {
     fn fused_layer(&self, block: usize) -> Option<Arc<FusedLayer>> {
         let lease = {
             let mut st = self.lock_state();
-            if let Some(f) = st.fused.get(&block) {
+            if let Some(f) = &st.blocks.get(&block).expect("block not compressed").fused {
                 return f.clone();
             }
             match self.join_or_lead(&mut st, FlightKey::FusedLayer(block)) {
@@ -936,7 +1152,7 @@ impl ExpertCache {
             .fused()
             .map(Arc::new);
         let mut st = self.lock_state();
-        st.fused.insert(block, built.clone());
+        st.parts(block).0.fused = Some(built.clone());
         lease.complete(&mut st, Ok(FlightPayload::FusedLayer(built.clone())));
         built
     }
@@ -946,7 +1162,8 @@ impl ExpertCache {
     fn fused_center(&self, block: usize) -> Option<Arc<ExpertWeights>> {
         let lease = {
             let mut st = self.lock_state();
-            if let Some(c) = st.fused_centers.get(&block) {
+            if let Some(c) = &st.blocks.get(&block).expect("block not compressed").fused_center
+            {
                 return c.clone();
             }
             match self.join_or_lead(&mut st, FlightKey::Center(block)) {
@@ -968,7 +1185,7 @@ impl ExpertCache {
             .fused_center()
             .map(Arc::new);
         let mut st = self.lock_state();
-        st.fused_centers.insert(block, built.clone());
+        st.parts(block).0.fused_center = Some(built.clone());
         lease.complete(&mut st, Ok(FlightPayload::Center(built.clone())));
         built
     }
@@ -978,10 +1195,11 @@ impl ExpertCache {
     /// fused forwards pay O(nnz)/O(rank) extra per call but never touch the
     /// budget. Restore therefore wins iff the dense expert is likely to be
     /// resident when the next request for it arrives — or the current
-    /// sub-batch alone amortizes the materialization.
+    /// sub-batch alone amortizes the materialization. All byte accounting
+    /// is against this block's own budget share.
     fn should_restore(
         &self,
-        st: &CacheState,
+        bs: &BlockState,
         block: usize,
         slot: usize,
         batch_tokens: usize,
@@ -992,17 +1210,17 @@ impl ExpertCache {
         }
         let bytes = self.restored_bytes(block, slot);
         // 2. Fits without evicting anyone → it will stick; restore.
-        if st.used_bytes + bytes <= st.budget_bytes {
+        if bs.used_bytes + bytes <= bs.budget_bytes {
             return true;
         }
-        // 3. Larger than the whole budget → guaranteed thrash; stay fused.
-        if bytes > st.budget_bytes {
+        // 3. Larger than the whole share → guaranteed thrash; stay fused.
+        if bytes > bs.budget_bytes {
             return false;
         }
         // 4. Tight budget: evict colder residents only for keys with shown
         //    reuse — a cold expert would displace a hotter one just to be
         //    displaced right back.
-        st.heat.get(&(block, slot)).copied().unwrap_or(0) >= HOT_ACCESSES
+        bs.heat.get(&slot).copied().unwrap_or(0) >= HOT_ACCESSES
     }
 
     /// Bytes a restored dense expert for `(block, slot)` would occupy
@@ -1022,27 +1240,16 @@ impl ExpertCache {
     /// Refresh a dense entry's LRU stamp after receiving it through a
     /// flight; `demand` marks prefetched entries useful.
     fn touch_dense(&self, block: usize, slot: usize, demand: bool) {
-        let _ = self.lock_state().touch_dense_entry((block, slot), demand);
+        let mut st = self.lock_state();
+        let (bs, metrics) = st.parts(block);
+        let _ = bs.touch_dense_entry(slot, demand, metrics);
     }
 
     /// Shard-pool analog of [`ExpertCache::touch_dense`].
     fn touch_shard(&self, block: usize, eidx: usize, demand: bool) {
-        let _ = self.lock_state().touch_shard_entry((block, eidx), demand);
-    }
-
-    /// Refresh the LRU stamp of a resident key without counting a demand
-    /// hit (locked helper for the prefetch paths).
-    fn touch_key_locked(&self, st: &mut CacheState, block: usize, slot: usize) {
-        let clock = st.clock;
-        if let Some(e) = st.entries.get_mut(&(block, slot)) {
-            e.last_used = clock;
-            return;
-        }
-        if let Some(eidx) = self.expert_index(block, slot) {
-            if let Some(s) = st.shards.get_mut(&(block, eidx)) {
-                s.last_used = clock;
-            }
-        }
+        let mut st = self.lock_state();
+        let (bs, metrics) = st.parts(block);
+        let _ = bs.touch_shard_entry(eidx, demand, metrics);
     }
 
     /// Pre-warm the cache for the given (block, slot) pairs (the scheduler
@@ -1053,23 +1260,23 @@ impl ExpertCache {
     /// [`CacheMetrics::prefetch_misses`] / [`CacheMetrics::prefetch_useful`]
     /// — demand hit/miss counters are NOT touched, so the serving hit rate
     /// stays attributable to the request stream.
-    pub fn prefetch(&self, keys: &[(usize, usize)]) {
+    pub fn prefetch(&self, keys: &[Key]) {
         for &(b, s) in keys {
             if !self.has_layer(b) {
                 continue;
             }
+            let eidx = self.expert_index(b, s);
             let resident = {
                 let mut st = self.lock_state();
-                st.clock += 1;
-                let resident = st.entries.contains_key(&(b, s))
-                    || self
-                        .expert_index(b, s)
-                        .is_some_and(|eidx| st.shards.contains_key(&(b, eidx)));
+                let (bs, metrics) = st.parts(b);
+                bs.clock += 1;
+                let resident = bs.entries.contains_key(&s)
+                    || eidx.is_some_and(|eidx| bs.shards.contains_key(&eidx));
                 if resident {
-                    st.metrics.prefetch_hits += 1;
-                    self.touch_key_locked(&mut st, b, s);
+                    metrics.prefetch_hits += 1;
+                    bs.touch_key(s, eidx);
                 } else {
-                    st.metrics.prefetch_misses += 1;
+                    metrics.prefetch_misses += 1;
                 }
                 resident
             };
@@ -1077,7 +1284,7 @@ impl ExpertCache {
                 continue;
             }
             if self.store.is_some() {
-                let Some(eidx) = self.expert_index(b, s) else { continue };
+                let Some(eidx) = eidx else { continue };
                 if self.shard_expert(b, eidx, true).is_err() {
                     self.note_prefetch_dropped();
                 }
@@ -1101,7 +1308,7 @@ impl ExpertCache {
     /// and hands results back through [`ExpertCache::insert_prefetched`].
     pub fn plan_prefetch(
         &self,
-        keys: &[(usize, usize)],
+        keys: &[Key],
         in_flight: &std::collections::HashSet<(usize, usize)>,
     ) -> Vec<(usize, usize)> {
         let mut st = self.lock_state();
@@ -1111,21 +1318,23 @@ impl ExpertCache {
                 continue;
             }
             let Some(eidx) = self.expert_index(b, s) else { continue };
-            if st.entries.contains_key(&(b, s))
-                || st.shards.contains_key(&(b, eidx))
+            let shard_in_flight = st.flights.contains_key(&FlightKey::Shard(b, eidx));
+            let (bs, metrics) = st.parts(b);
+            if bs.entries.contains_key(&s)
+                || bs.shards.contains_key(&eidx)
                 || in_flight.contains(&(b, eidx))
-                || st.flights.contains_key(&FlightKey::Shard(b, eidx))
+                || shard_in_flight
                 || out.contains(&(b, eidx))
             {
-                st.metrics.prefetch_hits += 1;
+                metrics.prefetch_hits += 1;
                 // Refresh the resident entry's LRU stamp (as sync prefetch
                 // does): the prediction says this key is imminently needed,
                 // so it must not be the eviction victim of the very fetches
                 // this plan schedules.
-                st.clock += 1;
-                self.touch_key_locked(&mut st, b, s);
+                bs.clock += 1;
+                bs.touch_key(s, Some(eidx));
             } else {
-                st.metrics.prefetch_misses += 1;
+                metrics.prefetch_misses += 1;
                 out.push((b, eidx));
             }
         }
@@ -1140,8 +1349,13 @@ impl ExpertCache {
     /// and serves the copy installed here (decodes are bit-identical).
     pub fn insert_prefetched(&self, block: usize, eidx: usize, expert: CompressedExpert) {
         let mut st = self.lock_state();
-        if self.store.is_none() || st.shards.contains_key(&(block, eidx)) {
+        if self.store.is_none() || !st.blocks.contains_key(&block) {
             st.metrics.prefetch_dropped += 1;
+            return;
+        }
+        let (bs, metrics) = st.parts(block);
+        if bs.shards.contains_key(&eidx) {
+            metrics.prefetch_dropped += 1;
             return;
         }
         let bytes = expert.memory_bytes();
@@ -1149,18 +1363,18 @@ impl ExpertCache {
         // prediction BEFORE touching the shard pool — evicting every
         // demand-proven shard only to discard the result anyway would be
         // pure churn.
-        if st.used_bytes + bytes > st.budget_bytes {
-            st.metrics.prefetch_dropped += 1;
+        if bs.used_bytes + bytes > bs.budget_bytes {
+            metrics.prefetch_dropped += 1;
             return;
         }
-        st.make_room_for_shard(bytes);
-        st.clock += 1;
-        st.metrics.shard_fetches += 1;
-        st.metrics.shard_bytes += bytes as u64;
-        st.shard_used_bytes += bytes;
-        let clock = st.clock;
-        st.shards.insert(
-            (block, eidx),
+        bs.make_room_for_shard(bytes, metrics);
+        bs.clock += 1;
+        metrics.shard_fetches += 1;
+        metrics.shard_bytes += bytes as u64;
+        bs.shard_used_bytes += bytes;
+        let clock = bs.clock;
+        bs.shards.insert(
+            eidx,
             ShardEntry {
                 expert: Arc::new(expert),
                 fused: None,
@@ -1367,6 +1581,91 @@ mod tests {
     }
 
     #[test]
+    fn per_block_budget_partitions_are_independent() {
+        // Two compressed blocks share a 2-expert budget → one-expert share
+        // each. Filling block 0's share must not stop block 1 from
+        // restoring into ITS share (a global pool would have let block 0
+        // consume both slots), and block 0's second expert must fall back
+        // to the fused path (its own share is full) even though a global
+        // pool would still have had room.
+        let (_, cl0) = compressed(13);
+        let (_, cl1) = compressed(14);
+        let cache = ExpertCache::new(vec![(0, cl0), (1, cl1)], 2 * one_expert_bytes());
+        assert!(matches!(cache.serve(0, 0, 1), Serve::Dense(_)));
+        assert!(matches!(cache.serve(1, 0, 1), Serve::Dense(_)), "block 1 has its own share");
+        assert_eq!(cache.resident_experts(), 2);
+        // Block 0's share is now full and slot 1 is cold → fused, no
+        // eviction (under a global 2-expert pool this would have restored).
+        assert!(matches!(cache.serve(0, 1, 1), Serve::Fused(_)));
+        let m = cache.metrics();
+        assert_eq!(m.evictions, 0);
+        assert_eq!(m.fused_serves, 1);
+        assert_eq!(m.restore_serves, 2);
+    }
+
+    #[test]
+    fn serve_batch_warm_window_matches_serial_loop_in_one_lock() {
+        // A warm window (every want dense-resident) must be answered in one
+        // critical section with metrics bit-identical to the serve loop.
+        let (_, cl) = compressed(15);
+        let wants: Vec<(usize, usize)> = vec![(1, 3), (2, 2), (1, 4), (2, 1)];
+        // Reference: plain serial loop on an identically warmed cache.
+        let reference = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        reference.serve(0, 1, 1);
+        reference.serve(0, 2, 1);
+        for &(slot, t) in &wants {
+            assert!(matches!(reference.serve(0, slot, t), Serve::Dense(_)));
+        }
+        let batched = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        batched.serve(0, 1, 1);
+        batched.serve(0, 2, 1);
+        let serves = batched.try_serve_batch(0, &wants).unwrap();
+        assert_eq!(serves.len(), wants.len());
+        for (s, &(slot, _)) in serves.iter().zip(&wants) {
+            match s {
+                Serve::Dense(e) => assert_eq!(**e, cl.restore_expert(slot)),
+                _ => panic!("warm window serves dense"),
+            }
+        }
+        let (mr, mb) = (reference.metrics(), batched.metrics());
+        assert_eq!(mr.hits, mb.hits);
+        assert_eq!(mr.misses, mb.misses);
+        assert_eq!(mr.restore_serves, mb.restore_serves);
+        assert_eq!(mr.fused_serves, mb.fused_serves);
+        assert_eq!(mb.batch_windows, 1);
+        assert_eq!(mb.batch_warm_windows, 1, "resident window takes the one-lock path");
+    }
+
+    #[test]
+    fn serve_batch_cold_window_replays_serial_and_materializes_once() {
+        // Cold window over two slots with several requests each: decisions
+        // and metrics equal the serial loop, and each expert restores once.
+        let (_, cl) = compressed(16);
+        let wants: Vec<(usize, usize)> = vec![(0, 2), (3, 1), (0, 5), (3, 2), (0, 1)];
+        let reference = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
+        let want_serves: Vec<Serve> =
+            wants.iter().map(|&(s, t)| reference.serve(0, s, t)).collect();
+        let batched = ExpertCache::new(vec![(0, cl)], usize::MAX);
+        let got_serves = batched.try_serve_batch(0, &wants).unwrap();
+        for (got, want) in got_serves.iter().zip(&want_serves) {
+            match (got, want) {
+                (Serve::Dense(a), Serve::Dense(b)) => assert_eq!(**a, **b),
+                _ => panic!("roomy cold window restores"),
+            }
+        }
+        let (mr, mb) = (reference.metrics(), batched.metrics());
+        assert_eq!(mr.hits, mb.hits);
+        assert_eq!(mr.misses, mb.misses);
+        assert_eq!(mr.restore_serves, mb.restore_serves);
+        assert_eq!(mr.restores_executed, mb.restores_executed);
+        // The window guarantee: two distinct experts → two restores, not
+        // one per want.
+        assert_eq!(mb.restores_executed, 2);
+        assert_eq!(mb.batch_windows, 1);
+        assert_eq!(mb.batch_warm_windows, 0);
+    }
+
+    #[test]
     fn concurrent_monolithic_misses_share_one_restore() {
         // N threads cold-missing the same key: one leads the restore, the
         // rest wait on the flight or hit the just-published entry — and
@@ -1401,6 +1700,7 @@ mod tests {
         // Exactly one restore ran; every other miss was deduplicated.
         assert_eq!(m.dedup_fetches, m.misses - 1, "{m:?}");
         assert_eq!(m.restore_serves, m.misses, "each miss records its decision");
+        assert_eq!(m.restores_executed, 1, "one restore matmul executed: {m:?}");
     }
 
     // ------------------------------------------------ backing-store mode
@@ -1663,5 +1963,37 @@ mod tests {
         let m = cache.metrics();
         assert_eq!(m.shard_fetches, 1, "singleflight: one store fetch, {m:?}");
         assert_eq!(m.fused_serves, n as u64);
+    }
+
+    #[test]
+    fn store_mode_serve_batch_replays_serial_decisions() {
+        // Store mode, tight budget, a window mixing hot and cold slots:
+        // try_serve_batch must reproduce the serial loop's decisions,
+        // metrics, and paged residency exactly.
+        let wants: Vec<(usize, usize)> = vec![(0, 1), (2, 1), (0, 1), (2, 1), (0, 1), (2, 1)];
+        let (_, reference) = store_cache(38, one_expert_bytes());
+        let want_serves: Vec<Serve> =
+            wants.iter().map(|&(s, t)| reference.serve(1, s, t)).collect();
+        let (_, batched) = store_cache(38, one_expert_bytes());
+        let got_serves = batched.try_serve_batch(1, &wants).unwrap();
+        for (i, (got, want)) in got_serves.iter().zip(&want_serves).enumerate() {
+            let same_kind = matches!(
+                (got, want),
+                (Serve::Dense(_), Serve::Dense(_))
+                    | (Serve::Fused(_), Serve::Fused(_))
+                    | (Serve::Paged { .. }, Serve::Paged { .. })
+            );
+            assert!(same_kind, "want {i}: decision kind must match serial");
+        }
+        let (mr, mb) = (reference.metrics(), batched.metrics());
+        assert_eq!(mr.hits, mb.hits);
+        assert_eq!(mr.misses, mb.misses);
+        assert_eq!(mr.restore_serves, mb.restore_serves);
+        assert_eq!(mr.fused_serves, mb.fused_serves);
+        assert_eq!(mr.evictions, mb.evictions);
+        assert_eq!(mr.shard_fetches, mb.shard_fetches);
+        assert_eq!(mr.shard_evictions, mb.shard_evictions);
+        assert_eq!(reference.resident_shards(), batched.resident_shards());
+        assert_eq!(reference.used_bytes(), batched.used_bytes());
     }
 }

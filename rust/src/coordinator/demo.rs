@@ -3,7 +3,7 @@
 //! a bounded restore cache, fire a mixed workload from client threads, and
 //! report throughput/latency plus the memory story.
 
-use super::metrics::cache_summary;
+use super::metrics::{batch_summary, cache_summary};
 use super::server::{Engine, Request, Response, Server, ServerConfig};
 use crate::compress::{compress_model, ResMoE};
 use crate::eval::Assets;
@@ -70,6 +70,7 @@ pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result
     });
     let metrics = server.shutdown();
     println!("  {}", metrics.summary());
+    println!("  {}", batch_summary(&engine.batch_metrics()));
     if let Some(cm) = engine.cache_metrics() {
         println!(
             "  restore cache: {:.1} % hit rate, {} restores ({:.2} ms total restore time), {} evictions",
@@ -128,6 +129,7 @@ pub fn run_packed_demo(artifact: &Path, cfg: ServerConfig, n_requests: usize) ->
     let metrics = server.shutdown();
     engine.quiesce_prefetch();
     println!("  {}", metrics.summary());
+    println!("  {}", batch_summary(&engine.batch_metrics()));
     if let Some(cm) = engine.cache_metrics() {
         println!("  {}", cache_summary(&cm));
     }

@@ -1,6 +1,8 @@
 //! Serving metrics: latency percentiles, throughput, batch-size histogram,
-//! and the cache/paging summary line.
+//! the continuous-batching window/occupancy story, and the cache/paging
+//! summary line.
 
+use super::batcher::FlushReason;
 use super::cache::CacheMetrics;
 use crate::util::stats::percentile;
 use std::time::Duration;
@@ -68,6 +70,142 @@ impl ServerMetrics {
     }
 }
 
+/// Histogram buckets shared by the occupancy and rows-per-expert
+/// histograms: 1, 2, 3–4, 5–8, >8.
+pub const BATCH_BUCKETS: [&str; 5] = ["1", "2", "3-4", "5-8", ">8"];
+
+fn bucket_of(n: usize) -> usize {
+    match n {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        _ => 4,
+    }
+}
+
+/// Continuous-batching counters: how windows form (occupancy, flush
+/// reasons, linger) and how much cross-request row sharing each expert
+/// dispatch actually sees. Recorded by `Engine::handle_batch` and the
+/// batched FFN hook; surfaced through [`batch_summary`] so the counters
+/// can't silently rot (a unit test pins the line's contents).
+#[derive(Debug, Default, Clone)]
+pub struct BatchMetrics {
+    /// Batch windows executed end-to-end (one `Engine::handle_batch` call).
+    pub windows: u64,
+    /// Requests that shared a multi-request batched prefill run.
+    pub batched_requests: u64,
+    /// Requests served alone: windows of one, sequential (generate)
+    /// requests, and invalid requests answered without a forward.
+    pub solo_requests: u64,
+    /// Window flush reasons (from the admission queue; direct
+    /// `handle_batch` calls don't record one).
+    pub full_flushes: u64,
+    pub linger_flushes: u64,
+    pub closed_flushes: u64,
+    /// Total µs flushed windows' oldest requests lingered. Mean = divided
+    /// by the flush count (full + linger + closed), NOT by `windows` —
+    /// direct `handle_batch` calls record a window but no flush.
+    pub linger_us: u64,
+    /// Window occupancy histogram over [`BATCH_BUCKETS`].
+    pub occupancy: [u64; 5],
+    /// Rows-per-expert-dispatch histogram over [`BATCH_BUCKETS`] — the
+    /// direct measure of how much work concatenation fuses per expert.
+    pub rows_per_expert: [u64; 5],
+    /// Expert dispatch calls and their total rows (mean rows/dispatch).
+    pub expert_dispatches: u64,
+    pub expert_rows: u64,
+}
+
+impl BatchMetrics {
+    /// Record one executed window of `size` requests.
+    pub fn record_window(&mut self, size: usize) {
+        self.windows += 1;
+        self.occupancy[bucket_of(size)] += 1;
+    }
+
+    /// Record the admission-queue flush that produced a window.
+    pub fn record_flush(&mut self, reason: FlushReason, waited_us: u64) {
+        match reason {
+            FlushReason::Full => self.full_flushes += 1,
+            FlushReason::Linger => self.linger_flushes += 1,
+            FlushReason::Closed => self.closed_flushes += 1,
+        }
+        self.linger_us += waited_us;
+    }
+
+    /// Record one expert dispatch over `rows` concatenated rows.
+    pub fn record_dispatch(&mut self, rows: usize) {
+        self.expert_dispatches += 1;
+        self.expert_rows += rows as u64;
+        self.rows_per_expert[bucket_of(rows)] += 1;
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            (self.batched_requests + self.solo_requests) as f64 / self.windows as f64
+        }
+    }
+
+    pub fn mean_rows_per_dispatch(&self) -> f64 {
+        if self.expert_dispatches == 0 {
+            0.0
+        } else {
+            self.expert_rows as f64 / self.expert_dispatches as f64
+        }
+    }
+
+    pub fn mean_linger_us(&self) -> f64 {
+        let flushes = self.full_flushes + self.linger_flushes + self.closed_flushes;
+        if flushes == 0 {
+            0.0
+        } else {
+            self.linger_us as f64 / flushes as f64
+        }
+    }
+}
+
+/// One-line continuous-batching story — the `cache_summary` analog for the
+/// window scheduler: occupancy, flush split, linger, and per-expert row
+/// fusion.
+pub fn batch_summary(bm: &BatchMetrics) -> String {
+    let hist = |h: &[u64; 5]| -> String {
+        BATCH_BUCKETS
+            .iter()
+            .zip(h)
+            .map(|(b, c)| format!("{b}:{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    let mut line = format!(
+        "batch: {} windows | {:.2} mean occupancy [{}] | {} batched / {} solo requests",
+        bm.windows,
+        bm.mean_occupancy(),
+        hist(&bm.occupancy),
+        bm.batched_requests,
+        bm.solo_requests,
+    );
+    if bm.full_flushes + bm.linger_flushes + bm.closed_flushes > 0 {
+        line.push_str(&format!(
+            " | flushes {} full / {} linger / {} closed, {:.0} us mean linger",
+            bm.full_flushes,
+            bm.linger_flushes,
+            bm.closed_flushes,
+            bm.mean_linger_us(),
+        ));
+    }
+    if bm.expert_dispatches > 0 {
+        line.push_str(&format!(
+            " | {:.2} rows/expert dispatch [{}]",
+            bm.mean_rows_per_dispatch(),
+            hist(&bm.rows_per_expert),
+        ));
+    }
+    line
+}
+
 /// One-line cache/paging story for demo + CLI output: hit rate, the
 /// fused-vs-restore decision split, shard paging traffic, and prefetch
 /// effectiveness.
@@ -133,6 +271,38 @@ mod tests {
         assert_eq!(m.p50_ms(), 0.0);
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.requests_per_s(), 0.0);
+    }
+
+    #[test]
+    fn batch_summary_surfaces_every_counter_family() {
+        let mut bm = BatchMetrics::default();
+        // Quiet engine: windows only.
+        bm.record_window(1);
+        bm.solo_requests += 1;
+        let quiet = batch_summary(&bm);
+        assert!(quiet.contains("1 windows"));
+        assert!(quiet.contains("[1:1 2:0 3-4:0 5-8:0 >8:0]"));
+        assert!(!quiet.contains("flushes"), "no queue flushes recorded yet");
+        assert!(!quiet.contains("dispatch"), "no expert dispatches recorded yet");
+        // A busy window: occupancy 4, full flush after 120 us, two expert
+        // dispatches fusing 4 + 9 rows.
+        bm.record_window(4);
+        bm.batched_requests += 4;
+        bm.record_flush(FlushReason::Full, 120);
+        bm.record_flush(FlushReason::Linger, 480);
+        bm.record_dispatch(4);
+        bm.record_dispatch(9);
+        assert_eq!(bm.occupancy, [1, 0, 1, 0, 0]);
+        assert_eq!(bm.rows_per_expert, [0, 0, 1, 0, 1]);
+        assert!((bm.mean_occupancy() - 2.5).abs() < 1e-9);
+        assert!((bm.mean_rows_per_dispatch() - 6.5).abs() < 1e-9);
+        assert!((bm.mean_linger_us() - 300.0).abs() < 1e-9);
+        let busy = batch_summary(&bm);
+        assert!(busy.contains("2 windows"));
+        assert!(busy.contains("flushes 1 full / 1 linger / 0 closed"));
+        assert!(busy.contains("300 us mean linger"));
+        assert!(busy.contains("6.50 rows/expert dispatch"));
+        assert!(busy.contains("3-4:1 5-8:0 >8:1"), "{busy}");
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! L3 serving coordinator: dynamic batching, a thread-pool server, and the
-//! restored-expert LRU cache that turns the paper's Algorithm 2 into a
-//! first-class runtime feature ("barycenter resident, residuals restored on
-//! router demand under a byte budget").
+//! L3 serving coordinator: cross-request continuous batching (admission
+//! windows, one fused forward per window, bit-identical to serial), a
+//! thread-pool server, and the restored-expert LRU cache that turns the
+//! paper's Algorithm 2 into a first-class runtime feature ("barycenter
+//! resident, residuals restored on router demand under a byte budget").
 
 pub mod batcher;
 pub mod cache;
@@ -9,6 +10,7 @@ pub mod demo;
 pub mod metrics;
 pub mod server;
 
+pub use batcher::{next_window, BatchPolicy, Batcher, FlushReason, Window};
 pub use cache::{CacheMetrics, ExpertCache, Serve};
-pub use metrics::{cache_summary, ServerMetrics};
+pub use metrics::{batch_summary, cache_summary, BatchMetrics, ServerMetrics};
 pub use server::{Engine, Request, Response, Server, ServerConfig};

@@ -1,14 +1,51 @@
 //! The serving coordinator: request types, the cache-backed inference
-//! engine (paper Alg. 2 on the hot path), a dynamic batcher, and a
-//! thread-pool server. Pure std — no async runtime exists in the offline
-//! vendor set, and a thread-per-worker loop over an mpsc queue is exactly
-//! the right shape at this scale.
+//! engine (paper Alg. 2 on the hot path), cross-request continuous
+//! batching, and a thread-pool server. Pure std — no async runtime exists
+//! in the offline vendor set, and a thread-per-worker loop over an mpsc
+//! queue is exactly the right shape at this scale.
+//!
+//! # Continuous batching
+//!
+//! Workers no longer pull one request and run it end-to-end: the admission
+//! queue ([`super::batcher::Batcher`]) groups in-flight requests into batch
+//! windows (knobs: `RESMOE_BATCH` / `RESMOE_LINGER_US`), and
+//! [`Engine::handle_batch`] executes a whole window through ONE transformer
+//! forward — token rows of all prefill-shaped requests (Score/Classify)
+//! concatenated, routing run once per layer, and each expert's combined
+//! rows dispatched through a single fused forward before outputs scatter
+//! back per request. The per-layer center term (`SharedAct`) is computed
+//! once for every concurrent client, and each expert materializes at most
+//! once per window.
+//!
+//! **Bit-for-bit parity**: a batched window produces responses byte-
+//! identical to serving the same requests one-at-a-time, under every cache
+//! budget. Two ingredients: every per-row kernel (norms, routing, expert
+//! matmuls, combine, lm_head) is row-independent, and the cache replays
+//! per-request serve decisions in serial (request-major) order against
+//! per-block-partitioned state (see `cache.rs`), so the decision sequence
+//! each block sees is literally the serial one.
+//! `tests/prop_batching.rs` pins the property across request mixes,
+//! methods, rates, budgets, and both engine modes. One caveat: the
+//! guarantee is about the *request-driven* serve sequence, so it requires
+//! async prefetch disabled (or quiesced) — prefetch mutates LRU stamps
+//! and shard residency on background-timing grounds that no serial
+//! reference can reproduce, batched or not ([`Engine::disable_prefetch`]
+//! is the determinism knob; the parity tests use it on both sides).
+//!
+//! Sequential requests (Generate) run one-at-a-time at their admission
+//! position — decode steps share the warm cache but not a forward. Error
+//! semantics under batching: a store/integrity failure mid-window fails
+//! the whole window (every request in it answers `Response::Error`),
+//! whereas serial serving pins the error on the single requesting client.
 
-use super::batcher::next_batch;
+use super::batcher::{next_window, BatchPolicy, Batcher, FlushReason};
 use super::cache::{CacheMetrics, ExpertCache, Serve};
-use super::metrics::ServerMetrics;
+use super::metrics::{BatchMetrics, ServerMetrics};
 use crate::compress::{center_shared_act, fused_forward_expert, CompressedLayer, SharedAct};
-use crate::moe::{route_dispatch_combine, Ffn, FfnHook, Model};
+use crate::moe::{
+    combine_slot_output, gather_rows, group_parts, route_dispatch_combine, route_groups, Ffn,
+    FfnHook, Model,
+};
 use crate::store::{ExpertStore, Prefetcher};
 use crate::tensor::Matrix;
 use crate::util::stats::logsumexp;
@@ -27,7 +64,9 @@ use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Max requests per batch window.
     pub batch_max: usize,
+    /// Max linger (µs) before a partial window flushes.
     pub batch_wait_us: u64,
     /// Byte budget for the restored-expert cache.
     pub cache_budget_bytes: usize,
@@ -42,6 +81,15 @@ impl Default for ServerConfig {
             cache_budget_bytes: 64 * 1024 * 1024,
             workers: 2,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Defaults with the `RESMOE_BATCH` / `RESMOE_LINGER_US` environment
+    /// knobs applied to the window policy.
+    pub fn from_env() -> ServerConfig {
+        let p = BatchPolicy::from_env();
+        ServerConfig { batch_max: p.max_batch, batch_wait_us: p.linger_us, ..Default::default() }
     }
 }
 
@@ -74,6 +122,18 @@ pub enum Response {
     Error(String),
 }
 
+/// How a request executes inside a batch window.
+enum Shape {
+    /// One transformer forward over the token rows — batchable across
+    /// requests (Score/Classify).
+    Prefill,
+    /// Token-by-token decode (Generate) — runs alone at its admission
+    /// position.
+    Sequential,
+    /// Fails validation; answered without touching the engine.
+    Invalid(String),
+}
+
 /// The cache-backed engine: holds the backbone with compressed MoE blocks
 /// *stripped of their dense experts* (only routers + shared experts stay
 /// resident) plus the compressed representations and the restore cache.
@@ -87,6 +147,8 @@ pub struct Engine {
     prefetcher: Option<Arc<Prefetcher>>,
     /// block → next compressed block (the prefetch prediction target).
     next_block: Arc<HashMap<usize, usize>>,
+    /// Continuous-batching counters (shared across engine clones).
+    batch: Arc<Mutex<BatchMetrics>>,
 }
 
 impl Engine {
@@ -97,6 +159,7 @@ impl Engine {
             cache: None,
             prefetcher: None,
             next_block: Arc::new(HashMap::new()),
+            batch: Arc::new(Mutex::new(BatchMetrics::default())),
         }
     }
 
@@ -114,6 +177,7 @@ impl Engine {
             cache: Some(Arc::new(ExpertCache::new(layers, cache_budget_bytes))),
             prefetcher: None,
             next_block: Arc::new(HashMap::new()),
+            batch: Arc::new(Mutex::new(BatchMetrics::default())),
         }
     }
 
@@ -136,6 +200,7 @@ impl Engine {
             cache: Some(cache),
             prefetcher: Some(prefetcher),
             next_block: Arc::new(next_block),
+            batch: Arc::new(Mutex::new(BatchMetrics::default())),
         })
     }
 
@@ -166,6 +231,16 @@ impl Engine {
         self.cache.as_ref().map(|c| c.metrics())
     }
 
+    /// Snapshot of the continuous-batching counters (see
+    /// [`super::metrics::batch_summary`]).
+    pub fn batch_metrics(&self) -> BatchMetrics {
+        self.batch.lock().unwrap().clone()
+    }
+
+    fn note_flush(&self, reason: FlushReason, waited_us: u64) {
+        self.batch.lock().unwrap().record_flush(reason, waited_us);
+    }
+
     /// Toggle the restore-free fused serve path (on by default; benches
     /// compare against the restore-only policy by switching it off).
     pub fn set_fused(&self, enabled: bool) {
@@ -192,14 +267,43 @@ impl Engine {
             cache: self.cache.as_deref(),
             prefetcher: self.prefetcher.as_deref(),
             next_block: &self.next_block,
+            batch: &self.batch,
+        }
+    }
+
+    fn shape(&self, req: &Request) -> Shape {
+        match req {
+            Request::Score { tokens } => {
+                if tokens.len() < 2 || tokens.len() > self.model.cfg.max_seq {
+                    Shape::Invalid("score: need 2..=max_seq tokens".into())
+                } else {
+                    Shape::Prefill
+                }
+            }
+            Request::Generate { prompt, .. } => {
+                if prompt.is_empty() || prompt.len() >= self.model.cfg.max_seq {
+                    Shape::Invalid("generate: bad prompt length".into())
+                } else {
+                    Shape::Sequential
+                }
+            }
+            Request::Classify { task, tokens } => {
+                if self.model.head(task).is_none() {
+                    Shape::Invalid(format!("no head for task '{task}'"))
+                } else if tokens.is_empty() || tokens.len() > self.model.cfg.max_seq {
+                    Shape::Invalid("classify: need 1..=max_seq tokens".into())
+                } else {
+                    Shape::Prefill
+                }
+            }
         }
     }
 
     pub fn handle(&self, req: &Request) -> Response {
         match req {
             Request::Score { tokens } => {
-                if tokens.len() < 2 || tokens.len() > self.model.cfg.max_seq {
-                    return Response::Error("score: need 2..=max_seq tokens".into());
+                if let Shape::Invalid(msg) = self.shape(req) {
+                    return Response::Error(msg);
                 }
                 let hook = self.hook();
                 let h = self.model.hidden_states_hooked(tokens, None, &hook);
@@ -212,8 +316,8 @@ impl Engine {
                 Response::Score(total / (tokens.len() - 1) as f64)
             }
             Request::Generate { prompt, max_new } => {
-                if prompt.is_empty() || prompt.len() >= self.model.cfg.max_seq {
-                    return Response::Error("generate: bad prompt length".into());
+                if let Shape::Invalid(msg) = self.shape(req) {
+                    return Response::Error(msg);
                 }
                 let hook = self.hook();
                 let mut caches = self.model.fresh_caches();
@@ -238,10 +342,10 @@ impl Engine {
                 Response::Generate(out)
             }
             Request::Classify { task, tokens } => {
-                let Some(head) = self.model.head(task) else {
-                    return Response::Error(format!("no head for task '{task}'"));
-                };
-                let head = head.clone();
+                if let Shape::Invalid(msg) = self.shape(req) {
+                    return Response::Error(msg);
+                }
+                let head = self.model.head(task).expect("validated").clone();
                 let hook = self.hook();
                 let h = self.model.hidden_states_hooked(tokens, None, &hook);
                 let logits = head.matvec(h.row(h.rows - 1));
@@ -255,19 +359,126 @@ impl Engine {
             }
         }
     }
+
+    /// Execute one batch window: responses are **byte-identical** to
+    /// calling [`Engine::handle`] on each request in order (see the module
+    /// docs for why). Consecutive prefill-shaped requests (Score/Classify)
+    /// share one concatenated transformer forward; sequential requests
+    /// (Generate) run alone at their admission position; invalid requests
+    /// answer immediately and — since they never touch the cache — do not
+    /// split a prefill run.
+    pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Response> {
+        if !reqs.is_empty() {
+            self.batch.lock().unwrap().record_window(reqs.len());
+        }
+        let mut out: Vec<Option<Response>> = vec![None; reqs.len()];
+        let mut run: Vec<usize> = Vec::new();
+        for i in 0..=reqs.len() {
+            let shape = (i < reqs.len()).then(|| self.shape(&reqs[i]));
+            match shape {
+                Some(Shape::Prefill) => run.push(i),
+                Some(Shape::Invalid(msg)) => {
+                    out[i] = Some(Response::Error(msg));
+                    self.batch.lock().unwrap().solo_requests += 1;
+                }
+                Some(Shape::Sequential) | None => {
+                    if !run.is_empty() {
+                        self.execute_prefill_run(reqs, &run, &mut out);
+                        run.clear();
+                    }
+                    if matches!(shape, Some(Shape::Sequential)) {
+                        out[i] = Some(self.handle(&reqs[i]));
+                        self.batch.lock().unwrap().solo_requests += 1;
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every request answered")).collect()
+    }
+
+    /// One concatenated transformer forward over a run of validated
+    /// prefill requests, then per-request response demux.
+    fn execute_prefill_run(
+        &self,
+        reqs: &[Request],
+        idxs: &[usize],
+        out: &mut [Option<Response>],
+    ) {
+        {
+            let mut bm = self.batch.lock().unwrap();
+            if idxs.len() > 1 {
+                bm.batched_requests += idxs.len() as u64;
+            } else {
+                bm.solo_requests += 1;
+            }
+        }
+        let seqs: Vec<&[u32]> = idxs
+            .iter()
+            .map(|&i| match &reqs[i] {
+                Request::Score { tokens } => tokens.as_slice(),
+                Request::Classify { tokens, .. } => tokens.as_slice(),
+                Request::Generate { .. } => {
+                    unreachable!("sequential requests never join a prefill run")
+                }
+            })
+            .collect();
+        let hook = self.hook();
+        let (h, offsets) = self.model.hidden_states_batch_hooked(&seqs, &hook);
+        // One lm_head projection over every Score request's scored rows at
+        // once (row-independent ⇒ bit-identical to per-request
+        // projections). The final position of each request predicts
+        // nothing, so its row is skipped — the serial path computes it
+        // only as a side effect of the full-matrix matmul.
+        let mut score_rows: Vec<usize> = Vec::new();
+        for (k, &i) in idxs.iter().enumerate() {
+            if matches!(&reqs[i], Request::Score { .. }) {
+                score_rows.extend(offsets[k]..offsets[k + 1] - 1);
+            }
+        }
+        let score_logits = (!score_rows.is_empty())
+            .then(|| gather_rows(&h, &score_rows).matmul_nt(&self.model.lm_head));
+        let mut cursor = 0usize;
+        for (k, &i) in idxs.iter().enumerate() {
+            match &reqs[i] {
+                Request::Score { tokens } => {
+                    let logits = score_logits.as_ref().expect("gathered above");
+                    let mut total = 0.0f64;
+                    for t in 0..tokens.len() - 1 {
+                        let row = logits.row(cursor + t);
+                        total += (row[tokens[t + 1] as usize] - logsumexp(row)) as f64;
+                    }
+                    cursor += tokens.len() - 1;
+                    out[i] = Some(Response::Score(total / (tokens.len() - 1) as f64));
+                }
+                Request::Classify { task, .. } => {
+                    let head = self.model.head(task).expect("validated");
+                    let logits = head.matvec(h.row(offsets[k + 1] - 1));
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    out[i] = Some(Response::Classify(pred));
+                }
+                Request::Generate { .. } => unreachable!(),
+            }
+        }
+    }
 }
 
 /// The FFN hook routing compressed blocks through the restore cache's
 /// cost-model serve path: hot experts run dense from the cache, cold ones
 /// run restore-free through the fused layer (monolithic mode) or the paged
 /// center + single-expert pieces (store mode), with the center term
-/// computed at most once per batch. In store mode the slots a block routed
-/// to become the prefetch prediction for the next compressed block.
+/// computed at most once per batch window. In store mode the slots a block
+/// routed to become the prefetch prediction for the next compressed block.
 struct EngineHook<'a> {
     model: &'a Model,
     cache: Option<&'a ExpertCache>,
     prefetcher: Option<&'a Prefetcher>,
     next_block: &'a HashMap<usize, usize>,
+    batch: &'a Mutex<BatchMetrics>,
 }
 
 impl FfnHook for EngineHook<'_> {
@@ -337,6 +548,113 @@ impl FfnHook for EngineHook<'_> {
         }
         Some(out)
     }
+
+    /// The continuous-batching layer forward: `x` row-concatenates the
+    /// window's requests (`part_offsets` boundaries). Routing runs once;
+    /// cache decisions replay in serial (request-major) order through
+    /// [`ExpertCache::try_serve_batch`]; then each slot's rows dispatch in
+    /// fused segments — adjacent requests whose serves share the same
+    /// weight objects run through ONE forward, with the center `SharedAct`
+    /// built at most once over the combined rows for the whole window.
+    fn ffn_forward_batch(
+        &self,
+        block: usize,
+        x: &Matrix,
+        part_offsets: &[usize],
+    ) -> Option<Matrix> {
+        let cache = self.cache?;
+        let Ffn::Moe(layer) = &self.model.blocks[block].ffn else {
+            return None;
+        };
+        if !cache.has_layer(block) {
+            return None;
+        }
+        let groups = route_groups(&layer.router, x, None);
+        let slot_parts: Vec<Vec<(usize, usize)>> =
+            groups.iter().map(|g| group_parts(g, part_offsets)).collect();
+        // Serial-order want list: requests in admission order, each
+        // request's activated slots ascending — exactly the serve sequence
+        // the serial engine would issue, so decisions and metrics replay
+        // bit-identically.
+        let n_parts = part_offsets.len() - 1;
+        let mut wants: Vec<(usize, usize)> = Vec::new();
+        let mut want_of: HashMap<(usize, usize), usize> = HashMap::new();
+        for part in 0..n_parts {
+            for (slot, parts) in slot_parts.iter().enumerate() {
+                if let Some(&(_, len)) = parts.iter().find(|&&(p, _)| p == part) {
+                    want_of.insert((slot, part), wants.len());
+                    wants.push((slot, len));
+                }
+            }
+        }
+        let serves = match cache.try_serve_batch(block, &wants) {
+            Ok(s) => s,
+            // Fail the whole window loudly (the worker catches the panic
+            // and answers every request in it with Response::Error): once
+            // rows are fused there is no single requester to pin a store
+            // error on.
+            Err(e) => panic!("expert serve failed for block {block}: {e:#}"),
+        };
+        let mut out = match layer.shared_expert.as_ref() {
+            Some(se) => se.forward(x),
+            None => Matrix::zeros(x.rows, x.cols),
+        };
+        let mut shared: Option<SharedAct> = None;
+        let mut routed: Vec<usize> = Vec::new();
+        let mut dispatch_rows: Vec<usize> = Vec::new();
+        for (slot, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            routed.push(slot);
+            let rows: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
+            // Fuse adjacent per-request segments whose serves share the
+            // same weight objects; each fused segment runs ONE forward
+            // (row-independent kernels ⇒ bit-identical to per-request
+            // calls). Rows are gathered per segment straight from `x` —
+            // one copy into the dispatch layout.
+            let mut segments: Vec<(usize, usize, Serve)> = Vec::new();
+            let mut pos = 0usize;
+            for &(part, len) in &slot_parts[slot] {
+                let serve = serves[want_of[&(slot, part)]].clone();
+                let extend = matches!(segments.last(), Some((_, _, s)) if s.same_source(&serve));
+                if extend {
+                    segments.last_mut().expect("checked nonempty").1 = pos + len;
+                } else {
+                    segments.push((pos, pos + len, serve));
+                }
+                pos += len;
+            }
+            debug_assert_eq!(pos, rows.len());
+            for (lo, hi, serve) in segments {
+                let sub_seg = gather_rows(x, &rows[lo..hi]);
+                let y = match serve {
+                    Serve::Dense(expert) => expert.forward(&sub_seg),
+                    Serve::Fused(fl) => {
+                        let sh = shared.get_or_insert_with(|| fl.shared_act(x));
+                        fl.forward_slot(slot, &sub_seg, &sh.gather(&rows[lo..hi]))
+                    }
+                    Serve::Paged { center, expert } => {
+                        let sh = shared.get_or_insert_with(|| center_shared_act(&center, x));
+                        fused_forward_expert(&center, &expert, &sub_seg, &sh.gather(&rows[lo..hi]))
+                    }
+                };
+                combine_slot_output(&mut out, &group[lo..hi], &y);
+                dispatch_rows.push(hi - lo);
+            }
+        }
+        {
+            let mut bm = self.batch.lock().unwrap();
+            for &r in &dispatch_rows {
+                bm.record_dispatch(r);
+            }
+        }
+        if let (Some(pf), Some(&nb)) = (self.prefetcher, self.next_block.get(&block)) {
+            let keys: Vec<(usize, usize)> = routed.iter().map(|&s| (nb, s)).collect();
+            pf.request(&keys);
+        }
+        Some(out)
+    }
 }
 
 // ------------------------------------------------------------------ server
@@ -347,7 +665,9 @@ struct Job {
     reply: Sender<(Response, Duration)>,
 }
 
-/// Thread-pool server with dynamic batching.
+/// Thread-pool server with cross-request continuous batching: each worker
+/// drains whole admission windows and executes them through
+/// [`Engine::handle_batch`].
 pub struct Server {
     tx: Option<Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -361,43 +681,62 @@ impl Server {
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
         let mut handles = Vec::new();
+        let policy =
+            BatchPolicy { max_batch: cfg.batch_max.max(1), linger_us: cfg.batch_wait_us };
         for _ in 0..cfg.workers.max(1) {
             let rx = rx.clone();
             let engine = engine.clone();
             let metrics = metrics.clone();
-            let wait = Duration::from_micros(cfg.batch_wait_us);
-            let batch_max = cfg.batch_max.max(1);
-            handles.push(std::thread::spawn(move || loop {
-                // Hold the receiver lock only while draining one batch; the
-                // actual compute runs unlocked so workers overlap.
-                let batch = {
-                    let guard = rx.lock().unwrap();
-                    next_batch(&guard, batch_max, wait)
-                };
-                let Some(batch) = batch else { break };
-                let mut tokens = 0u64;
-                let size = batch.len();
-                for job in batch {
-                    tokens += job.req.token_count();
+            handles.push(std::thread::spawn(move || {
+                let mut batcher = Batcher::new(policy);
+                let epoch = Instant::now();
+                loop {
+                    // Hold the receiver lock only while forming one window;
+                    // execution runs unlocked so workers overlap.
+                    let window = {
+                        let guard = rx.lock().unwrap();
+                        next_window(&guard, &mut batcher, epoch)
+                    };
+                    let Some(window) = window else { break };
+                    let size = window.items.len();
+                    engine.note_flush(window.reason, window.waited_us);
+                    // Decompose jobs so handle_batch borrows the owned
+                    // requests — no token-buffer clones on the hot path.
+                    let (reqs, replies): (Vec<Request>, Vec<(Instant, Sender<_>)>) = window
+                        .items
+                        .into_iter()
+                        .map(|j| (j.req, (j.submitted, j.reply)))
+                        .unzip();
+                    let tokens: u64 = reqs.iter().map(|r| r.token_count()).sum();
                     // A panic while serving (e.g. a corrupt artifact shard
-                    // surfacing mid-request) must not take the worker down:
-                    // answer THIS request with an error — carrying the panic
-                    // message, so "checksum mismatch in block 3" reaches the
-                    // client, not just stderr — and keep draining.
-                    let resp = catch_unwind(AssertUnwindSafe(|| engine.handle(&job.req)))
-                        .unwrap_or_else(|payload| {
-                            let msg = payload
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                                .or_else(|| payload.downcast_ref::<String>().cloned())
-                                .unwrap_or_else(|| "unknown panic".into());
-                            Response::Error(format!("engine panicked while serving: {msg}"))
-                        });
-                    let latency = job.submitted.elapsed();
-                    let _ = job.reply.send((resp, latency));
-                    metrics.lock().unwrap().record_request(latency);
+                    // surfacing mid-window) must not take the worker down:
+                    // answer every request of THIS window with an error —
+                    // carrying the panic message, so "checksum mismatch in
+                    // block 3" reaches the clients, not just stderr — and
+                    // keep draining.
+                    let responses =
+                        catch_unwind(AssertUnwindSafe(|| engine.handle_batch(&reqs)))
+                            .unwrap_or_else(|payload| {
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "unknown panic".into());
+                                vec![
+                                    Response::Error(format!(
+                                        "engine panicked while serving: {msg}"
+                                    ));
+                                    size
+                                ]
+                            });
+                    debug_assert_eq!(responses.len(), size);
+                    for ((submitted, reply), resp) in replies.into_iter().zip(responses) {
+                        let latency = submitted.elapsed();
+                        let _ = reply.send((resp, latency));
+                        metrics.lock().unwrap().record_request(latency);
+                    }
+                    metrics.lock().unwrap().record_batch(size, tokens);
                 }
-                metrics.lock().unwrap().record_batch(size, tokens);
             }));
         }
         Server { tx: Some(tx), handles, metrics, started: Instant::now() }
@@ -523,6 +862,13 @@ mod tests {
             engine.handle(&Request::Classify { task: "none".into(), tokens: vec![1, 2] }),
             Response::Error(_)
         ));
+        // Over-long classify inputs now error instead of panicking (the
+        // batched path needs the validation, and serial must agree).
+        let long: Vec<u32> = (0..40).map(|t| t % 32).collect();
+        assert!(matches!(
+            engine.handle(&Request::Classify { task: "none".into(), tokens: long }),
+            Response::Error(_)
+        ));
     }
 
     #[test]
@@ -550,6 +896,104 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.latencies_s.len(), 16);
         assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn handle_batch_is_bit_identical_to_serial_handles() {
+        // The tentpole contract in miniature (the full property test lives
+        // in tests/prop_batching.rs): one window == the same requests
+        // served one-at-a-time, EXACTLY, across roomy/thrash/tight budgets.
+        let m = tiny_model(30);
+        let mut rng = Rng::new(31);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let one_expert = 32 * (2 * 16 + 1) * 4 + 16 * 4;
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request::Score {
+                tokens: (0..4 + i).map(|t| ((t * (i + 2) + 1) % 32) as u32).collect(),
+            })
+            .collect();
+        for budget in [usize::MAX, 0, one_expert, 2 * one_expert] {
+            let serial = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+            let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+            let batched = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+            let got = batched.handle_batch(&reqs);
+            assert_eq!(got, want, "budget {budget}: batched must equal serial bitwise");
+            let (ms, mb) = (
+                serial.cache_metrics().unwrap(),
+                batched.cache_metrics().unwrap(),
+            );
+            assert_eq!(ms.hits, mb.hits, "budget {budget}");
+            assert_eq!(ms.misses, mb.misses, "budget {budget}");
+            assert_eq!(ms.evictions, mb.evictions, "budget {budget}");
+            assert_eq!(ms.restore_serves, mb.restore_serves, "budget {budget}");
+            assert_eq!(ms.fused_serves, mb.fused_serves, "budget {budget}");
+            let bm = batched.batch_metrics();
+            assert_eq!(bm.windows, 1);
+            assert_eq!(bm.batched_requests, 6);
+        }
+    }
+
+    #[test]
+    fn handle_batch_mixed_window_matches_serial_order() {
+        // Score runs split around a Generate (sequential) request; an
+        // invalid request answers inline without splitting the run. The
+        // whole window must equal the serial reference exactly.
+        let mut m = tiny_model(32);
+        let mut rng = Rng::new(33);
+        m.heads.push(("nli".into(), Matrix::randn(3, m.cfg.d_model, 0.2, &mut rng)));
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let reqs = vec![
+            Request::Score { tokens: vec![1, 5, 9, 2] },
+            Request::Score { tokens: vec![3, 3, 7] },
+            Request::Generate { prompt: vec![1, 2, 3], max_new: 4 },
+            Request::Score { tokens: vec![1] }, // invalid: answered inline
+            Request::Classify { task: "nli".into(), tokens: vec![4, 5, 6] },
+            Request::Score { tokens: vec![8, 2, 2, 9, 1] },
+        ];
+        let serial = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+        let batched = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        let got = batched.handle_batch(&reqs);
+        assert_eq!(got, want);
+        assert!(matches!(got[3], Response::Error(_)));
+        let bm = batched.batch_metrics();
+        // Runs: [0, 1] batched; 2 solo (generate); 3 solo (invalid);
+        // [4, 5] batched.
+        assert_eq!(bm.batched_requests, 4);
+        assert_eq!(bm.solo_requests, 2);
+        assert!(bm.expert_dispatches > 0, "batched runs must record dispatches");
+    }
+
+    #[test]
+    fn batched_server_records_window_metrics() {
+        let m = tiny_model(34);
+        let mut rng = Rng::new(35);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m, cm.layers, usize::MAX);
+        let server = Server::start(
+            engine.clone(),
+            ServerConfig { batch_max: 4, batch_wait_us: 3000, workers: 1, ..Default::default() },
+        );
+        let replies: Vec<_> = (0..10)
+            .map(|i| {
+                server.submit(Request::Score {
+                    tokens: (0..6).map(|t| ((t + i) % 32) as u32).collect(),
+                })
+            })
+            .collect();
+        for r in replies {
+            assert!(matches!(r.recv().unwrap().0, Response::Score(_)));
+        }
+        server.shutdown();
+        let bm = engine.batch_metrics();
+        assert!(bm.windows > 0);
+        assert_eq!(bm.batched_requests + bm.solo_requests, 10);
+        assert_eq!(
+            bm.full_flushes + bm.linger_flushes + bm.closed_flushes,
+            bm.windows,
+            "every window came from a recorded flush: {bm:?}"
+        );
+        assert!(bm.occupancy.iter().sum::<u64>() == bm.windows);
     }
 
     #[test]
@@ -583,6 +1027,43 @@ mod tests {
                 let b = packed.handle(req);
                 assert_eq!(a, b, "budget {budget}: packed engine must match exactly");
             }
+        }
+    }
+
+    #[test]
+    fn store_engine_batched_window_matches_serial_bit_for_bit() {
+        // The same parity through the artifact path: one batched window
+        // over a packed engine == serial serving of the same requests.
+        use crate::store::pack_compressed_model;
+        let m = tiny_model(36);
+        let mut rng = Rng::new(37);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let dir = std::env::temp_dir().join("resmoe-server-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("batched.rmes");
+        pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request::Score {
+                tokens: (0..6 + i).map(|t| ((t * (i + 2) + 3) % 32) as u32).collect(),
+            })
+            .collect();
+        let one_expert = 32 * (2 * 16 + 1) * 4 + 16 * 4;
+        for budget in [usize::MAX, 0, one_expert] {
+            let mut serial = Engine::from_store(&artifact, budget).unwrap();
+            serial.disable_prefetch();
+            let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+            let mut batched = Engine::from_store(&artifact, budget).unwrap();
+            batched.disable_prefetch();
+            let got = batched.handle_batch(&reqs);
+            assert_eq!(got, want, "budget {budget}");
+            let (ms, mb) = (
+                serial.cache_metrics().unwrap(),
+                batched.cache_metrics().unwrap(),
+            );
+            assert_eq!(ms.shard_fetches, mb.shard_fetches, "budget {budget}");
+            assert_eq!(ms.shard_evictions, mb.shard_evictions, "budget {budget}");
+            assert_eq!(ms.restore_serves, mb.restore_serves, "budget {budget}");
+            assert_eq!(ms.fused_serves, mb.fused_serves, "budget {budget}");
         }
     }
 

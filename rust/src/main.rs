@@ -243,9 +243,12 @@ fn cmd_serve_packed(args: &Args) -> Result<()> {
         .map(|s| s.to_string())
         .or_else(|| args.positional.first().cloned())
         .ok_or_else(|| anyhow!("serve-packed needs --artifact <path.rmes>"))?;
+    // Window-policy defaults come from RESMOE_BATCH / RESMOE_LINGER_US;
+    // explicit flags win.
+    let env = ServerConfig::from_env();
     let sc = ServerConfig {
-        batch_max: args.get_usize("batch-max", 8),
-        batch_wait_us: args.get_u64("batch-wait-us", 500),
+        batch_max: args.get_usize("batch-max", env.batch_max),
+        batch_wait_us: args.get_u64("batch-wait-us", env.batch_wait_us),
         cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
         workers: args.get_usize("workers", 2),
     };
@@ -256,9 +259,10 @@ fn cmd_serve_packed(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = parse_model(args)?;
     let assets = Assets::load(&cfg);
+    let env = ServerConfig::from_env();
     let sc = ServerConfig {
-        batch_max: args.get_usize("batch-max", 8),
-        batch_wait_us: args.get_u64("batch-wait-us", 500),
+        batch_max: args.get_usize("batch-max", env.batch_max),
+        batch_wait_us: args.get_u64("batch-wait-us", env.batch_wait_us),
         cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
         workers: args.get_usize("workers", 2),
     };

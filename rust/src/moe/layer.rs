@@ -10,20 +10,19 @@ use super::router::{Router, RouterStats};
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
-/// The dispatch/combine plumbing shared by the plain layer forward and the
-/// serving coordinator's cache hook: route every token, group token indices
-/// by activated expert slot, run `forward_slot(slot, sub_batch, token_rows)`
-/// once per non-empty group, and weighted-combine into the output (on top
-/// of the always-on shared expert when present). `token_rows` carries each
-/// sub-batch row's original row index in `x` so callers can gather
-/// batch-level precomputations (the fused path's shared activations).
-pub fn route_dispatch_combine(
+/// Route every row of `x` and group `(row, gate-weight)` pairs by activated
+/// expert slot — the planning half of [`route_dispatch_combine`]. Rows
+/// within each group are ascending (token order), which for a
+/// row-concatenated multi-request batch means grouped by request in
+/// admission order with per-request row order preserved. Exposed so the
+/// serving coordinator's continuous-batching hook can replay per-request
+/// cache decisions in serial (request-major) order BEFORE dispatching each
+/// slot's combined rows once.
+pub fn route_groups(
     router: &Router,
     x: &Matrix,
     mut stats: Option<&mut RouterStats>,
-    shared_expert: Option<&ExpertWeights>,
-    mut forward_slot: impl FnMut(usize, &Matrix, &[usize]) -> Matrix,
-) -> Matrix {
+) -> Vec<Vec<(usize, f32)>> {
     let n = router.n_experts();
     let logits = router.logits(x);
     let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
@@ -36,6 +35,53 @@ pub fn route_dispatch_combine(
             groups[*e].push((t, *w));
         }
     }
+    groups
+}
+
+/// Gather the given rows of `x` into a dense sub-batch (the dispatch
+/// layout handed to an expert forward).
+pub fn gather_rows(x: &Matrix, rows: &[usize]) -> Matrix {
+    let mut sub = Matrix::zeros(rows.len(), x.cols);
+    for (i, &t) in rows.iter().enumerate() {
+        sub.row_mut(i).copy_from_slice(x.row(t));
+    }
+    sub
+}
+
+/// Weighted scatter-accumulate of one slot's expert output back into the
+/// combined output: `out[row] += w * y[i]` for each `(row, w)` of `group`.
+/// Every row belongs to exactly one `(slot, group-position)`, so calling
+/// this per dispatch segment accumulates each row's expert contributions
+/// in ascending-slot order — the same order the serial forward uses.
+pub fn combine_slot_output(out: &mut Matrix, group: &[(usize, f32)], y: &Matrix) {
+    debug_assert_eq!(y.rows, group.len());
+    for (i, &(t, w)) in group.iter().enumerate() {
+        let dst = out.row_mut(t);
+        for (d, &s) in dst.iter_mut().zip(y.row(i)) {
+            *d += w * s;
+        }
+    }
+}
+
+/// The dispatch/combine plumbing shared by the plain layer forward and the
+/// serving coordinator's cache hook: route every token, group token indices
+/// by activated expert slot, run `forward_slot(slot, sub_batch, token_rows)`
+/// once per non-empty group, and weighted-combine into the output (on top
+/// of the always-on shared expert when present). `token_rows` carries each
+/// sub-batch row's original row index in `x` so callers can gather
+/// batch-level precomputations (the fused path's shared activations).
+///
+/// Composed from [`route_groups`] + [`gather_rows`] + [`combine_slot_output`]
+/// — the continuous-batching hook uses those pieces directly so it can
+/// interleave per-request cache decisions between planning and dispatch.
+pub fn route_dispatch_combine(
+    router: &Router,
+    x: &Matrix,
+    stats: Option<&mut RouterStats>,
+    shared_expert: Option<&ExpertWeights>,
+    mut forward_slot: impl FnMut(usize, &Matrix, &[usize]) -> Matrix,
+) -> Matrix {
+    let groups = route_groups(router, x, stats);
     let mut out = match shared_expert {
         Some(se) => se.forward(x),
         None => Matrix::zeros(x.rows, x.cols),
@@ -45,20 +91,35 @@ pub fn route_dispatch_combine(
             continue;
         }
         let rows: Vec<usize> = group.iter().map(|&(t, _)| t).collect();
-        let mut sub = Matrix::zeros(group.len(), x.cols);
-        for (i, &t) in rows.iter().enumerate() {
-            sub.row_mut(i).copy_from_slice(x.row(t));
-        }
+        let sub = gather_rows(x, &rows);
         let y = forward_slot(slot, &sub, &rows);
         debug_assert_eq!(y.shape(), sub.shape());
-        for (i, &(t, w)) in group.iter().enumerate() {
-            let dst = out.row_mut(t);
-            for (d, &s) in dst.iter_mut().zip(y.row(i)) {
-                *d += w * s;
-            }
-        }
+        combine_slot_output(&mut out, group, &y);
     }
     out
+}
+
+/// Split one slot's group (rows ascending over a row-concatenated
+/// multi-request batch) into per-request runs: returns `(part, len)` pairs
+/// in admission order, where `part` indexes the request whose row span in
+/// the concatenated matrix is `offsets[part]..offsets[part + 1]`. The runs
+/// tile the group contiguously, so segment `k` covers group positions
+/// `[sum(len[..k]), sum(len[..k+1]))` — both the cache-decision replay and
+/// the fused dispatch of the batched serving hook walk this tiling.
+pub fn group_parts(group: &[(usize, f32)], offsets: &[usize]) -> Vec<(usize, usize)> {
+    let mut parts: Vec<(usize, usize)> = Vec::new();
+    let mut part = 0usize;
+    for &(row, _) in group {
+        debug_assert!(row < *offsets.last().unwrap());
+        while row >= offsets[part + 1] {
+            part += 1;
+        }
+        match parts.last_mut() {
+            Some((p, len)) if *p == part => *len += 1,
+            _ => parts.push((part, 1)),
+        }
+    }
+    parts
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -199,5 +260,51 @@ mod tests {
     fn expert_params_sum() {
         let (l, _) = layer(6, 1);
         assert_eq!(l.expert_params(), 4 * l.experts[0].n_params());
+    }
+
+    #[test]
+    fn route_groups_rows_are_ascending_and_cover_topk() {
+        let (l, mut rng) = layer(7, 2);
+        let x = Matrix::randn(12, 8, 1.0, &mut rng);
+        let groups = route_groups(&l.router, &x, None);
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 12 * 2, "top-2 routing assigns every token twice");
+        for g in &groups {
+            for w in g.windows(2) {
+                assert!(w[0].0 < w[1].0, "rows ascending within a group");
+            }
+        }
+    }
+
+    #[test]
+    fn group_parts_segments_concatenated_requests_in_admission_order() {
+        // Three requests of 3/2/4 rows concatenated: offsets [0,3,5,9].
+        let offsets = [0usize, 3, 5, 9];
+        let group: Vec<(usize, f32)> =
+            [0usize, 2, 3, 5, 6, 8].iter().map(|&r| (r, 1.0)).collect();
+        let parts = group_parts(&group, &offsets);
+        assert_eq!(parts, vec![(0, 2), (1, 1), (2, 3)]);
+        // A request with no rows in the group is simply absent.
+        let group2: Vec<(usize, f32)> = [(0usize, 1.0), (7usize, 1.0)].to_vec();
+        assert_eq!(group_parts(&group2, &offsets), vec![(0, 1), (2, 1)]);
+        assert_eq!(group_parts(&[], &offsets), vec![]);
+    }
+
+    #[test]
+    fn concatenated_dispatch_is_bit_identical_to_per_request_forwards() {
+        // The row-independence fact continuous batching rests on: a layer
+        // forward over vertically concatenated requests equals each
+        // request's own forward EXACTLY (same bits), because routing,
+        // expert matmuls, and the combine are all per-row.
+        let mut rng = Rng::new(9);
+        let l = MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 2, true, true, &mut rng);
+        let a = Matrix::randn(5, 8, 1.0, &mut rng);
+        let b = Matrix::randn(3, 8, 1.0, &mut rng);
+        let c = Matrix::randn(7, 8, 1.0, &mut rng);
+        let cat = a.vcat(&b).vcat(&c);
+        let y_cat = l.forward(&cat, None);
+        let (ya, yb, yc) = (l.forward(&a, None), l.forward(&b, None), l.forward(&c, None));
+        let want = ya.vcat(&yb).vcat(&yc);
+        assert_eq!(y_cat.data, want.data, "batched rows must match per-request bits");
     }
 }

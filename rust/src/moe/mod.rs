@@ -13,6 +13,9 @@ pub mod transformer;
 
 pub use config::{ExpertArch, ExpertInit, ModelConfig};
 pub use expert::{ExpertForward, ExpertWeights};
-pub use layer::{route_dispatch_combine, MoeLayer};
+pub use layer::{
+    combine_slot_output, gather_rows, group_parts, route_dispatch_combine, route_groups,
+    MoeLayer,
+};
 pub use router::{Route, Router, RouterStats};
 pub use transformer::{Block, Ffn, FfnHook, Model, NoHook};

@@ -41,6 +41,23 @@ fn rmsnorm_mat(x: &Matrix, gain: &[f32]) -> Matrix {
 /// `None` falls through to the block's own weights.
 pub trait FfnHook {
     fn ffn_forward(&self, block: usize, x: &Matrix) -> Option<Matrix>;
+
+    /// Cross-request batched override ([`Model::hidden_states_batch_hooked`]):
+    /// `x` is the row-concatenation of several requests' activations, with
+    /// request `r` owning rows `part_offsets[r]..part_offsets[r + 1]`.
+    /// Return `None` to fall through to the block's own weights over the
+    /// combined rows — bit-identical to per-request forwards, because every
+    /// FFN kernel (dense MLP, routing, expert matmuls, combine) is
+    /// row-independent.
+    fn ffn_forward_batch(
+        &self,
+        block: usize,
+        x: &Matrix,
+        part_offsets: &[usize],
+    ) -> Option<Matrix> {
+        let _ = (block, x, part_offsets);
+        None
+    }
 }
 
 /// No-op hook (the default offline path).
@@ -205,6 +222,68 @@ impl Model {
             h.add_assign(&ffn_out);
         }
         rmsnorm_mat(&h, &self.final_norm)
+    }
+
+    /// Hidden states for several independent sequences at once — the
+    /// continuous-batching prefill path. The returned matrix stacks the
+    /// sequences' token rows in admission order (sequence `r` owns rows
+    /// `offsets[r]..offsets[r + 1]` of the second return value); positions
+    /// restart at 0 per sequence. Causal attention runs per sequence over
+    /// its own row span (sequences never attend to each other) while every
+    /// row-wise stage — embeddings, norms, and the FFN/MoE dispatch via
+    /// [`FfnHook::ffn_forward_batch`] — runs once over the combined
+    /// matrix. Because all those kernels are row-independent, each
+    /// sequence's rows are **bit-identical** to running it alone through
+    /// [`Model::hidden_states_hooked`] (given a hook that preserves the
+    /// same property; the serving coordinator's differential tests pin
+    /// this end to end).
+    pub fn hidden_states_batch_hooked(
+        &self,
+        seqs: &[&[u32]],
+        hook: &dyn FfnHook,
+    ) -> (Matrix, Vec<usize>) {
+        let mut offsets = Vec::with_capacity(seqs.len() + 1);
+        offsets.push(0usize);
+        for s in seqs {
+            assert!(s.len() <= self.cfg.max_seq, "sequence longer than max_seq");
+            offsets.push(offsets.last().unwrap() + s.len());
+        }
+        let total = *offsets.last().unwrap();
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(total, d);
+        for (r, s) in seqs.iter().enumerate() {
+            for (i, &tok) in s.iter().enumerate() {
+                let e = self.embed.row(tok as usize);
+                let p = self.pos.row(i);
+                for (o, (&ev, &pv)) in
+                    h.row_mut(offsets[r] + i).iter_mut().zip(e.iter().zip(p))
+                {
+                    *o = ev + pv;
+                }
+            }
+        }
+        for (bi, block) in self.blocks.iter().enumerate() {
+            let normed = rmsnorm_mat(&h, &block.norm1);
+            for r in 0..seqs.len() {
+                let (lo, hi) = (offsets[r], offsets[r + 1]);
+                if lo == hi {
+                    continue;
+                }
+                let attn_out = block.attn.forward_full(&normed.slice_rows(lo, hi));
+                for (i, row) in (lo..hi).enumerate() {
+                    for (o, &v) in h.row_mut(row).iter_mut().zip(attn_out.row(i)) {
+                        *o += v;
+                    }
+                }
+            }
+            let normed = rmsnorm_mat(&h, &block.norm2);
+            let ffn_out = match hook.ffn_forward_batch(bi, &normed, &offsets) {
+                Some(out) => out,
+                None => block.ffn.forward(&normed, None),
+            };
+            h.add_assign(&ffn_out);
+        }
+        (rmsnorm_mat(&h, &self.final_norm), offsets)
     }
 
     /// Next-token logits for every position (T × vocab).
@@ -443,6 +522,29 @@ mod tests {
         assert_eq!(logits.len(), 3);
         assert!(m.head("nli").is_some());
         assert!(m.head("other").is_none());
+    }
+
+    #[test]
+    fn batch_hidden_states_are_bit_identical_to_per_sequence() {
+        // The continuous-batching substrate: stacking sequences through one
+        // forward must reproduce each sequence's solo hidden states
+        // EXACTLY (same f32 bits) — attention is per-span, everything else
+        // row-independent.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(8);
+        let m = Model::random(&cfg, &mut rng);
+        let s1: Vec<u32> = vec![3, 7, 1, 30];
+        let s2: Vec<u32> = vec![12, 8];
+        let s3: Vec<u32> = (0..10).map(|i| (i * 3) % 32).collect();
+        let seqs: Vec<&[u32]> = vec![s1.as_slice(), s2.as_slice(), s3.as_slice()];
+        let (h, offsets) = m.hidden_states_batch_hooked(&seqs, &NoHook);
+        assert_eq!(offsets, vec![0, 4, 6, 16]);
+        assert_eq!(h.rows, 16);
+        for (r, s) in seqs.iter().enumerate() {
+            let solo = m.hidden_states(s, None);
+            let span = h.slice_rows(offsets[r], offsets[r + 1]);
+            assert_eq!(span.data, solo.data, "sequence {r} must match bitwise");
+        }
     }
 
     #[test]

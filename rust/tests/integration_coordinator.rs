@@ -241,6 +241,80 @@ fn packed_concurrent_cold_start_is_bit_identical_with_roomy_budget() {
 }
 
 #[test]
+fn single_worker_batched_server_is_bit_identical_to_serial() {
+    // With one worker, windows are contiguous admission-order slices of the
+    // submission stream — and handle_batch(window) == serial handles, so
+    // wherever the window boundaries fall the whole stream must equal the
+    // serial reference EXACTLY (not within tolerance).
+    let m = model(50);
+    let mut rng = Rng::new(51);
+    let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    let requests: Vec<Request> = (0..20)
+        .map(|i| Request::Score {
+            tokens: (0..6 + i % 5).map(|t| ((t * (i + 2) + 1) % 32) as u32).collect(),
+        })
+        .collect();
+    let serial = Engine::compressed(m.clone(), cm.layers.clone(), 1 << 20);
+    let want: Vec<Response> = requests.iter().map(|r| serial.handle(r)).collect();
+    let batched = Engine::compressed(m.clone(), cm.layers.clone(), 1 << 20);
+    let server = Server::start(
+        batched.clone(),
+        ServerConfig { batch_max: 8, batch_wait_us: 2000, workers: 1, ..Default::default() },
+    );
+    let replies: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, want) in replies.into_iter().zip(want) {
+        let (got, _) = rx.recv().unwrap();
+        assert_eq!(got, want, "batched serving must be bit-identical to serial");
+    }
+    server.shutdown();
+    let bm = batched.batch_metrics();
+    assert!(bm.windows > 0);
+    assert_eq!(bm.batched_requests + bm.solo_requests, 20);
+}
+
+#[test]
+fn batched_window_materializes_each_expert_at_most_once() {
+    // Acceptance criterion: within one batch window every expert
+    // materializes at most once — restores and store fetches are bounded
+    // by the DISTINCT experts touched, not by window occupancy.
+    use resmoe::store::pack_compressed_model;
+    let m = model(60);
+    let mut rng = Rng::new(61);
+    let cm = resmoe::compress::compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    let dir = std::env::temp_dir().join("resmoe-integration-store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("materialize-once.rmes");
+    pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+    // 8 clients, overlapping token mixes → heavy expert sharing.
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request::Score {
+            tokens: (0..10).map(|t| ((t * (i % 3 + 2) + 1) % 32) as u32).collect(),
+        })
+        .collect();
+    let mut engine = Engine::from_store(&artifact, usize::MAX).unwrap();
+    engine.disable_prefetch();
+    let responses = engine.handle_batch(&reqs);
+    assert!(responses.iter().all(|r| matches!(r, Response::Score(_))), "{responses:?}");
+    let cmx = engine.cache_metrics().unwrap();
+    // 2 compressed blocks × 4 experts: no matter how many of the 8
+    // requests demanded an expert, its shard was fetched and its dense
+    // form restored at most once in the window.
+    assert!(cmx.shard_fetches <= 8, "one fetch per distinct expert: {cmx:?}");
+    assert!(cmx.restores_executed <= 8, "one restore per distinct expert: {cmx:?}");
+    assert!(
+        cmx.misses < cmx.hits + cmx.misses,
+        "shared experts must hit after their first materialization: {cmx:?}"
+    );
+    let bm = engine.batch_metrics();
+    assert_eq!(bm.windows, 1);
+    assert_eq!(bm.batched_requests, 8);
+    assert!(
+        bm.mean_rows_per_dispatch() > 1.0,
+        "cross-request rows must actually fuse: {bm:?}"
+    );
+}
+
+#[test]
 fn batching_amortizes_under_burst() {
     let m = model(10);
     let engine = compressed_engine(&m, usize::MAX, 11);

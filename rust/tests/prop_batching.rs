@@ -1,0 +1,260 @@
+//! Differential property harness for cross-request continuous batching.
+//!
+//! The contract under test: executing a batch window through
+//! `Engine::handle_batch` produces responses **byte-identical** to serving
+//! the same requests one-at-a-time through `Engine::handle`, and the
+//! cache's decision counters evolve identically — under every compression
+//! method (UP/SVD), rate (including the 0 and 1 edges), cache budget
+//! (roomy, tight, thrash), and engine mode (monolithic and packed/RMES).
+//!
+//! Why this can hold bitwise at all: every per-row kernel on the serving
+//! path is row-independent, and the cache partitions its mutable state per
+//! block, so the layer-major serve order of a batched window and the
+//! request-major order of serial serving visit each block with the SAME
+//! serve sequence (see `coordinator/cache.rs` module docs). The companion
+//! seeded Python simulation (`scripts/sim_batching.py`) model-checks the
+//! same commutativity over randomized decision traces, including a
+//! counterexample showing the old globally-pooled budget would break it.
+
+use resmoe::compress::{compress_model, CompressedModel, ResMoE};
+use resmoe::coordinator::{CacheMetrics, Engine, Request, Response};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::store::pack_compressed_model;
+use resmoe::util::prop::{check, PropConfig};
+use resmoe::util::Rng;
+use std::path::PathBuf;
+
+/// 4 layers → MoE blocks 1 and 3: the two-block case is what exercises the
+/// cross-layer serve reordering the per-block partitioning makes benign.
+fn base_model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::switch_mini(4);
+    cfg.d_model = 16;
+    cfg.d_inner = 32;
+    cfg.n_layers = 4;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 32;
+    cfg.max_seq = 32;
+    let mut rng = Rng::new(seed);
+    let mut m = Model::random(&cfg, &mut rng);
+    m.heads.push((
+        "cls".into(),
+        resmoe::Matrix::randn(3, cfg.d_model, 0.2, &mut rng),
+    ));
+    m
+}
+
+/// One restored dense expert of the test geometry: design 32×(2·16+1) + b2.
+fn one_expert_bytes() -> usize {
+    (32 * (2 * 16 + 1) + 16) * 4
+}
+
+struct Combo {
+    name: String,
+    model: Model,
+    cm: CompressedModel,
+    artifact: PathBuf,
+}
+
+/// UP and SVD at rates {0, 0.25, 1} over the same backbone, each packed to
+/// an RMES artifact once (cases below reopen engines per budget).
+fn combos() -> Vec<Combo> {
+    let dir = std::env::temp_dir().join("resmoe-prop-batching");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = base_model(1000);
+    let mut out = Vec::new();
+    for (mname, method) in [("up", ResMoE::up()), ("svd", ResMoE::svd())] {
+        for rate in [0.0f64, 0.25, 1.0] {
+            let mut rng = Rng::new(7 + (rate * 8.0) as u64);
+            let cm = compress_model(&model, &method, rate, 2, None, &mut rng);
+            let artifact = dir.join(format!("{mname}-{rate}.rmes"));
+            pack_compressed_model(&model, &cm.layers, rate, &artifact).unwrap();
+            out.push(Combo { name: format!("{mname}@{rate}"), model: model.clone(), cm, artifact });
+        }
+    }
+    out
+}
+
+#[derive(Debug)]
+struct Case {
+    combo: usize,
+    budget: usize,
+    packed: bool,
+    reqs: Vec<Request>,
+}
+
+fn gen_requests(rng: &mut Rng, with_sequential: bool) -> Vec<Request> {
+    let n = 1 + rng.below(8); // 1–8 concurrent clients
+    (0..n)
+        .map(|_| match rng.below(if with_sequential { 10 } else { 8 }) {
+            // varying token counts, incl. the 2-token minimum
+            0..=5 => Request::Score {
+                tokens: (0..2 + rng.below(9)).map(|_| rng.below(32) as u32).collect(),
+            },
+            6 | 7 => Request::Classify {
+                task: "cls".into(),
+                tokens: (0..1 + rng.below(8)).map(|_| rng.below(32) as u32).collect(),
+            },
+            _ => Request::Generate {
+                prompt: (0..1 + rng.below(3)).map(|_| rng.below(32) as u32).collect(),
+                max_new: rng.below(4),
+            },
+        })
+        .collect()
+}
+
+fn budgets() -> [usize; 5] {
+    let e = one_expert_bytes();
+    // roomy / thrash / one-share-per-block tight / tighter / in between
+    [usize::MAX, 0, 2 * e, 4 * e, 3 * e]
+}
+
+fn assert_decision_metrics_equal(a: &CacheMetrics, b: &CacheMetrics) -> Result<(), String> {
+    let pairs = [
+        ("hits", a.hits, b.hits),
+        ("misses", a.misses, b.misses),
+        ("evictions", a.evictions, b.evictions),
+        ("restore_serves", a.restore_serves, b.restore_serves),
+        ("fused_serves", a.fused_serves, b.fused_serves),
+        ("restores_executed", a.restores_executed, b.restores_executed),
+        ("shard_fetches", a.shard_fetches, b.shard_fetches),
+        ("shard_evictions", a.shard_evictions, b.shard_evictions),
+    ];
+    for (name, sa, sb) in pairs {
+        if sa != sb {
+            return Err(format!("metric {name}: serial {sa} vs batched {sb}"));
+        }
+    }
+    Ok(())
+}
+
+fn engines_for(case: &Case, combos: &[Combo]) -> (Engine, Engine) {
+    let c = &combos[case.combo];
+    if case.packed {
+        let mut serial = Engine::from_store(&c.artifact, case.budget).unwrap();
+        serial.disable_prefetch(); // deterministic serve sequence both sides
+        let mut batched = Engine::from_store(&c.artifact, case.budget).unwrap();
+        batched.disable_prefetch();
+        (serial, batched)
+    } else {
+        (
+            Engine::compressed(c.model.clone(), c.cm.layers.clone(), case.budget),
+            Engine::compressed(c.model.clone(), c.cm.layers.clone(), case.budget),
+        )
+    }
+}
+
+#[test]
+fn prop_batched_serve_matches_serial_bit_for_bit() {
+    let combos = combos();
+    let budgets = budgets();
+    let n_combos = combos.len();
+    check(
+        PropConfig { cases: 40, seed: 0xBA7C4 },
+        |rng| Case {
+            combo: rng.below(n_combos),
+            budget: budgets[rng.below(budgets.len())],
+            packed: rng.below(2) == 1,
+            reqs: gen_requests(rng, false),
+        },
+        |case| {
+            let (serial, batched) = engines_for(case, &combos);
+            let want: Vec<Response> = case.reqs.iter().map(|r| serial.handle(r)).collect();
+            let got = batched.handle_batch(&case.reqs);
+            if got != want {
+                return Err(format!(
+                    "{}: batched != serial\n got {got:?}\nwant {want:?}",
+                    combos[case.combo].name
+                ));
+            }
+            // Responses carry f64 scores — equality above is exact (bit
+            // identity up to the one NaN-free comparison f64 provides).
+            // Decision metrics must replay the serial reference ordering.
+            assert_decision_metrics_equal(
+                &serial.cache_metrics().unwrap(),
+                &batched.cache_metrics().unwrap(),
+            )
+            .map_err(|e| format!("{} (budget {}): {e}", combos[case.combo].name, case.budget))
+        },
+    );
+}
+
+#[test]
+fn prop_batched_windows_with_sequential_requests_match_serial() {
+    // Generate requests split prefill runs; invalid requests are answered
+    // inline. Whatever the mix, window execution equals serial order.
+    let combos = combos();
+    let budgets = budgets();
+    let n_combos = combos.len();
+    check(
+        PropConfig { cases: 16, seed: 0xBA7C5 },
+        |rng| {
+            let mut reqs = gen_requests(rng, true);
+            if rng.below(3) == 0 {
+                // Splice in an invalid request at a random position.
+                let at = rng.below(reqs.len() + 1);
+                reqs.insert(at, Request::Score { tokens: vec![1] });
+            }
+            Case {
+                combo: rng.below(n_combos),
+                budget: budgets[rng.below(budgets.len())],
+                packed: rng.below(2) == 1,
+                reqs,
+            }
+        },
+        |case| {
+            let (serial, batched) = engines_for(case, &combos);
+            let want: Vec<Response> = case.reqs.iter().map(|r| serial.handle(r)).collect();
+            let got = batched.handle_batch(&case.reqs);
+            if got != want {
+                return Err(format!(
+                    "{}: mixed window != serial\n got {got:?}\nwant {want:?}",
+                    combos[case.combo].name
+                ));
+            }
+            assert_decision_metrics_equal(
+                &serial.cache_metrics().unwrap(),
+                &batched.cache_metrics().unwrap(),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_consecutive_windows_compose_like_serial_streams() {
+    // Splitting one request stream into several consecutive windows must
+    // not change anything either: [w1; w2; w3] == serial(all) — the
+    // between-window cache state is exactly the serial mid-stream state.
+    let combos = combos();
+    let n_combos = combos.len();
+    let e = one_expert_bytes();
+    check(
+        PropConfig { cases: 12, seed: 0xBA7C6 },
+        |rng| {
+            let mut reqs = gen_requests(rng, false);
+            reqs.extend(gen_requests(rng, false));
+            Case {
+                combo: rng.below(n_combos),
+                budget: [usize::MAX, 2 * e, 0][rng.below(3)],
+                packed: rng.below(2) == 1,
+                reqs,
+            }
+        },
+        |case| {
+            let (serial, batched) = engines_for(case, &combos);
+            let want: Vec<Response> = case.reqs.iter().map(|r| serial.handle(r)).collect();
+            // Random-ish deterministic split derived from the case size.
+            let cut = 1 + case.reqs.len() / 3;
+            let cut2 = (cut + 1 + case.reqs.len() / 2).min(case.reqs.len());
+            let mut got = batched.handle_batch(&case.reqs[..cut]);
+            got.extend(batched.handle_batch(&case.reqs[cut..cut2]));
+            got.extend(batched.handle_batch(&case.reqs[cut2..]));
+            if got != want {
+                return Err("window composition diverged from the serial stream".into());
+            }
+            assert_decision_metrics_equal(
+                &serial.cache_metrics().unwrap(),
+                &batched.cache_metrics().unwrap(),
+            )
+        },
+    );
+}

@@ -25,4 +25,13 @@ cargo run --release --quiet -- pack --model switch-mini-8 --method resmoe-up \
 cargo run --release --quiet -- serve-packed --artifact "$PACK_DIR/model.rmes" \
   --requests 16 --cache-mb 1 --workers 2
 
+echo "== continuous-batching smoke (env-tuned windows, 1 worker) =="
+# One worker + a wide window forces real multi-request batches; the
+# batch_summary line in the demo output carries occupancy/flush counters.
+RESMOE_BATCH=4 RESMOE_LINGER_US=2000 cargo run --release --quiet -- serve-packed \
+  --artifact "$PACK_DIR/model.rmes" --requests 24 --cache-mb 4 --workers 1
+
+echo "== batching scheduler/parity simulation (no-toolchain fallback validator) =="
+python3 scripts/sim_batching.py
+
 echo "CI OK"
