@@ -13,6 +13,7 @@ use resmoe::coordinator::{Engine, ExpertCache, Request};
 use resmoe::moe::model_io::{load_model, save_model_compressed};
 use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
 use resmoe::store::{pack_compressed_model, ExpertStore};
+use resmoe::tensor::kernel::{kernel_kind, kernel_label, matmul_nt_into_with, KernelKind};
 use resmoe::tensor::matrix::matmul_nt_into;
 use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
 use resmoe::coordinator::Response;
@@ -32,15 +33,21 @@ fn main() {
     runner.run("matmul 64x64 @ 64x224 (expert up-proj)", 3, iters * 10, || {
         std::hint::black_box(a.matmul(&b));
     });
-    // §Perf before/after in one run: the serial-dot reference kernel vs the
-    // 4-column-blocked matmul_nt used on the expert-forward hot path.
+    // §Perf before/after in one run: the scalar twin vs the runtime kernel
+    // (AVX2+FMA where the CPU has it) through the forced-kind entry points
+    // — both kernels measured in ONE process, unlike the env-pinned
+    // dispatch. (The old serial-dot naive reference is #[cfg(test)]-only
+    // now; the scalar twin is the production baseline.)
     let wt = Matrix::randn(224, 64, 1.0, &mut rng); // expert W1 [pI, p]
     let xs = Matrix::randn(96, 64, 1.0, &mut rng); // 96-token batch
-    runner.run("matmul_nt NAIVE  96x64 @ (224x64)^T", 3, iters * 10, || {
-        std::hint::black_box(xs.matmul_nt_naive(&wt));
+    let mut nt_out = Matrix::zeros(96, 224);
+    runner.run("matmul_nt SCALAR 96x64 @ (224x64)^T", 3, iters * 10, || {
+        matmul_nt_into_with(KernelKind::Scalar, &xs, &wt, &mut nt_out, false);
+        std::hint::black_box(&nt_out);
     });
-    runner.run("matmul_nt 4-col  96x64 @ (224x64)^T", 3, iters * 10, || {
-        std::hint::black_box(xs.matmul_nt(&wt));
+    runner.run("matmul_nt ACTIVE 96x64 @ (224x64)^T", 3, iters * 10, || {
+        matmul_nt_into_with(kernel_kind(), &xs, &wt, &mut nt_out, false);
+        std::hint::black_box(&nt_out);
     });
     let big_a = Matrix::randn(512, 256, 1.0, &mut rng);
     let big_b = Matrix::randn(256, 512, 1.0, &mut rng);
@@ -179,6 +186,7 @@ fn main() {
     runner.run("engine score 96 tokens (warm cache)", 1, iters.min(5), || {
         std::hint::black_box(engine.handle(&Request::Score { tokens: tokens.clone() }));
     });
+    let warm_serve_ms = runner.results.last().unwrap().mean_ms();
     // Thrash: budget below ONE restored expert, so every lookup misses.
     let thrash_budget = expert_bytes / 2;
     let engine_restore = Engine::compressed(model.clone(), cm.layers.clone(), thrash_budget);
@@ -190,6 +198,7 @@ fn main() {
     runner.run("engine score 96 tokens (thrashed, fused)", 1, iters.min(5), || {
         std::hint::black_box(engine_fused.handle(&Request::Score { tokens: tokens.clone() }));
     });
+    let thrash_serve_ms = runner.results.last().unwrap().mean_ms();
     if let Some(m) = engine_fused.cache_metrics() {
         eprintln!(
             "  thrashed-fused decisions: {} fused / {} restored ({} misses)",
@@ -357,6 +366,116 @@ fn main() {
         ]);
     }
 
+    // --- SIMD kernel sweep → BENCH_simd.json: the scalar twin vs the
+    // runtime kernel through the forced-kind entry points, in GFLOP/s, over
+    // expert-shaped GEMMs and the CSR SpMM density grid; plus the warm /
+    // thrash serve mix in tok/s under the ACTIVE kernel (the engine's kind
+    // is env-pinned per process — run the bench again with RESMOE_SIMD=0 to
+    // fill in the scalar serve rows; see EXPERIMENTS.md §Kernels).
+    let mut simd_table = Table::new(
+        &format!("SIMD kernel sweep (runtime kernel: {})", kernel_label()),
+        &["bench", "config", "metric", "scalar", "simd", "speedup"],
+    );
+    let time_best = |f: &mut dyn FnMut()| -> f64 {
+        // Best-of-3 wall time for `reps` scaled to the workload inside f.
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    for &(label, m, n, k) in &[
+        ("up-proj prefill", 96usize, 224usize, 64usize),
+        ("down-proj prefill", 96, 64, 224),
+        ("up-proj 8-tok", 8, 224, 64),
+        ("decode 1-tok", 1, 224, 64),
+        ("lm_head 96-tok", 96, 256, 64),
+        ("square 256", 256, 256, 256),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let mut out = Matrix::zeros(m, n);
+        let flops = 2.0 * (m * n * k) as f64;
+        let reps = ((5e7 / flops) as usize).clamp(1, 2000) * if fast { 1 } else { 4 };
+        let mut gflops = |kind: KernelKind| -> f64 {
+            let secs = time_best(&mut || {
+                for _ in 0..reps {
+                    matmul_nt_into_with(kind, &a, &bt, &mut out, false);
+                    std::hint::black_box(&out);
+                }
+            });
+            flops * reps as f64 / secs / 1e9
+        };
+        let scalar = gflops(KernelKind::Scalar);
+        let simd = gflops(kernel_kind());
+        simd_table.row(vec![
+            "gemm_nt".into(),
+            format!("{label} {m}x{k}@({n}x{k})^T"),
+            "GFLOP/s".into(),
+            format!("{scalar:.2}"),
+            format!("{simd:.2}"),
+            format!("{:.2}x", simd / scalar.max(1e-9)),
+        ]);
+    }
+    for &density in &[0.05f64, 0.25, 0.5] {
+        let mut drng = Rng::new(7);
+        let delta = Matrix::from_fn(224, 64, |_, _| {
+            if drng.uniform() < density {
+                drng.normal()
+            } else {
+                0.0
+            }
+        });
+        let csr = Csr::from_dense(&delta, IndexWidth::narrowest_for(delta.cols));
+        let x96 = Matrix::randn(96, 64, 1.0, &mut rng);
+        let h96 = Matrix::randn(96, 224, 1.0, &mut rng);
+        let flops_nt = 2.0 * (96 * csr.nnz()) as f64;
+        let reps = ((5e7 / flops_nt.max(1.0)) as usize).clamp(1, 2000);
+        for &(op, is_nt) in &[("spmm_nt", true), ("spmm_acc", false)] {
+            let mut out_nt = Matrix::zeros(96, 224);
+            let mut out_acc = Matrix::zeros(96, 64);
+            let mut gflops = |kind: KernelKind| -> f64 {
+                let secs = time_best(&mut || {
+                    for _ in 0..reps {
+                        if is_nt {
+                            csr.matmul_nt_into_with(kind, &x96, &mut out_nt, false);
+                            std::hint::black_box(&out_nt);
+                        } else {
+                            out_acc.data.fill(0.0);
+                            csr.matmul_acc_into_with(kind, &h96, &mut out_acc);
+                            std::hint::black_box(&out_acc);
+                        }
+                    }
+                });
+                flops_nt * reps as f64 / secs / 1e9
+            };
+            let scalar = gflops(KernelKind::Scalar);
+            let simd = gflops(kernel_kind());
+            simd_table.row(vec![
+                op.to_string(),
+                format!("d={density} 96x64 x (224x64 csr)"),
+                "GFLOP/s (eff)".into(),
+                format!("{scalar:.2}"),
+                format!("{simd:.2}"),
+                format!("{:.2}x", simd / scalar.max(1e-9)),
+            ]);
+        }
+    }
+    // Serve mix under the active kernel (per-process pin): tok/s at a warm
+    // budget and under thrash with the fused policy.
+    for (cfg_label, ms) in [("warm 96-tok score", warm_serve_ms), ("thrash+fused 96-tok score", thrash_serve_ms)] {
+        simd_table.row(vec![
+            "serve".into(),
+            cfg_label.into(),
+            format!("tok/s ({})", kernel_label()),
+            "-".into(),
+            format!("{:.0}", 96.0 / (ms / 1e3).max(1e-9)),
+            "-".into(),
+        ]);
+    }
+
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
@@ -373,6 +492,8 @@ fn main() {
     t.save_json("BENCH_perf_hotpath");
     spmm_table.print();
     spmm_table.save_json("BENCH_spmm_density_sweep");
+    simd_table.print();
+    simd_table.save_json("BENCH_simd");
     cold_table.print();
     cold_table.save_json("BENCH_coldstart");
     conc_table.print();

@@ -18,8 +18,9 @@
 //! path; equivalence with restore-then-dense is property-tested in
 //! `rust/tests/prop_invariants.rs`.
 
-use crate::moe::expert::{add_bias_rows, silu, ExpertForward};
+use crate::moe::expert::{add_bias_rows, ExpertForward};
 use crate::moe::{ExpertArch, ExpertWeights, MoeLayer};
+use crate::tensor::kernel;
 use crate::tensor::matrix::{matmul_acc_into, matmul_nt_into};
 use crate::tensor::sparse::IndexWidth;
 use crate::tensor::{Csr, Matrix, Svd};
@@ -497,13 +498,10 @@ impl FusedPiece {
     }
 }
 
+/// Singular-value scaling of the thin low-rank intermediate — dispatched
+/// through the kernel layer (exact op: identical bits on either kernel).
 fn scale_cols(m: &mut Matrix, s: &[f32]) {
-    debug_assert_eq!(m.cols, s.len());
-    for r in 0..m.rows {
-        for (v, &sv) in m.row_mut(r).iter_mut().zip(s) {
-            *v *= sv;
-        }
-    }
+    kernel::scale_cols(m, s);
 }
 
 /// A compressed expert split once into per-weight residual pieces —
@@ -709,20 +707,14 @@ pub fn fused_forward_expert(
     e.d_up.apply_nt_acc(x, &mut h);
     add_bias_rows(&mut h, &e.db1);
     match base.arch {
-        ExpertArch::Relu => {
-            for v in h.data.iter_mut() {
-                *v = v.max(0.0);
-            }
-        }
+        ExpertArch::Relu => kernel::relu_inplace(&mut h),
         ExpertArch::SwiGlu => {
             let mut g = shared.g0.clone().expect("gated layer has shared gate term");
             if let Some(piece) = &e.d_gate {
                 piece.apply_nt_acc(x, &mut g);
             }
             add_bias_rows(&mut g, e.db3.as_ref().expect("gated expert has db3"));
-            for (hv, gv) in h.data.iter_mut().zip(&g.data) {
-                *hv = silu(*hv) * gv;
-            }
+            kernel::silu_mul(&mut h, &g);
         }
     }
     // out = h @ (W_ω² + Δ²)ᵀ + b2, with the center part dense and the

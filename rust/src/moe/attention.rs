@@ -1,6 +1,7 @@
 //! Multi-head causal self-attention with an optional KV cache, used by the
 //! decoder-only evaluation models.
 
+use crate::tensor::kernel;
 use crate::tensor::Matrix;
 use crate::util::stats::softmax;
 use crate::util::Rng;
@@ -67,7 +68,11 @@ impl Attention {
         let mut ctx = Matrix::zeros(t, d);
         // §Perf: one reusable score buffer + in-place softmax instead of a
         // fresh Vec per (head, position) — the T² small allocations
-        // dominated the profile at decode-context lengths.
+        // dominated the profile at decode-context lengths. The dot /
+        // softmax / weighted-V tiers dispatch through `tensor::kernel`
+        // (vectorized under AVX2; the scalar twin reproduces the historical
+        // arithmetic bit-for-bit). Each position's softmax spans only its
+        // own causal prefix, so outputs stay position-local.
         let mut scores: Vec<f32> = Vec::with_capacity(t);
         for h in 0..self.n_heads {
             let lo = h * hd;
@@ -76,26 +81,13 @@ impl Attention {
                 // scores over j <= i
                 let qi = &q.row(i)[lo..hi];
                 scores.clear();
-                let mut max = f32::NEG_INFINITY;
                 for j in 0..=i {
-                    let kj = &k.row(j)[lo..hi];
-                    let s = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    max = max.max(s);
-                    scores.push(s);
+                    scores.push(kernel::dot(qi, &k.row(j)[lo..hi]) * scale);
                 }
-                let mut sum = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max).exp();
-                    sum += *s;
-                }
-                let inv = 1.0 / sum;
+                kernel::softmax_inplace(&mut scores);
                 let dst = &mut ctx.row_mut(i)[lo..hi];
                 for (j, &p) in scores.iter().enumerate() {
-                    let pv = p * inv;
-                    let vj = &v.row(j)[lo..hi];
-                    for (o, &vv) in dst.iter_mut().zip(vj) {
-                        *o += pv * vv;
-                    }
+                    kernel::axpy(dst, p, &v.row(j)[lo..hi]);
                 }
             }
         }
@@ -123,18 +115,12 @@ impl Attention {
             let hi = lo + hd;
             let qh = &q.row(0)[lo..hi];
             let scores: Vec<f32> = (0..cache.len)
-                .map(|j| {
-                    let kj = &cache.k.row(j)[lo..hi];
-                    qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
-                })
+                .map(|j| kernel::dot(qh, &cache.k.row(j)[lo..hi]) * scale)
                 .collect();
             let probs = softmax(&scores);
             let dst = &mut ctx.row_mut(0)[lo..hi];
             for (j, &p) in probs.iter().enumerate() {
-                let vj = &cache.v.row(j)[lo..hi];
-                for (o, &vv) in dst.iter_mut().zip(vj) {
-                    *o += p * vv;
-                }
+                kernel::axpy(dst, p, &cache.v.row(j)[lo..hi]);
             }
         }
         ctx.matmul_nt(&self.wo)

@@ -9,23 +9,14 @@
 //! design matrices.
 
 use super::config::ExpertArch;
+use crate::tensor::kernel;
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
-#[inline]
-pub fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-/// row-broadcast `m[r, :] += bias` (shared by the dense and fused forwards).
-pub fn add_bias_rows(m: &mut Matrix, bias: &[f32]) {
-    debug_assert_eq!(m.cols, bias.len());
-    for r in 0..m.rows {
-        for (v, &b) in m.row_mut(r).iter_mut().zip(bias) {
-            *v += b;
-        }
-    }
-}
+// The activation/bias tier lives in the runtime-dispatched kernel layer
+// since PR 5 (scalar twin or AVX2 per `RESMOE_SIMD`); re-exported here so
+// the historical `moe::expert::{silu, add_bias_rows}` paths keep working.
+pub use crate::tensor::kernel::{add_bias_rows, silu};
 
 /// The one interface every expert representation serves tokens through —
 /// dense restored weights ([`ExpertWeights`]) and the restore-free fused
@@ -113,19 +104,13 @@ impl ExpertWeights {
         let mut h = x.matmul_nt(&self.w1); // B × pI
         add_bias_rows(&mut h, &self.b1);
         match self.arch {
-            ExpertArch::Relu => {
-                for v in h.data.iter_mut() {
-                    *v = v.max(0.0);
-                }
-            }
+            ExpertArch::Relu => kernel::relu_inplace(&mut h),
             ExpertArch::SwiGlu => {
                 let w3 = self.w3.as_ref().expect("SwiGlu expert missing w3");
                 let b3 = self.b3.as_ref().expect("SwiGlu expert missing b3");
                 let mut g = x.matmul_nt(w3);
                 add_bias_rows(&mut g, b3);
-                for (hv, gv) in h.data.iter_mut().zip(&g.data) {
-                    *hv = silu(*hv) * gv;
-                }
+                kernel::silu_mul(&mut h, &g);
             }
         }
         let mut out = h.matmul_nt(&self.w2); // B × p

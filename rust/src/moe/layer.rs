@@ -56,10 +56,9 @@ pub fn gather_rows(x: &Matrix, rows: &[usize]) -> Matrix {
 pub fn combine_slot_output(out: &mut Matrix, group: &[(usize, f32)], y: &Matrix) {
     debug_assert_eq!(y.rows, group.len());
     for (i, &(t, w)) in group.iter().enumerate() {
-        let dst = out.row_mut(t);
-        for (d, &s) in dst.iter_mut().zip(y.row(i)) {
-            *d += w * s;
-        }
+        // Exact axpy (non-fused on both kernels): the weighted combine is
+        // bitwise identical whichever kernel RESMOE_SIMD resolves.
+        crate::tensor::kernel::axpy(out.row_mut(t), w, y.row(i));
     }
 }
 

@@ -214,7 +214,7 @@ fn take_mat(t: &mut BTreeMap<String, Matrix>, name: &str) -> Result<Matrix> {
 }
 
 fn take_vec(t: &mut BTreeMap<String, Matrix>, name: &str) -> Result<Vec<f32>> {
-    Ok(take_mat(t, name)?.data)
+    Ok(take_mat(t, name)?.data.into_vec())
 }
 
 fn take_expert(

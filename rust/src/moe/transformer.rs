@@ -19,13 +19,12 @@ use super::router::RouterStats;
 use crate::tensor::Matrix;
 use crate::util::Rng;
 
-/// RMS normalization with learned gain.
+/// RMS normalization with learned gain — dispatched through the kernel
+/// layer (scalar twin reproduces the historical arithmetic; AVX2 uses a
+/// lane-split sum of squares). Row-local, so batched hidden states stay
+/// bit-identical to per-request ones under either kernel.
 pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
-    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let inv = 1.0 / (ms + 1e-6).sqrt();
-    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
-        *o = v * inv * g;
-    }
+    crate::tensor::kernel::rmsnorm(x, gain, out);
 }
 
 fn rmsnorm_mat(x: &Matrix, gain: &[f32]) -> Matrix {

@@ -52,7 +52,7 @@ impl LmScorer {
                 tensor.n_params(),
                 input.shape
             );
-            weights.push((tensor.data.clone(), shape_i64(&input.shape)));
+            weights.push((tensor.data.to_vec(), shape_i64(&input.shape)));
         }
         let mut artifacts = Vec::new();
         for (b, spec) in specs {

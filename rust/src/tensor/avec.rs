@@ -1,0 +1,290 @@
+//! 32-byte-aligned `f32` storage for [`Matrix`](super::Matrix) backing
+//! buffers — the alignment contract of the SIMD microkernel layer
+//! (`tensor/kernel.rs` / `tensor/simd.rs`).
+//!
+//! Implemented as a **padded `Vec<f32>` with an alignment offset** (no
+//! unsafe allocation tricks): the buffer over-allocates by up to 7 floats
+//! and exposes only the aligned tail. Every constructor and every growth
+//! path re-derives the offset from the (possibly moved) allocation, so the
+//! invariant `self.as_ptr() as usize % 32 == 0` holds for any non-empty
+//! payload. Rust never moves the base pointer without going through one of
+//! the guarded growth paths here (plain `Vec::push` only reallocates when
+//! `len == capacity`, which [`AVec::push`] pre-empts).
+//!
+//! The kernels themselves use unaligned load/store instructions (same
+//! throughput on every AVX2 part when the address is in fact aligned), so
+//! the contract is about cache-line behaviour and future `load_ps`
+//! eligibility, not faults — see README §Kernels.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+
+/// Byte alignment of the payload base pointer.
+pub const ALIGN: usize = 32;
+/// Worst-case extra `f32` slots needed to reach a 32-byte boundary from a
+/// 4-byte-aligned allocation.
+const PAD: usize = ALIGN / 4 - 1;
+
+/// Offset (in `f32` elements) from `ptr` to the next 32-byte boundary.
+fn align_offset(ptr: *const f32) -> usize {
+    let rem = ptr as usize % ALIGN;
+    if rem == 0 {
+        0
+    } else {
+        debug_assert_eq!(rem % 4, 0, "Vec<f32> allocation must be 4-byte aligned");
+        (ALIGN - rem) / 4
+    }
+}
+
+/// A `Vec<f32>` whose payload base is 32-byte aligned.
+///
+/// Derefs to `[f32]`, so slice reads/writes, iteration, and indexing all
+/// look exactly like the plain `Vec` it replaced inside [`super::Matrix`].
+#[derive(Default)]
+pub struct AVec {
+    /// Raw storage; the payload is `buf[off..]`.
+    buf: Vec<f32>,
+    off: usize,
+}
+
+impl AVec {
+    /// Aligned zero-filled vector of length `n`.
+    pub fn zeroed(n: usize) -> AVec {
+        let mut buf = vec![0.0f32; n + PAD];
+        let off = align_offset(buf.as_ptr());
+        buf.truncate(off + n);
+        AVec { buf, off }
+    }
+
+    /// Aligned empty vector able to hold `n` elements without reallocating.
+    pub fn with_capacity(n: usize) -> AVec {
+        let mut buf = Vec::with_capacity(n + PAD);
+        let off = align_offset(buf.as_ptr());
+        buf.resize(off, 0.0);
+        AVec { buf, off }
+    }
+
+    /// Take ownership of `v`, re-copying into aligned storage only when the
+    /// allocation happens to be misaligned (single write — no zero-fill
+    /// pass — since collect-based `Matrix` constructors funnel through
+    /// here).
+    pub fn from_vec(v: Vec<f32>) -> AVec {
+        if align_offset(v.as_ptr()) == 0 {
+            return AVec { buf: v, off: 0 };
+        }
+        let mut out = AVec::with_capacity(v.len());
+        out.buf.extend_from_slice(&v);
+        out
+    }
+
+    /// Move the payload out as a plain `Vec` without copying the payload
+    /// itself (the sub-32B alignment prefix is drained in place).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        if self.off > 0 {
+            self.buf.drain(..self.off);
+        }
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy the payload out as a plain `Vec` (serialization / interop).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self[..].to_vec()
+    }
+
+    pub fn push(&mut self, v: f32) {
+        if self.buf.len() == self.buf.capacity() {
+            self.grow(1);
+        }
+        // Cannot reallocate: capacity strictly exceeds length here.
+        self.buf.push(v);
+    }
+
+    pub fn extend_from_slice(&mut self, s: &[f32]) {
+        if self.buf.len() + s.len() > self.buf.capacity() {
+            self.grow(s.len());
+        }
+        self.buf.extend_from_slice(s);
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.truncate(self.off);
+    }
+
+    /// Rebuild into a fresh allocation with room for `extra` more elements,
+    /// re-deriving the alignment offset (reallocation moves the base).
+    fn grow(&mut self, extra: usize) {
+        let need = self.len() + extra;
+        let cap = need.max(self.len() * 2).max(8);
+        let mut buf = Vec::with_capacity(cap + PAD);
+        let off = align_offset(buf.as_ptr());
+        buf.resize(off, 0.0);
+        buf.extend_from_slice(self);
+        self.buf = buf;
+        self.off = off;
+    }
+}
+
+impl Deref for AVec {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        &self.buf[self.off..]
+    }
+}
+
+impl DerefMut for AVec {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        let off = self.off;
+        &mut self.buf[off..]
+    }
+}
+
+impl Clone for AVec {
+    fn clone(&self) -> AVec {
+        let mut out = AVec::zeroed(self.len());
+        out.copy_from_slice(self);
+        out
+    }
+}
+
+impl fmt::Debug for AVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+impl PartialEq for AVec {
+    fn eq(&self, other: &AVec) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<f32>> for AVec {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<AVec> for Vec<f32> {
+    fn eq(&self, other: &AVec) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl From<Vec<f32>> for AVec {
+    fn from(v: Vec<f32>) -> AVec {
+        AVec::from_vec(v)
+    }
+}
+
+impl FromIterator<f32> for AVec {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> AVec {
+        AVec::from_vec(iter.into_iter().collect())
+    }
+}
+
+impl<'a> IntoIterator for &'a AVec {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut AVec {
+    type Item = &'a mut f32;
+    type IntoIter = std::slice::IterMut<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_aligned(v: &AVec) {
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0, "payload base must be 32B-aligned");
+    }
+
+    #[test]
+    fn constructors_are_aligned() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let z = AVec::zeroed(n);
+            assert_eq!(z.len(), n);
+            assert_aligned(&z);
+            assert!(z.iter().all(|&x| x == 0.0));
+            let f = AVec::from_vec((0..n).map(|i| i as f32).collect());
+            assert_eq!(f.len(), n);
+            assert_aligned(&f);
+            for (i, &x) in f.iter().enumerate() {
+                assert_eq!(x, i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn growth_preserves_alignment_and_content() {
+        let mut v = AVec::with_capacity(4);
+        assert_aligned(&v);
+        for i in 0..1000 {
+            v.push(i as f32);
+            assert_aligned(&v);
+        }
+        assert_eq!(v.len(), 1000);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+        v.extend_from_slice(&[1.0; 123]);
+        assert_aligned(&v);
+        assert_eq!(v.len(), 1123);
+        assert_eq!(v[1122], 1.0);
+    }
+
+    #[test]
+    fn into_vec_roundtrips() {
+        for n in [0usize, 3, 9, 64] {
+            let want: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let v = AVec::from_vec(want.clone());
+            assert_eq!(v.into_vec(), want);
+        }
+    }
+
+    #[test]
+    fn clone_and_eq() {
+        let a = AVec::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert_aligned(&b);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+        assert_ne!(a, AVec::zeroed(3));
+    }
+
+    #[test]
+    fn slice_ops_work_through_deref() {
+        let mut v = AVec::zeroed(10);
+        v.fill(2.0);
+        v[3] = 5.0;
+        assert_eq!(v.iter().sum::<f32>(), 2.0 * 9.0 + 5.0);
+        let mut it = 0;
+        for x in &v {
+            it += (*x > 0.0) as usize;
+        }
+        assert_eq!(it, 10);
+        for x in &mut v {
+            *x *= 2.0;
+        }
+        assert_eq!(v[3], 10.0);
+        v.clear();
+        assert!(v.is_empty());
+    }
+}

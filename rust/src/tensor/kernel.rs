@@ -1,0 +1,1052 @@
+//! Runtime-dispatched microkernel subsystem: one source of truth for every
+//! FLOP on the serving hot path.
+//!
+//! Two kernel families live here:
+//!
+//! * **Scalar** — the portable cache-blocked kernels (the pre-PR-5 code,
+//!   moved from `matrix.rs`), auto-vectorized by LLVM at the baseline
+//!   target. Always available; pinned with `RESMOE_SIMD=0`.
+//! * **Avx2** — register-blocked AVX2+FMA microkernels
+//!   (`tensor/simd.rs`) behind packed-panel drivers, selected at runtime
+//!   when the CPU reports `avx2` and `fma`.
+//!
+//! The kind is resolved ONCE per process ([`kernel_kind`], cached in a
+//! `OnceLock`): every path — serial, batched, store-paged, fused — funnels
+//! through these entry points, so path-vs-path bit-for-bit parity is
+//! preserved by construction whichever kernel is active. The two kernels
+//! may differ from each other in final bits (FMA, lane-split reductions,
+//! polynomial `exp`); tests compare them under a relative tolerance and
+//! compare paths under equality. See README §Kernels.
+//!
+//! Determinism rules every kernel here obeys (and reviews must preserve):
+//! an output element's arithmetic depends only on the reduction extent and
+//! its column position — never on the batch row count, its row position,
+//! tile membership, or the executing thread. That is what keeps
+//! `batched == serial` and `store == monolithic` exact under SIMD.
+
+use super::matrix::{Matrix, PAR_MIN_FLOPS};
+use super::sparse::Csr;
+use crate::util::threads::{parallel_row_chunks_mut, parallel_rows_mut};
+use std::sync::OnceLock;
+
+/// Which kernel family executes the tensor ops of this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable cache-blocked scalar kernels (LLVM auto-vectorized).
+    Scalar,
+    /// Register-blocked AVX2+FMA microkernels with packed panels.
+    Avx2,
+}
+
+/// Kill-switch / dispatch policy, kept pure for testability: an explicit
+/// off-value in `RESMOE_SIMD` (case-insensitive) beats CPU detection;
+/// anything else defers to what the hardware reports.
+pub fn resolve_kind(env: Option<&str>, detected: bool) -> KernelKind {
+    let off = env.is_some_and(|v| {
+        matches!(v.to_ascii_lowercase().as_str(), "0" | "off" | "false" | "scalar")
+    });
+    if off {
+        KernelKind::Scalar
+    } else if detected {
+        KernelKind::Avx2
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+fn detect_avx2_fma() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The process-wide kernel kind (env `RESMOE_SIMD=0` forces scalar),
+/// resolved once and cached — a per-process pin so every serving path sees
+/// the same arithmetic.
+pub fn kernel_kind() -> KernelKind {
+    static KIND: OnceLock<KernelKind> = OnceLock::new();
+    *KIND.get_or_init(|| {
+        resolve_kind(std::env::var("RESMOE_SIMD").ok().as_deref(), detect_avx2_fma())
+    })
+}
+
+/// Human-readable label for logs/benches.
+pub fn kernel_label() -> &'static str {
+    match kernel_kind() {
+        KernelKind::Scalar => "scalar",
+        KernelKind::Avx2 => "avx2+fma",
+    }
+}
+
+// ====================================================================== GEMM
+
+/// out (+)= a @ otherᵀ under an explicit kernel kind (tests and benches
+/// force kinds; production callers go through `matrix::matmul_nt_into`).
+pub fn matmul_nt_into_with(
+    kind: KernelKind,
+    a: &Matrix,
+    other: &Matrix,
+    out: &mut Matrix,
+    accumulate: bool,
+) {
+    assert_eq!(a.cols, other.cols, "matmul_nt dim mismatch");
+    let (m, n) = (a.rows, other.rows);
+    assert_eq!((out.rows, out.cols), (m, n), "matmul_nt output shape");
+    if n == 0 || m == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => gemm_nt_scalar(a, other, out, accumulate),
+        KernelKind::Avx2 => avx2::gemm_nt(a, other, out, accumulate),
+    }
+}
+
+/// out (+)= a @ b under an explicit kernel kind.
+pub fn matmul_into_with(kind: KernelKind, a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch {:?} @ {:?}", a.shape(), b.shape());
+    let (m, n) = (a.rows, b.cols);
+    assert_eq!((out.rows, out.cols), (m, n), "matmul output shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => gemm_nn_scalar(a, b, out, accumulate),
+        KernelKind::Avx2 => avx2::gemm_nn(a, b, out, accumulate),
+    }
+}
+
+/// aᵀ @ b under an explicit kernel kind.
+pub fn matmul_tn_with(kind: KernelKind, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn dim mismatch");
+    match kind {
+        KernelKind::Scalar => gemm_tn_scalar(a, b),
+        KernelKind::Avx2 => avx2::gemm_tn(a, b),
+    }
+}
+
+// ------------------------------------------------------------ scalar twins
+// The pre-PR-5 kernels, verbatim: i-k-j NN, packed-panel NT with 8/4-wide
+// independent accumulators, k-outer TN. These define the `RESMOE_SIMD=0`
+// arithmetic and stay bit-identical to the seed lineage.
+
+/// j-tile width (rows of `other` processed per packed panel) and k-panel
+/// depth of the blocked scalar `matmul_nt`. 64×256 f32 ≈ 64 KB — the panel
+/// plus the active A-row slice stay L2-resident while being reused across a
+/// worker's whole row chunk.
+const NT_JB: usize = 64;
+const NT_KB: usize = 256;
+
+fn gemm_nt_scalar(a: &Matrix, other: &Matrix, out: &mut Matrix, accumulate: bool) {
+    let (m, n, k) = (a.rows, other.rows, a.cols);
+    let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        if !accumulate {
+            chunk.fill(0.0);
+        }
+        // Single k-panel (covers every decode-shape matmul): `other`'s
+        // contiguous rows already ARE the packed layout, so run the tile
+        // kernel straight over them — zero allocation, zero copy.
+        if k <= NT_KB {
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + NT_JB).min(n);
+                let jw = je - jb;
+                for i in 0..rows {
+                    let a_row = a.row(r0 + i);
+                    let out_row = &mut chunk[i * n + jb..i * n + je];
+                    nt_tile(a_row, &other.data[jb * k..], k, jw, out_row);
+                }
+                jb = je;
+            }
+            return;
+        }
+        let mut pack = vec![0.0f32; NT_JB * NT_KB];
+        let mut kb = 0usize;
+        while kb < k {
+            let ke = (kb + NT_KB).min(k);
+            let kw = ke - kb;
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + NT_JB).min(n);
+                let jw = je - jb;
+                for (t, j) in (jb..je).enumerate() {
+                    pack[t * kw..(t + 1) * kw].copy_from_slice(&other.row(j)[kb..ke]);
+                }
+                for i in 0..rows {
+                    let a_row = &a.row(r0 + i)[kb..ke];
+                    let out_row = &mut chunk[i * n + jb..i * n + je];
+                    nt_tile(a_row, &pack, kw, jw, out_row);
+                }
+                jb = je;
+            }
+            kb = ke;
+        }
+    };
+    if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_row_chunks_mut(&mut out.data, m, n, |r0, chunk| chunk_kernel(r0, chunk));
+    } else {
+        chunk_kernel(0, &mut out.data);
+    }
+}
+
+/// One packed tile: out[j] += dot(a_row, pack row j) for `jw` columns, with
+/// 8-/4-wide independent accumulators.
+#[inline]
+fn nt_tile(a_row: &[f32], pack: &[f32], kw: usize, jw: usize, out: &mut [f32]) {
+    let mut j = 0usize;
+    while j + 8 <= jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
+        let b4 = &pack[(j + 4) * kw..(j + 5) * kw];
+        let b5 = &pack[(j + 5) * kw..(j + 6) * kw];
+        let b6 = &pack[(j + 6) * kw..(j + 7) * kw];
+        let b7 = &pack[(j + 7) * kw..(j + 8) * kw];
+        let mut s = [0.0f32; 8];
+        for kk in 0..kw {
+            let av = a_row[kk];
+            s[0] += av * b0[kk];
+            s[1] += av * b1[kk];
+            s[2] += av * b2[kk];
+            s[3] += av * b3[kk];
+            s[4] += av * b4[kk];
+            s[5] += av * b5[kk];
+            s[6] += av * b6[kk];
+            s[7] += av * b7[kk];
+        }
+        for (o, sv) in out[j..j + 8].iter_mut().zip(s) {
+            *o += sv;
+        }
+        j += 8;
+    }
+    while j + 4 <= jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for kk in 0..kw {
+            let av = a_row[kk];
+            s0 += av * b0[kk];
+            s1 += av * b1[kk];
+            s2 += av * b2[kk];
+            s3 += av * b3[kk];
+        }
+        out[j] += s0;
+        out[j + 1] += s1;
+        out[j + 2] += s2;
+        out[j + 3] += s3;
+        j += 4;
+    }
+    while j < jw {
+        let b0 = &pack[j * kw..(j + 1) * kw];
+        let mut acc = 0.0f32;
+        for kk in 0..kw {
+            acc += a_row[kk] * b0[kk];
+        }
+        out[j] += acc;
+        j += 1;
+    }
+}
+
+fn gemm_nn_scalar(a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let kernel = |r: usize, out_row: &mut [f32]| {
+        if !accumulate {
+            out_row.fill(0.0);
+        }
+        let a_row = a.row(r);
+        for kk in 0..k {
+            let av = a_row[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b.data[kk * n..kk * n + n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                *o += av * bv;
+            }
+        }
+    };
+    if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_rows_mut(&mut out.data, m, n, |r, row| kernel(r, row));
+    } else {
+        for r in 0..m {
+            let row = &mut out.data[r * n..(r + 1) * n];
+            kernel(r, row);
+        }
+    }
+}
+
+fn gemm_tn_scalar(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n, k) = (a.cols, b.cols, a.rows);
+    let mut out = Matrix::zeros(m, n);
+    for kk in 0..k {
+        let a_row = a.row(kk);
+        let b_row = b.row(kk);
+        for i in 0..m {
+            let av = a_row[i];
+            if av == 0.0 {
+                continue;
+            }
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+// ====================================================================== CSR
+
+/// out (+)= x @ csrᵀ under an explicit kind (`Csr::matmul_nt_into` fronts
+/// this). The non-accumulating zero fill happens here so both kernels share
+/// the always-accumulate tile contract.
+pub fn csr_matmul_nt_into_with(
+    kind: KernelKind,
+    csr: &Csr,
+    x: &Matrix,
+    out: &mut Matrix,
+    accumulate: bool,
+) {
+    assert_eq!(x.cols, csr.cols, "csr matmul_nt dim mismatch");
+    assert_eq!((out.rows, out.cols), (x.rows, csr.rows), "csr matmul_nt output shape");
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    if csr.rows == 0 || x.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => csr.matmul_nt_scalar(x, out),
+        KernelKind::Avx2 => avx2::spmm_nt(csr, x, out),
+    }
+}
+
+/// out += h @ csr under an explicit kind (`Csr::matmul_acc_into` fronts it).
+pub fn csr_matmul_acc_into_with(kind: KernelKind, csr: &Csr, h: &Matrix, out: &mut Matrix) {
+    assert_eq!(h.cols, csr.rows, "csr matmul_acc dim mismatch");
+    assert_eq!((out.rows, out.cols), (h.rows, csr.cols), "csr matmul_acc output shape");
+    if csr.rows == 0 || csr.cols == 0 || h.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => csr.matmul_acc_scalar(h, out),
+        KernelKind::Avx2 => avx2::spmm_acc(csr, h, out),
+    }
+}
+
+// =============================================================== elementwise
+// Two tiers:
+//  * EXACT ops (one rounding per element: add/mul/axpy/relu/bias/scale) —
+//    the SIMD bodies use non-fused mul+add, so both kinds produce the SAME
+//    bits and the dispatch is purely a throughput choice.
+//  * APPROXIMATE ops (exp-based: softmax/silu/rmsnorm reductions) — SIMD
+//    uses a polynomial `exp` and lane-split sums; results differ from
+//    scalar within ~1e-7 relative and are applied PER ROW so a column's
+//    arithmetic never depends on the batch row count.
+
+/// SiLU (sigmoid-weighted linear unit) — scalar reference, also re-exported
+/// through `moe::expert`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// h[i] = silu(h[i]) * g[i] — the SwiGLU combine over equally shaped
+/// matrices, row-wise under SIMD.
+pub fn silu_mul(h: &mut Matrix, g: &Matrix) {
+    debug_assert_eq!(h.shape(), g.shape());
+    match kernel_kind() {
+        KernelKind::Scalar => silu_mul_scalar(h, g),
+        KernelKind::Avx2 => avx2::silu_mul(h, g),
+    }
+}
+
+fn silu_mul_scalar(h: &mut Matrix, g: &Matrix) {
+    for (hv, gv) in h.data.iter_mut().zip(g.data.iter()) {
+        *hv = silu(*hv) * *gv;
+    }
+}
+
+/// In-place ReLU (exact: both kinds produce identical bits).
+pub fn relu_inplace(m: &mut Matrix) {
+    match kernel_kind() {
+        KernelKind::Scalar => relu_scalar(&mut m.data),
+        KernelKind::Avx2 => avx2::relu(&mut m.data),
+    }
+}
+
+fn relu_scalar(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Numerically stable in-place softmax (max-subtract, exp, scale by the
+/// reciprocal of the sum).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    match kernel_kind() {
+        KernelKind::Scalar => softmax_scalar(xs),
+        KernelKind::Avx2 => avx2::softmax(xs),
+    }
+}
+
+fn softmax_scalar(xs: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    for &v in xs.iter() {
+        max = max.max(v);
+    }
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMS normalization of one row with learned gain (eps matches the
+/// transformer's historical constant).
+pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    const EPS: f32 = 1e-6;
+    match kernel_kind() {
+        KernelKind::Scalar => rmsnorm_scalar(x, gain, out, EPS),
+        KernelKind::Avx2 => avx2::rmsnorm(x, gain, out, EPS),
+    }
+}
+
+fn rmsnorm_scalar(x: &[f32], gain: &[f32], out: &mut [f32], eps: f32) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
+}
+
+/// Dot product (SIMD: FMA lanes + fixed-order horizontal reduction).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match kernel_kind() {
+        KernelKind::Scalar => dot_scalar(a, b),
+        KernelKind::Avx2 => avx2::dot(a, b),
+    }
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>()
+}
+
+/// dst[i] += alpha * src[i] (exact: non-fused on both kinds).
+pub fn axpy(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match kernel_kind() {
+        KernelKind::Scalar => axpy_scalar(dst, alpha, src),
+        KernelKind::Avx2 => avx2::axpy(dst, alpha, src),
+    }
+}
+
+fn axpy_scalar(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += alpha * *s;
+    }
+}
+
+/// dst[i] += src[i] (exact).
+pub fn add_slice(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match kernel_kind() {
+        KernelKind::Scalar => add_slice_scalar(dst, src),
+        KernelKind::Avx2 => avx2::add_slice(dst, src),
+    }
+}
+
+fn add_slice_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// row-broadcast `m[r, :] += bias` (exact; shared by the dense and fused
+/// forwards — re-exported through `moe::expert::add_bias_rows`).
+pub fn add_bias_rows(m: &mut Matrix, bias: &[f32]) {
+    debug_assert_eq!(m.cols, bias.len());
+    match kernel_kind() {
+        KernelKind::Scalar => add_bias_rows_scalar(m, bias),
+        KernelKind::Avx2 => avx2::add_bias_rows(m, bias),
+    }
+}
+
+fn add_bias_rows_scalar(m: &mut Matrix, bias: &[f32]) {
+    for r in 0..m.rows {
+        for (v, &b) in m.row_mut(r).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `m[:, j] *= s[j]` — the SharedAct / low-rank singular-value scaling
+/// (exact).
+pub fn scale_cols(m: &mut Matrix, s: &[f32]) {
+    debug_assert_eq!(m.cols, s.len());
+    match kernel_kind() {
+        KernelKind::Scalar => scale_cols_scalar(m, s),
+        KernelKind::Avx2 => avx2::scale_cols(m, s),
+    }
+}
+
+fn scale_cols_scalar(m: &mut Matrix, s: &[f32]) {
+    for r in 0..m.rows {
+        for (v, &sv) in m.row_mut(r).iter_mut().zip(s) {
+            *v *= sv;
+        }
+    }
+}
+
+// ========================================================= AVX2 drivers
+// Packed-panel drivers around the `tensor/simd.rs` microkernels. On
+// non-x86_64 targets the module below is replaced by scalar delegates so
+// dispatch code compiles everywhere (kernel_kind() never yields Avx2
+// there).
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use crate::tensor::avec::AVec;
+    use crate::tensor::simd;
+    use crate::util::threads::parallel_row_chunks_mut_aligned;
+
+    /// Microkernel tile geometry: 6 rows × 16 columns of C per call.
+    const MR: usize = 6;
+    const NR: usize = 16;
+    /// Cache blocking: k-panel depth × packed-panel width (KC·NC f32 =
+    /// 64 KB, L2-resident per worker).
+    const KC: usize = 256;
+    const NC: usize = 64;
+
+    /// Pack rows `jb..jb+jw` of `other` (the columns of the NT product)
+    /// over k-range `kb..kb+kw` into micropanels: for micropanel `mp`,
+    /// `pack[mp*kw*16 + kk*16 + lane] = other[jb + mp*16 + lane][kb + kk]`,
+    /// with lanes past `jw` zeroed (padding lanes are arithmetic no-ops for
+    /// their neighbors — lanes are independent).
+    fn pack_nt_panel(other: &Matrix, jb: usize, jw: usize, kb: usize, kw: usize, pack: &mut [f32]) {
+        let n_mp = jw.div_ceil(NR);
+        for mp in 0..n_mp {
+            let base = mp * kw * NR;
+            let jlo = jb + mp * NR;
+            let jcount = (jb + jw - jlo).min(NR);
+            if jcount < NR {
+                pack[base..base + kw * NR].fill(0.0);
+            }
+            for lane in 0..jcount {
+                let row = &other.row(jlo + lane)[kb..kb + kw];
+                for (kk, &v) in row.iter().enumerate() {
+                    pack[base + kk * NR + lane] = v;
+                }
+            }
+        }
+    }
+
+    pub fn gemm_nt(a: &Matrix, other: &Matrix, out: &mut Matrix, accumulate: bool) {
+        let (m, n, k) = (a.rows, other.rows, a.cols);
+        let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+            let rows = chunk.len() / n;
+            if !accumulate {
+                chunk.fill(0.0);
+            }
+            if k == 0 {
+                return;
+            }
+            let mut pack = AVec::zeroed(KC * NC);
+            let mut kb = 0usize;
+            while kb < k {
+                let kw = (k - kb).min(KC);
+                let mut jb = 0usize;
+                while jb < n {
+                    let jw = (n - jb).min(NC);
+                    let n_mp = jw.div_ceil(NR);
+                    pack_nt_panel(other, jb, jw, kb, kw, &mut pack);
+                    let mut ib = 0usize;
+                    while ib < rows {
+                        let iw = (rows - ib).min(MR);
+                        for mp in 0..n_mp {
+                            let jww = (jw - mp * NR).min(NR);
+                            // SAFETY: kind() verified avx2+fma; row/col
+                            // ranges are in bounds by the loop limits; the
+                            // pack holds kw*16 floats per micropanel.
+                            unsafe {
+                                simd::mk_nt(
+                                    iw,
+                                    a.data.as_ptr().add((r0 + ib) * k + kb),
+                                    k,
+                                    pack.as_ptr().add(mp * kw * NR),
+                                    kw,
+                                    chunk.as_mut_ptr().add(ib * n + jb + mp * NR),
+                                    n,
+                                    jww,
+                                );
+                            }
+                        }
+                        ib += iw;
+                    }
+                    jb += jw;
+                }
+                kb += kw;
+            }
+        };
+        if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, m, n, MR, |r0, chunk| {
+                chunk_kernel(r0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    /// NN rows-per-tile (4×16 C tile; B is streamed, not packed, except for
+    /// the ragged column tail).
+    const NN_MR: usize = 4;
+
+    pub fn gemm_nn(a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let n_full = n - n % NR;
+        let jt = n - n_full;
+        let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+            let rows = chunk.len() / n;
+            if !accumulate {
+                chunk.fill(0.0);
+            }
+            if k == 0 {
+                return;
+            }
+            let mut tailpack = AVec::zeroed(if jt > 0 { KC * NR } else { 0 });
+            let mut kb = 0usize;
+            while kb < k {
+                let kw = (k - kb).min(KC);
+                if jt > 0 {
+                    // Zero-padded ldb=16 scratch so the microkernel's
+                    // 16-float loads stay in bounds on the column tail.
+                    tailpack.fill(0.0);
+                    for kk in 0..kw {
+                        let row = &b.row(kb + kk)[n_full..];
+                        tailpack[kk * NR..kk * NR + jt].copy_from_slice(row);
+                    }
+                }
+                let mut ib = 0usize;
+                while ib < rows {
+                    let iw = (rows - ib).min(NN_MR);
+                    let a_ptr = a.data[(r0 + ib) * k + kb..].as_ptr();
+                    let mut jb = 0usize;
+                    while jb < n_full {
+                        // SAFETY: avx2+fma verified; B rows kb..kb+kw each
+                        // have ≥16 readable floats from column jb.
+                        unsafe {
+                            simd::mk_nn(
+                                iw,
+                                a_ptr,
+                                k,
+                                b.data.as_ptr().add(kb * n + jb),
+                                n,
+                                kw,
+                                chunk.as_mut_ptr().add(ib * n + jb),
+                                n,
+                                NR,
+                            );
+                        }
+                        jb += NR;
+                    }
+                    if jt > 0 {
+                        // SAFETY: scratch rows are exactly 16 floats.
+                        unsafe {
+                            simd::mk_nn(
+                                iw,
+                                a_ptr,
+                                k,
+                                tailpack.as_ptr(),
+                                NR,
+                                kw,
+                                chunk.as_mut_ptr().add(ib * n + n_full),
+                                n,
+                                jt,
+                            );
+                        }
+                    }
+                    ib += iw;
+                }
+                kb += kw;
+            }
+        };
+        if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, m, n, NN_MR, |r0, chunk| {
+                chunk_kernel(r0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, n, k) = (a.cols, b.cols, a.rows);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let a_row = a.row(kk);
+            let b_row = b.row(kk);
+            for i in 0..m {
+                let av = a_row[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                // SAFETY: avx2+fma verified; slices are equal length.
+                unsafe { simd::tn_axpy(out_row, av, b_row) };
+            }
+        }
+        out
+    }
+
+    /// Batch-tile width of the SpMM drivers (8 = one AVX lane set).
+    const BT: usize = 8;
+
+    pub fn spmm_nt(csr: &Csr, x: &Matrix, out: &mut Matrix) {
+        let (bsz, rr, p) = (x.rows, csr.rows, csr.cols);
+        let chunk_kernel = |b0: usize, chunk: &mut [f32]| {
+            let rows_b = chunk.len() / rr;
+            let mut xt = AVec::zeroed(p * BT);
+            let mut bt = 0usize;
+            while bt < rows_b {
+                let bw = (rows_b - bt).min(BT);
+                if bw < BT {
+                    xt.fill(0.0);
+                }
+                for lane in 0..bw {
+                    let row = x.row(b0 + bt + lane);
+                    for (c, &v) in row.iter().enumerate() {
+                        xt[c * BT + lane] = v;
+                    }
+                }
+                // SAFETY: avx2+fma verified; the Csr invariants (validated
+                // on decode) bound col_idx < p and row_ptr monotone; the
+                // out tile rows bt..bt+bw exist in this chunk.
+                unsafe {
+                    simd::spmm_nt_tile(
+                        &csr.row_ptr,
+                        &csr.col_idx,
+                        &csr.values,
+                        xt.as_ptr(),
+                        chunk.as_mut_ptr().add(bt * rr),
+                        rr,
+                        bw,
+                        rr,
+                    );
+                }
+                bt += bw;
+            }
+        };
+        if bsz * csr.nnz() >= PAR_MIN_FLOPS && bsz > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, bsz, rr, BT, |b0, chunk| {
+                chunk_kernel(b0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    pub fn spmm_acc(csr: &Csr, h: &Matrix, out: &mut Matrix) {
+        let (bsz, pi, p) = (h.rows, csr.rows, csr.cols);
+        let chunk_kernel = |b0: usize, chunk: &mut [f32]| {
+            let rows_b = chunk.len() / p;
+            let mut ht = AVec::zeroed(pi * BT);
+            let mut outt = AVec::zeroed(p * BT);
+            let mut bt = 0usize;
+            while bt < rows_b {
+                let bw = (rows_b - bt).min(BT);
+                if bw < BT {
+                    ht.fill(0.0);
+                }
+                for lane in 0..bw {
+                    let row = h.row(b0 + bt + lane);
+                    for (r, &v) in row.iter().enumerate() {
+                        ht[r * BT + lane] = v;
+                    }
+                }
+                outt.fill(0.0);
+                // SAFETY: avx2+fma verified; Csr invariants bound indices;
+                // ht/outt hold pi*8 / p*8 floats.
+                unsafe {
+                    simd::spmm_acc_tile(
+                        &csr.row_ptr,
+                        &csr.col_idx,
+                        &csr.values,
+                        ht.as_ptr(),
+                        outt.as_mut_ptr(),
+                        pi,
+                    );
+                }
+                for lane in 0..bw {
+                    let orow = &mut chunk[(bt + lane) * p..(bt + lane + 1) * p];
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o += outt[c * BT + lane];
+                    }
+                }
+                bt += bw;
+            }
+        };
+        if bsz * csr.nnz() >= PAR_MIN_FLOPS && bsz > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, bsz, p, BT, |b0, chunk| {
+                chunk_kernel(b0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    // ------------------------------------------------------- elementwise
+
+    pub fn silu_mul(h: &mut Matrix, g: &Matrix) {
+        let cols = h.cols;
+        for r in 0..h.rows {
+            let row = &mut h.data[r * cols..(r + 1) * cols];
+            // SAFETY: avx2+fma verified; rows are equal length.
+            unsafe { simd::silu_mul_row(row, g.row(r)) };
+        }
+    }
+
+    pub fn relu(data: &mut [f32]) {
+        // SAFETY: avx2+fma verified.
+        unsafe { simd::relu_inplace(data) };
+    }
+
+    pub fn softmax(xs: &mut [f32]) {
+        // SAFETY: avx2+fma verified.
+        unsafe { simd::softmax_inplace(xs) };
+    }
+
+    pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32], eps: f32) {
+        // SAFETY: avx2+fma verified; equal lengths checked by caller.
+        unsafe { simd::rmsnorm_row(x, gain, out, eps) };
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: avx2+fma verified; equal lengths.
+        unsafe { simd::dot(a, b) }
+    }
+
+    pub fn axpy(dst: &mut [f32], alpha: f32, src: &[f32]) {
+        // SAFETY: avx2+fma verified; equal lengths.
+        unsafe { simd::axpy_row(dst, alpha, src) };
+    }
+
+    pub fn add_slice(dst: &mut [f32], src: &[f32]) {
+        // SAFETY: avx2+fma verified; equal lengths.
+        unsafe { simd::add_row(dst, src) };
+    }
+
+    pub fn add_bias_rows(m: &mut Matrix, bias: &[f32]) {
+        let cols = m.cols;
+        for r in 0..m.rows {
+            let row = &mut m.data[r * cols..(r + 1) * cols];
+            // SAFETY: avx2+fma verified; bias.len() == cols.
+            unsafe { simd::add_row(row, bias) };
+        }
+    }
+
+    pub fn scale_cols(m: &mut Matrix, s: &[f32]) {
+        let cols = m.cols;
+        for r in 0..m.rows {
+            let row = &mut m.data[r * cols..(r + 1) * cols];
+            // SAFETY: avx2+fma verified; s.len() == cols.
+            unsafe { simd::mul_row(row, s) };
+        }
+    }
+}
+
+/// Scalar delegates so the dispatchers compile on non-x86_64 targets
+/// (`kernel_kind()` never returns `Avx2` there, so these are unreachable in
+/// practice but keep the code honest if that invariant ever slips).
+#[cfg(not(target_arch = "x86_64"))]
+mod avx2 {
+    use super::*;
+
+    pub fn gemm_nt(a: &Matrix, other: &Matrix, out: &mut Matrix, accumulate: bool) {
+        gemm_nt_scalar(a, other, out, accumulate)
+    }
+    pub fn gemm_nn(a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
+        gemm_nn_scalar(a, b, out, accumulate)
+    }
+    pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        gemm_tn_scalar(a, b)
+    }
+    pub fn spmm_nt(csr: &Csr, x: &Matrix, out: &mut Matrix) {
+        csr.matmul_nt_scalar(x, out)
+    }
+    pub fn spmm_acc(csr: &Csr, h: &Matrix, out: &mut Matrix) {
+        csr.matmul_acc_scalar(h, out)
+    }
+    // Elementwise tier: the ONE scalar implementation (the dispatch
+    // functions' Scalar arms) is reused here so the non-x86_64 build can
+    // never drift from the x86_64 RESMOE_SIMD=0 arithmetic.
+    pub fn silu_mul(h: &mut Matrix, g: &Matrix) {
+        silu_mul_scalar(h, g)
+    }
+    pub fn relu(data: &mut [f32]) {
+        relu_scalar(data)
+    }
+    pub fn softmax(xs: &mut [f32]) {
+        softmax_scalar(xs)
+    }
+    pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32], eps: f32) {
+        rmsnorm_scalar(x, gain, out, eps)
+    }
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        dot_scalar(a, b)
+    }
+    pub fn axpy(dst: &mut [f32], alpha: f32, src: &[f32]) {
+        axpy_scalar(dst, alpha, src)
+    }
+    pub fn add_slice(dst: &mut [f32], src: &[f32]) {
+        add_slice_scalar(dst, src)
+    }
+    pub fn add_bias_rows(m: &mut Matrix, bias: &[f32]) {
+        add_bias_rows_scalar(m, bias)
+    }
+    pub fn scale_cols(m: &mut Matrix, s: &[f32]) {
+        scale_cols_scalar(m, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn resolve_kind_policy() {
+        // Kill-switch beats detection, case-insensitively.
+        for off in ["0", "off", "false", "scalar", "OFF", "False", "SCALAR"] {
+            assert_eq!(resolve_kind(Some(off), true), KernelKind::Scalar);
+            assert_eq!(resolve_kind(Some(off), false), KernelKind::Scalar);
+        }
+        // Anything else defers to the hardware.
+        for on in [None, Some("1"), Some("on"), Some("avx2"), Some("")] {
+            assert_eq!(resolve_kind(on, true), KernelKind::Avx2);
+            assert_eq!(resolve_kind(on, false), KernelKind::Scalar);
+        }
+    }
+
+    #[test]
+    fn kernel_kind_is_stable_and_labeled() {
+        let k = kernel_kind();
+        assert_eq!(k, kernel_kind(), "kind must be pinned per process");
+        match k {
+            KernelKind::Scalar => assert_eq!(kernel_label(), "scalar"),
+            KernelKind::Avx2 => assert_eq!(kernel_label(), "avx2+fma"),
+        }
+    }
+
+    #[test]
+    fn exact_elementwise_tier_is_bitwise_identical_across_kinds() {
+        // axpy / add_slice / add_bias / scale_cols use non-fused mul+add in
+        // the SIMD bodies precisely so this holds.
+        if kernel_kind() == KernelKind::Scalar {
+            return; // single kind — nothing to compare
+        }
+        let mut rng = Rng::new(31);
+        for cols in [1usize, 7, 8, 9, 16, 33] {
+            let src: Vec<f32> = rng.normal_vec(cols, 1.0);
+            let base: Vec<f32> = rng.normal_vec(cols, 1.0);
+            let mut via_kernel = base.clone();
+            axpy(&mut via_kernel, 0.37, &src); // dispatches to Avx2
+            let mut via_scalar = base.clone();
+            for (d, s) in via_scalar.iter_mut().zip(&src) {
+                *d += 0.37 * *s;
+            }
+            assert_eq!(via_kernel, via_scalar, "axpy must be exact at cols={cols}");
+            let mut a = base.clone();
+            add_slice(&mut a, &src);
+            let b: Vec<f32> = base.iter().zip(&src).map(|(x, y)| x + y).collect();
+            assert_eq!(a, b, "add_slice must be exact at cols={cols}");
+        }
+    }
+
+    #[test]
+    fn softmax_dispatch_matches_scalar_reference_within_tolerance() {
+        let mut rng = Rng::new(32);
+        for n in [1usize, 2, 5, 8, 9, 31, 64, 100] {
+            let xs: Vec<f32> = rng.normal_vec(n, 3.0);
+            let mut got = xs.clone();
+            softmax_inplace(&mut got);
+            // Scalar reference (divide-free formulation, same as dispatch).
+            let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = xs.iter().map(|x| (x - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let inv = 1.0 / sum;
+            let mut total = 0.0f64;
+            for (g, e) in got.iter().zip(&exps) {
+                let want = e * inv;
+                assert!(
+                    (g - want).abs() <= 1e-5 * want.abs().max(1e-6),
+                    "n={n}: {g} vs {want}"
+                );
+                total += *g as f64;
+            }
+            assert!((total - 1.0).abs() < 1e-4, "softmax sums to 1, got {total}");
+        }
+    }
+
+    #[test]
+    fn silu_dispatch_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(33);
+        let h0 = Matrix::randn(5, 13, 2.0, &mut rng);
+        let g = Matrix::randn(5, 13, 1.0, &mut rng);
+        let mut h = h0.clone();
+        silu_mul(&mut h, &g);
+        for r in 0..5 {
+            for c in 0..13 {
+                let want = silu(h0.at(r, c)) * g.at(r, c);
+                let got = h.at(r, c);
+                assert!(
+                    (got - want).abs() <= 1e-5 * want.abs().max(1e-5),
+                    "({r},{c}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn silu_saturates_without_nan_at_extremes() {
+        let mut h = Matrix::from_vec(1, 4, vec![-100.0, -20.0, 20.0, 100.0]);
+        let g = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        silu_mul(&mut h, &g);
+        assert!(h.data.iter().all(|v| v.is_finite()), "{:?}", h.data);
+        assert!(h.at(0, 0).abs() < 1e-6);
+        assert!((h.at(0, 3) - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rmsnorm_dispatch_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(34);
+        for n in [1usize, 8, 9, 17, 64] {
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let gain: Vec<f32> = rng.normal_vec(n, 1.0);
+            let mut out = vec![0.0f32; n];
+            rmsnorm(&x, &gain, &mut out);
+            let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / n as f32;
+            let inv = 1.0 / (ms + 1e-6).sqrt();
+            for ((o, &v), &g) in out.iter().zip(&x).zip(&gain) {
+                let want = v * inv * g;
+                assert!((o - want).abs() <= 1e-5 * want.abs().max(1e-5));
+            }
+        }
+    }
+}

@@ -1,14 +1,15 @@
 //! Dense row-major `f32` matrix — the arithmetic substrate for everything
 //! (no BLAS is available offline).
 //!
-//! The matmul kernel uses the i-k-j loop order (C[i,:] += A[i,k] * B[k,:]),
-//! which streams both C and B rows sequentially so LLVM auto-vectorizes the
-//! inner loop, plus row-parallelism over the persistent worker pool for
-//! large outputs. `matmul_nt` is cache-blocked: `other` is packed into
-//! j×k panels that stay L1/L2-resident across a worker's whole row chunk.
-//! This is the L3 hot path profiled in EXPERIMENTS.md §Perf.
+//! Since PR 5 the matmul entry points are thin shims over the microkernel
+//! subsystem in [`super::kernel`]: a runtime-dispatched AVX2+FMA
+//! register-blocked kernel with a portable scalar twin (`RESMOE_SIMD=0`
+//! pins scalar). Backing storage is 32-byte aligned ([`super::avec::AVec`])
+//! so the SIMD panels start on vector boundaries. This is the L3 hot path
+//! profiled in EXPERIMENTS.md §Perf / §Kernels.
 
-use crate::util::threads::{parallel_row_chunks_mut, parallel_rows_mut};
+use super::avec::AVec;
+use super::kernel;
 use crate::util::Rng;
 use std::fmt;
 
@@ -16,7 +17,7 @@ use std::fmt;
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: AVec,
 }
 
 impl fmt::Debug for Matrix {
@@ -36,12 +37,12 @@ pub(crate) const PAR_MIN_FLOPS: usize = 1 << 20;
 impl Matrix {
     // ------------------------------------------------------------ creation
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: AVec::zeroed(rows * cols) }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        Matrix { rows, cols, data }
+        Matrix { rows, cols, data: AVec::from_vec(data) }
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
@@ -51,12 +52,12 @@ impl Matrix {
                 data.push(f(r, c));
             }
         }
-        Matrix { rows, cols, data }
+        Matrix::from_vec(rows, cols, data)
     }
 
     /// Gaussian init with the given std (the Switch-Transformer-style init).
     pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
-        Matrix { rows, cols, data: rng.normal_vec(rows * cols, std) }
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols, std))
     }
 
     pub fn identity(n: usize) -> Matrix {
@@ -123,7 +124,8 @@ impl Matrix {
     /// C = self @ other^T (other stored row-major; its rows are the columns
     /// of the product).
     ///
-    /// §Perf: cache-blocked and panel-packed — see [`matmul_nt_into`].
+    /// §Perf: packed-panel microkernel with runtime AVX2 dispatch — see
+    /// [`super::kernel::matmul_nt_into_with`].
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         let mut out = Matrix::zeros(self.rows, other.rows);
         matmul_nt_into(self, other, &mut out, false);
@@ -136,9 +138,11 @@ impl Matrix {
         matmul_nt_into(self, other, out, true);
     }
 
-    /// Reference (pre-optimization) form of [`Self::matmul_nt`]: one serial
-    /// dot product per output element. Kept for §Perf before/after
-    /// benchmarking and as a correctness cross-check in tests.
+    /// Reference kernel: one serial dot product per output element, no
+    /// blocking, no SIMD. `#[cfg(test)]`-only since PR 5 — it exists purely
+    /// as the correctness oracle the optimized kernels are tested against
+    /// (benches compare forced-kind entry points instead).
+    #[cfg(test)]
     pub fn matmul_nt_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt dim mismatch");
         let (m, n, k) = (self.rows, other.rows, self.cols);
@@ -160,24 +164,7 @@ impl Matrix {
 
     /// C = self^T @ other.
     pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "matmul_tn dim mismatch");
-        let (m, n, k) = (self.cols, other.cols, self.rows);
-        let mut out = Matrix::zeros(m, n);
-        for kk in 0..k {
-            let a_row = self.row(kk);
-            let b_row = other.row(kk);
-            for i in 0..m {
-                let a = a_row[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
-        out
+        kernel::matmul_tn_with(kernel::kernel_kind(), self, other)
     }
 
     /// y = self @ x for a vector x.
@@ -199,44 +186,42 @@ impl Matrix {
     pub fn add(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.shape(), other.shape());
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Matrix::from_vec(self.rows, self.cols, data)
     }
 
     pub fn sub(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.shape(), other.shape());
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Matrix::from_vec(self.rows, self.cols, data)
     }
 
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        // Exact op (one rounding per element): vector and scalar kernels
+        // are bitwise identical, so this dispatch never changes results.
+        kernel::add_slice(&mut self.data, &other.data);
     }
 
     /// self += alpha * other.
     pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        kernel::axpy(&mut self.data, alpha, &other.data);
     }
 
     pub fn scale(&self, alpha: f32) -> Matrix {
         let data = self.data.iter().map(|a| a * alpha).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Matrix::from_vec(self.rows, self.cols, data)
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
         let data = self.data.iter().map(|&a| f(a)).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Matrix::from_vec(self.rows, self.cols, data)
     }
 
     pub fn hadamard(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.shape(), other.shape());
         let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        Matrix::from_vec(self.rows, self.cols, data)
     }
 
     // --------------------------------------------------------------- norms
@@ -313,7 +298,7 @@ impl Matrix {
         Matrix {
             rows: hi - lo,
             cols: self.cols,
-            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+            data: AVec::from_vec(self.data[lo * self.cols..hi * self.cols].to_vec()),
         }
     }
 
@@ -354,186 +339,40 @@ impl Matrix {
     }
 }
 
-/// Core i-k-j matmul kernel with optional row-parallelism: C = A @ B.
+/// C = A @ B through the runtime-dispatched kernel ([`kernel`]).
 pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
-    matmul_into_impl(a, b, out, false);
+    kernel::matmul_into_with(kernel::kernel_kind(), a, b, out, false);
 }
 
-/// Accumulating i-k-j matmul: out += A @ B (the fused low-rank path).
+/// Accumulating matmul: out += A @ B (the fused low-rank path).
 pub fn matmul_acc_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
-    matmul_into_impl(a, b, out, true);
+    kernel::matmul_into_with(kernel::kernel_kind(), a, b, out, true);
 }
 
-fn matmul_into_impl(a: &Matrix, b: &Matrix, out: &mut Matrix, accumulate: bool) {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    assert_eq!(a.cols, b.rows, "matmul dim mismatch {:?} @ {:?}", a.shape(), b.shape());
-    assert_eq!((out.rows, out.cols), (m, n), "matmul output shape");
-    let kernel = |r: usize, out_row: &mut [f32]| {
-        if !accumulate {
-            out_row.fill(0.0);
-        }
-        let a_row = a.row(r);
-        for kk in 0..k {
-            let av = a_row[kk];
-            if av == 0.0 {
-                continue;
-            }
-            let b_row = &b.data[kk * n..kk * n + n];
-            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
-                *o += av * bv;
-            }
-        }
-    };
-    if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
-        parallel_rows_mut(&mut out.data, m, n, |r, row| kernel(r, row));
-    } else {
-        for r in 0..m {
-            let row = &mut out.data[r * n..(r + 1) * n];
-            kernel(r, row);
-        }
-    }
-}
-
-/// j-tile width (rows of `other` processed per packed panel) and k-panel
-/// depth of the blocked `matmul_nt` kernel. 64×256 f32 ≈ 64 KB — the panel
-/// plus the active A-row slice stay L2-resident while being reused across a
-/// worker's whole row chunk.
-const NT_JB: usize = 64;
-const NT_KB: usize = 256;
-
-/// out (+)= a @ otherᵀ — the cache-blocked, panel-packed upgrade of the
-/// 4-column kernel.
-///
-/// §Perf: per (j-tile, k-panel) pair the relevant rows of `other` are
-/// packed once into a contiguous scratch panel and reused for every row of
-/// the worker's chunk (the seed's kernel re-streamed all of `other` per
-/// output row). The inner loop keeps the 8-/4-wide independent accumulators
-/// that expose ILP to LLVM's auto-vectorizer.
+/// out (+)= a @ otherᵀ through the runtime-dispatched packed-panel kernel.
 pub fn matmul_nt_into(a: &Matrix, other: &Matrix, out: &mut Matrix, accumulate: bool) {
-    assert_eq!(a.cols, other.cols, "matmul_nt dim mismatch");
-    let (m, n, k) = (a.rows, other.rows, a.cols);
-    assert_eq!((out.rows, out.cols), (m, n), "matmul_nt output shape");
-    if n == 0 {
-        return;
-    }
-    let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
-        let rows = chunk.len() / n;
-        if !accumulate {
-            chunk.fill(0.0);
-        }
-        // Single k-panel (covers every decode-shape matmul): `other`'s
-        // contiguous rows already ARE the packed layout, so run the tile
-        // kernel straight over them — zero allocation, zero copy.
-        if k <= NT_KB {
-            let mut jb = 0usize;
-            while jb < n {
-                let je = (jb + NT_JB).min(n);
-                let jw = je - jb;
-                for i in 0..rows {
-                    let a_row = a.row(r0 + i);
-                    let out_row = &mut chunk[i * n + jb..i * n + je];
-                    nt_tile(a_row, &other.data[jb * k..], k, jw, out_row);
-                }
-                jb = je;
-            }
-            return;
-        }
-        let mut pack = vec![0.0f32; NT_JB * NT_KB];
-        let mut kb = 0usize;
-        while kb < k {
-            let ke = (kb + NT_KB).min(k);
-            let kw = ke - kb;
-            let mut jb = 0usize;
-            while jb < n {
-                let je = (jb + NT_JB).min(n);
-                let jw = je - jb;
-                for (t, j) in (jb..je).enumerate() {
-                    pack[t * kw..(t + 1) * kw].copy_from_slice(&other.row(j)[kb..ke]);
-                }
-                for i in 0..rows {
-                    let a_row = &a.row(r0 + i)[kb..ke];
-                    let out_row = &mut chunk[i * n + jb..i * n + je];
-                    nt_tile(a_row, &pack, kw, jw, out_row);
-                }
-                jb = je;
-            }
-            kb = ke;
-        }
-    };
-    if m * n * k >= PAR_MIN_FLOPS && m > 1 {
-        parallel_row_chunks_mut(&mut out.data, m, n, |r0, chunk| chunk_kernel(r0, chunk));
-    } else {
-        chunk_kernel(0, &mut out.data);
-    }
-}
-
-/// One packed tile: out[j] += dot(a_row, pack row j) for `jw` columns, with
-/// 8-/4-wide independent accumulators.
-#[inline]
-fn nt_tile(a_row: &[f32], pack: &[f32], kw: usize, jw: usize, out: &mut [f32]) {
-    let mut j = 0usize;
-    while j + 8 <= jw {
-        let b0 = &pack[j * kw..(j + 1) * kw];
-        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
-        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
-        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
-        let b4 = &pack[(j + 4) * kw..(j + 5) * kw];
-        let b5 = &pack[(j + 5) * kw..(j + 6) * kw];
-        let b6 = &pack[(j + 6) * kw..(j + 7) * kw];
-        let b7 = &pack[(j + 7) * kw..(j + 8) * kw];
-        let mut s = [0.0f32; 8];
-        for kk in 0..kw {
-            let av = a_row[kk];
-            s[0] += av * b0[kk];
-            s[1] += av * b1[kk];
-            s[2] += av * b2[kk];
-            s[3] += av * b3[kk];
-            s[4] += av * b4[kk];
-            s[5] += av * b5[kk];
-            s[6] += av * b6[kk];
-            s[7] += av * b7[kk];
-        }
-        for (o, sv) in out[j..j + 8].iter_mut().zip(s) {
-            *o += sv;
-        }
-        j += 8;
-    }
-    while j + 4 <= jw {
-        let b0 = &pack[j * kw..(j + 1) * kw];
-        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
-        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
-        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        for kk in 0..kw {
-            let av = a_row[kk];
-            s0 += av * b0[kk];
-            s1 += av * b1[kk];
-            s2 += av * b2[kk];
-            s3 += av * b3[kk];
-        }
-        out[j] += s0;
-        out[j + 1] += s1;
-        out[j + 2] += s2;
-        out[j + 3] += s3;
-        j += 4;
-    }
-    while j < jw {
-        let b0 = &pack[j * kw..(j + 1) * kw];
-        let mut acc = 0.0f32;
-        for kk in 0..kw {
-            acc += a_row[kk] * b0[kk];
-        }
-        out[j] += acc;
-        j += 1;
-    }
+    kernel::matmul_nt_into_with(kernel::kernel_kind(), a, other, out, accumulate);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::kernel::{
+        kernel_kind, matmul_into_with, matmul_nt_into_with, matmul_tn_with, KernelKind,
+    };
 
     fn approx_eq(a: &Matrix, b: &Matrix, tol: f64) -> bool {
         a.shape() == b.shape() && a.sq_dist(b).sqrt() < tol
+    }
+
+    /// The kernel kinds to test: the scalar twin always, plus the runtime
+    /// kind when it differs (i.e. AVX2 on machines that have it).
+    fn test_kinds() -> Vec<KernelKind> {
+        let mut kinds = vec![KernelKind::Scalar];
+        if kernel_kind() != KernelKind::Scalar {
+            kinds.push(kernel_kind());
+        }
+        kinds
     }
 
     #[test]
@@ -567,6 +406,72 @@ mod tests {
     }
 
     #[test]
+    fn every_entry_point_matches_naive_under_every_kernel() {
+        // Satellite: all public matmul entries vs the cfg(test) naive
+        // reference, under BOTH kernel kinds, across ragged shapes that
+        // straddle the 6-row / 16-col / 256-k microkernel tile edges.
+        let mut rng = Rng::new(17);
+        for (m, n, k) in [
+            (1, 1, 1),
+            (5, 15, 31),
+            (6, 16, 64),
+            (7, 17, 65),
+            (12, 33, 255),
+            (13, 64, 256),
+            (23, 65, 257),
+            (96, 224, 64),
+        ] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let bt = Matrix::randn(n, k, 1.0, &mut rng); // B^T layout (n x k)
+            let b = bt.transpose(); // k x n
+            let want = a.matmul_nt_naive(&bt);
+            let tol = 1e-4 * want.frob_norm_sq().max(1.0);
+            for kind in test_kinds() {
+                // NT, plain and accumulating.
+                let mut got = Matrix::zeros(m, n);
+                matmul_nt_into_with(kind, &a, &bt, &mut got, false);
+                assert!(got.sq_dist(&want) < tol, "{kind:?} nt {m}x{k}@({n}x{k})^T");
+                let seed = Matrix::randn(m, n, 1.0, &mut rng);
+                let mut acc = seed.clone();
+                matmul_nt_into_with(kind, &a, &bt, &mut acc, true);
+                assert!(acc.sq_dist(&seed.add(&want)) < tol, "{kind:?} nt acc");
+                // NN, plain and accumulating.
+                let mut got_nn = Matrix::zeros(m, n);
+                matmul_into_with(kind, &a, &b, &mut got_nn, false);
+                assert!(got_nn.sq_dist(&want) < tol, "{kind:?} nn {m}x{k}@{k}x{n}");
+                let mut acc_nn = seed.clone();
+                matmul_into_with(kind, &a, &b, &mut acc_nn, true);
+                assert!(acc_nn.sq_dist(&seed.add(&want)) < tol, "{kind:?} nn acc");
+                // TN.
+                let got_tn = matmul_tn_with(kind, &a.transpose(), &b);
+                assert!(got_tn.sq_dist(&want) < tol, "{kind:?} tn");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_rows_are_batch_position_independent() {
+        // The bit-for-bit theorem the serving paths rest on: an output row
+        // depends only on its own A-row, never on the batch it rides in —
+        // for BOTH kernels, including ragged row tails (7 = 6 + 1 vs
+        // 4 + 3 microkernel splits).
+        let mut rng = Rng::new(18);
+        let bt = Matrix::randn(37, 29, 1.0, &mut rng);
+        let xa = Matrix::randn(4, 29, 1.0, &mut rng);
+        let xb = Matrix::randn(3, 29, 1.0, &mut rng);
+        let cat = xa.vcat(&xb);
+        for kind in test_kinds() {
+            let mut full = Matrix::zeros(7, 37);
+            matmul_nt_into_with(kind, &cat, &bt, &mut full, false);
+            let mut ya = Matrix::zeros(4, 37);
+            matmul_nt_into_with(kind, &xa, &bt, &mut ya, false);
+            let mut yb = Matrix::zeros(3, 37);
+            matmul_nt_into_with(kind, &xb, &bt, &mut yb, false);
+            assert_eq!(full.data, ya.vcat(&yb).data, "{kind:?}: rows must be position-independent");
+        }
+    }
+
+    #[test]
     fn matmul_parallel_matches_serial() {
         // Large enough to trigger the parallel path.
         let mut rng = Rng::new(3);
@@ -585,6 +490,34 @@ mod tests {
             }
         }
         assert!(approx_eq(&big, &refm, 1e-3));
+    }
+
+    #[test]
+    fn backing_storage_is_32_byte_aligned() {
+        // The alignment contract of the SIMD layer: every constructor and
+        // every derived matrix exposes a 32B-aligned base pointer.
+        let mut rng = Rng::new(19);
+        let m = Matrix::randn(9, 13, 1.0, &mut rng);
+        for mat in [
+            &m,
+            &Matrix::zeros(3, 5),
+            &m.transpose(),
+            &m.slice_cols(2, 11),
+            &m.slice_rows(1, 8),
+            &m.hcat(&m),
+            &m.vcat(&m),
+            &m.scale(2.0),
+        ] {
+            assert_eq!(
+                mat.data.as_ptr() as usize % crate::tensor::avec::ALIGN,
+                0,
+                "matrix backing storage must stay 32B-aligned"
+            );
+        }
+        // col_into writes into caller storage and must not disturb it.
+        let mut buf = vec![0.0f32; 9];
+        m.col_into(4, &mut buf);
+        assert_eq!(buf, m.col(4));
     }
 
     #[test]
@@ -695,8 +628,8 @@ mod tests {
 
     #[test]
     fn blocked_matmul_nt_crosses_tile_boundaries() {
-        // Shapes straddling the NT_JB/NT_KB tile edges (63..65 around 64,
-        // 255..300 around 256) must agree with the naive kernel.
+        // Shapes straddling the panel/tile edges (63..65 around the j-tile,
+        // 255..300 around the k-panel) must agree with the naive kernel.
         let mut rng = Rng::new(11);
         for (m, n, k) in [(3, 63, 255), (5, 64, 256), (7, 65, 300), (2, 130, 257), (1, 9, 1)] {
             let a = Matrix::randn(m, k, 1.0, &mut rng);

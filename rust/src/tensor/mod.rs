@@ -1,11 +1,19 @@
-//! Numeric substrate: dense matrices, sparse formats (COO/CSR with
-//! narrow-index accounting per paper App. A.7), QR, and SVD.
+//! Numeric substrate: dense matrices over 32B-aligned storage, sparse
+//! formats (COO/CSR with narrow-index accounting per paper App. A.7), QR,
+//! SVD, and the runtime-dispatched SIMD microkernel layer (`kernel` +
+//! `simd`; `RESMOE_SIMD=0` pins the portable scalar twin).
 
+pub mod avec;
+pub mod kernel;
 pub mod linalg;
 pub mod matrix;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd;
 pub mod sparse;
 pub mod svd;
 
+pub use avec::AVec;
+pub use kernel::{kernel_kind, kernel_label, KernelKind};
 pub use matrix::Matrix;
 pub use sparse::{Coo, Csr, IndexWidth};
 pub use svd::Svd;

@@ -1,0 +1,602 @@
+//! AVX2+FMA microkernels (x86_64 only; compiled out elsewhere).
+//!
+//! Every function here is `unsafe` and `#[target_feature(enable =
+//! "avx2,fma")]`: callers (the drivers in `tensor/kernel.rs`) must have
+//! verified CPU support through [`super::kernel::kernel_kind`] before
+//! entering. Pointers/slices must satisfy the bounds stated per function.
+//!
+//! **Determinism contract** (the property the serving parity theorems rest
+//! on): for a fixed kernel mode, every output element is computed by an
+//! arithmetic sequence that depends ONLY on the reduction extent (`k`,
+//! nnz pattern, row length) and the element's column position — never on
+//! the batch row count, the element's row position, the thread that ran
+//! it, or the tile it landed in. Zero-padded pack lanes keep ragged edges
+//! on the same sequence (lanes are independent). SIMD results may differ
+//! from the scalar twin in final bits (FMA, lane-split reductions,
+//! polynomial `exp`); `RESMOE_SIMD` pins one mode per process.
+
+use std::arch::x86_64::*;
+
+// --------------------------------------------------------------- reductions
+
+/// Horizontal sum in a fixed lane order: ((0+4)+(2+6)) + ((1+5)+(3+7)).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+/// Horizontal max (order-insensitive: max is associative and commutative).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hmax(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_max_ps(lo, hi);
+    let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_max_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+// ------------------------------------------------------------- vectored exp
+
+/// Vectorized `exp` (Cephes/avx_mathfun structure): range-reduce by
+/// `n = round(x/ln 2)`, degree-5 polynomial on the reduced argument,
+/// scale by `2^n` through the exponent field. |rel err| < 2e-7 on the
+/// clamped domain (validated by `scripts/sim_simd.py` in exact f32
+/// arithmetic). Clamps keep results finite: exp(88.38) < f32::MAX.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn vexp(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    let x = _mm256_min_ps(x, _mm256_set1_ps(88.376_26));
+    let x = _mm256_max_ps(x, _mm256_set1_ps(-87.336_55));
+    // n = round-to-nearest-even(x / ln 2) — via the int round-trip, which
+    // both rounds and yields the integer the 2^n scaling needs.
+    let n = _mm256_cvtps_epi32(_mm256_mul_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E)));
+    let fx = _mm256_cvtepi32_ps(n);
+    // Cody–Waite: r = x - n*ln2_hi - n*ln2_lo.
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(0.693_359_375), x);
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(-2.121_944_4e-4), r);
+    let r2 = _mm256_mul_ps(r, r);
+    let mut p = _mm256_set1_ps(1.987_569_15e-4);
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.398_199_95e-3));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(8.333_451_9e-3));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(4.166_579_6e-2));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.666_666_55e-1));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(5.000_000_1e-1));
+    let y = _mm256_add_ps(_mm256_fmadd_ps(p, r2, r), one);
+    let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        n,
+        _mm256_set1_epi32(0x7f),
+    )));
+    _mm256_mul_ps(y, pow2)
+}
+
+// ------------------------------------------------- GEMM NT microkernels
+// C-tile (R x 16) += A-rows (broadcast along k) x packed B micropanel.
+// pack layout: k-major, 16 lanes per k step (lanes beyond jw zero-padded
+// by the driver). Accumulators start at zero; the tile is ADDED to C at
+// the end, so per-element order is: panel-sum in strict k order, then one
+// add into C — identical for every row count R (rows are independent).
+
+macro_rules! mk_nt_r {
+    ($name:ident, $rows:expr) => {
+        /// # Safety
+        /// avx2+fma verified; `a` has `$rows` rows of ≥ `kw` floats at
+        /// stride `lda`; `pack` holds `kw*16` floats; `c` has `$rows` rows
+        /// of ≥ `jw` floats at stride `ldc`; `jw ≤ 16`.
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            pack: *const f32,
+            kw: usize,
+            c: *mut f32,
+            ldc: usize,
+            jw: usize,
+        ) {
+            let mut acc = [[_mm256_setzero_ps(); 2]; $rows];
+            let mut p = pack;
+            for kk in 0..kw {
+                let b0 = _mm256_loadu_ps(p);
+                let b1 = _mm256_loadu_ps(p.add(8));
+                p = p.add(16);
+                for r in 0..$rows {
+                    let av = _mm256_broadcast_ss(&*a.add(r * lda + kk));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            if jw == 16 {
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    _mm256_storeu_ps(cr, _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]));
+                    let cr8 = cr.add(8);
+                    _mm256_storeu_ps(cr8, _mm256_add_ps(_mm256_loadu_ps(cr8), acc[r][1]));
+                }
+            } else {
+                let mut tmp = [0.0f32; 16];
+                for r in 0..$rows {
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r][0]);
+                    _mm256_storeu_ps(tmp.as_mut_ptr().add(8), acc[r][1]);
+                    let cr = c.add(r * ldc);
+                    for (j, t) in tmp.iter().enumerate().take(jw) {
+                        *cr.add(j) += t;
+                    }
+                }
+            }
+        }
+    };
+}
+
+mk_nt_r!(mk_nt_1, 1);
+mk_nt_r!(mk_nt_2, 2);
+mk_nt_r!(mk_nt_3, 3);
+mk_nt_r!(mk_nt_4, 4);
+mk_nt_r!(mk_nt_5, 5);
+mk_nt_r!(mk_nt_6, 6);
+
+/// Row-count dispatcher for the NT microkernel (`rows ∈ 1..=6`).
+///
+/// # Safety
+/// See the per-kernel contract in [`mk_nt_r`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn mk_nt(
+    rows: usize,
+    a: *const f32,
+    lda: usize,
+    pack: *const f32,
+    kw: usize,
+    c: *mut f32,
+    ldc: usize,
+    jw: usize,
+) {
+    match rows {
+        1 => mk_nt_1(a, lda, pack, kw, c, ldc, jw),
+        2 => mk_nt_2(a, lda, pack, kw, c, ldc, jw),
+        3 => mk_nt_3(a, lda, pack, kw, c, ldc, jw),
+        4 => mk_nt_4(a, lda, pack, kw, c, ldc, jw),
+        5 => mk_nt_5(a, lda, pack, kw, c, ldc, jw),
+        6 => mk_nt_6(a, lda, pack, kw, c, ldc, jw),
+        _ => unreachable!("mk_nt rows must be 1..=6"),
+    }
+}
+
+// ------------------------------------------------- GEMM NN microkernels
+// C-tile (R x 16) += A-rows x B-strip, B streamed row-major at stride ldb
+// (each k step loads B[k][j..j+16] contiguously — no packing needed except
+// for ragged column tails, where the driver passes a zero-padded ldb=16
+// scratch so the 16-float loads stay in bounds).
+
+macro_rules! mk_nn_r {
+    ($name:ident, $rows:expr) => {
+        /// # Safety
+        /// avx2+fma verified; `a`: `$rows` rows of ≥ `kw` floats at stride
+        /// `lda`; `b`: `kw` rows of ≥ 16 readable floats at stride `ldb`;
+        /// `c`: `$rows` rows of ≥ `jw` floats at stride `ldc`; `jw ≤ 16`.
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            b: *const f32,
+            ldb: usize,
+            kw: usize,
+            c: *mut f32,
+            ldc: usize,
+            jw: usize,
+        ) {
+            let mut acc = [[_mm256_setzero_ps(); 2]; $rows];
+            for kk in 0..kw {
+                let br = b.add(kk * ldb);
+                let b0 = _mm256_loadu_ps(br);
+                let b1 = _mm256_loadu_ps(br.add(8));
+                for r in 0..$rows {
+                    let av = _mm256_broadcast_ss(&*a.add(r * lda + kk));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            if jw == 16 {
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    _mm256_storeu_ps(cr, _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]));
+                    let cr8 = cr.add(8);
+                    _mm256_storeu_ps(cr8, _mm256_add_ps(_mm256_loadu_ps(cr8), acc[r][1]));
+                }
+            } else {
+                let mut tmp = [0.0f32; 16];
+                for r in 0..$rows {
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r][0]);
+                    _mm256_storeu_ps(tmp.as_mut_ptr().add(8), acc[r][1]);
+                    let cr = c.add(r * ldc);
+                    for (j, t) in tmp.iter().enumerate().take(jw) {
+                        *cr.add(j) += t;
+                    }
+                }
+            }
+        }
+    };
+}
+
+mk_nn_r!(mk_nn_1, 1);
+mk_nn_r!(mk_nn_2, 2);
+mk_nn_r!(mk_nn_3, 3);
+mk_nn_r!(mk_nn_4, 4);
+
+/// Row-count dispatcher for the NN microkernel (`rows ∈ 1..=4`).
+///
+/// # Safety
+/// See the per-kernel contract in [`mk_nn_r`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn mk_nn(
+    rows: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const f32,
+    ldb: usize,
+    kw: usize,
+    c: *mut f32,
+    ldc: usize,
+    jw: usize,
+) {
+    match rows {
+        1 => mk_nn_1(a, lda, b, ldb, kw, c, ldc, jw),
+        2 => mk_nn_2(a, lda, b, ldb, kw, c, ldc, jw),
+        3 => mk_nn_3(a, lda, b, ldb, kw, c, ldc, jw),
+        4 => mk_nn_4(a, lda, b, ldb, kw, c, ldc, jw),
+        _ => unreachable!("mk_nn rows must be 1..=4"),
+    }
+}
+
+// ----------------------------------------------------------------- GEMM TN
+
+/// One broadcast-axpy row pass of the TN kernel: `out[0..n] += av * b[0..n]`
+/// with FMA, vector body + scalar tail (tail position depends only on `n`).
+///
+/// # Safety
+/// avx2+fma verified; both slices have length `n`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn tn_axpy(out: &mut [f32], av: f32, b: &[f32]) {
+    let n = out.len();
+    debug_assert_eq!(b.len(), n);
+    let v = _mm256_set1_ps(av);
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let o = out.as_mut_ptr().add(j);
+        _mm256_storeu_ps(o, _mm256_fmadd_ps(v, _mm256_loadu_ps(b.as_ptr().add(j)), _mm256_loadu_ps(o)));
+        j += 8;
+    }
+    for j in body..n {
+        let bj = *b.get_unchecked(j);
+        let o = out.get_unchecked_mut(j);
+        *o = av.mul_add(bj, *o);
+    }
+}
+
+// ---------------------------------------------------------------- CSR SpMM
+
+/// `out[b][r] += Σ_i v_i · x[b][col_i]` for a tile of ≤8 batch rows,
+/// gather-free: `xt` is the transposed activation panel (`k` cols × 8
+/// lanes, lane-major, lanes ≥ `bw` zero-padded), so every nonzero turns
+/// into one broadcast + one contiguous 8-lane FMA. Per (b, r) order: strict
+/// CSR index order, one final add into `out` — lane position does not
+/// affect the computed value.
+///
+/// # Safety
+/// avx2+fma verified; `row_ptr/col_idx/values` form a valid CSR with
+/// `n_rows` rows and column indices < the panel's k extent; `xt` holds
+/// `k*8` floats; `out` element `(lane, r)` at `out + lane*ldo + r` is
+/// writable for `lane < bw`, `r < n_rows`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn spmm_nt_tile(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    values: &[f32],
+    xt: *const f32,
+    out: *mut f32,
+    ldo: usize,
+    bw: usize,
+    n_rows: usize,
+) {
+    for r in 0..n_rows {
+        let lo = *row_ptr.get_unchecked(r) as usize;
+        let hi = *row_ptr.get_unchecked(r + 1) as usize;
+        if lo == hi {
+            continue;
+        }
+        let mut acc = _mm256_setzero_ps();
+        for i in lo..hi {
+            let v = _mm256_broadcast_ss(values.get_unchecked(i));
+            let c = *col_idx.get_unchecked(i) as usize;
+            acc = _mm256_fmadd_ps(v, _mm256_loadu_ps(xt.add(c * 8)), acc);
+        }
+        let mut tmp = [0.0f32; 8];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        for (lane, t) in tmp.iter().enumerate().take(bw) {
+            *out.add(lane * ldo + r) += t;
+        }
+    }
+}
+
+/// Down-projection correction tile: `outt[c][lane] += h[lane][r] · v` over
+/// the CSR in (r, i) order, vectorized across ≤8 batch lanes. `ht` is the
+/// transposed h panel (rows lane-major ×8), `outt` a zeroed p×8 lane-major
+/// accumulation panel the driver transposes back. Rows whose 8 h-lanes are
+/// all exactly 0.0 are skipped — a value-preserving shortcut (+0-started
+/// accumulators are unchanged by ±0 contributions).
+///
+/// # Safety
+/// avx2+fma verified; valid CSR (`n_rows` rows, col indices < p); `ht`
+/// holds `n_rows*8` floats; `outt` holds `p*8` floats.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn spmm_acc_tile(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    values: &[f32],
+    ht: *const f32,
+    outt: *mut f32,
+    n_rows: usize,
+) {
+    let zero = _mm256_setzero_ps();
+    for r in 0..n_rows {
+        let hv = _mm256_loadu_ps(ht.add(r * 8));
+        if _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(hv, zero)) == 0xff {
+            continue;
+        }
+        let lo = *row_ptr.get_unchecked(r) as usize;
+        let hi = *row_ptr.get_unchecked(r + 1) as usize;
+        for i in lo..hi {
+            let v = _mm256_broadcast_ss(values.get_unchecked(i));
+            let c = *col_idx.get_unchecked(i) as usize * 8;
+            let o = _mm256_loadu_ps(outt.add(c));
+            _mm256_storeu_ps(outt.add(c), _mm256_fmadd_ps(v, hv, o));
+        }
+    }
+}
+
+// ------------------------------------------------------------- elementwise
+
+/// `h[j] = silu(h[j]) * g[j]` — the SwiGLU combine. Ragged tails run
+/// through the same `vexp` on a zero-padded temporary, so every column
+/// position sees identical arithmetic regardless of row count.
+///
+/// # Safety
+/// avx2+fma verified; `h.len() == g.len()`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn silu_mul_row(h: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(h.len(), g.len());
+    let n = h.len();
+    let one = _mm256_set1_ps(1.0);
+    let nsign = _mm256_set1_ps(-0.0);
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let x = _mm256_loadu_ps(h.as_ptr().add(j));
+        let e = vexp(_mm256_xor_ps(x, nsign));
+        let s = _mm256_div_ps(x, _mm256_add_ps(one, e));
+        let y = _mm256_mul_ps(s, _mm256_loadu_ps(g.as_ptr().add(j)));
+        _mm256_storeu_ps(h.as_mut_ptr().add(j), y);
+        j += 8;
+    }
+    if body < n {
+        let rem = n - body;
+        let mut hx = [0.0f32; 8];
+        let mut gx = [0.0f32; 8];
+        hx[..rem].copy_from_slice(&h[body..]);
+        gx[..rem].copy_from_slice(&g[body..]);
+        let x = _mm256_loadu_ps(hx.as_ptr());
+        let e = vexp(_mm256_xor_ps(x, nsign));
+        let s = _mm256_div_ps(x, _mm256_add_ps(one, e));
+        let y = _mm256_mul_ps(s, _mm256_loadu_ps(gx.as_ptr()));
+        _mm256_storeu_ps(hx.as_mut_ptr(), y);
+        h[body..].copy_from_slice(&hx[..rem]);
+    }
+}
+
+/// In-place ReLU (bitwise identical to the scalar `v.max(0.0)`).
+///
+/// # Safety
+/// avx2+fma verified.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn relu_inplace(h: &mut [f32]) {
+    let n = h.len();
+    let zero = _mm256_setzero_ps();
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let p = h.as_mut_ptr().add(j);
+        _mm256_storeu_ps(p, _mm256_max_ps(_mm256_loadu_ps(p), zero));
+        j += 8;
+    }
+    for v in &mut h[body..] {
+        *v = v.max(0.0);
+    }
+}
+
+/// In-place softmax: exact max subtraction, `vexp` body (padded-tail
+/// variant for ragged lengths), lane-split sum reduced in fixed order,
+/// multiply by the reciprocal.
+///
+/// # Safety
+/// avx2+fma verified.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn softmax_inplace(xs: &mut [f32]) {
+    let n = xs.len();
+    if n == 0 {
+        return;
+    }
+    let body = n - n % 8;
+    let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut j = 0;
+    while j < body {
+        vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(xs.as_ptr().add(j)));
+        j += 8;
+    }
+    let mut m = hmax(vmax);
+    for &v in &xs[body..] {
+        m = m.max(v);
+    }
+    let vm = _mm256_set1_ps(m);
+    let mut vsum = _mm256_setzero_ps();
+    j = 0;
+    while j < body {
+        let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(xs.as_ptr().add(j)), vm));
+        _mm256_storeu_ps(xs.as_mut_ptr().add(j), e);
+        vsum = _mm256_add_ps(vsum, e);
+        j += 8;
+    }
+    let mut sum = hsum(vsum);
+    if body < n {
+        let rem = n - body;
+        let mut tx = [0.0f32; 8];
+        tx[..rem].copy_from_slice(&xs[body..]);
+        let e = vexp(_mm256_sub_ps(_mm256_loadu_ps(tx.as_ptr()), vm));
+        _mm256_storeu_ps(tx.as_mut_ptr(), e);
+        xs[body..].copy_from_slice(&tx[..rem]);
+        for &t in &tx[..rem] {
+            sum += t;
+        }
+    }
+    let inv = 1.0 / sum;
+    let vinv = _mm256_set1_ps(inv);
+    j = 0;
+    while j < body {
+        let p = xs.as_mut_ptr().add(j);
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), vinv));
+        j += 8;
+    }
+    for v in &mut xs[body..] {
+        *v *= inv;
+    }
+}
+
+/// RMS-norm one row: lane-split sum of squares (fixed reduction order),
+/// scalar `inv`, then `out[j] = x[j] * inv * g[j]` with the same two
+/// roundings as the scalar twin.
+///
+/// # Safety
+/// avx2+fma verified; all slices have equal length.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn rmsnorm_row(x: &[f32], gain: &[f32], out: &mut [f32], eps: f32) {
+    let n = x.len();
+    debug_assert!(gain.len() == n && out.len() == n);
+    let body = n - n % 8;
+    let mut vsum = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < body {
+        let v = _mm256_loadu_ps(x.as_ptr().add(j));
+        vsum = _mm256_fmadd_ps(v, v, vsum);
+        j += 8;
+    }
+    let mut ss = hsum(vsum);
+    for &v in &x[body..] {
+        ss = v.mul_add(v, ss);
+    }
+    let inv = 1.0 / (ss / n as f32 + eps).sqrt();
+    let vinv = _mm256_set1_ps(inv);
+    j = 0;
+    while j < body {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(j)), vinv);
+        let o = _mm256_mul_ps(v, _mm256_loadu_ps(gain.as_ptr().add(j)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), o);
+        j += 8;
+    }
+    for jj in body..n {
+        out[jj] = x[jj] * inv * gain[jj];
+    }
+}
+
+/// Dot product: FMA lanes over the body, fixed-order horizontal sum, then
+/// scalar tail terms appended in index order.
+///
+/// # Safety
+/// avx2+fma verified; `a.len() == b.len()`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    let body = n - n % 8;
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < body {
+        acc = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(j)),
+            _mm256_loadu_ps(b.as_ptr().add(j)),
+            acc,
+        );
+        j += 8;
+    }
+    let mut s = hsum(acc);
+    for jj in body..n {
+        s = a[jj].mul_add(b[jj], s);
+    }
+    s
+}
+
+/// `dst[j] += a * src[j]`, deliberately NON-fused (separate mul + add) so
+/// the result is bitwise identical to the scalar twin — the dispatchers
+/// rely on that for the combine/bias tier (see `tensor/kernel.rs`).
+///
+/// # Safety
+/// avx2+fma verified; `dst.len() == src.len()`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy_row(dst: &mut [f32], a: f32, src: &[f32]) {
+    let n = dst.len();
+    debug_assert_eq!(src.len(), n);
+    let va = _mm256_set1_ps(a);
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let p = dst.as_mut_ptr().add(j);
+        let prod = _mm256_mul_ps(va, _mm256_loadu_ps(src.as_ptr().add(j)));
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), prod));
+        j += 8;
+    }
+    for jj in body..n {
+        dst[jj] += a * src[jj];
+    }
+}
+
+/// `dst[j] += src[j]` (bitwise identical to scalar).
+///
+/// # Safety
+/// avx2+fma verified; equal lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn add_row(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    debug_assert_eq!(src.len(), n);
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let p = dst.as_mut_ptr().add(j);
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), _mm256_loadu_ps(src.as_ptr().add(j))));
+        j += 8;
+    }
+    for jj in body..n {
+        dst[jj] += src[jj];
+    }
+}
+
+/// `dst[j] *= src[j]` (bitwise identical to scalar).
+///
+/// # Safety
+/// avx2+fma verified; equal lengths.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn mul_row(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    debug_assert_eq!(src.len(), n);
+    let body = n - n % 8;
+    let mut j = 0;
+    while j < body {
+        let p = dst.as_mut_ptr().add(j);
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), _mm256_loadu_ps(src.as_ptr().add(j))));
+        j += 8;
+    }
+    for jj in body..n {
+        dst[jj] *= src[jj];
+    }
+}

@@ -199,20 +199,29 @@ impl Csr {
     /// up/gate projection). `self` is the (pI × p) sparse residual piece,
     /// `x` the (B × p) activations, `out` (B × pI). Runs at O(B · nnz)
     /// instead of the O(B · pI · p) a restored dense weight would cost;
-    /// large batches fan out over the worker pool.
+    /// large batches fan out over the worker pool. Dispatches to the
+    /// gather-free AVX2 panel kernel or the scalar twin per
+    /// [`crate::tensor::kernel::kernel_kind`].
     pub fn matmul_nt_into(&self, x: &Matrix, out: &mut Matrix, accumulate: bool) {
-        assert_eq!(x.cols, self.cols, "csr matmul_nt dim mismatch");
-        assert_eq!(
-            (out.rows, out.cols),
-            (x.rows, self.rows),
-            "csr matmul_nt output shape"
-        );
-        if !accumulate {
-            out.data.fill(0.0);
-        }
-        if self.rows == 0 {
-            return;
-        }
+        self.matmul_nt_into_with(crate::tensor::kernel::kernel_kind(), x, out, accumulate);
+    }
+
+    /// [`Self::matmul_nt_into`] under an explicit kernel kind (tests and
+    /// benches force kinds).
+    pub fn matmul_nt_into_with(
+        &self,
+        kind: crate::tensor::KernelKind,
+        x: &Matrix,
+        out: &mut Matrix,
+        accumulate: bool,
+    ) {
+        crate::tensor::kernel::csr_matmul_nt_into_with(kind, self, x, out, accumulate);
+    }
+
+    /// Scalar SpMM twin: per batch row, dot each CSR row against the
+    /// activation row (L1-resident random access). Assumes `out` was
+    /// zero-filled or carries the accumulation seed.
+    pub(crate) fn matmul_nt_scalar(&self, x: &Matrix, out: &mut Matrix) {
         let row_kernel = |b: usize, out_row: &mut [f32]| {
             let x_row = x.row(b);
             for r in 0..self.rows {
@@ -244,11 +253,25 @@ impl Csr {
     }
 
     /// out += h @ self — the fused-forward down-projection correction
-    /// (h: B × pI, self: pI × p, out: B × p). Row-scatter form: zero
-    /// activations (ReLU) skip their whole CSR row.
+    /// (h: B × pI, self: pI × p, out: B × p). Dispatches per
+    /// [`crate::tensor::kernel::kernel_kind`].
     pub fn matmul_acc_into(&self, h: &Matrix, out: &mut Matrix) {
-        assert_eq!(h.cols, self.rows, "csr matmul_acc dim mismatch");
-        assert_eq!((out.rows, out.cols), (h.rows, self.cols), "csr matmul_acc output shape");
+        self.matmul_acc_into_with(crate::tensor::kernel::kernel_kind(), h, out);
+    }
+
+    /// [`Self::matmul_acc_into`] under an explicit kernel kind.
+    pub fn matmul_acc_into_with(
+        &self,
+        kind: crate::tensor::KernelKind,
+        h: &Matrix,
+        out: &mut Matrix,
+    ) {
+        crate::tensor::kernel::csr_matmul_acc_into_with(kind, self, h, out);
+    }
+
+    /// Scalar down-projection twin — row-scatter form: zero activations
+    /// (ReLU) skip their whole CSR row.
+    pub(crate) fn matmul_acc_scalar(&self, h: &Matrix, out: &mut Matrix) {
         for b in 0..h.rows {
             let h_row = h.row(b);
             let out_row = out.row_mut(b);
@@ -465,6 +488,81 @@ mod tests {
         for c in 0..13 {
             assert_eq!(csr.col_dense(c), m.col(c));
         }
+    }
+
+    #[test]
+    fn spmm_matches_dense_under_every_kernel() {
+        // Both SpMM ops, both kernel kinds, ragged batch sizes straddling
+        // the 8-lane SpMM tile (1, 7, 8, 9) and densities incl. empty/full.
+        use crate::tensor::kernel::{kernel_kind, KernelKind};
+        let mut kinds = vec![KernelKind::Scalar];
+        if kernel_kind() != KernelKind::Scalar {
+            kinds.push(kernel_kind());
+        }
+        let mut rng = Rng::new(20);
+        for density in [0.0, 0.05, 0.25, 1.0] {
+            let delta = sparse_random(14, 9, density, &mut rng);
+            let csr = Csr::from_dense(&delta, IndexWidth::U16);
+            for b in [1usize, 7, 8, 9] {
+                let x = Matrix::randn(b, 9, 1.0, &mut rng);
+                let want = x.matmul(&delta.transpose());
+                for &kind in &kinds {
+                    let mut got = Matrix::zeros(b, 14);
+                    csr.matmul_nt_into_with(kind, &x, &mut got, false);
+                    assert!(
+                        got.sq_dist(&want) < 1e-6 * want.frob_norm_sq().max(1.0),
+                        "{kind:?} nt d={density} b={b}: {}",
+                        got.sq_dist(&want)
+                    );
+                    let seed = Matrix::randn(b, 14, 1.0, &mut rng);
+                    let mut acc = seed.clone();
+                    csr.matmul_nt_into_with(kind, &x, &mut acc, true);
+                    assert!(acc.sq_dist(&seed.add(&want)) < 1e-6 * want.frob_norm_sq().max(1.0));
+
+                    let h = Matrix::randn(b, 14, 1.0, &mut rng);
+                    let want_acc = h.matmul(&delta);
+                    let seed2 = Matrix::randn(b, 9, 1.0, &mut rng);
+                    let mut got2 = seed2.clone();
+                    csr.matmul_acc_into_with(kind, &h, &mut got2);
+                    assert!(
+                        got2.sq_dist(&seed2.add(&want_acc)) < 1e-6 * want_acc.frob_norm_sq().max(1.0),
+                        "{kind:?} acc d={density} b={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_rows_are_batch_position_independent() {
+        // The serving bit-parity theorem for the sparse path: a batch row's
+        // result is independent of its position / batch size, under the
+        // ACTIVE kernel (whatever RESMOE_SIMD resolved), including ragged
+        // 8-lane tile tails (7 = 4 + 3).
+        let mut rng = Rng::new(21);
+        let delta = sparse_random(12, 10, 0.3, &mut rng);
+        let csr = Csr::from_dense(&delta, IndexWidth::U16);
+        let xa = Matrix::randn(4, 10, 1.0, &mut rng);
+        let xb = Matrix::randn(3, 10, 1.0, &mut rng);
+        let cat = xa.vcat(&xb);
+        let mut full = Matrix::zeros(7, 12);
+        csr.matmul_nt_into(&cat, &mut full, false);
+        let mut ya = Matrix::zeros(4, 12);
+        csr.matmul_nt_into(&xa, &mut ya, false);
+        let mut yb = Matrix::zeros(3, 12);
+        csr.matmul_nt_into(&xb, &mut yb, false);
+        assert_eq!(full.data, ya.vcat(&yb).data, "spmm_nt rows must be position-independent");
+
+        let ha = Matrix::randn(4, 12, 1.0, &mut rng);
+        let hb = Matrix::randn(3, 12, 1.0, &mut rng);
+        let hcat = ha.vcat(&hb);
+        let mut out_full = Matrix::zeros(7, 10);
+        csr.matmul_acc_into(&hcat, &mut out_full);
+        let mut oa = Matrix::zeros(4, 10);
+        csr.matmul_acc_into(&ha, &mut oa);
+        let mut ob = Matrix::zeros(3, 10);
+        csr.matmul_acc_into(&hb, &mut ob);
+        assert_eq!(out_full.data, oa.vcat(&ob).data, "spmm_acc rows must be position-independent");
     }
 
     #[test]

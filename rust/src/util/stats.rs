@@ -68,11 +68,13 @@ impl Summary {
 }
 
 /// Softmax over a slice (numerically stable; used by routers and LM eval).
+/// Dispatches through the kernel layer: max-subtract, exp, scale by the
+/// reciprocal of the sum (vectorized `exp` under AVX2, `RESMOE_SIMD=0`
+/// pins the scalar twin).
 pub fn softmax(xs: &[f32]) -> Vec<f32> {
-    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = xs.iter().map(|x| (x - max).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.iter().map(|e| e / sum).collect()
+    let mut out = xs.to_vec();
+    crate::tensor::kernel::softmax_inplace(&mut out);
+    out
 }
 
 /// log(sum(exp(xs))) — numerically stable.

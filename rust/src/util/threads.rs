@@ -204,16 +204,36 @@ pub fn parallel_row_chunks_mut<F>(data: &mut [f32], rows: usize, row_len: usize,
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
+    parallel_row_chunks_mut_aligned(data, rows, row_len, 1, f);
+}
+
+/// [`parallel_row_chunks_mut`] with **tile-granular** work splitting: chunk
+/// boundaries are rounded up to multiples of `align`, so thread boundaries
+/// coincide with microkernel row-tile edges (the SIMD GEMM passes its 6-row
+/// tile, the SpMM its 8-lane batch tile) and only the final chunk carries a
+/// ragged tail. `align = 1` reproduces the historical splitting exactly.
+/// Chunking never changes results — every row's arithmetic is independent
+/// of its chunk — this is purely about not splitting a tile across workers.
+pub fn parallel_row_chunks_mut_aligned<F>(
+    data: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    align: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
     assert_eq!(data.len(), rows * row_len);
     if rows == 0 || row_len == 0 {
         return;
     }
-    let workers = num_threads().min(rows);
+    let align = align.max(1);
+    let workers = num_threads().min(rows.div_ceil(align));
     if workers <= 1 || in_pool() {
         f(0, data);
         return;
     }
-    let chunk_rows = rows.div_ceil(workers);
+    let chunk_rows = rows.div_ceil(workers).div_ceil(align) * align;
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
     let mut rest = data;
     let mut row0 = 0usize;
@@ -320,6 +340,39 @@ mod tests {
         });
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_start_on_tile_boundaries() {
+        use std::sync::Mutex;
+        for (rows, align) in [(23usize, 6usize), (48, 6), (5, 6), (17, 8), (64, 8), (1, 8)] {
+            let row_len = 3;
+            let mut data = vec![0.0f32; rows * row_len];
+            let starts: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+            parallel_row_chunks_mut_aligned(&mut data, rows, row_len, align, |row0, chunk| {
+                starts.lock().unwrap().push((row0, chunk.len() / row_len));
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (row0 * row_len + i) as f32;
+                }
+            });
+            // Every chunk starts on a tile boundary; only the last may be
+            // ragged; the chunks tile 0..rows exactly once.
+            let mut starts = starts.into_inner().unwrap();
+            starts.sort_unstable();
+            let mut expect_next = 0usize;
+            for (i, &(row0, take)) in starts.iter().enumerate() {
+                assert_eq!(row0, expect_next, "rows={rows} align={align}");
+                assert_eq!(row0 % align, 0, "chunk start must be tile-aligned");
+                if i + 1 < starts.len() {
+                    assert_eq!(take % align, 0, "only the final chunk may be ragged");
+                }
+                expect_next = row0 + take;
+            }
+            assert_eq!(expect_next, rows);
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as f32);
+            }
         }
     }
 

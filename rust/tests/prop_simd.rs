@@ -1,0 +1,295 @@
+//! SIMD-vs-scalar kernel properties (in-tree mini-prop harness).
+//!
+//! Two tiers of guarantees, matching README §Kernels:
+//!
+//! 1. **Numerical agreement** — the AVX2 kernels may legitimately differ
+//!    from the scalar twins in final bits (FMA, lane-split reductions,
+//!    polynomial exp), but must agree within `rel-err ≤ 1e-5` over random
+//!    shapes INCLUDING ragged tails (rows/cols/batch not multiples of the
+//!    6×16 GEMM tile or the 8-lane SpMM tile).
+//! 2. **Row independence, bit-for-bit** — under whichever kernel
+//!    `RESMOE_SIMD` resolved, an output row must be bitwise independent of
+//!    the batch it rides in. This is the micro-theorem the serving parity
+//!    suites (`prop_batched_serve_matches_serial_bit_for_bit`,
+//!    `store_engine_matches_monolithic_engine_bit_for_bit`) rest on; CI
+//!    runs the whole suite under both `RESMOE_SIMD` settings so those
+//!    suites re-pin path-vs-path equality per kernel.
+
+use resmoe::moe::{ExpertArch, MoeLayer};
+use resmoe::tensor::kernel::{
+    kernel_kind, matmul_into_with, matmul_nt_into_with, matmul_tn_with, KernelKind,
+};
+use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
+use resmoe::util::prop::{check, gen, PropConfig};
+use resmoe::Rng;
+
+/// Naive f32 reference: C[i][j] = Σ_k A[i][k]·B[j][k], serial dot order.
+fn naive_nt(a: &Matrix, bt: &Matrix) -> Matrix {
+    assert_eq!(a.cols, bt.cols);
+    Matrix::from_fn(a.rows, bt.rows, |i, j| {
+        let mut acc = 0.0f32;
+        for kk in 0..a.cols {
+            acc += a.at(i, kk) * bt.at(j, kk);
+        }
+        acc
+    })
+}
+
+fn rel_close(got: &Matrix, want: &Matrix, tol: f64) -> Result<(), String> {
+    let denom = want.frob_norm_sq().max(1.0);
+    let d = got.sq_dist(want);
+    if d <= tol * tol * denom {
+        Ok(())
+    } else {
+        Err(format!("rel dist {} over {:?}", (d / denom).sqrt(), want.shape()))
+    }
+}
+
+fn both_kinds() -> Vec<KernelKind> {
+    let mut kinds = vec![KernelKind::Scalar];
+    if kernel_kind() != KernelKind::Scalar {
+        kinds.push(kernel_kind());
+    }
+    kinds
+}
+
+#[test]
+fn prop_gemm_kinds_agree_with_naive_over_ragged_shapes() {
+    check(
+        PropConfig { cases: 48, seed: 0x51D },
+        |rng| {
+            let m = gen::usize_in(rng, 1, 20);
+            let n = gen::usize_in(rng, 1, 40);
+            let k = gen::usize_in(rng, 1, 300);
+            let a = Matrix::randn(m, k, 1.0, rng);
+            let bt = Matrix::randn(n, k, 1.0, rng);
+            (a, bt)
+        },
+        |(a, bt)| {
+            let want = naive_nt(a, bt);
+            let b = bt.transpose();
+            for kind in both_kinds() {
+                let mut nt = Matrix::zeros(a.rows, bt.rows);
+                matmul_nt_into_with(kind, a, bt, &mut nt, false);
+                rel_close(&nt, &want, 1e-5).map_err(|e| format!("{kind:?} NT: {e}"))?;
+                let mut nn = Matrix::zeros(a.rows, bt.rows);
+                matmul_into_with(kind, a, &b, &mut nn, false);
+                rel_close(&nn, &want, 1e-5).map_err(|e| format!("{kind:?} NN: {e}"))?;
+                let tn = matmul_tn_with(kind, &a.transpose(), &b);
+                rel_close(&tn, &want, 1e-5).map_err(|e| format!("{kind:?} TN: {e}"))?;
+            }
+            // And the two kinds against each other (trivially true when only
+            // one kind is available).
+            let mut s = Matrix::zeros(a.rows, bt.rows);
+            matmul_nt_into_with(KernelKind::Scalar, a, bt, &mut s, false);
+            let mut v = Matrix::zeros(a.rows, bt.rows);
+            matmul_nt_into_with(kernel_kind(), a, bt, &mut v, false);
+            rel_close(&v, &s, 1e-5).map_err(|e| format!("scalar-vs-active: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_accumulate_matches_add_under_both_kinds() {
+    check(
+        PropConfig { cases: 24, seed: 0xACC },
+        |rng| {
+            let m = gen::usize_in(rng, 1, 13);
+            let n = gen::usize_in(rng, 1, 33);
+            let k = gen::usize_in(rng, 1, 64);
+            (
+                Matrix::randn(m, k, 1.0, rng),
+                Matrix::randn(n, k, 1.0, rng),
+                Matrix::randn(m, n, 1.0, rng),
+            )
+        },
+        |(a, bt, seed)| {
+            for kind in both_kinds() {
+                let mut plain = Matrix::zeros(a.rows, bt.rows);
+                matmul_nt_into_with(kind, a, bt, &mut plain, false);
+                let mut acc = seed.clone();
+                matmul_nt_into_with(kind, a, bt, &mut acc, true);
+                // acc == seed + plain EXACTLY: the kernels compute the panel
+                // sums identically and add them onto whatever C held.
+                let want = seed.add(&plain);
+                if acc != want {
+                    return Err(format!("{kind:?}: accumulate != seed + plain"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_rows_are_batch_position_independent_bitwise() {
+    // Core serving micro-theorem, under the ACTIVE kernel: concatenating
+    // requests never changes any row's bits, for every split of the batch.
+    check(
+        PropConfig { cases: 32, seed: 0xB17 },
+        |rng| {
+            let total = gen::usize_in(rng, 2, 19);
+            let split = gen::usize_in(rng, 1, total - 1);
+            let n = gen::usize_in(rng, 1, 40);
+            let k = gen::usize_in(rng, 1, 90);
+            let x = Matrix::randn(total, k, 1.0, rng);
+            let w = Matrix::randn(n, k, 1.0, rng);
+            (x, w, split)
+        },
+        |(x, w, split)| {
+            let xa = x.slice_rows(0, *split);
+            let xb = x.slice_rows(*split, x.rows);
+            let mut full = Matrix::zeros(x.rows, w.rows);
+            matmul_nt_into_with(kernel_kind(), x, w, &mut full, false);
+            let mut ya = Matrix::zeros(xa.rows, w.rows);
+            matmul_nt_into_with(kernel_kind(), &xa, w, &mut ya, false);
+            let mut yb = Matrix::zeros(xb.rows, w.rows);
+            matmul_nt_into_with(kernel_kind(), &xb, w, &mut yb, false);
+            if full.data != ya.vcat(&yb).data {
+                return Err(format!(
+                    "rows depend on batch position (split {split} of {})",
+                    x.rows
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csr_spmm_kinds_agree_and_rows_independent() {
+    check(
+        PropConfig { cases: 32, seed: 0xC54 },
+        |rng| {
+            let pi = gen::usize_in(rng, 1, 24);
+            let p = gen::usize_in(rng, 1, 20);
+            let b = gen::usize_in(rng, 1, 18);
+            let density = [0.0, 0.05, 0.25, 0.5, 1.0][rng.below(5)];
+            let delta = Matrix::from_fn(pi, p, |_, _| {
+                if rng.uniform() < density {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            });
+            let x = Matrix::randn(b, p, 1.0, rng);
+            let h = Matrix::randn(b, pi, 1.0, rng);
+            (delta, x, h)
+        },
+        |(delta, x, h)| {
+            let csr = Csr::from_dense(delta, IndexWidth::U16);
+            let want_nt = naive_nt(x, delta);
+            let want_acc = h.matmul(delta);
+            for kind in both_kinds() {
+                let mut nt = Matrix::zeros(x.rows, delta.rows);
+                csr.matmul_nt_into_with(kind, x, &mut nt, false);
+                rel_close(&nt, &want_nt, 1e-5).map_err(|e| format!("{kind:?} spmm_nt: {e}"))?;
+                let mut acc = Matrix::zeros(h.rows, delta.cols);
+                csr.matmul_acc_into_with(kind, h, &mut acc);
+                rel_close(&acc, &want_acc, 1e-5).map_err(|e| format!("{kind:?} spmm_acc: {e}"))?;
+            }
+            // Bitwise row independence under the active kernel.
+            if x.rows >= 2 {
+                let split = x.rows / 2;
+                let (xa, xb) = (x.slice_rows(0, split), x.slice_rows(split, x.rows));
+                let mut full = Matrix::zeros(x.rows, delta.rows);
+                csr.matmul_nt_into(x, &mut full, false);
+                let mut ya = Matrix::zeros(xa.rows, delta.rows);
+                csr.matmul_nt_into(&xa, &mut ya, false);
+                let mut yb = Matrix::zeros(xb.rows, delta.rows);
+                csr.matmul_nt_into(&xb, &mut yb, false);
+                if full.data != ya.vcat(&yb).data {
+                    return Err("spmm rows depend on batch position".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_moe_layer_forward_is_concat_invariant_under_active_kernel() {
+    // The composed statement: routing + expert matmuls (dense kernels) +
+    // activations (vexp tier) + weighted combine, over a row-concatenated
+    // multi-request batch, equals each request's own forward EXACTLY —
+    // whichever kernel this process resolved. This is the layer-level fact
+    // the continuous-batching and store parity suites build on.
+    check(
+        PropConfig { cases: 16, seed: 0xCA7 },
+        |rng| {
+            let arch = if rng.below(2) == 0 { ExpertArch::Relu } else { ExpertArch::SwiGlu };
+            let p = 4 + rng.below(8);
+            let pi = 6 + rng.below(12);
+            let n = 2 + rng.below(4);
+            let top_k = 1 + rng.below(n.min(2));
+            let layer = MoeLayer::random(arch, p, pi, n, top_k, rng.below(2) == 0, rng.below(2) == 0, rng);
+            let ra = 1 + rng.below(6);
+            let rb = 1 + rng.below(6);
+            let xa = Matrix::randn(ra, p, 1.0, rng);
+            let xb = Matrix::randn(rb, p, 1.0, rng);
+            (layer, xa, xb)
+        },
+        |(layer, xa, xb)| {
+            let cat = xa.vcat(xb);
+            let y_cat = layer.forward(&cat, None);
+            let ya = layer.forward(xa, None);
+            let yb = layer.forward(xb, None);
+            if y_cat.data != ya.vcat(&yb).data {
+                return Err(format!(
+                    "layer forward not concat-invariant under {:?}",
+                    kernel_kind()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_elementwise_tier_agrees_with_scalar_reference() {
+    check(
+        PropConfig { cases: 32, seed: 0xE1E },
+        |rng| {
+            let n = gen::usize_in(rng, 1, 70);
+            let xs = gen::f32_vec(rng, n, 3.0);
+            let gain = gen::nonzero_f32_vec(rng, n, 1.0);
+            (xs, gain)
+        },
+        |(xs, gain)| {
+            // softmax: dispatched vs pure-scalar reference.
+            let got = resmoe::util::stats::softmax(xs);
+            let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = xs.iter().map(|x| (x - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for (g, e) in got.iter().zip(&exps) {
+                let want = e / sum;
+                if (g - want).abs() > 1e-5 * want.abs().max(1e-6) {
+                    return Err(format!("softmax: {g} vs {want}"));
+                }
+            }
+            // rmsnorm row.
+            let mut out = vec![0.0f32; xs.len()];
+            resmoe::moe::transformer::rmsnorm(xs, gain, &mut out);
+            let ms: f32 = xs.iter().map(|v| v * v).sum::<f32>() / xs.len() as f32;
+            let inv = 1.0 / (ms + 1e-6).sqrt();
+            for ((o, &v), &g) in out.iter().zip(xs).zip(gain) {
+                let want = v * inv * g;
+                if (o - want).abs() > 1e-5 * want.abs().max(1e-5) {
+                    return Err(format!("rmsnorm: {o} vs {want}"));
+                }
+            }
+            // silu·gate over a matrix row (the SwiGLU combine).
+            let mut h = Matrix::from_vec(1, xs.len(), xs.clone());
+            let g = Matrix::from_vec(1, gain.len(), gain.clone());
+            resmoe::tensor::kernel::silu_mul(&mut h, &g);
+            for (c, (&x, &gv)) in xs.iter().zip(gain.iter()).enumerate() {
+                let want = resmoe::tensor::kernel::silu(x) * gv;
+                let got = h.at(0, c);
+                if (got - want).abs() > 1e-5 * want.abs().max(1e-5) {
+                    return Err(format!("silu_mul col {c}: {got} vs {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -8,8 +8,14 @@ cd "$(dirname "$0")/.."
 echo "== build (release) =="
 cargo build --release
 
-echo "== tests =="
+echo "== tests (runtime kernel: AVX2 where the CPU has it) =="
 cargo test -q
+
+echo "== tests (scalar twin, RESMOE_SIMD=0) =="
+# The SIMD kill-switch pass: the portable scalar kernels must stay green,
+# and the serving bit-parity suites (batched==serial, store==monolithic,
+# concurrent==serial) re-pin under BOTH kernels across the two runs.
+RESMOE_SIMD=0 cargo test -q
 
 echo "== tests (serial kernels, RESMOE_THREADS=1) =="
 RESMOE_THREADS=1 cargo test -q --lib tensor
@@ -33,5 +39,8 @@ RESMOE_BATCH=4 RESMOE_LINGER_US=2000 cargo run --release --quiet -- serve-packed
 
 echo "== batching scheduler/parity simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_batching.py
+
+echo "== SIMD kernel numerics simulation (no-toolchain fallback validator) =="
+python3 scripts/sim_simd.py
 
 echo "CI OK"

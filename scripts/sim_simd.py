@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Seeded validation harness for PR 5 (SIMD microkernel layer).
+
+The container has no Rust toolchain, so this script validates the three
+load-bearing numerical claims of `rust/src/tensor/{kernel,simd}.rs` against
+faithful Python ports in exact float32 arithmetic (FMA emulated through
+float64 intermediates, which is exact for f32 products):
+
+1. **vexp accuracy** — the Cephes-style polynomial `exp` used by the SIMD
+   silu/softmax tier: max relative error vs the true exp over the clamped
+   domain must be < 1e-6 (the Rust props then allow 1e-5 end to end), with
+   exact values at 0 and finite saturation at the clamp edges.
+
+2. **GEMM driver blocking** — the packed-panel k-panel/j-tile/zero-padded
+   micropanel index structure of the AVX2 `matmul_nt` driver, replayed
+   per-element in f32: must match numpy within 1e-5 relative across ragged
+   shapes that straddle every tile edge (6-row, 16-col, 64-NC, 256-KC).
+
+3. **Row independence, bit for bit** — the per-element fold of the SIMD
+   kernels depends only on (k-extent, column): replaying the same structure
+   over concat(A1, A2) and over the pieces must agree EXACTLY (f32 bit
+   equality), including ragged row tails (7 = 6+1 vs 4+3 splits) and the
+   8-lane CSR SpMM batch tiles. This is the micro-theorem behind
+   batched==serial / store==monolithic parity under the SIMD kernels.
+"""
+
+import numpy as np
+
+f32 = np.float32
+f64 = np.float64
+
+KC, NC, NR = 256, 64, 16  # k-panel, packed-panel width, micropanel lanes
+
+
+def fma(a, b, c):
+    """round_f32(a*b + c): f32 FMA emulated via f64 (product is exact)."""
+    return f32(f64(a) * f64(b) + f64(c))
+
+
+# ----------------------------------------------------------------- 1. vexp
+
+LOG2E = f32(1.4426950408889634)
+LN2_HI = f32(0.693359375)
+LN2_LO = f32(-2.12194440e-4)
+POLY = [f32(c) for c in (1.98756915e-4, 1.39819995e-3, 8.3334519e-3,
+                         4.1665796e-2, 1.66666655e-1, 5.00000012e-1)]
+
+
+def vexp(x):
+    """Exact f32 replay of simd::vexp (vectorized over a numpy array)."""
+    x = np.clip(f32(x), f32(-87.33655), f32(88.37626))
+    n = np.rint(f64(f32(x * LOG2E))).astype(np.int32)  # cvtps_epi32: round-even
+    fx = f32(n)
+    r = fma(-fx, LN2_HI, x)
+    r = fma(-fx, LN2_LO, r)
+    r2 = f32(r * r)
+    p = np.full_like(r, POLY[0])
+    for c in POLY[1:]:
+        p = fma(p, r, np.full_like(r, c))
+    y = f32(fma(p, r2, r) + f32(1.0))
+    pow2 = np.ascontiguousarray((n.astype(np.int32) + 127) << 23).view(np.float32)
+    return f32(y * pow2)
+
+
+def check_vexp():
+    xs = f32(np.linspace(-87.0, 88.0, 2_000_001))
+    got = vexp(xs).astype(f64)
+    want = np.exp(xs.astype(f64))
+    rel = np.abs(got - want) / want
+    assert rel.max() < 1e-6, f"vexp max rel err {rel.max():.3e}"
+    assert vexp(f32(0.0)) == f32(1.0), "exp(0) must be exactly 1"
+    assert np.isfinite(vexp(f32(1e30))), "upper clamp must stay finite"
+    assert vexp(f32(-1e30)) > 0, "lower clamp must stay positive"
+    # silu at extremes through this exp: finite, saturating.
+    for x in (f32(-100.0), f32(100.0)):
+        s = f32(x / (f32(1.0) + vexp(f32(-x))))
+        assert np.isfinite(s), f"silu({x}) = {s}"
+    print(f"  [1] vexp: max rel err {rel.max():.2e} over [-87, 88] "
+          f"({len(xs):,} points), exp(0)==1, clamps finite")
+
+
+# ------------------------------------------- 2./3. GEMM NT panel structure
+
+
+def gemm_nt_sim(a, bt):
+    """Per-element replay of the AVX2 gemm_nt fold: k-panels of KC in
+    order, FMA chain per panel, one add into C per panel. The j/row tiling
+    only selects WHICH elements a microkernel instance computes — each
+    lane's arithmetic is this fold — so simulating per element is faithful.
+    """
+    m, k = a.shape
+    n = bt.shape[0]
+    c = np.zeros((m, n), dtype=f32)
+    for i in range(m):
+        for j in range(n):
+            total = f32(0.0)
+            for kb in range(0, max(k, 1), KC):
+                kw = min(KC, k - kb)
+                acc = f32(0.0)
+                for kk in range(kw):
+                    acc = fma(a[i, kb + kk], bt[j, kb + kk], acc)
+                total = f32(total + acc)
+            c[i, j] = total
+    return c
+
+
+def spmm_nt_sim(values, col_idx, row_ptr, x):
+    """Per-element replay of the CSR SpMM tile fold (strict index order,
+    one add into out). Lanes are batch rows; padding lanes are zeros and
+    never feed other lanes."""
+    b, n_rows = x.shape[0], len(row_ptr) - 1
+    out = np.zeros((b, n_rows), dtype=f32)
+    for bi in range(b):
+        for r in range(n_rows):
+            lo, hi = row_ptr[r], row_ptr[r + 1]
+            if lo == hi:
+                continue
+            acc = f32(0.0)
+            for i in range(lo, hi):
+                acc = fma(values[i], x[bi, col_idx[i]], acc)
+            out[bi, r] = f32(out[bi, r] + acc)
+    return out
+
+
+def check_gemm_blocking():
+    rng = np.random.default_rng(0)
+    shapes = [(1, 1, 1), (5, 15, 31), (6, 16, 64), (7, 17, 65),
+              (3, 63, 255), (4, 65, 257), (2, 130, 300), (13, 40, 256)]
+    for m, n, k in shapes:
+        a = f32(rng.standard_normal((m, k)))
+        bt = f32(rng.standard_normal((n, k)))
+        got = gemm_nt_sim(a, bt).astype(f64)
+        want = a.astype(f64) @ bt.astype(f64).T
+        denom = max(np.linalg.norm(want), 1.0)
+        err = np.linalg.norm(got - want) / denom
+        assert err < 1e-5, f"gemm_nt sim {m}x{k}@({n}x{k})^T rel err {err:.2e}"
+    print(f"  [2] gemm_nt panel fold matches numpy over {len(shapes)} ragged shapes")
+
+
+def check_row_independence():
+    rng = np.random.default_rng(1)
+    # GEMM: 7 rows = 6+1 microkernel split vs 4+3 request split.
+    bt = f32(rng.standard_normal((37, 29)))
+    x = f32(rng.standard_normal((7, 29)))
+    full = gemm_nt_sim(x, bt)
+    for split in (1, 2, 3, 4, 5, 6):
+        parts = np.vstack([gemm_nt_sim(x[:split], bt), gemm_nt_sim(x[split:], bt)])
+        assert (full.view(np.uint32) == parts.view(np.uint32)).all(), \
+            f"gemm rows depend on batch split at {split}"
+    # CSR: ragged 8-lane tiles (9 rows = 8+1 vs 5+4).
+    dense = f32(rng.standard_normal((12, 10)))
+    dense[f32(rng.random((12, 10))) > 0.3] = 0
+    values, col_idx, row_ptr = [], [], [0]
+    for r in range(12):
+        for c in range(10):
+            if dense[r, c] != 0:
+                values.append(dense[r, c])
+                col_idx.append(c)
+        row_ptr.append(len(values))
+    xb = f32(rng.standard_normal((9, 10)))
+    sfull = spmm_nt_sim(values, col_idx, row_ptr, xb)
+    for split in (1, 4, 5, 8):
+        parts = np.vstack([spmm_nt_sim(values, col_idx, row_ptr, xb[:split]),
+                           spmm_nt_sim(values, col_idx, row_ptr, xb[split:])])
+        assert (sfull.view(np.uint32) == parts.view(np.uint32)).all(), \
+            f"spmm rows depend on batch split at {split}"
+    # Elementwise tier: vexp is per-element, so any row split is trivially
+    # bit-stable as long as tails are padded (the Rust rows pad to 8 lanes
+    # with values that are computed then DISCARDED); emulate a 13-wide row
+    # processed as 8 + padded-5 vs direct.
+    row = f32(rng.standard_normal(13) * 3)
+    direct = vexp(row)
+    padded_tail = vexp(np.concatenate([row[8:], np.zeros(3, dtype=f32)]))[:5]
+    tiled = np.concatenate([vexp(row[:8]), padded_tail])
+    assert (direct.view(np.uint32) == tiled.view(np.uint32)).all(), \
+        "padded-tail vexp must equal full-width vexp per element"
+    print("  [3] bit-exact row independence: gemm splits 1..6 of 7, "
+          "spmm splits over 8-lane tiles, padded elementwise tails")
+
+
+def main():
+    print("sim_simd: validating SIMD kernel numerics (no-toolchain fallback)")
+    check_vexp()
+    check_gemm_blocking()
+    check_row_independence()
+    print("sim_simd OK")
+
+
+if __name__ == "__main__":
+    main()
