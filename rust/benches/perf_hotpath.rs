@@ -12,10 +12,10 @@ use resmoe::compress::{compress_model, CompressCtx, Compressor, ResMoE};
 use resmoe::coordinator::{Engine, ExpertCache, Request};
 use resmoe::moe::model_io::{load_model, save_model_compressed};
 use resmoe::moe::{ExpertArch, Model, ModelConfig, MoeLayer};
-use resmoe::store::{pack_compressed_model, ExpertStore};
+use resmoe::store::{pack_compressed_model, quantize_layer, ExpertStore};
 use resmoe::tensor::kernel::{kernel_kind, kernel_label, matmul_nt_into_with, KernelKind};
 use resmoe::tensor::matrix::matmul_nt_into;
-use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
+use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix, QuantMatrix};
 use resmoe::coordinator::Response;
 use resmoe::util::bench::{BenchRunner, Table};
 use resmoe::util::stats::percentile;
@@ -476,6 +476,117 @@ fn main() {
         ]);
     }
 
+    // --- int8 quant sweep → BENCH_quant.json: f32 vs int8
+    // dequant-then-GEMM (materialize the f32 matrix each call, then the
+    // plain kernel) vs int8 dequant-fused (one kernel pass over codes +
+    // scales), under the scalar twin and the runtime kernel. Two rows per
+    // shape x kernel: GFLOP/s, and shard GB/s — the bytes actually
+    // streamed from the resident representation (f32: n·k·4; int8:
+    // n·k + n·4), which is the serving-side win. Then the quantized
+    // artifact's warm/thrash 96-tok serve against the f32 artifact
+    // (tok/s + resident expert bytes). EXPERIMENTS.md §Quantization.
+    let mut quant_table = Table::new(
+        &format!("Int8 quant sweep (runtime kernel: {})", kernel_label()),
+        &["bench", "config", "metric", "f32", "int8 dq->gemm", "int8 fused", "fused/dq"],
+    );
+    for &(label, m, n, k) in &[
+        ("up-proj prefill", 96usize, 224usize, 64usize),
+        ("down-proj prefill", 96, 64, 224),
+        ("up-proj 8-tok", 8, 224, 64),
+        ("decode 1-tok", 1, 224, 64),
+        ("lm_head 96-tok", 96, 256, 64),
+        ("square 256", 256, 256, 256),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let q = QuantMatrix::quantize(&bt);
+        let dq0 = q.to_dense(); // the f32 baseline serves the SAME values
+        let mut out = Matrix::zeros(m, n);
+        let flops = 2.0 * (m * n * k) as f64;
+        let reps = ((5e7 / flops) as usize).clamp(1, 2000) * if fast { 1 } else { 4 };
+        for &(kname, kind) in &[("scalar", KernelKind::Scalar), (kernel_label(), kernel_kind())] {
+            let secs_f32 = time_best(&mut || {
+                for _ in 0..reps {
+                    matmul_nt_into_with(kind, &a, &dq0, &mut out, false);
+                    std::hint::black_box(&out);
+                }
+            });
+            let secs_dq = time_best(&mut || {
+                for _ in 0..reps {
+                    let dq = q.to_dense();
+                    matmul_nt_into_with(kind, &a, &dq, &mut out, false);
+                    std::hint::black_box(&out);
+                }
+            });
+            let secs_fused = time_best(&mut || {
+                for _ in 0..reps {
+                    q.matmul_nt_into_with(kind, &a, &mut out, false);
+                    std::hint::black_box(&out);
+                }
+            });
+            let gf = |s: f64| flops * reps as f64 / s.max(1e-12) / 1e9;
+            quant_table.row(vec![
+                "gemm_nt".into(),
+                format!("{label} {m}x{k}@({n}x{k})^T {kname}"),
+                "GFLOP/s".into(),
+                format!("{:.2}", gf(secs_f32)),
+                format!("{:.2}", gf(secs_dq)),
+                format!("{:.2}", gf(secs_fused)),
+                format!("{:.2}x", secs_dq / secs_fused.max(1e-12)),
+            ]);
+            let gbs = |bytes: usize, s: f64| bytes as f64 * reps as f64 / s.max(1e-12) / 1e9;
+            let q_bytes = n * k + n * 4;
+            quant_table.row(vec![
+                "gemm_nt".into(),
+                format!("{label} {m}x{k}@({n}x{k})^T {kname}"),
+                "shard GB/s".into(),
+                format!("{:.2}", gbs(n * k * 4, secs_f32)),
+                format!("{:.2}", gbs(q_bytes, secs_dq)),
+                format!("{:.2}", gbs(q_bytes, secs_fused)),
+                "-".into(),
+            ]);
+        }
+    }
+    // Quantized artifact serve mix: same model packed with int8 residual
+    // shards, served warm (roomy budget) and thrashed, vs the f32 RMES.
+    // Resident bytes count skeletons + restored dense + paged shards after
+    // the first scored batch; the quantized column is the int8 tier's
+    // footprint win while the cost model keeps cold shards paged.
+    let rmes_q8 = cold_dir.join("cold-q8.rmes");
+    let qlayers: Vec<_> = cm.layers.iter().map(|(b, l)| (*b, quantize_layer(l))).collect();
+    pack_compressed_model(&model, &qlayers, 0.25, &rmes_q8).expect("pack q8 rmes");
+    for &(bname, budget) in &[("warm", usize::MAX), ("thrash", thrash_budget)] {
+        let mut cells: Vec<(f64, usize)> = Vec::new();
+        for path in [&rmes, &rmes_q8] {
+            let mut e = Engine::from_store(path, budget).expect("open rmes");
+            e.disable_prefetch();
+            e.handle(&Request::Score { tokens: tokens.clone() }); // page in
+            let secs = time_best(&mut || {
+                std::hint::black_box(e.handle(&Request::Score { tokens: tokens.clone() }));
+            });
+            let (skel, dense, paged) = e.resident_breakdown().unwrap();
+            cells.push((96.0 / secs.max(1e-9), skel + dense + paged));
+        }
+        quant_table.row(vec![
+            "serve".into(),
+            format!("{bname} 96-tok score ({})", kernel_label()),
+            "tok/s".into(),
+            format!("{:.0}", cells[0].0),
+            "-".into(),
+            format!("{:.0}", cells[1].0),
+            "-".into(),
+        ]);
+        quant_table.row(vec![
+            "serve".into(),
+            format!("{bname} 96-tok score"),
+            "resident expert bytes".into(),
+            format!("{}", cells[0].1),
+            "-".into(),
+            format!("{}", cells[1].1),
+            "-".into(),
+        ]);
+    }
+
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);
@@ -494,6 +605,8 @@ fn main() {
     spmm_table.save_json("BENCH_spmm_density_sweep");
     simd_table.print();
     simd_table.save_json("BENCH_simd");
+    quant_table.print();
+    quant_table.save_json("BENCH_quant");
     cold_table.print();
     cold_table.save_json("BENCH_coldstart");
     conc_table.print();

@@ -23,7 +23,7 @@ use crate::moe::{ExpertArch, ExpertWeights, MoeLayer};
 use crate::tensor::kernel;
 use crate::tensor::matrix::{matmul_acc_into, matmul_nt_into};
 use crate::tensor::sparse::IndexWidth;
-use crate::tensor::{Csr, Matrix, Svd};
+use crate::tensor::{Csr, Matrix, QuantCsr, QuantMatrix, Svd};
 use crate::util::bytes::{ByteReader, PutLe};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -39,6 +39,99 @@ pub enum ResidualRepr {
     SparseCsr(Csr),
     /// Truncated-SVD factors (App. A.4).
     LowRank(Svd),
+    /// Int8-quantized variant of any of the above (PR 6): values carry
+    /// per-row symmetric scales, served through dequant-fused kernels.
+    Quantized(QuantizedRepr),
+}
+
+/// The int8 (symmetric, per-row scale) form of a residual. The barycenter,
+/// biases, and SVD singular values stay f32 — only the bulk value arrays
+/// (dense entries, CSR values, U/Vᵀ factors) drop to one byte per entry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantizedRepr {
+    Dense(QuantMatrix),
+    Csr(QuantCsr),
+    LowRank { u: QuantMatrix, s: Vec<f32>, vt: QuantMatrix },
+}
+
+impl QuantizedRepr {
+    /// Dequantize to a dense f32 matrix — the reference the dequant-fused
+    /// serve kernels match bitwise.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            QuantizedRepr::Dense(q) => q.to_dense(),
+            QuantizedRepr::Csr(qc) => qc.to_csr().to_dense(),
+            QuantizedRepr::LowRank { u, s, vt } => {
+                Svd { u: u.to_dense(), s: s.clone(), vt: vt.to_dense() }.reconstruct()
+            }
+        }
+    }
+
+    /// Stored value-entry count (same as the f32 repr it quantizes).
+    pub fn n_params(&self) -> usize {
+        match self {
+            QuantizedRepr::Dense(q) => q.n_params(),
+            QuantizedRepr::Csr(qc) => qc.n_params(),
+            QuantizedRepr::LowRank { u, s, vt } => u.n_params() + s.len() + vt.n_params(),
+        }
+    }
+
+    /// Bytes occupied (1 per code + per-row f32 scales + structural
+    /// overhead for CSR indices / f32 singular values).
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            QuantizedRepr::Dense(q) => q.memory_bytes(),
+            QuantizedRepr::Csr(qc) => qc.memory_bytes(),
+            QuantizedRepr::LowRank { u, s, vt } => {
+                u.memory_bytes() + s.len() * 4 + vt.memory_bytes()
+            }
+        }
+    }
+
+    /// Design-matrix shape of the residual this quantizes.
+    pub fn design_shape(&self) -> (usize, usize) {
+        match self {
+            QuantizedRepr::Dense(q) => (q.rows, q.cols),
+            QuantizedRepr::Csr(qc) => (qc.rows, qc.cols),
+            QuantizedRepr::LowRank { u, vt, .. } => (u.rows, vt.cols),
+        }
+    }
+
+    /// Sound per-element bound on |dequantized − original f32 residual|.
+    ///
+    /// Dense/CSR: directly the `0.5·max_scale` bound of the value array.
+    /// Low-rank: the reconstruction `Σ_t s_t·u[·,t]·vt[t,·]` compounds the
+    /// factor errors; with `δu = 0.5·max_r scale_u[r]`, `δv_t =
+    /// 0.5·scale_vt[t]`, and per-component maxima taken over the
+    /// *dequantized* factors inflated by their own δ (≥ the original
+    /// maxima), every element's error is within
+    /// `Σ_t |s_t|·(umax_t·δv_t + δu·(vmax_t + δv_t))`, accumulated in f64.
+    pub fn abs_error_bound(&self) -> f32 {
+        match self {
+            QuantizedRepr::Dense(q) => q.abs_error_bound(),
+            QuantizedRepr::Csr(qc) => qc.abs_error_bound(),
+            QuantizedRepr::LowRank { u, s, vt } => {
+                let r = s.len();
+                let du = 0.5 * u.scales.iter().cloned().fold(0.0f32, f32::max);
+                let mut total = 0.0f64;
+                for t in 0..r {
+                    let dv = 0.5 * vt.scales[t];
+                    let umax = (0..u.rows)
+                        .map(|i| (u.data[i * u.cols + t].unsigned_abs() as f32) * u.scales[i])
+                        .fold(0.0f32, f32::max)
+                        + du;
+                    let vmax = vt.data[t * vt.cols..(t + 1) * vt.cols]
+                        .iter()
+                        .map(|&q| (q.unsigned_abs() as f32) * vt.scales[t])
+                        .fold(0.0f32, f32::max)
+                        + dv;
+                    total += s[t].abs() as f64
+                        * (umax as f64 * dv as f64 + du as f64 * (vmax as f64 + dv as f64));
+                }
+                total as f32 * crate::tensor::quant::QUANT_BOUND_SLACK
+            }
+        }
+    }
 }
 
 impl ResidualRepr {
@@ -48,6 +141,7 @@ impl ResidualRepr {
             ResidualRepr::Dense(m) => m.clone(),
             ResidualRepr::SparseCsr(c) => c.to_dense(),
             ResidualRepr::LowRank(s) => s.reconstruct(),
+            ResidualRepr::Quantized(q) => q.to_dense(),
         }
     }
 
@@ -58,6 +152,7 @@ impl ResidualRepr {
             ResidualRepr::Dense(m) => dense.add_assign(m),
             ResidualRepr::SparseCsr(c) => c.add_to_dense(dense),
             ResidualRepr::LowRank(s) => dense.add_assign(&s.reconstruct()),
+            ResidualRepr::Quantized(q) => dense.add_assign(&q.to_dense()),
         }
     }
 
@@ -67,16 +162,37 @@ impl ResidualRepr {
             ResidualRepr::Dense(m) => m.n_params(),
             ResidualRepr::SparseCsr(c) => c.nnz(),
             ResidualRepr::LowRank(s) => s.n_params(),
+            ResidualRepr::Quantized(q) => q.n_params(),
         }
     }
 
     /// Bytes the representation occupies (f32 values; sparse index overhead
-    /// per its configured width).
+    /// per its configured width; int8 + per-row scales when quantized).
     pub fn memory_bytes(&self) -> usize {
         match self {
             ResidualRepr::Dense(m) => m.n_params() * 4,
             ResidualRepr::SparseCsr(c) => c.memory_bytes(),
             ResidualRepr::LowRank(s) => s.n_params() * 4,
+            ResidualRepr::Quantized(q) => q.memory_bytes(),
+        }
+    }
+
+    /// The int8 form of this representation (idempotent). Dense entries,
+    /// CSR values, and SVD U/Vᵀ factors quantize; singular values stay f32.
+    pub fn quantized(&self) -> ResidualRepr {
+        match self {
+            ResidualRepr::Dense(m) => {
+                ResidualRepr::Quantized(QuantizedRepr::Dense(QuantMatrix::quantize(m)))
+            }
+            ResidualRepr::SparseCsr(c) => {
+                ResidualRepr::Quantized(QuantizedRepr::Csr(QuantCsr::quantize(c)))
+            }
+            ResidualRepr::LowRank(s) => ResidualRepr::Quantized(QuantizedRepr::LowRank {
+                u: QuantMatrix::quantize(&s.u),
+                s: s.s.clone(),
+                vt: QuantMatrix::quantize(&s.vt),
+            }),
+            q @ ResidualRepr::Quantized(_) => q.clone(),
         }
     }
 }
@@ -132,6 +248,22 @@ fn index_width_from_tag(t: u8) -> Result<IndexWidth> {
     }
 }
 
+fn encode_qmatrix(q: &QuantMatrix, out: &mut Vec<u8>) {
+    out.put_u32(q.rows as u32);
+    out.put_u32(q.cols as u32);
+    out.put_f32s(&q.scales);
+    out.put_i8s(&q.data);
+}
+
+fn decode_qmatrix(r: &mut ByteReader) -> Result<QuantMatrix> {
+    let rows = r.len()?;
+    let cols = r.len()?;
+    let n = rows.checked_mul(cols).ok_or_else(|| anyhow::anyhow!("qmatrix dims overflow"))?;
+    let scales = r.f32s(rows)?;
+    let data = r.i8s(n)?;
+    Ok(QuantMatrix { rows, cols, data, scales })
+}
+
 impl ResidualRepr {
     /// Stable residual-kind name used in the store's JSON index.
     pub fn kind_name(&self) -> &'static str {
@@ -139,6 +271,9 @@ impl ResidualRepr {
             ResidualRepr::Dense(_) => "dense",
             ResidualRepr::SparseCsr(_) => "csr",
             ResidualRepr::LowRank(_) => "svd",
+            ResidualRepr::Quantized(QuantizedRepr::Dense(_)) => "q8-dense",
+            ResidualRepr::Quantized(QuantizedRepr::Csr(_)) => "q8-csr",
+            ResidualRepr::Quantized(QuantizedRepr::LowRank { .. }) => "q8-svd",
         }
     }
 
@@ -165,6 +300,33 @@ impl ResidualRepr {
                 out.put_f32s(&s.s);
                 encode_matrix(&s.u, out);
                 encode_matrix(&s.vt, out);
+            }
+            ResidualRepr::Quantized(q) => {
+                out.put_u8(3);
+                match q {
+                    QuantizedRepr::Dense(qm) => {
+                        out.put_u8(0);
+                        encode_qmatrix(qm, out);
+                    }
+                    QuantizedRepr::Csr(qc) => {
+                        out.put_u8(1);
+                        out.put_u32(qc.rows as u32);
+                        out.put_u32(qc.cols as u32);
+                        out.put_u8(index_width_tag(qc.index_width));
+                        out.put_u32(qc.values.len() as u32);
+                        out.put_u32s(&qc.row_ptr);
+                        out.put_u32s(&qc.col_idx);
+                        out.put_f32s(&qc.scales);
+                        out.put_i8s(&qc.values);
+                    }
+                    QuantizedRepr::LowRank { u, s, vt } => {
+                        out.put_u8(2);
+                        out.put_u32(s.len() as u32);
+                        out.put_f32s(s);
+                        encode_qmatrix(u, out);
+                        encode_qmatrix(vt, out);
+                    }
+                }
             }
         }
     }
@@ -202,6 +364,48 @@ impl ResidualRepr {
                 }
                 Ok(ResidualRepr::LowRank(Svd { u, s, vt }))
             }
+            3 => match r.u8()? {
+                0 => Ok(ResidualRepr::Quantized(QuantizedRepr::Dense(decode_qmatrix(r)?))),
+                1 => {
+                    let rows = r.len()?;
+                    let cols = r.len()?;
+                    let index_width = index_width_from_tag(r.u8()?)?;
+                    let nnz = r.len()?;
+                    let row_ptr = r.u32s(rows + 1)?;
+                    if row_ptr.first().copied() != Some(0)
+                        || row_ptr.last().copied() != Some(nnz as u32)
+                        || row_ptr.windows(2).any(|w| w[0] > w[1])
+                    {
+                        bail!("q8-csr shard: row_ptr not a monotone 0..={nnz} prefix scan");
+                    }
+                    let col_idx = r.u32s(nnz)?;
+                    if col_idx.iter().any(|&c| c as usize >= cols) {
+                        bail!("q8-csr shard: column index out of range (cols {cols})");
+                    }
+                    let scales = r.f32s(rows)?;
+                    let values = r.i8s(nnz)?;
+                    Ok(ResidualRepr::Quantized(QuantizedRepr::Csr(QuantCsr {
+                        rows,
+                        cols,
+                        row_ptr,
+                        col_idx,
+                        values,
+                        scales,
+                        index_width,
+                    })))
+                }
+                2 => {
+                    let rank = r.len()?;
+                    let s = r.f32s(rank)?;
+                    let u = decode_qmatrix(r)?;
+                    let vt = decode_qmatrix(r)?;
+                    if u.cols != rank || vt.rows != rank {
+                        bail!("q8-svd shard: factor dims disagree with rank {rank}");
+                    }
+                    Ok(ResidualRepr::Quantized(QuantizedRepr::LowRank { u, s, vt }))
+                }
+                other => bail!("bad quantized residual subtag {other}"),
+            },
             other => bail!("bad residual-kind tag {other}"),
         }
     }
@@ -212,6 +416,7 @@ impl ResidualRepr {
             ResidualRepr::Dense(m) => (m.rows, m.cols),
             ResidualRepr::SparseCsr(c) => (c.rows, c.cols),
             ResidualRepr::LowRank(s) => (s.u.rows, s.vt.cols),
+            ResidualRepr::Quantized(q) => q.design_shape(),
         }
     }
 }
@@ -428,6 +633,13 @@ pub enum FusedPiece {
     LowRank { u: Arc<Matrix>, s: Arc<Vec<f32>>, vt: Matrix },
     /// Dense slice (Dense residual reprs / merge baselines).
     Dense(Matrix),
+    /// Int8 CSR slice, served through the dequant-fused SpMM kernels.
+    QuantSparse(QuantCsr),
+    /// Int8 low-rank factors (singular values stay f32); same Arc-sharing
+    /// as [`FusedPiece::LowRank`].
+    QuantLowRank { u: Arc<QuantMatrix>, s: Arc<Vec<f32>>, vt: QuantMatrix },
+    /// Int8 dense slice, served through the dequant-fused GEMM kernels.
+    QuantDense(QuantMatrix),
 }
 
 impl FusedPiece {
@@ -455,6 +667,32 @@ impl FusedPiece {
         FusedPiece::Dense(m.slice_cols(lo, hi))
     }
 
+    fn from_qcsr(c: &QuantCsr, lo: usize, hi: usize) -> FusedPiece {
+        let s = c.slice_cols(lo, hi);
+        if s.nnz() == 0 {
+            FusedPiece::Empty
+        } else {
+            FusedPiece::QuantSparse(s)
+        }
+    }
+
+    fn from_qsvd(
+        vt_full: &QuantMatrix,
+        u: &Arc<QuantMatrix>,
+        s: &Arc<Vec<f32>>,
+        lo: usize,
+        hi: usize,
+    ) -> FusedPiece {
+        if s.is_empty() {
+            return FusedPiece::Empty;
+        }
+        FusedPiece::QuantLowRank {
+            u: Arc::clone(u),
+            s: Arc::clone(s),
+            vt: vt_full.slice_cols(lo, hi),
+        }
+    }
+
     /// Bytes this piece stores, with Arc-shared low-rank factors excluded
     /// (counted once at the expert level).
     fn piece_bytes(&self) -> usize {
@@ -463,11 +701,15 @@ impl FusedPiece {
             FusedPiece::Sparse(c) => c.memory_bytes(),
             FusedPiece::LowRank { vt, .. } => vt.n_params() * 4,
             FusedPiece::Dense(m) => m.n_params() * 4,
+            FusedPiece::QuantSparse(c) => c.memory_bytes(),
+            FusedPiece::QuantLowRank { vt, .. } => vt.memory_bytes(),
+            FusedPiece::QuantDense(m) => m.memory_bytes(),
         }
     }
 
     /// out += x @ selfᵀ — up/gate correction (x: B × w, self: pI × w,
-    /// out: B × pI).
+    /// out: B × pI). Quantized pieces dequantize inside the microkernel —
+    /// bitwise equal to densifying first under the same kernel kind.
     pub fn apply_nt_acc(&self, x: &Matrix, out: &mut Matrix) {
         match self {
             FusedPiece::Empty => {}
@@ -479,6 +721,14 @@ impl FusedPiece {
                 matmul_nt_into(&t, u.as_ref(), out, true);
             }
             FusedPiece::Dense(m) => matmul_nt_into(x, m, out, true),
+            FusedPiece::QuantSparse(c) => c.matmul_nt_into(x, out, true),
+            FusedPiece::QuantLowRank { u, s, vt } => {
+                let mut t = Matrix::zeros(x.rows, s.len());
+                vt.matmul_nt_into(x, &mut t, false); // B × r
+                scale_cols(&mut t, s.as_slice());
+                u.matmul_nt_into(&t, out, true);
+            }
+            FusedPiece::QuantDense(m) => m.matmul_nt_into(x, out, true),
         }
     }
 
@@ -494,6 +744,14 @@ impl FusedPiece {
                 matmul_acc_into(&t, vt, out);
             }
             FusedPiece::Dense(m) => matmul_acc_into(h, m, out),
+            FusedPiece::QuantSparse(c) => c.matmul_acc_into(h, out),
+            FusedPiece::QuantLowRank { u, s, vt } => {
+                let mut t = Matrix::zeros(h.rows, s.len());
+                u.matmul_acc_into(h, &mut t); // B × r (t starts at zero)
+                scale_cols(&mut t, s.as_slice());
+                vt.matmul_acc_into(&t, out);
+            }
+            FusedPiece::QuantDense(m) => m.matmul_acc_into(h, out),
         }
     }
 }
@@ -536,12 +794,31 @@ impl FusedExpert {
                 + self.b2.len())
                 * 4;
         // The shared U/s factors, once per expert.
-        if let FusedPiece::LowRank { u, s, .. } = &self.d_up {
-            bytes += (u.n_params() + s.len()) * 4;
-        } else if let FusedPiece::LowRank { u, s, .. } = &self.d_down {
-            bytes += (u.n_params() + s.len()) * 4;
-        }
+        let shared = Self::shared_factor_bytes(&self.d_up);
+        bytes += if shared > 0 { shared } else { Self::shared_factor_bytes(&self.d_down) };
         bytes
+    }
+
+    /// Bytes of the Arc-shared low-rank factors reachable from one piece.
+    fn shared_factor_bytes(p: &FusedPiece) -> usize {
+        match p {
+            FusedPiece::LowRank { u, s, .. } => (u.n_params() + s.len()) * 4,
+            FusedPiece::QuantLowRank { u, s, .. } => u.memory_bytes() + s.len() * 4,
+            _ => 0,
+        }
+    }
+
+    /// Whether any piece is served through the int8 dequant-fused kernels.
+    pub fn is_quantized(&self) -> bool {
+        fn q(p: &FusedPiece) -> bool {
+            matches!(
+                p,
+                FusedPiece::QuantSparse(_)
+                    | FusedPiece::QuantLowRank { .. }
+                    | FusedPiece::QuantDense(_)
+            )
+        }
+        q(&self.d_up) || q(&self.d_down) || self.d_gate.as_ref().is_some_and(q)
     }
 }
 
@@ -583,8 +860,70 @@ impl CompressedExpert {
                 d_down: FusedPiece::from_dense(m, w2_off, m.cols),
                 b2: self.b2.clone(),
             },
+            ResidualRepr::Quantized(QuantizedRepr::Dense(q)) => FusedExpert {
+                d_up: FusedPiece::QuantDense(q.slice_cols(0, p)),
+                db1: q.col_dense(p),
+                d_gate: gated
+                    .then(|| FusedPiece::QuantDense(q.slice_cols(p + 1, 2 * p + 1))),
+                db3: gated.then(|| q.col_dense(2 * p + 1)),
+                d_down: FusedPiece::QuantDense(q.slice_cols(w2_off, q.cols)),
+                b2: self.b2.clone(),
+            },
+            ResidualRepr::Quantized(QuantizedRepr::Csr(c)) => FusedExpert {
+                d_up: FusedPiece::from_qcsr(c, 0, p),
+                db1: c.col_dense(p),
+                d_gate: gated.then(|| FusedPiece::from_qcsr(c, p + 1, 2 * p + 1)),
+                db3: gated.then(|| c.col_dense(2 * p + 1)),
+                d_down: FusedPiece::from_qcsr(c, w2_off, c.cols),
+                b2: self.b2.clone(),
+            },
+            ResidualRepr::Quantized(QuantizedRepr::LowRank { u, s, vt }) => {
+                let ua = Arc::new(u.clone());
+                let sa = Arc::new(s.clone());
+                FusedExpert {
+                    d_up: FusedPiece::from_qsvd(vt, &ua, &sa, 0, p),
+                    db1: qsvd_col(u, s, vt, p),
+                    d_gate: gated
+                        .then(|| FusedPiece::from_qsvd(vt, &ua, &sa, p + 1, 2 * p + 1)),
+                    db3: gated.then(|| qsvd_col(u, s, vt, 2 * p + 1)),
+                    d_down: FusedPiece::from_qsvd(vt, &ua, &sa, w2_off, vt.cols),
+                    b2: self.b2.clone(),
+                }
+            }
         }
     }
+
+    /// Whether this expert's residual is stored in the int8 tier.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.residual, ResidualRepr::Quantized(_))
+    }
+
+    /// Advertised per-element dequantization error bound (0.0 for exact
+    /// f32 representations) — carried into the store index as `qerr`.
+    pub fn quant_error_bound(&self) -> f32 {
+        match &self.residual {
+            ResidualRepr::Quantized(q) => q.abs_error_bound(),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Column `c` of the reconstructed quantized low-rank matrix, with both
+/// factors dequantized: `U_dq · (s ⊙ vt_dq[:, c])` — splits bias deltas out
+/// of a q8-svd design matrix (cold path, runs once per fused split).
+fn qsvd_col(u: &QuantMatrix, s: &[f32], vt: &QuantMatrix, c: usize) -> Vec<f32> {
+    let r = s.len();
+    let vtc = vt.col_dense(c);
+    (0..u.rows)
+        .map(|i| {
+            let si = u.scales[i];
+            let mut acc = 0.0f32;
+            for k in 0..r {
+                acc += (u.data[i * u.cols + k] as f32 * si) * s[k] * vtc[k];
+            }
+            acc
+        })
+        .collect()
 }
 
 /// Column `c` of the reconstructed low-rank matrix: `U · (s ⊙ vt[:, c])`.
@@ -1098,6 +1437,162 @@ mod tests {
         let tag_pos = 8 + 4 + 2 * 4; // accounted u64 + b2 len + b2 values
         bad[tag_pos] = 9;
         assert!(CompressedExpert::decode_shard(&bad).is_err());
+    }
+
+    /// Clone of a compressed layer with every residual dropped to int8.
+    fn quantize_layer(cl: &CompressedLayer) -> CompressedLayer {
+        let experts = cl
+            .experts
+            .iter()
+            .map(|e| CompressedExpert {
+                residual: e.residual.quantized(),
+                b2: e.b2.clone(),
+                accounted_params: e.accounted_params,
+            })
+            .collect();
+        CompressedLayer { experts, ..cl.clone() }
+    }
+
+    #[test]
+    fn quantized_shard_roundtrips_every_kind_bit_exact() {
+        let mut rng = Rng::new(30);
+        let dense = Matrix::randn(10, 12, 1.0, &mut rng);
+        let sparse = dense.map(|v| if v.abs() > 0.8 { v } else { 0.0 });
+        let reprs = vec![
+            ResidualRepr::Dense(dense.clone()).quantized(),
+            ResidualRepr::SparseCsr(Csr::from_dense(&sparse, IndexWidth::U16)).quantized(),
+            ResidualRepr::LowRank(jacobi_svd(&dense)).quantized(),
+        ];
+        for (residual, kind) in reprs.into_iter().zip(["q8-dense", "q8-csr", "q8-svd"]) {
+            assert_eq!(residual.kind_name(), kind);
+            // Idempotent: quantizing a quantized repr is a clone.
+            assert_eq!(residual.quantized(), residual);
+            let e = CompressedExpert {
+                accounted_params: residual.n_params(),
+                residual,
+                b2: (0..7).map(|_| rng.normal()).collect(),
+            };
+            let bytes = e.encode_shard();
+            let back = CompressedExpert::decode_shard(&bytes).unwrap();
+            assert_eq!(e, back, "{kind} shard roundtrip must be bit-exact");
+            assert!(CompressedExpert::decode_shard(&bytes[..bytes.len() - 2]).is_err());
+        }
+    }
+
+    #[test]
+    fn quantized_restore_within_advertised_bound() {
+        let mut rng = Rng::new(31);
+        let dense = Matrix::randn(12, 20, 0.5, &mut rng);
+        let sparse = dense.map(|v| if v.abs() > 0.4 { v } else { 0.0 });
+        // Dense / CSR quantize the stored values directly: compare against
+        // the ORIGINAL f32 repr. The low-rank bound is against the f32
+        // factors' reconstruction (quantization error only, not SVD error).
+        for orig in [
+            ResidualRepr::Dense(dense.clone()),
+            ResidualRepr::SparseCsr(Csr::from_dense(&sparse, IndexWidth::U16)),
+            ResidualRepr::LowRank(jacobi_svd(&dense)),
+        ] {
+            let q = orig.quantized();
+            let bound = match &q {
+                ResidualRepr::Quantized(qr) => qr.abs_error_bound(),
+                _ => unreachable!(),
+            };
+            assert!(bound > 0.0 && bound.is_finite(), "bound {bound} out of range");
+            let a = orig.to_dense();
+            let b = q.to_dense();
+            let worst = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                worst <= bound,
+                "{}: worst err {worst} exceeds advertised bound {bound}",
+                q.kind_name()
+            );
+            assert_eq!(q.design_shape(), (a.rows, a.cols));
+        }
+    }
+
+    #[test]
+    fn quantized_bytes_well_under_f32() {
+        let mut rng = Rng::new(32);
+        let dense = Matrix::randn(16, 64, 1.0, &mut rng);
+        let d = ResidualRepr::Dense(dense.clone());
+        let dq = d.quantized();
+        assert!(
+            (dq.memory_bytes() as f64) <= 0.35 * d.memory_bytes() as f64,
+            "q8-dense {} vs f32 {}",
+            dq.memory_bytes(),
+            d.memory_bytes()
+        );
+        let lr = ResidualRepr::LowRank(jacobi_svd(&dense));
+        let lrq = lr.quantized();
+        assert!(
+            (lrq.memory_bytes() as f64) <= 0.35 * lr.memory_bytes() as f64,
+            "q8-svd {} vs f32 {}",
+            lrq.memory_bytes(),
+            lr.memory_bytes()
+        );
+        // CSR keeps f32-free values but pays full index overhead: smaller
+        // than f32 CSR, though not 0.35× (documented caveat).
+        let sparse = dense.map(|v| if v.abs() > 0.8 { v } else { 0.0 });
+        let sp = ResidualRepr::SparseCsr(Csr::from_dense(&sparse, IndexWidth::U16));
+        let spq = sp.quantized();
+        assert!(spq.memory_bytes() < sp.memory_bytes());
+    }
+
+    #[test]
+    fn quantized_fused_forward_matches_quantized_restore() {
+        // The fused path over int8 pieces must agree with restore-then-
+        // dense over the SAME dequantized residual to f32 reassociation
+        // tolerance — quantization error cancels out of this comparison.
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(33);
+        for arch in [ExpertArch::Relu, ExpertArch::SwiGlu] {
+            let layer = MoeLayer::random(arch, 8, 16, 4, 2, true, false, &mut rng);
+            for comp in [ResMoE::up(), ResMoE::svd()] {
+                let cl = quantize_layer(&quick_compress(&comp, &layer, 0.3, 11));
+                assert!(cl.experts.iter().all(|e| e.is_quantized()));
+                assert!(cl.experts.iter().all(|e| e.quant_error_bound() > 0.0));
+                let fl = cl.fused().expect("resmoe layers have a center");
+                let x = Matrix::randn(5, 8, 1.0, &mut rng);
+                let shared = fl.shared_act(&x);
+                for slot in 0..4 {
+                    let want = cl.restore_expert(slot).forward(&x);
+                    let got = fl.forward_slot(slot, &x, &shared);
+                    assert!(
+                        got.sq_dist(&want) < 1e-8,
+                        "{arch:?}/{}: slot {slot} dist {}",
+                        cl.method,
+                        got.sq_dist(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_rate_zero_residual_is_center_forward() {
+        // Rate 0 → empty residuals; quantizing them must stay empty-safe.
+        use crate::baselines::quick_compress;
+        use crate::compress::resmoe::ResMoE;
+        let mut rng = Rng::new(34);
+        let layer = MoeLayer::random(ExpertArch::SwiGlu, 8, 12, 4, 2, true, false, &mut rng);
+        let cl = quantize_layer(&quick_compress(&ResMoE::up(), &layer, 0.0, 4));
+        let fl = cl.fused().unwrap();
+        for e in &fl.experts {
+            assert!(matches!(e.d_up, FusedPiece::Empty | FusedPiece::QuantSparse(_)));
+        }
+        let x = Matrix::randn(4, 8, 1.0, &mut rng);
+        let shared = fl.shared_act(&x);
+        for slot in 0..4 {
+            let want = cl.restore_expert(slot).forward(&x);
+            let got = fl.forward_slot(slot, &x, &shared);
+            assert!(got.sq_dist(&want) < 1e-8);
+        }
     }
 
     #[test]

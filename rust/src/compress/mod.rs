@@ -14,7 +14,7 @@ pub mod wanda;
 pub use formats::{
     center_shared_act, decode_matrix_shard, encode_matrix_shard, fused_forward_expert,
     CompressedExpert, CompressedLayer, FusedExpert, FusedLayer, FusedPiece, FusedSlot,
-    ResidualRepr, SharedAct,
+    QuantizedRepr, ResidualRepr, SharedAct,
 };
 pub use resmoe::{CenterKind, ResMoE, ResidualKind};
 

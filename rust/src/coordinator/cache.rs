@@ -31,6 +31,16 @@
 //! densified center plus the one paged expert's split pieces — so no full
 //! [`FusedLayer`] (which would need every shard) is ever built.
 //!
+//! **Int8 residency tier**: artifacts packed with `--quantize int8` page
+//! residual shards that are int8 codes + per-row scales (~¼ the resident
+//! bytes; tracked in [`CacheMetrics::quant_shard_fetches`] /
+//! [`CacheMetrics::quant_shard_bytes`] / [`CacheMetrics::quant_serves`]).
+//! The cost model treats these as cheap-to-keep-paged: a quantized shard
+//! earns a dense f32 restore only through shown reuse or an amortizing
+//! batch — never on mere budget room, which would trade a small int8
+//! resident for a full-size dense one. Stores without quantized shards
+//! make byte-identical decisions to previous versions.
+//!
 //! # Per-block state partitioning (the continuous-batching invariant)
 //!
 //! All mutable serving state — resident maps, LRU clock, heat counters and
@@ -157,6 +167,15 @@ pub struct CacheMetrics {
     pub shard_fetch_ns: u64,
     /// Decoded bytes of fetched shards.
     pub shard_bytes: u64,
+    /// Of [`CacheMetrics::shard_fetches`], the fetches whose decoded
+    /// residual is int8-quantized (`q8-*` shard kinds).
+    pub quant_shard_fetches: u64,
+    /// Of [`CacheMetrics::shard_bytes`], the decoded bytes of quantized
+    /// shards (int8 codes + per-row f32 scales).
+    pub quant_shard_bytes: u64,
+    /// Miss serves (restore and fused/paged decisions alike) answered from
+    /// an int8-quantized residual.
+    pub quant_serves: u64,
     /// Paged shards evicted to make room.
     pub shard_evictions: u64,
     /// Serves that parked on another thread's in-flight materialization of
@@ -836,19 +855,28 @@ impl ExpertCache {
             metrics.misses += 1;
             fused_enabled && !self.should_restore(bs, block, slot, batch_tokens)
         };
+        let quant = self.slot_is_quantized(block, slot) as u64;
         if wants_fused {
             if self.store.is_some() {
                 if let Some(center) = self.fused_center(block) {
                     let expert = self.fused_shard_expert(block, slot)?;
-                    self.lock_state().metrics.fused_serves += 1;
+                    let mut st = self.lock_state();
+                    st.metrics.fused_serves += 1;
+                    st.metrics.quant_serves += quant;
                     return Ok(Serve::Paged { center, expert });
                 }
             } else if let Some(fl) = self.fused_layer(block) {
-                self.lock_state().metrics.fused_serves += 1;
+                let mut st = self.lock_state();
+                st.metrics.fused_serves += 1;
+                st.metrics.quant_serves += quant;
                 return Ok(Serve::Fused(fl));
             }
         }
-        self.lock_state().metrics.restore_serves += 1;
+        {
+            let mut st = self.lock_state();
+            st.metrics.restore_serves += 1;
+            st.metrics.quant_serves += quant;
+        }
         Ok(Serve::Dense(self.restore_and_cache(block, slot, false)?))
     }
 
@@ -1062,6 +1090,10 @@ impl ExpertCache {
         metrics.shard_fetches += 1;
         let bytes = expert.memory_bytes();
         metrics.shard_bytes += bytes as u64;
+        if expert.is_quantized() {
+            metrics.quant_shard_fetches += 1;
+            metrics.quant_shard_bytes += bytes as u64;
+        }
         bs.make_room_for_shard(bytes, metrics);
         bs.shard_used_bytes += bytes;
         let clock = bs.clock;
@@ -1209,8 +1241,17 @@ impl ExpertCache {
             return true;
         }
         let bytes = self.restored_bytes(block, slot);
+        let fits = bs.used_bytes + bytes <= bs.budget_bytes;
+        // Int8 residency tier: the paged shard is far smaller than the full
+        // f32 expert a restore would materialize, so for quantized
+        // residuals mere room is NOT a reason to pay the materialization —
+        // they earn a restore only with shown reuse (rule 4), even when
+        // they fit. Exact-f32 decisions below are untouched.
+        if self.slot_is_quantized(block, slot) {
+            return fits && bs.heat.get(&slot).copied().unwrap_or(0) >= HOT_ACCESSES;
+        }
         // 2. Fits without evicting anyone → it will stick; restore.
-        if bs.used_bytes + bytes <= bs.budget_bytes {
+        if fits {
             return true;
         }
         // 3. Larger than the whole share → guaranteed thrash; stay fused.
@@ -1221,6 +1262,28 @@ impl ExpertCache {
         //    reuse — a cold expert would displace a hotter one just to be
         //    displaced right back.
         bs.heat.get(&slot).copied().unwrap_or(0) >= HOT_ACCESSES
+    }
+
+    /// Whether `(block, slot)` is backed by an int8-quantized residual —
+    /// answered from the artifact index in store mode (`q8-*` shard kinds,
+    /// no shard fetch) and from the resident representation in monolithic
+    /// mode. Reads only construction-time-immutable state, so it is safe
+    /// both under and outside the metadata lock.
+    fn slot_is_quantized(&self, block: usize, slot: usize) -> bool {
+        if let Some(store) = &self.store {
+            return self.expert_index(block, slot).is_some_and(|eidx| {
+                store
+                    .layer_entry(block)
+                    .and_then(|e| e.experts.get(eidx))
+                    .is_some_and(|e| e.kind.starts_with("q8-"))
+            });
+        }
+        let layer = self.layers.get(&block).expect("block not compressed");
+        layer
+            .expert_map
+            .get(slot)
+            .and_then(|&e| layer.experts.get(e))
+            .is_some_and(|e| e.is_quantized())
     }
 
     /// Bytes a restored dense expert for `(block, slot)` would occupy
@@ -1371,6 +1434,10 @@ impl ExpertCache {
         bs.clock += 1;
         metrics.shard_fetches += 1;
         metrics.shard_bytes += bytes as u64;
+        if expert.is_quantized() {
+            metrics.quant_shard_fetches += 1;
+            metrics.quant_shard_bytes += bytes as u64;
+        }
         bs.shard_used_bytes += bytes;
         let clock = bs.clock;
         bs.shards.insert(
@@ -1392,7 +1459,7 @@ mod tests {
     use crate::baselines::quick_compress;
     use crate::compress::{center_shared_act, fused_forward_expert, ResMoE};
     use crate::moe::{ExpertArch, MoeLayer};
-    use crate::store::{pack_compressed_model, ExpertStore};
+    use crate::store::{pack_compressed_model, quantize_layer, ExpertStore};
     use crate::util::Rng;
     use std::sync::Barrier;
 
@@ -1995,5 +2062,129 @@ mod tests {
         assert_eq!(mr.shard_evictions, mb.shard_evictions);
         assert_eq!(reference.resident_shards(), batched.resident_shards());
         assert_eq!(reference.used_bytes(), batched.used_bytes());
+    }
+
+    // ---------------------------------------------- int8 residency tier
+
+    /// Two compressed blocks in ONE artifact — block 1 exact f32, block 3
+    /// int8-quantized — exercising both tiers side by side.
+    fn mixed_store_cache(
+        seed: u64,
+        budget: usize,
+    ) -> (CompressedLayer, CompressedLayer, ExpertCache) {
+        let mut rng = Rng::new(seed);
+        let mut cfg = crate::moe::ModelConfig::switch_mini(4);
+        cfg.d_model = 8;
+        cfg.d_inner = 16;
+        cfg.n_layers = 4;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 16;
+        let model = crate::moe::Model::random(&cfg, &mut rng);
+        let l1 = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let l3 = MoeLayer::random(ExpertArch::Relu, 8, 16, 4, 2, true, false, &mut rng);
+        let cl1 = quick_compress(&ResMoE::up(), &l1, 0.25, seed);
+        let cl3 = quick_compress(&ResMoE::up(), &l3, 0.25, seed + 1);
+        let dir = std::env::temp_dir().join("resmoe-cache-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("mixed-{seed}.rmes"));
+        pack_compressed_model(
+            &model,
+            &[(1, cl1.clone()), (3, quantize_layer(&cl3))],
+            0.25,
+            &path,
+        )
+        .unwrap();
+        let store = Arc::new(ExpertStore::open(&path).unwrap());
+        let cache = ExpertCache::from_store(store, budget).unwrap();
+        (cl1, cl3, cache)
+    }
+
+    #[test]
+    fn store_mode_mixed_f32_and_quantized_blocks() {
+        let (cl1, cl3, cache) = mixed_store_cache(40, usize::MAX);
+        let cl3q = quantize_layer(&cl3);
+        // Exact block: a roomy budget restores on first serve, bit-exact,
+        // and no quantized counter moves.
+        for slot in 0..4 {
+            match cache.serve(1, slot, 1) {
+                Serve::Dense(e) => assert_eq!(*e, cl1.restore_expert(slot)),
+                _ => panic!("roomy f32 slot must restore"),
+            }
+        }
+        let m = cache.metrics();
+        assert_eq!(m.restore_serves, 4);
+        assert_eq!(m.quant_serves, 0, "f32 serves never count as quantized");
+        assert_eq!(m.quant_shard_fetches, 0);
+        assert_eq!(m.quant_shard_bytes, 0);
+        // Quantized block: cold slots stay paged even though they'd fit.
+        let mut rng = Rng::new(7);
+        let x = crate::tensor::Matrix::randn(3, 8, 1.0, &mut rng);
+        for slot in 0..4 {
+            match cache.serve(3, slot, 1) {
+                Serve::Paged { center, expert } => {
+                    assert!(expert.is_quantized(), "slot {slot}");
+                    let sh = center_shared_act(&center, &x);
+                    let got = fused_forward_expert(&center, &expert, &x, &sh);
+                    // Tight vs the quantized restore (same dequantized
+                    // values; fused-vs-restore reassociation only)...
+                    let wq = cl3q.restore_expert(slot).forward(&x);
+                    assert!(got.sq_dist(&wq) < 1e-8, "slot {slot}");
+                    // ...and within quantization-error reach of the
+                    // original f32 expert's output.
+                    let wf = cl3.restore_expert(slot).forward(&x);
+                    let rel = got.sq_dist(&wf) / wf.frob_norm_sq().max(1e-12);
+                    assert!(rel < 1e-2, "slot {slot}: rel={rel}");
+                }
+                _ => panic!("cold quantized slot must stay paged (slot {slot})"),
+            }
+        }
+        let m = cache.metrics();
+        assert_eq!(m.fused_serves, 4);
+        assert_eq!(m.quant_serves, 4);
+        assert_eq!(m.quant_shard_fetches, 4);
+        // The int8 block's resident shard bytes undercut its f32 sibling's
+        // (same shapes, same rate — only the value storage differs).
+        assert!(
+            m.quant_shard_bytes > 0 && m.quant_shard_bytes < m.shard_bytes - m.quant_shard_bytes,
+            "int8 shard bytes {} vs f32 {}",
+            m.quant_shard_bytes,
+            m.shard_bytes - m.quant_shard_bytes,
+        );
+        // Shown reuse flips the decision: the third access of slot 0
+        // crosses HOT_ACCESSES and earns the dense restore, bit-exact with
+        // restoring from the quantized layer directly.
+        assert!(matches!(cache.serve(3, 0, 1), Serve::Paged { .. }));
+        match cache.serve(3, 0, 1) {
+            Serve::Dense(e) => assert_eq!(*e, cl3q.restore_expert(0)),
+            _ => panic!("hot quantized slot must restore"),
+        }
+        let m = cache.metrics();
+        assert_eq!(m.quant_serves, 6);
+        assert_eq!(m.restore_serves, 5);
+        // An amortizing batch restores immediately regardless of heat.
+        match cache.serve(3, 2, RESTORE_AMORTIZE_TOKENS) {
+            Serve::Dense(e) => assert_eq!(*e, cl3q.restore_expert(2)),
+            _ => panic!("big batch must restore"),
+        }
+    }
+
+    #[test]
+    fn monolithic_quantized_layer_stays_fused_until_hot() {
+        let (_, cl) = compressed(41);
+        let clq = quantize_layer(&cl);
+        let cache = ExpertCache::new(vec![(0, clq.clone())], usize::MAX);
+        // A roomy budget restores an f32 layer on first miss (rule 2); the
+        // int8 tier demands shown reuse first.
+        assert!(matches!(cache.serve(0, 1, 1), Serve::Fused(_)));
+        assert!(matches!(cache.serve(0, 1, 1), Serve::Fused(_)));
+        match cache.serve(0, 1, 1) {
+            Serve::Dense(e) => assert_eq!(*e, clq.restore_expert(1)),
+            _ => panic!("hot quantized slot must restore"),
+        }
+        let m = cache.metrics();
+        assert_eq!(m.fused_serves, 2);
+        assert_eq!(m.restore_serves, 1);
+        assert_eq!(m.quant_serves, 3);
     }
 }

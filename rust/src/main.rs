@@ -56,7 +56,7 @@ fn print_help() {
            eval     --model mixtral-mini [--method resmoe-up --rate 0.25]\n\
            serve    --model mixtral-mini [--requests N --batch-max N]\n\
            pack     --model mixtral-mini [--ckpt path.rmw[z]] --method resmoe-up \
---rate 0.25 --out model.rmes\n\
+--rate 0.25 [--quantize int8] --out model.rmes\n\
            serve-packed --artifact model.rmes [--cache-mb N --requests N]\n\
            table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
          (tables also regenerate via `cargo bench --bench table1_approx_error` etc.)"
@@ -203,17 +203,29 @@ fn cmd_pack(args: &Args) -> Result<()> {
     let comp = method_of(args)?;
     let rate = args.get_f64("rate", 0.25);
     let seed = args.get_u64("seed", 0);
+    let qarg = args.get_or("quantize", "none");
+    let quantize = store::QuantizeMode::parse(qarg)
+        .ok_or_else(|| anyhow!("unknown --quantize mode '{qarg}' (use int8 or none)"))?;
     let t0 = std::time::Instant::now();
     let (summary, report) = if let Some(ckpt) = args.get("ckpt") {
         let model = model_io::load_model(Path::new(ckpt))?;
         let top = args.get_usize("layers", top_layers_default(&model.cfg));
-        store::pack_model(&model, comp.as_ref(), rate, top, None, seed, &out)?
+        store::pack_model_with(&model, comp.as_ref(), rate, top, None, seed, quantize, &out)?
     } else {
         let cfg = parse_model(args)?;
         let assets = Assets::load(&cfg);
         let top = args.get_usize("layers", top_layers_default(&cfg));
         let calib = assets.calibration_tokens(cfg.max_seq);
-        store::pack_model(&assets.model, comp.as_ref(), rate, top, Some(&calib), seed, &out)?
+        store::pack_model_with(
+            &assets.model,
+            comp.as_ref(),
+            rate,
+            top,
+            Some(&calib),
+            seed,
+            quantize,
+            &out,
+        )?
     };
     println!(
         "packed {} layers / {} expert shards with {} at rate {rate} in {:.2}s",
@@ -222,6 +234,12 @@ fn cmd_pack(args: &Args) -> Result<()> {
         report.method,
         t0.elapsed().as_secs_f64()
     );
+    if summary.quantized_shards > 0 {
+        println!(
+            "  int8 residual shards: {} (max dequant error bound {:.3e})",
+            summary.quantized_shards, summary.max_quant_err
+        );
+    }
     println!(
         "  artifact: {} ({}) — backbone {} + expert shards {} on disk ({} decoded)",
         summary.path.display(),

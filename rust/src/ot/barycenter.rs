@@ -16,7 +16,7 @@
 
 use super::cost::sq_euclidean;
 use super::hungarian;
-use crate::tensor::Matrix;
+use crate::tensor::{kernel, Matrix};
 use crate::util::Rng;
 
 /// Configuration for the alternating barycenter solver.
@@ -99,11 +99,9 @@ pub fn free_support_barycenter(
         let mut new_support = Matrix::zeros(n, d);
         for (k, cloud) in clouds.iter().enumerate() {
             for i in 0..n {
-                let src = cloud.row(perms[k][i]);
-                let dst = new_support.row_mut(i);
-                for (o, &s) in dst.iter_mut().zip(src.iter()) {
-                    *o += s;
-                }
+                // Exact elementwise tier: bitwise identical across kernel
+                // kinds, so barycenters stay reproducible under SIMD.
+                kernel::add_slice(new_support.row_mut(i), cloud.row(perms[k][i]));
             }
         }
         support = new_support.scale(1.0 / nk as f32);

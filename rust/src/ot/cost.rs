@@ -1,6 +1,6 @@
 //! Cost matrices for optimal transport between point clouds.
 
-use crate::tensor::Matrix;
+use crate::tensor::{kernel, Matrix};
 
 /// Pairwise squared Euclidean distances between the rows of `a` (n×d) and
 /// the rows of `b` (m×d): `C[i,j] = ||a_i - b_j||^2`.
@@ -10,12 +10,8 @@ use crate::tensor::Matrix;
 /// clamped to zero.
 pub fn sq_euclidean(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols, "point dims differ");
-    let a_sq: Vec<f32> = (0..a.rows)
-        .map(|i| a.row(i).iter().map(|x| x * x).sum())
-        .collect();
-    let b_sq: Vec<f32> = (0..b.rows)
-        .map(|j| b.row(j).iter().map(|x| x * x).sum())
-        .collect();
+    let a_sq: Vec<f32> = (0..a.rows).map(|i| kernel::dot(a.row(i), a.row(i))).collect();
+    let b_sq: Vec<f32> = (0..b.rows).map(|j| kernel::dot(b.row(j), b.row(j))).collect();
     let ab = a.matmul_nt(b); // n×m of dot products
     Matrix::from_fn(a.rows, b.rows, |i, j| {
         (a_sq[i] + b_sq[j] - 2.0 * ab.at(i, j)).max(0.0)

@@ -3,11 +3,18 @@
 //! Layout:
 //! ```text
 //! magic   b"RMES"
-//! u32 LE  format version (1)
+//! u32 LE  format version (2)
 //! u64 LE  index offset (patched by the writer on finish)
 //! shard bytes (each shard independently zstd-compressed)
 //! index:  u32 LE length + JSON
 //! ```
+//!
+//! Version history: v1 stored f32 residual kinds only (`dense`/`csr`/
+//! `svd`); v2 adds the int8 residual shard kinds (`q8-dense`/`q8-csr`/
+//! `q8-svd`) plus a per-expert `qerr` index field (the advertised
+//! dequantization error bound). The container layout is unchanged, so v1
+//! files read back cleanly; a file CLAIMING v1 while containing quantized
+//! kinds is rejected as malformed.
 //!
 //! The JSON index records, for every shard, its absolute file offset, its
 //! on-disk (compressed) and raw (decoded) byte sizes, and a CRC-32 of the
@@ -36,7 +43,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 pub const STORE_MAGIC: &[u8; 4] = b"RMES";
-pub const STORE_VERSION: u32 = 1;
+/// Current writer version. Readers accept `1..=STORE_VERSION`.
+pub const STORE_VERSION: u32 = 2;
+/// Oldest version this reader still accepts.
+pub const MIN_STORE_VERSION: u32 = 1;
 /// Byte offset where shard data starts (magic + version + index offset).
 const DATA_START: u64 = 4 + 4 + 8;
 /// zstd level passed to the vendored coder (accepted for API parity).
@@ -81,11 +91,14 @@ impl ShardInfo {
 }
 
 /// One residual shard: location plus the residual kind recorded for
-/// index-only tooling (`dense` / `csr` / `svd`).
+/// index-only tooling (`dense` / `csr` / `svd` / `q8-*`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExpertShardInfo {
     pub shard: ShardInfo,
     pub kind: String,
+    /// Advertised per-element dequantization error bound for `q8-*` kinds
+    /// (0.0 for exact f32 shards; v2 index field `qerr`, absent in v1).
+    pub quant_err: f32,
 }
 
 /// Index entry for one compressed layer.
@@ -193,7 +206,11 @@ impl StoreWriter {
         let mut experts = Vec::with_capacity(layer.experts.len());
         for e in &layer.experts {
             let shard = self.write_shard(&e.encode_shard())?;
-            experts.push(ExpertShardInfo { shard, kind: e.residual.kind_name().to_string() });
+            experts.push(ExpertShardInfo {
+                shard,
+                kind: e.residual.kind_name().to_string(),
+                quant_err: e.quant_error_bound(),
+            });
         }
         let (design_rows, design_cols) = layer.experts[0].residual.design_shape();
         self.layers.push(LayerEntry {
@@ -226,6 +243,7 @@ impl StoreWriter {
                     .map(|e| {
                         let mut fields = e.shard.to_json();
                         fields.push(("kind", Json::str(&e.kind)));
+                        fields.push(("qerr", Json::num(e.quant_err as f64)));
                         Json::obj(fields)
                     })
                     .collect();
@@ -328,7 +346,7 @@ impl ExpertStore {
             bail!("{}: bad magic (not an RMES artifact)", path.display());
         }
         let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
-        if version != STORE_VERSION {
+        if !(MIN_STORE_VERSION..=STORE_VERSION).contains(&version) {
             bail!("{}: unsupported store version {version}", path.display());
         }
         let index_offset = u64::from_le_bytes(head[8..16].try_into().unwrap());
@@ -351,6 +369,28 @@ impl ExpertStore {
         f.read_exact(&mut index_bytes)?;
         let index = parse_index(std::str::from_utf8(&index_bytes)?, file_bytes)
             .with_context(|| format!("{}: bad index", path.display()))?;
+        if index.version != version {
+            bail!(
+                "{}: header version {version} disagrees with index version {}",
+                path.display(),
+                index.version
+            );
+        }
+        // The int8 shard kinds were introduced in v2; a v1 file carrying
+        // them was written by nothing we ever shipped — treat as corrupt
+        // rather than guessing at its payload layout.
+        if version < 2 {
+            for l in &index.layers {
+                if let Some(e) = l.experts.iter().find(|e| e.kind.starts_with("q8-")) {
+                    bail!(
+                        "{}: v{version} store contains quantized shard kind '{}' (block {})",
+                        path.display(),
+                        e.kind,
+                        l.block
+                    );
+                }
+            }
+        }
         let by_block = index
             .layers
             .iter()
@@ -547,6 +587,8 @@ fn parse_index(src: &str, file_bytes: u64) -> Result<StoreIndex> {
                     .and_then(|v| v.as_str())
                     .unwrap_or("unknown")
                     .to_string(),
+                // v1 indices have no qerr field: exact f32 shards, bound 0.
+                quant_err: ej.get("qerr").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
             });
         }
         let entry = LayerEntry {
@@ -688,6 +730,128 @@ mod tests {
         assert!(ExpertStore::open(&path).is_err());
         std::fs::write(&path, b"NOPE1234").unwrap();
         assert!(ExpertStore::open(&path).is_err());
+    }
+
+    /// Clone of a compressed layer with every residual dropped to int8.
+    fn quantize_cl(cl: &CompressedLayer) -> CompressedLayer {
+        let experts = cl
+            .experts
+            .iter()
+            .map(|e| CompressedExpert {
+                residual: e.residual.quantized(),
+                b2: e.b2.clone(),
+                accounted_params: e.accounted_params,
+            })
+            .collect();
+        CompressedLayer { experts, ..cl.clone() }
+    }
+
+    /// Rewrite a freshly-written v2 file as a v1 file: header version word
+    /// plus the index's top-level `"version":2` (last occurrence — the
+    /// sorted top-level object puts it at the very end of the file).
+    fn patch_to_v1(path: &Path, patch_index: bool) {
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        if patch_index {
+            let pat = b"\"version\":2";
+            let pos = bytes
+                .windows(pat.len())
+                .rposition(|w| w == pat)
+                .expect("index version field");
+            bytes[pos + pat.len() - 1] = b'1';
+        }
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    #[test]
+    fn v1_files_read_back_cleanly() {
+        let path = tmp("v1-readback.rmes");
+        let (_, layers) = write_store(&path, 40);
+        patch_to_v1(&path, true);
+        let store = ExpertStore::open(&path).unwrap();
+        assert_eq!(store.index().version, 1);
+        for (block, want) in &layers {
+            assert_eq!(
+                &store.load_layer_full(*block).unwrap(),
+                want,
+                "block {block} must round-trip from a v1 container"
+            );
+        }
+    }
+
+    #[test]
+    fn header_index_version_mismatch_is_rejected() {
+        let path = tmp("vmismatch.rmes");
+        write_store(&path, 43);
+        patch_to_v1(&path, false); // header says 1, index still says 2
+        let err = ExpertStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "err: {err}");
+    }
+
+    #[test]
+    fn unknown_future_version_is_rejected() {
+        let path = tmp("vfuture.rmes");
+        write_store(&path, 44);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ExpertStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported store version"), "err: {err}");
+    }
+
+    #[test]
+    fn quantized_shards_roundtrip_with_qerr_in_index() {
+        let path = tmp("quant.rmes");
+        let model = tiny_model();
+        let mut rng = Rng::new(41);
+        let layer = MoeLayer::random(ExpertArch::Relu, 16, 32, 4, 1, true, false, &mut rng);
+        let cl = quantize_cl(&quick_compress(&ResMoE::up(), &layer, 0.3, 41));
+        let cl_svd = quantize_cl(&quick_compress(&ResMoE::svd(), &layer, 0.3, 42));
+        let mut w = StoreWriter::create(&path).unwrap();
+        w.put_backbone(&model.clone().strip_experts(&[1])).unwrap();
+        w.put_layer(1, &cl, 0.3).unwrap();
+        w.put_layer(3, &cl_svd, 0.3).unwrap();
+        w.finish().unwrap();
+        let store = ExpertStore::open(&path).unwrap();
+        assert_eq!(store.index().version, STORE_VERSION);
+        let entry = store.layer_entry(1).unwrap();
+        assert!(
+            entry.experts.iter().all(|e| e.kind == "q8-csr" && e.quant_err > 0.0),
+            "index must carry the quantized kind + error bound"
+        );
+        assert!(store
+            .layer_entry(3)
+            .unwrap()
+            .experts
+            .iter()
+            .all(|e| e.kind == "q8-svd" && e.quant_err > 0.0));
+        assert_eq!(&store.load_layer_full(1).unwrap(), &cl);
+        assert_eq!(&store.load_layer_full(3).unwrap(), &cl_svd);
+        // Corruption policy applies to quantized shards identically.
+        let info = entry.experts[0].shard.clone();
+        drop(store);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[(info.offset + info.bytes / 2) as usize] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ExpertStore::open(&path).unwrap();
+        let err = store.load_expert(1, 0).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "err: {err}");
+    }
+
+    #[test]
+    fn v1_claiming_quantized_kinds_is_rejected() {
+        let path = tmp("v1-quant.rmes");
+        let model = tiny_model();
+        let mut rng = Rng::new(45);
+        let layer = MoeLayer::random(ExpertArch::Relu, 16, 32, 4, 1, true, false, &mut rng);
+        let cl = quantize_cl(&quick_compress(&ResMoE::up(), &layer, 0.3, 45));
+        let mut w = StoreWriter::create(&path).unwrap();
+        w.put_backbone(&model.clone().strip_experts(&[1])).unwrap();
+        w.put_layer(1, &cl, 0.3).unwrap();
+        w.finish().unwrap();
+        patch_to_v1(&path, true);
+        let err = ExpertStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("quantized shard kind"), "err: {err}");
     }
 
     #[test]

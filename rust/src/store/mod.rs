@@ -19,10 +19,11 @@ pub mod pack;
 pub mod prefetch;
 
 pub use format::{
-    ExpertShardInfo, ExpertStore, LayerEntry, ShardInfo, StoreIndex, StoreWriter, STORE_MAGIC,
-    STORE_VERSION,
+    ExpertShardInfo, ExpertStore, LayerEntry, ShardInfo, StoreIndex, StoreWriter,
+    MIN_STORE_VERSION, STORE_MAGIC, STORE_VERSION,
 };
 pub use pack::{
-    pack_checkpoint, pack_compressed_model, pack_model, summarize, PackSummary,
+    pack_checkpoint, pack_checkpoint_with, pack_compressed_model, pack_compressed_model_with,
+    pack_model, pack_model_with, quantize_layer, summarize, PackSummary, QuantizeMode,
 };
 pub use prefetch::Prefetcher;

@@ -2,12 +2,36 @@
 //! into an `RMES` artifact — the offline half of demand-paged serving.
 
 use super::format::{ExpertStore, StoreWriter};
-use crate::compress::{compress_model, CompressedLayer, CompressionReport, Compressor};
+use crate::compress::{
+    compress_model, CompressedExpert, CompressedLayer, CompressionReport, Compressor,
+};
 use crate::moe::model_io::load_model;
 use crate::moe::Model;
 use crate::util::Rng;
 use anyhow::Result;
 use std::path::{Path, PathBuf};
+
+/// How residual shards are stored by a pack (`--quantize` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantizeMode {
+    /// Exact f32 shards (v1-compatible payloads).
+    #[default]
+    None,
+    /// Int8 symmetric per-row quantization of residual values; barycenter,
+    /// biases, and singular values stay f32.
+    Int8,
+}
+
+impl QuantizeMode {
+    /// Parse a `--quantize` CLI value.
+    pub fn parse(s: &str) -> Option<QuantizeMode> {
+        match s {
+            "none" | "f32" => Some(QuantizeMode::None),
+            "int8" | "q8" => Some(QuantizeMode::Int8),
+            _ => None,
+        }
+    }
+}
 
 /// What a pack produced, read back from the finished artifact's index (so
 /// the summary doubles as an open/validate pass).
@@ -23,6 +47,11 @@ pub struct PackSummary {
     pub expert_raw_bytes: u64,
     /// On-disk bytes of the expert-stripped backbone shard.
     pub backbone_disk_bytes: u64,
+    /// Residual shards stored in the int8 tier (`q8-*` kinds).
+    pub quantized_shards: usize,
+    /// Largest advertised per-element dequantization error bound across
+    /// all residual shards (0.0 when nothing is quantized).
+    pub max_quant_err: f32,
 }
 
 /// Open a finished artifact and summarize its index.
@@ -42,7 +71,34 @@ pub fn summarize(path: &Path) -> Result<PackSummary> {
             .sum(),
         expert_raw_bytes: store.total_expert_raw_bytes(),
         backbone_disk_bytes: idx.backbone.bytes,
+        quantized_shards: idx
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .filter(|e| e.kind.starts_with("q8-"))
+            .count(),
+        max_quant_err: idx
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|e| e.quant_err)
+            .fold(0.0f32, f32::max),
     })
+}
+
+/// Clone of a compressed layer with every residual dropped to the int8
+/// tier (idempotent; center and biases untouched).
+pub fn quantize_layer(cl: &CompressedLayer) -> CompressedLayer {
+    let experts = cl
+        .experts
+        .iter()
+        .map(|e| CompressedExpert {
+            residual: e.residual.quantized(),
+            b2: e.b2.clone(),
+            accounted_params: e.accounted_params,
+        })
+        .collect();
+    CompressedLayer { experts, ..cl.clone() }
 }
 
 /// Pack an already-compressed model: backbone = `model` with the compressed
@@ -53,8 +109,27 @@ pub fn pack_compressed_model(
     rate: f64,
     out: &Path,
 ) -> Result<PackSummary> {
+    pack_compressed_model_with(model, layers, rate, QuantizeMode::None, out)
+}
+
+/// [`pack_compressed_model`] with a residual quantization mode.
+pub fn pack_compressed_model_with(
+    model: &Model,
+    layers: &[(usize, CompressedLayer)],
+    rate: f64,
+    quantize: QuantizeMode,
+    out: &Path,
+) -> Result<PackSummary> {
     let blocks: Vec<usize> = layers.iter().map(|(b, _)| *b).collect();
     let backbone = model.clone().strip_experts(&blocks);
+    let quantized: Vec<(usize, CompressedLayer)>;
+    let layers: &[(usize, CompressedLayer)] = match quantize {
+        QuantizeMode::None => layers,
+        QuantizeMode::Int8 => {
+            quantized = layers.iter().map(|(b, cl)| (*b, quantize_layer(cl))).collect();
+            &quantized
+        }
+    };
     let mut w = StoreWriter::create(out)?;
     w.put_backbone(&backbone)?;
     for (block, cl) in layers {
@@ -75,8 +150,23 @@ pub fn pack_checkpoint(
     seed: u64,
     out: &Path,
 ) -> Result<(PackSummary, CompressionReport)> {
+    pack_checkpoint_with(ckpt, comp, rate, top_layers, calib, seed, QuantizeMode::None, out)
+}
+
+/// [`pack_checkpoint`] with a residual quantization mode.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_checkpoint_with(
+    ckpt: &Path,
+    comp: &dyn Compressor,
+    rate: f64,
+    top_layers: usize,
+    calib: Option<&[u32]>,
+    seed: u64,
+    quantize: QuantizeMode,
+    out: &Path,
+) -> Result<(PackSummary, CompressionReport)> {
     let model = load_model(ckpt)?;
-    pack_model(&model, comp, rate, top_layers, calib, seed, out)
+    pack_model_with(&model, comp, rate, top_layers, calib, seed, quantize, out)
 }
 
 /// [`pack_checkpoint`] for a model already in memory.
@@ -89,9 +179,27 @@ pub fn pack_model(
     seed: u64,
     out: &Path,
 ) -> Result<(PackSummary, CompressionReport)> {
+    pack_model_with(model, comp, rate, top_layers, calib, seed, QuantizeMode::None, out)
+}
+
+/// [`pack_model`] with a residual quantization mode. Compression (and its
+/// report) run on f32 residuals; quantization happens at shard-write time,
+/// so the recorded approximation errors are the f32 method's and `qerr`
+/// carries the additional int8 bound per shard.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_model_with(
+    model: &Model,
+    comp: &dyn Compressor,
+    rate: f64,
+    top_layers: usize,
+    calib: Option<&[u32]>,
+    seed: u64,
+    quantize: QuantizeMode,
+    out: &Path,
+) -> Result<(PackSummary, CompressionReport)> {
     let mut rng = Rng::new(seed);
     let cm = compress_model(model, comp, rate, top_layers, calib, &mut rng);
-    let summary = pack_compressed_model(model, &cm.layers, rate, out)?;
+    let summary = pack_compressed_model_with(model, &cm.layers, rate, quantize, out)?;
     Ok((summary, cm.report))
 }
 
@@ -112,6 +220,97 @@ mod tests {
         cfg.max_seq = 32;
         let mut rng = Rng::new(seed);
         Model::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn quantized_pack_shrinks_and_carries_error_bounds() {
+        use crate::compress::ResidualRepr;
+        use crate::moe::{ExpertArch, MoeLayer};
+        use crate::tensor::Matrix;
+        let dir = std::env::temp_dir().join("resmoe-pack-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out_f = dir.join("dense-f32.rmes");
+        let out_q = dir.join("dense-int8.rmes");
+        let model = tiny_model(5);
+        // Dense residual layer (base + dense Δ): the config the 0.35× byte
+        // criterion is defined over (CSR keeps full index overhead and only
+        // reaches ~0.55×; SVD depends on rank — both still shrink).
+        let mut rng = Rng::new(6);
+        let layer = MoeLayer::random(ExpertArch::Relu, 16, 32, 4, 1, true, false, &mut rng);
+        let dms: Vec<Matrix> = layer.experts.iter().map(|e| e.design_matrix()).collect();
+        let base = Matrix::mean_of(&dms.iter().collect::<Vec<_>>());
+        let experts: Vec<CompressedExpert> = layer
+            .experts
+            .iter()
+            .zip(&dms)
+            .map(|(e, dm)| {
+                let resid = dm.sub(&base);
+                CompressedExpert {
+                    accounted_params: resid.n_params(),
+                    residual: ResidualRepr::Dense(resid),
+                    b2: e.b2.clone(),
+                }
+            })
+            .collect();
+        let cl = CompressedLayer {
+            method: "avg+dense".into(),
+            arch: ExpertArch::Relu,
+            d_model: 16,
+            base: Some(base),
+            experts,
+            expert_map: CompressedLayer::identity_map(4),
+            aligns: CompressedLayer::identity_aligns(4, 32),
+        };
+        let s_f =
+            pack_compressed_model(&model, &[(1, cl.clone())], 0.25, &out_f).unwrap();
+        let s_q = pack_compressed_model_with(
+            &model,
+            &[(1, cl.clone())],
+            0.25,
+            QuantizeMode::Int8,
+            &out_q,
+        )
+        .unwrap();
+        assert_eq!(s_f.quantized_shards, 0);
+        assert_eq!(s_f.max_quant_err, 0.0);
+        assert_eq!(s_q.quantized_shards, s_q.n_expert_shards);
+        assert!(s_q.max_quant_err > 0.0, "quantized pack must advertise a bound");
+        assert!(
+            (s_q.expert_raw_bytes as f64) <= 0.35 * s_f.expert_raw_bytes as f64,
+            "int8 shards {} vs f32 {} exceed 0.35×",
+            s_q.expert_raw_bytes,
+            s_f.expert_raw_bytes
+        );
+        // The artifact loads back exactly the quantized clone, within the
+        // advertised bound of the f32 residual.
+        let store = ExpertStore::open(&out_q).unwrap();
+        let got = store.load_layer_full(1).unwrap();
+        assert_eq!(got, quantize_layer(&cl));
+        for (qe, fe) in got.experts.iter().zip(&cl.experts) {
+            assert!(qe.is_quantized());
+            let bound = qe.quant_error_bound();
+            let a = fe.residual.to_dense();
+            let b = qe.residual.to_dense();
+            let worst = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst <= bound, "worst {worst} > advertised {bound}");
+        }
+        // Idempotence: packing an already-quantized layer with Int8 mode
+        // changes nothing.
+        let out_q2 = dir.join("dense-int8-again.rmes");
+        let s_q2 = pack_compressed_model_with(
+            &model,
+            &[(1, quantize_layer(&cl))],
+            0.25,
+            QuantizeMode::Int8,
+            &out_q2,
+        )
+        .unwrap();
+        assert_eq!(s_q2.expert_raw_bytes, s_q.expert_raw_bytes);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! `batched == serial` and `store == monolithic` exact under SIMD.
 
 use super::matrix::{Matrix, PAR_MIN_FLOPS};
+use super::quant::{QuantCsr, QuantMatrix};
 use super::sparse::Csr;
 use crate::util::threads::{parallel_row_chunks_mut, parallel_rows_mut};
 use std::sync::OnceLock;
@@ -126,6 +127,84 @@ pub fn matmul_tn_with(kind: KernelKind, a: &Matrix, b: &Matrix) -> Matrix {
     match kind {
         KernelKind::Scalar => gemm_tn_scalar(a, b),
         KernelKind::Avx2 => avx2::gemm_tn(a, b),
+    }
+}
+
+// ============================================================= int8 GEMM
+// Dequant-fused entries: `q` stays int8 end to end; the kernels dequantize
+// codes in registers (`code as f32 * scale`, one rounding — identical to a
+// materialized dequant) and then run the byte-identical f32 fold of their
+// kind, so `fused(q) == gemm(q.to_dense())` holds BITWISE per kind. That
+// makes the quantized tier's only numeric delta vs f32 serving the
+// quantization error itself, which `QuantMatrix::abs_error_bound` bounds.
+
+/// out (+)= x @ qᵀ with in-register dequantization (`q`: n×k int8 codes +
+/// per-row scales; `x`: m×k f32; `out`: m×n).
+pub fn qmatmul_nt_into_with(
+    kind: KernelKind,
+    x: &Matrix,
+    q: &QuantMatrix,
+    out: &mut Matrix,
+    accumulate: bool,
+) {
+    assert_eq!(x.cols, q.cols, "qmatmul_nt dim mismatch");
+    assert_eq!((out.rows, out.cols), (x.rows, q.rows), "qmatmul_nt output shape");
+    if q.rows == 0 || x.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => qgemm_nt_scalar(x, q, out, accumulate),
+        KernelKind::Avx2 => avx2::qgemm_nt(x, q, out, accumulate),
+    }
+}
+
+/// out += h @ q with in-register dequantization (`h`: m×k f32; `q`: k×n
+/// int8 + per-row scales, rows being the k dimension; `out`: m×n).
+pub fn qmatmul_acc_into_with(kind: KernelKind, h: &Matrix, q: &QuantMatrix, out: &mut Matrix) {
+    assert_eq!(h.cols, q.rows, "qmatmul_acc dim mismatch");
+    assert_eq!((out.rows, out.cols), (h.rows, q.cols), "qmatmul_acc output shape");
+    if h.rows == 0 || q.cols == 0 || q.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => qgemm_nn_scalar(h, q, out),
+        KernelKind::Avx2 => avx2::qgemm_nn(h, q, out),
+    }
+}
+
+/// out (+)= x @ qcsrᵀ, dequant-fused SpMM (zero fill handled here, like the
+/// f32 entry, so both kernels share the always-accumulate tile contract).
+pub fn qcsr_matmul_nt_into_with(
+    kind: KernelKind,
+    qcsr: &QuantCsr,
+    x: &Matrix,
+    out: &mut Matrix,
+    accumulate: bool,
+) {
+    assert_eq!(x.cols, qcsr.cols, "qcsr matmul_nt dim mismatch");
+    assert_eq!((out.rows, out.cols), (x.rows, qcsr.rows), "qcsr matmul_nt output shape");
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    if qcsr.rows == 0 || x.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => qcsr.matmul_nt_scalar(x, out),
+        KernelKind::Avx2 => avx2::qspmm_nt(qcsr, x, out),
+    }
+}
+
+/// out += h @ qcsr, dequant-fused.
+pub fn qcsr_matmul_acc_into_with(kind: KernelKind, qcsr: &QuantCsr, h: &Matrix, out: &mut Matrix) {
+    assert_eq!(h.cols, qcsr.rows, "qcsr matmul_acc dim mismatch");
+    assert_eq!((out.rows, out.cols), (h.rows, qcsr.cols), "qcsr matmul_acc output shape");
+    if qcsr.rows == 0 || qcsr.cols == 0 || h.rows == 0 {
+        return;
+    }
+    match kind {
+        KernelKind::Scalar => qcsr.matmul_acc_scalar(h, out),
+        KernelKind::Avx2 => avx2::qspmm_acc(qcsr, h, out),
     }
 }
 
@@ -301,6 +380,84 @@ fn gemm_tn_scalar(a: &Matrix, b: &Matrix) -> Matrix {
         }
     }
     out
+}
+
+/// Scalar int8 NT twin: identical blocking/fold to [`gemm_nt_scalar`]'s
+/// packed path, except the pack is filled by dequantizing codes
+/// (`code as f32 * scale` — pure data movement plus the one dequant
+/// rounding). For `k ≤ NT_KB` the packed path runs a single k-panel whose
+/// per-element arithmetic equals the zero-copy fast path, so this is
+/// bitwise `gemm_nt_scalar(a, q.to_dense(), ..)` at every shape.
+fn qgemm_nt_scalar(a: &Matrix, q: &QuantMatrix, out: &mut Matrix, accumulate: bool) {
+    let (m, n, k) = (a.rows, q.rows, a.cols);
+    let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        if !accumulate {
+            chunk.fill(0.0);
+        }
+        if k == 0 {
+            return;
+        }
+        let mut pack = vec![0.0f32; NT_JB * NT_KB];
+        let mut kb = 0usize;
+        while kb < k {
+            let ke = (kb + NT_KB).min(k);
+            let kw = ke - kb;
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + NT_JB).min(n);
+                let jw = je - jb;
+                for (t, j) in (jb..je).enumerate() {
+                    let s = q.scales[j];
+                    let codes = &q.data[j * k + kb..j * k + ke];
+                    for (p, &c) in pack[t * kw..(t + 1) * kw].iter_mut().zip(codes) {
+                        *p = c as f32 * s;
+                    }
+                }
+                for i in 0..rows {
+                    let a_row = &a.row(r0 + i)[kb..ke];
+                    let out_row = &mut chunk[i * n + jb..i * n + je];
+                    nt_tile(a_row, &pack, kw, jw, out_row);
+                }
+                jb = je;
+            }
+            kb = ke;
+        }
+    };
+    if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_row_chunks_mut(&mut out.data, m, n, |r0, chunk| chunk_kernel(r0, chunk));
+    } else {
+        chunk_kernel(0, &mut out.data);
+    }
+}
+
+/// Scalar int8 NN twin (always-accumulate): [`gemm_nn_scalar`]'s i-k-j loop
+/// with the B row dequantized inline — `av * (code as f32 * s)` rounds the
+/// dequant first, exactly like a materialized dequant feeding the f32 twin.
+fn qgemm_nn_scalar(a: &Matrix, q: &QuantMatrix, out: &mut Matrix) {
+    let (m, k, n) = (a.rows, a.cols, q.cols);
+    let kernel = |r: usize, out_row: &mut [f32]| {
+        let a_row = a.row(r);
+        for kk in 0..k {
+            let av = a_row[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let s = q.scales[kk];
+            let q_row = &q.data[kk * n..kk * n + n];
+            for (o, &code) in out_row.iter_mut().zip(q_row.iter()) {
+                *o += av * (code as f32 * s);
+            }
+        }
+    };
+    if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
+        parallel_rows_mut(&mut out.data, m, n, |r, row| kernel(r, row));
+    } else {
+        for r in 0..m {
+            let row = &mut out.data[r * n..(r + 1) * n];
+            kernel(r, row);
+        }
+    }
 }
 
 // ====================================================================== CSR
@@ -569,9 +726,22 @@ mod avx2 {
                 return;
             }
             let mut pack = AVec::zeroed(KC * NC);
+            // Tall-k GEMMs (k > KC) copy the chunk's A sub-panel contiguous
+            // once per k-panel (lda drops from k to kw), reused across every
+            // j-block — pure data movement, bit-identical results.
+            let mut apack: Vec<f32> = if k > KC { vec![0.0; rows * KC] } else { Vec::new() };
             let mut kb = 0usize;
             while kb < k {
                 let kw = (k - kb).min(KC);
+                let (a_base, lda) = if k > KC {
+                    for i in 0..rows {
+                        apack[i * kw..(i + 1) * kw]
+                            .copy_from_slice(&a.row(r0 + i)[kb..kb + kw]);
+                    }
+                    (apack.as_ptr(), kw)
+                } else {
+                    (a.data[r0 * k + kb..].as_ptr(), k)
+                };
                 let mut jb = 0usize;
                 while jb < n {
                     let jw = (n - jb).min(NC);
@@ -584,12 +754,13 @@ mod avx2 {
                             let jww = (jw - mp * NR).min(NR);
                             // SAFETY: kind() verified avx2+fma; row/col
                             // ranges are in bounds by the loop limits; the
-                            // pack holds kw*16 floats per micropanel.
+                            // pack holds kw*16 floats per micropanel; a_base
+                            // has `rows` rows of ≥ kw floats at stride lda.
                             unsafe {
                                 simd::mk_nt(
                                     iw,
-                                    a.data.as_ptr().add((r0 + ib) * k + kb),
-                                    k,
+                                    a_base.add(ib * lda),
+                                    lda,
                                     pack.as_ptr().add(mp * kw * NR),
                                     kw,
                                     chunk.as_mut_ptr().add(ib * n + jb + mp * NR),
@@ -811,6 +982,288 @@ mod avx2 {
         }
     }
 
+    // ------------------------------------------------- int8 quant drivers
+
+    /// Int8 twin of [`pack_nt_panel`]: same k-major 16-lane micropanel
+    /// layout over the codes, plus per-lane column scales (`spack`, one f32
+    /// per packed lane, padding lanes 0.0 so their dequant is exactly 0).
+    fn pack_qnt_panel(
+        q: &QuantMatrix,
+        jb: usize,
+        jw: usize,
+        kb: usize,
+        kw: usize,
+        pack: &mut [i8],
+        spack: &mut [f32],
+    ) {
+        let n_mp = jw.div_ceil(NR);
+        for mp in 0..n_mp {
+            let base = mp * kw * NR;
+            let jlo = jb + mp * NR;
+            let jcount = (jb + jw - jlo).min(NR);
+            if jcount < NR {
+                pack[base..base + kw * NR].fill(0);
+                spack[mp * NR..(mp + 1) * NR].fill(0.0);
+            }
+            for lane in 0..jcount {
+                spack[mp * NR + lane] = q.scales[jlo + lane];
+                let row = &q.data[(jlo + lane) * q.cols + kb..(jlo + lane) * q.cols + kb + kw];
+                for (kk, &v) in row.iter().enumerate() {
+                    pack[base + kk * NR + lane] = v;
+                }
+            }
+        }
+    }
+
+    /// Dequant-fused NT driver: identical blocking to [`gemm_nt`]
+    /// (including the tall-k A-panel), with int8 micropanels + scale lanes
+    /// feeding `mk_nt_q`. The memory traffic through the panel drops 4×.
+    pub fn qgemm_nt(a: &Matrix, q: &QuantMatrix, out: &mut Matrix, accumulate: bool) {
+        let (m, n, k) = (a.rows, q.rows, a.cols);
+        let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+            let rows = chunk.len() / n;
+            if !accumulate {
+                chunk.fill(0.0);
+            }
+            if k == 0 {
+                return;
+            }
+            let mut pack = vec![0i8; KC * NC];
+            let mut spack = [0.0f32; NC];
+            let mut apack: Vec<f32> = if k > KC { vec![0.0; rows * KC] } else { Vec::new() };
+            let mut kb = 0usize;
+            while kb < k {
+                let kw = (k - kb).min(KC);
+                let (a_base, lda) = if k > KC {
+                    for i in 0..rows {
+                        apack[i * kw..(i + 1) * kw]
+                            .copy_from_slice(&a.row(r0 + i)[kb..kb + kw]);
+                    }
+                    (apack.as_ptr(), kw)
+                } else {
+                    (a.data[r0 * k + kb..].as_ptr(), k)
+                };
+                let mut jb = 0usize;
+                while jb < n {
+                    let jw = (n - jb).min(NC);
+                    let n_mp = jw.div_ceil(NR);
+                    pack_qnt_panel(q, jb, jw, kb, kw, &mut pack, &mut spack);
+                    let mut ib = 0usize;
+                    while ib < rows {
+                        let iw = (rows - ib).min(MR);
+                        for mp in 0..n_mp {
+                            let jww = (jw - mp * NR).min(NR);
+                            // SAFETY: avx2+fma verified; pack holds kw*16
+                            // codes and spack 16 scales per micropanel;
+                            // a_base has `rows` rows of ≥ kw floats at
+                            // stride lda; ragged C tails are mask-guarded
+                            // inside the microkernel.
+                            unsafe {
+                                simd::mk_nt_q(
+                                    iw,
+                                    a_base.add(ib * lda),
+                                    lda,
+                                    pack.as_ptr().add(mp * kw * NR),
+                                    kw,
+                                    spack.as_ptr().add(mp * NR),
+                                    chunk.as_mut_ptr().add(ib * n + jb + mp * NR),
+                                    n,
+                                    jww,
+                                );
+                            }
+                        }
+                        ib += iw;
+                    }
+                    jb += jw;
+                }
+                kb += kw;
+            }
+        };
+        if m * n * k >= PAR_MIN_FLOPS && m > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, m, n, MR, |r0, chunk| {
+                chunk_kernel(r0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    /// Dequant-fused NN driver (always-accumulate): [`gemm_nn`]'s streamed
+    /// structure with int8 B rows and one broadcast scale per k step.
+    pub fn qgemm_nn(a: &Matrix, q: &QuantMatrix, out: &mut Matrix) {
+        let (m, k, n) = (a.rows, a.cols, q.cols);
+        let n_full = n - n % NR;
+        let jt = n - n_full;
+        let chunk_kernel = |r0: usize, chunk: &mut [f32]| {
+            let rows = chunk.len() / n;
+            if k == 0 {
+                return;
+            }
+            let mut tailpack = vec![0i8; if jt > 0 { KC * NR } else { 0 }];
+            let mut kb = 0usize;
+            while kb < k {
+                let kw = (k - kb).min(KC);
+                if jt > 0 {
+                    // Zero-padded ldb=16 int8 scratch for the column tail.
+                    tailpack.fill(0);
+                    for kk in 0..kw {
+                        let row = &q.data[(kb + kk) * n + n_full..(kb + kk + 1) * n];
+                        tailpack[kk * NR..kk * NR + jt].copy_from_slice(row);
+                    }
+                }
+                let mut ib = 0usize;
+                while ib < rows {
+                    let iw = (rows - ib).min(NN_MR);
+                    let a_ptr = a.data[(r0 + ib) * k + kb..].as_ptr();
+                    let mut jb = 0usize;
+                    while jb < n_full {
+                        // SAFETY: avx2+fma verified; B rows kb..kb+kw each
+                        // have ≥16 readable codes from column jb; scales
+                        // holds kw f32 from kb.
+                        unsafe {
+                            simd::mk_nn_q(
+                                iw,
+                                a_ptr,
+                                k,
+                                q.data.as_ptr().add(kb * n + jb),
+                                n,
+                                q.scales.as_ptr().add(kb),
+                                kw,
+                                chunk.as_mut_ptr().add(ib * n + jb),
+                                n,
+                                NR,
+                            );
+                        }
+                        jb += NR;
+                    }
+                    if jt > 0 {
+                        // SAFETY: scratch rows are exactly 16 codes.
+                        unsafe {
+                            simd::mk_nn_q(
+                                iw,
+                                a_ptr,
+                                k,
+                                tailpack.as_ptr(),
+                                NR,
+                                q.scales.as_ptr().add(kb),
+                                kw,
+                                chunk.as_mut_ptr().add(ib * n + n_full),
+                                n,
+                                jt,
+                            );
+                        }
+                    }
+                    ib += iw;
+                }
+                kb += kw;
+            }
+        };
+        if 2 * m * n * k >= PAR_MIN_FLOPS && m > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, m, n, NN_MR, |r0, chunk| {
+                chunk_kernel(r0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    /// Dequant-fused SpMM drivers: same transposed activation panels as the
+    /// f32 versions, int8 values dequantized per nonzero inside the tile.
+    pub fn qspmm_nt(qcsr: &QuantCsr, x: &Matrix, out: &mut Matrix) {
+        let (bsz, rr, p) = (x.rows, qcsr.rows, qcsr.cols);
+        let chunk_kernel = |b0: usize, chunk: &mut [f32]| {
+            let rows_b = chunk.len() / rr;
+            let mut xt = AVec::zeroed(p * BT);
+            let mut bt = 0usize;
+            while bt < rows_b {
+                let bw = (rows_b - bt).min(BT);
+                if bw < BT {
+                    xt.fill(0.0);
+                }
+                for lane in 0..bw {
+                    let row = x.row(b0 + bt + lane);
+                    for (c, &v) in row.iter().enumerate() {
+                        xt[c * BT + lane] = v;
+                    }
+                }
+                // SAFETY: avx2+fma verified; QuantCsr invariants (validated
+                // on decode) bound col_idx < p and row_ptr monotone; scales
+                // holds one f32 per CSR row.
+                unsafe {
+                    simd::spmm_nt_q_tile(
+                        &qcsr.row_ptr,
+                        &qcsr.col_idx,
+                        &qcsr.values,
+                        &qcsr.scales,
+                        xt.as_ptr(),
+                        chunk.as_mut_ptr().add(bt * rr),
+                        rr,
+                        bw,
+                        rr,
+                    );
+                }
+                bt += bw;
+            }
+        };
+        if bsz * qcsr.nnz() >= PAR_MIN_FLOPS && bsz > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, bsz, rr, BT, |b0, chunk| {
+                chunk_kernel(b0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
+    pub fn qspmm_acc(qcsr: &QuantCsr, h: &Matrix, out: &mut Matrix) {
+        let (bsz, pi, p) = (h.rows, qcsr.rows, qcsr.cols);
+        let chunk_kernel = |b0: usize, chunk: &mut [f32]| {
+            let rows_b = chunk.len() / p;
+            let mut ht = AVec::zeroed(pi * BT);
+            let mut outt = AVec::zeroed(p * BT);
+            let mut bt = 0usize;
+            while bt < rows_b {
+                let bw = (rows_b - bt).min(BT);
+                if bw < BT {
+                    ht.fill(0.0);
+                }
+                for lane in 0..bw {
+                    let row = h.row(b0 + bt + lane);
+                    for (r, &v) in row.iter().enumerate() {
+                        ht[r * BT + lane] = v;
+                    }
+                }
+                outt.fill(0.0);
+                // SAFETY: avx2+fma verified; QuantCsr invariants bound
+                // indices; ht/outt hold pi*8 / p*8 floats.
+                unsafe {
+                    simd::spmm_acc_q_tile(
+                        &qcsr.row_ptr,
+                        &qcsr.col_idx,
+                        &qcsr.values,
+                        &qcsr.scales,
+                        ht.as_ptr(),
+                        outt.as_mut_ptr(),
+                        pi,
+                    );
+                }
+                for lane in 0..bw {
+                    let orow = &mut chunk[(bt + lane) * p..(bt + lane + 1) * p];
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o += outt[c * BT + lane];
+                    }
+                }
+                bt += bw;
+            }
+        };
+        if bsz * qcsr.nnz() >= PAR_MIN_FLOPS && bsz > 1 {
+            parallel_row_chunks_mut_aligned(&mut out.data, bsz, p, BT, |b0, chunk| {
+                chunk_kernel(b0, chunk)
+            });
+        } else {
+            chunk_kernel(0, &mut out.data);
+        }
+    }
+
     // ------------------------------------------------------- elementwise
 
     pub fn silu_mul(h: &mut Matrix, g: &Matrix) {
@@ -892,6 +1345,18 @@ mod avx2 {
     }
     pub fn spmm_acc(csr: &Csr, h: &Matrix, out: &mut Matrix) {
         csr.matmul_acc_scalar(h, out)
+    }
+    pub fn qgemm_nt(a: &Matrix, q: &QuantMatrix, out: &mut Matrix, accumulate: bool) {
+        qgemm_nt_scalar(a, q, out, accumulate)
+    }
+    pub fn qgemm_nn(a: &Matrix, q: &QuantMatrix, out: &mut Matrix) {
+        qgemm_nn_scalar(a, q, out)
+    }
+    pub fn qspmm_nt(qcsr: &QuantCsr, x: &Matrix, out: &mut Matrix) {
+        qcsr.matmul_nt_scalar(x, out)
+    }
+    pub fn qspmm_acc(qcsr: &QuantCsr, h: &Matrix, out: &mut Matrix) {
+        qcsr.matmul_acc_scalar(h, out)
     }
     // Elementwise tier: the ONE scalar implementation (the dispatch
     // functions' Scalar arms) is reused here so the non-x86_64 build can

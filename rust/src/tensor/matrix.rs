@@ -167,19 +167,11 @@ impl Matrix {
         kernel::matmul_tn_with(kernel::kernel_kind(), self, other)
     }
 
-    /// y = self @ x for a vector x.
+    /// y = self @ x for a vector x (per-row `kernel::dot` — FMA lanes under
+    /// AVX2, the plain accumulation loop under the scalar kind).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|r| {
-                let row = self.row(r);
-                let mut acc = 0.0f32;
-                for (a, b) in row.iter().zip(x.iter()) {
-                    acc += a * b;
-                }
-                acc
-            })
-            .collect()
+        (0..self.rows).map(|r| kernel::dot(self.row(r), x)).collect()
     }
 
     // ---------------------------------------------------------- elementwise

@@ -7,6 +7,7 @@ pub mod avec;
 pub mod kernel;
 pub mod linalg;
 pub mod matrix;
+pub mod quant;
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod simd;
 pub mod sparse;
@@ -15,5 +16,6 @@ pub mod svd;
 pub use avec::AVec;
 pub use kernel::{kernel_kind, kernel_label, KernelKind};
 pub use matrix::Matrix;
+pub use quant::{QuantCsr, QuantMatrix};
 pub use sparse::{Coo, Csr, IndexWidth};
 pub use svd::Svd;

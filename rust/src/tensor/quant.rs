@@ -1,0 +1,542 @@
+//! Int8 symmetric quantization for residual shards (PR 6).
+//!
+//! ResMoE keeps the shared barycenter `W_ω` in f32 and compresses only the
+//! per-expert residual Δ_k; this module adds the int8 tier for those
+//! residuals: per-row symmetric scales (`scale_r = absmax_r / 127`, code =
+//! `round(v / scale)` clamped to ±127), so dequantization is a single f32
+//! multiply `code as f32 * scale` — one rounding per element.
+//!
+//! **Numerics contract.** The dequant-fused kernels (`kernel::qmatmul_*`)
+//! compute exactly that dequantized value in-register and then run the
+//! *identical* FMA fold as the f32 kernels of the same [`KernelKind`], so
+//! `fused(q) == gemm(dequant(q))` holds BITWISE per kind. Quantization
+//! error against the original f32 residual is bounded per element by
+//! `0.5 · scale_r` (plus a small f32-rounding slack); [`QuantMatrix::
+//! abs_error_bound`] advertises that bound and the pack/store layers carry
+//! it per shard so serve paths can property-test against it.
+
+use super::matrix::Matrix;
+use super::sparse::{Csr, IndexWidth};
+use crate::tensor::kernel::{self, KernelKind};
+
+/// Multiplicative slack on the `0.5·scale` error bound covering the f32
+/// roundings in `v/scale` and `code·scale` (each exact to within half an
+/// ulp; 1e-3 is orders of magnitude more than needed and keeps the bound a
+/// one-liner).
+pub const QUANT_BOUND_SLACK: f32 = 1.0 + 1e-3;
+
+/// Dense row-major int8 matrix with one symmetric scale per row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major codes; value = `data[r*cols + c] as f32 * scales[r]`.
+    pub data: Vec<i8>,
+    /// Per-row dequantization scales (`absmax_r / 127`; 0.0 for zero rows).
+    pub scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a dense f32 matrix with per-row symmetric scales.
+    pub fn quantize(m: &Matrix) -> QuantMatrix {
+        let mut data = vec![0i8; m.rows * m.cols];
+        let mut scales = vec![0.0f32; m.rows];
+        for r in 0..m.rows {
+            let row = m.row(r);
+            let mut absmax = 0.0f32;
+            for &v in row {
+                absmax = absmax.max(v.abs());
+            }
+            if absmax == 0.0 {
+                continue; // zero row: scale 0.0, codes stay 0
+            }
+            let scale = absmax / 127.0;
+            scales[r] = scale;
+            for (o, &v) in data[r * m.cols..(r + 1) * m.cols].iter_mut().zip(row) {
+                *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantMatrix { rows: m.rows, cols: m.cols, data, scales }
+    }
+
+    /// Dequantize to a dense f32 matrix (the reference the fused kernels
+    /// must match bitwise).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            let codes = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (o, &q) in out.row_mut(r).iter_mut().zip(codes) {
+                *o = q as f32 * s;
+            }
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Storage bytes: 1 byte per code + one f32 scale per row.
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() + self.rows * 4
+    }
+
+    /// Advertised per-element |orig − dequant| bound: `0.5 · max_r scale_r`
+    /// with [`QUANT_BOUND_SLACK`].
+    pub fn abs_error_bound(&self) -> f32 {
+        let maxs = self.scales.iter().cloned().fold(0.0f32, f32::max);
+        0.5 * maxs * QUANT_BOUND_SLACK
+    }
+
+    /// Columns `[lo, hi)` as a new quantized matrix (scales are per row, so
+    /// a column slice keeps them — still a valid quantization of the sliced
+    /// dequantized matrix under the same bound).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> QuantMatrix {
+        assert!(lo <= hi && hi <= self.cols, "quant slice_cols range");
+        let w = hi - lo;
+        let mut data = vec![0i8; self.rows * w];
+        for r in 0..self.rows {
+            data[r * w..(r + 1) * w]
+                .copy_from_slice(&self.data[r * self.cols + lo..r * self.cols + hi]);
+        }
+        QuantMatrix { rows: self.rows, cols: w, data, scales: self.scales.clone() }
+    }
+
+    /// Column `c` dequantized (splits bias deltas out of a quantized design
+    /// matrix, mirroring `Csr::col_dense`).
+    pub fn col_dense(&self, c: usize) -> Vec<f32> {
+        assert!(c < self.cols, "quant col_dense range");
+        (0..self.rows).map(|r| self.data[r * self.cols + c] as f32 * self.scales[r]).collect()
+    }
+
+    /// out (+)= x @ selfᵀ with dequantization fused into the microkernel
+    /// (no materialized f32 matrix). Bitwise equal to
+    /// `x.matmul_nt(&self.to_dense())` under the same kernel kind.
+    pub fn matmul_nt_into(&self, x: &Matrix, out: &mut Matrix, accumulate: bool) {
+        self.matmul_nt_into_with(kernel::kernel_kind(), x, out, accumulate);
+    }
+
+    /// [`Self::matmul_nt_into`] under an explicit kernel kind.
+    pub fn matmul_nt_into_with(
+        &self,
+        kind: KernelKind,
+        x: &Matrix,
+        out: &mut Matrix,
+        accumulate: bool,
+    ) {
+        kernel::qmatmul_nt_into_with(kind, x, self, out, accumulate);
+    }
+
+    /// out += h @ self (NN orientation; the fused down-projection
+    /// correction), dequant-fused.
+    pub fn matmul_acc_into(&self, h: &Matrix, out: &mut Matrix) {
+        self.matmul_acc_into_with(kernel::kernel_kind(), h, out);
+    }
+
+    /// [`Self::matmul_acc_into`] under an explicit kernel kind.
+    pub fn matmul_acc_into_with(&self, kind: KernelKind, h: &Matrix, out: &mut Matrix) {
+        kernel::qmatmul_acc_into_with(kind, h, self, out);
+    }
+}
+
+/// CSR sparse matrix with int8 values and one symmetric scale per row
+/// (structure mirrors [`Csr`]; indices stay at the accounted width).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantCsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<i8>,
+    /// Per-row scales over the row's nonzeros (0.0 for empty/zero rows).
+    pub scales: Vec<f32>,
+    pub index_width: IndexWidth,
+}
+
+impl QuantCsr {
+    /// Quantize an f32 CSR's values with per-row symmetric scales (the
+    /// sparsity pattern is preserved exactly).
+    pub fn quantize(csr: &Csr) -> QuantCsr {
+        let mut values = vec![0i8; csr.nnz()];
+        let mut scales = vec![0.0f32; csr.rows];
+        for r in 0..csr.rows {
+            let lo = csr.row_ptr[r] as usize;
+            let hi = csr.row_ptr[r + 1] as usize;
+            let mut absmax = 0.0f32;
+            for &v in &csr.values[lo..hi] {
+                absmax = absmax.max(v.abs());
+            }
+            if absmax == 0.0 {
+                continue;
+            }
+            let scale = absmax / 127.0;
+            scales[r] = scale;
+            for (o, &v) in values[lo..hi].iter_mut().zip(&csr.values[lo..hi]) {
+                *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantCsr {
+            rows: csr.rows,
+            cols: csr.cols,
+            row_ptr: csr.row_ptr.clone(),
+            col_idx: csr.col_idx.clone(),
+            values,
+            scales,
+            index_width: csr.index_width,
+        }
+    }
+
+    /// Dequantize to an f32 CSR (reference for the bitwise-fused contract).
+    pub fn to_csr(&self) -> Csr {
+        let mut values = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                values[i] = self.values[i] as f32 * s;
+            }
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            values,
+            index_width: self.index_width,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.nnz()
+    }
+
+    /// Storage bytes: 1-byte values + accounted-width col indices + u32 row
+    /// pointers + per-row f32 scales.
+    pub fn memory_bytes(&self) -> usize {
+        self.nnz() * (self.index_width.bytes() + 1) + (self.rows + 1) * 4 + self.rows * 4
+    }
+
+    /// Advertised per-nonzero |orig − dequant| bound (`0.5 · max_r scale_r`
+    /// with slack); zeros are stored structurally and carry no error.
+    pub fn abs_error_bound(&self) -> f32 {
+        let maxs = self.scales.iter().cloned().fold(0.0f32, f32::max);
+        0.5 * maxs * QUANT_BOUND_SLACK
+    }
+
+    /// Columns `[lo, hi)` with rebased indices (per-row scales survive a
+    /// column slice unchanged).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> QuantCsr {
+        assert!(lo <= hi && hi <= self.cols, "quant csr slice_cols range");
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                let c = self.col_idx[i] as usize;
+                if c >= lo && c < hi {
+                    col_idx.push((c - lo) as u32);
+                    values.push(self.values[i]);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        QuantCsr {
+            rows: self.rows,
+            cols: hi - lo,
+            row_ptr,
+            col_idx,
+            values,
+            scales: self.scales.clone(),
+            index_width: self.index_width,
+        }
+    }
+
+    /// Column `c` dequantized.
+    pub fn col_dense(&self, c: usize) -> Vec<f32> {
+        assert!(c < self.cols, "quant csr col_dense range");
+        let mut out = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                if self.col_idx[i] as usize == c {
+                    out[r] = self.values[i] as f32 * self.scales[r];
+                }
+            }
+        }
+        out
+    }
+
+    /// out (+)= x @ selfᵀ, dequant-fused SpMM. Bitwise equal to
+    /// `self.to_csr().matmul_nt_into(..)` under the same kernel kind.
+    pub fn matmul_nt_into(&self, x: &Matrix, out: &mut Matrix, accumulate: bool) {
+        self.matmul_nt_into_with(kernel::kernel_kind(), x, out, accumulate);
+    }
+
+    /// [`Self::matmul_nt_into`] under an explicit kernel kind.
+    pub fn matmul_nt_into_with(
+        &self,
+        kind: KernelKind,
+        x: &Matrix,
+        out: &mut Matrix,
+        accumulate: bool,
+    ) {
+        kernel::qcsr_matmul_nt_into_with(kind, self, x, out, accumulate);
+    }
+
+    /// out += h @ self, dequant-fused.
+    pub fn matmul_acc_into(&self, h: &Matrix, out: &mut Matrix) {
+        self.matmul_acc_into_with(kernel::kernel_kind(), h, out);
+    }
+
+    /// [`Self::matmul_acc_into`] under an explicit kernel kind.
+    pub fn matmul_acc_into_with(&self, kind: KernelKind, h: &Matrix, out: &mut Matrix) {
+        kernel::qcsr_matmul_acc_into_with(kind, self, h, out);
+    }
+
+    /// Scalar dequant-fused SpMM twin (mirrors `Csr::matmul_nt_scalar`
+    /// with `v = code·scale_r` computed inline — same single rounding as a
+    /// materialized dequant, so results are bitwise equal to it).
+    pub(crate) fn matmul_nt_scalar(&self, x: &Matrix, out: &mut Matrix) {
+        let row_kernel = |b: usize, out_row: &mut [f32]| {
+            let x_row = x.row(b);
+            for r in 0..self.rows {
+                let lo = self.row_ptr[r] as usize;
+                let hi = self.row_ptr[r + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                let s = self.scales[r];
+                let mut acc = 0.0f32;
+                for i in lo..hi {
+                    acc += (self.values[i] as f32 * s) * x_row[self.col_idx[i] as usize];
+                }
+                out_row[r] += acc;
+            }
+        };
+        if x.rows * self.nnz() >= crate::tensor::matrix::PAR_MIN_FLOPS && x.rows > 1 {
+            crate::util::threads::parallel_rows_mut(&mut out.data, x.rows, self.rows, |b, row| {
+                row_kernel(b, row)
+            });
+        } else {
+            for b in 0..x.rows {
+                let row = &mut out.data[b * self.rows..(b + 1) * self.rows];
+                row_kernel(b, row);
+            }
+        }
+    }
+
+    /// Scalar dequant-fused down-projection twin (mirrors
+    /// `Csr::matmul_acc_scalar`; the `hv == 0` skip depends only on `h`).
+    pub(crate) fn matmul_acc_scalar(&self, h: &Matrix, out: &mut Matrix) {
+        for b in 0..h.rows {
+            let h_row = h.row(b);
+            let out_row = out.row_mut(b);
+            for r in 0..self.rows {
+                let hv = h_row[r];
+                if hv == 0.0 {
+                    continue;
+                }
+                let s = self.scales[r];
+                for i in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                    out_row[self.col_idx[i] as usize] += hv * (self.values[i] as f32 * s);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn active_kinds() -> Vec<KernelKind> {
+        let mut kinds = vec![KernelKind::Scalar];
+        if kernel::kernel_kind() != KernelKind::Scalar {
+            kinds.push(kernel::kernel_kind());
+        }
+        kinds
+    }
+
+    #[test]
+    fn dense_roundtrip_within_bound() {
+        let mut rng = Rng::new(60);
+        for (r, c) in [(1usize, 1usize), (7, 13), (16, 64), (33, 5)] {
+            let m = Matrix::randn(r, c, 1.5, &mut rng);
+            let q = QuantMatrix::quantize(&m);
+            let back = q.to_dense();
+            let bound = q.abs_error_bound();
+            let mut worst = 0.0f32;
+            for (a, b) in m.data.iter().zip(&back.data) {
+                worst = worst.max((a - b).abs());
+            }
+            assert!(worst <= bound, "{r}x{c}: err {worst} > bound {bound}");
+            assert!(bound > 0.0);
+            // int8 + per-row scales must be ≤ ~0.30× the f32 bytes at these
+            // shapes (4 bytes → 1 byte + scale amortized over the row).
+            assert!(q.memory_bytes() * 100 <= m.data.len() * 4 * 30 + 400);
+        }
+    }
+
+    #[test]
+    fn zero_and_constant_rows() {
+        let m = Matrix::from_vec(3, 4, vec![0.0; 12]);
+        let q = QuantMatrix::quantize(&m);
+        assert!(q.scales.iter().all(|&s| s == 0.0));
+        assert_eq!(q.to_dense().data, m.data);
+        assert_eq!(q.abs_error_bound(), 0.0);
+        // A constant row quantizes exactly: code ±127 times absmax/127.
+        let c = Matrix::from_vec(1, 3, vec![2.0, -2.0, 2.0]);
+        let qc = QuantMatrix::quantize(&c);
+        assert_eq!(qc.data, vec![127, -127, 127]);
+    }
+
+    #[test]
+    fn csr_roundtrip_preserves_pattern_and_bound() {
+        let mut rng = Rng::new(61);
+        let dense = Matrix::from_fn(14, 9, |_, _| {
+            if rng.uniform() < 0.3 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let csr = Csr::from_dense(&dense, IndexWidth::U16);
+        let q = QuantCsr::quantize(&csr);
+        let back = q.to_csr();
+        assert_eq!(back.row_ptr, csr.row_ptr);
+        assert_eq!(back.col_idx, csr.col_idx);
+        let bound = q.abs_error_bound();
+        for (a, b) in csr.values.iter().zip(&back.values) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn fused_nt_matches_dequant_then_gemm_bitwise() {
+        let mut rng = Rng::new(62);
+        for (b, n, k) in [(1usize, 5usize, 9usize), (7, 17, 31), (6, 16, 64), (9, 40, 300)] {
+            let w = Matrix::randn(n, k, 1.0, &mut rng);
+            let q = QuantMatrix::quantize(&w);
+            let dq = q.to_dense();
+            let x = Matrix::randn(b, k, 1.0, &mut rng);
+            for kind in active_kinds() {
+                let mut fused = Matrix::zeros(b, n);
+                q.matmul_nt_into_with(kind, &x, &mut fused, false);
+                let mut want = Matrix::zeros(b, n);
+                kernel::matmul_nt_into_with(kind, &x, &dq, &mut want, false);
+                assert_eq!(fused.data, want.data, "{kind:?} nt {b}x{k}@{n}");
+                // Accumulating form too.
+                let seed = Matrix::randn(b, n, 1.0, &mut rng);
+                let mut facc = seed.clone();
+                q.matmul_nt_into_with(kind, &x, &mut facc, true);
+                let mut wacc = seed.clone();
+                kernel::matmul_nt_into_with(kind, &x, &dq, &mut wacc, true);
+                assert_eq!(facc.data, wacc.data, "{kind:?} nt-acc {b}x{k}@{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_nn_matches_dequant_then_gemm_bitwise() {
+        let mut rng = Rng::new(63);
+        for (b, k, n) in [(1usize, 4usize, 7usize), (5, 17, 16), (8, 30, 33), (3, 64, 224)] {
+            let w = Matrix::randn(k, n, 1.0, &mut rng);
+            let q = QuantMatrix::quantize(&w);
+            let dq = q.to_dense();
+            let mut h = Matrix::randn(b, k, 1.0, &mut rng);
+            // Sprinkle exact zeros to exercise the av==0 skip.
+            for i in 0..h.data.len() {
+                if i % 5 == 0 {
+                    h.data[i] = 0.0;
+                }
+            }
+            for kind in active_kinds() {
+                let seed = Matrix::randn(b, n, 1.0, &mut rng);
+                let mut fused = seed.clone();
+                q.matmul_acc_into_with(kind, &h, &mut fused);
+                let mut want = seed.clone();
+                kernel::matmul_into_with(kind, &h, &dq, &mut want, true);
+                assert_eq!(fused.data, want.data, "{kind:?} nn {b}x{k}@{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_csr_matches_dequant_then_spmm_bitwise() {
+        let mut rng = Rng::new(64);
+        for density in [0.0, 0.25, 1.0] {
+            let dense = Matrix::from_fn(14, 9, |_, _| {
+                if rng.uniform() < density {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            });
+            let csr = Csr::from_dense(&dense, IndexWidth::U16);
+            let q = QuantCsr::quantize(&csr);
+            let dq = q.to_csr();
+            for b in [1usize, 8, 9] {
+                let x = Matrix::randn(b, 9, 1.0, &mut rng);
+                let h = Matrix::randn(b, 14, 1.0, &mut rng);
+                for kind in active_kinds() {
+                    let mut fused = Matrix::zeros(b, 14);
+                    q.matmul_nt_into_with(kind, &x, &mut fused, false);
+                    let mut want = Matrix::zeros(b, 14);
+                    dq.matmul_nt_into_with(kind, &x, &mut want, false);
+                    assert_eq!(fused.data, want.data, "{kind:?} qcsr nt d={density} b={b}");
+
+                    let seed = Matrix::randn(b, 9, 1.0, &mut rng);
+                    let mut facc = seed.clone();
+                    q.matmul_acc_into_with(kind, &h, &mut facc);
+                    let mut wacc = seed.clone();
+                    dq.matmul_acc_into_with(kind, &h, &mut wacc);
+                    assert_eq!(facc.data, wacc.data, "{kind:?} qcsr acc d={density} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_rows_are_batch_position_independent() {
+        // The serving parity micro-theorem extends to the quantized tier
+        // under the active kernel: row results don't depend on batch splits.
+        let mut rng = Rng::new(65);
+        let w = Matrix::randn(21, 19, 1.0, &mut rng);
+        let q = QuantMatrix::quantize(&w);
+        let xa = Matrix::randn(4, 19, 1.0, &mut rng);
+        let xb = Matrix::randn(3, 19, 1.0, &mut rng);
+        let cat = xa.vcat(&xb);
+        let mut full = Matrix::zeros(7, 21);
+        q.matmul_nt_into(&cat, &mut full, false);
+        let mut ya = Matrix::zeros(4, 21);
+        q.matmul_nt_into(&xa, &mut ya, false);
+        let mut yb = Matrix::zeros(3, 21);
+        q.matmul_nt_into(&xb, &mut yb, false);
+        assert_eq!(full.data, ya.vcat(&yb).data);
+    }
+
+    #[test]
+    fn slice_cols_and_col_dense_match_dense_ops() {
+        let mut rng = Rng::new(66);
+        let m = Matrix::randn(11, 13, 1.0, &mut rng);
+        let q = QuantMatrix::quantize(&m);
+        let dq = q.to_dense();
+        assert_eq!(q.slice_cols(3, 9).to_dense().data, dq.slice_cols(3, 9).data);
+        assert_eq!(q.slice_cols(0, 13).to_dense().data, dq.data);
+        for c in 0..13 {
+            assert_eq!(q.col_dense(c), dq.col(c));
+        }
+        let sparse = Matrix::from_fn(11, 13, |r, c| if (r + c) % 3 == 0 { 0.7 } else { 0.0 });
+        let qc = QuantCsr::quantize(&Csr::from_dense(&sparse, IndexWidth::U16));
+        let dqc = qc.to_csr();
+        assert_eq!(qc.slice_cols(2, 10).to_csr().to_dense().data, dqc.to_dense().slice_cols(2, 10).data);
+        for c in 0..13 {
+            assert_eq!(qc.col_dense(c), dqc.col_dense(c));
+        }
+    }
+}

@@ -165,6 +165,132 @@ pub unsafe fn mk_nt(
     }
 }
 
+// --------------------------------------- int8 dequant-fused NT microkernels
+// Same C-tile/fold as mk_nt, but the packed B micropanel holds int8 codes
+// (k-major, 16 lanes per k step) plus a 16-lane per-column scale vector.
+// Each k step converts 16 codes to f32 in registers and multiplies by the
+// scales — ONE rounding, identical to a materialized `code as f32 * scale`
+// dequant — then runs the byte-identical FMA fold, so the fused kernel is
+// bitwise equal to dequant-then-GEMM under this kernel kind. Ragged column
+// tails use masked loads/stores (mask depends only on `jw`, never on the
+// row, preserving the determinism contract).
+
+/// Lane masks for a ragged 16-wide column tail: lane `j` of the first
+/// (second) mask is all-ones iff `j < jw` (`j + 8 < jw`).
+///
+/// # Safety
+/// avx2+fma verified.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn tail_masks(jw: usize) -> (__m256i, __m256i) {
+    let idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let m0 = _mm256_cmpgt_epi32(_mm256_set1_epi32(jw as i32), idx);
+    let m1 = _mm256_cmpgt_epi32(_mm256_set1_epi32(jw as i32 - 8), idx);
+    (m0, m1)
+}
+
+/// 16 int8 codes at `p` → two 8-lane f32 vectors scaled by `(s0, s1)`.
+///
+/// # Safety
+/// avx2+fma verified; 16 readable bytes at `p`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dequant16(p: *const i8, s0: __m256, s1: __m256) -> (__m256, __m256) {
+    let raw = _mm_loadu_si128(p as *const __m128i);
+    let lo = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(raw));
+    let hi = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(raw)));
+    (_mm256_mul_ps(lo, s0), _mm256_mul_ps(hi, s1))
+}
+
+macro_rules! mk_nt_q_r {
+    ($name:ident, $rows:expr) => {
+        /// # Safety
+        /// avx2+fma verified; `a` has `$rows` rows of ≥ `kw` floats at
+        /// stride `lda`; `pack` holds `kw*16` int8 codes; `scales` points
+        /// at 16 readable f32 (per-lane column scales, padding lanes 0.0);
+        /// `c` has `$rows` rows of ≥ `jw` floats at stride `ldc`; `jw ≤ 16`.
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            pack: *const i8,
+            kw: usize,
+            scales: *const f32,
+            c: *mut f32,
+            ldc: usize,
+            jw: usize,
+        ) {
+            let s0 = _mm256_loadu_ps(scales);
+            let s1 = _mm256_loadu_ps(scales.add(8));
+            let mut acc = [[_mm256_setzero_ps(); 2]; $rows];
+            let mut p = pack;
+            for kk in 0..kw {
+                let (b0, b1) = dequant16(p, s0, s1);
+                p = p.add(16);
+                for r in 0..$rows {
+                    let av = _mm256_broadcast_ss(&*a.add(r * lda + kk));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            if jw == 16 {
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    _mm256_storeu_ps(cr, _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]));
+                    let cr8 = cr.add(8);
+                    _mm256_storeu_ps(cr8, _mm256_add_ps(_mm256_loadu_ps(cr8), acc[r][1]));
+                }
+            } else {
+                // Padding lanes of acc are exactly 0 (zero codes × any
+                // scale), and the masks keep them from touching memory.
+                let (m0, m1) = tail_masks(jw);
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    let cur0 = _mm256_maskload_ps(cr, m0);
+                    _mm256_maskstore_ps(cr, m0, _mm256_add_ps(cur0, acc[r][0]));
+                    let cr8 = cr.add(8);
+                    let cur1 = _mm256_maskload_ps(cr8, m1);
+                    _mm256_maskstore_ps(cr8, m1, _mm256_add_ps(cur1, acc[r][1]));
+                }
+            }
+        }
+    };
+}
+
+mk_nt_q_r!(mk_nt_q_1, 1);
+mk_nt_q_r!(mk_nt_q_2, 2);
+mk_nt_q_r!(mk_nt_q_3, 3);
+mk_nt_q_r!(mk_nt_q_4, 4);
+mk_nt_q_r!(mk_nt_q_5, 5);
+mk_nt_q_r!(mk_nt_q_6, 6);
+
+/// Row-count dispatcher for the int8 NT microkernel (`rows ∈ 1..=6`).
+///
+/// # Safety
+/// See the per-kernel contract in [`mk_nt_q_r`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn mk_nt_q(
+    rows: usize,
+    a: *const f32,
+    lda: usize,
+    pack: *const i8,
+    kw: usize,
+    scales: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    jw: usize,
+) {
+    match rows {
+        1 => mk_nt_q_1(a, lda, pack, kw, scales, c, ldc, jw),
+        2 => mk_nt_q_2(a, lda, pack, kw, scales, c, ldc, jw),
+        3 => mk_nt_q_3(a, lda, pack, kw, scales, c, ldc, jw),
+        4 => mk_nt_q_4(a, lda, pack, kw, scales, c, ldc, jw),
+        5 => mk_nt_q_5(a, lda, pack, kw, scales, c, ldc, jw),
+        6 => mk_nt_q_6(a, lda, pack, kw, scales, c, ldc, jw),
+        _ => unreachable!("mk_nt_q rows must be 1..=6"),
+    }
+}
+
 // ------------------------------------------------- GEMM NN microkernels
 // C-tile (R x 16) += A-rows x B-strip, B streamed row-major at stride ldb
 // (each k step loads B[k][j..j+16] contiguously — no packing needed except
@@ -248,6 +374,95 @@ pub unsafe fn mk_nn(
         3 => mk_nn_3(a, lda, b, ldb, kw, c, ldc, jw),
         4 => mk_nn_4(a, lda, b, ldb, kw, c, ldc, jw),
         _ => unreachable!("mk_nn rows must be 1..=4"),
+    }
+}
+
+// --------------------------------------- int8 dequant-fused NN microkernels
+// B is streamed as int8 rows (stride `ldb` codes) with ONE scale per k step
+// (B rows are the quantization rows here), broadcast and multiplied after
+// the register conversion — again one rounding, bitwise equal to a
+// materialized dequant feeding mk_nn. Ragged tails via masked stores.
+
+macro_rules! mk_nn_q_r {
+    ($name:ident, $rows:expr) => {
+        /// # Safety
+        /// avx2+fma verified; `a`: `$rows` rows of ≥ `kw` floats at stride
+        /// `lda`; `b`: `kw` rows of ≥ 16 readable int8 codes at stride
+        /// `ldb`; `scales`: `kw` readable f32 (per B-row); `c`: `$rows`
+        /// rows of ≥ `jw` floats at stride `ldc`; `jw ≤ 16`.
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            lda: usize,
+            b: *const i8,
+            ldb: usize,
+            scales: *const f32,
+            kw: usize,
+            c: *mut f32,
+            ldc: usize,
+            jw: usize,
+        ) {
+            let mut acc = [[_mm256_setzero_ps(); 2]; $rows];
+            for kk in 0..kw {
+                let sv = _mm256_broadcast_ss(&*scales.add(kk));
+                let (b0, b1) = dequant16(b.add(kk * ldb), sv, sv);
+                for r in 0..$rows {
+                    let av = _mm256_broadcast_ss(&*a.add(r * lda + kk));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            if jw == 16 {
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    _mm256_storeu_ps(cr, _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]));
+                    let cr8 = cr.add(8);
+                    _mm256_storeu_ps(cr8, _mm256_add_ps(_mm256_loadu_ps(cr8), acc[r][1]));
+                }
+            } else {
+                let (m0, m1) = tail_masks(jw);
+                for r in 0..$rows {
+                    let cr = c.add(r * ldc);
+                    let cur0 = _mm256_maskload_ps(cr, m0);
+                    _mm256_maskstore_ps(cr, m0, _mm256_add_ps(cur0, acc[r][0]));
+                    let cr8 = cr.add(8);
+                    let cur1 = _mm256_maskload_ps(cr8, m1);
+                    _mm256_maskstore_ps(cr8, m1, _mm256_add_ps(cur1, acc[r][1]));
+                }
+            }
+        }
+    };
+}
+
+mk_nn_q_r!(mk_nn_q_1, 1);
+mk_nn_q_r!(mk_nn_q_2, 2);
+mk_nn_q_r!(mk_nn_q_3, 3);
+mk_nn_q_r!(mk_nn_q_4, 4);
+
+/// Row-count dispatcher for the int8 NN microkernel (`rows ∈ 1..=4`).
+///
+/// # Safety
+/// See the per-kernel contract in [`mk_nn_q_r`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn mk_nn_q(
+    rows: usize,
+    a: *const f32,
+    lda: usize,
+    b: *const i8,
+    ldb: usize,
+    scales: *const f32,
+    kw: usize,
+    c: *mut f32,
+    ldc: usize,
+    jw: usize,
+) {
+    match rows {
+        1 => mk_nn_q_1(a, lda, b, ldb, scales, kw, c, ldc, jw),
+        2 => mk_nn_q_2(a, lda, b, ldb, scales, kw, c, ldc, jw),
+        3 => mk_nn_q_3(a, lda, b, ldb, scales, kw, c, ldc, jw),
+        4 => mk_nn_q_4(a, lda, b, ldb, scales, kw, c, ldc, jw),
+        _ => unreachable!("mk_nn_q rows must be 1..=4"),
     }
 }
 
@@ -351,6 +566,82 @@ pub unsafe fn spmm_acc_tile(
         let hi = *row_ptr.get_unchecked(r + 1) as usize;
         for i in lo..hi {
             let v = _mm256_broadcast_ss(values.get_unchecked(i));
+            let c = *col_idx.get_unchecked(i) as usize * 8;
+            let o = _mm256_loadu_ps(outt.add(c));
+            _mm256_storeu_ps(outt.add(c), _mm256_fmadd_ps(v, hv, o));
+        }
+    }
+}
+
+/// Int8 twin of [`spmm_nt_tile`]: each nonzero dequantizes as
+/// `code as f32 * scale_r` in scalar registers (the same single rounding as
+/// a materialized dequant) before the identical broadcast-FMA fold, so the
+/// fused SpMM is bitwise equal to `to_csr()` + [`spmm_nt_tile`].
+///
+/// # Safety
+/// As [`spmm_nt_tile`], with `values` int8 and `scales` holding `n_rows`
+/// readable f32 (per CSR row).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn spmm_nt_q_tile(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    values: &[i8],
+    scales: &[f32],
+    xt: *const f32,
+    out: *mut f32,
+    ldo: usize,
+    bw: usize,
+    n_rows: usize,
+) {
+    for r in 0..n_rows {
+        let lo = *row_ptr.get_unchecked(r) as usize;
+        let hi = *row_ptr.get_unchecked(r + 1) as usize;
+        if lo == hi {
+            continue;
+        }
+        let s = *scales.get_unchecked(r);
+        let mut acc = _mm256_setzero_ps();
+        for i in lo..hi {
+            let v = _mm256_set1_ps(*values.get_unchecked(i) as f32 * s);
+            let c = *col_idx.get_unchecked(i) as usize;
+            acc = _mm256_fmadd_ps(v, _mm256_loadu_ps(xt.add(c * 8)), acc);
+        }
+        let mut tmp = [0.0f32; 8];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+        for (lane, t) in tmp.iter().enumerate().take(bw) {
+            *out.add(lane * ldo + r) += t;
+        }
+    }
+}
+
+/// Int8 twin of [`spmm_acc_tile`] (same scalar-register dequant, same
+/// all-zero-h-lane skip — the skip predicate reads only `h`).
+///
+/// # Safety
+/// As [`spmm_acc_tile`], with `values` int8 and `scales` holding `n_rows`
+/// readable f32.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn spmm_acc_q_tile(
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    values: &[i8],
+    scales: &[f32],
+    ht: *const f32,
+    outt: *mut f32,
+    n_rows: usize,
+) {
+    let zero = _mm256_setzero_ps();
+    for r in 0..n_rows {
+        let hv = _mm256_loadu_ps(ht.add(r * 8));
+        if _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(hv, zero)) == 0xff {
+            continue;
+        }
+        let s = *scales.get_unchecked(r);
+        let lo = *row_ptr.get_unchecked(r) as usize;
+        let hi = *row_ptr.get_unchecked(r + 1) as usize;
+        for i in lo..hi {
+            let v = _mm256_set1_ps(*values.get_unchecked(i) as f32 * s);
             let c = *col_idx.get_unchecked(i) as usize * 8;
             let o = _mm256_loadu_ps(outt.add(c));
             _mm256_storeu_ps(outt.add(c), _mm256_fmadd_ps(v, hv, o));

@@ -13,6 +13,7 @@ pub trait PutLe {
     fn put_f32(&mut self, v: f32);
     fn put_f32s(&mut self, vs: &[f32]);
     fn put_u32s(&mut self, vs: &[u32]);
+    fn put_i8s(&mut self, vs: &[i8]);
 }
 
 impl PutLe for Vec<u8> {
@@ -39,6 +40,10 @@ impl PutLe for Vec<u8> {
         for v in vs {
             self.extend_from_slice(&v.to_le_bytes());
         }
+    }
+    fn put_i8s(&mut self, vs: &[i8]) {
+        // i8 → u8 is a bit-preserving two's-complement cast.
+        self.extend(vs.iter().map(|&v| v as u8));
     }
 }
 
@@ -96,6 +101,11 @@ impl<'a> ByteReader<'a> {
             .collect())
     }
 
+    pub fn i8s(&mut self, n: usize) -> Result<Vec<i8>> {
+        let b = self.take(n)?;
+        Ok(b.iter().map(|&v| v as i8).collect())
+    }
+
     pub fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
         let b = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
         Ok(b.chunks_exact(4)
@@ -126,12 +136,14 @@ mod tests {
         buf.put_f32(-1.5);
         buf.put_f32s(&[0.0, 3.25]);
         buf.put_u32s(&[1, 2, 3]);
+        buf.put_i8s(&[-128, -1, 0, 127]);
         let mut r = ByteReader::new(&buf);
         assert_eq!(r.u8().unwrap(), 7);
         assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
         assert_eq!(r.u64().unwrap(), 1 << 40);
         assert_eq!(r.f32s(3).unwrap(), vec![-1.5, 0.0, 3.25]);
         assert_eq!(r.u32s(3).unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.i8s(4).unwrap(), vec![-128, -1, 0, 127]);
         r.expect_done().unwrap();
     }
 

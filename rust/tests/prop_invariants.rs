@@ -396,6 +396,89 @@ fn prop_store_pack_load_roundtrips_bit_exactly() {
 }
 
 #[test]
+fn prop_quantized_pack_load_restores_within_advertised_bound() {
+    // The int8 tier end-to-end: quantize → pack → load returns the
+    // quantized layer BIT-exact (codes, scales, `qerr` index field), and
+    // its restoration stays within each expert's advertised per-element
+    // error bound of the f32 original — at the rate edges {0, 1} and the
+    // paper's 0.25, for sparse (UP) and low-rank (SVD) residuals alike.
+    use resmoe::moe::{Model, ModelConfig};
+    use resmoe::store::{pack_compressed_model, quantize_layer, ExpertStore};
+    let dir = std::env::temp_dir().join("resmoe-prop-store");
+    std::fs::create_dir_all(&dir).unwrap();
+    check(
+        PropConfig { cases: 12, seed: 0x0178BD },
+        |rng| {
+            let layer = random_layer(rng);
+            let seed = rng.next_u64();
+            let rate = [0.0, 0.25, 1.0][rng.below(3)];
+            let svd = rng.below(2) == 1;
+            (layer, seed, rate, svd)
+        },
+        |(layer, seed, rate, svd)| {
+            let comp = if *svd { ResMoE::svd() } else { ResMoE::up() };
+            let cl = quick_compress(&comp, layer, *rate, *seed);
+            let clq = quantize_layer(&cl);
+            let mut cfg = ModelConfig::switch_mini(layer.n_experts());
+            cfg.d_model = layer.experts[0].d_model();
+            cfg.d_inner = layer.experts[0].d_inner();
+            cfg.n_layers = 2;
+            cfg.n_heads = 1;
+            cfg.vocab_size = 32;
+            cfg.max_seq = 16;
+            let mut mrng = Rng::new(*seed);
+            let model = Model::random(&cfg, &mut mrng);
+            let path = dir.join(format!("qrt-{seed}-{svd}.rmes"));
+            pack_compressed_model(&model, &[(1, clq.clone())], *rate, &path)
+                .map_err(|e| format!("pack failed: {e:#}"))?;
+            let store = ExpertStore::open(&path).map_err(|e| format!("open failed: {e:#}"))?;
+            let loaded = store
+                .load_layer_full(1)
+                .map_err(|e| format!("load failed: {e:#}"))?;
+            let entry = store.layer_entry(1).expect("layer stored").clone();
+            std::fs::remove_file(&path).ok();
+            if loaded != clq {
+                return Err(format!("quantized pack→load changed the layer (rate {rate})"));
+            }
+            // Every shard landed in the int8 tier and advertises its bound.
+            for (i, e) in clq.experts.iter().enumerate() {
+                if !entry.experts[i].kind.starts_with("q8-") {
+                    return Err(format!("expert {i} kind {}", entry.experts[i].kind));
+                }
+                let adv = entry.experts[i].quant_err;
+                let bound = e.quant_error_bound();
+                if (adv - bound).abs() > 1e-6 * bound.abs().max(1e-12) {
+                    return Err(format!("expert {i}: qerr {adv} != bound {bound}"));
+                }
+            }
+            // Restoration error vs the f32 original obeys the bound: the
+            // residual is the only perturbed term of `center + residual`.
+            for slot in 0..layer.n_experts() {
+                let want = cl.restore_expert(slot);
+                let got = clq.restore_expert(slot);
+                if got.b2 != want.b2 {
+                    return Err(format!("slot {slot}: b2 must stay exact f32"));
+                }
+                let wd = want.design_matrix();
+                let gd = got.design_matrix();
+                let k = cl.expert_map[slot];
+                let bound = clq.experts[k].quant_error_bound() + 1e-5;
+                let mut worst = 0.0f32;
+                for (a, b) in wd.data.iter().zip(&gd.data) {
+                    worst = worst.max((a - b).abs());
+                }
+                if worst > bound {
+                    return Err(format!(
+                        "slot {slot} (svd={svd}, rate {rate}): err {worst} > bound {bound}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_store_detects_any_single_bit_flip_in_expert_shards() {
     // Flip one random bit anywhere inside a random expert's shard bytes:
     // loading that expert must fail (CRC-32 catches every 1-bit error) and

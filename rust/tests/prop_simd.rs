@@ -19,7 +19,7 @@ use resmoe::moe::{ExpertArch, MoeLayer};
 use resmoe::tensor::kernel::{
     kernel_kind, matmul_into_with, matmul_nt_into_with, matmul_tn_with, KernelKind,
 };
-use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix};
+use resmoe::tensor::{sparse::IndexWidth, Csr, Matrix, QuantCsr, QuantMatrix};
 use resmoe::util::prop::{check, gen, PropConfig};
 use resmoe::Rng;
 
@@ -239,6 +239,111 @@ fn prop_moe_layer_forward_is_concat_invariant_under_active_kernel() {
                     "layer forward not concat-invariant under {:?}",
                     kernel_kind()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_dense_fused_bitwise_equals_dequant_then_gemm_per_kind() {
+    // The int8 contract over random ragged shapes: each kernel kind's
+    // dequant-fused GEMM is BITWISE equal to dequantizing first and running
+    // that same kind's f32 GEMM (the fused kernels fold `(code as f32) ·
+    // scale` into an identical FMA order) — and within rel-err of the
+    // naive dequantized reference like every other kind.
+    check(
+        PropConfig { cases: 32, seed: 0x0178 },
+        |rng| {
+            let b = gen::usize_in(rng, 1, 14);
+            let n = gen::usize_in(rng, 1, 40);
+            let k = gen::usize_in(rng, 1, 300);
+            let w = Matrix::randn(n, k, 1.0, rng);
+            let x = Matrix::randn(b, k, 1.0, rng);
+            let h = Matrix::randn(b, n, 1.0, rng);
+            (w, x, h)
+        },
+        |(w, x, seed)| {
+            let q = QuantMatrix::quantize(w);
+            let dq = q.to_dense();
+            // Per-element roundtrip error within the advertised bound.
+            let bound = q.abs_error_bound();
+            for (a, b) in w.data.iter().zip(&dq.data) {
+                if (a - b).abs() > bound {
+                    return Err(format!("roundtrip err {} > bound {bound}", (a - b).abs()));
+                }
+            }
+            let want_naive = naive_nt(x, &dq);
+            for kind in both_kinds() {
+                let mut fused = Matrix::zeros(x.rows, w.rows);
+                q.matmul_nt_into_with(kind, x, &mut fused, false);
+                let mut two_step = Matrix::zeros(x.rows, w.rows);
+                matmul_nt_into_with(kind, x, &dq, &mut two_step, false);
+                if fused.data != two_step.data {
+                    return Err(format!("{kind:?} NT: fused != dequant-then-GEMM"));
+                }
+                rel_close(&fused, &want_naive, 1e-5)
+                    .map_err(|e| format!("{kind:?} NT vs naive: {e}"))?;
+                // Accumulating form onto a random seed.
+                let mut facc = seed.clone();
+                q.matmul_nt_into_with(kind, x, &mut facc, true);
+                let mut wacc = seed.clone();
+                matmul_nt_into_with(kind, x, &dq, &mut wacc, true);
+                if facc.data != wacc.data {
+                    return Err(format!("{kind:?} NT-acc: fused != dequant-then-GEMM"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_csr_fused_bitwise_equals_dequant_then_spmm_per_kind() {
+    check(
+        PropConfig { cases: 32, seed: 0x0179 },
+        |rng| {
+            let pi = gen::usize_in(rng, 1, 24);
+            let p = gen::usize_in(rng, 1, 20);
+            let b = gen::usize_in(rng, 1, 14);
+            let density = [0.0, 0.05, 0.25, 1.0][rng.below(4)];
+            let delta = Matrix::from_fn(pi, p, |_, _| {
+                if rng.uniform() < density {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            });
+            let x = Matrix::randn(b, p, 1.0, rng);
+            let h = Matrix::randn(b, pi, 1.0, rng);
+            (delta, x, h)
+        },
+        |(delta, x, h)| {
+            let csr = Csr::from_dense(delta, IndexWidth::U16);
+            let q = QuantCsr::quantize(&csr);
+            let dq = q.to_csr();
+            // The quantized CSR keeps the sparsity pattern bit-for-bit.
+            if dq.row_ptr != csr.row_ptr || dq.col_idx != csr.col_idx {
+                return Err("quantized CSR changed the sparsity pattern".into());
+            }
+            let want_naive = naive_nt(x, &dq.to_dense());
+            for kind in both_kinds() {
+                let mut fused = Matrix::zeros(x.rows, delta.rows);
+                q.matmul_nt_into_with(kind, x, &mut fused, false);
+                let mut two_step = Matrix::zeros(x.rows, delta.rows);
+                dq.matmul_nt_into_with(kind, x, &mut two_step, false);
+                if fused.data != two_step.data {
+                    return Err(format!("{kind:?} spmm_nt: fused != dequant-then-SpMM"));
+                }
+                rel_close(&fused, &want_naive, 1e-5)
+                    .map_err(|e| format!("{kind:?} spmm_nt vs naive: {e}"))?;
+                let mut facc = Matrix::zeros(h.rows, delta.cols);
+                q.matmul_acc_into_with(kind, h, &mut facc);
+                let mut wacc = Matrix::zeros(h.rows, delta.cols);
+                dq.matmul_acc_into_with(kind, h, &mut wacc);
+                if facc.data != wacc.data {
+                    return Err(format!("{kind:?} spmm_acc: fused != dequant-then-SpMM"));
+                }
             }
             Ok(())
         },

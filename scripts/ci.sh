@@ -37,10 +37,24 @@ echo "== continuous-batching smoke (env-tuned windows, 1 worker) =="
 RESMOE_BATCH=4 RESMOE_LINGER_US=2000 cargo run --release --quiet -- serve-packed \
   --artifact "$PACK_DIR/model.rmes" --requests 24 --cache-mb 4 --workers 1
 
+echo "== int8 quantized pack → serve-packed smoke =="
+# Quantized residual tier: pack with --quantize int8 (RMES v2, q8-* shard
+# kinds) and serve it twice — once on the runtime kernel, once with the
+# SIMD kill-switch so the scalar dequant-fused twins cover the same path.
+cargo run --release --quiet -- pack --model switch-mini-8 --method resmoe-up \
+  --rate 0.25 --layers 1 --seed 0 --quantize int8 --out "$PACK_DIR/model-q8.rmes"
+cargo run --release --quiet -- serve-packed --artifact "$PACK_DIR/model-q8.rmes" \
+  --requests 16 --cache-mb 1 --workers 2
+RESMOE_SIMD=0 cargo run --release --quiet -- serve-packed \
+  --artifact "$PACK_DIR/model-q8.rmes" --requests 16 --cache-mb 1 --workers 2
+
 echo "== batching scheduler/parity simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_batching.py
 
 echo "== SIMD kernel numerics simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_simd.py
+
+echo "== int8 quantization numerics simulation (no-toolchain fallback validator) =="
+python3 scripts/sim_quant.py
 
 echo "CI OK"
