@@ -24,5 +24,5 @@ fn main() -> anyhow::Result<()> {
         cache_budget_bytes: 2 * expert_bytes * cfg.moe_layer_indices().len(),
         workers: 2,
     };
-    demo::run_demo(&assets, sc, 64)
+    demo::run_demo(&assets, sc, 64, None)
 }

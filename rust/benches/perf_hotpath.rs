@@ -587,6 +587,51 @@ fn main() {
         ]);
     }
 
+    // --- observability overhead: what the registry + trace layer cost on
+    // the serve path. Counter/histogram records are a few relaxed atomic
+    // adds and a disabled span is one relaxed load — these rows are the
+    // "off is free" claim in numbers; the traced-span row is the price only
+    // paid when RESMOE_TRACE is set.
+    {
+        use resmoe::obs::{trace, Registry};
+        let reg = Registry::new();
+        let ctr = reg.counter("bench.counter");
+        let hist = reg.histogram("bench.hist");
+        runner.run("obs: counter inc x1000", 3, iters * 10, || {
+            for _ in 0..1000 {
+                ctr.inc();
+            }
+            std::hint::black_box(ctr.get());
+        });
+        runner.run("obs: histogram record x1000", 3, iters * 10, || {
+            for i in 0..1000u64 {
+                hist.record(i * 37 % 5000);
+            }
+            std::hint::black_box(&hist);
+        });
+        runner.run("obs: span disabled x1000", 3, iters * 10, || {
+            for _ in 0..1000 {
+                std::hint::black_box(trace::span("bench.stage"));
+            }
+        });
+        {
+            let _g = trace::test_serial();
+            trace::force_for_tests(Some(true));
+            runner.run("obs: span traced x1000 (begin..finish)", 3, iters * 5, || {
+                trace::begin();
+                for _ in 0..1000 {
+                    std::hint::black_box(trace::span("bench.stage"));
+                }
+                std::hint::black_box(trace::finish());
+            });
+            trace::drain_test_lines();
+            trace::force_for_tests(None);
+        }
+        runner.run("obs: registry snapshot (2 instruments)", 3, iters * 10, || {
+            std::hint::black_box(reg.snapshot());
+        });
+    }
+
     // Summarize as tables for the reports directory. The BENCH_* stems are
     // the cross-PR trajectory files (EXPERIMENTS.md §Perf).
     let mut t = Table::new("Perf hot-path microbenches", &["bench", "mean (ms)", "p50 (ms)", "p99 (ms)"]);

@@ -85,11 +85,14 @@
 //! - **Immutable after construction** (`layers`, `store`): readable from
 //!   any thread with no lock at all — routing metadata, compressed
 //!   skeletons, and the artifact handle never change while serving.
-//! - **Metadata lock** (`Mutex<CacheState>`): the per-block partitions,
-//!   in-flight table, and metrics. Critical sections are map lookups and
-//!   integer arithmetic only — **no file read, CRC check, zstd decode, or
-//!   restore matmul ever runs while this lock is held** (debug builds
-//!   assert it via a thread-local lock-held flag).
+//! - **Metadata lock** (`Mutex<CacheState>`): the per-block partitions and
+//!   the in-flight table. Critical sections are map lookups and integer
+//!   arithmetic only — **no file read, CRC check, zstd decode, or restore
+//!   matmul ever runs while this lock is held** (debug builds assert it
+//!   via a thread-local lock-held flag). Metrics are NOT behind this lock:
+//!   since PR 7 every counter is a lock-free atomic on the engine's
+//!   [`crate::obs::Registry`] ([`CacheCounters`]), so recording and
+//!   snapshotting ([`ExpertCache::metrics`]) never contend with serving.
 //! - **Materialized artifacts** (`Arc<ExpertWeights>`, `Arc<FusedExpert>`,
 //!   …): handed out of the lock by clone; readers never contend with the
 //!   metadata writers while doing the actual math.
@@ -115,6 +118,7 @@
 
 use crate::compress::{CompressedExpert, CompressedLayer, FusedExpert, FusedLayer};
 use crate::moe::ExpertWeights;
+use crate::obs::{trace, Counter, Registry};
 use crate::store::ExpertStore;
 use anyhow::{Context, Result};
 use std::cell::Cell;
@@ -208,6 +212,100 @@ impl CacheMetrics {
             0.0
         } else {
             self.prefetch_useful as f64 / self.prefetch_misses as f64
+        }
+    }
+}
+
+/// Atomic twins of every [`CacheMetrics`] field, registered as `cache.*`
+/// instruments on the engine's [`crate::obs::Registry`] (PR 7). Recording
+/// is a relaxed atomic add on a pre-registered counter — **no lock** — so
+/// instrumentation can never extend a metadata critical section, and
+/// [`ExpertCache::metrics`] snapshots the counters without touching the
+/// cache mutex at all. Counter *values* still evolve exactly as the old
+/// mutex-guarded fields did (every increment site is unchanged), which
+/// keeps each counter-equality assertion in the PR 3–6 suites intact.
+pub(crate) struct CacheCounters {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    restore_ns: Arc<Counter>,
+    restore_serves: Arc<Counter>,
+    fused_serves: Arc<Counter>,
+    restores_executed: Arc<Counter>,
+    batch_windows: Arc<Counter>,
+    batch_warm_windows: Arc<Counter>,
+    prefetch_hits: Arc<Counter>,
+    prefetch_misses: Arc<Counter>,
+    prefetch_useful: Arc<Counter>,
+    prefetch_dropped: Arc<Counter>,
+    shard_fetches: Arc<Counter>,
+    shard_fetch_ns: Arc<Counter>,
+    shard_bytes: Arc<Counter>,
+    quant_shard_fetches: Arc<Counter>,
+    quant_shard_bytes: Arc<Counter>,
+    quant_serves: Arc<Counter>,
+    shard_evictions: Arc<Counter>,
+    singleflight_waits: Arc<Counter>,
+    dedup_fetches: Arc<Counter>,
+    publish_races_lost: Arc<Counter>,
+}
+
+impl CacheCounters {
+    fn new(reg: &Registry) -> CacheCounters {
+        CacheCounters {
+            hits: reg.counter("cache.hits"),
+            misses: reg.counter("cache.misses"),
+            evictions: reg.counter("cache.evictions"),
+            restore_ns: reg.counter("cache.restore_ns"),
+            restore_serves: reg.counter("cache.restore_serves"),
+            fused_serves: reg.counter("cache.fused_serves"),
+            restores_executed: reg.counter("cache.restores_executed"),
+            batch_windows: reg.counter("cache.batch_windows"),
+            batch_warm_windows: reg.counter("cache.batch_warm_windows"),
+            prefetch_hits: reg.counter("cache.prefetch_hits"),
+            prefetch_misses: reg.counter("cache.prefetch_misses"),
+            prefetch_useful: reg.counter("cache.prefetch_useful"),
+            prefetch_dropped: reg.counter("cache.prefetch_dropped"),
+            shard_fetches: reg.counter("cache.shard_fetches"),
+            shard_fetch_ns: reg.counter("cache.shard_fetch_ns"),
+            shard_bytes: reg.counter("cache.shard_bytes"),
+            quant_shard_fetches: reg.counter("cache.quant_shard_fetches"),
+            quant_shard_bytes: reg.counter("cache.quant_shard_bytes"),
+            quant_serves: reg.counter("cache.quant_serves"),
+            shard_evictions: reg.counter("cache.shard_evictions"),
+            singleflight_waits: reg.counter("cache.singleflight_waits"),
+            dedup_fetches: reg.counter("cache.dedup_fetches"),
+            publish_races_lost: reg.counter("cache.publish_races_lost"),
+        }
+    }
+
+    /// Read every counter into the plain [`CacheMetrics`] snapshot struct.
+    /// Lock-free: each field is one relaxed load.
+    fn snapshot(&self) -> CacheMetrics {
+        CacheMetrics {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
+            restore_ns: self.restore_ns.get(),
+            restore_serves: self.restore_serves.get(),
+            fused_serves: self.fused_serves.get(),
+            restores_executed: self.restores_executed.get(),
+            batch_windows: self.batch_windows.get(),
+            batch_warm_windows: self.batch_warm_windows.get(),
+            prefetch_hits: self.prefetch_hits.get(),
+            prefetch_misses: self.prefetch_misses.get(),
+            prefetch_useful: self.prefetch_useful.get(),
+            prefetch_dropped: self.prefetch_dropped.get(),
+            shard_fetches: self.shard_fetches.get(),
+            shard_fetch_ns: self.shard_fetch_ns.get(),
+            shard_bytes: self.shard_bytes.get(),
+            quant_shard_fetches: self.quant_shard_fetches.get(),
+            quant_shard_bytes: self.quant_shard_bytes.get(),
+            quant_serves: self.quant_serves.get(),
+            shard_evictions: self.shard_evictions.get(),
+            singleflight_waits: self.singleflight_waits.get(),
+            dedup_fetches: self.dedup_fetches.get(),
+            publish_races_lost: self.publish_races_lost.get(),
         }
     }
 }
@@ -441,9 +539,9 @@ impl BlockState {
         }
     }
 
-    fn hit(&mut self, slot: usize, metrics: &mut CacheMetrics) -> Option<Arc<ExpertWeights>> {
-        let e = self.touch_dense_entry(slot, true, metrics)?;
-        metrics.hits += 1;
+    fn hit(&mut self, slot: usize, c: &CacheCounters) -> Option<Arc<ExpertWeights>> {
+        let e = self.touch_dense_entry(slot, true, c)?;
+        c.hits.inc();
         Some(e)
     }
 
@@ -453,14 +551,14 @@ impl BlockState {
         &mut self,
         slot: usize,
         demand: bool,
-        metrics: &mut CacheMetrics,
+        c: &CacheCounters,
     ) -> Option<Arc<ExpertWeights>> {
         let clock = self.clock;
         let e = self.entries.get_mut(&slot)?;
         e.last_used = clock;
         if demand && e.from_prefetch {
             e.from_prefetch = false;
-            metrics.prefetch_useful += 1;
+            c.prefetch_useful.inc();
         }
         Some(e.expert.clone())
     }
@@ -470,14 +568,14 @@ impl BlockState {
         &mut self,
         eidx: usize,
         demand: bool,
-        metrics: &mut CacheMetrics,
+        c: &CacheCounters,
     ) -> Option<Arc<CompressedExpert>> {
         let clock = self.clock;
         let s = self.shards.get_mut(&eidx)?;
         s.last_used = clock;
         if demand && s.from_prefetch {
             s.from_prefetch = false;
-            metrics.prefetch_useful += 1;
+            c.prefetch_useful.inc();
         }
         Some(s.expert.clone())
     }
@@ -487,7 +585,7 @@ impl BlockState {
     fn touch_fused_shard(
         &mut self,
         eidx: usize,
-        metrics: &mut CacheMetrics,
+        c: &CacheCounters,
     ) -> Option<Arc<FusedExpert>> {
         let clock = self.clock;
         let s = self.shards.get_mut(&eidx)?;
@@ -495,7 +593,7 @@ impl BlockState {
         s.last_used = clock;
         if s.from_prefetch {
             s.from_prefetch = false;
-            metrics.prefetch_useful += 1;
+            c.prefetch_useful.inc();
         }
         Some(f)
     }
@@ -507,17 +605,17 @@ impl BlockState {
         eidx: usize,
         fused: &Arc<FusedExpert>,
         extra: usize,
-        metrics: &mut CacheMetrics,
+        c: &CacheCounters,
     ) {
         match self.shards.get_mut(&eidx) {
             Some(s) if s.fused.is_none() => {
                 s.fused = Some(fused.clone());
                 s.bytes += extra;
                 self.shard_used_bytes += extra;
-                self.trim_shards(metrics);
+                self.trim_shards(c);
             }
             // Another path filled the pieces first; keep theirs.
-            Some(_) => metrics.publish_races_lost += 1,
+            Some(_) => c.publish_races_lost.inc(),
             // The shard was evicted between fetch and split (tight budget
             // under concurrent pressure): serve the pieces uncached rather
             // than resurrect an evicted entry.
@@ -541,7 +639,7 @@ impl BlockState {
     /// larger than the whole share is allowed in alone). Only dense
     /// residents count here — paged shards are trimmed separately so the
     /// dense working set evolves identically to monolithic mode.
-    fn evict_dense_until_fits(&mut self, bytes: usize, metrics: &mut CacheMetrics) {
+    fn evict_dense_until_fits(&mut self, bytes: usize, c: &CacheCounters) {
         while self.used_bytes + bytes > self.budget_bytes && !self.entries.is_empty() {
             let (&victim, _) = self
                 .entries
@@ -550,20 +648,20 @@ impl BlockState {
                 .expect("nonempty");
             let removed = self.entries.remove(&victim).unwrap();
             self.used_bytes -= removed.bytes;
-            metrics.evictions += 1;
+            c.evictions.inc();
         }
     }
 
     /// Evict paged shards (LRU) until dense + paged fit the share.
-    fn trim_shards(&mut self, metrics: &mut CacheMetrics) {
+    fn trim_shards(&mut self, c: &CacheCounters) {
         while self.used_bytes + self.shard_used_bytes > self.budget_bytes
             && !self.shards.is_empty()
         {
-            self.evict_lru_shard(metrics);
+            self.evict_lru_shard(c);
         }
     }
 
-    fn evict_lru_shard(&mut self, metrics: &mut CacheMetrics) {
+    fn evict_lru_shard(&mut self, c: &CacheCounters) {
         let victim = self
             .shards
             .iter()
@@ -572,17 +670,17 @@ impl BlockState {
         if let Some(victim) = victim {
             let removed = self.shards.remove(&victim).unwrap();
             self.shard_used_bytes -= removed.bytes;
-            metrics.shard_evictions += 1;
+            c.shard_evictions.inc();
         }
     }
 
     /// Make room among the paged shards for `bytes` more (never evicts
     /// dense residents — they are the hot set the cost model chose).
-    fn make_room_for_shard(&mut self, bytes: usize, metrics: &mut CacheMetrics) {
+    fn make_room_for_shard(&mut self, bytes: usize, c: &CacheCounters) {
         while self.used_bytes + self.shard_used_bytes + bytes > self.budget_bytes
             && !self.shards.is_empty()
         {
-            self.evict_lru_shard(metrics);
+            self.evict_lru_shard(c);
         }
     }
 
@@ -605,23 +703,22 @@ impl BlockState {
 // ------------------------------------------------------------ the cache
 
 /// Everything mutable, behind the short metadata lock: the per-block
-/// partitions plus the global singleflight table and metrics. Methods here
-/// run exclusively inside critical sections — keep them to map operations
-/// and integer arithmetic.
+/// partitions plus the global singleflight table. Methods here run
+/// exclusively inside critical sections — keep them to map operations and
+/// integer arithmetic. Metrics live OUTSIDE this struct since PR 7: they
+/// are lock-free atomics in [`CacheCounters`], recorded from inside and
+/// outside critical sections alike without affecting their length.
 struct CacheState {
     blocks: HashMap<usize, BlockState>,
     /// Master switch for the fused path (benches compare both policies).
     fused_enabled: bool,
     /// Per-key singleflight table: reserved materializations in progress.
     flights: HashMap<FlightKey, Arc<Flight>>,
-    metrics: CacheMetrics,
 }
 
 impl CacheState {
-    /// Split-borrow one block's partition alongside the global metrics.
-    fn parts(&mut self, block: usize) -> (&mut BlockState, &mut CacheMetrics) {
-        let CacheState { blocks, metrics, .. } = self;
-        (blocks.get_mut(&block).expect("block not compressed"), metrics)
+    fn block_mut(&mut self, block: usize) -> &mut BlockState {
+        self.blocks.get_mut(&block).expect("block not compressed")
     }
 }
 
@@ -635,6 +732,10 @@ pub struct ExpertCache {
     /// Backing store (None = monolithic mode: every residual in memory).
     store: Option<Arc<ExpertStore>>,
     state: Mutex<CacheState>,
+    /// The engine-wide metrics registry this cache's counters live on.
+    /// Outside the mutex: recording and snapshotting never lock.
+    obs: Arc<Registry>,
+    counters: CacheCounters,
 }
 
 fn expert_bytes(e: &ExpertWeights) -> usize {
@@ -688,6 +789,8 @@ impl ExpertCache {
     ) -> ExpertCache {
         let share = per_block_budget(budget_bytes, layers.len());
         let blocks = layers.keys().map(|&b| (b, BlockState::new(share))).collect();
+        let obs = Arc::new(Registry::new());
+        let counters = CacheCounters::new(&obs);
         ExpertCache {
             layers,
             store,
@@ -695,9 +798,17 @@ impl ExpertCache {
                 blocks,
                 fused_enabled: true,
                 flights: HashMap::new(),
-                metrics: CacheMetrics::default(),
             }),
+            obs,
+            counters,
         }
+    }
+
+    /// The metrics registry this cache's `cache.*` counters are registered
+    /// on. The engine hangs its `server.*`/`batch.*` instruments off the
+    /// same registry so one snapshot covers the whole serving stack.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
     }
 
     fn lock_state(&self) -> StateGuard<'_> {
@@ -746,16 +857,21 @@ impl ExpertCache {
         }
     }
 
-    /// A consistent snapshot of the counters.
+    /// A snapshot of the counters. Lock-free since PR 7: reads the atomic
+    /// registry counters, never the metadata mutex — callable from any
+    /// thread (even one holding the metadata lock) without blocking a
+    /// serve. Each counter is exact; the set is a relaxed cross-section
+    /// (exactly consistent once recording threads are quiesced, which is
+    /// when every test reads it).
     pub fn metrics(&self) -> CacheMetrics {
-        self.lock_state().metrics.clone()
+        self.counters.snapshot()
     }
 
     /// Count an async-prefetch result that had to be discarded before it
     /// reached [`ExpertCache::insert_prefetched`] (e.g. the store fetch
-    /// itself failed) — keeps the prefetcher's books honest.
+    /// itself failed) — keeps the prefetcher's books honest. Lock-free.
     pub(crate) fn note_prefetch_dropped(&self) {
-        self.lock_state().metrics.prefetch_dropped += 1;
+        self.counters.prefetch_dropped.inc();
     }
 
     /// Bytes of the always-resident compressed representations (store mode:
@@ -815,12 +931,12 @@ impl ExpertCache {
     pub fn get(&self, block: usize, slot: usize) -> Arc<ExpertWeights> {
         {
             let mut st = self.lock_state();
-            let (bs, metrics) = st.parts(block);
+            let bs = st.block_mut(block);
             bs.clock += 1;
-            if let Some(e) = bs.hit(slot, metrics) {
+            if let Some(e) = bs.hit(slot, &self.counters) {
                 return e;
             }
-            metrics.misses += 1;
+            self.counters.misses.inc();
         }
         self.restore_and_cache(block, slot, false).expect("expert shard fetch failed")
     }
@@ -846,13 +962,13 @@ impl ExpertCache {
         let wants_fused = {
             let mut st = self.lock_state();
             let fused_enabled = st.fused_enabled;
-            let (bs, metrics) = st.parts(block);
+            let bs = st.block_mut(block);
             bs.clock += 1;
             bs.bump_heat(slot);
-            if let Some(e) = bs.hit(slot, metrics) {
+            if let Some(e) = bs.hit(slot, &self.counters) {
                 return Ok(Serve::Dense(e));
             }
-            metrics.misses += 1;
+            self.counters.misses.inc();
             fused_enabled && !self.should_restore(bs, block, slot, batch_tokens)
         };
         let quant = self.slot_is_quantized(block, slot) as u64;
@@ -860,23 +976,18 @@ impl ExpertCache {
             if self.store.is_some() {
                 if let Some(center) = self.fused_center(block) {
                     let expert = self.fused_shard_expert(block, slot)?;
-                    let mut st = self.lock_state();
-                    st.metrics.fused_serves += 1;
-                    st.metrics.quant_serves += quant;
+                    self.counters.fused_serves.inc();
+                    self.counters.quant_serves.add(quant);
                     return Ok(Serve::Paged { center, expert });
                 }
             } else if let Some(fl) = self.fused_layer(block) {
-                let mut st = self.lock_state();
-                st.metrics.fused_serves += 1;
-                st.metrics.quant_serves += quant;
+                self.counters.fused_serves.inc();
+                self.counters.quant_serves.add(quant);
                 return Ok(Serve::Fused(fl));
             }
         }
-        {
-            let mut st = self.lock_state();
-            st.metrics.restore_serves += 1;
-            st.metrics.quant_serves += quant;
-        }
+        self.counters.restore_serves.inc();
+        self.counters.quant_serves.add(quant);
         Ok(Serve::Dense(self.restore_and_cache(block, slot, false)?))
     }
 
@@ -906,8 +1017,8 @@ impl ExpertCache {
         }
         {
             let mut st = self.lock_state();
-            st.metrics.batch_windows += 1;
-            let (bs, metrics) = st.parts(block);
+            self.counters.batch_windows.inc();
+            let bs = st.block_mut(block);
             if wants.iter().all(|(slot, _)| bs.entries.contains_key(slot)) {
                 // Warm fast path: replay each want's serial bookkeeping
                 // (clock tick, heat bump + decay, hit count, LRU touch)
@@ -918,10 +1029,10 @@ impl ExpertCache {
                 for &(slot, _) in wants {
                     bs.clock += 1;
                     bs.bump_heat(slot);
-                    let e = bs.hit(slot, metrics).expect("checked resident");
+                    let e = bs.hit(slot, &self.counters).expect("checked resident");
                     out.push(Serve::Dense(e));
                 }
-                metrics.batch_warm_windows += 1;
+                self.counters.batch_warm_windows.inc();
                 return Ok(out);
             }
         }
@@ -940,8 +1051,8 @@ impl ExpertCache {
         key: FlightKey,
     ) -> std::result::Result<FlightLease<'a>, Arc<Flight>> {
         if let Some(f) = st.flights.get(&key) {
-            st.metrics.singleflight_waits += 1;
-            st.metrics.dedup_fetches += 1;
+            self.counters.singleflight_waits.inc();
+            self.counters.dedup_fetches.inc();
             Err(f.clone())
         } else {
             let f = Arc::new(Flight::new());
@@ -962,18 +1073,23 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            let (bs, metrics) = st.parts(block);
-            if let Some(expert) = bs.touch_dense_entry(slot, !from_prefetch, metrics) {
+            let bs = st.block_mut(block);
+            if let Some(expert) = bs.touch_dense_entry(slot, !from_prefetch, &self.counters) {
                 // A racing serve published this key between our miss
                 // bookkeeping and the reservation (never single-threaded).
-                metrics.dedup_fetches += 1;
+                self.counters.dedup_fetches.inc();
                 return Ok(expert);
             }
             match self.join_or_lead(&mut st, FlightKey::Dense(block, slot)) {
                 Ok(lease) => lease,
                 Err(flight) => {
                     drop(st);
-                    return match flight.wait() {
+                    let waited = {
+                        let mut sp = trace::span("flight.wait");
+                        sp.key(block, slot);
+                        flight.wait()
+                    };
+                    return match waited {
                         Ok(FlightPayload::Dense(e)) => {
                             self.touch_dense(block, slot, !from_prefetch);
                             Ok(e)
@@ -987,6 +1103,7 @@ impl ExpertCache {
         // --- materialize (unlocked): shard fetch (store mode, its own
         // singleflight) + the restore matmuls.
         let layer = self.layers.get(&block).expect("block not compressed");
+        let tier = if self.slot_is_quantized(block, slot) { "q8" } else { "f32" };
         let (restored, restore_ns) = if self.store.is_some() {
             // Err, not panic: a CRC-valid artifact whose expert map is
             // shorter than the backbone router's slot count must fail this
@@ -996,11 +1113,17 @@ impl ExpertCache {
             })?;
             let compressed = self.shard_expert(block, eidx, from_prefetch)?;
             assert_unlocked("residual restore matmuls");
+            let mut sp = trace::span("cache.restore");
+            sp.key(block, slot);
+            sp.tier(tier);
             let t0 = Instant::now();
             let restored = Arc::new(layer.restore_expert_from(&compressed));
             (restored, t0.elapsed().as_nanos() as u64)
         } else {
             assert_unlocked("residual restore matmuls");
+            let mut sp = trace::span("cache.restore");
+            sp.key(block, slot);
+            sp.tier(tier);
             let t0 = Instant::now();
             let restored = Arc::new(layer.restore_expert(slot));
             (restored, t0.elapsed().as_nanos() as u64)
@@ -1008,24 +1131,24 @@ impl ExpertCache {
         // --- publish (locked): re-check, evict, insert.
         let bytes = expert_bytes(&restored);
         let mut st = self.lock_state();
-        st.metrics.restore_ns += restore_ns;
-        st.metrics.restores_executed += 1;
-        let (bs, metrics) = st.parts(block);
-        if let Some(resident) = bs.touch_dense_entry(slot, !from_prefetch, metrics) {
+        self.counters.restore_ns.add(restore_ns);
+        self.counters.restores_executed.inc();
+        let bs = st.block_mut(block);
+        if let Some(resident) = bs.touch_dense_entry(slot, !from_prefetch, &self.counters) {
             // Lost the publish race (possible only against insert paths
             // outside this key's flight); serve the resident copy.
-            metrics.publish_races_lost += 1;
+            self.counters.publish_races_lost.inc();
             lease.complete(&mut st, Ok(FlightPayload::Dense(resident.clone())));
             return Ok(resident);
         }
-        bs.evict_dense_until_fits(bytes, metrics);
+        bs.evict_dense_until_fits(bytes, &self.counters);
         bs.used_bytes += bytes;
         let clock = bs.clock;
         bs.entries.insert(
             slot,
             Entry { expert: restored.clone(), bytes, last_used: clock, from_prefetch },
         );
-        bs.trim_shards(metrics);
+        bs.trim_shards(&self.counters);
         lease.complete(&mut st, Ok(FlightPayload::Dense(restored.clone())));
         Ok(restored)
     }
@@ -1042,15 +1165,20 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            let (bs, metrics) = st.parts(block);
-            if let Some(expert) = bs.touch_shard_entry(eidx, !from_prefetch, metrics) {
+            let bs = st.block_mut(block);
+            if let Some(expert) = bs.touch_shard_entry(eidx, !from_prefetch, &self.counters) {
                 return Ok(expert);
             }
             match self.join_or_lead(&mut st, FlightKey::Shard(block, eidx)) {
                 Ok(lease) => lease,
                 Err(flight) => {
                     drop(st);
-                    return match flight.wait() {
+                    let waited = {
+                        let mut sp = trace::span("flight.wait");
+                        sp.key(block, eidx);
+                        flight.wait()
+                    };
+                    return match waited {
                         Ok(FlightPayload::Shard(e)) => {
                             self.touch_shard(block, eidx, !from_prefetch);
                             Ok(e)
@@ -1064,9 +1192,16 @@ impl ExpertCache {
         // --- materialize (unlocked): file read + CRC-32 + zstd decode.
         assert_unlocked("store shard fetch/decode");
         let store = self.store.clone().expect("shard_expert requires store mode");
-        let t0 = Instant::now();
-        let fetched = store.load_expert(block, eidx);
-        let fetch_ns = t0.elapsed().as_nanos() as u64;
+        let (fetched, fetch_ns) = {
+            let mut sp = trace::span("cache.shard_fetch");
+            sp.key(block, eidx);
+            let t0 = Instant::now();
+            let fetched = store.load_expert(block, eidx);
+            if let Ok(e) = &fetched {
+                sp.tier(if e.is_quantized() { "q8" } else { "f32" });
+            }
+            (fetched, t0.elapsed().as_nanos() as u64)
+        };
         // --- publish (locked).
         let mut st = self.lock_state();
         let expert = match fetched {
@@ -1076,25 +1211,25 @@ impl ExpertCache {
                 return Err(e);
             }
         };
-        let (bs, metrics) = st.parts(block);
-        if let Some(resident) = bs.touch_shard_entry(eidx, !from_prefetch, metrics) {
+        let bs = st.block_mut(block);
+        if let Some(resident) = bs.touch_shard_entry(eidx, !from_prefetch, &self.counters) {
             // An async prefetch published this key while we fetched: keep
             // the resident copy (decodes are bit-identical), drop ours —
             // charging neither the fetch count nor its time, so the
             // count/time/bytes triple in `cache_summary` stays consistent.
-            metrics.publish_races_lost += 1;
+            self.counters.publish_races_lost.inc();
             lease.complete(&mut st, Ok(FlightPayload::Shard(resident.clone())));
             return Ok(resident);
         }
-        metrics.shard_fetch_ns += fetch_ns;
-        metrics.shard_fetches += 1;
+        self.counters.shard_fetch_ns.add(fetch_ns);
+        self.counters.shard_fetches.inc();
         let bytes = expert.memory_bytes();
-        metrics.shard_bytes += bytes as u64;
+        self.counters.shard_bytes.add(bytes as u64);
         if expert.is_quantized() {
-            metrics.quant_shard_fetches += 1;
-            metrics.quant_shard_bytes += bytes as u64;
+            self.counters.quant_shard_fetches.inc();
+            self.counters.quant_shard_bytes.add(bytes as u64);
         }
-        bs.make_room_for_shard(bytes, metrics);
+        bs.make_room_for_shard(bytes, &self.counters);
         bs.shard_used_bytes += bytes;
         let clock = bs.clock;
         bs.shards.insert(
@@ -1121,15 +1256,20 @@ impl ExpertCache {
         // --- decide/reserve (locked).
         let lease = {
             let mut st = self.lock_state();
-            let (bs, metrics) = st.parts(block);
-            if let Some(fused) = bs.touch_fused_shard(eidx, metrics) {
+            let bs = st.block_mut(block);
+            if let Some(fused) = bs.touch_fused_shard(eidx, &self.counters) {
                 return Ok(fused);
             }
             match self.join_or_lead(&mut st, FlightKey::FusedShard(block, eidx)) {
                 Ok(lease) => lease,
                 Err(flight) => {
                     drop(st);
-                    return match flight.wait() {
+                    let waited = {
+                        let mut sp = trace::span("flight.wait");
+                        sp.key(block, eidx);
+                        flight.wait()
+                    };
+                    return match waited {
                         Ok(FlightPayload::FusedShard(f)) => {
                             self.touch_shard(block, eidx, true);
                             Ok(f)
@@ -1144,14 +1284,19 @@ impl ExpertCache {
         let compressed = self.shard_expert(block, eidx, false)?;
         let layer = self.layers.get(&block).expect("block not compressed");
         assert_unlocked("fused piece split");
-        let fused = Arc::new(compressed.fused(layer.arch, layer.d_model));
+        let fused = {
+            let mut sp = trace::span("cache.fused_split");
+            sp.key(block, eidx);
+            sp.tier(if compressed.is_quantized() { "q8" } else { "f32" });
+            Arc::new(compressed.fused(layer.arch, layer.d_model))
+        };
         let extra = fused.memory_bytes();
         // --- publish (locked): charge the split pieces to the shard entry
         // so paged_bytes reports the truth and eviction releases the full
         // footprint.
         let mut st = self.lock_state();
-        let (bs, metrics) = st.parts(block);
-        bs.publish_fused_split(eidx, &fused, extra, metrics);
+        let bs = st.block_mut(block);
+        bs.publish_fused_split(eidx, &fused, extra, &self.counters);
         lease.complete(&mut st, Ok(FlightPayload::FusedShard(fused.clone())));
         Ok(fused)
     }
@@ -1168,7 +1313,12 @@ impl ExpertCache {
                 Ok(lease) => lease,
                 Err(flight) => {
                     drop(st);
-                    return match flight.wait() {
+                    let waited = {
+                        let mut sp = trace::span("flight.wait");
+                        sp.block(block);
+                        flight.wait()
+                    };
+                    return match waited {
                         Ok(FlightPayload::FusedLayer(f)) => f,
                         // Aborted build: fall back to the restore path.
                         _ => None,
@@ -1177,14 +1327,17 @@ impl ExpertCache {
             }
         };
         assert_unlocked("fused layer densify");
-        let built = self
-            .layers
-            .get(&block)
-            .expect("block not compressed")
-            .fused()
-            .map(Arc::new);
+        let built = {
+            let mut sp = trace::span("cache.fused_build");
+            sp.block(block);
+            self.layers
+                .get(&block)
+                .expect("block not compressed")
+                .fused()
+                .map(Arc::new)
+        };
         let mut st = self.lock_state();
-        st.parts(block).0.fused = Some(built.clone());
+        st.block_mut(block).fused = Some(built.clone());
         lease.complete(&mut st, Ok(FlightPayload::FusedLayer(built.clone())));
         built
     }
@@ -1202,7 +1355,12 @@ impl ExpertCache {
                 Ok(lease) => lease,
                 Err(flight) => {
                     drop(st);
-                    return match flight.wait() {
+                    let waited = {
+                        let mut sp = trace::span("flight.wait");
+                        sp.block(block);
+                        flight.wait()
+                    };
+                    return match waited {
                         Ok(FlightPayload::Center(c)) => c,
                         _ => None,
                     };
@@ -1210,14 +1368,17 @@ impl ExpertCache {
             }
         };
         assert_unlocked("center densify");
-        let built = self
-            .layers
-            .get(&block)
-            .expect("block not compressed")
-            .fused_center()
-            .map(Arc::new);
+        let built = {
+            let mut sp = trace::span("cache.center");
+            sp.block(block);
+            self.layers
+                .get(&block)
+                .expect("block not compressed")
+                .fused_center()
+                .map(Arc::new)
+        };
         let mut st = self.lock_state();
-        st.parts(block).0.fused_center = Some(built.clone());
+        st.block_mut(block).fused_center = Some(built.clone());
         lease.complete(&mut st, Ok(FlightPayload::Center(built.clone())));
         built
     }
@@ -1304,15 +1465,13 @@ impl ExpertCache {
     /// flight; `demand` marks prefetched entries useful.
     fn touch_dense(&self, block: usize, slot: usize, demand: bool) {
         let mut st = self.lock_state();
-        let (bs, metrics) = st.parts(block);
-        let _ = bs.touch_dense_entry(slot, demand, metrics);
+        let _ = st.block_mut(block).touch_dense_entry(slot, demand, &self.counters);
     }
 
     /// Shard-pool analog of [`ExpertCache::touch_dense`].
     fn touch_shard(&self, block: usize, eidx: usize, demand: bool) {
         let mut st = self.lock_state();
-        let (bs, metrics) = st.parts(block);
-        let _ = bs.touch_shard_entry(eidx, demand, metrics);
+        let _ = st.block_mut(block).touch_shard_entry(eidx, demand, &self.counters);
     }
 
     /// Pre-warm the cache for the given (block, slot) pairs (the scheduler
@@ -1331,15 +1490,15 @@ impl ExpertCache {
             let eidx = self.expert_index(b, s);
             let resident = {
                 let mut st = self.lock_state();
-                let (bs, metrics) = st.parts(b);
+                let bs = st.block_mut(b);
                 bs.clock += 1;
                 let resident = bs.entries.contains_key(&s)
                     || eidx.is_some_and(|eidx| bs.shards.contains_key(&eidx));
                 if resident {
-                    metrics.prefetch_hits += 1;
+                    self.counters.prefetch_hits.inc();
                     bs.touch_key(s, eidx);
                 } else {
-                    metrics.prefetch_misses += 1;
+                    self.counters.prefetch_misses.inc();
                 }
                 resident
             };
@@ -1382,14 +1541,14 @@ impl ExpertCache {
             }
             let Some(eidx) = self.expert_index(b, s) else { continue };
             let shard_in_flight = st.flights.contains_key(&FlightKey::Shard(b, eidx));
-            let (bs, metrics) = st.parts(b);
+            let bs = st.block_mut(b);
             if bs.entries.contains_key(&s)
                 || bs.shards.contains_key(&eidx)
                 || in_flight.contains(&(b, eidx))
                 || shard_in_flight
                 || out.contains(&(b, eidx))
             {
-                metrics.prefetch_hits += 1;
+                self.counters.prefetch_hits.inc();
                 // Refresh the resident entry's LRU stamp (as sync prefetch
                 // does): the prediction says this key is imminently needed,
                 // so it must not be the eviction victim of the very fetches
@@ -1397,7 +1556,7 @@ impl ExpertCache {
                 bs.clock += 1;
                 bs.touch_key(s, Some(eidx));
             } else {
-                metrics.prefetch_misses += 1;
+                self.counters.prefetch_misses.inc();
                 out.push((b, eidx));
             }
         }
@@ -1413,12 +1572,12 @@ impl ExpertCache {
     pub fn insert_prefetched(&self, block: usize, eidx: usize, expert: CompressedExpert) {
         let mut st = self.lock_state();
         if self.store.is_none() || !st.blocks.contains_key(&block) {
-            st.metrics.prefetch_dropped += 1;
+            self.counters.prefetch_dropped.inc();
             return;
         }
-        let (bs, metrics) = st.parts(block);
+        let bs = st.block_mut(block);
         if bs.shards.contains_key(&eidx) {
-            metrics.prefetch_dropped += 1;
+            self.counters.prefetch_dropped.inc();
             return;
         }
         let bytes = expert.memory_bytes();
@@ -1427,16 +1586,16 @@ impl ExpertCache {
         // demand-proven shard only to discard the result anyway would be
         // pure churn.
         if bs.used_bytes + bytes > bs.budget_bytes {
-            metrics.prefetch_dropped += 1;
+            self.counters.prefetch_dropped.inc();
             return;
         }
-        bs.make_room_for_shard(bytes, metrics);
+        bs.make_room_for_shard(bytes, &self.counters);
         bs.clock += 1;
-        metrics.shard_fetches += 1;
-        metrics.shard_bytes += bytes as u64;
+        self.counters.shard_fetches.inc();
+        self.counters.shard_bytes.add(bytes as u64);
         if expert.is_quantized() {
-            metrics.quant_shard_fetches += 1;
-            metrics.quant_shard_bytes += bytes as u64;
+            self.counters.quant_shard_fetches.inc();
+            self.counters.quant_shard_bytes.add(bytes as u64);
         }
         bs.shard_used_bytes += bytes;
         let clock = bs.clock;
@@ -2167,6 +2326,95 @@ mod tests {
             Serve::Dense(e) => assert_eq!(*e, cl3q.restore_expert(2)),
             _ => panic!("big batch must restore"),
         }
+    }
+
+    // ------------------------------------------------- observability (PR 7)
+
+    #[test]
+    fn metrics_and_recording_are_lock_free() {
+        // THE PR-7 claim, asserted via the PR-3 lock-held machinery: take
+        // the metadata lock (non-reentrant — a second lock_state() on this
+        // thread debug-panics, a mutex re-lock would deadlock) and, while
+        // holding it, snapshot metrics AND record events. If either path
+        // touched the metadata mutex this test could not pass.
+        let (_, cl) = compressed(50);
+        let cache = ExpertCache::new(vec![(0, cl)], usize::MAX);
+        cache.serve(0, 1, 1);
+        cache.serve(0, 1, 1);
+        let guard = cache.lock_state();
+        let m = cache.metrics(); // snapshot under the held lock
+        assert_eq!(m.hits, 1);
+        assert_eq!(m.misses, 1);
+        cache.counters.hits.inc(); // record under the held lock
+        cache.note_prefetch_dropped();
+        drop(guard);
+        let m = cache.metrics();
+        assert_eq!(m.hits, 2);
+        assert_eq!(m.prefetch_dropped, 1);
+    }
+
+    #[test]
+    fn serve_hammering_with_concurrent_snapshots_never_blocks() {
+        // Satellite: 8 threads hammering serves while snapshot threads spin
+        // — recording takes no mutex, so totals stay exact and no snapshot
+        // can stall a serve. Totals are checked after join (relaxed
+        // atomics are exact once quiesced).
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (_, cl) = compressed(51);
+        let cache = Arc::new(ExpertCache::new(vec![(0, cl)], usize::MAX));
+        let n_threads = 8u64;
+        let per_thread = 200u64;
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let servers: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let cache = &cache;
+                    s.spawn(move || {
+                        for i in 0..per_thread {
+                            let slot = ((t + i) % 4) as usize;
+                            cache.serve(0, slot, 1);
+                        }
+                    })
+                })
+                .collect();
+            for _ in 0..2 {
+                let (cache, stop) = (&cache, &stop);
+                s.spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let m = cache.metrics();
+                        // Mid-flight cross-sections are monotone per field.
+                        assert!(m.hits + m.misses <= n_threads * per_thread);
+                    }
+                });
+            }
+            for h in servers {
+                h.join().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        let m = cache.metrics();
+        assert_eq!(m.hits + m.misses, n_threads * per_thread);
+        assert_eq!(m.restores_executed, 4, "one restore per distinct slot");
+    }
+
+    #[test]
+    fn tracing_toggle_leaves_decisions_and_metrics_identical() {
+        // Observation never feeds back: the same request sequence under
+        // tracing off vs on yields identical decisions and counters.
+        let _g = trace::test_serial();
+        let run = |on: bool| {
+            trace::force_for_tests(Some(on));
+            let (_, cache) = store_cache(52, one_expert_bytes());
+            for &(slot, t) in &[(0usize, 1usize), (2, 1), (0, 1), (2, 1), (0, 600)] {
+                let _ = cache.serve(1, slot, t);
+            }
+            trace::force_for_tests(None);
+            cache.metrics()
+        };
+        let off = run(false);
+        let on = run(true);
+        trace::drain_test_lines();
+        assert_eq!(format!("{off:?}"), format!("{on:?}"));
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! a bounded restore cache, fire a mixed workload from client threads, and
 //! report throughput/latency plus the memory story.
 
-use super::metrics::{batch_summary, cache_summary};
+use super::metrics::{batch_summary, cache_summary, ServerMetrics};
 use super::server::{Engine, Request, Response, Server, ServerConfig};
 use crate::compress::{compress_model, ResMoE};
 use crate::eval::Assets;
+use crate::obs::trace;
+use crate::util::json::Json;
 use crate::util::{format_bytes, Rng};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::Path;
 
 /// Fire `n_requests` at the server from 4 client threads (remainder spread
@@ -36,7 +38,48 @@ where
         .count()
 }
 
-pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result<()> {
+/// Print the final registry snapshot (both demos end with one) and, when
+/// `metrics_out` is set, write the machine-readable form consumed by the
+/// ci.sh overhead/SLO gates: headline SLO numbers derived from the server
+/// metrics plus the full instrument snapshot.
+fn report_observability(
+    engine: &Engine,
+    metrics: &ServerMetrics,
+    metrics_out: Option<&Path>,
+) -> Result<()> {
+    let snapshot = engine.metrics_snapshot();
+    println!("--- final metrics snapshot (prometheus) ---");
+    print!("{}", snapshot.to_prometheus());
+    if let Some(path) = metrics_out {
+        let cm = engine.cache_metrics();
+        let doc = Json::obj(vec![
+            ("kernel", Json::str(crate::tensor::kernel_label())),
+            ("traced", Json::Bool(trace::enabled())),
+            ("requests", Json::num(metrics.requests as f64)),
+            ("req_s", Json::num(metrics.requests_per_s())),
+            ("tok_s", Json::num(metrics.tokens_per_s())),
+            ("p50_ms", Json::num(metrics.p50_ms())),
+            ("p99_ms", Json::num(metrics.p99_ms())),
+            ("hit_rate", Json::num(cm.as_ref().map_or(0.0, |c| c.hit_rate()))),
+            (
+                "prefetch_useful_rate",
+                Json::num(cm.as_ref().map_or(0.0, |c| c.prefetch_usefulness())),
+            ),
+            ("snapshot", snapshot.to_json()),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing metrics to {}", path.display()))?;
+        println!("  metrics written to {}", path.display());
+    }
+    Ok(())
+}
+
+pub fn run_demo(
+    assets: &Assets,
+    cfg: ServerConfig,
+    n_requests: usize,
+    metrics_out: Option<&Path>,
+) -> Result<()> {
     let model = &assets.model;
     let moe_blocks = model.moe_blocks().len();
     let top = (moe_blocks * 3).div_ceil(4);
@@ -89,6 +132,7 @@ pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result
             format_bytes(full_expert_bytes)
         );
     }
+    report_observability(&engine, &metrics, metrics_out)?;
     anyhow::ensure!(errors == 0, "{errors} requests failed");
     Ok(())
 }
@@ -97,7 +141,12 @@ pub fn run_demo(assets: &Assets, cfg: ServerConfig, n_requests: usize) -> Result
 /// the backbone + skeletons, and let demand paging + async prefetch bring
 /// residual shards in as the workload routes to them. Prints the memory
 /// and paging story afterwards — the artifact-mode analog of [`run_demo`].
-pub fn run_packed_demo(artifact: &Path, cfg: ServerConfig, n_requests: usize) -> Result<()> {
+pub fn run_packed_demo(
+    artifact: &Path,
+    cfg: ServerConfig,
+    n_requests: usize,
+    metrics_out: Option<&Path>,
+) -> Result<()> {
     let t0 = std::time::Instant::now();
     let engine = Engine::from_store(artifact, cfg.cache_budget_bytes)?;
     let store = engine.backing_store().expect("store-backed engine");
@@ -149,6 +198,7 @@ pub fn run_packed_demo(artifact: &Path, cfg: ServerConfig, n_requests: usize) ->
         format_bytes(store.file_bytes() as usize),
         100.0 * store.bytes_read() as f64 / store.file_bytes().max(1) as f64
     );
+    report_observability(&engine, &metrics, metrics_out)?;
     anyhow::ensure!(errors == 0, "{errors} requests failed");
     Ok(())
 }

@@ -1,51 +1,58 @@
 //! Serving metrics: latency percentiles, throughput, batch-size histogram,
 //! the continuous-batching window/occupancy story, and the cache/paging
 //! summary line.
+//!
+//! Since PR 7 the live counters behind these summaries are lock-free
+//! [`crate::obs`] instruments ([`ServerStats`], [`BatchCounters`], and the
+//! cache's own counter set): recording is a few relaxed atomic adds, and
+//! the plain structs here ([`ServerMetrics`], [`BatchMetrics`]) are
+//! point-in-time snapshots of those instruments. The summary-line formats
+//! are pinned by golden tests below so dashboard/CI parsers don't silently
+//! break as counters migrate.
 
 use super::batcher::FlushReason;
 use super::cache::CacheMetrics;
-use crate::util::stats::percentile;
+use crate::obs::{Counter, Histogram, HistogramSnapshot, Registry};
+use std::sync::Arc;
 use std::time::Duration;
 
+/// Point-in-time server metrics snapshot. Latency and batch-size live in
+/// bounded log-linear histograms (O(1) record, fixed memory) instead of the
+/// pre-PR-7 unbounded `Vec<f64>` that was re-sorted on every percentile
+/// read; quantiles are conservative bucket upper bounds with ≤ 1/16
+/// relative error.
 #[derive(Debug, Default, Clone)]
 pub struct ServerMetrics {
-    pub latencies_s: Vec<f64>,
-    pub batch_sizes: Vec<usize>,
+    /// Requests completed (and measured into `latency_us`).
+    pub requests: u64,
+    /// Per-request latency histogram, microseconds.
+    pub latency_us: HistogramSnapshot,
+    /// Executed-window size histogram (sizes < 16 are exact buckets).
+    pub batch_size: HistogramSnapshot,
     pub tokens_processed: u64,
     pub wall_s: f64,
 }
 
 impl ServerMetrics {
-    pub fn record_request(&mut self, latency: Duration) {
-        self.latencies_s.push(latency.as_secs_f64());
-    }
-
-    pub fn record_batch(&mut self, size: usize, tokens: u64) {
-        self.batch_sizes.push(size);
-        self.tokens_processed += tokens;
-    }
-
     pub fn p50_ms(&self) -> f64 {
-        percentile(&self.latencies_s, 50.0) * 1e3
+        self.latency_us.quantile(0.5) as f64 / 1e3
     }
 
     pub fn p99_ms(&self) -> f64 {
-        percentile(&self.latencies_s, 99.0) * 1e3
+        self.latency_us.quantile(0.99) as f64 / 1e3
     }
 
+    /// Mean executed-window size. Exact (the histogram keeps an exact sum
+    /// and count) even though quantiles are bucketed.
     pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
-            0.0
-        } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
-        }
+        self.batch_size.mean()
     }
 
     pub fn requests_per_s(&self) -> f64 {
         if self.wall_s <= 0.0 {
             0.0
         } else {
-            self.latencies_s.len() as f64 / self.wall_s
+            self.requests as f64 / self.wall_s
         }
     }
 
@@ -60,7 +67,7 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         format!(
             "{} requests | {:.1} req/s | {:.0} tok/s | p50 {:.2} ms | p99 {:.2} ms | mean batch {:.1}",
-            self.latencies_s.len(),
+            self.requests,
             self.requests_per_s(),
             self.tokens_per_s(),
             self.p50_ms(),
@@ -70,9 +77,60 @@ impl ServerMetrics {
     }
 }
 
+/// Live, lock-free server instruments registered as `server.*` on the
+/// engine's [`Registry`]. The worker loop records into these from any
+/// thread without a mutex (the pre-PR-7 `Arc<Mutex<ServerMetrics>>` made
+/// every request completion a lock acquisition); [`ServerStats::snapshot`]
+/// materializes the plain [`ServerMetrics`] view.
+#[derive(Clone)]
+pub struct ServerStats {
+    pub requests: Arc<Counter>,
+    pub tokens: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub latency_us: Arc<Histogram>,
+    pub batch_size: Arc<Histogram>,
+}
+
+impl ServerStats {
+    pub fn new(reg: &Registry) -> ServerStats {
+        ServerStats {
+            requests: reg.counter("server.requests"),
+            tokens: reg.counter("server.tokens"),
+            batches: reg.counter("server.batches"),
+            latency_us: reg.histogram("server.latency_us"),
+            batch_size: reg.histogram("server.batch_size"),
+        }
+    }
+
+    pub fn record_request(&self, latency: Duration) {
+        self.requests.inc();
+        self.latency_us.record(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&self, size: usize, tokens: u64) {
+        self.batches.inc();
+        self.batch_size.record(size as u64);
+        self.tokens.add(tokens);
+    }
+
+    pub fn snapshot(&self, wall_s: f64) -> ServerMetrics {
+        ServerMetrics {
+            requests: self.requests.get(),
+            latency_us: self.latency_us.snapshot(),
+            batch_size: self.batch_size.snapshot(),
+            tokens_processed: self.tokens.get(),
+            wall_s,
+        }
+    }
+}
+
 /// Histogram buckets shared by the occupancy and rows-per-expert
 /// histograms: 1, 2, 3–4, 5–8, >8.
 pub const BATCH_BUCKETS: [&str; 5] = ["1", "2", "3-4", "5-8", ">8"];
+
+/// Registry-name suffixes for [`BATCH_BUCKETS`] (metric names stay
+/// alphanumeric so the Prometheus mangling is readable).
+const BUCKET_NAMES: [&str; 5] = ["b1", "b2", "b3_4", "b5_8", "gt8"];
 
 fn bucket_of(n: usize) -> usize {
     match n {
@@ -167,6 +225,91 @@ impl BatchMetrics {
     }
 }
 
+/// Atomic twins of every [`BatchMetrics`] field, registered as `batch.*`
+/// instruments. The engine records into these lock-free from the batched
+/// FFN hook (which runs inside the forward pass — pre-PR-7 this was a
+/// `Mutex<BatchMetrics>` acquisition per window *and* per expert
+/// dispatch); [`BatchCounters::snapshot`] materializes the plain struct
+/// for `batch_summary`.
+pub struct BatchCounters {
+    pub windows: Arc<Counter>,
+    pub batched_requests: Arc<Counter>,
+    pub solo_requests: Arc<Counter>,
+    pub full_flushes: Arc<Counter>,
+    pub linger_flushes: Arc<Counter>,
+    pub closed_flushes: Arc<Counter>,
+    pub linger_us: Arc<Counter>,
+    pub occupancy: [Arc<Counter>; 5],
+    pub rows_per_expert: [Arc<Counter>; 5],
+    pub expert_dispatches: Arc<Counter>,
+    pub expert_rows: Arc<Counter>,
+}
+
+impl BatchCounters {
+    pub fn new(reg: &Registry) -> BatchCounters {
+        let family = |prefix: &str| -> [Arc<Counter>; 5] {
+            BUCKET_NAMES.map(|b| reg.counter(&format!("{prefix}.{b}")))
+        };
+        BatchCounters {
+            windows: reg.counter("batch.windows"),
+            batched_requests: reg.counter("batch.batched_requests"),
+            solo_requests: reg.counter("batch.solo_requests"),
+            full_flushes: reg.counter("batch.full_flushes"),
+            linger_flushes: reg.counter("batch.linger_flushes"),
+            closed_flushes: reg.counter("batch.closed_flushes"),
+            linger_us: reg.counter("batch.linger_us"),
+            occupancy: family("batch.occupancy"),
+            rows_per_expert: family("batch.rows_per_expert"),
+            expert_dispatches: reg.counter("batch.expert_dispatches"),
+            expert_rows: reg.counter("batch.expert_rows"),
+        }
+    }
+
+    /// Record one executed window of `size` requests.
+    pub fn record_window(&self, size: usize) {
+        self.windows.inc();
+        self.occupancy[bucket_of(size)].inc();
+    }
+
+    /// Record the admission-queue flush that produced a window.
+    pub fn record_flush(&self, reason: FlushReason, waited_us: u64) {
+        match reason {
+            FlushReason::Full => self.full_flushes.inc(),
+            FlushReason::Linger => self.linger_flushes.inc(),
+            FlushReason::Closed => self.closed_flushes.inc(),
+        }
+        self.linger_us.add(waited_us);
+    }
+
+    /// Record one expert dispatch over `rows` concatenated rows.
+    pub fn record_dispatch(&self, rows: usize) {
+        self.expert_dispatches.inc();
+        self.expert_rows.add(rows as u64);
+        self.rows_per_expert[bucket_of(rows)].inc();
+    }
+
+    /// Read every counter into the plain snapshot struct (relaxed loads,
+    /// no lock).
+    pub fn snapshot(&self) -> BatchMetrics {
+        let read = |f: &[Arc<Counter>; 5]| -> [u64; 5] {
+            [f[0].get(), f[1].get(), f[2].get(), f[3].get(), f[4].get()]
+        };
+        BatchMetrics {
+            windows: self.windows.get(),
+            batched_requests: self.batched_requests.get(),
+            solo_requests: self.solo_requests.get(),
+            full_flushes: self.full_flushes.get(),
+            linger_flushes: self.linger_flushes.get(),
+            closed_flushes: self.closed_flushes.get(),
+            linger_us: self.linger_us.get(),
+            occupancy: read(&self.occupancy),
+            rows_per_expert: read(&self.rows_per_expert),
+            expert_dispatches: self.expert_dispatches.get(),
+            expert_rows: self.expert_rows.get(),
+        }
+    }
+}
+
 /// One-line continuous-batching story — the `cache_summary` analog for the
 /// window scheduler: occupancy, flush split, linger, and per-expert row
 /// fusion.
@@ -250,19 +393,31 @@ mod tests {
 
     #[test]
     fn percentiles_and_rates() {
-        let mut m = ServerMetrics::default();
-        for i in 1..=100 {
-            m.record_request(Duration::from_millis(i));
+        let reg = Registry::new();
+        let stats = ServerStats::new(&reg);
+        for i in 1..=100u64 {
+            stats.record_request(Duration::from_millis(i));
         }
-        m.record_batch(4, 400);
-        m.record_batch(8, 800);
-        m.wall_s = 2.0;
-        assert!((m.p50_ms() - 50.5).abs() < 1.0);
-        assert!(m.p99_ms() > 98.0);
+        stats.record_batch(4, 400);
+        stats.record_batch(8, 800);
+        let m = stats.snapshot(2.0);
+        assert_eq!(m.requests, 100);
+        // Histogram quantiles are conservative bucket upper bounds:
+        // within +1/16 of the exact percentile, never below it.
+        let p50 = m.p50_ms();
+        assert!(p50 >= 50.0 && p50 <= 50.0 * (1.0 + 1.0 / 16.0) + 0.1, "p50={p50}");
+        let p99 = m.p99_ms();
+        assert!(p99 >= 99.0 && p99 <= 99.0 * (1.0 + 1.0 / 16.0) + 0.1, "p99={p99}");
         assert_eq!(m.mean_batch(), 6.0);
         assert_eq!(m.requests_per_s(), 50.0);
         assert_eq!(m.tokens_per_s(), 600.0);
         assert!(!m.summary().is_empty());
+        // The instruments are visible to a registry snapshot under the
+        // same names the rest of the stack exports.
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("server.requests"), Some(100));
+        assert_eq!(snap.counter("server.tokens"), Some(1200));
+        assert_eq!(snap.histogram("server.latency_us").unwrap().count, 100);
     }
 
     #[test]
@@ -306,6 +461,38 @@ mod tests {
     }
 
     #[test]
+    fn batch_counters_snapshot_matches_plain_recording() {
+        // The atomic twin and the plain struct, driven by the same event
+        // sequence, must produce identical snapshots — this is what lets
+        // the engine migrate to lock-free recording without perturbing a
+        // single summary line.
+        let reg = Registry::new();
+        let bc = BatchCounters::new(&reg);
+        let mut bm = BatchMetrics::default();
+        for (size, rows) in [(1usize, 3usize), (4, 9), (2, 1)] {
+            bc.record_window(size);
+            bm.record_window(size);
+            bc.record_dispatch(rows);
+            bm.record_dispatch(rows);
+        }
+        bc.record_flush(FlushReason::Full, 120);
+        bm.record_flush(FlushReason::Full, 120);
+        bc.record_flush(FlushReason::Closed, 40);
+        bm.record_flush(FlushReason::Closed, 40);
+        bc.batched_requests.add(5);
+        bm.batched_requests += 5;
+        bc.solo_requests.add(2);
+        bm.solo_requests += 2;
+        assert_eq!(format!("{:?}", bc.snapshot()), format!("{bm:?}"));
+        assert_eq!(batch_summary(&bc.snapshot()), batch_summary(&bm));
+        // And the counters are addressable through the registry.
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("batch.windows"), Some(3));
+        assert_eq!(snap.counter("batch.occupancy.b3_4"), Some(1));
+        assert_eq!(snap.counter("batch.rows_per_expert.gt8"), Some(1));
+    }
+
+    #[test]
     fn cache_summary_mentions_paging_and_prefetch_only_when_active() {
         let mut cm = CacheMetrics::default();
         cm.hits = 3;
@@ -325,5 +512,56 @@ mod tests {
         cm.dedup_fetches = 4;
         let contended = cache_summary(&cm);
         assert!(contended.contains("singleflight: 3 waits, 4 deduped, 0 publish races lost"));
+    }
+
+    /// Golden-line pins: `cache_summary` and `batch_summary` are parsed by
+    /// scripts/ci.sh and external dashboards. These assert the EXACT full
+    /// strings; if a format change is intentional, update the goldens and
+    /// the parsers together.
+    #[test]
+    fn summary_lines_match_golden_format() {
+        let cm = CacheMetrics {
+            hits: 75,
+            misses: 25,
+            restore_serves: 10,
+            fused_serves: 15,
+            evictions: 2,
+            shard_fetches: 5,
+            shard_fetch_ns: 2_500_000,
+            shard_bytes: 3 * 1024 * 1024,
+            shard_evictions: 1,
+            prefetch_hits: 4,
+            prefetch_misses: 8,
+            prefetch_useful: 6,
+            prefetch_dropped: 1,
+            singleflight_waits: 3,
+            dedup_fetches: 4,
+            publish_races_lost: 1,
+            ..CacheMetrics::default()
+        };
+        assert_eq!(
+            cache_summary(&cm),
+            "cache: 75.0 % hit rate | 10 restores / 15 fused serves | 2 evictions \
+             | 5 shard fetches (2.50 ms, 3.0 MB decoded), 1 shard evictions \
+             | prefetch: 4 hits / 8 loads, 75 % useful, 1 dropped \
+             | singleflight: 3 waits, 4 deduped, 1 publish races lost"
+        );
+
+        let mut bm = BatchMetrics::default();
+        bm.record_window(1);
+        bm.solo_requests += 1;
+        bm.record_window(4);
+        bm.batched_requests += 4;
+        bm.record_flush(FlushReason::Full, 120);
+        bm.record_flush(FlushReason::Linger, 480);
+        bm.record_dispatch(4);
+        bm.record_dispatch(9);
+        assert_eq!(
+            batch_summary(&bm),
+            "batch: 2 windows | 2.50 mean occupancy [1:1 2:0 3-4:1 5-8:0 >8:0] \
+             | 4 batched / 1 solo requests \
+             | flushes 1 full / 1 linger / 0 closed, 300 us mean linger \
+             | 6.50 rows/expert dispatch [1:0 2:0 3-4:1 5-8:0 >8:1]"
+        );
     }
 }

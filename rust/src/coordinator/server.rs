@@ -37,17 +37,30 @@
 //! semantics under batching: a store/integrity failure mid-window fails
 //! the whole window (every request in it answers `Response::Error`),
 //! whereas serial serving pins the error on the single requesting client.
+//!
+//! # Observability
+//!
+//! Every engine carries a lock-free [`Registry`] (shared with its cache):
+//! `server.*` latency/throughput instruments, `batch.*` window counters,
+//! and the cache's `cache.*` set, all snapshotable at any time through
+//! [`Engine::metrics_snapshot`] or an in-band [`Request::Metrics`]
+//! request. With `RESMOE_TRACE` set, each request additionally emits a
+//! JSONL stage trace (queue wait, forward, per-block route/serve/
+//! materialize spans — see `obs::trace`). Tracing on or off, responses
+//! and counter sequences are bit-for-bit identical: observation never
+//! feeds back into serving decisions.
 
 use super::batcher::{next_window, BatchPolicy, Batcher, FlushReason};
 use super::cache::{CacheMetrics, ExpertCache, Serve};
-use super::metrics::{BatchMetrics, ServerMetrics};
+use super::metrics::{BatchCounters, BatchMetrics, ServerMetrics, ServerStats};
 use crate::compress::{center_shared_act, fused_forward_expert, CompressedLayer, SharedAct};
 use crate::moe::{
     combine_slot_output, gather_rows, group_parts, route_dispatch_combine, route_groups, Ffn,
     FfnHook, Model,
 };
+use crate::obs::{trace, MetricsSnapshot, Registry};
 use crate::store::{ExpertStore, Prefetcher};
-use crate::tensor::Matrix;
+use crate::tensor::{kernel_label, Matrix};
 use crate::util::stats::logsumexp;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -102,6 +115,9 @@ pub enum Request {
     Generate { prompt: Vec<u32>, max_new: usize },
     /// Classification through a stored task head.
     Classify { task: String, tokens: Vec<u32> },
+    /// In-band metrics exposition: answers with the Prometheus-style
+    /// snapshot of the engine's registry, without touching the model.
+    Metrics,
 }
 
 impl Request {
@@ -110,6 +126,7 @@ impl Request {
             Request::Score { tokens } => tokens.len() as u64,
             Request::Generate { prompt, max_new } => (prompt.len() + max_new) as u64,
             Request::Classify { tokens, .. } => tokens.len() as u64,
+            Request::Metrics => 0,
         }
     }
 }
@@ -119,6 +136,8 @@ pub enum Response {
     Score(f64),
     Generate(Vec<u32>),
     Classify(usize),
+    /// Prometheus-style exposition text (see `obs::MetricsSnapshot`).
+    Metrics(String),
     Error(String),
 }
 
@@ -147,19 +166,26 @@ pub struct Engine {
     prefetcher: Option<Arc<Prefetcher>>,
     /// block → next compressed block (the prefetch prediction target).
     next_block: Arc<HashMap<usize, usize>>,
-    /// Continuous-batching counters (shared across engine clones).
-    batch: Arc<Mutex<BatchMetrics>>,
+    /// Metrics registry: the cache's (so `cache.*`, `batch.*`, and
+    /// `server.*` instruments share one snapshot) or standalone for dense
+    /// engines.
+    obs: Arc<Registry>,
+    /// Continuous-batching counters (lock-free, shared across clones).
+    batch: Arc<BatchCounters>,
 }
 
 impl Engine {
     /// Plain engine over a dense model (no compression).
     pub fn dense(model: Model) -> Engine {
+        let obs = Arc::new(Registry::new());
+        let batch = Arc::new(BatchCounters::new(&obs));
         Engine {
             model: Arc::new(model),
             cache: None,
             prefetcher: None,
             next_block: Arc::new(HashMap::new()),
-            batch: Arc::new(Mutex::new(BatchMetrics::default())),
+            obs,
+            batch,
         }
     }
 
@@ -172,12 +198,16 @@ impl Engine {
     ) -> Engine {
         let blocks: Vec<usize> = layers.iter().map(|(b, _)| *b).collect();
         let stripped = model.strip_experts(&blocks);
+        let cache = Arc::new(ExpertCache::new(layers, cache_budget_bytes));
+        let obs = cache.registry().clone();
+        let batch = Arc::new(BatchCounters::new(&obs));
         Engine {
             model: Arc::new(stripped),
-            cache: Some(Arc::new(ExpertCache::new(layers, cache_budget_bytes))),
+            cache: Some(cache),
             prefetcher: None,
             next_block: Arc::new(HashMap::new()),
-            batch: Arc::new(Mutex::new(BatchMetrics::default())),
+            obs,
+            batch,
         }
     }
 
@@ -195,12 +225,15 @@ impl Engine {
             next_block.insert(w[0], w[1]);
         }
         let prefetcher = Arc::new(Prefetcher::new(cache.clone(), store));
+        let obs = cache.registry().clone();
+        let batch = Arc::new(BatchCounters::new(&obs));
         Ok(Engine {
             model: Arc::new(model),
             cache: Some(cache),
             prefetcher: Some(prefetcher),
             next_block: Arc::new(next_block),
-            batch: Arc::new(Mutex::new(BatchMetrics::default())),
+            obs,
+            batch,
         })
     }
 
@@ -231,14 +264,26 @@ impl Engine {
         self.cache.as_ref().map(|c| c.metrics())
     }
 
+    /// The engine's metrics registry (`cache.*` + `batch.*` + whatever the
+    /// server registers on top). Shared by every clone of this engine.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    /// Point-in-time snapshot of every registered instrument — lock-free
+    /// with respect to serving (see [`Registry::snapshot`]).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.obs.snapshot()
+    }
+
     /// Snapshot of the continuous-batching counters (see
     /// [`super::metrics::batch_summary`]).
     pub fn batch_metrics(&self) -> BatchMetrics {
-        self.batch.lock().unwrap().clone()
+        self.batch.snapshot()
     }
 
     fn note_flush(&self, reason: FlushReason, waited_us: u64) {
-        self.batch.lock().unwrap().record_flush(reason, waited_us);
+        self.batch.record_flush(reason, waited_us);
     }
 
     /// Toggle the restore-free fused serve path (on by default; benches
@@ -271,6 +316,16 @@ impl Engine {
         }
     }
 
+    /// Trace-line `kind` tag for a request.
+    fn req_kind(req: &Request) -> &'static str {
+        match req {
+            Request::Score { .. } => "score",
+            Request::Generate { .. } => "generate",
+            Request::Classify { .. } => "classify",
+            Request::Metrics => "metrics",
+        }
+    }
+
     fn shape(&self, req: &Request) -> Shape {
         match req {
             Request::Score { tokens } => {
@@ -296,17 +351,46 @@ impl Engine {
                     Shape::Prefill
                 }
             }
+            // Answered from the registry alone; runs at its admission
+            // position like any sequential request (flushing a pending
+            // prefill run keeps the response ordering intuitive).
+            Request::Metrics => Shape::Sequential,
         }
     }
 
     pub fn handle(&self, req: &Request) -> Response {
+        // Install a trace for this request unless one is already active on
+        // this thread (a sequential request inside `handle_batch` joins the
+        // window's trace; its spans land on the window's line).
+        let owns_trace = trace::begin();
+        let resp = self.handle_inner(req);
+        if owns_trace {
+            if let Some((wall, spans)) = trace::finish() {
+                trace::emit_request(
+                    trace::next_request_id(),
+                    Self::req_kind(req),
+                    kernel_label(),
+                    0,
+                    wall,
+                    &spans,
+                );
+            }
+        }
+        resp
+    }
+
+    fn handle_inner(&self, req: &Request) -> Response {
         match req {
             Request::Score { tokens } => {
                 if let Shape::Invalid(msg) = self.shape(req) {
                     return Response::Error(msg);
                 }
                 let hook = self.hook();
-                let h = self.model.hidden_states_hooked(tokens, None, &hook);
+                let h = {
+                    let _s = trace::span("forward");
+                    self.model.hidden_states_hooked(tokens, None, &hook)
+                };
+                let _s = trace::span("head");
                 let logits = h.matmul_nt(&self.model.lm_head);
                 let mut total = 0.0f64;
                 for i in 0..tokens.len() - 1 {
@@ -319,6 +403,9 @@ impl Engine {
                 if let Shape::Invalid(msg) = self.shape(req) {
                     return Response::Error(msg);
                 }
+                // One span over prompt ingestion + the whole decode loop
+                // (per-token spans would dominate the trace).
+                let _s = trace::span("decode");
                 let hook = self.hook();
                 let mut caches = self.model.fresh_caches();
                 let mut logits = vec![0.0f32; self.model.cfg.vocab_size];
@@ -347,7 +434,11 @@ impl Engine {
                 }
                 let head = self.model.head(task).expect("validated").clone();
                 let hook = self.hook();
-                let h = self.model.hidden_states_hooked(tokens, None, &hook);
+                let h = {
+                    let _s = trace::span("forward");
+                    self.model.hidden_states_hooked(tokens, None, &hook)
+                };
+                let _s = trace::span("head");
                 let logits = head.matvec(h.row(h.rows - 1));
                 let pred = logits
                     .iter()
@@ -357,6 +448,7 @@ impl Engine {
                     .unwrap();
                 Response::Classify(pred)
             }
+            Request::Metrics => Response::Metrics(self.obs.snapshot().to_prometheus()),
         }
     }
 
@@ -368,8 +460,42 @@ impl Engine {
     /// answer immediately and — since they never touch the cache — do not
     /// split a prefill run.
     pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Response> {
+        self.handle_batch_traced(reqs, None)
+    }
+
+    /// [`Engine::handle_batch`] plus per-request admission waits from the
+    /// server's batcher: with tracing on, every member request gets its own
+    /// JSONL line — its `queue.wait` prepended to the window's shared
+    /// execution spans (the work that produced a batched response IS the
+    /// window's work). With tracing off this is exactly `handle_batch`.
+    pub fn handle_batch_traced(
+        &self,
+        reqs: &[Request],
+        queue_waits_ns: Option<&[u64]>,
+    ) -> Vec<Response> {
+        let owns_trace = trace::begin();
+        let out = self.handle_batch_inner(reqs);
+        if owns_trace {
+            if let Some((wall, spans)) = trace::finish() {
+                for (i, req) in reqs.iter().enumerate() {
+                    let q = queue_waits_ns.map_or(0, |w| w[i]);
+                    trace::emit_request(
+                        trace::next_request_id(),
+                        Self::req_kind(req),
+                        kernel_label(),
+                        q,
+                        wall + q,
+                        &spans,
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    fn handle_batch_inner(&self, reqs: &[Request]) -> Vec<Response> {
         if !reqs.is_empty() {
-            self.batch.lock().unwrap().record_window(reqs.len());
+            self.batch.record_window(reqs.len());
         }
         let mut out: Vec<Option<Response>> = vec![None; reqs.len()];
         let mut run: Vec<usize> = Vec::new();
@@ -379,7 +505,7 @@ impl Engine {
                 Some(Shape::Prefill) => run.push(i),
                 Some(Shape::Invalid(msg)) => {
                     out[i] = Some(Response::Error(msg));
-                    self.batch.lock().unwrap().solo_requests += 1;
+                    self.batch.solo_requests.inc();
                 }
                 Some(Shape::Sequential) | None => {
                     if !run.is_empty() {
@@ -388,7 +514,7 @@ impl Engine {
                     }
                     if matches!(shape, Some(Shape::Sequential)) {
                         out[i] = Some(self.handle(&reqs[i]));
-                        self.batch.lock().unwrap().solo_requests += 1;
+                        self.batch.solo_requests.inc();
                     }
                 }
             }
@@ -404,13 +530,10 @@ impl Engine {
         idxs: &[usize],
         out: &mut [Option<Response>],
     ) {
-        {
-            let mut bm = self.batch.lock().unwrap();
-            if idxs.len() > 1 {
-                bm.batched_requests += idxs.len() as u64;
-            } else {
-                bm.solo_requests += 1;
-            }
+        if idxs.len() > 1 {
+            self.batch.batched_requests.add(idxs.len() as u64);
+        } else {
+            self.batch.solo_requests.inc();
         }
         let seqs: Vec<&[u32]> = idxs
             .iter()
@@ -423,7 +546,11 @@ impl Engine {
             })
             .collect();
         let hook = self.hook();
-        let (h, offsets) = self.model.hidden_states_batch_hooked(&seqs, &hook);
+        let (h, offsets) = {
+            let _s = trace::span("forward");
+            self.model.hidden_states_batch_hooked(&seqs, &hook)
+        };
+        let _head_span = trace::span("head");
         // One lm_head projection over every Score request's scored rows at
         // once (row-independent ⇒ bit-identical to per-request
         // projections). The final position of each request predicts
@@ -478,7 +605,7 @@ struct EngineHook<'a> {
     cache: Option<&'a ExpertCache>,
     prefetcher: Option<&'a Prefetcher>,
     next_block: &'a HashMap<usize, usize>,
-    batch: &'a Mutex<BatchMetrics>,
+    batch: &'a BatchCounters,
 }
 
 impl FfnHook for EngineHook<'_> {
@@ -498,6 +625,8 @@ impl FfnHook for EngineHook<'_> {
         // overlap even while cold-missing (the Arc'd weights outlive the
         // cache's internal guards). The shared center term is built lazily
         // on the first fused slot and reused by the rest of the batch.
+        let mut block_span = trace::span("moe.block");
+        block_span.block(block);
         let mut shared: Option<SharedAct> = None;
         let mut routed: Vec<usize> = Vec::new();
         let mut serve_error: Option<anyhow::Error> = None;
@@ -511,7 +640,13 @@ impl FfnHook for EngineHook<'_> {
                 // try_serve so a store fetch/integrity error returns as a
                 // value instead of panicking mid-dispatch; the error
                 // surfaces below, after the combine finishes.
-                let decision = cache.try_serve(block, slot, sub.rows);
+                let decision = {
+                    let mut s = trace::span("moe.serve");
+                    s.key(block, slot);
+                    cache.try_serve(block, slot, sub.rows)
+                };
+                let mut d = trace::span("moe.dispatch");
+                d.key(block, slot);
                 match decision {
                     Ok(Serve::Dense(expert)) => expert.forward(sub),
                     Ok(Serve::Fused(fl)) => {
@@ -569,7 +704,13 @@ impl FfnHook for EngineHook<'_> {
         if !cache.has_layer(block) {
             return None;
         }
-        let groups = route_groups(&layer.router, x, None);
+        let mut block_span = trace::span("moe.block");
+        block_span.block(block);
+        let groups = {
+            let mut s = trace::span("moe.route");
+            s.block(block);
+            route_groups(&layer.router, x, None)
+        };
         let slot_parts: Vec<Vec<(usize, usize)>> =
             groups.iter().map(|g| group_parts(g, part_offsets)).collect();
         // Serial-order want list: requests in admission order, each
@@ -587,13 +728,17 @@ impl FfnHook for EngineHook<'_> {
                 }
             }
         }
-        let serves = match cache.try_serve_batch(block, &wants) {
-            Ok(s) => s,
-            // Fail the whole window loudly (the worker catches the panic
-            // and answers every request in it with Response::Error): once
-            // rows are fused there is no single requester to pin a store
-            // error on.
-            Err(e) => panic!("expert serve failed for block {block}: {e:#}"),
+        let serves = {
+            let mut s = trace::span("moe.serve");
+            s.block(block);
+            match cache.try_serve_batch(block, &wants) {
+                Ok(s) => s,
+                // Fail the whole window loudly (the worker catches the
+                // panic and answers every request in it with
+                // Response::Error): once rows are fused there is no single
+                // requester to pin a store error on.
+                Err(e) => panic!("expert serve failed for block {block}: {e:#}"),
+            }
         };
         let mut out = match layer.shared_expert.as_ref() {
             Some(se) => se.forward(x),
@@ -627,6 +772,8 @@ impl FfnHook for EngineHook<'_> {
             }
             debug_assert_eq!(pos, rows.len());
             for (lo, hi, serve) in segments {
+                let mut d = trace::span("moe.dispatch");
+                d.key(block, slot);
                 let sub_seg = gather_rows(x, &rows[lo..hi]);
                 let y = match serve {
                     Serve::Dense(expert) => expert.forward(&sub_seg),
@@ -643,11 +790,8 @@ impl FfnHook for EngineHook<'_> {
                 dispatch_rows.push(hi - lo);
             }
         }
-        {
-            let mut bm = self.batch.lock().unwrap();
-            for &r in &dispatch_rows {
-                bm.record_dispatch(r);
-            }
+        for &r in &dispatch_rows {
+            self.batch.record_dispatch(r);
         }
         if let (Some(pf), Some(&nb)) = (self.prefetcher, self.next_block.get(&block)) {
             let keys: Vec<(usize, usize)> = routed.iter().map(|&s| (nb, s)).collect();
@@ -671,7 +815,10 @@ struct Job {
 pub struct Server {
     tx: Option<Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    metrics: Arc<Mutex<ServerMetrics>>,
+    /// Lock-free `server.*` instruments on the engine's registry — workers
+    /// record request latencies and window sizes without a mutex.
+    stats: ServerStats,
+    registry: Arc<Registry>,
     started: Instant,
 }
 
@@ -679,14 +826,15 @@ impl Server {
     pub fn start(engine: Engine, cfg: ServerConfig) -> Server {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let stats = ServerStats::new(engine.registry());
+        let registry = engine.registry().clone();
         let mut handles = Vec::new();
         let policy =
             BatchPolicy { max_batch: cfg.batch_max.max(1), linger_us: cfg.batch_wait_us };
         for _ in 0..cfg.workers.max(1) {
             let rx = rx.clone();
             let engine = engine.clone();
-            let metrics = metrics.clone();
+            let stats = stats.clone();
             handles.push(std::thread::spawn(move || {
                 let mut batcher = Batcher::new(policy);
                 let epoch = Instant::now();
@@ -708,38 +856,49 @@ impl Server {
                         .map(|j| (j.req, (j.submitted, j.reply)))
                         .unzip();
                     let tokens: u64 = reqs.iter().map(|r| r.token_count()).sum();
+                    // Per-request admission waits feed the traces'
+                    // `queue.wait` spans; the clock reads are skipped
+                    // entirely when tracing is off.
+                    let queue_waits: Option<Vec<u64>> = trace::enabled().then(|| {
+                        let now = Instant::now();
+                        replies
+                            .iter()
+                            .map(|(sub, _)| now.saturating_duration_since(*sub).as_nanos() as u64)
+                            .collect()
+                    });
                     // A panic while serving (e.g. a corrupt artifact shard
                     // surfacing mid-window) must not take the worker down:
                     // answer every request of THIS window with an error —
                     // carrying the panic message, so "checksum mismatch in
                     // block 3" reaches the clients, not just stderr — and
                     // keep draining.
-                    let responses =
-                        catch_unwind(AssertUnwindSafe(|| engine.handle_batch(&reqs)))
-                            .unwrap_or_else(|payload| {
-                                let msg = payload
-                                    .downcast_ref::<&str>()
-                                    .map(|s| s.to_string())
-                                    .or_else(|| payload.downcast_ref::<String>().cloned())
-                                    .unwrap_or_else(|| "unknown panic".into());
-                                vec![
-                                    Response::Error(format!(
-                                        "engine panicked while serving: {msg}"
-                                    ));
-                                    size
-                                ]
-                            });
+                    let responses = catch_unwind(AssertUnwindSafe(|| {
+                        engine.handle_batch_traced(&reqs, queue_waits.as_deref())
+                    }))
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "unknown panic".into());
+                        vec![
+                            Response::Error(format!(
+                                "engine panicked while serving: {msg}"
+                            ));
+                            size
+                        ]
+                    });
                     debug_assert_eq!(responses.len(), size);
                     for ((submitted, reply), resp) in replies.into_iter().zip(responses) {
                         let latency = submitted.elapsed();
                         let _ = reply.send((resp, latency));
-                        metrics.lock().unwrap().record_request(latency);
+                        stats.record_request(latency);
                     }
-                    metrics.lock().unwrap().record_batch(size, tokens);
+                    stats.record_batch(size, tokens);
                 }
             }));
         }
-        Server { tx: Some(tx), handles, metrics, started: Instant::now() }
+        Server { tx: Some(tx), handles, stats, registry, started: Instant::now() }
     }
 
     /// Submit a request; the receiver yields (response, latency).
@@ -750,15 +909,19 @@ impl Server {
         reply_rx
     }
 
+    /// Live snapshot of every instrument (server + batch + cache) without
+    /// stopping the server — safe to call from any thread at any time.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
+    }
+
     /// Drain and stop, returning the aggregated metrics.
     pub fn shutdown(mut self) -> ServerMetrics {
         drop(self.tx.take());
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.wall_s = self.started.elapsed().as_secs_f64();
-        m
+        self.stats.snapshot(self.started.elapsed().as_secs_f64())
     }
 }
 
@@ -894,8 +1057,35 @@ mod tests {
             assert!(latency.as_secs() < 5);
         }
         let metrics = server.shutdown();
-        assert_eq!(metrics.latencies_s.len(), 16);
+        assert_eq!(metrics.requests, 16);
+        assert_eq!(metrics.latency_us.count, 16);
         assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn metrics_request_answers_inline_with_prometheus_text() {
+        let m = tiny_model(40);
+        let mut rng = Rng::new(41);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let engine = Engine::compressed(m, cm.layers, usize::MAX);
+        // Warm the cache so the exposition has counters to show.
+        assert!(matches!(
+            engine.handle(&Request::Score { tokens: vec![1, 5, 9, 2] }),
+            Response::Score(_)
+        ));
+        let server = Server::start(
+            engine,
+            ServerConfig { batch_max: 4, batch_wait_us: 200, workers: 1, ..Default::default() },
+        );
+        let (resp, _) = server.submit(Request::Metrics).recv().unwrap();
+        let Response::Metrics(text) = resp else { panic!("{resp:?}") };
+        assert!(text.contains("resmoe_cache_hits"), "{text}");
+        assert!(text.contains("resmoe_batch_windows"), "{text}");
+        assert!(text.contains("resmoe_server_latency_us_count"), "{text}");
+        // The live snapshot is also reachable without a request.
+        let snap = server.metrics_snapshot();
+        assert!(snap.counter("cache.misses").unwrap_or(0) > 0);
+        server.shutdown();
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod moe;
+pub mod obs;
 pub mod ot;
 pub mod runtime;
 pub mod store;

@@ -54,11 +54,14 @@ fn print_help() {
            datagen  --out artifacts/data [--seed N]\n\
            compress --model mixtral-mini --method resmoe-up --rate 0.25 [--layers N]\n\
            eval     --model mixtral-mini [--method resmoe-up --rate 0.25]\n\
-           serve    --model mixtral-mini [--requests N --batch-max N]\n\
+           serve    --model mixtral-mini [--requests N --batch-max N --metrics-out m.json]\n\
            pack     --model mixtral-mini [--ckpt path.rmw[z]] --method resmoe-up \
 --rate 0.25 [--quantize int8] --out model.rmes\n\
-           serve-packed --artifact model.rmes [--cache-mb N --requests N]\n\
+           serve-packed --artifact model.rmes [--cache-mb N --requests N --metrics-out m.json]\n\
            table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
+         (both serve demos print a final metrics snapshot; --metrics-out writes the\n\
+          JSON form consumed by scripts/ci.sh SLO gates. RESMOE_TRACE=<file|stderr>\n\
+          emits per-request JSONL stage traces.)\n\
          (tables also regenerate via `cargo bench --bench table1_approx_error` etc.)"
     );
 }
@@ -271,7 +274,13 @@ fn cmd_serve_packed(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
     };
     let n_requests = args.get_usize("requests", 64);
-    resmoe::coordinator::demo::run_packed_demo(Path::new(&artifact), sc, n_requests)
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    resmoe::coordinator::demo::run_packed_demo(
+        Path::new(&artifact),
+        sc,
+        n_requests,
+        metrics_out.as_deref(),
+    )
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -285,5 +294,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
     };
     let n_requests = args.get_usize("requests", 64);
-    resmoe::coordinator::demo::run_demo(&assets, sc, n_requests)
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    resmoe::coordinator::demo::run_demo(&assets, sc, n_requests, metrics_out.as_deref())
 }

@@ -1,0 +1,25 @@
+//! Serving-path observability: lock-free metrics + per-request tracing.
+//!
+//! Two halves, one invariant:
+//!
+//! * [`registry`] — atomic counters/gauges/log-scale histograms behind a
+//!   per-engine [`Registry`], snapshotable from any thread as Prometheus
+//!   text or JSON. Recording is a few relaxed atomic adds and never takes
+//!   a lock, so it cannot extend the cache's metadata critical sections.
+//! * [`trace`] — thread-local stage spans (queue wait, forward, route,
+//!   serve decision, shard fetch/decode/CRC, restore, singleflight wait)
+//!   emitted as JSONL behind the `RESMOE_TRACE` env switch.
+//!
+//! The invariant: **observation never feeds back into serving decisions.**
+//! Every bit-for-bit parity theorem (batched==serial, store==monolithic,
+//! concurrent==serial, SIMD==scalar, tracing-on==tracing-off) survives
+//! instrumentation by construction.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    bucket_index, bucket_lower, bucket_upper, Counter, Gauge, Histogram, HistogramSnapshot,
+    MetricsSnapshot, Registry, HIST_BUCKETS, HIST_SUB,
+};
+pub use trace::{Span, SpanGuard};

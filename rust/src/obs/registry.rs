@@ -1,0 +1,510 @@
+//! Lock-free metrics registry: atomic counters, gauges, and fixed-bucket
+//! log-scale histograms.
+//!
+//! Design constraints (PR 7):
+//!
+//! * **The record path takes no lock.** `Counter::add`, `Gauge::set` and
+//!   `Histogram::record` are a handful of relaxed atomic operations on
+//!   pre-registered instruments. In particular, recording a cache event
+//!   never touches the cache's metadata mutex, so instrumentation cannot
+//!   extend a PR-3 critical section or introduce a new lock-order edge.
+//! * **Registration is the cold path.** `Registry` keeps a mutex-guarded
+//!   name → instrument table; `counter()`/`gauge()`/`histogram()` take
+//!   that mutex once at construction time and hand back an `Arc` the hot
+//!   path uses forever after. Snapshots walk the same table, reading each
+//!   atomic — again without any serving lock.
+//! * **Bounded memory.** The histogram replaces the old unbounded
+//!   sorted-`Vec` percentile estimator in `ServerMetrics`: a fixed array
+//!   of log-linear buckets (16 sub-buckets per power of two) gives
+//!   quantiles with ≤ 1/16 relative error at O(1) record cost and O(592)
+//!   read cost, independent of how many samples were recorded.
+//!
+//! Observation never feeds back into serving decisions, so none of the
+//! bit-for-bit parity theorems from PRs 2–6 are affected by anything in
+//! this module.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+// ------------------------------------------------------------- instruments
+
+/// Monotonic event counter. Relaxed atomics: totals are exact once the
+/// recording threads are joined (tests rely on this), ordering between
+/// distinct counters is not guaranteed mid-flight.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Relaxed);
+    }
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+// ---------------------------------------------------------- histogram scale
+
+/// Sub-buckets per power of two (relative quantile error ≤ 1/SUB).
+pub const HIST_SUB: usize = 16;
+/// Values below this are stored exactly, one bucket each.
+const LINEAR_MAX: u64 = 16;
+/// Largest exponent with its own octave of buckets; values ≥ 2^(MAX_EXP+1)
+/// are clamped into the top octave. 2^40 ns ≈ 18 minutes, 2^40 µs ≈ 2 weeks
+/// — far beyond any latency this system records.
+const MAX_EXP: u32 = 39;
+/// Total bucket count: 16 exact + 36 octaves × 16 sub-buckets = 592.
+pub const HIST_BUCKETS: usize = LINEAR_MAX as usize + (MAX_EXP as usize - 3) * HIST_SUB;
+
+/// Map a value to its bucket index (log-linear, HDR-style).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let v = v.min((1u64 << (MAX_EXP + 1)) - 1);
+    let e = 63 - v.leading_zeros(); // 4..=MAX_EXP
+    LINEAR_MAX as usize + (e as usize - 4) * HIST_SUB + ((v >> (e - 4)) & 15) as usize
+}
+
+/// Inclusive lower bound of a bucket.
+pub fn bucket_lower(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let e = 4 + (idx - LINEAR_MAX as usize) / HIST_SUB;
+    let m = ((idx - LINEAR_MAX as usize) % HIST_SUB) as u64;
+    (LINEAR_MAX + m) << (e - 4)
+}
+
+/// Inclusive upper bound of a bucket (quantiles report this bound, so the
+/// estimate is conservative: never below the true quantile).
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let e = 4 + (idx - LINEAR_MAX as usize) / HIST_SUB;
+    bucket_lower(idx) + (1u64 << (e - 4)) - 1
+}
+
+/// Fixed-bucket log-scale histogram. Record cost: three relaxed adds.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // HIST_BUCKETS entries
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a histogram's buckets, cheap to query repeatedly.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Upper bound of the bucket holding the q-quantile sample (0 when
+    /// empty). Overestimates by at most one bucket width: relative error
+    /// ≤ 1/16 for values ≥ 16, exact below that.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(idx);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the highest non-empty bucket (0 when empty).
+    pub fn max_bound(&self) -> u64 {
+        self.buckets
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, &c)| c > 0)
+            .map(|(idx, _)| bucket_upper(idx))
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → instrument table. One registry per engine (NOT global): the test
+/// suites build pairs of engines and compare their counters one-for-one,
+/// which a process-global registry would conflate.
+#[derive(Default)]
+pub struct Registry {
+    instruments: Mutex<Vec<(String, Instrument)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already registered as
+    /// a different instrument kind (a wiring bug, not a runtime condition).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut table = self.instruments.lock().unwrap();
+        if let Some((_, inst)) = table.iter().find(|(n, _)| n == name) {
+            match inst {
+                Instrument::Counter(c) => return c.clone(),
+                _ => panic!("instrument '{name}' already registered with another kind"),
+            }
+        }
+        let c = Arc::new(Counter::new());
+        table.push((name.to_string(), Instrument::Counter(c.clone())));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut table = self.instruments.lock().unwrap();
+        if let Some((_, inst)) = table.iter().find(|(n, _)| n == name) {
+            match inst {
+                Instrument::Gauge(g) => return g.clone(),
+                _ => panic!("instrument '{name}' already registered with another kind"),
+            }
+        }
+        let g = Arc::new(Gauge::new());
+        table.push((name.to_string(), Instrument::Gauge(g.clone())));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut table = self.instruments.lock().unwrap();
+        if let Some((_, inst)) = table.iter().find(|(n, _)| n == name) {
+            match inst {
+                Instrument::Histogram(h) => return h.clone(),
+                _ => panic!("instrument '{name}' already registered with another kind"),
+            }
+        }
+        let h = Arc::new(Histogram::new());
+        table.push((name.to_string(), Instrument::Histogram(h.clone())));
+        h
+    }
+
+    /// Read every instrument. Takes the registry's own table mutex (never
+    /// contended by recording, which only touches the `Arc`s) and no other
+    /// lock — snapshotting while a serving thread holds the cache mutex is
+    /// safe and non-blocking.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let table = self.instruments.lock().unwrap();
+        let mut snap = MetricsSnapshot::default();
+        for (name, inst) in table.iter() {
+            match inst {
+                Instrument::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Instrument::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+                Instrument::Histogram(h) => snap.histograms.push((name.clone(), h.snapshot())),
+            }
+        }
+        snap
+    }
+}
+
+// ---------------------------------------------------------------- snapshot
+
+/// Point-in-time view of a whole registry, serializable to Prometheus-style
+/// text or JSON.
+#[derive(Default, Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 7);
+    s.push_str("resmoe_");
+    for ch in name.chars() {
+        s.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+    }
+    s
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Prometheus exposition-style text: counters and gauges verbatim,
+    /// histograms as summaries (quantile upper bounds + sum + count).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let p = prom_name(name);
+            out.push_str(&format!("# TYPE {p} counter\n{p} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let p = prom_name(name);
+            out.push_str(&format!("# TYPE {p} gauge\n{p} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            let p = prom_name(name);
+            out.push_str(&format!("# TYPE {p} summary\n"));
+            for q in [0.5, 0.9, 0.99] {
+                out.push_str(&format!("{p}{{quantile=\"{q}\"}} {}\n", h.quantile(q)));
+            }
+            out.push_str(&format!("{p}_sum {}\n{p}_count {}\n", h.sum, h.count));
+        }
+        out
+    }
+
+    /// JSON form consumed by `--metrics-out` and the ci.sh SLO gate.
+    /// Histograms keep their non-empty buckets as `[index, count]` pairs so
+    /// offline tooling can recompute any quantile.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, v) in &self.counters {
+            counters.insert(name.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, v) in &self.gauges {
+            gauges.insert(name.clone(), Json::Num(*v));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in &self.histograms {
+            let mut obj = BTreeMap::new();
+            obj.insert("count".into(), Json::Num(h.count as f64));
+            obj.insert("sum".into(), Json::Num(h.sum as f64));
+            obj.insert("p50".into(), Json::Num(h.quantile(0.5) as f64));
+            obj.insert("p90".into(), Json::Num(h.quantile(0.9) as f64));
+            obj.insert("p99".into(), Json::Num(h.quantile(0.99) as f64));
+            obj.insert("max".into(), Json::Num(h.max_bound() as f64));
+            let buckets: Vec<Json> = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(idx, &c)| Json::Arr(vec![Json::Num(idx as f64), Json::Num(c as f64)]))
+                .collect();
+            obj.insert("buckets".into(), Json::Arr(buckets));
+            hists.insert(name.clone(), Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), Json::Obj(counters));
+        root.insert("gauges".into(), Json::Obj(gauges));
+        root.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+// ------------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_scale_is_a_partition() {
+        // Buckets tile [0, 2^40) without gaps or overlaps, and the index
+        // map agrees with the bounds at every boundary.
+        assert_eq!(bucket_lower(0), 0);
+        for idx in 0..HIST_BUCKETS {
+            let (lo, hi) = (bucket_lower(idx), bucket_upper(idx));
+            assert!(lo <= hi, "bucket {idx}");
+            assert_eq!(bucket_index(lo), idx, "lower bound of bucket {idx}");
+            assert_eq!(bucket_index(hi), idx, "upper bound of bucket {idx}");
+            if idx + 1 < HIST_BUCKETS {
+                assert_eq!(bucket_lower(idx + 1), hi + 1, "no gap after bucket {idx}");
+            }
+        }
+        assert_eq!(bucket_upper(HIST_BUCKETS - 1), (1u64 << (MAX_EXP + 1)) - 1);
+        // Saturation: anything beyond the cap lands in the top bucket.
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact_and_large_values_bounded() {
+        for v in 0..LINEAR_MAX {
+            let idx = bucket_index(v);
+            assert_eq!(bucket_lower(idx), v);
+            assert_eq!(bucket_upper(idx), v);
+        }
+        // Relative error of the upper-bound estimate is ≤ 1/16 above the
+        // linear range.
+        for v in [16u64, 100, 999, 12345, 1 << 20, (1 << 30) + 7] {
+            let hi = bucket_upper(bucket_index(v));
+            assert!(hi >= v);
+            assert!((hi - v) as f64 <= v as f64 / 16.0 + 1.0, "v={v} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn quantiles_are_conservative_and_tight() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+        for (q, exact) in [(0.5, 500u64), (0.9, 900), (0.99, 990)] {
+            let est = s.quantile(q);
+            assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+            assert!(
+                est as f64 <= exact as f64 * (1.0 + 1.0 / 16.0) + 1.0,
+                "q={q}: est {est} too far above exact {exact}"
+            );
+        }
+        assert_eq!(s.quantile(0.0), s.quantile(1.0 / 1000.0));
+        assert!(s.max_bound() >= 1000);
+        assert!((s.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.max_bound(), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording_totals_are_exact() {
+        let reg = Registry::new();
+        let c = reg.counter("t.events");
+        let h = reg.histogram("t.lat");
+        let threads = 8;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let (c, h) = (c.clone(), h.clone());
+                s.spawn(move || {
+                    for i in 0..per {
+                        c.inc();
+                        h.record(t * per + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), threads * per);
+        let snap = reg.snapshot();
+        let hs = snap.histogram("t.lat").unwrap();
+        assert_eq!(hs.count, threads * per);
+        assert_eq!(hs.buckets.iter().sum::<u64>(), threads * per);
+    }
+
+    #[test]
+    fn registry_returns_same_instrument_for_same_name() {
+        let reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        a.add(3);
+        assert_eq!(b.get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn snapshot_serializes_to_prometheus_and_json() {
+        let reg = Registry::new();
+        reg.counter("cache.hits").add(7);
+        reg.gauge("server.wall_s").set(1.5);
+        reg.histogram("server.latency_us").record(120);
+        let snap = reg.snapshot();
+        let text = snap.to_prometheus();
+        assert!(text.contains("resmoe_cache_hits 7"), "{text}");
+        assert!(text.contains("resmoe_server_wall_s 1.5"), "{text}");
+        assert!(text.contains("resmoe_server_latency_us_count 1"), "{text}");
+        assert!(text.contains("quantile=\"0.99\""), "{text}");
+        // JSON round-trips through the in-tree parser.
+        let parsed = Json::parse(&snap.to_json().to_string()).unwrap();
+        let hits = parsed.get("counters").and_then(|c| c.get("cache.hits"));
+        assert_eq!(hits.and_then(|j| j.as_f64()), Some(7.0));
+        let p99 = parsed
+            .get("histograms")
+            .and_then(|h| h.get("server.latency_us"))
+            .and_then(|h| h.get("p99"))
+            .and_then(|j| j.as_f64())
+            .unwrap();
+        assert!(p99 >= 120.0 && p99 <= 128.0, "p99={p99}");
+    }
+}

@@ -1,0 +1,411 @@
+//! Per-request stage tracing, gated by the `RESMOE_TRACE` env switch.
+//!
+//! A trace is a flat list of [`Span`]s collected in a thread-local buffer
+//! between [`begin`] and [`finish`]. The engine installs the buffer once
+//! per request (or once per batched window) on the executing thread; every
+//! layer below — routing, cache decisions, singleflight waits, shard
+//! fetches, zstd decode, CRC checks, restore matmuls — drops spans into it
+//! through the same [`span`] call without any plumbing through function
+//! signatures. Nesting is tracked with a depth counter: a span opened
+//! while another is active records `depth + 1`, so the JSONL consumer can
+//! rebuild the tree from `(t0, dur, depth)` alone.
+//!
+//! **Overhead contract.** With tracing off (the default), [`span`] is one
+//! relaxed atomic load returning a no-op guard: no thread-local access, no
+//! clock read, no allocation. Observation never feeds back into serving
+//! decisions, so tracing on/off leaves responses and cache-counter
+//! sequences bit-for-bit identical — `scripts/ci.sh` enforces both the
+//! ≤3% tracing-off throughput overhead and the parity claim.
+//!
+//! `RESMOE_TRACE` values: unset/`0`/`off`/`false` → disabled; `1`/`on`/
+//! `stderr` → JSONL on stderr; anything else → append to that file path.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicI8, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+// ------------------------------------------------------------------ config
+
+#[derive(Clone, Debug, PartialEq)]
+enum Sink {
+    Off,
+    Stderr,
+    File(String),
+}
+
+fn env_sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| match std::env::var("RESMOE_TRACE") {
+        Err(_) => Sink::Off,
+        Ok(v) => match v.as_str() {
+            "" | "0" | "off" | "false" => Sink::Off,
+            "1" | "on" | "stderr" => Sink::Stderr,
+            path => Sink::File(path.to_string()),
+        },
+    })
+}
+
+/// Test override: -1 = follow the env (default), 0 = force off, 1 = force
+/// on with the in-memory sink.
+static OVERRIDE: AtomicI8 = AtomicI8::new(-1);
+
+/// Is tracing active? One relaxed load on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match OVERRIDE.load(Relaxed) {
+        0 => false,
+        1 => true,
+        _ => *env_sink() != Sink::Off,
+    }
+}
+
+/// Force tracing on (in-memory sink) / off / back to the env setting.
+/// Tests that touch this global must serialize on [`test_serial`].
+#[doc(hidden)]
+pub fn force_for_tests(on: Option<bool>) {
+    OVERRIDE.store(match on { None => -1, Some(false) => 0, Some(true) => 1 }, Relaxed);
+}
+
+/// Serializes tests (and benches) that flip [`force_for_tests`] or drain
+/// the memory sink — the switch is process-global, the test runner is not.
+#[doc(hidden)]
+pub fn test_serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn memory_sink() -> &'static Mutex<Vec<String>> {
+    static MEM: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    MEM.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Drain every JSONL line captured by the in-memory test sink.
+#[doc(hidden)]
+pub fn drain_test_lines() -> Vec<String> {
+    std::mem::take(&mut *memory_sink().lock().unwrap())
+}
+
+fn file_sink(path: &str) -> &'static Mutex<std::fs::File> {
+    static FILE: OnceLock<Mutex<std::fs::File>> = OnceLock::new();
+    FILE.get_or_init(|| {
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .unwrap_or_else(|e| panic!("RESMOE_TRACE: cannot open '{path}': {e}"));
+        Mutex::new(f)
+    })
+}
+
+fn write_line(line: &str) {
+    if OVERRIDE.load(Relaxed) == 1 {
+        memory_sink().lock().unwrap().push(line.to_string());
+        return;
+    }
+    match env_sink() {
+        Sink::Off => {}
+        Sink::Stderr => eprintln!("{line}"),
+        Sink::File(path) => {
+            let mut f = file_sink(path).lock().unwrap();
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+// ------------------------------------------------------------------- spans
+
+/// One completed stage interval, relative to the trace's start.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub stage: &'static str,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub depth: u8,
+    /// MoE block index, or -1 when not applicable.
+    pub block: i64,
+    /// Expert slot, or -1 when not applicable.
+    pub slot: i64,
+    /// Quantization tier of the materialized weights ("f32"/"q8"), if known.
+    pub tier: Option<&'static str>,
+}
+
+struct Active {
+    start: Instant,
+    depth: u8,
+    spans: Vec<Span>,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+/// Install a trace buffer on this thread. Returns `false` (and does
+/// nothing) when tracing is disabled or a trace is already active — e.g.
+/// `handle` called from inside `handle_batch` joins the window's trace
+/// instead of starting its own. The caller that got `true` owns the
+/// matching [`finish`].
+pub fn begin() -> bool {
+    if !enabled() {
+        return false;
+    }
+    ACTIVE.with(|a| {
+        let mut a = a.borrow_mut();
+        if a.is_some() {
+            return false;
+        }
+        *a = Some(Active { start: Instant::now(), depth: 0, spans: Vec::with_capacity(32) });
+        true
+    })
+}
+
+/// Tear down the trace installed by the matching [`begin`], returning the
+/// measured wall time and the collected spans.
+pub fn finish() -> Option<(u64, Vec<Span>)> {
+    ACTIVE.with(|a| {
+        a.borrow_mut().take().map(|act| {
+            let wall = act.start.elapsed().as_nanos() as u64;
+            (wall, act.spans)
+        })
+    })
+}
+
+/// RAII guard for one stage. Created by [`span`]; the interval closes when
+/// the guard drops. `Inactive` (the disabled / no-trace-installed case) is
+/// a pure no-op.
+pub enum SpanGuard {
+    Inactive,
+    Open { stage: &'static str, start_ns: u64, depth: u8, block: i64, slot: i64, tier: Option<&'static str> },
+}
+
+impl SpanGuard {
+    /// Tag the span with a (block, slot) cache key.
+    #[inline]
+    pub fn key(&mut self, b: usize, s: usize) {
+        if let SpanGuard::Open { block, slot, .. } = self {
+            *block = b as i64;
+            *slot = s as i64;
+        }
+    }
+
+    /// Tag the span with a MoE block only.
+    #[inline]
+    pub fn block(&mut self, b: usize) {
+        if let SpanGuard::Open { block, .. } = self {
+            *block = b as i64;
+        }
+    }
+
+    /// Tag the span with the quantization tier of the weights it touched
+    /// (set after the fetch/restore reveals it).
+    #[inline]
+    pub fn tier(&mut self, t: &'static str) {
+        if let SpanGuard::Open { tier, .. } = self {
+            *tier = Some(t);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let SpanGuard::Open { stage, start_ns, depth, block, slot, tier } = self {
+            ACTIVE.with(|a| {
+                if let Some(act) = a.borrow_mut().as_mut() {
+                    let end_ns = act.start.elapsed().as_nanos() as u64;
+                    act.spans.push(Span {
+                        stage,
+                        start_ns: *start_ns,
+                        end_ns,
+                        depth: *depth,
+                        block: *block,
+                        slot: *slot,
+                        tier: *tier,
+                    });
+                    act.depth = act.depth.saturating_sub(1);
+                }
+            });
+        }
+    }
+}
+
+/// Open a stage span on the current thread's trace. Disabled tracing (or
+/// no installed trace, e.g. a prefetch worker thread) returns the no-op
+/// guard after a single atomic load.
+#[inline]
+pub fn span(stage: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::Inactive;
+    }
+    ACTIVE.with(|a| {
+        let mut a = a.borrow_mut();
+        match a.as_mut() {
+            None => SpanGuard::Inactive,
+            Some(act) => {
+                let depth = act.depth;
+                act.depth = act.depth.saturating_add(1);
+                SpanGuard::Open {
+                    stage,
+                    start_ns: act.start.elapsed().as_nanos() as u64,
+                    depth,
+                    block: -1,
+                    slot: -1,
+                    tier: None,
+                }
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------- emission
+
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique request id for trace lines.
+pub fn next_request_id() -> u64 {
+    NEXT_REQ_ID.fetch_add(1, Relaxed)
+}
+
+/// Serialize one request's trace as a JSONL line and write it to the
+/// configured sink.
+///
+/// `queue_ns` is the time the request spent waiting for admission before
+/// the traced execution began; it is prepended as a depth-0 `queue.wait`
+/// span and every execution span is shifted right by it, so a line's spans
+/// always start at t0=0 and `wall_ns = queue_ns + execution wall`. Batched
+/// windows emit one line per member request sharing the window's execution
+/// spans (the trace describes the work that produced that response, which
+/// for a batch is shared by construction).
+pub fn emit_request(req_id: u64, kind: &'static str, kernel: &'static str, queue_ns: u64, wall_ns: u64, spans: &[Span]) {
+    let mut arr: Vec<Json> = Vec::with_capacity(spans.len() + 1);
+    if queue_ns > 0 {
+        arr.push(span_json("queue.wait", 0, queue_ns, 0, -1, -1, None));
+    }
+    for s in spans {
+        arr.push(span_json(
+            s.stage,
+            s.start_ns + queue_ns,
+            s.end_ns.saturating_sub(s.start_ns),
+            s.depth,
+            s.block,
+            s.slot,
+            s.tier,
+        ));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("req".into(), Json::Num(req_id as f64));
+    root.insert("kind".into(), Json::Str(kind.into()));
+    root.insert("kernel".into(), Json::Str(kernel.into()));
+    root.insert("queue_ns".into(), Json::Num(queue_ns as f64));
+    root.insert("wall_ns".into(), Json::Num(wall_ns as f64));
+    root.insert("spans".into(), Json::Arr(arr));
+    write_line(&Json::Obj(root).to_string());
+}
+
+fn span_json(stage: &str, t0: u64, dur: u64, depth: u8, block: i64, slot: i64, tier: Option<&'static str>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("stage".into(), Json::Str(stage.into()));
+    o.insert("t0".into(), Json::Num(t0 as f64));
+    o.insert("dur".into(), Json::Num(dur as f64));
+    o.insert("depth".into(), Json::Num(depth as f64));
+    if block >= 0 {
+        o.insert("block".into(), Json::Num(block as f64));
+    }
+    if slot >= 0 {
+        o.insert("slot".into(), Json::Num(slot as f64));
+    }
+    if let Some(t) = tier {
+        o.insert("tier".into(), Json::Str(t.into()));
+    }
+    Json::Obj(o)
+}
+
+// ------------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracing_is_inert() {
+        let _g = test_serial();
+        force_for_tests(Some(false));
+        assert!(!begin());
+        {
+            let mut g = span("x");
+            g.key(1, 2); // no-op on the inactive guard
+        }
+        assert!(finish().is_none());
+        force_for_tests(None);
+    }
+
+    #[test]
+    fn spans_nest_with_depth_and_emit_jsonl() {
+        let _g = test_serial();
+        force_for_tests(Some(true));
+        drain_test_lines();
+        assert!(begin());
+        assert!(!begin(), "second begin on the same thread joins, not replaces");
+        {
+            let mut outer = span("moe.block");
+            outer.block(3);
+            {
+                let mut inner = span("cache.restore");
+                inner.key(3, 1);
+                inner.tier("q8");
+            }
+        }
+        let (wall, spans) = finish().unwrap();
+        assert_eq!(spans.len(), 2);
+        // Inner closed first (flat list is in close order), depth below outer.
+        assert_eq!(spans[0].stage, "cache.restore");
+        assert_eq!(spans[0].depth, 1);
+        assert_eq!((spans[0].block, spans[0].slot), (3, 1));
+        assert_eq!(spans[0].tier, Some("q8"));
+        assert_eq!(spans[1].stage, "moe.block");
+        assert_eq!(spans[1].depth, 0);
+        assert!(spans[1].start_ns <= spans[0].start_ns);
+        assert!(spans[1].end_ns >= spans[0].end_ns);
+        assert!(spans.iter().all(|s| s.end_ns <= wall));
+
+        emit_request(7, "score", "scalar", 500, wall + 500, &spans);
+        let lines = drain_test_lines();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(&lines[0]).unwrap();
+        assert_eq!(j.get("req").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("score"));
+        let arr = j.get("spans").unwrap().as_arr().unwrap();
+        // queue.wait prepended, then the two spans shifted by queue_ns.
+        assert_eq!(arr[0].get("stage").and_then(|v| v.as_str()), Some("queue.wait"));
+        assert_eq!(arr[0].get("dur").and_then(|v| v.as_f64()), Some(500.0));
+        assert_eq!(arr[1].get("tier").and_then(|v| v.as_str()), Some("q8"));
+        assert_eq!(
+            arr[1].get("t0").and_then(|v| v.as_f64()),
+            Some(spans[0].start_ns as f64 + 500.0)
+        );
+        force_for_tests(None);
+    }
+
+    #[test]
+    fn spans_without_installed_trace_are_dropped() {
+        let _g = test_serial();
+        force_for_tests(Some(true));
+        drain_test_lines();
+        // A prefetch-style worker thread with no begin(): spans vanish.
+        {
+            let _s = span("store.read");
+        }
+        assert!(finish().is_none());
+        assert!(drain_test_lines().is_empty());
+        force_for_tests(None);
+    }
+
+    #[test]
+    fn request_ids_are_unique() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a);
+    }
+}

@@ -32,6 +32,7 @@ use crate::compress::{
 };
 use crate::moe::model_io::{model_from_bytes, model_to_bytes};
 use crate::moe::{ExpertArch, Model, ModelConfig};
+use crate::obs::trace;
 use crate::util::bytes::{ByteReader, PutLe};
 use crate::util::crc32::crc32;
 use crate::util::json::Json;
@@ -460,21 +461,28 @@ impl ExpertStore {
         }
         let mut compressed = vec![0u8; info.bytes as usize];
         {
+            let _read_span = trace::span("store.read");
             let mut f = self.file.lock().unwrap();
             f.seek(SeekFrom::Start(info.offset))?;
             f.read_exact(&mut compressed)
                 .with_context(|| format!("{what}: short read"))?;
         }
         self.bytes_read.fetch_add(info.bytes, Ordering::Relaxed);
-        let got_crc = crc32(&compressed);
+        let got_crc = {
+            let _crc_span = trace::span("store.crc");
+            crc32(&compressed)
+        };
         if got_crc != info.crc32 {
             bail!(
                 "{what}: checksum mismatch (stored {:08x}, computed {got_crc:08x}) — refusing to serve corrupt shard",
                 info.crc32
             );
         }
-        let raw = zstd::decode_all(&compressed[..])
-            .with_context(|| format!("{what}: shard decompression failed"))?;
+        let raw = {
+            let _decode_span = trace::span("store.decode");
+            zstd::decode_all(&compressed[..])
+                .with_context(|| format!("{what}: shard decompression failed"))?
+        };
         if raw.len() as u64 != info.raw_bytes {
             bail!("{what}: decoded {} bytes, index says {}", raw.len(), info.raw_bytes);
         }

@@ -21,6 +21,7 @@
 
 use super::format::ExpertStore;
 use crate::coordinator::cache::ExpertCache;
+use crate::obs::trace;
 use crate::util::threads::spawn_detached;
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex};
@@ -70,6 +71,7 @@ impl Prefetcher {
         // requests predicting the same key must record one miss and one
         // fetch, not two misses and one fetch.
         let targets = {
+            let _plan_span = trace::span("prefetch.plan");
             let mut infl = self.inflight.lock().unwrap();
             let planned = self.cache.plan_prefetch(keys, &infl);
             for key in &planned {

@@ -1,0 +1,262 @@
+//! Observability properties: trace completeness (every request produces
+//! exactly one JSONL line whose spans nest and sum within the measured
+//! wall time), bit-for-bit parity of the serving path with tracing on vs
+//! off, and silence when tracing is disabled.
+//!
+//! All tests serialize on `trace::test_serial()` — the trace switch and the
+//! in-memory sink are process globals, the test runner is not.
+
+use resmoe::compress::{compress_model, ResMoE};
+use resmoe::coordinator::{Engine, Request, Response, Server, ServerConfig};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::obs::trace;
+use resmoe::util::json::Json;
+use resmoe::Rng;
+use std::collections::HashSet;
+
+fn model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::switch_mini(4);
+    cfg.d_model = 16;
+    cfg.d_inner = 32;
+    cfg.n_layers = 4;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 32;
+    cfg.max_seq = 40;
+    let mut rng = Rng::new(seed);
+    Model::random(&cfg, &mut rng)
+}
+
+fn compressed_engine(m: &Model, budget: usize, seed: u64) -> Engine {
+    let mut rng = Rng::new(seed);
+    let cm = compress_model(m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    Engine::compressed(m.clone(), cm.layers, budget)
+}
+
+fn mixed_requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            if i % 3 == 1 {
+                Request::Generate { prompt: vec![1, 2, 3], max_new: 4 }
+            } else {
+                Request::Score {
+                    tokens: (0..10).map(|t| ((t * (i + 2)) % 32) as u32).collect(),
+                }
+            }
+        })
+        .collect()
+}
+
+/// Validate one JSONL trace line: parses, spans stay within `wall_ns`,
+/// every depth-d span (d > 0) is enclosed by a depth-(d-1) span, and
+/// depth-0 spans sum to at most the wall. Returns (attributed fraction,
+/// stage names seen).
+fn check_line(line: &str) -> (f64, HashSet<String>) {
+    let j = Json::parse(line).unwrap_or_else(|e| panic!("unparseable trace line {e:?}: {line}"));
+    let wall = j.get("wall_ns").and_then(|v| v.as_f64()).expect("wall_ns");
+    let queue = j.get("queue_ns").and_then(|v| v.as_f64()).expect("queue_ns");
+    assert!(wall > 0.0, "zero wall: {line}");
+    assert!(queue <= wall, "queue {queue} beyond wall {wall}: {line}");
+    let spans = j.get("spans").and_then(|v| v.as_arr()).expect("spans");
+    assert!(!spans.is_empty(), "traced request with no spans: {line}");
+    let parsed: Vec<(f64, f64, f64, String)> = spans
+        .iter()
+        .map(|s| {
+            (
+                s.get("t0").and_then(|v| v.as_f64()).expect("t0"),
+                s.get("dur").and_then(|v| v.as_f64()).expect("dur"),
+                s.get("depth").and_then(|v| v.as_f64()).expect("depth"),
+                s.get("stage").and_then(|v| v.as_str()).expect("stage").to_string(),
+            )
+        })
+        .collect();
+    let mut covered = 0.0;
+    for (t0, dur, depth, stage) in &parsed {
+        assert!(
+            t0 + dur <= wall + 0.5,
+            "span {stage} [{t0}, {t0}+{dur}] beyond wall {wall}: {line}"
+        );
+        if *depth > 0.0 {
+            let enclosed = parsed.iter().any(|(pt0, pdur, pdepth, _)| {
+                *pdepth == depth - 1.0 && *pt0 <= *t0 && pt0 + pdur >= t0 + dur
+            });
+            assert!(enclosed, "depth-{depth} span {stage} has no enclosing parent: {line}");
+        }
+        if *depth == 0.0 {
+            covered += dur;
+        }
+    }
+    // Depth-0 spans are sequential stages of one request — their sum can
+    // never exceed the measured wall.
+    assert!(covered <= wall + 0.5, "depth-0 spans exceed wall ({covered} > {wall}): {line}");
+    (covered / wall, parsed.into_iter().map(|(_, _, _, s)| s).collect())
+}
+
+#[test]
+fn every_serial_request_emits_exactly_one_well_formed_line() {
+    let _g = trace::test_serial();
+    trace::force_for_tests(Some(true));
+    trace::drain_test_lines();
+    let m = model(40);
+    let engine = compressed_engine(&m, usize::MAX, 41);
+    let reqs = mixed_requests(12);
+    for r in &reqs {
+        engine.handle(r);
+    }
+    let lines = trace::drain_test_lines();
+    trace::force_for_tests(None);
+    assert_eq!(lines.len(), reqs.len(), "one trace line per request");
+    let mut req_ids = HashSet::new();
+    for line in &lines {
+        let (coverage, stages) = check_line(line);
+        assert!(
+            coverage >= 0.85,
+            "named stages attribute only {:.0} % of wall: {line}",
+            coverage * 100.0
+        );
+        assert!(
+            stages.contains("forward") || stages.contains("decode"),
+            "no top-level execution stage: {line}"
+        );
+        let id = Json::parse(line).unwrap().get("req").unwrap().as_f64().unwrap() as u64;
+        assert!(req_ids.insert(id), "duplicate request id {id}");
+    }
+    let generates = lines
+        .iter()
+        .filter(|l| {
+            Json::parse(l).unwrap().get("kind").and_then(|v| v.as_str().map(String::from))
+                == Some("generate".into())
+        })
+        .count();
+    assert_eq!(generates, reqs.len() / 3, "request kinds round-trip into trace lines");
+}
+
+#[test]
+fn batched_windows_emit_one_line_per_member_request() {
+    let _g = trace::test_serial();
+    trace::force_for_tests(Some(true));
+    trace::drain_test_lines();
+    let m = model(42);
+    let engine = compressed_engine(&m, usize::MAX, 43);
+    let server = Server::start(
+        engine,
+        ServerConfig { batch_max: 4, batch_wait_us: 200, workers: 2, ..Default::default() },
+    );
+    let n = 16usize;
+    let replies: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(Request::Score {
+                tokens: (0..8).map(|t| ((t + i) % 32) as u32).collect(),
+            })
+        })
+        .collect();
+    for r in replies {
+        r.recv().unwrap();
+    }
+    server.shutdown();
+    let lines = trace::drain_test_lines();
+    trace::force_for_tests(None);
+    assert_eq!(lines.len(), n, "batched window must fan out one line per member");
+    let mut queue_waits = 0usize;
+    for line in &lines {
+        let (coverage, stages) = check_line(line);
+        assert!(
+            coverage >= 0.75,
+            "window stages attribute only {:.0} % of wall: {line}",
+            coverage * 100.0
+        );
+        if stages.contains("queue.wait") {
+            queue_waits += 1;
+        }
+    }
+    assert!(
+        queue_waits > 0,
+        "admission-window serving must record queue.wait on at least one request"
+    );
+}
+
+#[test]
+fn tracing_toggle_leaves_responses_and_counters_bit_identical() {
+    let _g = trace::test_serial();
+    trace::drain_test_lines();
+    let m = model(44);
+    let reqs = mixed_requests(18);
+    // A budget of ~4 experts across the compressed layers forces misses,
+    // restores, and evictions — the counter-heavy paths where an
+    // observation-feeds-back bug would show up.
+    let run = |traced: bool| {
+        trace::force_for_tests(Some(traced));
+        let engine = compressed_engine(&m, 1 << 14, 45);
+        let out: Vec<Response> = reqs.iter().map(|r| engine.handle(r)).collect();
+        let counters = format!("{:?}", engine.cache_metrics().unwrap());
+        (out, counters)
+    };
+    let (off, counters_off) = run(false);
+    let (on, counters_on) = run(true);
+    trace::drain_test_lines();
+    trace::force_for_tests(None);
+    for (a, b) in off.iter().zip(&on) {
+        match (a, b) {
+            (Response::Score(x), Response::Score(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "score diverged under tracing")
+            }
+            (Response::Generate(x), Response::Generate(y)) => {
+                assert_eq!(x, y, "generation diverged under tracing")
+            }
+            other => panic!("response kind diverged: {other:?}"),
+        }
+    }
+    assert_eq!(counters_off, counters_on, "cache counter sequence diverged under tracing");
+}
+
+#[test]
+fn disabled_tracing_emits_no_lines_from_the_full_stack() {
+    let _g = trace::test_serial();
+    trace::force_for_tests(Some(false));
+    trace::drain_test_lines();
+    let m = model(46);
+    let engine = compressed_engine(&m, usize::MAX, 47);
+    for r in &mixed_requests(6) {
+        engine.handle(r);
+    }
+    let server = Server::start(engine, ServerConfig::default());
+    let r = server.submit(Request::Score { tokens: vec![1, 2, 3] });
+    r.recv().unwrap();
+    server.shutdown();
+    let leaked = trace::drain_test_lines();
+    trace::force_for_tests(None);
+    assert!(leaked.is_empty(), "disabled tracing leaked {} lines", leaked.len());
+}
+
+#[test]
+fn packed_store_traces_name_the_store_stages() {
+    let _g = trace::test_serial();
+    trace::force_for_tests(Some(true));
+    trace::drain_test_lines();
+    use resmoe::store::pack_compressed_model;
+    let m = model(48);
+    let mut rng = Rng::new(49);
+    let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    let dir = std::env::temp_dir().join("resmoe-prop-obs-store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("trace.rmes");
+    pack_compressed_model(&m, &cm.layers, 0.25, &artifact).unwrap();
+    let engine = Engine::from_store(&artifact, usize::MAX).unwrap();
+    let reqs = mixed_requests(6);
+    for r in &reqs {
+        engine.handle(r);
+    }
+    engine.quiesce_prefetch();
+    let lines = trace::drain_test_lines();
+    trace::force_for_tests(None);
+    assert_eq!(lines.len(), reqs.len());
+    let mut stages = HashSet::new();
+    for line in &lines {
+        stages.extend(check_line(line).1);
+    }
+    // Demand paging ran on the traced serving thread, so the store stages
+    // must show up under the MoE serving spans.
+    for want in ["moe.block", "moe.serve", "cache.shard_fetch", "store.read", "store.crc", "store.decode"]
+    {
+        assert!(stages.contains(want), "stage {want} missing from packed-store traces: {stages:?}");
+    }
+}

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Observability CI gate: tracing-overhead smoke + snapshot-diff SLO check.
+
+Consumes two `--metrics-out` documents from the serving demo — one run with
+`RESMOE_TRACE=0` (the production default) and one with tracing to a JSONL
+file — plus that trace file, and enforces:
+
+1. **Overhead** — the untraced run's tok/s must be within `RESMOE_OBS_TOL`
+   (default 3%) of the traced run's: tracing off may never be slower than
+   tracing on beyond noise, i.e. the disabled hot path really is a few
+   relaxed atomic ops.
+2. **SLOs** on the untraced run: p99 latency <= `RESMOE_SLO_P99_MS`,
+   tok/s >= `RESMOE_SLO_TOKS`, cache hit-rate >= `RESMOE_SLO_HIT_RATE`,
+   prefetch-useful-rate >= `RESMOE_SLO_PREFETCH_USEFUL`.
+3. **Trace completeness** — the traced run emitted exactly one JSONL line
+   per request; every line parses, spans nest by depth and stay within the
+   measured wall, and named stages attribute >= `RESMOE_OBS_ATTR`
+   (default 95%) of total request wall time.
+4. **Snapshot schema diff** — both runs export the same counter/histogram
+   instrument names (tracing must not change what is measured).
+
+Writes the gate outcome and both runs' headline numbers to
+`reports/BENCH_obs.json`. Exits non-zero on any failed gate.
+
+Usage: check_obs.py OFF_METRICS_JSON ON_METRICS_JSON TRACE_JSONL
+"""
+
+import json
+import os
+import sys
+
+
+def env_f(name, default):
+    return float(os.environ.get(name, default))
+
+
+def validate_line(line):
+    """Shared invariant set (see scripts/sim_obs.py and rust/tests/prop_obs.rs).
+    Returns (attributed_ns, wall_ns)."""
+    j = json.loads(line)
+    wall = j["wall_ns"]
+    assert wall > 0, "zero-wall trace line"
+    assert j["queue_ns"] <= wall, "queue beyond wall"
+    spans = j["spans"]
+    assert spans, "traced request with no spans"
+    covered = 0
+    for s in spans:
+        assert s["t0"] + s["dur"] <= wall + 1, f"span {s['stage']} beyond wall"
+        if s["depth"] > 0:
+            assert any(p["depth"] == s["depth"] - 1
+                       and p["t0"] <= s["t0"]
+                       and p["t0"] + p["dur"] >= s["t0"] + s["dur"]
+                       for p in spans), f"orphan depth-{s['depth']} span {s['stage']}"
+        if s["depth"] == 0:
+            covered += s["dur"]
+    assert covered <= wall + 1, "depth-0 spans exceed wall"
+    return covered, wall
+
+
+def main():
+    if len(sys.argv) != 4:
+        sys.exit(f"usage: {sys.argv[0]} OFF_METRICS_JSON ON_METRICS_JSON TRACE_JSONL")
+    off_path, on_path, trace_path = sys.argv[1:4]
+    with open(off_path) as f:
+        off = json.load(f)
+    with open(on_path) as f:
+        on = json.load(f)
+
+    failures = []
+
+    def gate(name, ok, detail):
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}: {detail}")
+        if not ok:
+            failures.append(f"{name}: {detail}")
+
+    gate("run identity", off["traced"] is False and on["traced"] is True,
+         f"off.traced={off['traced']} on.traced={on['traced']}")
+
+    tol = env_f("RESMOE_OBS_TOL", 0.03)
+    gate(f"tracing-off overhead <= {tol:.0%}",
+         off["tok_s"] >= on["tok_s"] * (1.0 - tol),
+         f"off {off['tok_s']:.0f} tok/s vs traced {on['tok_s']:.0f} tok/s")
+
+    slos = [
+        ("p99_ms", off["p99_ms"], "<=", env_f("RESMOE_SLO_P99_MS", 10_000.0)),
+        ("tok_s", off["tok_s"], ">=", env_f("RESMOE_SLO_TOKS", 1.0)),
+        ("hit_rate", off["hit_rate"], ">=", env_f("RESMOE_SLO_HIT_RATE", 0.0)),
+        ("prefetch_useful_rate", off["prefetch_useful_rate"], ">=",
+         env_f("RESMOE_SLO_PREFETCH_USEFUL", 0.0)),
+    ]
+    for name, got, op, want in slos:
+        ok = got <= want if op == "<=" else got >= want
+        gate(f"SLO {name} {op} {want:g}", ok, f"{got:g}")
+
+    lines = [ln for ln in open(trace_path) if ln.strip()]
+    want_lines = int(on["requests"])
+    gate("one trace line per request", len(lines) == want_lines,
+         f"{len(lines)} lines for {want_lines} requests")
+    covered_ns = wall_ns = 0
+    bad = 0
+    stages = set()
+    for ln in lines:
+        try:
+            c, w = validate_line(ln)
+        except (AssertionError, KeyError, json.JSONDecodeError) as e:
+            bad += 1
+            if bad <= 3:
+                print(f"  FAIL  malformed trace line: {e}")
+            continue
+        covered_ns += c
+        wall_ns += w
+        stages.update(s["stage"] for s in json.loads(ln)["spans"])
+    gate("trace lines well-formed", bad == 0, f"{bad} malformed of {len(lines)}")
+    attr = covered_ns / wall_ns if wall_ns else 0.0
+    attr_min = env_f("RESMOE_OBS_ATTR", 0.95)
+    gate(f"stage attribution >= {attr_min:.0%}", attr >= attr_min,
+         f"{attr:.1%} of {wall_ns / 1e6:.1f} ms total request wall")
+
+    off_schema = {k: sorted(off["snapshot"][k]) for k in ("counters", "histograms")}
+    on_schema = {k: sorted(on["snapshot"][k]) for k in ("counters", "histograms")}
+    gate("snapshot schema identical across runs", off_schema == on_schema,
+         f"{sum(len(v) for v in off_schema.values())} instruments")
+
+    os.makedirs("reports", exist_ok=True)
+    report = {
+        "bench": "obs_gates",
+        "kernel": off.get("kernel"),
+        "off": {k: off[k] for k in
+                ("requests", "req_s", "tok_s", "p50_ms", "p99_ms",
+                 "hit_rate", "prefetch_useful_rate")},
+        "on": {k: on[k] for k in
+               ("requests", "req_s", "tok_s", "p50_ms", "p99_ms",
+                "hit_rate", "prefetch_useful_rate")},
+        "overhead_frac": 1.0 - off["tok_s"] / on["tok_s"] if on["tok_s"] else None,
+        "trace_lines": len(lines),
+        "trace_stages": sorted(stages),
+        "attributed_frac": attr,
+        "gates": {
+            "tol": tol, "attr_min": attr_min,
+            "slo": {name: want for name, _, _, want in slos},
+        },
+        "failures": failures,
+        "pass": not failures,
+    }
+    with open("reports/BENCH_obs.json", "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"  report -> reports/BENCH_obs.json "
+          f"({len(stages)} distinct stages: {', '.join(sorted(stages))})")
+    if failures:
+        sys.exit(f"check_obs: {len(failures)} gate(s) failed")
+    print("check_obs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,24 @@ echo "== continuous-batching smoke (env-tuned windows, 1 worker) =="
 RESMOE_BATCH=4 RESMOE_LINGER_US=2000 cargo run --release --quiet -- serve-packed \
   --artifact "$PACK_DIR/model.rmes" --requests 24 --cache-mb 4 --workers 1
 
+echo "== observability: overhead smoke + snapshot-diff SLO gate =="
+# Same packed workload twice — production default (RESMOE_TRACE=0) vs
+# tracing to a JSONL file — each exporting its registry snapshot. The gate
+# (scripts/check_obs.py) enforces: tracing-off tok/s within 3% of traced
+# (the disabled hot path is a few relaxed atomics), SLO floors on p99 /
+# tok/s / hit-rate / prefetch-useful-rate, one well-nested trace line per
+# request attributing >= 95% of request wall time to named stages, and an
+# identical instrument schema across runs → reports/BENCH_obs.json.
+RESMOE_TRACE=0 cargo run --release --quiet -- serve-packed \
+  --artifact "$PACK_DIR/model.rmes" --requests 32 --cache-mb 4 --workers 2 \
+  --metrics-out "$PACK_DIR/obs_off.json"
+RESMOE_TRACE="$PACK_DIR/trace.jsonl" cargo run --release --quiet -- serve-packed \
+  --artifact "$PACK_DIR/model.rmes" --requests 32 --cache-mb 4 --workers 2 \
+  --metrics-out "$PACK_DIR/obs_on.json"
+RESMOE_SLO_P99_MS=2000 RESMOE_SLO_TOKS=100 RESMOE_SLO_HIT_RATE=0.10 \
+  python3 scripts/check_obs.py \
+  "$PACK_DIR/obs_off.json" "$PACK_DIR/obs_on.json" "$PACK_DIR/trace.jsonl"
+
 echo "== int8 quantized pack → serve-packed smoke =="
 # Quantized residual tier: pack with --quantize int8 (RMES v2, q8-* shard
 # kinds) and serve it twice — once on the runtime kernel, once with the
@@ -56,5 +74,8 @@ python3 scripts/sim_simd.py
 
 echo "== int8 quantization numerics simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_quant.py
+
+echo "== observability invariants simulation (no-toolchain fallback validator) =="
+python3 scripts/sim_obs.py
 
 echo "CI OK"

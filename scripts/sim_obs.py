@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""Seeded validation harness for PR 7 (serving-path observability).
+
+The container has no Rust toolchain, so this script validates the
+load-bearing claims of `rust/src/obs/` against faithful Python ports:
+
+1. **Histogram bucket scale is a partition** — the log-linear HDR-style
+   scale (16 exact buckets, then 16 sub-buckets per octave up to 2^40)
+   must tile u64 latencies with no gaps or overlaps: `bucket_lower` /
+   `bucket_upper` are inclusive, adjacent buckets abut exactly, and every
+   probed value lands in a bucket whose bounds contain it.
+
+2. **Quantile estimates are conservative and tight** — for seeded sample
+   sets, the bucket-upper-bound quantile must never be below the true
+   sample quantile and must overshoot by at most one bucket width
+   (relative error <= 1/16 for values >= 16, exact below). The mean is
+   exact because the histogram tracks the untruncated sum.
+
+3. **Trace emission invariants** — a replica of `emit_request`'s queue
+   shift + flat close-order span list must satisfy the same invariants
+   `scripts/check_obs.py` and the `prop_obs` suite enforce: spans stay
+   within the wall, every depth-d span nests inside a depth-(d-1) parent,
+   depth-0 stages sum to at most the wall. A deliberately corrupted
+   stream must be rejected.
+
+4. **Prometheus name sanitization** — `resmoe_` prefix plus non-alnum ->
+   '_' mapping replicated over the registry's live instrument names.
+"""
+
+import json
+import random
+
+# ------------------------------------------------ 1. bucket scale replica
+
+HIST_SUB = 16
+LINEAR_MAX = 16
+MAX_EXP = 39
+HIST_BUCKETS = LINEAR_MAX + (MAX_EXP - 3) * HIST_SUB  # 592
+
+
+def bucket_index(v):
+    if v < LINEAR_MAX:
+        return v
+    v = min(v, (1 << (MAX_EXP + 1)) - 1)
+    e = v.bit_length() - 1  # 4..=MAX_EXP
+    return LINEAR_MAX + (e - 4) * HIST_SUB + ((v >> (e - 4)) & 15)
+
+
+def bucket_lower(idx):
+    if idx < LINEAR_MAX:
+        return idx
+    e = 4 + (idx - LINEAR_MAX) // HIST_SUB
+    m = (idx - LINEAR_MAX) % HIST_SUB
+    return (LINEAR_MAX + m) << (e - 4)
+
+
+def bucket_upper(idx):
+    if idx < LINEAR_MAX:
+        return idx
+    e = 4 + (idx - LINEAR_MAX) // HIST_SUB
+    return bucket_lower(idx) + (1 << (e - 4)) - 1
+
+
+def check_partition():
+    assert HIST_BUCKETS == 592, HIST_BUCKETS
+    # Adjacent buckets abut exactly across the whole scale.
+    for i in range(HIST_BUCKETS - 1):
+        assert bucket_upper(i) + 1 == bucket_lower(i + 1), f"gap at bucket {i}"
+    assert bucket_lower(0) == 0
+    assert bucket_upper(HIST_BUCKETS - 1) == (1 << (MAX_EXP + 1)) - 1
+    # Every probed value lands in a bucket containing it; exhaustive where
+    # cheap, boundary +/- 1 probes and seeded random elsewhere.
+    rng = random.Random(7)
+    probes = list(range(0, 1 << 12))
+    for e in range(4, MAX_EXP + 2):
+        probes += [(1 << e) - 1, 1 << e, (1 << e) + 1]
+    probes += [rng.randrange(1 << 40) for _ in range(20000)]
+    probes += [(1 << 40) + rng.randrange(1 << 50) for _ in range(1000)]  # clamp zone
+    for v in probes:
+        idx = bucket_index(v)
+        assert 0 <= idx < HIST_BUCKETS, (v, idx)
+        clamped = min(v, (1 << (MAX_EXP + 1)) - 1)
+        lo, hi = bucket_lower(idx), bucket_upper(idx)
+        assert lo <= clamped <= hi, f"value {v} outside bucket {idx} [{lo}, {hi}]"
+        # Relative bucket width bound: the quantile error contract.
+        if LINEAR_MAX <= clamped:
+            assert (hi - lo) / lo <= 1.0 / HIST_SUB + 1e-12, (v, idx)
+    print(f"  bucket scale: {HIST_BUCKETS} buckets tile [0, 2^40) exactly, "
+          f"{len(probes)} probes in-bounds, rel width <= 1/{HIST_SUB}")
+
+
+# ------------------------------------------- 2. quantile + mean contracts
+
+def hist_quantile(buckets, count, q):
+    rank = min(max(int(-(-q * count // 1)), 1), count)  # ceil, clamped
+    seen = 0
+    for idx, c in enumerate(buckets):
+        seen += c
+        if seen >= rank:
+            return bucket_upper(idx)
+    return bucket_upper(HIST_BUCKETS - 1)
+
+
+def check_quantiles():
+    rng = random.Random(11)
+    for trial, gen in enumerate([
+        lambda: rng.randrange(0, 50),                    # exact zone heavy
+        lambda: int(rng.expovariate(1 / 50_000)),        # latency-ish ns
+        lambda: int(rng.lognormvariate(12, 2)),          # heavy tail
+    ]):
+        samples = sorted(gen() for _ in range(5000))
+        buckets = [0] * HIST_BUCKETS
+        total = 0
+        for v in samples:
+            buckets[bucket_index(v)] += 1
+            total += v
+        for q in (0.5, 0.9, 0.99, 1.0):
+            est = hist_quantile(buckets, len(samples), q)
+            rank = min(max(int(-(-q * len(samples) // 1)), 1), len(samples))
+            true = min(samples[rank - 1], (1 << (MAX_EXP + 1)) - 1)
+            assert est >= true, f"trial {trial} q{q}: est {est} below true {true}"
+            if true >= LINEAR_MAX:
+                assert est <= true * (1 + 1.0 / HIST_SUB) + 1, \
+                    f"trial {trial} q{q}: est {est} vs true {true} too loose"
+            else:
+                assert est == true, f"trial {trial} q{q}: exact zone mismatch"
+        # Mean is exact (untruncated running sum).
+        assert total / len(samples) == sum(samples) / len(samples)
+    print("  quantiles: conservative and within one bucket width over 3 seeded "
+          "distributions; mean exact")
+
+
+# --------------------------------------------- 3. trace emission replica
+
+def emit_request(req_id, kind, kernel, queue_ns, wall_ns, spans):
+    """Replica of trace::emit_request: queue.wait prepended, spans shifted."""
+    arr = []
+    if queue_ns > 0:
+        arr.append({"stage": "queue.wait", "t0": 0, "dur": queue_ns, "depth": 0})
+    for s in spans:
+        j = {"stage": s["stage"], "t0": s["start"] + queue_ns,
+             "dur": max(s["end"] - s["start"], 0), "depth": s["depth"]}
+        for k in ("block", "slot"):
+            if s.get(k, -1) >= 0:
+                j[k] = s[k]
+        arr.append(j)
+    return json.dumps({"req": req_id, "kind": kind, "kernel": kernel,
+                       "queue_ns": queue_ns, "wall_ns": wall_ns, "spans": arr})
+
+
+def validate_line(line):
+    """The invariant set shared with check_obs.py: returns attributed ns."""
+    j = json.loads(line)
+    wall = j["wall_ns"]
+    assert wall > 0 and j["queue_ns"] <= wall
+    spans = j["spans"]
+    assert spans, "traced request with no spans"
+    covered = 0
+    for s in spans:
+        assert s["t0"] + s["dur"] <= wall, f"span {s['stage']} beyond wall"
+        if s["depth"] > 0:
+            assert any(p["depth"] == s["depth"] - 1
+                       and p["t0"] <= s["t0"]
+                       and p["t0"] + p["dur"] >= s["t0"] + s["dur"]
+                       for p in spans), f"orphan depth-{s['depth']} span {s['stage']}"
+        if s["depth"] == 0:
+            covered += s["dur"]
+    assert covered <= wall, "depth-0 spans exceed wall"
+    return covered
+
+
+def check_traces():
+    # A representative serve: queue wait, forward containing two MoE blocks,
+    # each with route/serve/dispatch children, one dispatch with a shard
+    # fetch chain, then the head projection. Spans appear in CLOSE order
+    # (the Rust guard pushes on drop).
+    spans = [
+        {"stage": "moe.route", "start": 105, "end": 130, "depth": 2},
+        {"stage": "store.read", "start": 160, "end": 300, "depth": 4},
+        {"stage": "store.crc", "start": 300, "end": 320, "depth": 4},
+        {"stage": "store.decode", "start": 320, "end": 480, "depth": 4},
+        {"stage": "cache.shard_fetch", "start": 150, "end": 500, "depth": 3},
+        {"stage": "moe.serve", "start": 140, "end": 520, "depth": 2, "block": 2, "slot": 5},
+        {"stage": "moe.dispatch", "start": 520, "end": 700, "depth": 2, "block": 2, "slot": 5},
+        {"stage": "moe.block", "start": 100, "end": 710, "depth": 1, "block": 2},
+        {"stage": "moe.block", "start": 720, "end": 900, "depth": 1, "block": 3},
+        {"stage": "forward", "start": 10, "end": 920, "depth": 0},
+        {"stage": "head", "start": 925, "end": 990, "depth": 0},
+    ]
+    line = emit_request(1, "score", "scalar", 400, 1400, spans)
+    covered = validate_line(line)
+    assert covered == 400 + 910 + 65, covered
+    assert covered / 1400 >= 0.95, "representative trace must clear the CI gate"
+    # Tags survive emission.
+    j = json.loads(line)
+    tagged = [s for s in j["spans"] if s["stage"] == "moe.serve"]
+    assert tagged and tagged[0]["block"] == 2 and tagged[0]["slot"] == 5
+    assert j["spans"][0]["stage"] == "queue.wait" and j["spans"][0]["dur"] == 400
+    # Negative cases: the checker must actually reject corrupt streams.
+    for mutate in (
+        lambda s: s.update(start=1300, end=1500),          # beyond wall
+        lambda s: s.update(depth=3),                       # orphan depth
+    ):
+        bad = [dict(x) for x in spans]
+        mutate(bad[0])
+        try:
+            validate_line(emit_request(2, "score", "scalar", 400, 1400, bad))
+        except AssertionError:
+            pass
+        else:
+            raise SystemExit("corrupt trace accepted")
+    print("  traces: queue shift + nesting + wall containment verified, "
+          "corrupt streams rejected")
+
+
+# ----------------------------------------- 4. prometheus name sanitation
+
+def prom_name(name):
+    return "resmoe_" + "".join(c if c.isalnum() else "_" for c in name)
+
+
+def check_prom_names():
+    cases = {
+        "cache.hits": "resmoe_cache_hits",
+        "server.latency_us": "resmoe_server_latency_us",
+        "batch.occupancy.b3_4": "resmoe_batch_occupancy_b3_4",
+        "batch.rows_per_expert.gt8": "resmoe_batch_rows_per_expert_gt8",
+    }
+    for raw, want in cases.items():
+        got = prom_name(raw)
+        assert got == want, (raw, got, want)
+        assert all(c.isalnum() or c == "_" for c in got)
+    print(f"  prometheus names: {len(cases)} registry names sanitize as exported")
+
+
+def main():
+    print("sim_obs: validating observability layer invariants")
+    check_partition()
+    check_quantiles()
+    check_traces()
+    check_prom_names()
+    print("sim_obs OK")
+
+
+if __name__ == "__main__":
+    main()
