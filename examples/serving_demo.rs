@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         batch_wait_us: 300,
         cache_budget_bytes: 2 * expert_bytes * cfg.moe_layer_indices().len(),
         workers: 2,
+        ..Default::default()
     };
     demo::run_demo(&assets, sc, 64, None)
 }

@@ -162,15 +162,15 @@ fn main() {
     let expert_bytes = layer.experts[0].n_params() * 4;
     runner.run("cache get (warm, hit)", 1, iters * 10, || {
         let cache = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
-        cache.get(0, 0);
+        cache.try_get(0, 0).unwrap();
         for _ in 0..100 {
-            std::hint::black_box(cache.get(0, 0));
+            std::hint::black_box(cache.try_get(0, 0).unwrap());
         }
     });
     runner.run("cache get (thrash, budget=1 expert)", 1, iters.min(5), || {
         let cache = ExpertCache::new(vec![(0, cl.clone())], expert_bytes);
         for i in 0..20 {
-            std::hint::black_box(cache.get(0, i % 8));
+            std::hint::black_box(cache.try_get(0, i % 8).unwrap());
         }
     });
 

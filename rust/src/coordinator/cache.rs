@@ -194,6 +194,24 @@ pub struct CacheMetrics {
     /// first; the resident copy is served instead (decodes are
     /// bit-identical, so this is bookkeeping, not a correctness event).
     pub publish_races_lost: u64,
+    /// Store-fetch failures classified transient (retryable I/O), counted
+    /// per failed attempt. Integrity failures (CRC/decode/layout) are NOT
+    /// retried and are not counted here.
+    pub transient_errors: u64,
+    /// Backed-off retries of transient fetch failures inside a singleflight
+    /// materialize (waiters share the retried result).
+    pub fetch_retries: u64,
+    /// Shard quarantine entries: transitions into (or re-entries of) the
+    /// quarantined state after `QUARANTINE_THRESHOLD` consecutive
+    /// whole-fetch failures. TTL expiry re-probes; success clears.
+    pub quarantined_shards: u64,
+    /// Serves answered by [`Serve::Degraded`] — the barycenter-only center
+    /// path standing in for an unfetchable/quarantined residual (the
+    /// paper's rate→0 approximation).
+    pub degraded_serves: u64,
+    /// Store failures on the *prefetch* path (advisory; never retried,
+    /// never degrades anything) — kept separate from demand-path errors.
+    pub prefetch_errors: u64,
 }
 
 impl CacheMetrics {
@@ -248,6 +266,11 @@ pub(crate) struct CacheCounters {
     singleflight_waits: Arc<Counter>,
     dedup_fetches: Arc<Counter>,
     publish_races_lost: Arc<Counter>,
+    transient_errors: Arc<Counter>,
+    fetch_retries: Arc<Counter>,
+    quarantined_shards: Arc<Counter>,
+    degraded_serves: Arc<Counter>,
+    prefetch_errors: Arc<Counter>,
 }
 
 impl CacheCounters {
@@ -276,6 +299,11 @@ impl CacheCounters {
             singleflight_waits: reg.counter("cache.singleflight_waits"),
             dedup_fetches: reg.counter("cache.dedup_fetches"),
             publish_races_lost: reg.counter("cache.publish_races_lost"),
+            transient_errors: reg.counter("cache.transient_errors"),
+            fetch_retries: reg.counter("cache.fetch_retries"),
+            quarantined_shards: reg.counter("cache.quarantined_shards"),
+            degraded_serves: reg.counter("cache.degraded_serves"),
+            prefetch_errors: reg.counter("cache.prefetch_errors"),
         }
     }
 
@@ -306,6 +334,11 @@ impl CacheCounters {
             singleflight_waits: self.singleflight_waits.get(),
             dedup_fetches: self.dedup_fetches.get(),
             publish_races_lost: self.publish_races_lost.get(),
+            transient_errors: self.transient_errors.get(),
+            fetch_retries: self.fetch_retries.get(),
+            quarantined_shards: self.quarantined_shards.get(),
+            degraded_serves: self.degraded_serves.get(),
+            prefetch_errors: self.prefetch_errors.get(),
         }
     }
 }
@@ -324,6 +357,12 @@ pub enum Serve {
     /// [`crate::compress::fused_forward_expert`] with a
     /// [`crate::compress::center_shared_act`] shared term.
     Paged { center: Arc<ExpertWeights>, expert: Arc<FusedExpert> },
+    /// Fault-degraded store-mode answer: the residual shard was
+    /// quarantined or unfetchable, so the slot is served by the shared
+    /// barycenter center alone — the rate→0 limit of the paper's
+    /// `expert ≈ barycenter + residual` approximation. Approximate, never
+    /// silent: the server marks these responses [`super::Response::Degraded`].
+    Degraded(Arc<ExpertWeights>),
 }
 
 impl Serve {
@@ -339,9 +378,65 @@ impl Serve {
                 Serve::Paged { center: ca, expert: ea },
                 Serve::Paged { center: cb, expert: eb },
             ) => Arc::ptr_eq(ca, cb) && Arc::ptr_eq(ea, eb),
+            (Serve::Degraded(a), Serve::Degraded(b)) => Arc::ptr_eq(a, b),
             _ => false,
         }
     }
+}
+
+// ------------------------------------------------- fault classification
+
+/// How a store-path failure should be handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Retryable I/O (read errors, short reads, injected transients):
+    /// worth a bounded backed-off retry before giving up.
+    Transient,
+    /// The bytes came back but are wrong (CRC mismatch, zstd failure,
+    /// length/layout disagreement): retrying re-reads the same bad bytes,
+    /// so fail fast and let quarantine + degradation take over.
+    Integrity,
+}
+
+/// Classify a formatted store/cache error chain. Substring-matching the
+/// message is deliberate: errors cross singleflight flights as strings
+/// (`anyhow::Error` is not `Clone`), so the string IS the wire format.
+pub fn classify_error(msg: &str) -> ErrorClass {
+    const INTEGRITY: [&str; 4] =
+        ["checksum mismatch", "decompression failed", "index says", "bad shard payload"];
+    if INTEGRITY.iter().any(|m| msg.contains(m)) {
+        ErrorClass::Integrity
+    } else {
+        ErrorClass::Transient
+    }
+}
+
+/// Consecutive whole-fetch failures (each already retried up to
+/// [`FETCH_RETRY_LIMIT`] times) before a shard enters quarantine.
+const QUARANTINE_THRESHOLD: u32 = 3;
+/// Base quarantine TTL; doubles on every failed re-probe (hysteresis so a
+/// genuinely dead shard costs one probe per widening window, not a flap).
+const QUARANTINE_TTL: std::time::Duration = std::time::Duration::from_millis(250);
+/// Cap on the TTL doubling (2^6 · 250ms = 16s between probes).
+const QUARANTINE_MAX_SPELLS: u32 = 6;
+/// Transient-failure retries per fetch, inside the singleflight
+/// materialize step — waiters share the retried result.
+const FETCH_RETRY_LIMIT: u32 = 3;
+/// Backoff before retry k (1-based) is `FETCH_BACKOFF · 2^(k-1)`.
+const FETCH_BACKOFF: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// Per-shard failure bookkeeping (store mode, keyed by stored-expert
+/// index). Absent from the map = healthy; success removes the entry, so
+/// with faults never firing this table stays empty and costs nothing.
+struct ShardHealth {
+    /// Whole-fetch failures in a row (retry budget already spent on each).
+    consecutive_failures: u32,
+    /// While `Instant::now()` is before this, serves skip the store and
+    /// degrade immediately; after it, the next serve is the half-open
+    /// probe (singleflight guarantees there is exactly one prober).
+    quarantined_until: Option<Instant>,
+    /// Completed quarantine spells — the TTL-doubling exponent.
+    spells: u32,
 }
 
 struct Entry {
@@ -521,6 +616,9 @@ struct BlockState {
     shard_used_bytes: usize,
     /// LRU clock (monotone, per block).
     clock: u64,
+    /// Store mode: stored-expert index → failure/quarantine state. Empty
+    /// unless fetches have actually failed.
+    health: HashMap<usize, ShardHealth>,
 }
 
 impl BlockState {
@@ -536,6 +634,7 @@ impl BlockState {
             used_bytes: 0,
             shard_used_bytes: 0,
             clock: 0,
+            health: HashMap::new(),
         }
     }
 
@@ -868,9 +967,20 @@ impl ExpertCache {
     }
 
     /// Count an async-prefetch result that had to be discarded before it
-    /// reached [`ExpertCache::insert_prefetched`] (e.g. the store fetch
-    /// itself failed) — keeps the prefetcher's books honest. Lock-free.
+    /// reached [`ExpertCache::insert_prefetched`] (raced a demand fetch, or
+    /// the budget was full) — keeps the prefetcher's books honest.
+    /// Lock-free.
     pub(crate) fn note_prefetch_dropped(&self) {
+        self.counters.prefetch_dropped.inc();
+    }
+
+    /// Count a prefetch whose *store fetch itself* failed — kept separate
+    /// from demand-path error counters (and from `prefetch_dropped`, which
+    /// means "fetched fine, discarded anyway") so fault dashboards can tell
+    /// advisory losses from serving-path trouble. Also counted as a drop:
+    /// the scheduled load never landed. Lock-free.
+    pub(crate) fn note_prefetch_error(&self) {
+        self.counters.prefetch_errors.inc();
         self.counters.prefetch_dropped.inc();
     }
 
@@ -926,19 +1036,41 @@ impl ExpertCache {
         self.lock_state().blocks.values().map(|bs| bs.shards.len()).sum()
     }
 
+    /// Live singleflight flights — the chaos suite's lease-leak detector:
+    /// after every client thread has joined, this must be zero no matter
+    /// how many leaders failed or aborted.
+    #[doc(hidden)]
+    pub fn debug_flight_count(&self) -> usize {
+        self.lock_state().flights.len()
+    }
+
     /// Fetch (restoring if needed) the expert for `(block, slot)` — the
-    /// plain Algorithm-2 path: every miss restores and caches.
-    pub fn get(&self, block: usize, slot: usize) -> Arc<ExpertWeights> {
+    /// plain Algorithm-2 path: every miss restores and caches. Fallible in
+    /// store mode (fetch/integrity errors); infallible monolithic.
+    pub fn try_get(&self, block: usize, slot: usize) -> Result<Arc<ExpertWeights>> {
         {
             let mut st = self.lock_state();
             let bs = st.block_mut(block);
             bs.clock += 1;
             if let Some(e) = bs.hit(slot, &self.counters) {
-                return e;
+                return Ok(e);
             }
             self.counters.misses.inc();
         }
-        self.restore_and_cache(block, slot, false).expect("expert shard fetch failed")
+        self.restore_and_cache(block, slot, false)
+    }
+
+    /// Panicking [`ExpertCache::try_get`] — test-only convenience.
+    #[cfg(test)]
+    pub(crate) fn get(&self, block: usize, slot: usize) -> Arc<ExpertWeights> {
+        self.try_get(block, slot).expect("expert shard fetch failed")
+    }
+
+    /// Panicking [`ExpertCache::try_serve`] — test-only convenience for
+    /// suites that assert on the decision, not the failure handling.
+    #[cfg(test)]
+    pub(crate) fn serve(&self, block: usize, slot: usize, batch_tokens: usize) -> Serve {
+        self.try_serve(block, slot, batch_tokens).expect("expert shard fetch failed")
     }
 
     /// Serve `(block, slot)` for a sub-batch of `batch_tokens` tokens,
@@ -946,18 +1078,17 @@ impl ExpertCache {
     /// restore-free fused path per the cost model. Decisions land in
     /// [`CacheMetrics::restore_serves`] / [`CacheMetrics::fused_serves`].
     ///
-    /// Panics in store mode when a shard cannot be fetched or fails its
-    /// checksum — a corrupt artifact must never be silently served; use
-    /// [`ExpertCache::try_serve`] to handle the error instead.
-    pub fn serve(&self, block: usize, slot: usize, batch_tokens: usize) -> Serve {
-        self.try_serve(block, slot, batch_tokens).expect("expert shard fetch failed")
-    }
-
-    /// Fallible [`ExpertCache::serve`] (store fetch / integrity errors).
-    ///
     /// Phase 1 (locked): clock tick, heat bump, hit check, cost-model
     /// decision. Phases 2–3 (materialize + publish) run in the singleflight
     /// helpers below, outside the metadata lock.
+    ///
+    /// Store mode degrades instead of failing where the math allows it: if
+    /// the residual shard cannot be fetched (quarantined, exhausted its
+    /// transient-retry budget, or integrity-bad) but the barycenter center
+    /// IS available, the serve answers [`Serve::Degraded`] — approximate
+    /// output beats a failed request, and the server marks it so clients
+    /// can tell. Only when the center itself is unavailable does the error
+    /// propagate.
     pub fn try_serve(&self, block: usize, slot: usize, batch_tokens: usize) -> Result<Serve> {
         let wants_fused = {
             let mut st = self.lock_state();
@@ -975,10 +1106,14 @@ impl ExpertCache {
         if wants_fused {
             if self.store.is_some() {
                 if let Some(center) = self.fused_center(block) {
-                    let expert = self.fused_shard_expert(block, slot)?;
-                    self.counters.fused_serves.inc();
-                    self.counters.quant_serves.add(quant);
-                    return Ok(Serve::Paged { center, expert });
+                    match self.fused_shard_expert(block, slot) {
+                        Ok(expert) => {
+                            self.counters.fused_serves.inc();
+                            self.counters.quant_serves.add(quant);
+                            return Ok(Serve::Paged { center, expert });
+                        }
+                        Err(e) => return self.degrade(block, slot, Some(center), e),
+                    }
                 }
             } else if let Some(fl) = self.fused_layer(block) {
                 self.counters.fused_serves.inc();
@@ -988,16 +1123,42 @@ impl ExpertCache {
         }
         self.counters.restore_serves.inc();
         self.counters.quant_serves.add(quant);
-        Ok(Serve::Dense(self.restore_and_cache(block, slot, false)?))
+        match self.restore_and_cache(block, slot, false) {
+            Ok(e) => Ok(Serve::Dense(e)),
+            Err(e) if self.store.is_some() => self.degrade(block, slot, None, e),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Barycenter-degraded fallback: answer an unfetchable residual slot
+    /// with the shared center alone. Returns the original error when the
+    /// center is unavailable too (nothing principled left to serve).
+    fn degrade(
+        &self,
+        block: usize,
+        slot: usize,
+        center: Option<Arc<ExpertWeights>>,
+        err: anyhow::Error,
+    ) -> Result<Serve> {
+        let center = match center.or_else(|| self.fused_center(block)) {
+            Some(c) => c,
+            None => return Err(err),
+        };
+        self.counters.degraded_serves.inc();
+        let mut sp = trace::span("cache.degraded");
+        sp.key(block, slot);
+        Ok(Serve::Degraded(center))
     }
 
     /// Serve one layer's whole batch window. `wants` is the per-(request,
     /// slot) serve sequence **in serial order** — requests in admission
     /// order, each request's activated slots ascending, each entry carrying
     /// that request's own sub-batch row count — and the result is one
-    /// [`Serve`] per entry, exactly what `wants.iter().map(|&(s, t)|
+    /// serve result per entry, exactly what `wants.iter().map(|&(s, t)|
     /// self.try_serve(block, s, t))` would return (bit-identical decisions
     /// AND metrics; the differential tests compare against that loop).
+    /// Results are per-want so a failed fetch is pinned on the one request
+    /// that owns the want — never on the whole window.
     ///
     /// The batching win: a warm window (every wanted slot dense-resident)
     /// is answered in ONE metadata critical section — one decide/reserve
@@ -1011,9 +1172,9 @@ impl ExpertCache {
         &self,
         block: usize,
         wants: &[(usize, usize)],
-    ) -> Result<Vec<Serve>> {
+    ) -> Vec<Result<Serve>> {
         if wants.is_empty() {
-            return Ok(Vec::new());
+            return Vec::new();
         }
         {
             let mut st = self.lock_state();
@@ -1030,16 +1191,17 @@ impl ExpertCache {
                     bs.clock += 1;
                     bs.bump_heat(slot);
                     let e = bs.hit(slot, &self.counters).expect("checked resident");
-                    out.push(Serve::Dense(e));
+                    out.push(Ok(Serve::Dense(e)));
                 }
                 self.counters.batch_warm_windows.inc();
-                return Ok(out);
+                return out;
             }
         }
         // Cold/mixed window: exact serial replay. Materializations collapse
         // across the window through residency (first restore publishes,
         // later wants of the key hit) and across concurrent windows through
-        // the per-key singleflight.
+        // the per-key singleflight. Degradation and per-want errors fall
+        // out of the replay automatically, matching serial attribution.
         wants.iter().map(|&(slot, tokens)| self.try_serve(block, slot, tokens)).collect()
     }
 
@@ -1169,6 +1331,17 @@ impl ExpertCache {
             if let Some(expert) = bs.touch_shard_entry(eidx, !from_prefetch, &self.counters) {
                 return Ok(expert);
             }
+            // Quarantined shard with a live TTL: refuse without touching the
+            // store (or reserving a flight). Past the TTL the serve falls
+            // through and becomes the half-open probe — the singleflight
+            // ensures exactly one prober while the rest wait on its flight.
+            if let Some(until) = bs.health.get(&eidx).and_then(|h| h.quarantined_until) {
+                if Instant::now() < until {
+                    return Err(anyhow::anyhow!(
+                        "block {block} expert {eidx}: quarantined after repeated fetch failures"
+                    ));
+                }
+            }
             match self.join_or_lead(&mut st, FlightKey::Shard(block, eidx)) {
                 Ok(lease) => lease,
                 Err(flight) => {
@@ -1190,28 +1363,69 @@ impl ExpertCache {
             }
         };
         // --- materialize (unlocked): file read + CRC-32 + zstd decode.
+        // Transient failures (retryable I/O) get a bounded, exponentially
+        // backed-off retry INSIDE the flight, so every waiter shares the
+        // eventually-successful result; integrity failures fail fast.
         assert_unlocked("store shard fetch/decode");
         let store = self.store.clone().expect("shard_expert requires store mode");
-        let (fetched, fetch_ns) = {
-            let mut sp = trace::span("cache.shard_fetch");
-            sp.key(block, eidx);
-            let t0 = Instant::now();
-            let fetched = store.load_expert(block, eidx);
-            if let Ok(e) = &fetched {
-                sp.tier(if e.is_quantized() { "q8" } else { "f32" });
+        let t0 = Instant::now();
+        let mut attempt: u32 = 0;
+        let fetched = loop {
+            let fetched = {
+                let mut sp = trace::span("cache.shard_fetch");
+                sp.key(block, eidx);
+                let fetched = store.load_expert(block, eidx);
+                if let Ok(e) = &fetched {
+                    sp.tier(if e.is_quantized() { "q8" } else { "f32" });
+                }
+                fetched
+            };
+            match fetched {
+                Ok(e) => break Ok(e),
+                Err(e) => {
+                    if classify_error(&format!("{e:#}")) == ErrorClass::Transient {
+                        self.counters.transient_errors.inc();
+                        if attempt < FETCH_RETRY_LIMIT {
+                            self.counters.fetch_retries.inc();
+                            let mut sp = trace::span("cache.retry");
+                            sp.key(block, eidx);
+                            std::thread::sleep(FETCH_BACKOFF * (1u32 << attempt));
+                            attempt += 1;
+                            continue;
+                        }
+                    }
+                    break Err(e);
+                }
             }
-            (fetched, t0.elapsed().as_nanos() as u64)
         };
+        let fetch_ns = t0.elapsed().as_nanos() as u64;
         // --- publish (locked).
         let mut st = self.lock_state();
         let expert = match fetched {
             Ok(e) => Arc::new(e),
             Err(e) => {
+                // Whole-fetch failure (retry budget included): count it
+                // against the shard's health; crossing the threshold opens
+                // (or re-opens, with a doubled TTL) a quarantine spell.
+                let h = st.block_mut(block).health.entry(eidx).or_insert(ShardHealth {
+                    consecutive_failures: 0,
+                    quarantined_until: None,
+                    spells: 0,
+                });
+                h.consecutive_failures += 1;
+                if h.consecutive_failures >= QUARANTINE_THRESHOLD {
+                    let exp = h.spells.min(QUARANTINE_MAX_SPELLS);
+                    h.quarantined_until = Some(Instant::now() + QUARANTINE_TTL * (1u32 << exp));
+                    h.spells += 1;
+                    self.counters.quarantined_shards.inc();
+                }
                 lease.complete(&mut st, Err(format!("{e:#}")));
                 return Err(e);
             }
         };
         let bs = st.block_mut(block);
+        // A successful fetch clears the failure streak and any quarantine.
+        bs.health.remove(&eidx);
         if let Some(resident) = bs.touch_shard_entry(eidx, !from_prefetch, &self.counters) {
             // An async prefetch published this key while we fetched: keep
             // the resident copy (decodes are bit-identical), drop ours —
@@ -1508,7 +1722,10 @@ impl ExpertCache {
             if self.store.is_some() {
                 let Some(eidx) = eidx else { continue };
                 if self.shard_expert(b, eidx, true).is_err() {
-                    self.note_prefetch_dropped();
+                    // Advisory path: a failed pre-warm never retries,
+                    // never quarantines harder than the demand path
+                    // already did, and never fails anything upstream.
+                    self.note_prefetch_error();
                 }
             } else {
                 // Monolithic restore cannot fail; errors are impossible but
@@ -1542,6 +1759,17 @@ impl ExpertCache {
             let Some(eidx) = self.expert_index(b, s) else { continue };
             let shard_in_flight = st.flights.contains_key(&FlightKey::Shard(b, eidx));
             let bs = st.block_mut(b);
+            // Never schedule a prediction against a quarantined shard: the
+            // demand path is refusing it, so a prefetch would just burn a
+            // store round-trip to fail the same way.
+            let quarantined = bs
+                .health
+                .get(&eidx)
+                .and_then(|h| h.quarantined_until)
+                .is_some_and(|until| Instant::now() < until);
+            if quarantined {
+                continue;
+            }
             if bs.entries.contains_key(&s)
                 || bs.shards.contains_key(&eidx)
                 || in_flight.contains(&(b, eidx))
@@ -1845,7 +2073,8 @@ mod tests {
         let batched = ExpertCache::new(vec![(0, cl.clone())], usize::MAX);
         batched.serve(0, 1, 1);
         batched.serve(0, 2, 1);
-        let serves = batched.try_serve_batch(0, &wants).unwrap();
+        let serves: Vec<Serve> =
+            batched.try_serve_batch(0, &wants).into_iter().map(|r| r.unwrap()).collect();
         assert_eq!(serves.len(), wants.len());
         for (s, &(slot, _)) in serves.iter().zip(&wants) {
             match s {
@@ -1872,7 +2101,8 @@ mod tests {
         let want_serves: Vec<Serve> =
             wants.iter().map(|&(s, t)| reference.serve(0, s, t)).collect();
         let batched = ExpertCache::new(vec![(0, cl)], usize::MAX);
-        let got_serves = batched.try_serve_batch(0, &wants).unwrap();
+        let got_serves: Vec<Serve> =
+            batched.try_serve_batch(0, &wants).into_iter().map(|r| r.unwrap()).collect();
         for (got, want) in got_serves.iter().zip(&want_serves) {
             match (got, want) {
                 (Serve::Dense(a), Serve::Dense(b)) => assert_eq!(**a, **b),
@@ -2201,7 +2431,8 @@ mod tests {
         let want_serves: Vec<Serve> =
             wants.iter().map(|&(s, t)| reference.serve(1, s, t)).collect();
         let (_, batched) = store_cache(38, one_expert_bytes());
-        let got_serves = batched.try_serve_batch(1, &wants).unwrap();
+        let got_serves: Vec<Serve> =
+            batched.try_serve_batch(1, &wants).into_iter().map(|r| r.unwrap()).collect();
         for (i, (got, want)) in got_serves.iter().zip(&want_serves).enumerate() {
             let same_kind = matches!(
                 (got, want),

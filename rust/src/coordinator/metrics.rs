@@ -30,6 +30,9 @@ pub struct ServerMetrics {
     /// Executed-window size histogram (sizes < 16 are exact buckets).
     pub batch_size: HistogramSnapshot,
     pub tokens_processed: u64,
+    /// Requests shed by admission control or deadline enforcement
+    /// (answered [`super::server::Response::Overloaded`], never executed).
+    pub shed: u64,
     pub wall_s: f64,
 }
 
@@ -65,7 +68,7 @@ impl ServerMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} requests | {:.1} req/s | {:.0} tok/s | p50 {:.2} ms | p99 {:.2} ms | mean batch {:.1}",
             self.requests,
             self.requests_per_s(),
@@ -73,7 +76,11 @@ impl ServerMetrics {
             self.p50_ms(),
             self.p99_ms(),
             self.mean_batch()
-        )
+        );
+        if self.shed > 0 {
+            line.push_str(&format!(" | {} shed", self.shed));
+        }
+        line
     }
 }
 
@@ -87,6 +94,7 @@ pub struct ServerStats {
     pub requests: Arc<Counter>,
     pub tokens: Arc<Counter>,
     pub batches: Arc<Counter>,
+    pub shed: Arc<Counter>,
     pub latency_us: Arc<Histogram>,
     pub batch_size: Arc<Histogram>,
 }
@@ -97,6 +105,7 @@ impl ServerStats {
             requests: reg.counter("server.requests"),
             tokens: reg.counter("server.tokens"),
             batches: reg.counter("server.batches"),
+            shed: reg.counter("server.shed"),
             latency_us: reg.histogram("server.latency_us"),
             batch_size: reg.histogram("server.batch_size"),
         }
@@ -105,6 +114,11 @@ impl ServerStats {
     pub fn record_request(&self, latency: Duration) {
         self.requests.inc();
         self.latency_us.record(latency.as_micros() as u64);
+    }
+
+    /// Record one request shed by admission control or a missed deadline.
+    pub fn record_shed(&self) {
+        self.shed.inc();
     }
 
     pub fn record_batch(&self, size: usize, tokens: u64) {
@@ -119,6 +133,7 @@ impl ServerStats {
             latency_us: self.latency_us.snapshot(),
             batch_size: self.batch_size.snapshot(),
             tokens_processed: self.tokens.get(),
+            shed: self.shed.get(),
             wall_s,
         }
     }
@@ -384,6 +399,25 @@ pub fn cache_summary(cm: &CacheMetrics) -> String {
             cm.singleflight_waits, cm.dedup_fetches, cm.publish_races_lost
         ));
     }
+    // The fault-tolerance story stays invisible until something actually
+    // goes wrong — a healthy run's summary line is byte-identical to the
+    // pre-fault-tolerance format (pinned by the golden test below).
+    if cm.transient_errors
+        + cm.fetch_retries
+        + cm.quarantined_shards
+        + cm.degraded_serves
+        + cm.prefetch_errors
+        > 0
+    {
+        line.push_str(&format!(
+            " | faults: {} transient, {} retries, {} quarantines, {} degraded, {} prefetch errors",
+            cm.transient_errors,
+            cm.fetch_retries,
+            cm.quarantined_shards,
+            cm.degraded_serves,
+            cm.prefetch_errors
+        ));
+    }
     line
 }
 
@@ -512,6 +546,14 @@ mod tests {
         cm.dedup_fetches = 4;
         let contended = cache_summary(&cm);
         assert!(contended.contains("singleflight: 3 waits, 4 deduped, 0 publish races lost"));
+        assert!(!contended.contains("faults"), "quiet until something fails");
+        cm.transient_errors = 2;
+        cm.fetch_retries = 2;
+        cm.quarantined_shards = 1;
+        cm.degraded_serves = 5;
+        let faulted = cache_summary(&cm);
+        assert!(faulted
+            .contains("faults: 2 transient, 2 retries, 1 quarantines, 5 degraded, 0 prefetch errors"));
     }
 
     /// Golden-line pins: `cache_summary` and `batch_summary` are parsed by

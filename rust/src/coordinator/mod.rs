@@ -11,6 +11,6 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{next_window, BatchPolicy, Batcher, FlushReason, Window};
-pub use cache::{CacheMetrics, ExpertCache, Serve};
+pub use cache::{classify_error, CacheMetrics, ErrorClass, ExpertCache, Serve};
 pub use metrics::{batch_summary, cache_summary, BatchMetrics, ServerMetrics, ServerStats};
 pub use server::{Engine, Request, Response, Server, ServerConfig};

@@ -34,9 +34,14 @@
 //!
 //! Sequential requests (Generate) run one-at-a-time at their admission
 //! position — decode steps share the warm cache but not a forward. Error
-//! semantics under batching: a store/integrity failure mid-window fails
-//! the whole window (every request in it answers `Response::Error`),
-//! whereas serial serving pins the error on the single requesting client.
+//! semantics under batching match serial serving exactly: a store or
+//! integrity failure mid-window is pinned on the requests whose rows
+//! routed to the failing expert (each answers `Response::Error` with the
+//! same message serial serving would produce), and every other request in
+//! the window still gets its bit-exact answer. When the failing expert's
+//! block has a resident barycenter center, the cache degrades the serve
+//! instead of failing it and the affected responses come back wrapped in
+//! [`Response::Degraded`] — approximate, never silent.
 //!
 //! # Observability
 //!
@@ -66,6 +71,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -84,6 +90,14 @@ pub struct ServerConfig {
     /// Byte budget for the restored-expert cache.
     pub cache_budget_bytes: usize,
     pub workers: usize,
+    /// Admission control: max requests queued or executing before
+    /// [`Server::submit`] sheds with [`Response::Overloaded`]. 0 (the
+    /// default) = unbounded, bit-identical to the pre-admission server.
+    pub max_queue: usize,
+    /// Per-request deadline (ms): a job still waiting for a worker past
+    /// its deadline is shed with [`Response::Overloaded`] instead of
+    /// executing doomed work. 0 (the default) = no deadline.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -93,16 +107,28 @@ impl Default for ServerConfig {
             batch_wait_us: 500,
             cache_budget_bytes: 64 * 1024 * 1024,
             workers: 2,
+            max_queue: 0,
+            deadline_ms: 0,
         }
     }
 }
 
 impl ServerConfig {
-    /// Defaults with the `RESMOE_BATCH` / `RESMOE_LINGER_US` environment
-    /// knobs applied to the window policy.
+    /// Defaults with the `RESMOE_BATCH` / `RESMOE_LINGER_US` window knobs
+    /// plus the `RESMOE_MAX_QUEUE` / `RESMOE_DEADLINE_MS` admission knobs
+    /// applied.
     pub fn from_env() -> ServerConfig {
         let p = BatchPolicy::from_env();
-        ServerConfig { batch_max: p.max_batch, batch_wait_us: p.linger_us, ..Default::default() }
+        let env_u = |name: &str| {
+            std::env::var(name).ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0)
+        };
+        ServerConfig {
+            batch_max: p.max_batch,
+            batch_wait_us: p.linger_us,
+            max_queue: env_u("RESMOE_MAX_QUEUE") as usize,
+            deadline_ms: env_u("RESMOE_DEADLINE_MS"),
+            ..Default::default()
+        }
     }
 }
 
@@ -139,6 +165,24 @@ pub enum Response {
     /// Prometheus-style exposition text (see `obs::MetricsSnapshot`).
     Metrics(String),
     Error(String),
+    /// A successful answer computed with at least one barycenter-degraded
+    /// expert serve ([`Serve::Degraded`]): numerically approximate (the
+    /// paper's rate→0 limit), never silent — clients unwrap explicitly.
+    Degraded(Box<Response>),
+    /// Shed by admission control (queue full) or a missed deadline; the
+    /// request was NOT executed.
+    Overloaded(String),
+}
+
+impl Response {
+    /// The exact answer, or the degraded approximation unwrapped — for
+    /// clients that prefer approximate output over handling the marker.
+    pub fn into_inner(self) -> Response {
+        match self {
+            Response::Degraded(inner) => *inner,
+            other => other,
+        }
+    }
 }
 
 /// How a request executes inside a batch window.
@@ -380,6 +424,21 @@ impl Engine {
     }
 
     fn handle_inner(&self, req: &Request) -> Response {
+        // Discard any stale fault attribution (e.g. from a predecessor
+        // that panicked between noting a fault and draining it).
+        let _ = take_forward_faults();
+        let resp = self.handle_dispatch(req);
+        let faults = take_forward_faults();
+        if let Some((_, msg)) = faults.errors.into_iter().next() {
+            return Response::Error(msg);
+        }
+        if !faults.degraded.is_empty() && !matches!(resp, Response::Error(_)) {
+            return Response::Degraded(Box::new(resp));
+        }
+        resp
+    }
+
+    fn handle_dispatch(&self, req: &Request) -> Response {
         match req {
             Request::Score { tokens } => {
                 if let Shape::Invalid(msg) = self.shape(req) {
@@ -546,10 +605,12 @@ impl Engine {
             })
             .collect();
         let hook = self.hook();
+        let _ = take_forward_faults();
         let (h, offsets) = {
             let _s = trace::span("forward");
             self.model.hidden_states_batch_hooked(&seqs, &hook)
         };
+        let faults = take_forward_faults();
         let _head_span = trace::span("head");
         // One lm_head projection over every Score request's scored rows at
         // once (row-independent ⇒ bit-identical to per-request
@@ -591,7 +652,71 @@ impl Engine {
                 Request::Generate { .. } => unreachable!(),
             }
         }
+        // Apply per-part fault attribution from the hook: an errored part's
+        // demuxed answer (computed over zero-filled expert rows) is
+        // replaced outright; a degraded part's answer is wrapped so the
+        // approximation is visible. `part` indexes the window's
+        // `part_offsets`, i.e. positions in `idxs`.
+        for (part, msg) in faults.errors {
+            out[idxs[part]] = Some(Response::Error(msg));
+        }
+        for part in faults.degraded {
+            let i = idxs[part];
+            if let Some(resp) = out[i].take() {
+                out[i] = Some(match resp {
+                    Response::Error(_) => resp,
+                    r => Response::Degraded(Box::new(r)),
+                });
+            }
+        }
     }
+}
+
+/// Per-request fault attribution carried from the FFN hook (whose
+/// [`FfnHook`] signature has no error channel) back to the request/response
+/// layer. The hook runs on the calling thread, so a thread-local is exact:
+/// `handle_inner` / `execute_prefill_run` drain it before the forward (any
+/// stale state from a panicked predecessor is discarded) and apply it
+/// after — part-indexed errors turn into [`Response::Error`] for exactly
+/// the requests whose rows routed to the failing expert, and degraded
+/// parts wrap their answers in [`Response::Degraded`]. `part` is the
+/// request's index inside the window's `part_offsets` (always 0 on the
+/// serial path).
+#[derive(Default)]
+struct ForwardFaults {
+    /// Parts that received at least one barycenter-degraded serve.
+    degraded: Vec<usize>,
+    /// First serve error per part, in the order parts first failed.
+    errors: Vec<(usize, String)>,
+}
+
+thread_local! {
+    static FORWARD_FAULTS: std::cell::RefCell<ForwardFaults> =
+        const { std::cell::RefCell::new(ForwardFaults { degraded: Vec::new(), errors: Vec::new() }) };
+}
+
+fn take_forward_faults() -> ForwardFaults {
+    FORWARD_FAULTS.with(|f| std::mem::take(&mut *f.borrow_mut()))
+}
+
+fn note_degraded_part(part: usize) {
+    FORWARD_FAULTS.with(|f| {
+        let mut f = f.borrow_mut();
+        if !f.degraded.contains(&part) {
+            f.degraded.push(part);
+        }
+    });
+}
+
+/// First error wins per part — the same attribution serial serving
+/// produces, where a request fails on the first slot whose serve errors.
+fn note_part_error(part: usize, msg: String) {
+    FORWARD_FAULTS.with(|f| {
+        let mut f = f.borrow_mut();
+        if !f.errors.iter().any(|(p, _)| *p == part) {
+            f.errors.push((part, msg));
+        }
+    });
 }
 
 /// The FFN hook routing compressed blocks through the restore cache's
@@ -629,7 +754,6 @@ impl FfnHook for EngineHook<'_> {
         block_span.block(block);
         let mut shared: Option<SharedAct> = None;
         let mut routed: Vec<usize> = Vec::new();
-        let mut serve_error: Option<anyhow::Error> = None;
         let out = route_dispatch_combine(
             &layer.router,
             x,
@@ -638,8 +762,10 @@ impl FfnHook for EngineHook<'_> {
             |slot, sub, rows| {
                 routed.push(slot);
                 // try_serve so a store fetch/integrity error returns as a
-                // value instead of panicking mid-dispatch; the error
-                // surfaces below, after the combine finishes.
+                // value instead of panicking mid-dispatch; the error is
+                // pinned on this request through the thread-local fault
+                // record and turns into Response::Error after the forward —
+                // the zero-filled rows below are never served.
                 let decision = {
                     let mut s = trace::span("moe.serve");
                     s.key(block, slot);
@@ -657,21 +783,21 @@ impl FfnHook for EngineHook<'_> {
                         let sh = shared.get_or_insert_with(|| center_shared_act(&center, x));
                         fused_forward_expert(&center, &expert, sub, &sh.gather(rows))
                     }
+                    Ok(Serve::Degraded(center)) => {
+                        // Barycenter-only answer for this slot (the paper's
+                        // rate→0 limit); the response is wrapped in
+                        // Response::Degraded so the approximation is never
+                        // silent.
+                        note_degraded_part(0);
+                        center.forward(sub)
+                    }
                     Err(e) => {
-                        if serve_error.is_none() {
-                            serve_error = Some(e);
-                        }
+                        note_part_error(0, format!("expert serve failed for block {block}: {e:#}"));
                         Matrix::zeros(sub.rows, x.cols)
                     }
                 }
             },
         );
-        if let Some(e) = serve_error {
-            // The panic fails THIS request (the server worker converts it
-            // to Response::Error) and the cache stays healthy for the next
-            // one. Never serve the zero-filled output.
-            panic!("expert serve failed for block {block}: {e:#}");
-        }
         // Router-predicted prefetch: expert choice is strongly correlated
         // across adjacent MoE blocks (upcycled experts in particular), so
         // the slots this block activated are the best zero-cost prediction
@@ -728,17 +854,14 @@ impl FfnHook for EngineHook<'_> {
                 }
             }
         }
-        let serves = {
+        // Per-want results: a store error on one request's serve is pinned
+        // on THAT request (matching serial attribution exactly — same
+        // first-failing-slot, same message) while the rest of the window
+        // still gets bit-exact answers.
+        let serves: Vec<Result<Serve>> = {
             let mut s = trace::span("moe.serve");
             s.block(block);
-            match cache.try_serve_batch(block, &wants) {
-                Ok(s) => s,
-                // Fail the whole window loudly (the worker catches the
-                // panic and answers every request in it with
-                // Response::Error): once rows are fused there is no single
-                // requester to pin a store error on.
-                Err(e) => panic!("expert serve failed for block {block}: {e:#}"),
-            }
+            cache.try_serve_batch(block, &wants)
         };
         let mut out = match layer.shared_expert.as_ref() {
             Some(se) => se.forward(x),
@@ -761,12 +884,30 @@ impl FfnHook for EngineHook<'_> {
             let mut segments: Vec<(usize, usize, Serve)> = Vec::new();
             let mut pos = 0usize;
             for &(part, len) in &slot_parts[slot] {
-                let serve = serves[want_of[&(slot, part)]].clone();
-                let extend = matches!(segments.last(), Some((_, _, s)) if s.same_source(&serve));
-                if extend {
-                    segments.last_mut().expect("checked nonempty").1 = pos + len;
-                } else {
-                    segments.push((pos, pos + len, serve));
+                match &serves[want_of[&(slot, part)]] {
+                    Ok(serve) => {
+                        if matches!(serve, Serve::Degraded(_)) {
+                            note_degraded_part(part);
+                        }
+                        // A failed part leaves a gap in the row range, so
+                        // fusing additionally requires contiguity.
+                        let extend = matches!(segments.last(),
+                            Some((_, hi, s)) if *hi == pos && s.same_source(serve));
+                        if extend {
+                            segments.last_mut().expect("checked nonempty").1 = pos + len;
+                        } else {
+                            segments.push((pos, pos + len, serve.clone()));
+                        }
+                    }
+                    Err(e) => {
+                        // The part's rows stay zero in `out`; its response
+                        // is replaced with Response::Error after the
+                        // forward, so the zeros are never served.
+                        note_part_error(
+                            part,
+                            format!("expert serve failed for block {block}: {e:#}"),
+                        );
+                    }
                 }
                 pos += len;
             }
@@ -785,6 +926,7 @@ impl FfnHook for EngineHook<'_> {
                         let sh = shared.get_or_insert_with(|| center_shared_act(&center, x));
                         fused_forward_expert(&center, &expert, &sub_seg, &sh.gather(&rows[lo..hi]))
                     }
+                    Serve::Degraded(center) => center.forward(&sub_seg),
                 };
                 combine_slot_output(&mut out, &group[lo..hi], &y);
                 dispatch_rows.push(hi - lo);
@@ -820,6 +962,11 @@ pub struct Server {
     stats: ServerStats,
     registry: Arc<Registry>,
     started: Instant,
+    /// Requests submitted but not yet executed or shed — the admission
+    /// control signal. Incremented in [`Server::submit`], decremented by
+    /// workers as they drain windows.
+    depth: Arc<AtomicUsize>,
+    max_queue: usize,
 }
 
 impl Server {
@@ -828,13 +975,16 @@ impl Server {
         let rx = Arc::new(Mutex::new(rx));
         let stats = ServerStats::new(engine.registry());
         let registry = engine.registry().clone();
+        let depth = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::new();
         let policy =
             BatchPolicy { max_batch: cfg.batch_max.max(1), linger_us: cfg.batch_wait_us };
+        let deadline_ms = cfg.deadline_ms;
         for _ in 0..cfg.workers.max(1) {
             let rx = rx.clone();
             let engine = engine.clone();
             let stats = stats.clone();
+            let depth = depth.clone();
             handles.push(std::thread::spawn(move || {
                 let mut batcher = Batcher::new(policy);
                 let epoch = Instant::now();
@@ -846,12 +996,40 @@ impl Server {
                         next_window(&guard, &mut batcher, epoch)
                     };
                     let Some(window) = window else { break };
-                    let size = window.items.len();
+                    depth.fetch_sub(window.items.len(), Ordering::Relaxed);
                     engine.note_flush(window.reason, window.waited_us);
+                    // Deadline shedding: a job still queued past its
+                    // deadline answers Overloaded instead of executing
+                    // doomed work that its client has given up on. With
+                    // deadline_ms == 0 this branch never runs and the
+                    // window executes exactly as admitted.
+                    let mut items = window.items;
+                    if deadline_ms > 0 {
+                        let deadline = Duration::from_millis(deadline_ms);
+                        let now = Instant::now();
+                        let mut live = Vec::with_capacity(items.len());
+                        for j in items {
+                            if now.saturating_duration_since(j.submitted) > deadline {
+                                stats.record_shed();
+                                let _ = j.reply.send((
+                                    Response::Overloaded(
+                                        "deadline exceeded before execution".into(),
+                                    ),
+                                    j.submitted.elapsed(),
+                                ));
+                            } else {
+                                live.push(j);
+                            }
+                        }
+                        items = live;
+                        if items.is_empty() {
+                            continue;
+                        }
+                    }
+                    let size = items.len();
                     // Decompose jobs so handle_batch borrows the owned
                     // requests — no token-buffer clones on the hot path.
-                    let (reqs, replies): (Vec<Request>, Vec<(Instant, Sender<_>)>) = window
-                        .items
+                    let (reqs, replies): (Vec<Request>, Vec<(Instant, Sender<_>)>) = items
                         .into_iter()
                         .map(|j| (j.req, (j.submitted, j.reply)))
                         .unzip();
@@ -866,12 +1044,12 @@ impl Server {
                             .map(|(sub, _)| now.saturating_duration_since(*sub).as_nanos() as u64)
                             .collect()
                     });
-                    // A panic while serving (e.g. a corrupt artifact shard
-                    // surfacing mid-window) must not take the worker down:
-                    // answer every request of THIS window with an error —
-                    // carrying the panic message, so "checksum mismatch in
-                    // block 3" reaches the clients, not just stderr — and
-                    // keep draining.
+                    // Store and integrity failures are handled inside the
+                    // engine (per-request error pinning, degraded serves),
+                    // so this catch_unwind is a last-resort backstop for
+                    // genuine bugs: a panic must not take the worker down —
+                    // answer every request of THIS window with an error
+                    // carrying the panic message and keep draining.
                     let responses = catch_unwind(AssertUnwindSafe(|| {
                         engine.handle_batch_traced(&reqs, queue_waits.as_deref())
                     }))
@@ -898,12 +1076,36 @@ impl Server {
                 }
             }));
         }
-        Server { tx: Some(tx), handles, stats, registry, started: Instant::now() }
+        Server {
+            tx: Some(tx),
+            handles,
+            stats,
+            registry,
+            started: Instant::now(),
+            depth,
+            max_queue: cfg.max_queue,
+        }
     }
 
     /// Submit a request; the receiver yields (response, latency).
+    ///
+    /// With `max_queue > 0`, admission control sheds here: a submit that
+    /// would push the in-flight depth past the limit answers
+    /// [`Response::Overloaded`] immediately (on the returned receiver)
+    /// without enqueueing — bounded queueing delay instead of unbounded
+    /// tail latency under overload.
     pub fn submit(&self, req: Request) -> Receiver<(Response, Duration)> {
         let (reply_tx, reply_rx) = channel();
+        let d = self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.max_queue > 0 && d >= self.max_queue {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            self.stats.record_shed();
+            let _ = reply_tx.send((
+                Response::Overloaded(format!("queue full ({} in flight)", self.max_queue)),
+                Duration::ZERO,
+            ));
+            return reply_rx;
+        }
         let job = Job { req, submitted: Instant::now(), reply: reply_tx };
         self.tx.as_ref().expect("server running").send(job).expect("workers alive");
         reply_rx

@@ -61,7 +61,9 @@ fn print_help() {
            table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
          (both serve demos print a final metrics snapshot; --metrics-out writes the\n\
           JSON form consumed by scripts/ci.sh SLO gates. RESMOE_TRACE=<file|stderr>\n\
-          emits per-request JSONL stage traces.)\n\
+          emits per-request JSONL stage traces. RESMOE_FAULTS=seed:N,spec:... injects\n\
+          deterministic store faults (see util::fault); RESMOE_MAX_QUEUE /\n\
+          RESMOE_DEADLINE_MS bound queue depth and per-request deadlines.)\n\
          (tables also regenerate via `cargo bench --bench table1_approx_error` etc.)"
     );
 }
@@ -272,6 +274,7 @@ fn cmd_serve_packed(args: &Args) -> Result<()> {
         batch_wait_us: args.get_u64("batch-wait-us", env.batch_wait_us),
         cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
         workers: args.get_usize("workers", 2),
+        ..env
     };
     let n_requests = args.get_usize("requests", 64);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
@@ -292,6 +295,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_wait_us: args.get_u64("batch-wait-us", env.batch_wait_us),
         cache_budget_bytes: args.get_usize("cache-mb", 64) * 1024 * 1024,
         workers: args.get_usize("workers", 2),
+        ..env
     };
     let n_requests = args.get_usize("requests", 64);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);

@@ -35,6 +35,7 @@ use crate::moe::{ExpertArch, Model, ModelConfig};
 use crate::obs::trace;
 use crate::util::bytes::{ByteReader, PutLe};
 use crate::util::crc32::crc32;
+use crate::util::fault;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -450,8 +451,24 @@ impl ExpertStore {
             .sum()
     }
 
-    /// Read + verify + decompress one shard.
-    fn fetch_shard(&self, info: &ShardInfo, what: &str) -> Result<Vec<u8>> {
+    /// Read + verify + decompress one shard. `site`/`block`/`slot` name the
+    /// deterministic failpoint target (`util/fault.rs`); with `RESMOE_FAULTS`
+    /// unset the consultation is a single relaxed atomic load.
+    fn fetch_shard(
+        &self,
+        info: &ShardInfo,
+        what: &str,
+        site: &'static str,
+        block: i64,
+        slot: i64,
+    ) -> Result<Vec<u8>> {
+        let injected = fault::check(site, block, slot);
+        if let Some(fault::Fault::Latency(us)) = injected {
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
+        if injected == Some(fault::Fault::Transient) {
+            bail!("{what}: injected transient read error");
+        }
         if info
             .offset
             .checked_add(info.bytes)
@@ -466,6 +483,16 @@ impl ExpertStore {
             f.seek(SeekFrom::Start(info.offset))?;
             f.read_exact(&mut compressed)
                 .with_context(|| format!("{what}: short read"))?;
+        }
+        if injected == Some(fault::Fault::Truncate) {
+            bail!("{what}: short read (injected truncation)");
+        }
+        if injected == Some(fault::Fault::Corrupt) {
+            // Flip one payload byte so the REAL integrity check below trips —
+            // the injection exercises the production CRC path, not a mock.
+            if let Some(b) = compressed.first_mut() {
+                *b ^= 0xFF;
+            }
         }
         self.bytes_read.fetch_add(info.bytes, Ordering::Relaxed);
         let got_crc = {
@@ -491,7 +518,7 @@ impl ExpertStore {
 
     /// Load the expert-stripped backbone model.
     pub fn load_backbone(&self) -> Result<Model> {
-        let raw = self.fetch_shard(&self.index.backbone, "backbone")?;
+        let raw = self.fetch_shard(&self.index.backbone, "backbone", "store.meta", -1, -1)?;
         model_from_bytes(&raw)
     }
 
@@ -503,13 +530,22 @@ impl ExpertStore {
             .layer_entry(block)
             .ok_or_else(|| anyhow!("no stored layer for block {block}"))?;
         let base = match &entry.center {
-            Some(info) => Some(decode_matrix_shard(
-                &self.fetch_shard(info, &format!("block {block} center"))?,
-            )?),
+            Some(info) => Some(decode_matrix_shard(&self.fetch_shard(
+                info,
+                &format!("block {block} center"),
+                "store.meta",
+                block as i64,
+                -1,
+            )?)?),
             None => None,
         };
-        let (expert_map, aligns) =
-            decode_layer_meta(&self.fetch_shard(&entry.meta, &format!("block {block} meta"))?)?;
+        let (expert_map, aligns) = decode_layer_meta(&self.fetch_shard(
+            &entry.meta,
+            &format!("block {block} meta"),
+            "store.meta",
+            block as i64,
+            -1,
+        )?)?;
         if expert_map.iter().any(|&e| e >= entry.experts.len()) {
             bail!("block {block}: expert map references a missing shard");
         }
@@ -534,7 +570,13 @@ impl ExpertStore {
             .experts
             .get(expert_idx)
             .ok_or_else(|| anyhow!("block {block}: no expert shard {expert_idx}"))?;
-        let raw = self.fetch_shard(&info.shard, &format!("block {block} expert {expert_idx}"))?;
+        let raw = self.fetch_shard(
+            &info.shard,
+            &format!("block {block} expert {expert_idx}"),
+            "store.read",
+            block as i64,
+            expert_idx as i64,
+        )?;
         CompressedExpert::decode_shard(&raw)
             .with_context(|| format!("block {block} expert {expert_idx}: bad shard payload"))
     }

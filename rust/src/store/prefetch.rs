@@ -94,9 +94,13 @@ impl Prefetcher {
                     // across heavy work anymore, so the worker parks for
                     // nanoseconds instead of dropping the decoded shard.
                     Ok(expert) => cache.insert_prefetched(block, eidx, expert),
-                    // A failed prefetch is not fatal: the demand path will
-                    // retry and surface the error if it persists.
-                    Err(_) => cache.note_prefetch_dropped(),
+                    // A failed prefetch is not fatal and never poisons the
+                    // demand path: the InflightGuard drop releases the key,
+                    // no cache state was touched, and a router that still
+                    // wants this shard will demand-fetch it (with its own
+                    // retry/quarantine handling) and surface the error if
+                    // it persists.
+                    Err(_) => cache.note_prefetch_error(),
                 }
             });
         }

@@ -1,0 +1,411 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! The store's read paths consult a seeded failpoint registry before (and
+//! during) every shard fetch. A plan is configured through the
+//! `RESMOE_FAULTS` environment variable:
+//!
+//! ```text
+//! RESMOE_FAULTS="seed:7,spec:transient@store.read*2;corrupt@store.read/b1e3"
+//! ```
+//!
+//! Grammar: `seed:<u64>,spec:<rule>[;<rule>...]` where each rule is
+//!
+//! ```text
+//! <kind>@<site>[/b<block>[e<expert>]][*<count>][~<prob>][+<latency_us>]
+//! ```
+//!
+//! * `kind` — `transient` (retryable read error), `corrupt` (one payload
+//!   byte flipped so the store's CRC-32 check trips), `truncate` (short
+//!   read), or `latency` (sleep `latency_us`, default 200, then proceed).
+//! * `site` — failpoint name (`store.read` for expert residual shards,
+//!   `store.meta` for backbone/skeleton loads at open) or `*` for any.
+//! * `/b<block>e<expert>` — restrict to one target; omit `e` to hit every
+//!   shard of a block, omit the whole clause to hit every target.
+//! * `*<count>` — only the first `count` attempts **per target** can fault
+//!   (the lever for "transient storm that converges": `*2` with a retry
+//!   budget of 3 means every fetch succeeds on its third attempt).
+//! * `~<prob>` — fault with this probability per attempt (default 1.0).
+//!
+//! Determinism is the whole point: a decision is a pure function of
+//! `(seed, rule, site, block, slot, attempt#)` where the attempt counter
+//! is tracked per target, NOT globally — so two runs of the same workload
+//! inject the same faults at the same per-target attempts regardless of
+//! thread interleaving, and chaos tests are exact replays.
+//!
+//! Zero-cost contract (same as `RESMOE_TRACE` in `obs/trace.rs`): with the
+//! variable unset, [`check`] compiles to a single relaxed atomic load.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI8, Ordering::Relaxed};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// What the failpoint asks the call site to do. The store interprets these;
+/// the registry only decides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail the read with a retryable error before touching the file.
+    Transient,
+    /// Flip one payload byte so the real CRC-32 integrity check fires.
+    Corrupt,
+    /// Return a short-read error after the (successful) file read.
+    Truncate,
+    /// Sleep this many microseconds, then proceed normally.
+    Latency(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Transient,
+    Corrupt,
+    Truncate,
+    Latency,
+}
+
+/// One parsed spec rule. Rules are tried in order; the first match wins.
+#[derive(Debug, Clone)]
+struct Rule {
+    kind: Kind,
+    site: String,
+    block: Option<i64>,
+    slot: Option<i64>,
+    /// Only the first `count` attempts per target can fault (None = all).
+    count: Option<u64>,
+    prob: f64,
+    latency_us: u64,
+}
+
+impl Rule {
+    fn parse(src: &str) -> Result<Rule, String> {
+        let (kind_s, rest) = src
+            .split_once('@')
+            .ok_or_else(|| format!("rule '{src}': want <kind>@<site>"))?;
+        let kind = match kind_s {
+            "transient" => Kind::Transient,
+            "corrupt" => Kind::Corrupt,
+            "truncate" => Kind::Truncate,
+            "latency" => Kind::Latency,
+            other => return Err(format!("rule '{src}': unknown fault kind '{other}'")),
+        };
+        let mut rule = Rule {
+            kind,
+            site: String::new(),
+            block: None,
+            slot: None,
+            count: None,
+            prob: 1.0,
+            latency_us: 200,
+        };
+        // A leading '*' is the wildcard site, not the count marker.
+        let site_end = if rest.starts_with('*') {
+            1
+        } else {
+            rest.find(['/', '*', '~', '+']).unwrap_or(rest.len())
+        };
+        rule.site = rest[..site_end].to_string();
+        if rule.site.is_empty() {
+            return Err(format!("rule '{src}': empty site"));
+        }
+        let mut tail = &rest[site_end..];
+        while !tail.is_empty() {
+            let marker = tail.as_bytes()[0] as char;
+            let end = tail[1..].find(['/', '*', '~', '+']).map_or(tail.len(), |i| i + 1);
+            let body = &tail[1..end];
+            match marker {
+                '/' => {
+                    let body = body.strip_prefix('b').ok_or_else(|| {
+                        format!("rule '{src}': target wants /b<block>[e<expert>]")
+                    })?;
+                    let (b, e) = match body.split_once('e') {
+                        Some((b, e)) => (b, Some(e)),
+                        None => (body, None),
+                    };
+                    rule.block =
+                        Some(b.parse().map_err(|_| format!("rule '{src}': bad block '{b}'"))?);
+                    if let Some(e) = e {
+                        rule.slot = Some(
+                            e.parse().map_err(|_| format!("rule '{src}': bad expert '{e}'"))?,
+                        );
+                    }
+                }
+                '*' => {
+                    rule.count = Some(
+                        body.parse().map_err(|_| format!("rule '{src}': bad count '{body}'"))?,
+                    )
+                }
+                '~' => {
+                    rule.prob = body
+                        .parse()
+                        .map_err(|_| format!("rule '{src}': bad probability '{body}'"))?
+                }
+                '+' => {
+                    rule.latency_us = body
+                        .parse()
+                        .map_err(|_| format!("rule '{src}': bad latency '{body}'"))?
+                }
+                _ => unreachable!("site scan stops only on a marker"),
+            }
+            tail = &tail[end..];
+        }
+        Ok(rule)
+    }
+
+    fn matches_target(&self, site: &str, block: i64, slot: i64) -> bool {
+        (self.site == "*" || self.site == site)
+            && self.block.map_or(true, |b| b == block)
+            && self.slot.map_or(true, |s| s == slot)
+    }
+
+    fn fault(&self) -> Fault {
+        match self.kind {
+            Kind::Transient => Fault::Transient,
+            Kind::Corrupt => Fault::Corrupt,
+            Kind::Truncate => Fault::Truncate,
+            Kind::Latency => Fault::Latency(self.latency_us),
+        }
+    }
+}
+
+/// A full parsed `RESMOE_FAULTS` plan: the seed plus an ordered rule list.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse the full `seed:<u64>,spec:<rules>` document.
+    pub fn parse(env: &str) -> Result<FaultPlan, String> {
+        let (head, spec) = env
+            .split_once("spec:")
+            .ok_or_else(|| "RESMOE_FAULTS needs a 'spec:' section".to_string())?;
+        let mut seed = 0u64;
+        for part in head.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("seed:") {
+                seed = v.trim().parse().map_err(|_| format!("bad seed '{v}'"))?;
+            } else {
+                return Err(format!("unknown RESMOE_FAULTS key '{part}'"));
+            }
+        }
+        let mut rules = Vec::new();
+        for r in spec.split(';') {
+            let r = r.trim();
+            if !r.is_empty() {
+                rules.push(Rule::parse(r)?);
+            }
+        }
+        if rules.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+}
+
+// -1 = follow the environment, 0 = forced off, 1 = forced on with the test
+// plan. The ONLY cost on the disabled hot path is this relaxed load.
+static OVERRIDE: AtomicI8 = AtomicI8::new(-1);
+
+fn env_plan() -> &'static Option<FaultPlan> {
+    static PLAN: OnceLock<Option<FaultPlan>> = OnceLock::new();
+    PLAN.get_or_init(|| match std::env::var("RESMOE_FAULTS") {
+        Err(_) => None,
+        Ok(v) if matches!(v.as_str(), "" | "0" | "off" | "false") => None,
+        Ok(v) => Some(
+            FaultPlan::parse(&v).unwrap_or_else(|e| panic!("RESMOE_FAULTS: {e}")),
+        ),
+    })
+}
+
+fn test_plan() -> &'static Mutex<Option<FaultPlan>> {
+    static PLAN: OnceLock<Mutex<Option<FaultPlan>>> = OnceLock::new();
+    PLAN.get_or_init(|| Mutex::new(None))
+}
+
+/// Per-target attempt counters: the identity that makes decisions replay
+/// exactly under any thread interleaving. Only touched when faults are on.
+type TargetKey = (&'static str, i64, i64);
+
+fn counts() -> &'static Mutex<HashMap<TargetKey, u64>> {
+    static COUNTS: OnceLock<Mutex<HashMap<TargetKey, u64>>> = OnceLock::new();
+    COUNTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Is any fault plan active? One relaxed atomic load in production.
+#[inline]
+pub fn enabled() -> bool {
+    match OVERRIDE.load(Relaxed) {
+        0 => false,
+        1 => true,
+        _ => env_plan().is_some(),
+    }
+}
+
+/// Consult the failpoint registry. `block`/`slot` identify the target
+/// (-1 where the dimension does not apply, e.g. the backbone shard).
+#[inline]
+pub fn check(site: &'static str, block: i64, slot: i64) -> Option<Fault> {
+    if !enabled() {
+        return None;
+    }
+    check_slow(site, block, slot)
+}
+
+#[cold]
+fn check_slow(site: &'static str, block: i64, slot: i64) -> Option<Fault> {
+    let plan = if OVERRIDE.load(Relaxed) == 1 {
+        test_plan().lock().unwrap_or_else(|e| e.into_inner()).clone()?
+    } else {
+        env_plan().clone()?
+    };
+    let attempt = {
+        let mut c = counts().lock().unwrap_or_else(|e| e.into_inner());
+        let n = c.entry((site, block, slot)).or_insert(0);
+        let a = *n;
+        *n += 1;
+        a
+    };
+    for (i, rule) in plan.rules.iter().enumerate() {
+        if !rule.matches_target(site, block, slot) {
+            continue;
+        }
+        if let Some(limit) = rule.count {
+            if attempt >= limit {
+                continue;
+            }
+        }
+        if rule.prob < 1.0 && draw(plan.seed, i as u64, site, block, slot, attempt) >= rule.prob {
+            continue;
+        }
+        return Some(rule.fault());
+    }
+    None
+}
+
+/// Pure hash → uniform draw for probabilistic rules. No global RNG state:
+/// the decision depends only on the target identity and attempt number.
+fn draw(seed: u64, rule: u64, site: &str, block: i64, slot: i64, attempt: u64) -> f64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rule + 1);
+    for &b in site.as_bytes() {
+        h = h.wrapping_mul(0x0000_0100_0000_01B3) ^ b as u64;
+    }
+    h ^= (block as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+    h ^= (slot as u64).rotate_left(17).wrapping_mul(0xE703_7ED1_A0B4_28DB);
+    h ^= attempt.wrapping_mul(0x8EBC_6AF0_9C88_C6E3);
+    let mut rng = Rng::new(h);
+    rng.uniform()
+}
+
+/// Install a plan (`Some`) or return control to the environment (`None`).
+/// Both directions reset the per-target attempt counters so every test run
+/// is an exact replay. Hold [`test_serial`] across the whole test.
+pub fn force_for_tests(plan: Option<FaultPlan>) {
+    let on = plan.is_some();
+    *test_plan().lock().unwrap_or_else(|e| e.into_inner()) = plan;
+    reset_for_tests();
+    OVERRIDE.store(if on { 1 } else { -1 }, Relaxed);
+}
+
+/// Force the disabled path regardless of the environment (the parity pin).
+pub fn force_disabled_for_tests() {
+    OVERRIDE.store(0, Relaxed);
+}
+
+/// Clear the per-target attempt counters (fresh replay of the same plan).
+pub fn reset_for_tests() {
+    counts().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Tests that flip the global override must not interleave.
+pub fn test_serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed:42,spec:transient@store.read*2;corrupt@store.read/b1e3;\
+             latency@*~0.5+300;truncate@store.read/b2",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.rules[0].kind, Kind::Transient);
+        assert_eq!(p.rules[0].count, Some(2));
+        assert_eq!(p.rules[1].block, Some(1));
+        assert_eq!(p.rules[1].slot, Some(3));
+        assert_eq!(p.rules[2].site, "*");
+        assert!((p.rules[2].prob - 0.5).abs() < 1e-12);
+        assert_eq!(p.rules[2].latency_us, 300);
+        assert_eq!(p.rules[3].block, Some(2));
+        assert_eq!(p.rules[3].slot, None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "no spec section",
+            "spec:",
+            "spec:transient",               // no site
+            "spec:explode@store.read",      // unknown kind
+            "spec:transient@store.read*x",  // bad count
+            "seed:zz,spec:transient@*",     // bad seed
+            "spec:transient@store.read/e3", // target without block
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn count_limited_rule_faults_only_first_attempts_per_target() {
+        let _guard = test_serial();
+        let plan = FaultPlan::parse("seed:1,spec:transient@store.read*2").unwrap();
+        force_for_tests(Some(plan));
+        // First two attempts per target fault, later ones pass; a second
+        // target gets its own budget.
+        assert_eq!(check("store.read", 1, 0), Some(Fault::Transient));
+        assert_eq!(check("store.read", 1, 0), Some(Fault::Transient));
+        assert_eq!(check("store.read", 1, 0), None);
+        assert_eq!(check("store.read", 1, 1), Some(Fault::Transient));
+        // Unrelated site never matches.
+        assert_eq!(check("store.meta", 1, 0), None);
+        force_for_tests(None);
+    }
+
+    #[test]
+    fn probabilistic_rules_replay_exactly() {
+        let _guard = test_serial();
+        let plan = FaultPlan::parse("seed:9,spec:transient@store.read~0.4").unwrap();
+        let run = |plan: &FaultPlan| -> Vec<Option<Fault>> {
+            force_for_tests(Some(plan.clone()));
+            (0..64).map(|i| check("store.read", i % 4, i % 8)).collect()
+        };
+        let a = run(&plan);
+        let b = run(&plan);
+        assert_eq!(a, b, "same plan must replay bit-identically");
+        let hits = a.iter().filter(|f| f.is_some()).count();
+        assert!(hits > 8 && hits < 56, "~0.4 rule fired {hits}/64 times");
+        // A different seed draws a different sample path.
+        let other = FaultPlan::parse("seed:10,spec:transient@store.read~0.4").unwrap();
+        assert_ne!(run(&other), a, "seed must steer the sample path");
+        force_for_tests(None);
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let _guard = test_serial();
+        force_disabled_for_tests();
+        for i in 0..8 {
+            assert_eq!(check("store.read", i, i), None);
+        }
+        force_for_tests(None);
+    }
+}

@@ -1,0 +1,523 @@
+//! Chaos suite for the fault-tolerant serving path (`util::fault` +
+//! `coordinator::cache` retry/quarantine/degrade + `coordinator::server`
+//! admission control), driven by seeded deterministic fault plans.
+//!
+//! The invariants, in the order the stack establishes them:
+//!
+//! 1. **Parity pin** — with faults disabled the whole stack is bit-for-bit
+//!    the fault-free server: identical responses, identical cache
+//!    decisions, fault counters pinned at zero.
+//! 2. **Convergence** — a transient-only storm that exhausts before the
+//!    retry budget produces responses *bitwise equal* to the fault-free
+//!    run, because retries live entirely inside the singleflight
+//!    materialize and never change a cache decision.
+//! 3. **Degradation** — a permanently corrupt residual shard is answered
+//!    by the resident barycenter center ([`Serve::Degraded`], the paper's
+//!    rate→0 limit), quarantined after repeated failures, and surfaced to
+//!    clients as [`Response::Degraded`] — never a panic, never silence.
+//! 4. **Attribution** — when no center exists to degrade onto, errors pin
+//!    to exactly the requests whose experts failed, identically in the
+//!    serial and batched window paths.
+//! 5. **Liveness** — probabilistic storms under concurrency answer every
+//!    request and leak no singleflight flight.
+//!
+//! Every test that flips the global fault override holds
+//! [`fault::test_serial`] so the in-process suite serializes; tests that
+//! never touch the store (admission control) run in parallel as usual.
+
+use resmoe::compress::{compress_model, ResMoE};
+use resmoe::coordinator::{
+    CacheMetrics, Engine, ExpertCache, Request, Response, Serve, Server, ServerConfig,
+};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::store::{pack_compressed_model, ExpertStore, Prefetcher};
+use resmoe::util::fault::{self, FaultPlan};
+use resmoe::{Matrix, Rng};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+// ------------------------------------------------------------- fixtures
+
+fn tiny_model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::switch_mini(4);
+    cfg.d_model = 16;
+    cfg.d_inner = 32;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 32;
+    cfg.max_seq = 32;
+    let mut rng = Rng::new(seed);
+    Model::random(&cfg, &mut rng)
+}
+
+/// Bytes of one restored dense expert of the tiny model (w1 + w2 + biases).
+const ONE_EXPERT: usize = 32 * (2 * 16 + 1) * 4 + 16 * 4;
+
+/// Compress the tiny model with ResMoE and pack it to a store artifact.
+/// `strip_centers` removes the shared barycenter from every layer before
+/// packing — the configuration where degraded serving is impossible and
+/// store faults must surface as per-request errors.
+fn pack_artifact(seed: u64, name: &str, strip_centers: bool) -> PathBuf {
+    let m = tiny_model(seed);
+    let mut rng = Rng::new(seed ^ 0x00C0_FFEE);
+    let mut cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    if strip_centers {
+        for (_, cl) in &mut cm.layers {
+            cl.base = None;
+        }
+    }
+    let dir = std::env::temp_dir().join("resmoe-prop-faults");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}-{seed}.rmes"));
+    pack_compressed_model(&m, &cm.layers, 0.25, &path).unwrap();
+    path
+}
+
+fn score_requests(n: usize, len: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::Score {
+            tokens: (0..len).map(|t| ((t * 7 + i * 13 + 1) % 32) as u32).collect(),
+        })
+        .collect()
+}
+
+/// Exact structural equality — scores compare by f64 *bit pattern*.
+fn resp_eq(a: &Response, b: &Response) -> bool {
+    match (a, b) {
+        (Response::Score(x), Response::Score(y)) => x.to_bits() == y.to_bits(),
+        (Response::Generate(x), Response::Generate(y)) => x == y,
+        (Response::Classify(x), Response::Classify(y)) => x == y,
+        (Response::Error(x), Response::Error(y)) => x == y,
+        (Response::Overloaded(x), Response::Overloaded(y)) => x == y,
+        (Response::Degraded(x), Response::Degraded(y)) => resp_eq(x, y),
+        (Response::Metrics(_), Response::Metrics(_)) => true,
+        _ => false,
+    }
+}
+
+fn serve_kind(s: &Serve) -> &'static str {
+    match s {
+        Serve::Dense(_) => "dense",
+        Serve::Fused(_) => "fused",
+        Serve::Paged { .. } => "paged",
+        Serve::Degraded(_) => "degraded",
+    }
+}
+
+/// Every counter that reflects a cache *decision* (as opposed to wall-time
+/// or fault bookkeeping) must be unperturbed by retried transients.
+fn assert_decisions_eq(clean: &CacheMetrics, faulted: &CacheMetrics) {
+    assert_eq!(clean.hits, faulted.hits, "hits diverged");
+    assert_eq!(clean.misses, faulted.misses, "misses diverged");
+    assert_eq!(clean.restore_serves, faulted.restore_serves, "restore decisions diverged");
+    assert_eq!(clean.fused_serves, faulted.fused_serves, "fused decisions diverged");
+    assert_eq!(clean.restores_executed, faulted.restores_executed, "restores diverged");
+    assert_eq!(clean.shard_fetches, faulted.shard_fetches, "shard fetches diverged");
+    assert_eq!(clean.shard_bytes, faulted.shard_bytes, "shard bytes diverged");
+    assert_eq!(clean.evictions, faulted.evictions, "evictions diverged");
+    assert_eq!(clean.shard_evictions, faulted.shard_evictions, "shard evictions diverged");
+    assert_eq!(clean.quant_serves, faulted.quant_serves, "quant serves diverged");
+    assert_eq!(clean.batch_windows, faulted.batch_windows, "batch windows diverged");
+    assert_eq!(clean.prefetch_hits, faulted.prefetch_hits, "prefetch hits diverged");
+    assert_eq!(clean.prefetch_misses, faulted.prefetch_misses, "prefetch misses diverged");
+}
+
+fn fault_counter_sum(m: &CacheMetrics) -> u64 {
+    m.transient_errors + m.fetch_retries + m.quarantined_shards + m.degraded_serves
+        + m.prefetch_errors
+}
+
+// ----------------------------------------------------------- invariants
+
+/// With no plan installed, the forced-off override and the env-following
+/// path answer identically and never touch a fault counter — the pin that
+/// keeps every pre-existing bit-parity suite meaningful.
+#[test]
+fn fault_disabled_parity_pin() {
+    let _guard = fault::test_serial();
+    if std::env::var("RESMOE_FAULTS").is_ok() {
+        return; // the pin is only meaningful in a fault-free environment
+    }
+    let art = pack_artifact(11, "parity", false);
+    let reqs = score_requests(10, 8);
+
+    fault::force_disabled_for_tests();
+    let mut off = Engine::from_store(&art, usize::MAX).unwrap();
+    off.disable_prefetch();
+    let r_off: Vec<Response> = reqs.iter().map(|r| off.handle(r)).collect();
+    let m_off = off.cache_metrics().unwrap();
+
+    fault::force_for_tests(None); // follow the (unset) environment
+    let mut env = Engine::from_store(&art, usize::MAX).unwrap();
+    env.disable_prefetch();
+    let r_env: Vec<Response> = reqs.iter().map(|r| env.handle(r)).collect();
+    let m_env = env.cache_metrics().unwrap();
+
+    for (a, b) in r_off.iter().zip(&r_env) {
+        assert!(resp_eq(a, b), "disabled vs env-follow diverged: {a:?} vs {b:?}");
+        assert!(matches!(a, Response::Score(_)), "healthy run must not degrade: {a:?}");
+    }
+    assert_eq!(fault_counter_sum(&m_off), 0, "fault counters must stay zero: {m_off:?}");
+    assert_eq!(fault_counter_sum(&m_env), 0, "fault counters must stay zero: {m_env:?}");
+    assert_decisions_eq(&m_off, &m_env);
+}
+
+/// A transient storm that exhausts before the retry budget (`*2` faults vs
+/// a 3-retry budget) converges **bitwise** to the fault-free run — under a
+/// roomy budget and under an eviction-heavy one — because every fetch
+/// still succeeds inside its own singleflight materialize.
+#[test]
+fn transient_storm_converges_bitwise_to_fault_free() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(21, "storm", false);
+    let mut reqs = score_requests(12, 8);
+    reqs.extend(score_requests(12, 8)); // second pass: exercise hits too
+
+    for budget in [usize::MAX, 2 * ONE_EXPERT] {
+        fault::force_disabled_for_tests();
+        let mut clean = Engine::from_store(&art, budget).unwrap();
+        clean.disable_prefetch();
+        let want: Vec<Response> = reqs.iter().map(|r| clean.handle(r)).collect();
+        let m_clean = clean.cache_metrics().unwrap();
+
+        let plan = FaultPlan::parse("seed:7,spec:transient@store.read*2").unwrap();
+        fault::force_for_tests(Some(plan));
+        let mut faulted = Engine::from_store(&art, budget).unwrap();
+        faulted.disable_prefetch();
+        let got: Vec<Response> = reqs.iter().map(|r| faulted.handle(r)).collect();
+        let m_faulted = faulted.cache_metrics().unwrap();
+        fault::force_for_tests(None);
+
+        for (w, g) in want.iter().zip(&got) {
+            assert!(resp_eq(w, g), "budget {budget}: {w:?} vs {g:?}");
+            assert!(matches!(g, Response::Score(_)), "converged storm must not degrade: {g:?}");
+        }
+        assert!(m_faulted.transient_errors > 0, "the storm must actually fire");
+        assert_eq!(
+            m_faulted.transient_errors, m_faulted.fetch_retries,
+            "every injected transient (2 < budget 3) is followed by one retry"
+        );
+        assert_eq!(m_faulted.quarantined_shards, 0, "converging storm never quarantines");
+        assert_eq!(m_faulted.degraded_serves, 0, "converging storm never degrades");
+        assert_decisions_eq(&m_clean, &m_faulted);
+    }
+}
+
+/// Permanently corrupt residual shards (CRC trips on every read): the slot
+/// is served by the barycenter center alone — bitwise equal to the
+/// center's own forward — the shard quarantines after the failure
+/// threshold, and *other* blocks keep serving exactly.
+#[test]
+fn corrupt_shards_degrade_to_barycenter_and_quarantine() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(31, "degrade", false);
+    let store = Arc::new(ExpertStore::open(&art).unwrap());
+    let blocks = store.blocks();
+    let bad = blocks[0];
+    let x = Matrix::from_fn(2, 16, |r, c| ((r * 16 + c) as f32 * 0.03).sin());
+
+    // Clean reference: the block's densified center (batch-1 store serves
+    // page restore-free, so the center rides along in `Serve::Paged`).
+    fault::force_disabled_for_tests();
+    let clean = ExpertCache::from_store(store.clone(), usize::MAX).unwrap();
+    let center = match clean.try_serve(bad, 0, 1).unwrap() {
+        Serve::Paged { center, .. } => center,
+        other => panic!("store-mode batch-1 serve should page, got {}", serve_kind(&other)),
+    };
+    let center_out = center.forward(&x);
+
+    let plan =
+        FaultPlan::parse(&format!("seed:1,spec:corrupt@store.read/b{bad}")).unwrap();
+    fault::force_for_tests(Some(plan));
+    let cache = ExpertCache::from_store(store.clone(), usize::MAX).unwrap();
+    for round in 0..4 {
+        for slot in 0..4 {
+            match cache.try_serve(bad, slot, x.rows).unwrap() {
+                Serve::Degraded(c) => assert_eq!(
+                    c.forward(&x),
+                    center_out,
+                    "degraded answer must be the barycenter-only forward"
+                ),
+                other => panic!(
+                    "round {round} slot {slot}: want degraded, got {}",
+                    serve_kind(&other)
+                ),
+            }
+        }
+    }
+    let m = cache.metrics();
+    assert!(m.degraded_serves >= 16, "every serve of the bad block degrades: {m:?}");
+    assert!(m.quarantined_shards >= 1, "3+ consecutive failures must quarantine: {m:?}");
+    assert_eq!(m.transient_errors, 0, "integrity failures are never retried");
+    assert_eq!(m.fetch_retries, 0, "integrity failures are never retried");
+
+    // Blocks outside the blast radius restore bit-identically.
+    if let Some(&ok) = blocks.iter().find(|&&b| b != bad) {
+        let w_clean = clean.try_get(ok, 1).unwrap();
+        let w_fault = cache.try_get(ok, 1).unwrap();
+        assert_eq!(w_clean.forward(&x), w_fault.forward(&x), "healthy block perturbed");
+    }
+    fault::force_for_tests(None);
+}
+
+/// End-to-end degraded marking: with every residual unreadable, serial
+/// handling, batched windows, and the concurrent server all answer
+/// `Response::Degraded(Score)` — bitwise identical across the three paths.
+#[test]
+fn server_marks_degraded_answers_identically_across_paths() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(41, "server-degrade", false);
+    let reqs = score_requests(8, 6);
+    let plan = FaultPlan::parse("seed:2,spec:corrupt@store.read").unwrap();
+    fault::force_for_tests(Some(plan));
+
+    let mut serial = Engine::from_store(&art, usize::MAX).unwrap();
+    serial.disable_prefetch();
+    let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+    for w in &want {
+        match w {
+            Response::Degraded(inner) => {
+                assert!(matches!(**inner, Response::Score(_)), "inner must be the answer")
+            }
+            other => panic!("all-corrupt store must mark every answer degraded: {other:?}"),
+        }
+    }
+    assert!(serial.cache_metrics().unwrap().degraded_serves > 0);
+
+    // Batched windows pin the same marker per request.
+    let mut batch_engine = Engine::from_store(&art, usize::MAX).unwrap();
+    batch_engine.disable_prefetch();
+    let batched = batch_engine.handle_batch(&reqs);
+    for (i, (w, g)) in want.iter().zip(&batched).enumerate() {
+        assert!(resp_eq(w, g), "request {i}: serial {w:?} vs batched {g:?}");
+    }
+
+    // The concurrent server round-trips the marker untouched.
+    let mut server_engine = Engine::from_store(&art, usize::MAX).unwrap();
+    server_engine.disable_prefetch();
+    let server = Server::start(
+        server_engine,
+        ServerConfig { batch_max: 4, batch_wait_us: 100, workers: 2, ..Default::default() },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, w) in rxs.into_iter().zip(&want) {
+        let (got, _) = rx.recv().unwrap();
+        assert!(resp_eq(&got, w), "server: {got:?} vs {w:?}");
+    }
+    server.shutdown();
+    fault::force_for_tests(None);
+
+    // into_inner unwraps the marker for clients that prefer the value.
+    match Response::Degraded(Box::new(Response::Score(0.5))).into_inner() {
+        Response::Score(s) => assert_eq!(s, 0.5),
+        other => panic!("into_inner must unwrap: {other:?}"),
+    }
+}
+
+/// No center to degrade onto (stripped at pack time): store failures
+/// surface as `Response::Error` pinned to exactly the requests whose
+/// routed experts failed — and the batched window path reproduces the
+/// serial attribution (same requests, same messages) even across the
+/// quarantine threshold, because per-want cold replays fail in the same
+/// per-target order serial serving does.
+#[test]
+fn center_less_store_pins_errors_per_request() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(51, "no-center", true);
+    let bad = {
+        let store = ExpertStore::open(&art).unwrap();
+        store.blocks()[0]
+    };
+    let plan =
+        FaultPlan::parse(&format!("seed:3,spec:corrupt@store.read/b{bad}e0")).unwrap();
+    fault::force_for_tests(Some(plan));
+    let reqs = score_requests(8, 6);
+
+    let mut serial = Engine::from_store(&art, usize::MAX).unwrap();
+    serial.disable_prefetch();
+    let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+    let errors = want.iter().filter(|r| matches!(r, Response::Error(_))).count();
+    assert!(errors > 0, "a corrupt shard with no center must surface Response::Error");
+    for w in &want {
+        match w {
+            Response::Error(msg) => assert!(
+                msg.contains(&format!("expert serve failed for block {bad}")),
+                "error must name the failing block: {msg}"
+            ),
+            Response::Score(_) => {}
+            other => panic!("center-less store can error or answer, never degrade: {other:?}"),
+        }
+    }
+
+    let mut batch_engine = Engine::from_store(&art, usize::MAX).unwrap();
+    batch_engine.disable_prefetch();
+    let batched = batch_engine.handle_batch(&reqs);
+    for (i, (w, g)) in want.iter().zip(&batched).enumerate() {
+        assert!(resp_eq(w, g), "request {i}: serial {w:?} vs batched {g:?}");
+    }
+    fault::force_for_tests(None);
+}
+
+/// Probabilistic transient storm under concurrency and an eviction-heavy
+/// budget: every serve answers `Ok` (the center absorbs permanent
+/// failures), no singleflight flight leaks, and the storm demonstrably
+/// fired.
+#[test]
+fn concurrent_storm_liveness_and_no_leaked_flights() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(61, "concurrent", false);
+    let store = Arc::new(ExpertStore::open(&art).unwrap());
+    let blocks = store.blocks();
+
+    for clients in [1usize, 2, 8] {
+        let plan = FaultPlan::parse("seed:11,spec:transient@store.read~0.6").unwrap();
+        fault::force_for_tests(Some(plan));
+        let cache = Arc::new(ExpertCache::from_store(store.clone(), 2 * ONE_EXPERT).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let cache = Arc::clone(&cache);
+                let blocks = blocks.clone();
+                s.spawn(move || {
+                    for i in 0..24usize {
+                        let block = blocks[(t + i) % blocks.len()];
+                        let slot = (t * 3 + i) % 4;
+                        let serve = cache
+                            .try_serve(block, slot, 1 + i % 3)
+                            .expect("centered store serves never error");
+                        // Whatever tier answered, it answered.
+                        let _ = serve_kind(&serve);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.debug_flight_count(), 0, "{clients} clients leaked a flight");
+        let m = cache.metrics();
+        assert!(m.transient_errors > 0, "{clients} clients: storm never fired: {m:?}");
+        fault::force_for_tests(None);
+    }
+}
+
+/// A failing prefetch is advisory: it counts `prefetch_errors`, releases
+/// its in-flight lease, and leaves the demand path able to fetch the very
+/// same shard successfully — bit-identically to a never-prefetched run.
+#[test]
+fn failed_prefetch_never_poisons_demand_path() {
+    let _guard = fault::test_serial();
+    let art = pack_artifact(71, "prefetch", false);
+    let store = Arc::new(ExpertStore::open(&art).unwrap());
+    let bad = store.blocks()[0];
+    let x = Matrix::from_fn(3, 16, |r, c| ((r + 2 * c) as f32 * 0.05).cos());
+
+    fault::force_disabled_for_tests();
+    let clean = ExpertCache::from_store(store.clone(), usize::MAX).unwrap();
+    let want = clean.try_get(bad, 0).unwrap().forward(&x);
+
+    // Exactly the first read of each target faults: the prefetch absorbs
+    // the fault, the demand fetch right after succeeds first try.
+    let plan = FaultPlan::parse("seed:3,spec:transient@store.read*1").unwrap();
+    fault::force_for_tests(Some(plan));
+    let cache = Arc::new(ExpertCache::from_store(store.clone(), usize::MAX).unwrap());
+    let pf = Prefetcher::new(cache.clone(), store.clone());
+    assert_eq!(pf.request(&[(bad, 0)]), 1, "one fetch scheduled");
+    pf.quiesce();
+
+    let m = cache.metrics();
+    assert_eq!(m.prefetch_errors, 1, "the failed prefetch is counted: {m:?}");
+    assert_eq!(cache.resident_shards(), 0, "nothing resident after the failure");
+    assert_eq!(cache.debug_flight_count(), 0, "no lease leaked");
+
+    let got = cache.try_get(bad, 0).unwrap().forward(&x);
+    assert_eq!(got, want, "demand restore after failed prefetch must be exact");
+    let m = cache.metrics();
+    assert_eq!(m.fetch_retries, 0, "demand fetch succeeded on its first attempt");
+    assert_eq!(m.transient_errors, 0, "prefetch errors are not demand transients");
+    fault::force_for_tests(None);
+}
+
+// ----------------------------------------------- admission control (no store)
+
+fn mem_engine(seed: u64) -> Engine {
+    let m = tiny_model(seed);
+    let mut rng = Rng::new(seed + 9);
+    let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+    Engine::compressed(m, cm.layers, usize::MAX)
+}
+
+/// `max_queue = 1` with a single lingering worker: the first submit is
+/// admitted, the burst behind it sheds typed `Overloaded` answers
+/// immediately, and the shed counter records every one.
+#[test]
+fn queue_overflow_sheds_typed_responses() {
+    let engine = mem_engine(81);
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            batch_max: 8,
+            batch_wait_us: 30_000, // linger >> the submit burst below
+            workers: 1,
+            max_queue: 1,
+            ..Default::default()
+        },
+    );
+    let n = 6;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(Request::Score {
+                tokens: (0..6).map(|t| ((t + i) % 32) as u32).collect(),
+            })
+        })
+        .collect();
+    let answers: Vec<Response> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().0).collect();
+    assert!(
+        matches!(answers[0], Response::Score(_)),
+        "the admitted request executes: {:?}",
+        answers[0]
+    );
+    for (i, a) in answers.iter().enumerate().skip(1) {
+        match a {
+            Response::Overloaded(msg) => {
+                assert!(msg.contains("queue full"), "request {i}: {msg}")
+            }
+            other => panic!("request {i} must shed, got {other:?}"),
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.shed, (n - 1) as u64, "every shed is counted");
+}
+
+/// Per-request deadlines: jobs that outlive `deadline_ms` while waiting
+/// for their window are shed before execution — none of them run.
+#[test]
+fn expired_deadlines_shed_before_execution() {
+    let engine = mem_engine(91);
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            batch_max: 8,
+            batch_wait_us: 30_000, // the window lingers ~30ms...
+            workers: 1,
+            deadline_ms: 5, // ...which blows every 5ms deadline
+            ..Default::default()
+        },
+    );
+    let n = 4;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(Request::Score {
+                tokens: (0..6).map(|t| ((t + 2 * i) % 32) as u32).collect(),
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().unwrap().0 {
+            Response::Overloaded(msg) => {
+                assert!(msg.contains("deadline exceeded"), "request {i}: {msg}")
+            }
+            other => panic!("request {i} must miss its deadline, got {other:?}"),
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.shed, n as u64);
+    assert_eq!(m.requests, 0, "no deadline-expired request may execute");
+}

@@ -179,7 +179,7 @@ fn prop_serve_decisions_are_consistent_and_correct() {
             let x = Matrix::randn(*batch, layer.experts[0].d_model(), 1.0, &mut rng);
             for &slot in ops {
                 let want = cl.restore_expert(slot).forward(&x);
-                let got = match cache.serve(0, slot, x.rows) {
+                let got = match cache.try_serve(0, slot, x.rows).expect("monolithic never fails") {
                     Serve::Dense(e) => e.forward(&x),
                     Serve::Fused(fl) => {
                         let sh = fl.shared_act(&x);
@@ -187,6 +187,9 @@ fn prop_serve_decisions_are_consistent_and_correct() {
                     }
                     Serve::Paged { .. } => {
                         return Err("monolithic cache must never serve paged".into())
+                    }
+                    Serve::Degraded(_) => {
+                        return Err("monolithic cache must never degrade".into())
                     }
                 };
                 let tol = 1e-4 * (1.0 + want.frob_norm());
@@ -229,7 +232,7 @@ fn prop_cache_never_exceeds_budget_and_stays_correct() {
             let budget = budget_experts * expert_bytes;
             let cache = ExpertCache::new(vec![(0, cl.clone())], budget);
             for &slot in ops {
-                let got = cache.get(0, slot);
+                let got = cache.try_get(0, slot).expect("monolithic restore never fails");
                 let want = cl.restore_expert(slot);
                 if *got != want {
                     return Err(format!("slot {slot}: cached expert differs"));

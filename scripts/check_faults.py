@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Fault-tolerance CI gate: chaos-smoke convergence + fault-counter audit.
+
+Consumes two `--metrics-out` documents from the packed serving demo — a
+clean run (no `RESMOE_FAULTS`) and a chaos run under a *converging*
+transient storm (`transient@store.read*2` vs the cache's 3-retry budget) —
+and enforces:
+
+1. **Clean baseline is fault-free** — every fault counter
+   (`cache.transient_errors`, `cache.fetch_retries`,
+   `cache.quarantined_shards`, `cache.degraded_serves`,
+   `cache.prefetch_errors`, `server.shed`) is zero in the clean run: the
+   disabled failpoint registry really is inert.
+2. **The storm fired and was retried** — the chaos run shows
+   `transient_errors > 0`; demand-path transients pair 1:1 with retries
+   (`fetch_retries == transient_errors` net of prefetch-path errors,
+   which are counted but never retried).
+3. **The storm converged** — zero quarantines, zero degraded serves, and
+   every request completed (`requests` matches the clean run; the demo
+   itself already fails on any `Response::Error`).
+4. **Tail latency survives the chaos** — chaos-run p99 within
+   `RESMOE_FAULTS_P99_MS` (default: 4x the clean run's p99, floor 250 ms):
+   backed-off retries may not blow up the tail.
+5. **Schema parity** — both runs export identical instrument names:
+   injecting faults must not change what is measured.
+
+Writes retries/quarantines/degraded-rate/shed-rate/p99 for both runs to
+`reports/BENCH_faults.json`. Exits non-zero on any failed gate.
+
+Usage: check_faults.py CLEAN_METRICS_JSON CHAOS_METRICS_JSON
+"""
+
+import json
+import os
+import sys
+
+FAULT_COUNTERS = (
+    "cache.transient_errors",
+    "cache.fetch_retries",
+    "cache.quarantined_shards",
+    "cache.degraded_serves",
+    "cache.prefetch_errors",
+    "server.shed",
+)
+
+
+def counters(doc):
+    return doc["snapshot"]["counters"]
+
+
+def fault_view(doc):
+    c = counters(doc)
+    serves = c.get("cache.hits", 0) + c.get("cache.misses", 0)
+    requests = doc["requests"]
+    shed = c.get("server.shed", 0)
+    return {
+        "requests": requests,
+        "p99_ms": doc["p99_ms"],
+        "transient_errors": c.get("cache.transient_errors", 0),
+        "fetch_retries": c.get("cache.fetch_retries", 0),
+        "quarantined_shards": c.get("cache.quarantined_shards", 0),
+        "degraded_serves": c.get("cache.degraded_serves", 0),
+        "prefetch_errors": c.get("cache.prefetch_errors", 0),
+        "shed": shed,
+        "degraded_rate": c.get("cache.degraded_serves", 0) / serves if serves else 0.0,
+        "shed_rate": shed / (requests + shed) if requests + shed else 0.0,
+    }
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} CLEAN_METRICS_JSON CHAOS_METRICS_JSON")
+    with open(sys.argv[1]) as f:
+        clean = json.load(f)
+    with open(sys.argv[2]) as f:
+        chaos = json.load(f)
+    cv, xv = fault_view(clean), fault_view(chaos)
+
+    failures = []
+
+    def gate(name, ok, detail):
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}: {detail}")
+        if not ok:
+            failures.append(f"{name}: {detail}")
+
+    dirty = {k: counters(clean).get(k, 0) for k in FAULT_COUNTERS
+             if counters(clean).get(k, 0)}
+    gate("clean run is fault-free", not dirty, dirty or "all fault counters zero")
+
+    gate("chaos storm fired", xv["transient_errors"] > 0,
+         f"{xv['transient_errors']} injected transients")
+    # Prefetch-path store errors are counted but never retried; demand-path
+    # transients under a converging storm pair 1:1 with retries.
+    demand = xv["transient_errors"]
+    gate("transients paired with retries", xv["fetch_retries"] == demand,
+         f"{xv['fetch_retries']} retries for {demand} demand transients")
+
+    gate("storm converged: no quarantine", xv["quarantined_shards"] == 0,
+         f"{xv['quarantined_shards']} quarantine entries")
+    gate("storm converged: no degraded serves", xv["degraded_serves"] == 0,
+         f"{xv['degraded_serves']} degraded serves")
+    gate("every chaos request completed", xv["requests"] == cv["requests"],
+         f"chaos {xv['requests']} vs clean {cv['requests']}")
+    gate("nothing shed without admission knobs", xv["shed"] == 0,
+         f"{xv['shed']} shed")
+
+    p99_cap = float(os.environ.get("RESMOE_FAULTS_P99_MS",
+                                   max(250.0, 4.0 * cv["p99_ms"])))
+    gate(f"chaos p99 <= {p99_cap:.0f} ms", xv["p99_ms"] <= p99_cap,
+         f"{xv['p99_ms']:.1f} ms (clean {cv['p99_ms']:.1f} ms)")
+
+    schema = lambda d: {k: sorted(d["snapshot"][k])
+                        for k in ("counters", "gauges", "histograms")}
+    gate("instrument schema identical across runs", schema(clean) == schema(chaos),
+         f"{sum(len(v) for v in schema(clean).values())} instruments")
+
+    os.makedirs("reports", exist_ok=True)
+    report = {
+        "bench": "fault_gates",
+        "kernel": chaos.get("kernel"),
+        "clean": cv,
+        "chaos": xv,
+        "gates": {"p99_cap_ms": p99_cap},
+        "failures": failures,
+        "pass": not failures,
+    }
+    with open("reports/BENCH_faults.json", "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print("  report -> reports/BENCH_faults.json")
+    if failures:
+        sys.exit(f"check_faults: {len(failures)} gate(s) failed")
+    print("check_faults OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,21 @@ RESMOE_SLO_P99_MS=2000 RESMOE_SLO_TOKS=100 RESMOE_SLO_HIT_RATE=0.10 \
   python3 scripts/check_obs.py \
   "$PACK_DIR/obs_off.json" "$PACK_DIR/obs_on.json" "$PACK_DIR/trace.jsonl"
 
+echo "== chaos smoke: converging transient storm under RESMOE_FAULTS =="
+# Same packed workload as the observability baseline, but with a seeded
+# deterministic fault plan injecting two transient read errors per shard
+# target — strictly fewer than the cache's 3-retry budget, so every fetch
+# converges inside its singleflight and the demo's zero-Response::Error
+# check must still pass. The gate (scripts/check_faults.py) then audits
+# the fault counters against the clean obs baseline: storm fired, every
+# transient retried, zero quarantines/degraded serves/sheds, tail latency
+# bounded, identical instrument schema → reports/BENCH_faults.json.
+RESMOE_TRACE=0 RESMOE_FAULTS="seed:7,spec:transient@store.read*2" \
+  cargo run --release --quiet -- serve-packed \
+  --artifact "$PACK_DIR/model.rmes" --requests 32 --cache-mb 4 --workers 2 \
+  --metrics-out "$PACK_DIR/faults_chaos.json"
+python3 scripts/check_faults.py "$PACK_DIR/obs_off.json" "$PACK_DIR/faults_chaos.json"
+
 echo "== int8 quantized pack → serve-packed smoke =="
 # Quantized residual tier: pack with --quantize int8 (RMES v2, q8-* shard
 # kinds) and serve it twice — once on the runtime kernel, once with the
@@ -77,5 +92,8 @@ python3 scripts/sim_quant.py
 
 echo "== observability invariants simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_obs.py
+
+echo "== fault-injection state-machine simulation (no-toolchain fallback validator) =="
+python3 scripts/sim_faults.py
 
 echo "CI OK"
