@@ -52,15 +52,15 @@ impl BatchPolicy {
 
     /// [`BatchPolicy::from_env`] with the variable source injected — tests
     /// exercise the parsing/clamping without mutating process-global env
-    /// (setenv races getenv in a multithreaded test harness).
+    /// (setenv races getenv in a multithreaded test harness). Parsing goes
+    /// through [`crate::util::env`]: garbage → default, overflow-wide
+    /// digit strings saturate to `u64::MAX` instead of falling back.
     pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> BatchPolicy {
         let d = BatchPolicy::default();
-        let parse = |name: &str, default: u64| -> u64 {
-            lookup(name).and_then(|v| v.parse().ok()).unwrap_or(default)
-        };
         BatchPolicy {
-            max_batch: (parse("RESMOE_BATCH", d.max_batch as u64) as usize).max(1),
-            linger_us: parse("RESMOE_LINGER_US", d.linger_us),
+            max_batch: crate::util::env::knob_usize(&lookup, "RESMOE_BATCH", d.max_batch)
+                .max(1),
+            linger_us: crate::util::env::knob_u64(&lookup, "RESMOE_LINGER_US", d.linger_us),
         }
     }
 }
@@ -117,9 +117,14 @@ impl<T> Batcher<T> {
 
     /// The virtual time at which the current window must flush even if no
     /// further request arrives (`None` when nothing is pending — the
-    /// driver blocks indefinitely for the first arrival).
+    /// driver blocks indefinitely for the first arrival). Saturating:
+    /// `RESMOE_LINGER_US=u64::MAX` means "never linger-flush", and an
+    /// unchecked `arrived + linger` would wrap to a deadline in the past
+    /// and flush every window instantly instead.
     pub fn deadline_us(&self) -> Option<u64> {
-        self.pending.front().map(|&(_, arrived)| arrived + self.policy.linger_us)
+        self.pending
+            .front()
+            .map(|&(_, arrived)| arrived.saturating_add(self.policy.linger_us))
     }
 
     /// Mark the queue closed: no further `push`es; the next `poll` drains
@@ -184,6 +189,8 @@ pub fn next_window<T>(
                 Err(_) => batcher.close(),
             },
             // Window open: accept stragglers until the linger deadline.
+            // (`deadline - now` cannot underflow: the `now >= deadline`
+            // branch above runs first, and the deadline itself saturates.)
             Some(deadline) => {
                 let now = epoch.elapsed().as_micros() as u64;
                 if now >= deadline {
@@ -337,6 +344,54 @@ mod tests {
         assert_eq!(p.linger_us, BatchPolicy::default().linger_us);
         let p = BatchPolicy::from_lookup(|_| None);
         assert_eq!(p.max_batch, BatchPolicy::default().max_batch);
+    }
+
+    #[test]
+    fn policy_from_lookup_saturates_overflow_digits() {
+        // Pre-fix, a digit string wider than u64 failed `parse()` and fell
+        // back to the default — an operator's "effectively unbounded" knob
+        // silently became 8/500. Now it saturates.
+        let env = |pairs: &'static [(&'static str, &'static str)]| {
+            move |name: &str| {
+                pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| v.to_string())
+            }
+        };
+        let p = BatchPolicy::from_lookup(env(&[
+            ("RESMOE_BATCH", "99999999999999999999999999"),
+            ("RESMOE_LINGER_US", "99999999999999999999999999"),
+        ]));
+        assert_eq!(p.max_batch, usize::MAX);
+        assert_eq!(p.linger_us, u64::MAX);
+        // Exactly u64::MAX parses as itself in both the u64 and the
+        // saturating-usize knob.
+        let p = BatchPolicy::from_lookup(env(&[("RESMOE_LINGER_US", "18446744073709551615")]));
+        assert_eq!(p.linger_us, u64::MAX);
+    }
+
+    #[test]
+    fn extreme_linger_never_wraps_into_instant_flush() {
+        // RESMOE_LINGER_US=u64::MAX means "never linger-flush". Pre-fix,
+        // `arrived + linger` wrapped to `arrived - 1`, a deadline in the
+        // past, so every window linger-flushed instantly.
+        let mut b = Batcher::new(policy(8, u64::MAX));
+        b.push(1u32, 100);
+        assert_eq!(b.deadline_us(), Some(u64::MAX), "deadline saturates");
+        assert!(b.poll(100).is_none(), "no instant linger flush");
+        assert!(b.poll(u64::MAX - 1).is_none(), "never flushes at any finite time");
+        // Full and close flushes still work under the extreme linger.
+        for i in 2..=8u32 {
+            b.push(i, 100 + i as u64);
+        }
+        let w = b.poll(200).expect("full flush unaffected");
+        assert_eq!(w.reason, FlushReason::Full);
+        b.push(99, 300);
+        b.close();
+        let w = b.poll(300).expect("close drains");
+        assert_eq!(w.reason, FlushReason::Closed);
+        // Late arrival stamps near u64::MAX can't overflow either.
+        let mut b = Batcher::new(policy(8, 500));
+        b.push(1u32, u64::MAX - 10);
+        assert_eq!(b.deadline_us(), Some(u64::MAX));
     }
 
     // ------------------------------------------------- wall-clock driver

@@ -118,16 +118,29 @@ impl ServerConfig {
     /// plus the `RESMOE_MAX_QUEUE` / `RESMOE_DEADLINE_MS` admission knobs
     /// applied.
     pub fn from_env() -> ServerConfig {
-        let p = BatchPolicy::from_env();
-        let env_u = |name: &str| {
-            std::env::var(name).ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0)
-        };
+        Self::from_lookup(|name| std::env::var(name).ok())
+    }
+
+    /// [`ServerConfig::from_env`] with the variable source injected (the
+    /// same injectable-lookup test pattern as [`BatchPolicy::from_lookup`]).
+    ///
+    /// All four knobs share the [`crate::util::env`] parser semantics:
+    /// unset/garbage → default, overflow-wide digit strings saturate to
+    /// `u64::MAX` (pre-fix, `"99…9"` failed `parse()` and silently meant
+    /// *unbounded* for `RESMOE_MAX_QUEUE` — the opposite of what the
+    /// operator asked for), and the `usize` narrowing saturates on 32-bit
+    /// targets. Documented zero semantics: `RESMOE_MAX_QUEUE=0` =
+    /// unbounded queue, `RESMOE_DEADLINE_MS=0` = no deadline (both are the
+    /// defaults), `RESMOE_BATCH=0` clamps to 1.
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> ServerConfig {
+        let p = BatchPolicy::from_lookup(&lookup);
+        let d = ServerConfig::default();
         ServerConfig {
             batch_max: p.max_batch,
             batch_wait_us: p.linger_us,
-            max_queue: env_u("RESMOE_MAX_QUEUE") as usize,
-            deadline_ms: env_u("RESMOE_DEADLINE_MS"),
-            ..Default::default()
+            max_queue: crate::util::env::knob_usize(&lookup, "RESMOE_MAX_QUEUE", d.max_queue),
+            deadline_ms: crate::util::env::knob_u64(&lookup, "RESMOE_DEADLINE_MS", d.deadline_ms),
+            ..d
         }
     }
 }
@@ -1144,6 +1157,40 @@ mod tests {
         cfg.max_seq = 32;
         let mut rng = Rng::new(seed);
         Model::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn server_config_from_lookup_checked_parsing() {
+        let env = |pairs: &'static [(&'static str, &'static str)]| {
+            move |name: &str| {
+                pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| v.to_string())
+            }
+        };
+        // Happy path.
+        let c = ServerConfig::from_lookup(env(&[
+            ("RESMOE_MAX_QUEUE", "12"),
+            ("RESMOE_DEADLINE_MS", "250"),
+            ("RESMOE_BATCH", "4"),
+        ]));
+        assert_eq!((c.max_queue, c.deadline_ms, c.batch_max), (12, 250, 4));
+        // Unset → documented defaults (0 = unbounded / no deadline).
+        let c = ServerConfig::from_lookup(|_| None);
+        assert_eq!((c.max_queue, c.deadline_ms), (0, 0));
+        // Garbage → default, consistently across all knobs.
+        let c = ServerConfig::from_lookup(env(&[
+            ("RESMOE_MAX_QUEUE", "lots"),
+            ("RESMOE_DEADLINE_MS", "-5"),
+        ]));
+        assert_eq!((c.max_queue, c.deadline_ms), (0, 0));
+        // Overflow-wide digits saturate. Pre-fix, parse() failed and
+        // RESMOE_MAX_QUEUE="99…9" silently meant UNBOUNDED (0) — the
+        // opposite of the operator's intent.
+        let c = ServerConfig::from_lookup(env(&[
+            ("RESMOE_MAX_QUEUE", "99999999999999999999999999"),
+            ("RESMOE_DEADLINE_MS", "99999999999999999999999999"),
+        ]));
+        assert_eq!(c.max_queue, usize::MAX);
+        assert_eq!(c.deadline_ms, u64::MAX);
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Checked parsing for `RESMOE_*` environment knobs.
+//!
+//! Every env-tunable integer knob in the serving stack goes through this
+//! one parser so the edge-case semantics are uniform and documented:
+//!
+//! - **unset / empty / whitespace** → the caller's default;
+//! - **non-numeric garbage** (`"fast"`, `"-3"`, `"1e9"`) → the caller's
+//!   default — never a silent zero;
+//! - **numeric but wider than `u64`** → saturate to `u64::MAX` (an operator
+//!   writing a huge number means "effectively unbounded", not "default");
+//! - **`u64` → `usize` narrowing** saturates, so 32-bit targets clamp
+//!   instead of truncating high bits (`parse() as usize` used to wrap).
+//!
+//! Zero is always passed through untouched: each knob documents its own
+//! zero semantics at the consumer (`RESMOE_BATCH=0` clamps to 1,
+//! `RESMOE_MAX_QUEUE=0` means *unbounded*, `RESMOE_DEADLINE_MS=0` means
+//! *no deadline*, `RESMOE_LINGER_US=0` means *flush immediately*).
+
+/// Parse a decimal digit string as `u64`, saturating on overflow.
+///
+/// Returns `None` for anything that is not a plain non-empty run of ASCII
+/// digits (after trimming whitespace) — callers substitute their default.
+pub fn parse_u64_saturating(s: &str) -> Option<u64> {
+    let t = s.trim();
+    if t.is_empty() || !t.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for b in t.bytes() {
+        v = v.saturating_mul(10).saturating_add(u64::from(b - b'0'));
+    }
+    Some(v)
+}
+
+/// Read knob `name` through `lookup` with the module-level semantics.
+pub fn knob_u64(
+    lookup: impl Fn(&str) -> Option<String>,
+    name: &str,
+    default: u64,
+) -> u64 {
+    lookup(name)
+        .as_deref()
+        .and_then(parse_u64_saturating)
+        .unwrap_or(default)
+}
+
+/// [`knob_u64`] narrowed to `usize` with saturation (32-bit safe).
+pub fn knob_usize(
+    lookup: impl Fn(&str) -> Option<String>,
+    name: &str,
+    default: usize,
+) -> usize {
+    u64_to_usize(knob_u64(lookup, name, default as u64))
+}
+
+/// Saturating `u64` → `usize` (identity on 64-bit targets).
+pub fn u64_to_usize(v: u64) -> usize {
+    usize::try_from(v).unwrap_or(usize::MAX)
+}
+
+/// [`knob_u64`] against the process environment.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    knob_u64(|n| std::env::var(n).ok(), name, default)
+}
+
+/// [`knob_usize`] against the process environment.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    knob_usize(|n| std::env::var(n).ok(), name, default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_parse_exactly() {
+        assert_eq!(parse_u64_saturating("0"), Some(0));
+        assert_eq!(parse_u64_saturating("8"), Some(8));
+        assert_eq!(parse_u64_saturating(" 500 "), Some(500));
+        assert_eq!(
+            parse_u64_saturating("18446744073709551615"),
+            Some(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn overflow_saturates_instead_of_defaulting() {
+        // One past u64::MAX and something absurd both clamp to MAX — the
+        // operator asked for "huge", not for the default.
+        assert_eq!(parse_u64_saturating("18446744073709551616"), Some(u64::MAX));
+        assert_eq!(
+            parse_u64_saturating("99999999999999999999999999"),
+            Some(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn garbage_is_none_never_zero() {
+        for bad in ["", "  ", "fast", "-3", "+4", "1e9", "0x10", "12.5", "7_000"] {
+            assert_eq!(parse_u64_saturating(bad), None, "input {bad:?}");
+        }
+    }
+
+    #[test]
+    fn knob_lookup_semantics() {
+        let env = |pairs: &'static [(&str, &str)]| {
+            move |name: &str| {
+                pairs
+                    .iter()
+                    .find(|(k, _)| *k == name)
+                    .map(|(_, v)| v.to_string())
+            }
+        };
+        // unset → default; garbage → default; digits → value.
+        assert_eq!(knob_u64(env(&[]), "K", 42), 42);
+        assert_eq!(knob_u64(env(&[("K", "junk")]), "K", 42), 42);
+        assert_eq!(knob_u64(env(&[("K", "7")]), "K", 42), 7);
+        // zero passes through — zero semantics belong to the consumer.
+        assert_eq!(knob_u64(env(&[("K", "0")]), "K", 42), 0);
+        // overflow saturates, and the usize narrowing saturates too.
+        assert_eq!(
+            knob_usize(env(&[("K", "99999999999999999999999")]), "K", 1),
+            usize::MAX
+        );
+    }
+}

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod bytes;
 pub mod cli;
 pub mod crc32;
+pub mod env;
 pub mod fault;
 pub mod json;
 pub mod prop;
