@@ -111,6 +111,12 @@ impl<T> Batcher<T> {
         self.pending.is_empty()
     }
 
+    /// Requests admitted but not yet flushed into a window — the queued
+    /// component of a virtual-depth calculation (see the loadgen harness).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
     pub fn is_closed(&self) -> bool {
         self.closed
     }

@@ -180,6 +180,12 @@ pub struct CacheMetrics {
     /// Miss serves (restore and fused/paged decisions alike) answered from
     /// an int8-quantized residual.
     pub quant_serves: u64,
+    /// Restore decisions whose residual was int8-quantized — the residency
+    /// policy *promoting* a hot quantized slot to a dense f32 resident
+    /// (quantized shards stay paged until hot; see `should_restore`). The
+    /// traffic harness reads this as its "quant promotions" cache-decision
+    /// metric.
+    pub quant_promotions: u64,
     /// Paged shards evicted to make room.
     pub shard_evictions: u64,
     /// Serves that parked on another thread's in-flight materialization of
@@ -262,6 +268,7 @@ pub(crate) struct CacheCounters {
     quant_shard_fetches: Arc<Counter>,
     quant_shard_bytes: Arc<Counter>,
     quant_serves: Arc<Counter>,
+    quant_promotions: Arc<Counter>,
     shard_evictions: Arc<Counter>,
     singleflight_waits: Arc<Counter>,
     dedup_fetches: Arc<Counter>,
@@ -295,6 +302,7 @@ impl CacheCounters {
             quant_shard_fetches: reg.counter("cache.quant_shard_fetches"),
             quant_shard_bytes: reg.counter("cache.quant_shard_bytes"),
             quant_serves: reg.counter("cache.quant_serves"),
+            quant_promotions: reg.counter("cache.quant_promotions"),
             shard_evictions: reg.counter("cache.shard_evictions"),
             singleflight_waits: reg.counter("cache.singleflight_waits"),
             dedup_fetches: reg.counter("cache.dedup_fetches"),
@@ -330,6 +338,7 @@ impl CacheCounters {
             quant_shard_fetches: self.quant_shard_fetches.get(),
             quant_shard_bytes: self.quant_shard_bytes.get(),
             quant_serves: self.quant_serves.get(),
+            quant_promotions: self.quant_promotions.get(),
             shard_evictions: self.shard_evictions.get(),
             singleflight_waits: self.singleflight_waits.get(),
             dedup_fetches: self.dedup_fetches.get(),
@@ -610,6 +619,10 @@ struct BlockState {
     /// advance): decay must tick every HEAT_DECAY_PERIOD serves regardless
     /// of interleaving.
     serve_accesses: u64,
+    /// Cumulative (never decayed) per-slot serve counts — the routing-skew
+    /// census the traffic harness reads via [`ExpertCache::slot_serves`].
+    /// Unlike `heat` this is pure bookkeeping: no serving decision reads it.
+    serves_by_slot: HashMap<usize, u64>,
     /// This block's equal share of the cache byte budget.
     budget_bytes: usize,
     used_bytes: usize,
@@ -630,6 +643,7 @@ impl BlockState {
             fused_center: None,
             heat: HashMap::new(),
             serve_accesses: 0,
+            serves_by_slot: HashMap::new(),
             budget_bytes,
             used_bytes: 0,
             shard_used_bytes: 0,
@@ -724,6 +738,7 @@ impl BlockState {
 
     fn bump_heat(&mut self, slot: usize) {
         self.serve_accesses += 1;
+        *self.serves_by_slot.entry(slot).or_insert(0) += 1;
         let h = self.heat.entry(slot).or_insert(0);
         *h = h.saturating_add(1);
         if self.serve_accesses % HEAT_DECAY_PERIOD == 0 {
@@ -966,6 +981,25 @@ impl ExpertCache {
         self.counters.snapshot()
     }
 
+    /// Cumulative per-slot serve counts: `(block, slot, serves)` sorted by
+    /// `(block, slot)` for deterministic iteration. Unlike the decayed
+    /// `heat` map this census never forgets, so the traffic harness can
+    /// check that a Zipf-routed workload's skew actually reaches the cache
+    /// (top-decile slots absorbing a super-proportional serve share).
+    /// Takes the metadata lock briefly; no serving decision depends on it.
+    pub fn slot_serves(&self) -> Vec<(usize, usize, u64)> {
+        let st = self.lock_state();
+        let mut out: Vec<(usize, usize, u64)> = st
+            .blocks
+            .iter()
+            .flat_map(|(&b, bs)| {
+                bs.serves_by_slot.iter().map(move |(&s, &n)| (b, s, n))
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
     /// Count an async-prefetch result that had to be discarded before it
     /// reached [`ExpertCache::insert_prefetched`] (raced a demand fetch, or
     /// the budget was full) — keeps the prefetcher's books honest.
@@ -1123,6 +1157,9 @@ impl ExpertCache {
         }
         self.counters.restore_serves.inc();
         self.counters.quant_serves.add(quant);
+        // A restore decision over a quantized residual is the residency
+        // policy promoting a hot quantized slot to a dense f32 resident.
+        self.counters.quant_promotions.add(quant);
         match self.restore_and_cache(block, slot, false) {
             Ok(e) => Ok(Serve::Dense(e)),
             Err(e) if self.store.is_some() => self.degrade(block, slot, None, e),

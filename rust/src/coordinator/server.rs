@@ -229,6 +229,9 @@ pub struct Engine {
     obs: Arc<Registry>,
     /// Continuous-batching counters (lock-free, shared across clones).
     batch: Arc<BatchCounters>,
+    /// Optional tenant tag (multi-tenant deployments: several engines over
+    /// one shared store). Tags exported snapshots; no serving behavior.
+    tenant: Option<Arc<str>>,
 }
 
 impl Engine {
@@ -243,6 +246,7 @@ impl Engine {
             next_block: Arc::new(HashMap::new()),
             obs,
             batch,
+            tenant: None,
         }
     }
 
@@ -265,6 +269,7 @@ impl Engine {
             next_block: Arc::new(HashMap::new()),
             obs,
             batch,
+            tenant: None,
         }
     }
 
@@ -274,6 +279,19 @@ impl Engine {
     /// decompression happens here or later on the serving path.
     pub fn from_store(artifact: &Path, cache_budget_bytes: usize) -> Result<Engine> {
         let store = Arc::new(ExpertStore::open(artifact)?);
+        Self::from_shared_store(store, cache_budget_bytes)
+    }
+
+    /// [`Engine::from_store`] over an ALREADY-OPEN store handle. Several
+    /// engines built this way share one artifact (one file handle, one
+    /// read-bytes ledger) while keeping fully independent caches, budgets,
+    /// and metrics registries — the multi-tenant contention setup the
+    /// traffic harness exercises: tenants compete for store bandwidth but
+    /// can never evict each other's residents.
+    pub fn from_shared_store(
+        store: Arc<ExpertStore>,
+        cache_budget_bytes: usize,
+    ) -> Result<Engine> {
         let model = store.load_backbone()?;
         let cache = Arc::new(ExpertCache::from_store(store.clone(), cache_budget_bytes)?);
         let blocks = store.blocks();
@@ -291,7 +309,18 @@ impl Engine {
             next_block: Arc::new(next_block),
             obs,
             batch,
+            tenant: None,
         })
+    }
+
+    /// Tag this engine handle (and its clones made afterwards) with a
+    /// tenant name; exported snapshots carry the tag.
+    pub fn set_tenant(&mut self, name: &str) {
+        self.tenant = Some(Arc::from(name));
+    }
+
+    pub fn tenant(&self) -> Option<&str> {
+        self.tenant.as_deref()
     }
 
     /// Disable async prefetch on THIS engine handle (clones made earlier
@@ -328,9 +357,18 @@ impl Engine {
     }
 
     /// Point-in-time snapshot of every registered instrument — lock-free
-    /// with respect to serving (see [`Registry::snapshot`]).
+    /// with respect to serving (see [`Registry::snapshot`]). Carries the
+    /// engine's tenant tag when one is set.
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
-        self.obs.snapshot()
+        let mut snap = self.obs.snapshot();
+        snap.tenant = self.tenant.as_ref().map(|t| t.to_string());
+        snap
+    }
+
+    /// Cumulative per-slot serve counts from the cache (empty for dense
+    /// engines) — see [`ExpertCache::slot_serves`].
+    pub fn slot_serves(&self) -> Vec<(usize, usize, u64)> {
+        self.cache.as_ref().map(|c| c.slot_serves()).unwrap_or_default()
     }
 
     /// Snapshot of the continuous-batching counters (see
@@ -339,7 +377,10 @@ impl Engine {
         self.batch.snapshot()
     }
 
-    fn note_flush(&self, reason: FlushReason, waited_us: u64) {
+    /// Record a flushed window's reason + linger wait on the batch
+    /// counters. `pub(crate)` so the loadgen harness can attribute its
+    /// virtual windows the same way the live server worker does.
+    pub(crate) fn note_flush(&self, reason: FlushReason, waited_us: u64) {
         self.batch.record_flush(reason, waited_us);
     }
 

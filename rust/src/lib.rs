@@ -24,6 +24,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod loadgen;
 pub mod moe;
 pub mod obs;
 pub mod ot;

@@ -1,0 +1,29 @@
+//! Seeded, scenario-diverse traffic harness for the serving stack.
+//!
+//! Three layers, strictly separated so determinism is auditable:
+//!
+//! * [`scenario`] — the scenario model (arrival process × routing skew ×
+//!   request mix × client behavior) plus the canned scenario set, all in
+//!   integer virtual-clock arithmetic.
+//! * [`schedule`] — seeded schedule generation (xoshiro256** + integer
+//!   quantile tables) and the engine-free virtual replay: real
+//!   [`crate::coordinator::Batcher`] windows, a tenant-serial virtual
+//!   service pipe, admission-depth and deadline sheds, slow-reader drain
+//!   pacing. `scripts/sim_loadgen.py` is a line-for-line Python replica
+//!   — the two must produce bit-identical schedules and fingerprints.
+//! * [`run`] — execute the surviving windows through real
+//!   [`crate::coordinator::Engine`] batches, record *virtual* latencies
+//!   on the PR 7 observability registry, fingerprint schedule /
+//!   responses / counters, and emit the `BENCH_scenarios.json` report.
+//!
+//! A fixed `(scenario, seed)` pair replays bit-identically across runs
+//! and worker counts; `--vworkers` feeds a reporting-only pool-latency
+//! model and can never change a decision.
+
+pub mod run;
+pub mod scenario;
+pub mod schedule;
+
+pub use run::{run_all, run_scenario, Fleet, ScenarioRun, CLASSIFY_TASK};
+pub use scenario::{Arrivals, Mix, Routing, Scenario, ServiceModel};
+pub use schedule::{generate, percentile_us, replay, schedule_fingerprint, Event, Replay};

@@ -1,0 +1,585 @@
+//! Engine-backed scenario execution: take the pure virtual-clock replay
+//! from [`super::schedule`] and drive every surviving window through real
+//! [`Engine::handle_batch`] calls, recording the *virtual* latencies on
+//! the engine's own observability registry (PR 7) so every counter,
+//! histogram, and snapshot diff gate applies unchanged to synthetic
+//! traffic.
+//!
+//! Determinism contract: prefetch is disabled on every engine, windows
+//! execute sequentially in formation order, and latencies come from the
+//! virtual clock — so a fixed seed yields bit-identical schedules,
+//! responses, and counter snapshots regardless of `--vworkers` or host
+//! load. `vworkers` only parameterizes a separately-reported pool-latency
+//! model; it never influences a decision.
+
+use super::scenario::{Scenario, GEN_NEW_TOKENS};
+use super::schedule::{
+    self, fnv1a, fnv1a_u64, percentile_us, schedule_fingerprint, Event, Replay, FNV_OFFSET,
+};
+use crate::coordinator::{Engine, FlushReason, Request, Response, ServerStats};
+use crate::store::ExpertStore;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Classification head the mixed scenario targets. Packed `RMES` artifacts
+/// carry no task heads, so Classify folds to Score there (reported as
+/// `classify_disabled`).
+pub const CLASSIFY_TASK: &str = "nli";
+
+/// A set of engines (one per tenant) sharing one artifact store.
+pub struct Fleet {
+    pub engines: Vec<Engine>,
+}
+
+impl Fleet {
+    /// Open `tenants` engines over one shared `RMES` store — independent
+    /// caches and registries, contended artifact reads. Prefetch is
+    /// disabled on every engine (determinism contract).
+    pub fn from_artifact(
+        artifact: &Path,
+        cache_budget_bytes: usize,
+        tenants: usize,
+    ) -> Result<Fleet> {
+        let store = Arc::new(ExpertStore::open(artifact)?);
+        let mut engines = Vec::new();
+        for t in 0..tenants.max(1) {
+            let mut e = Engine::from_shared_store(Arc::clone(&store), cache_budget_bytes)?;
+            e.disable_prefetch();
+            e.set_tenant(&tenant_name(t, tenants));
+            engines.push(e);
+        }
+        Ok(Fleet { engines })
+    }
+
+    /// Wrap caller-supplied engines (tests build monolithic
+    /// [`Engine::compressed`] fleets with no artifact on disk). Prefetch
+    /// is disabled and tenants are tagged here too.
+    pub fn from_engines(mut engines: Vec<Engine>) -> Fleet {
+        let n = engines.len();
+        for (t, e) in engines.iter_mut().enumerate() {
+            e.disable_prefetch();
+            if e.tenant().is_none() {
+                e.set_tenant(&tenant_name(t, n));
+            }
+        }
+        Fleet { engines }
+    }
+}
+
+fn tenant_name(t: usize, tenants: usize) -> String {
+    if tenants > 1 {
+        format!("tenant-{}", (b'a' + (t % 26) as u8) as char)
+    } else {
+        "default".to_string()
+    }
+}
+
+/// One executed scenario: the JSON report plus the raw numbers the
+/// property tests and gates pin.
+pub struct ScenarioRun {
+    pub name: String,
+    pub doc: Json,
+    pub schedule_fp: u64,
+    pub responses_fp: u64,
+    pub counters_fp: u64,
+    pub arrivals: u64,
+    pub executed: u64,
+    pub shed_admission: u64,
+    pub shed_deadline: u64,
+    pub errors: u64,
+    pub degraded: u64,
+}
+
+fn make_request(ev: &Event, vocab: usize, classify_enabled: bool) -> Request {
+    let tok = (ev.profile as usize % vocab) as u32;
+    match ev.kind {
+        1 => Request::Generate {
+            prompt: vec![tok; ev.len.min(6) as usize],
+            max_new: GEN_NEW_TOKENS as usize,
+        },
+        2 if classify_enabled => Request::Classify {
+            task: CLASSIFY_TASK.to_string(),
+            tokens: vec![tok; ev.len as usize],
+        },
+        _ => Request::Score { tokens: vec![tok; ev.len as usize] },
+    }
+}
+
+/// Fold a response into an FNV fingerprint (tag byte per variant, then
+/// the payload bit-exactly — f64 scores via `to_bits`).
+fn fold_response(mut h: u64, r: &Response) -> u64 {
+    match r {
+        Response::Score(s) => {
+            h = fnv1a_u64(h, 1);
+            fnv1a_u64(h, s.to_bits())
+        }
+        Response::Generate(toks) => {
+            h = fnv1a_u64(h, 2);
+            h = fnv1a_u64(h, toks.len() as u64);
+            toks.iter().fold(h, |h, &t| fnv1a_u64(h, t as u64))
+        }
+        Response::Classify(c) => {
+            h = fnv1a_u64(h, 3);
+            fnv1a_u64(h, *c as u64)
+        }
+        Response::Metrics(s) => {
+            h = fnv1a_u64(h, 4);
+            fnv1a(h, s.as_bytes())
+        }
+        Response::Error(e) => {
+            h = fnv1a_u64(h, 5);
+            fnv1a(h, e.as_bytes())
+        }
+        Response::Degraded(inner) => {
+            h = fnv1a_u64(h, 6);
+            fold_response(h, inner)
+        }
+        Response::Overloaded(m) => {
+            h = fnv1a_u64(h, 7);
+            fnv1a(h, m.as_bytes())
+        }
+    }
+}
+
+/// The pool-latency model: replay the already-decided windows over `k`
+/// wall workers (earliest-free pickup) and report what request latency
+/// would have looked like. Purely observational — decisions (membership,
+/// sheds, ordering) are fixed upstream, so this never breaks replay.
+fn pool_latencies(rp: &Replay, events: &[Event], k: usize) -> Vec<u64> {
+    let k = k.max(1);
+    let mut free_at = vec![0u64; k];
+    let mut out = Vec::new();
+    for w in &rp.windows {
+        if w.live.is_empty() {
+            continue;
+        }
+        let (slot, &free) = free_at
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &f)| f)
+            .expect("k >= 1");
+        let start = w.formed_us.max(free);
+        let completion = start + w.dur_us;
+        free_at[slot] = completion;
+        for &idx in &w.live {
+            out.push(completion.saturating_sub(events[idx].t_us));
+        }
+    }
+    out
+}
+
+fn ms(us: Option<u64>) -> Json {
+    match us {
+        Some(v) => Json::num(v as f64 / 1000.0),
+        None => Json::Null,
+    }
+}
+
+/// Execute one scenario against a fleet. The fleet must be fresh (its
+/// registries zeroed) for per-scenario counters and fingerprints to make
+/// sense; `run_all` builds one per scenario.
+pub fn run_scenario(
+    fleet: &Fleet,
+    sc: &Scenario,
+    seed: u64,
+    vworkers: usize,
+) -> Result<ScenarioRun> {
+    if fleet.engines.len() != sc.tenants.max(1) {
+        return Err(anyhow!(
+            "scenario '{}' wants {} tenant engine(s), fleet has {}",
+            sc.name,
+            sc.tenants.max(1),
+            fleet.engines.len()
+        ));
+    }
+    let events = schedule::generate(sc, seed);
+    let rp = schedule::replay(sc, &events);
+    let schedule_fp = schedule_fingerprint(&events);
+
+    let vocab = fleet
+        .engines
+        .iter()
+        .map(|e| e.model().cfg.vocab_size)
+        .min()
+        .unwrap_or(1)
+        .max(1);
+    let classify_enabled = fleet
+        .engines
+        .iter()
+        .all(|e| e.model().head(CLASSIFY_TASK).is_some());
+
+    let stats: Vec<ServerStats> =
+        fleet.engines.iter().map(|e| ServerStats::new(e.registry())).collect();
+
+    // Admission sheds happen at arrival time, before any window forms.
+    for &idx in &rp.admit_shed {
+        stats[events[idx].tenant as usize].record_shed();
+    }
+
+    let mut responses_fp = FNV_OFFSET;
+    let mut errors = 0u64;
+    let mut degraded = 0u64;
+    let mut executed = 0u64;
+    let mut live_tokens = 0u64;
+    let mut windows_by_reason = [0u64; 3];
+    let mut occupancy_sum = 0u64;
+    let wall_start = Instant::now();
+    for w in &rp.windows {
+        let engine = &fleet.engines[w.tenant as usize];
+        let st = &stats[w.tenant as usize];
+        engine.note_flush(w.reason, w.waited_us);
+        windows_by_reason[match w.reason {
+            FlushReason::Full => 0,
+            FlushReason::Linger => 1,
+            FlushReason::Closed => 2,
+        }] += 1;
+        for _ in &w.shed {
+            st.record_shed();
+        }
+        if w.live.is_empty() {
+            continue;
+        }
+        let reqs: Vec<Request> = w
+            .live
+            .iter()
+            .map(|&i| make_request(&events[i], vocab, classify_enabled))
+            .collect();
+        let resps = engine.handle_batch(&reqs);
+        let tokens: u64 = w.live.iter().map(|&i| events[i].tokens()).sum();
+        st.record_batch(resps.len(), tokens);
+        occupancy_sum += resps.len() as u64;
+        live_tokens += tokens;
+        executed += resps.len() as u64;
+        for (&idx, r) in w.live.iter().zip(&resps) {
+            let lat = rp.latency_us[idx]
+                .ok_or_else(|| anyhow!("live request {idx} has no virtual latency"))?;
+            st.record_request(std::time::Duration::from_micros(lat));
+            responses_fp = fold_response(responses_fp, r);
+            match r {
+                Response::Error(_) => errors += 1,
+                Response::Degraded(_) => degraded += 1,
+                _ => {}
+            }
+        }
+    }
+    let wall_exec_s = wall_start.elapsed().as_secs_f64();
+
+    // Counter fingerprint: every tenant's snapshot JSON, in tenant order.
+    // Virtual latencies + disabled prefetch make every metric replayable
+    // EXCEPT the wall-clock duration counters (`*_ns`), which the
+    // fingerprint therefore drops; the report keeps the full snapshot.
+    let mut counters_fp = FNV_OFFSET;
+    let mut tenants_detail = Vec::new();
+    for engine in &fleet.engines {
+        let snap = engine.metrics_snapshot();
+        let mut canon = snap.clone();
+        canon.counters.retain(|(name, _)| !name.ends_with("_ns"));
+        counters_fp = fnv1a(counters_fp, canon.to_json().to_string().as_bytes());
+        tenants_detail.push(Json::obj(vec![
+            ("tenant", Json::str(engine.tenant().unwrap_or("default"))),
+            ("snapshot", snap.to_json()),
+        ]));
+    }
+
+    // Virtual latency distributions.
+    let lat: Vec<u64> = rp.latency_us.iter().filter_map(|&l| l).collect();
+    let ttft: Vec<u64> = rp.ttft_us.iter().filter_map(|&l| l).collect();
+    let makespan_us = rp
+        .windows
+        .iter()
+        .map(|w| w.completion_us)
+        .max()
+        .unwrap_or(0)
+        .saturating_sub(events.first().map_or(0, |e| e.t_us));
+    let tok_s = if makespan_us > 0 {
+        live_tokens as f64 * 1e6 / makespan_us as f64
+    } else {
+        0.0
+    };
+    let pool = pool_latencies(&rp, &events, vworkers);
+
+    // Cache-decision metrics, summed across tenants (each engine has its
+    // own cache; dense engines report none).
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut fused = 0u64;
+    let mut restores = 0u64;
+    let mut quant = 0u64;
+    let mut promotions = 0u64;
+    let mut pf_useful = 0.0f64;
+    let mut have_cache = false;
+    for e in &fleet.engines {
+        if let Some(cm) = e.cache_metrics() {
+            have_cache = true;
+            hits += cm.hits;
+            misses += cm.misses;
+            fused += cm.fused_serves;
+            restores += cm.restore_serves;
+            quant += cm.quant_serves;
+            promotions += cm.quant_promotions;
+            pf_useful += cm.prefetch_usefulness();
+        }
+    }
+    let hit_rate = if hits + misses > 0 {
+        hits as f64 / (hits + misses) as f64
+    } else {
+        0.0
+    };
+
+    // Skew census: cumulative per-slot serves across the fleet; the
+    // top-decile share is what the zipf gates pin.
+    let mut census: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+    for e in &fleet.engines {
+        for (block, slot, serves) in e.slot_serves() {
+            *census.entry((block, slot)).or_insert(0) += serves;
+        }
+    }
+    let mut serves: Vec<u64> = census.values().copied().collect();
+    serves.sort_unstable_by(|a, b| b.cmp(a));
+    let slot_total: u64 = serves.iter().sum();
+    let slots = serves.len();
+    let top = slots.div_ceil(10).max(1);
+    let top_share = if slot_total > 0 {
+        serves.iter().take(top).sum::<u64>() as f64 / slot_total as f64
+    } else {
+        0.0
+    };
+    let proportional = if slots > 0 { top as f64 / slots as f64 } else { 0.0 };
+    let skew_ratio = if proportional > 0.0 { top_share / proportional } else { 0.0 };
+
+    let arrivals = events.len() as u64;
+    let shed_admission = rp.admit_shed.len() as u64;
+    let shed_deadline = rp.deadline_shed.len() as u64;
+    let windows = rp.windows.iter().filter(|w| !w.live.is_empty()).count() as u64;
+    let mean_batch = if windows > 0 {
+        occupancy_sum as f64 / windows as f64
+    } else {
+        0.0
+    };
+
+    let doc = Json::obj(vec![
+        ("scenario", Json::str(sc.name)),
+        ("seed", Json::num(seed as f64)),
+        ("vworkers", Json::num(vworkers as f64)),
+        ("tenants", Json::num(sc.tenants.max(1) as f64)),
+        ("arrivals", Json::num(arrivals as f64)),
+        ("executed", Json::num(executed as f64)),
+        ("shed_admission", Json::num(shed_admission as f64)),
+        ("shed_deadline", Json::num(shed_deadline as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("degraded", Json::num(degraded as f64)),
+        ("classify_disabled", Json::Bool(!classify_enabled)),
+        (
+            "virtual",
+            Json::obj(vec![
+                ("p50_ms", ms(percentile_us(&lat, 50))),
+                ("p99_ms", ms(percentile_us(&lat, 99))),
+                ("ttft_p50_ms", ms(percentile_us(&ttft, 50))),
+                ("ttft_p99_ms", ms(percentile_us(&ttft, 99))),
+                ("tok_s", Json::num(tok_s)),
+                ("makespan_ms", Json::num(makespan_us as f64 / 1000.0)),
+                ("windows", Json::num(windows as f64)),
+                ("windows_full", Json::num(windows_by_reason[0] as f64)),
+                ("windows_linger", Json::num(windows_by_reason[1] as f64)),
+                ("windows_closed", Json::num(windows_by_reason[2] as f64)),
+                ("mean_batch", Json::num(mean_batch)),
+            ]),
+        ),
+        (
+            "pool",
+            Json::obj(vec![
+                ("p50_ms", ms(percentile_us(&pool, 50))),
+                ("p99_ms", ms(percentile_us(&pool, 99))),
+            ]),
+        ),
+        ("wall_exec_s", Json::num(wall_exec_s)),
+        (
+            "cache",
+            if have_cache {
+                Json::obj(vec![
+                    ("hit_rate", Json::num(hit_rate)),
+                    ("prefetch_useful_rate", Json::num(pf_useful)),
+                    ("fused_serves", Json::num(fused as f64)),
+                    ("restore_serves", Json::num(restores as f64)),
+                    ("quant_serves", Json::num(quant as f64)),
+                    ("quant_promotions", Json::num(promotions as f64)),
+                ])
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "skew",
+            Json::obj(vec![
+                ("slots", Json::num(slots as f64)),
+                ("top_decile_share", Json::num(top_share)),
+                ("proportional_share", Json::num(proportional)),
+                ("ratio", Json::num(skew_ratio)),
+            ]),
+        ),
+        (
+            "fingerprints",
+            Json::obj(vec![
+                ("schedule", Json::str(&format!("{schedule_fp:016x}"))),
+                ("responses", Json::str(&format!("{responses_fp:016x}"))),
+                ("counters", Json::str(&format!("{counters_fp:016x}"))),
+            ]),
+        ),
+        ("tenants_detail", Json::Arr(tenants_detail)),
+    ]);
+
+    Ok(ScenarioRun {
+        name: sc.name.to_string(),
+        doc,
+        schedule_fp,
+        responses_fp,
+        counters_fp,
+        arrivals,
+        executed,
+        shed_admission,
+        shed_deadline,
+        errors,
+        degraded,
+    })
+}
+
+/// Run scenarios (one fresh fleet each, so counters stay per-scenario)
+/// against a packed artifact and assemble the benchmark document.
+pub fn run_all(
+    artifact: &Path,
+    cache_budget_bytes: usize,
+    scenario: &str,
+    seed: u64,
+    vworkers: usize,
+) -> Result<(Json, Vec<ScenarioRun>)> {
+    let scenarios: Vec<Scenario> = if scenario == "all" {
+        Scenario::canned()
+    } else {
+        vec![Scenario::by_name(scenario).ok_or_else(|| {
+            anyhow!(
+                "unknown scenario '{}' (have: {}, or 'all')",
+                scenario,
+                Scenario::canned()
+                    .iter()
+                    .map(|s| s.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?]
+    };
+    let mut runs = Vec::new();
+    for sc in &scenarios {
+        let fleet = Fleet::from_artifact(artifact, cache_budget_bytes, sc.tenants)?;
+        runs.push(run_scenario(&fleet, sc, seed, vworkers)?);
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("scenarios")),
+        ("source", Json::str("rust-loadgen")),
+        ("kernel", Json::str(crate::tensor::kernel_label())),
+        ("seed", Json::num(seed as f64)),
+        ("vworkers", Json::num(vworkers as f64)),
+        ("scenarios", Json::Arr(runs.iter().map(|r| r.doc.clone()).collect())),
+    ]);
+    Ok((doc, runs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compress_model, ResMoE};
+    use crate::moe::{Model, ModelConfig};
+    use crate::tensor::Matrix;
+    use crate::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut cfg = ModelConfig::switch_mini(4);
+        cfg.d_model = 16;
+        cfg.d_inner = 32;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        let mut m = Model::random(&cfg, &mut rng);
+        m.heads.push((
+            CLASSIFY_TASK.to_string(),
+            Matrix::randn(3, m.cfg.d_model, 0.2, &mut rng),
+        ));
+        m
+    }
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let m = tiny_model(seed);
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        Engine::compressed(m, cm.layers, 48 * 1024)
+    }
+
+    fn tiny_fleet(tenants: usize) -> Fleet {
+        Fleet::from_engines((0..tenants).map(|_| tiny_engine(11)).collect())
+    }
+
+    #[test]
+    fn run_scenario_executes_and_conserves() {
+        let sc = Scenario::by_name("mixed").unwrap();
+        let run = run_scenario(&tiny_fleet(1), &sc, 7, 4).unwrap();
+        assert_eq!(run.arrivals, sc.requests as u64);
+        assert_eq!(
+            run.executed + run.shed_admission + run.shed_deadline,
+            run.arrivals
+        );
+        assert_eq!(run.errors, 0, "mixed traffic must not error");
+        assert_eq!(run.shed_admission + run.shed_deadline, 0);
+        assert!(run.executed > 0);
+    }
+
+    #[test]
+    fn fixed_seed_runs_are_bit_identical() {
+        let sc = Scenario::by_name("zipf12").unwrap();
+        let a = run_scenario(&tiny_fleet(1), &sc, 7, 4).unwrap();
+        let b = run_scenario(&tiny_fleet(1), &sc, 7, 1).unwrap();
+        assert_eq!(a.schedule_fp, b.schedule_fp);
+        assert_eq!(a.responses_fp, b.responses_fp, "responses must replay");
+        assert_eq!(a.counters_fp, b.counters_fp, "counters must replay");
+        let c = run_scenario(&tiny_fleet(1), &sc, 8, 4).unwrap();
+        assert_ne!(a.schedule_fp, c.schedule_fp, "seed must matter");
+    }
+
+    #[test]
+    fn fleet_requires_matching_tenants() {
+        let sc = Scenario::by_name("multi_tenant").unwrap();
+        assert!(run_scenario(&tiny_fleet(1), &sc, 7, 4).is_err());
+        let run = run_scenario(&tiny_fleet(2), &sc, 7, 4).unwrap();
+        assert_eq!(run.errors, 0);
+        assert!(run.executed > 0);
+    }
+
+    #[test]
+    fn classify_folds_to_score_without_head() {
+        let mut m = tiny_model(5);
+        m.heads.clear();
+        let mut rng = Rng::new(5 ^ 0x5eed);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let fleet = Fleet::from_engines(vec![Engine::compressed(m, cm.layers, 48 * 1024)]);
+        let sc = Scenario::by_name("mixed").unwrap();
+        let run = run_scenario(&fleet, &sc, 7, 4).unwrap();
+        assert_eq!(run.errors, 0, "headless classify must fold, not error");
+        let doc = run.doc.to_string();
+        assert!(doc.contains("\"classify_disabled\":true"));
+    }
+
+    #[test]
+    fn pool_model_is_observation_only() {
+        let sc = Scenario::by_name("bursty").unwrap();
+        let events = schedule::generate(&sc, 7);
+        let rp = schedule::replay(&sc, &events);
+        let one = pool_latencies(&rp, &events, 1);
+        let four = pool_latencies(&rp, &events, 4);
+        assert_eq!(one.len(), four.len(), "membership never changes with k");
+        assert!(four.iter().zip(&one).all(|(f, o)| f <= o));
+    }
+}

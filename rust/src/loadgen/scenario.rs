@@ -1,0 +1,213 @@
+//! Scenario model: arrival process × routing skew × request mix × client
+//! behavior, all expressed in **integer-only** virtual-clock arithmetic so
+//! the Python replica (`scripts/sim_loadgen.py`) reproduces every schedule
+//! bit-for-bit. No floats anywhere on the schedule path.
+
+use crate::coordinator::BatchPolicy;
+
+/// Number of token profiles routing skew is expressed over. A profile maps
+/// to one token id (`profile % vocab`), so with the 32-token demo vocab the
+/// profile distribution IS the token distribution the router sees.
+pub const N_PROFILES: usize = 32;
+
+/// Tokens decoded per Generate request (virtual + real).
+pub const GEN_NEW_TOKENS: u32 = 4;
+
+/// Request length draw: `MIN_LEN + below(LEN_RANGE)` tokens.
+pub const MIN_LEN: u32 = 4;
+pub const LEN_RANGE: usize = 12;
+
+/// 64 integer quantiles of the unit exponential, scaled by 1024: entry `i`
+/// is `round(-ln(1 - (i+0.5)/64) * 1024)`. An inter-arrival gap is
+/// `mean_gap_us * EXP_Q1024[rng.below(64)] / 1024` — a seeded, integer
+/// Poisson process with mean ~0.9946 * mean_gap_us.
+pub const EXP_Q1024: [u64; 64] = [
+    8, 24, 41, 58, 75, 92, 110, 128, 146, 165, 184, 203, 223, 243, 263, 284,
+    305, 327, 349, 372, 395, 419, 444, 469, 494, 520, 547, 575, 603, 633,
+    663, 694, 726, 759, 793, 828, 865, 903, 942, 983, 1026, 1070, 1117,
+    1166, 1217, 1271, 1328, 1388, 1452, 1520, 1594, 1672, 1758, 1851, 1953,
+    2067, 2195, 2342, 2513, 2719, 2976, 3320, 3844, 4968,
+];
+
+/// Integer Zipf(s = 0.9) profile weights: `round(1e6 / (i+1)^0.9)`.
+/// Top decile (4 of 32 profiles) holds ~46% of the mass (3.7x proportional).
+pub const ZIPF09: [u64; 32] = [
+    1000000, 535887, 372041, 287175, 234924, 199372, 173545, 153893, 138415,
+    125893, 115544, 106841, 99415, 93000, 87401, 82469, 78090, 74175, 70652,
+    67464, 64566, 61918, 59490, 57255, 55189, 53275, 51496, 49838, 48288,
+    46837, 45475, 44194,
+];
+
+/// Integer Zipf(s = 1.2) profile weights: `round(1e6 / (i+1)^1.2)`.
+/// Top decile holds ~61% of the mass (4.9x proportional).
+pub const ZIPF12: [u64; 32] = [
+    1000000, 435275, 267581, 189465, 144956, 116471, 96802, 82469, 71599,
+    63096, 56277, 50697, 46054, 42135, 38787, 35897, 33378, 31165, 29208,
+    27464, 25902, 24496, 23223, 22067, 21012, 20046, 19159, 18340, 17584,
+    16883, 16232, 15625,
+];
+
+/// When a request arrives relative to its predecessor.
+#[derive(Clone, Debug)]
+pub enum Arrivals {
+    /// Poisson process: exponential inter-arrival gaps with the given mean
+    /// (µs), drawn from [`EXP_Q1024`].
+    Poisson { mean_gap_us: u64 },
+    /// On/off bursts under a diurnal ramp: each cycle is `burst_len`
+    /// arrivals at `burst_gap_us` mean followed by one `idle_gap_us` mean
+    /// pause; every gap is then divided by the current ramp intensity
+    /// (per-mille), which steps through `ramp_permille` once per
+    /// `ramp_period` arrivals. Gaps keep their exponential jitter.
+    OnOff {
+        burst_gap_us: u64,
+        idle_gap_us: u64,
+        burst_len: u32,
+        ramp_permille: Vec<u64>,
+        ramp_period: u32,
+    },
+}
+
+/// Which token profile a request draws (profile → token id → expert skew).
+#[derive(Clone, Debug)]
+pub enum Routing {
+    /// Profiles uniform over [`N_PROFILES`].
+    Uniform,
+    /// Profiles Zipf-weighted by an integer table ([`ZIPF09`]/[`ZIPF12`]).
+    Zipf { weights: Vec<u64> },
+}
+
+/// Integer request-kind weights (kind draw: `below(score+generate+classify)`
+/// walked cumulatively; ids 0=Score, 1=Generate, 2=Classify).
+#[derive(Clone, Copy, Debug)]
+pub struct Mix {
+    pub score: u32,
+    pub generate: u32,
+    pub classify: u32,
+}
+
+impl Mix {
+    pub const fn score_only() -> Mix {
+        Mix { score: 1, generate: 0, classify: 0 }
+    }
+}
+
+/// Virtual service-time model for a flushed window:
+/// `base_us + per_token_us * window_tokens` (integer µs).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceModel {
+    pub base_us: u64,
+    pub per_token_us: u64,
+}
+
+/// One canned traffic scenario. All knobs are virtual-clock integers; the
+/// same struct drives both the pure schedule replay (engine-free, shared
+/// with `sim_loadgen.py`) and the real-engine execution.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// Total arrivals to generate (across all tenants).
+    pub requests: usize,
+    pub arrivals: Arrivals,
+    pub routing: Routing,
+    pub mix: Mix,
+    /// Virtual admission depth cap (0 = unbounded; same zero semantics as
+    /// `RESMOE_MAX_QUEUE`). Depth = queued + produced-but-undrained.
+    pub max_queue: usize,
+    /// Virtual per-request deadline (µs; 0 = none; same zero semantics as
+    /// `RESMOE_DEADLINE_MS`), checked when the window reaches the virtual
+    /// worker — matching the real server's shed-at-pickup.
+    pub deadline_us: u64,
+    /// Window-forming policy (the `RESMOE_BATCH`/`RESMOE_LINGER_US` pair).
+    pub policy: BatchPolicy,
+    pub service: ServiceModel,
+    /// Client drain pacing: each response occupies the client for this many
+    /// µs before the next one is consumed (0 = drained instantly). Slow
+    /// readers back responses up against `max_queue`/`deadline_us`.
+    pub drain_gap_us: u64,
+    /// Engines sharing one store (1 = single tenant).
+    pub tenants: usize,
+}
+
+impl Scenario {
+    fn base(name: &'static str) -> Scenario {
+        Scenario {
+            name,
+            requests: 96,
+            arrivals: Arrivals::Poisson { mean_gap_us: 400 },
+            routing: Routing::Uniform,
+            mix: Mix::score_only(),
+            max_queue: 0,
+            deadline_us: 0,
+            policy: BatchPolicy { max_batch: 4, linger_us: 800 },
+            service: ServiceModel { base_us: 300, per_token_us: 40 },
+            drain_gap_us: 0,
+            tenants: 1,
+        }
+    }
+
+    /// The canned scenario set (every name is also a `loadgen --scenario`
+    /// value; `all` runs the lot).
+    pub fn canned() -> Vec<Scenario> {
+        vec![
+            // Zipf-routed steady state at two skew strengths: the cache
+            // sees a hot set, and the skew gate checks the top-decile
+            // slots absorb a super-proportional serve share.
+            Scenario {
+                routing: Routing::Zipf { weights: ZIPF09.to_vec() },
+                ..Scenario::base("zipf09")
+            },
+            Scenario {
+                routing: Routing::Zipf { weights: ZIPF12.to_vec() },
+                ..Scenario::base("zipf12")
+            },
+            // Bursty on/off arrivals under a diurnal ramp: windows
+            // alternate between full flushes (bursts) and lone stragglers
+            // (idle), with intensity sweeping 0.25x → 2x.
+            Scenario {
+                arrivals: Arrivals::OnOff {
+                    burst_gap_us: 80,
+                    idle_gap_us: 5000,
+                    burst_len: 8,
+                    ramp_permille: vec![250, 500, 1000, 2000, 1000, 500],
+                    ramp_period: 16,
+                },
+                policy: BatchPolicy { max_batch: 8, linger_us: 1500 },
+                ..Scenario::base("bursty")
+            },
+            // Mixed Score/Generate/Classify traffic (2:1:1). Classify folds
+            // to Score when the served model exposes no task head
+            // (`classify_disabled` in the report).
+            Scenario {
+                arrivals: Arrivals::Poisson { mean_gap_us: 500 },
+                mix: Mix { score: 2, generate: 1, classify: 1 },
+                ..Scenario::base("mixed")
+            },
+            // Slow-reader clients: arrivals far outpace the drain rate, so
+            // undrained responses pile up against the admission depth cap
+            // and the backlogged pipe pushes pickups past the deadline —
+            // the ONLY scenario where sheds are intended (and both shed
+            // paths fire: depth cap at admission, deadline at pickup).
+            Scenario {
+                arrivals: Arrivals::Poisson { mean_gap_us: 150 },
+                max_queue: 64,
+                deadline_us: 20_000,
+                policy: BatchPolicy { max_batch: 4, linger_us: 500 },
+                drain_gap_us: 4000,
+                ..Scenario::base("slow_reader")
+            },
+            // Two tenants over one shared store: independent caches and
+            // registries, contended artifact reads.
+            Scenario {
+                arrivals: Arrivals::Poisson { mean_gap_us: 300 },
+                routing: Routing::Zipf { weights: ZIPF12.to_vec() },
+                tenants: 2,
+                ..Scenario::base("multi_tenant")
+            },
+        ]
+    }
+
+    /// Look up a canned scenario by name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::canned().into_iter().find(|s| s.name == name)
+    }
+}

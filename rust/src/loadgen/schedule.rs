@@ -1,0 +1,487 @@
+//! Seeded schedule generation + pure virtual-clock replay.
+//!
+//! Everything in this file is **engine-free and integer-only**: a schedule
+//! is a deterministic function of `(Scenario, seed)`, and the window
+//! formation / admission / drain replay is a deterministic function of the
+//! schedule — `scripts/sim_loadgen.py` ports both verbatim, so a
+//! toolchain-less session can still validate the whole virtual-time story
+//! (window composition, sheds, latency percentiles) against this code.
+//!
+//! The replay is also **worker-count-invariant by construction**: windows
+//! form from arrivals + policy alone (the same [`Batcher`] state machine
+//! the real server drives), and the decision-bearing service pipe is one
+//! virtual worker per tenant. The `vworkers` knob of the runner shapes a
+//! separately-reported pool latency model and nothing else — which is what
+//! lets a fixed seed replay bit-identically across `--vworkers 1` and `4`.
+
+use super::scenario::{
+    Arrivals, Routing, Scenario, EXP_Q1024, GEN_NEW_TOKENS, LEN_RANGE, MIN_LEN, N_PROFILES,
+};
+use crate::coordinator::{Batcher, FlushReason};
+use crate::util::Rng;
+
+// ------------------------------------------------------------ fingerprints
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte stream (the replay-identity fingerprint hash).
+pub fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold a `u64` into an FNV-1a stream (little-endian bytes).
+pub fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    fnv1a(h, &v.to_le_bytes())
+}
+
+// ---------------------------------------------------------------- schedule
+
+/// One scheduled arrival. `kind`: 0 = Score, 1 = Generate, 2 = Classify.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub t_us: u64,
+    pub profile: u32,
+    pub kind: u32,
+    pub len: u32,
+    pub tenant: u32,
+}
+
+impl Event {
+    /// Virtual tokens this request puts through a window (Generate adds
+    /// its decoded tokens).
+    pub fn tokens(&self) -> u64 {
+        u64::from(self.len)
+            + if self.kind == 1 { u64::from(GEN_NEW_TOKENS) } else { 0 }
+    }
+}
+
+/// Seed mixing: each scenario gets its own stream, derived from the user
+/// seed and the scenario name (so `zipf09` and `zipf12` under one seed are
+/// distinct but individually stable).
+pub fn scenario_rng(seed: u64, name: &str) -> Rng {
+    Rng::new(seed ^ fnv1a(FNV_OFFSET, name.as_bytes()))
+}
+
+fn draw_gap(rng: &mut Rng, arrivals: &Arrivals, i: usize) -> u64 {
+    let q = EXP_Q1024[rng.below(EXP_Q1024.len())];
+    match arrivals {
+        Arrivals::Poisson { mean_gap_us } => mean_gap_us.saturating_mul(q) / 1024,
+        Arrivals::OnOff { burst_gap_us, idle_gap_us, burst_len, ramp_permille, ramp_period } => {
+            let cycle = (*burst_len as usize) + 1;
+            let base = if i % cycle < *burst_len as usize { *burst_gap_us } else { *idle_gap_us };
+            let step = (i / *ramp_period as usize) % ramp_permille.len();
+            let intensity = ramp_permille[step].max(1);
+            base.saturating_mul(q) / 1024 * 1000 / intensity
+        }
+    }
+}
+
+fn draw_profile(rng: &mut Rng, routing: &Routing) -> u32 {
+    match routing {
+        Routing::Uniform => rng.below(N_PROFILES) as u32,
+        Routing::Zipf { weights } => {
+            let total: u64 = weights.iter().sum();
+            let mut r = rng.below(total as usize) as u64;
+            for (i, &w) in weights.iter().enumerate() {
+                if r < w {
+                    return i as u32;
+                }
+                r -= w;
+            }
+            (weights.len() - 1) as u32
+        }
+    }
+}
+
+/// Generate the full arrival schedule for `(scenario, seed)`. Draw order
+/// per event is fixed — gap, profile, kind, [tenant] — so the stream is
+/// identical across implementations.
+pub fn generate(sc: &Scenario, seed: u64) -> Vec<Event> {
+    let mut rng = scenario_rng(seed, sc.name);
+    let kind_total =
+        u64::from(sc.mix.score) + u64::from(sc.mix.generate) + u64::from(sc.mix.classify);
+    assert!(kind_total > 0, "scenario {} has an empty request mix", sc.name);
+    let mut t = 0u64;
+    let mut events = Vec::with_capacity(sc.requests);
+    for i in 0..sc.requests {
+        t = t.saturating_add(draw_gap(&mut rng, &sc.arrivals, i));
+        let profile = draw_profile(&mut rng, &sc.routing);
+        let r = rng.below(kind_total as usize) as u64;
+        let kind = if r < u64::from(sc.mix.score) {
+            0
+        } else if r < u64::from(sc.mix.score) + u64::from(sc.mix.generate) {
+            1
+        } else {
+            2
+        };
+        let len = MIN_LEN + rng.below(LEN_RANGE) as u32;
+        let tenant = if sc.tenants > 1 { rng.below(sc.tenants) as u32 } else { 0 };
+        events.push(Event { t_us: t, profile, kind, len, tenant });
+    }
+    events
+}
+
+/// Schedule fingerprint: FNV-1a over every event field, in order.
+pub fn schedule_fingerprint(events: &[Event]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for e in events {
+        h = fnv1a_u64(h, e.t_us);
+        h = fnv1a_u64(h, u64::from(e.profile));
+        h = fnv1a_u64(h, u64::from(e.kind));
+        h = fnv1a_u64(h, u64::from(e.len));
+        h = fnv1a_u64(h, u64::from(e.tenant));
+    }
+    h
+}
+
+// ------------------------------------------------------------------ replay
+
+/// One virtually-formed window, ready for real-engine execution.
+#[derive(Clone, Debug)]
+pub struct VWindow {
+    pub tenant: u32,
+    /// Virtual formation time (arrivals + policy only).
+    pub formed_us: u64,
+    pub reason: FlushReason,
+    pub waited_us: u64,
+    /// Schedule indices that execute (survived the deadline check).
+    pub live: Vec<usize>,
+    /// Schedule indices shed at pickup (deadline exceeded).
+    pub shed: Vec<usize>,
+    /// When the tenant's virtual service pipe starts this window (includes
+    /// backlog) and finishes it.
+    pub exec_start_us: u64,
+    pub completion_us: u64,
+    /// Virtual service duration (`base + per_token * live tokens`).
+    pub dur_us: u64,
+}
+
+/// The pure virtual-time replay of a schedule.
+#[derive(Clone, Debug, Default)]
+pub struct Replay {
+    /// Windows in formation order (global event order; ties keep tenant
+    /// arrival order — the loop is sequential and deterministic).
+    pub windows: Vec<VWindow>,
+    /// Schedule indices shed at admission (virtual depth >= max_queue).
+    pub admit_shed: Vec<usize>,
+    /// Schedule indices shed at pickup (past deadline).
+    pub deadline_shed: Vec<usize>,
+    /// Per-executed-request virtual latency µs, indexed by schedule index
+    /// (`None` for shed requests): completion - arrival.
+    pub latency_us: Vec<Option<u64>>,
+    /// Virtual time-to-first-token for executed Generate requests.
+    pub ttft_us: Vec<Option<u64>>,
+}
+
+struct TenantState {
+    batcher: Batcher<usize>,
+    /// Virtual single-server service pipe (decision-bearing; worker-count
+    /// independent).
+    busy_until_us: u64,
+    /// Slow-reader drain cursor: next instant the client can consume a
+    /// response.
+    drain_cursor_us: u64,
+    /// Drain times of every windowed request, nondecreasing (service pipe
+    /// completions are monotone per tenant and the cursor only grows).
+    drains_us: Vec<u64>,
+}
+
+impl TenantState {
+    fn new(sc: &Scenario) -> TenantState {
+        TenantState {
+            batcher: Batcher::new(sc.policy),
+            busy_until_us: 0,
+            drain_cursor_us: 0,
+            drains_us: Vec::new(),
+        }
+    }
+
+    /// Windowed requests not yet consumed by the client at `t` — the
+    /// "responses backing up" component of virtual depth.
+    fn undrained_at(&self, t: u64) -> usize {
+        self.drains_us.len() - self.drains_us.partition_point(|&d| d <= t)
+    }
+}
+
+/// Run a formed window through the tenant's virtual service pipe: deadline
+/// check at pickup, service duration from live tokens, drain bookkeeping.
+fn execute_window(
+    sc: &Scenario,
+    events: &[Event],
+    st: &mut TenantState,
+    tenant: u32,
+    idxs: Vec<usize>,
+    reason: FlushReason,
+    formed_us: u64,
+    waited_us: u64,
+    out: &mut Replay,
+) {
+    let exec_start_us = formed_us.max(st.busy_until_us);
+    let (mut live, mut shed) = (Vec::new(), Vec::new());
+    for idx in idxs {
+        let waited = exec_start_us.saturating_sub(events[idx].t_us);
+        if sc.deadline_us > 0 && waited > sc.deadline_us {
+            shed.push(idx);
+        } else {
+            live.push(idx);
+        }
+    }
+    let tokens: u64 = live.iter().map(|&i| events[i].tokens()).sum();
+    let dur_us = if live.is_empty() {
+        0
+    } else {
+        sc.service.base_us.saturating_add(sc.service.per_token_us.saturating_mul(tokens))
+    };
+    let completion_us = exec_start_us.saturating_add(dur_us);
+    st.busy_until_us = completion_us;
+    for &idx in &live {
+        out.latency_us[idx] = Some(completion_us.saturating_sub(events[idx].t_us));
+        if events[idx].kind == 1 {
+            out.ttft_us[idx] = Some(
+                exec_start_us
+                    .saturating_add(sc.service.base_us)
+                    .saturating_sub(events[idx].t_us),
+            );
+        }
+        let drain = completion_us.max(st.drain_cursor_us);
+        st.drain_cursor_us = drain.saturating_add(sc.drain_gap_us);
+        st.drains_us.push(drain);
+    }
+    out.deadline_shed.extend(shed.iter().copied());
+    out.windows.push(VWindow {
+        tenant,
+        formed_us,
+        reason,
+        waited_us,
+        live,
+        shed,
+        exec_start_us,
+        completion_us,
+        dur_us,
+    });
+}
+
+/// Flush every linger window due at or before `now` for one tenant.
+fn flush_due(
+    sc: &Scenario,
+    events: &[Event],
+    st: &mut TenantState,
+    tenant: u32,
+    now_us: u64,
+    out: &mut Replay,
+) {
+    while let Some(dl) = st.batcher.deadline_us() {
+        if dl > now_us {
+            break;
+        }
+        match st.batcher.poll(dl) {
+            Some(w) => execute_window(
+                sc, events, st, tenant, w.items, w.reason, dl, w.waited_us, out,
+            ),
+            None => break,
+        }
+    }
+}
+
+/// Replay the schedule through per-tenant admission queues and virtual
+/// service pipes. Pure: same `(scenario, events)` in, same `Replay` out.
+pub fn replay(sc: &Scenario, events: &[Event]) -> Replay {
+    let mut out = Replay {
+        latency_us: vec![None; events.len()],
+        ttft_us: vec![None; events.len()],
+        ..Replay::default()
+    };
+    let mut tenants: Vec<TenantState> =
+        (0..sc.tenants.max(1)).map(|_| TenantState::new(sc)).collect();
+    for (i, ev) in events.iter().enumerate() {
+        let tn = ev.tenant as usize;
+        // 1. Linger flushes due before this arrival (every tenant: virtual
+        //    time advances globally).
+        for t in 0..tenants.len() {
+            flush_due(sc, events, &mut tenants[t], t as u32, ev.t_us, &mut out);
+        }
+        // 2. Admission: depth = queued + produced-but-undrained responses.
+        let st = &mut tenants[tn];
+        let depth = st.batcher.pending_len() + st.undrained_at(ev.t_us);
+        if sc.max_queue > 0 && depth >= sc.max_queue {
+            out.admit_shed.push(i);
+            continue;
+        }
+        // 3. Admit; a full window flushes immediately at the arrival.
+        st.batcher.push(i, ev.t_us);
+        if let Some(w) = st.batcher.poll(ev.t_us) {
+            execute_window(
+                sc, events, st, tn as u32, w.items, w.reason, ev.t_us, w.waited_us, &mut out,
+            );
+        }
+    }
+    // 4. End of schedule: remaining linger deadlines fire, then the client
+    //    "hangs up" and close-flushes the tail at the last arrival time.
+    let t_end = events.last().map(|e| e.t_us).unwrap_or(0);
+    for t in 0..tenants.len() {
+        flush_due(sc, events, &mut tenants[t], t as u32, u64::MAX, &mut out);
+        tenants[t].batcher.close();
+        while let Some(w) = tenants[t].batcher.poll(t_end) {
+            execute_window(
+                sc, events, &mut tenants[t], t as u32, w.items, w.reason, t_end, w.waited_us,
+                &mut out,
+            );
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- percentiles
+
+/// Integer nearest-rank percentile over an UNSORTED sample (sorts a copy):
+/// index `(n - 1) * q / 100` of the sorted values. Matches the Python
+/// replica exactly (integer floor division).
+pub fn percentile_us(sample: &[u64], q: u64) -> Option<u64> {
+    if sample.is_empty() {
+        return None;
+    }
+    let mut v = sample.to_vec();
+    v.sort_unstable();
+    Some(v[((v.len() - 1) as u64 * q / 100) as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::scenario::Scenario;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Classic FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV_OFFSET, b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn schedules_are_seed_deterministic_and_seed_sensitive() {
+        for sc in Scenario::canned() {
+            let a = generate(&sc, 7);
+            let b = generate(&sc, 7);
+            assert_eq!(a, b, "{}: same seed, same schedule", sc.name);
+            let c = generate(&sc, 8);
+            assert_ne!(
+                schedule_fingerprint(&a),
+                schedule_fingerprint(&c),
+                "{}: different seeds, different schedules",
+                sc.name
+            );
+            assert_eq!(a.len(), sc.requests);
+            assert!(a.windows(2).all(|w| w[0].t_us <= w[1].t_us), "arrivals ordered");
+        }
+    }
+
+    #[test]
+    fn zipf_schedules_skew_profile_mass() {
+        // Top-decile profiles must draw a super-proportional share of
+        // requests — the schedule-level half of the skew acceptance gate
+        // (the cache-level half runs in check_scenarios.py).
+        for (name, min_ratio) in [("zipf09", 2.0), ("zipf12", 2.5)] {
+            let sc = Scenario::by_name(name).unwrap();
+            let ev = generate(&sc, 7);
+            let mut counts = [0u64; N_PROFILES];
+            for e in &ev {
+                counts[e.profile as usize] += 1;
+            }
+            let mut sorted = counts;
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            let top = N_PROFILES.div_ceil(10);
+            let share: u64 = sorted[..top].iter().sum();
+            let ratio = share as f64 / ev.len() as f64 / (top as f64 / N_PROFILES as f64);
+            assert!(ratio >= min_ratio, "{name}: top-decile ratio {ratio:.2} < {min_ratio}");
+        }
+        // Uniform control: mixed scenario profiles stay roughly flat.
+        let sc = Scenario::by_name("mixed").unwrap();
+        let ev = generate(&sc, 7);
+        let mut counts = [0u64; N_PROFILES];
+        for e in &ev {
+            counts[e.profile as usize] += 1;
+        }
+        assert!(counts.iter().filter(|&&c| c > 0).count() > N_PROFILES / 2);
+    }
+
+    #[test]
+    fn replay_conserves_every_request() {
+        for sc in Scenario::canned() {
+            let ev = generate(&sc, 7);
+            let rp = replay(&sc, &ev);
+            let executed: usize = rp.windows.iter().map(|w| w.live.len()).sum();
+            assert_eq!(
+                executed + rp.admit_shed.len() + rp.deadline_shed.len(),
+                ev.len(),
+                "{}: executed + shed == arrivals",
+                sc.name
+            );
+            // No request appears twice.
+            let mut seen = vec![false; ev.len()];
+            for idx in rp
+                .windows
+                .iter()
+                .flat_map(|w| w.live.iter().chain(w.shed.iter()))
+                .chain(rp.admit_shed.iter())
+            {
+                assert!(!seen[*idx], "{}: request {idx} duplicated", sc.name);
+                seen[*idx] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{}: every request accounted", sc.name);
+            // Virtual pipe sanity per tenant.
+            for t in 0..sc.tenants {
+                let mut last = 0u64;
+                for w in rp.windows.iter().filter(|w| w.tenant == t as u32) {
+                    assert!(w.exec_start_us >= w.formed_us);
+                    assert!(w.exec_start_us >= last, "pipe is serial per tenant");
+                    last = w.completion_us;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slow_reader_sheds_and_others_do_not() {
+        for sc in Scenario::canned() {
+            let ev = generate(&sc, 7);
+            let rp = replay(&sc, &ev);
+            let sheds = rp.admit_shed.len() + rp.deadline_shed.len();
+            if sc.name == "slow_reader" {
+                assert!(sheds > 0, "slow_reader must shed under backpressure");
+                assert!(
+                    rp.windows.iter().map(|w| w.live.len()).sum::<usize>() > 0,
+                    "but not shed everything"
+                );
+            } else {
+                assert_eq!(sheds, 0, "{}: no sheds intended", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_schedule_forms_full_and_linger_windows() {
+        let sc = Scenario::by_name("bursty").unwrap();
+        let ev = generate(&sc, 7);
+        let rp = replay(&sc, &ev);
+        let full = rp.windows.iter().filter(|w| w.reason == FlushReason::Full).count();
+        let linger = rp.windows.iter().filter(|w| w.reason == FlushReason::Linger).count();
+        assert!(full > 0, "bursts must fill windows");
+        assert!(linger > 0, "idle gaps must strand stragglers");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile_us(&[], 50), None);
+        assert_eq!(percentile_us(&[7], 99), Some(7));
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&v, 50), Some(50));
+        assert_eq!(percentile_us(&v, 99), Some(99));
+    }
+}

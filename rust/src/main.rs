@@ -11,6 +11,9 @@
 //!   expert).
 //! * `serve-packed` — serve straight from an `RMES` artifact with
 //!   demand-paged expert shards and async prefetch.
+//! * `loadgen` — seeded scenario-diverse traffic harness over an `RMES`
+//!   artifact: virtual-clock schedules, real engine batches, replayable
+//!   fingerprints, `BENCH_scenarios.json` report.
 
 use anyhow::{anyhow, Result};
 use resmoe::compress::{compress_model, Compressor};
@@ -33,6 +36,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("pack") => cmd_pack(&args),
         Some("serve-packed") => cmd_serve_packed(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("table") => cmd_table(&args),
         Some(other) => Err(anyhow!("unknown subcommand '{other}'")),
         None => {
@@ -58,6 +62,8 @@ fn print_help() {
            pack     --model mixtral-mini [--ckpt path.rmw[z]] --method resmoe-up \
 --rate 0.25 [--quantize int8] --out model.rmes\n\
            serve-packed --artifact model.rmes [--cache-mb N --requests N --metrics-out m.json]\n\
+           loadgen  --artifact model.rmes [--scenario all|zipf09|zipf12|bursty|mixed|\n\
+                    slow_reader|multi_tenant --seed N --vworkers N --cache-mb N --out b.json]\n\
            table    --id 1|2|3|4|5|7|10|11|12|fig4\n\n\
          (both serve demos print a final metrics snapshot; --metrics-out writes the\n\
           JSON form consumed by scripts/ci.sh SLO gates. RESMOE_TRACE=<file|stderr>\n\
@@ -284,6 +290,49 @@ fn cmd_serve_packed(args: &Args) -> Result<()> {
         n_requests,
         metrics_out.as_deref(),
     )
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let artifact = args
+        .get("artifact")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("loadgen needs --artifact <path.rmes>"))?;
+    let scenario = args.get_or("scenario", "all").to_string();
+    let seed = args.get_u64("seed", 7);
+    let vworkers = args.get_usize("vworkers", 4);
+    let budget = args.get_usize("cache-mb", 4) * 1024 * 1024;
+    let (doc, runs) = resmoe::loadgen::run_all(
+        Path::new(&artifact),
+        budget,
+        &scenario,
+        seed,
+        vworkers,
+    )?;
+    for r in &runs {
+        println!(
+            "loadgen[{}]: {} arrivals, {} executed, {} shed (admit {} / deadline {}), \
+             {} errors, {} degraded, fp {:016x}",
+            r.name,
+            r.arrivals,
+            r.executed,
+            r.shed_admission + r.shed_deadline,
+            r.shed_admission,
+            r.shed_deadline,
+            r.errors,
+            r.degraded,
+            r.responses_fp,
+        );
+    }
+    if let Some(out) = args.get("out").or_else(|| args.get("metrics-out")) {
+        let path = PathBuf::from(out);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("loadgen: wrote {}", path.display());
+    }
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -291,6 +291,11 @@ pub struct MetricsSnapshot {
     pub counters: Vec<(String, u64)>,
     pub gauges: Vec<(String, f64)>,
     pub histograms: Vec<(String, HistogramSnapshot)>,
+    /// Optional tenant tag: multi-tenant deployments (two engines, one
+    /// store — see the loadgen harness) label each engine's snapshot so
+    /// exported documents stay attributable. `None` (the default) leaves
+    /// the serialized forms byte-identical to the untagged output.
+    pub tenant: Option<String>,
 }
 
 fn prom_name(name: &str) -> String {
@@ -303,6 +308,12 @@ fn prom_name(name: &str) -> String {
 }
 
 impl MetricsSnapshot {
+    /// Tag this snapshot with a tenant name (builder-style).
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> MetricsSnapshot {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
     pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
@@ -373,6 +384,9 @@ impl MetricsSnapshot {
         root.insert("counters".into(), Json::Obj(counters));
         root.insert("gauges".into(), Json::Obj(gauges));
         root.insert("histograms".into(), Json::Obj(hists));
+        if let Some(t) = &self.tenant {
+            root.insert("tenant".into(), Json::str(t));
+        }
         Json::Obj(root)
     }
 }

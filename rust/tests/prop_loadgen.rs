@@ -1,0 +1,126 @@
+//! Loadgen determinism properties (ISSUE 9 S4): a fixed `(scenario,
+//! seed)` pair must replay **bit-identically** — same schedule, same
+//! response stream, same counter snapshot — across repeated runs and
+//! across virtual worker counts {1, 4}; different seeds must produce
+//! different schedules; sheds happen only where the scenario intends
+//! them; and no scenario ever surfaces a `Response::Error`.
+
+use resmoe::compress::{compress_model, ResMoE};
+use resmoe::coordinator::Engine;
+use resmoe::loadgen::{self, Fleet, Scenario, CLASSIFY_TASK};
+use resmoe::moe::{Model, ModelConfig};
+use resmoe::Matrix;
+use resmoe::Rng;
+
+fn model(seed: u64) -> Model {
+    let mut cfg = ModelConfig::switch_mini(4);
+    cfg.d_model = 16;
+    cfg.d_inner = 32;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.vocab_size = 32;
+    cfg.max_seq = 32;
+    let mut rng = Rng::new(seed);
+    let mut m = Model::random(&cfg, &mut rng);
+    m.heads.push((
+        CLASSIFY_TASK.to_string(),
+        Matrix::randn(3, m.cfg.d_model, 0.2, &mut rng),
+    ));
+    m
+}
+
+fn fleet(tenants: usize, budget: usize) -> Fleet {
+    Fleet::from_engines(
+        (0..tenants)
+            .map(|_| {
+                let m = model(17);
+                let mut rng = Rng::new(0x10ad);
+                let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+                Engine::compressed(m, cm.layers, budget)
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn fixed_seed_replays_bit_identically_across_runs_and_worker_counts() {
+    for sc in Scenario::canned() {
+        // Fresh fleet per run: counters must start from zero both times.
+        let a = loadgen::run_scenario(&fleet(sc.tenants, 48 * 1024), &sc, 7, 4).unwrap();
+        let b = loadgen::run_scenario(&fleet(sc.tenants, 48 * 1024), &sc, 7, 1).unwrap();
+        assert_eq!(
+            a.schedule_fp, b.schedule_fp,
+            "{}: schedule must be seed-deterministic",
+            sc.name
+        );
+        assert_eq!(
+            a.responses_fp, b.responses_fp,
+            "{}: responses must replay bit-identically (vworkers 4 vs 1)",
+            sc.name
+        );
+        assert_eq!(
+            a.counters_fp, b.counters_fp,
+            "{}: counter snapshots must replay bit-identically",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn different_seeds_produce_different_schedules() {
+    for sc in Scenario::canned() {
+        let a = loadgen::generate(&sc, 7);
+        let b = loadgen::generate(&sc, 8);
+        assert_ne!(
+            loadgen::schedule_fingerprint(&a),
+            loadgen::schedule_fingerprint(&b),
+            "{}: seed must matter",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn every_scenario_conserves_requests_and_never_errors() {
+    for sc in Scenario::canned() {
+        let run = loadgen::run_scenario(&fleet(sc.tenants, 48 * 1024), &sc, 7, 4).unwrap();
+        assert_eq!(run.arrivals, sc.requests as u64, "{}", sc.name);
+        assert_eq!(
+            run.executed + run.shed_admission + run.shed_deadline,
+            run.arrivals,
+            "{}: executed + sheds must equal arrivals",
+            sc.name
+        );
+        assert_eq!(run.errors, 0, "{}: no Response::Error under any scenario", sc.name);
+        if sc.name == "slow_reader" {
+            assert!(
+                run.shed_admission + run.shed_deadline > 0,
+                "slow_reader is built to shed"
+            );
+        } else {
+            assert_eq!(
+                run.shed_admission + run.shed_deadline,
+                0,
+                "{}: sheds are intended only in slow_reader",
+                sc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn zipf_scenarios_concentrate_serves_in_top_decile_slots() {
+    for (name, min_ratio) in [("zipf09", 1.3), ("zipf12", 1.5)] {
+        let sc = Scenario::by_name(name).unwrap();
+        let run = loadgen::run_scenario(&fleet(1, 48 * 1024), &sc, 7, 4).unwrap();
+        let skew = run.doc.get("skew").unwrap();
+        let ratio = skew.get("ratio").unwrap().as_f64().unwrap();
+        let slots = skew.get("slots").unwrap().as_f64().unwrap();
+        assert!(slots > 0.0, "{name}: expert census must be populated");
+        assert!(
+            ratio >= min_ratio,
+            "{name}: top-decile slots should absorb a super-proportional \
+             serve share (ratio {ratio:.2} < {min_ratio})"
+        );
+    }
+}

@@ -30,9 +30,9 @@ Writes retries/quarantines/degraded-rate/shed-rate/p99 for both runs to
 Usage: check_faults.py CLEAN_METRICS_JSON CHAOS_METRICS_JSON
 """
 
-import json
-import os
 import sys
+
+from gatelib import GateSet, counters, env_f, load_json, snapshot_schema
 
 FAULT_COUNTERS = (
     "cache.transient_errors",
@@ -42,10 +42,6 @@ FAULT_COUNTERS = (
     "cache.prefetch_errors",
     "server.shed",
 )
-
-
-def counters(doc):
-    return doc["snapshot"]["counters"]
 
 
 def fault_view(doc):
@@ -70,18 +66,12 @@ def fault_view(doc):
 def main():
     if len(sys.argv) != 3:
         sys.exit(f"usage: {sys.argv[0]} CLEAN_METRICS_JSON CHAOS_METRICS_JSON")
-    with open(sys.argv[1]) as f:
-        clean = json.load(f)
-    with open(sys.argv[2]) as f:
-        chaos = json.load(f)
+    clean = load_json(sys.argv[1])
+    chaos = load_json(sys.argv[2])
     cv, xv = fault_view(clean), fault_view(chaos)
 
-    failures = []
-
-    def gate(name, ok, detail):
-        print(f"  {'PASS' if ok else 'FAIL'}  {name}: {detail}")
-        if not ok:
-            failures.append(f"{name}: {detail}")
+    gates = GateSet("check_faults")
+    gate = gates.gate
 
     dirty = {k: counters(clean).get(k, 0) for k in FAULT_COUNTERS
              if counters(clean).get(k, 0)}
@@ -104,33 +94,23 @@ def main():
     gate("nothing shed without admission knobs", xv["shed"] == 0,
          f"{xv['shed']} shed")
 
-    p99_cap = float(os.environ.get("RESMOE_FAULTS_P99_MS",
-                                   max(250.0, 4.0 * cv["p99_ms"])))
+    p99_cap = env_f("RESMOE_FAULTS_P99_MS", max(250.0, 4.0 * cv["p99_ms"]))
     gate(f"chaos p99 <= {p99_cap:.0f} ms", xv["p99_ms"] <= p99_cap,
          f"{xv['p99_ms']:.1f} ms (clean {cv['p99_ms']:.1f} ms)")
 
-    schema = lambda d: {k: sorted(d["snapshot"][k])
-                        for k in ("counters", "gauges", "histograms")}
-    gate("instrument schema identical across runs", schema(clean) == schema(chaos),
-         f"{sum(len(v) for v in schema(clean).values())} instruments")
+    gate("instrument schema identical across runs",
+         snapshot_schema(clean) == snapshot_schema(chaos),
+         f"{sum(len(v) for v in snapshot_schema(clean).values())} instruments")
 
-    os.makedirs("reports", exist_ok=True)
     report = {
         "bench": "fault_gates",
         "kernel": chaos.get("kernel"),
         "clean": cv,
         "chaos": xv,
         "gates": {"p99_cap_ms": p99_cap},
-        "failures": failures,
-        "pass": not failures,
     }
-    with open("reports/BENCH_faults.json", "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print("  report -> reports/BENCH_faults.json")
-    if failures:
-        sys.exit(f"check_faults: {len(failures)} gate(s) failed")
-    print("check_faults OK")
+    gates.write_report("faults", report)
+    gates.finish()
 
 
 if __name__ == "__main__":

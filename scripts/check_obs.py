@@ -26,12 +26,9 @@ Usage: check_obs.py OFF_METRICS_JSON ON_METRICS_JSON TRACE_JSONL
 """
 
 import json
-import os
 import sys
 
-
-def env_f(name, default):
-    return float(os.environ.get(name, default))
+from gatelib import GateSet, env_f, load_json, snapshot_schema
 
 
 def validate_line(line):
@@ -61,17 +58,11 @@ def main():
     if len(sys.argv) != 4:
         sys.exit(f"usage: {sys.argv[0]} OFF_METRICS_JSON ON_METRICS_JSON TRACE_JSONL")
     off_path, on_path, trace_path = sys.argv[1:4]
-    with open(off_path) as f:
-        off = json.load(f)
-    with open(on_path) as f:
-        on = json.load(f)
+    off = load_json(off_path)
+    on = load_json(on_path)
 
-    failures = []
-
-    def gate(name, ok, detail):
-        print(f"  {'PASS' if ok else 'FAIL'}  {name}: {detail}")
-        if not ok:
-            failures.append(f"{name}: {detail}")
+    gates = GateSet("check_obs")
+    gate = gates.gate
 
     gate("run identity", off["traced"] is False and on["traced"] is True,
          f"off.traced={off['traced']} on.traced={on['traced']}")
@@ -116,12 +107,12 @@ def main():
     gate(f"stage attribution >= {attr_min:.0%}", attr >= attr_min,
          f"{attr:.1%} of {wall_ns / 1e6:.1f} ms total request wall")
 
-    off_schema = {k: sorted(off["snapshot"][k]) for k in ("counters", "histograms")}
-    on_schema = {k: sorted(on["snapshot"][k]) for k in ("counters", "histograms")}
-    gate("snapshot schema identical across runs", off_schema == on_schema,
+    keys = ("counters", "histograms")
+    off_schema = snapshot_schema(off, keys)
+    gate("snapshot schema identical across runs",
+         off_schema == snapshot_schema(on, keys),
          f"{sum(len(v) for v in off_schema.values())} instruments")
 
-    os.makedirs("reports", exist_ok=True)
     report = {
         "bench": "obs_gates",
         "kernel": off.get("kernel"),
@@ -139,17 +130,10 @@ def main():
             "tol": tol, "attr_min": attr_min,
             "slo": {name: want for name, _, _, want in slos},
         },
-        "failures": failures,
-        "pass": not failures,
     }
-    with open("reports/BENCH_obs.json", "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
-    print(f"  report -> reports/BENCH_obs.json "
-          f"({len(stages)} distinct stages: {', '.join(sorted(stages))})")
-    if failures:
-        sys.exit(f"check_obs: {len(failures)} gate(s) failed")
-    print("check_obs OK")
+    gates.write_report("obs", report)
+    print(f"  ({len(stages)} distinct stages: {', '.join(sorted(stages))})")
+    gates.finish()
 
 
 if __name__ == "__main__":

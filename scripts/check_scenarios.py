@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Traffic-scenario CI gate: replay identity + per-scenario regression
+pins over two `loadgen` benchmark documents.
+
+Consumes two `loadgen --out` documents for the same seed — by convention
+one run with `--vworkers 4` and one with `--vworkers 1` — and enforces:
+
+1. **Replay identity / worker invariance** — every scenario's schedule,
+   response, and counter fingerprints are bit-identical across the two
+   runs: a fixed seed fully determines the traffic AND the serving
+   decisions, regardless of the pool width.
+2. **No surfaced failures** — zero `Response::Error` and zero degraded
+   responses in every scenario (no faults are injected here).
+3. **Sheds only where intended** — `slow_reader` must shed (its clients
+   are built to back up against the depth cap and deadline); every other
+   scenario must shed nothing.
+4. **Counter conservation** — per scenario: executed + sheds ==
+   arrivals; `server.requests` == executed and `server.shed` == sheds in
+   the registry snapshots; cache misses are fully answered
+   (`fused_serves + restore_serves + degraded_serves == misses`).
+5. **Zipf skew reaches the experts** — in the zipf-routed scenarios the
+   top-decile expert slots absorb >= `RESMOE_SCN_SKEW` (default 1.25x)
+   their proportional share of serves.
+6. **Schema parity** — every tenant snapshot in both documents exports
+   identical instrument names.
+
+Either document may instead be a `sim_loadgen.py` replica document
+(`"source": "python-sim"`); engine-only gates (responses/counters/cache/
+skew) are then skipped for the pairs involving it, but schedule
+fingerprints must STILL match — that is the Rust-vs-Python
+cross-implementation check.
+
+Writes the run's per-scenario stats + gate outcomes to
+`reports/BENCH_scenarios.json`. Exits non-zero on any failed gate.
+
+Usage: check_scenarios.py RUN_JSON REPLAY_JSON
+"""
+
+import sys
+
+from gatelib import GateSet, env_f, load_json, snapshot_schema
+
+EXPECTED = ("zipf09", "zipf12", "bursty", "mixed", "slow_reader",
+            "multi_tenant")
+
+
+def by_name(doc):
+    return {s["scenario"]: s for s in doc["scenarios"]}
+
+
+def tenant_counters(scenario):
+    """Summed registry counters across the scenario's tenant snapshots
+    (python-sim documents carry no snapshots -> empty)."""
+    total = {}
+    for td in scenario.get("tenants_detail") or []:
+        for name, v in td["snapshot"]["counters"].items():
+            total[name] = total.get(name, 0) + v
+    return total
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(f"usage: {sys.argv[0]} RUN_JSON REPLAY_JSON")
+    run = load_json(sys.argv[1])
+    replay = load_json(sys.argv[2])
+
+    gates = GateSet("check_scenarios")
+    gate = gates.gate
+
+    for doc, label in ((run, "run"), (replay, "replay")):
+        gate(f"{label} is a scenarios bench", doc.get("bench") == "scenarios",
+             f"bench={doc.get('bench')} source={doc.get('source')}")
+    gate("seeds match", run.get("seed") == replay.get("seed"),
+         f"run seed {run.get('seed')} vs replay seed {replay.get('seed')}")
+
+    rs, ps = by_name(run), by_name(replay)
+    gate("all canned scenarios present",
+         set(EXPECTED) <= set(rs) and set(EXPECTED) <= set(ps),
+         f"run has {sorted(rs)}")
+
+    sim_involved = "python-sim" in (run.get("source"), replay.get("source"))
+    skew_min = env_f("RESMOE_SCN_SKEW", 1.25)
+
+    for name in EXPECTED:
+        if name not in rs or name not in ps:
+            continue
+        a, b = rs[name], ps[name]
+
+        # 1. Replay identity. Schedule fingerprints must agree even across
+        # implementations; response/counter fingerprints only exist on
+        # engine-backed (rust-loadgen) documents.
+        fa, fb = a["fingerprints"], b["fingerprints"]
+        gate(f"{name}: schedule fingerprint identical",
+             fa["schedule"] == fb["schedule"],
+             f"{fa['schedule']} vs {fb['schedule']}")
+        for kind in ("responses", "counters"):
+            if fa[kind] is not None and fb[kind] is not None:
+                gate(f"{name}: {kind} fingerprint identical (vworkers "
+                     f"{a.get('vworkers')} vs {b.get('vworkers')})",
+                     fa[kind] == fb[kind], f"{fa[kind]} vs {fb[kind]}")
+
+        # 2-4. Regression pins on the primary run.
+        gate(f"{name}: no errors", a["errors"] == 0, f"{a['errors']} errors")
+        gate(f"{name}: no degraded responses", a["degraded"] == 0,
+             f"{a['degraded']} degraded")
+        sheds = a["shed_admission"] + a["shed_deadline"]
+        gate(f"{name}: conservation",
+             a["executed"] + sheds == a["arrivals"],
+             f"{a['executed']} executed + {sheds} shed == {a['arrivals']}")
+        if name == "slow_reader":
+            gate(f"{name}: sheds under backpressure",
+                 0 < sheds < a["arrivals"],
+                 f"{a['shed_admission']} admission + "
+                 f"{a['shed_deadline']} deadline")
+        else:
+            gate(f"{name}: no sheds intended", sheds == 0, f"{sheds} shed")
+
+        c = tenant_counters(a)
+        if c:
+            gate(f"{name}: server counters conserve",
+                 c.get("server.requests", 0) == a["executed"]
+                 and c.get("server.shed", 0) == sheds,
+                 f"requests {c.get('server.requests', 0)} "
+                 f"shed {c.get('server.shed', 0)}")
+            answered = (c.get("cache.fused_serves", 0)
+                        + c.get("cache.restore_serves", 0)
+                        + c.get("cache.degraded_serves", 0))
+            gate(f"{name}: cache misses fully answered",
+                 answered == c.get("cache.misses", 0),
+                 f"fused+restore+degraded {answered} vs "
+                 f"misses {c.get('cache.misses', 0)}")
+
+        # 5. Skew gate (engine-backed zipf scenarios only).
+        if name in ("zipf09", "zipf12") and a.get("skew"):
+            ratio = a["skew"]["ratio"]
+            gate(f"{name}: expert-slot skew >= {skew_min:g}x proportional",
+                 ratio >= skew_min,
+                 f"top decile {a['skew']['top_decile_share']:.1%} of serves "
+                 f"({ratio:.2f}x)")
+
+    # 6. Schema parity across every tenant snapshot of both documents.
+    schemas = set()
+    snaps = 0
+    for doc in (run, replay):
+        for s in doc["scenarios"]:
+            for td in s.get("tenants_detail") or []:
+                schemas.add(repr(snapshot_schema(td)))
+                snaps += 1
+    if snaps:
+        gate("instrument schema identical across all snapshots",
+             len(schemas) == 1, f"{len(schemas)} schema(s) over {snaps}")
+    elif not sim_involved:
+        gate("snapshots present", False,
+             "rust-loadgen documents carry no tenant snapshots")
+
+    report = {
+        "bench": "scenarios",
+        "source": run.get("source"),
+        "kernel": run.get("kernel"),
+        "seed": run.get("seed"),
+        "vworkers": run.get("vworkers"),
+        "scenarios": run["scenarios"],
+        "gates": {"skew_min": skew_min},
+    }
+    gates.write_report("scenarios", report)
+    gates.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -81,6 +81,26 @@ cargo run --release --quiet -- serve-packed --artifact "$PACK_DIR/model-q8.rmes"
 RESMOE_SIMD=0 cargo run --release --quiet -- serve-packed \
   --artifact "$PACK_DIR/model-q8.rmes" --requests 16 --cache-mb 1 --workers 2
 
+echo "== traffic scenarios: loadgen sweep + replay-identity gate =="
+# The seeded scenario harness over the quantized artifact (so the cache
+# decisions exercise the int8 residual tier): one sweep at --vworkers 4,
+# one replay at --vworkers 1 under the SAME seed. The gate
+# (scripts/check_scenarios.py) enforces bit-identical schedule/response/
+# counter fingerprints across the two (fixed seed + worker invariance),
+# zero errors/degraded, sheds only in slow_reader, counter conservation,
+# and super-proportional top-decile expert skew in the zipf scenarios
+# -> reports/BENCH_scenarios.json. BENCHMARKS.md then re-renders every
+# reports/BENCH_*.json produced above.
+cargo run --release --quiet -- loadgen --artifact "$PACK_DIR/model-q8.rmes" \
+  --scenario all --seed 7 --vworkers 4 --cache-mb 1 \
+  --out "$PACK_DIR/scenarios_run.json"
+cargo run --release --quiet -- loadgen --artifact "$PACK_DIR/model-q8.rmes" \
+  --scenario all --seed 7 --vworkers 1 --cache-mb 1 \
+  --out "$PACK_DIR/scenarios_replay.json"
+python3 scripts/check_scenarios.py \
+  "$PACK_DIR/scenarios_run.json" "$PACK_DIR/scenarios_replay.json"
+python3 scripts/benchmarks_md.py
+
 echo "== batching scheduler/parity simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_batching.py
 
@@ -95,5 +115,11 @@ python3 scripts/sim_obs.py
 
 echo "== fault-injection state-machine simulation (no-toolchain fallback validator) =="
 python3 scripts/sim_faults.py
+
+echo "== loadgen schedule/replay simulation (no-toolchain fallback validator) =="
+# Line-for-line Python replica of rust/src/loadgen/{scenario,schedule}.rs:
+# must reproduce the Rust schedules bit-for-bit (check_scenarios.py
+# cross-checks the fingerprints when both implementations ran).
+python3 scripts/sim_loadgen.py --no-report
 
 echo "CI OK"

@@ -1,0 +1,71 @@
+"""Shared gate plumbing for the CI checkers (`check_obs.py`,
+`check_faults.py`, `check_scenarios.py`).
+
+Every checker consumes one or more `--metrics-out` JSON documents, runs a
+list of named PASS/FAIL gates against them, writes a `reports/BENCH_*.json`
+outcome document, and exits non-zero when any gate failed. This module owns
+that plumbing — the checkers own only their gate logic.
+"""
+
+import json
+import os
+
+
+def env_f(name, default):
+    """Float-valued env knob with a default (the gate-threshold pattern)."""
+    return float(os.environ.get(name, default))
+
+
+def load_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def counters(doc):
+    """The counter map of a `--metrics-out` document's registry snapshot."""
+    return doc["snapshot"]["counters"]
+
+
+def snapshot_schema(doc, keys=("counters", "gauges", "histograms")):
+    """Sorted instrument names per snapshot section — two runs of the same
+    binary must export identical schemas (measuring must not depend on the
+    workload or on toggled subsystems)."""
+    return {k: sorted(doc["snapshot"][k]) for k in keys}
+
+
+class GateSet:
+    """Accumulates named PASS/FAIL gates, prints each verdict as it lands."""
+
+    def __init__(self, tool):
+        self.tool = tool
+        self.failures = []
+
+    def gate(self, name, ok, detail):
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}: {detail}")
+        if not ok:
+            self.failures.append(f"{name}: {detail}")
+        return ok
+
+    @property
+    def passed(self):
+        return not self.failures
+
+    def write_report(self, name, report):
+        """Write the outcome document to `reports/BENCH_<name>.json`,
+        stamping the shared failures/pass fields."""
+        report = dict(report)
+        report["failures"] = self.failures
+        report["pass"] = self.passed
+        os.makedirs("reports", exist_ok=True)
+        path = os.path.join("reports", f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"  report -> {path}")
+        return path
+
+    def finish(self):
+        """Exit non-zero when any gate failed (call last)."""
+        if self.failures:
+            raise SystemExit(f"{self.tool}: {len(self.failures)} gate(s) failed")
+        print(f"{self.tool} OK")

@@ -1,0 +1,542 @@
+#!/usr/bin/env python3
+"""Python replica of the loadgen virtual-clock schedule + replay
+(`rust/src/loadgen/{scenario,schedule}.rs`), ported line-for-line.
+
+Everything on the schedule path is integer-only — xoshiro256** drawn
+through integer quantile tables, saturating u64 arithmetic, nearest-rank
+percentiles — so this replica reproduces the Rust schedules and replays
+**bit-for-bit**: same events, same window compositions, same sheds, same
+FNV-1a fingerprints. A toolchain-less session can therefore validate the
+whole virtual-time story (and CI cross-checks the two implementations'
+schedule fingerprints when both are available).
+
+Checks (mirroring rust/tests + rust/src/loadgen unit tests):
+  1. fixed seed => bit-identical schedule fingerprint across two runs;
+     different seeds => different fingerprints (every scenario).
+  2. replay conservation: executed + admission sheds + deadline sheds
+     == arrivals; no request duplicated or lost (every scenario).
+  3. sheds only in slow_reader, which must shed but not shed everything.
+  4. zipf schedules put a super-proportional request share on the
+     top-decile profiles (>= 2.0x for s=0.9, >= 2.5x for s=1.2); the
+     bursty scenario forms both Full and Linger windows.
+  5. the virtual service pipe is serial per tenant and latencies are
+     exactly completion - arrival.
+
+Writes `reports/BENCH_scenarios.json` (source "python-sim"; the
+engine-only fields — response/counter fingerprints, cache decisions,
+expert-slot skew — are null) unless --no-report is given.
+
+Usage: sim_loadgen.py [--seed N] [--no-report]
+"""
+
+import json
+import os
+import sys
+
+MASK = (1 << 64) - 1
+
+# ------------------------------------------------------------------- RNG
+# xoshiro256** seeded via SplitMix64 (rust/src/util/rng.rs).
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        x = (s[1] * 5) & MASK
+        x = ((x << 7) | (x >> 57)) & MASK
+        result = (x * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & MASK
+        return result
+
+    def below(self, n):
+        """Lemire's method: high 64 bits of a 128-bit product."""
+        return (self.next_u64() * n) >> 64
+
+
+# ---------------------------------------------------------- fingerprints
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a(h, data):
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+def fnv1a_u64(h, v):
+    return fnv1a(h, (v & MASK).to_bytes(8, "little"))
+
+
+# ------------------------------------------------------------- scenarios
+# Mirrors rust/src/loadgen/scenario.rs verbatim (integer tables included).
+
+N_PROFILES = 32
+GEN_NEW_TOKENS = 4
+MIN_LEN = 4
+LEN_RANGE = 12
+
+EXP_Q1024 = [
+    8, 24, 41, 58, 75, 92, 110, 128, 146, 165, 184, 203, 223, 243, 263, 284,
+    305, 327, 349, 372, 395, 419, 444, 469, 494, 520, 547, 575, 603, 633,
+    663, 694, 726, 759, 793, 828, 865, 903, 942, 983, 1026, 1070, 1117,
+    1166, 1217, 1271, 1328, 1388, 1452, 1520, 1594, 1672, 1758, 1851, 1953,
+    2067, 2195, 2342, 2513, 2719, 2976, 3320, 3844, 4968,
+]
+
+ZIPF09 = [
+    1000000, 535887, 372041, 287175, 234924, 199372, 173545, 153893, 138415,
+    125893, 115544, 106841, 99415, 93000, 87401, 82469, 78090, 74175, 70652,
+    67464, 64566, 61918, 59490, 57255, 55189, 53275, 51496, 49838, 48288,
+    46837, 45475, 44194,
+]
+
+ZIPF12 = [
+    1000000, 435275, 267581, 189465, 144956, 116471, 96802, 82469, 71599,
+    63096, 56277, 50697, 46054, 42135, 38787, 35897, 33378, 31165, 29208,
+    27464, 25902, 24496, 23223, 22067, 21012, 20046, 19159, 18340, 17584,
+    16883, 16232, 15625,
+]
+
+
+def base_scenario(name):
+    return {
+        "name": name,
+        "requests": 96,
+        "arrivals": {"kind": "poisson", "mean_gap_us": 400},
+        "routing": {"kind": "uniform"},
+        "mix": (1, 0, 0),  # score, generate, classify
+        "max_queue": 0,
+        "deadline_us": 0,
+        "max_batch": 4,
+        "linger_us": 800,
+        "base_us": 300,
+        "per_token_us": 40,
+        "drain_gap_us": 0,
+        "tenants": 1,
+    }
+
+
+def canned_scenarios():
+    zipf09 = dict(base_scenario("zipf09"),
+                  routing={"kind": "zipf", "weights": ZIPF09})
+    zipf12 = dict(base_scenario("zipf12"),
+                  routing={"kind": "zipf", "weights": ZIPF12})
+    bursty = dict(base_scenario("bursty"),
+                  arrivals={"kind": "onoff", "burst_gap_us": 80,
+                            "idle_gap_us": 5000, "burst_len": 8,
+                            "ramp_permille": [250, 500, 1000, 2000, 1000, 500],
+                            "ramp_period": 16},
+                  max_batch=8, linger_us=1500)
+    mixed = dict(base_scenario("mixed"),
+                 arrivals={"kind": "poisson", "mean_gap_us": 500},
+                 mix=(2, 1, 1))
+    slow_reader = dict(base_scenario("slow_reader"),
+                       arrivals={"kind": "poisson", "mean_gap_us": 150},
+                       max_queue=64, deadline_us=20_000,
+                       max_batch=4, linger_us=500, drain_gap_us=4000)
+    multi_tenant = dict(base_scenario("multi_tenant"),
+                        arrivals={"kind": "poisson", "mean_gap_us": 300},
+                        routing={"kind": "zipf", "weights": ZIPF12},
+                        tenants=2)
+    return [zipf09, zipf12, bursty, mixed, slow_reader, multi_tenant]
+
+
+# --------------------------------------------------------------- schedule
+
+
+def scenario_rng(seed, name):
+    return Rng(seed ^ fnv1a(FNV_OFFSET, name.encode()))
+
+
+def draw_gap(rng, arrivals, i):
+    q = EXP_Q1024[rng.below(len(EXP_Q1024))]
+    if arrivals["kind"] == "poisson":
+        return arrivals["mean_gap_us"] * q // 1024
+    cycle = arrivals["burst_len"] + 1
+    base = (arrivals["burst_gap_us"] if i % cycle < arrivals["burst_len"]
+            else arrivals["idle_gap_us"])
+    ramp = arrivals["ramp_permille"]
+    step = (i // arrivals["ramp_period"]) % len(ramp)
+    intensity = max(ramp[step], 1)
+    return base * q // 1024 * 1000 // intensity
+
+
+def draw_profile(rng, routing):
+    if routing["kind"] == "uniform":
+        return rng.below(N_PROFILES)
+    weights = routing["weights"]
+    r = rng.below(sum(weights))
+    for i, w in enumerate(weights):
+        if r < w:
+            return i
+        r -= w
+    return len(weights) - 1
+
+
+def generate(sc, seed):
+    """Events as (t_us, profile, kind, len, tenant); draw order per event
+    is gap, profile, kind, len, [tenant] — identical to schedule.rs."""
+    rng = scenario_rng(seed, sc["name"])
+    score, gen, classify = sc["mix"]
+    kind_total = score + gen + classify
+    assert kind_total > 0
+    t = 0
+    events = []
+    for i in range(sc["requests"]):
+        t = min(t + draw_gap(rng, sc["arrivals"], i), MASK)
+        profile = draw_profile(rng, sc["routing"])
+        r = rng.below(kind_total)
+        kind = 0 if r < score else (1 if r < score + gen else 2)
+        length = MIN_LEN + rng.below(LEN_RANGE)
+        tenant = rng.below(sc["tenants"]) if sc["tenants"] > 1 else 0
+        events.append((t, profile, kind, length, tenant))
+    return events
+
+
+def event_tokens(ev):
+    return ev[3] + (GEN_NEW_TOKENS if ev[2] == 1 else 0)
+
+
+def schedule_fingerprint(events):
+    h = FNV_OFFSET
+    for ev in events:
+        for field in ev:
+            h = fnv1a_u64(h, field)
+    return h
+
+
+# ----------------------------------------------------------------- replay
+# Port of coordinator::Batcher (rust/src/coordinator/batcher.rs) and the
+# replay loop of rust/src/loadgen/schedule.rs.
+
+FULL, LINGER, CLOSED = "full", "linger", "closed"
+
+
+class Batcher:
+    def __init__(self, max_batch, linger_us):
+        self.max_batch = max_batch
+        self.linger_us = linger_us
+        self.pending = []  # (item, arrived_us) in arrival order
+        self.closed = False
+
+    def push(self, item, now_us):
+        self.pending.append((item, now_us))
+
+    def pending_len(self):
+        return len(self.pending)
+
+    def deadline_us(self):
+        if not self.pending:
+            return None
+        return min(self.pending[0][1] + self.linger_us, MASK)
+
+    def close(self):
+        self.closed = True
+
+    def poll(self, now_us):
+        if not self.pending:
+            return None
+        if len(self.pending) >= self.max_batch:
+            reason = FULL
+        elif self.closed:
+            reason = CLOSED
+        elif now_us >= self.deadline_us():
+            reason = LINGER
+        else:
+            return None
+        take = min(len(self.pending), self.max_batch)
+        oldest = self.pending[0][1]
+        items = [item for item, _ in self.pending[:take]]
+        del self.pending[:take]
+        return items, reason, max(now_us - oldest, 0)
+
+
+class TenantState:
+    def __init__(self, sc):
+        self.batcher = Batcher(sc["max_batch"], sc["linger_us"])
+        self.busy_until_us = 0
+        self.drain_cursor_us = 0
+        self.drains_us = []  # nondecreasing
+
+    def undrained_at(self, t):
+        # partition_point(|d| d <= t) on a nondecreasing list.
+        lo, hi = 0, len(self.drains_us)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.drains_us[mid] <= t:
+                lo = mid + 1
+            else:
+                hi = mid
+        return len(self.drains_us) - lo
+
+
+class Replay:
+    def __init__(self, n):
+        self.windows = []  # dicts: tenant/formed/reason/waited/live/shed/...
+        self.admit_shed = []
+        self.deadline_shed = []
+        self.latency_us = [None] * n
+        self.ttft_us = [None] * n
+
+
+def execute_window(sc, events, st, tenant, idxs, reason, formed_us,
+                   waited_us, out):
+    exec_start = max(formed_us, st.busy_until_us)
+    live, shed = [], []
+    for idx in idxs:
+        waited = max(exec_start - events[idx][0], 0)
+        if sc["deadline_us"] > 0 and waited > sc["deadline_us"]:
+            shed.append(idx)
+        else:
+            live.append(idx)
+    tokens = sum(event_tokens(events[i]) for i in live)
+    dur = 0 if not live else sc["base_us"] + sc["per_token_us"] * tokens
+    completion = exec_start + dur
+    st.busy_until_us = completion
+    for idx in live:
+        out.latency_us[idx] = completion - events[idx][0]
+        if events[idx][2] == 1:
+            out.ttft_us[idx] = exec_start + sc["base_us"] - events[idx][0]
+        drain = max(completion, st.drain_cursor_us)
+        st.drain_cursor_us = drain + sc["drain_gap_us"]
+        st.drains_us.append(drain)
+    out.deadline_shed.extend(shed)
+    out.windows.append({
+        "tenant": tenant, "formed_us": formed_us, "reason": reason,
+        "waited_us": waited_us, "live": live, "shed": shed,
+        "exec_start_us": exec_start, "completion_us": completion,
+        "dur_us": dur,
+    })
+
+
+def flush_due(sc, events, st, tenant, now_us, out):
+    while True:
+        dl = st.batcher.deadline_us()
+        if dl is None or dl > now_us:
+            break
+        w = st.batcher.poll(dl)
+        if w is None:
+            break
+        items, reason, waited = w
+        execute_window(sc, events, st, tenant, items, reason, dl, waited, out)
+
+
+def replay(sc, events):
+    out = Replay(len(events))
+    tenants = [TenantState(sc) for _ in range(max(sc["tenants"], 1))]
+    for i, ev in enumerate(events):
+        for t, st in enumerate(tenants):
+            flush_due(sc, events, st, t, ev[0], out)
+        st = tenants[ev[4]]
+        depth = st.batcher.pending_len() + st.undrained_at(ev[0])
+        if sc["max_queue"] > 0 and depth >= sc["max_queue"]:
+            out.admit_shed.append(i)
+            continue
+        st.batcher.push(i, ev[0])
+        w = st.batcher.poll(ev[0])
+        if w is not None:
+            items, reason, waited = w
+            execute_window(sc, events, st, ev[4], items, reason, ev[0],
+                           waited, out)
+    t_end = events[-1][0] if events else 0
+    for t, st in enumerate(tenants):
+        flush_due(sc, events, st, t, MASK, out)
+        st.batcher.close()
+        while True:
+            w = st.batcher.poll(t_end)
+            if w is None:
+                break
+            items, reason, waited = w
+            execute_window(sc, events, st, t, items, reason, t_end, waited,
+                           out)
+    return out
+
+
+def percentile_us(sample, q):
+    """Nearest-rank on the sorted sample: index (n-1)*q//100 (integer)."""
+    if not sample:
+        return None
+    v = sorted(sample)
+    return v[(len(v) - 1) * q // 100]
+
+
+# ----------------------------------------------------------------- checks
+
+
+def check(name, ok, detail=""):
+    print(f"  {'PASS' if ok else 'FAIL'}  {name}" + (f": {detail}" if detail else ""))
+    return ok
+
+
+def scenario_report(sc, seed, events, rp):
+    executed = sum(len(w["live"]) for w in rp.windows)
+    lat = [l for l in rp.latency_us if l is not None]
+    ttft = [l for l in rp.ttft_us if l is not None]
+    live_tokens = sum(event_tokens(events[i])
+                      for w in rp.windows for i in w["live"])
+    makespan = (max((w["completion_us"] for w in rp.windows), default=0)
+                - (events[0][0] if events else 0))
+    reasons = [w["reason"] for w in rp.windows]
+    nonempty = sum(1 for w in rp.windows if w["live"])
+
+    def ms(us):
+        return None if us is None else us / 1000.0
+
+    return {
+        "scenario": sc["name"],
+        "seed": seed,
+        "vworkers": None,
+        "tenants": max(sc["tenants"], 1),
+        "arrivals": len(events),
+        "executed": executed,
+        "shed_admission": len(rp.admit_shed),
+        "shed_deadline": len(rp.deadline_shed),
+        "errors": 0,
+        "degraded": 0,
+        "classify_disabled": None,
+        "virtual": {
+            "p50_ms": ms(percentile_us(lat, 50)),
+            "p99_ms": ms(percentile_us(lat, 99)),
+            "ttft_p50_ms": ms(percentile_us(ttft, 50)),
+            "ttft_p99_ms": ms(percentile_us(ttft, 99)),
+            "tok_s": live_tokens * 1e6 / makespan if makespan else 0.0,
+            "makespan_ms": makespan / 1000.0,
+            "windows": nonempty,
+            "windows_full": reasons.count(FULL),
+            "windows_linger": reasons.count(LINGER),
+            "windows_closed": reasons.count(CLOSED),
+            "mean_batch": executed / nonempty if nonempty else 0.0,
+        },
+        "pool": {"p50_ms": None, "p99_ms": None},
+        "cache": None,
+        "skew": None,
+        "fingerprints": {
+            "schedule": f"{schedule_fingerprint(events):016x}",
+            "responses": None,
+            "counters": None,
+        },
+    }
+
+
+def main():
+    seed = 7
+    write_report = True
+    args = sys.argv[1:]
+    while args:
+        a = args.pop(0)
+        if a == "--seed":
+            seed = int(args.pop(0))
+        elif a == "--no-report":
+            write_report = False
+        else:
+            sys.exit(f"usage: {sys.argv[0]} [--seed N] [--no-report]")
+
+    failures = 0
+    docs = []
+    for sc in canned_scenarios():
+        name = sc["name"]
+        events = generate(sc, seed)
+        fp = schedule_fingerprint(events)
+        fp2 = schedule_fingerprint(generate(sc, seed))
+        other = schedule_fingerprint(generate(sc, seed + 1))
+        failures += not check(f"{name}: schedule deterministic",
+                              fp == fp2, f"{fp:016x}")
+        failures += not check(f"{name}: schedule seed-sensitive", fp != other)
+
+        rp = replay(sc, events)
+        executed = sum(len(w["live"]) for w in rp.windows)
+        sheds = len(rp.admit_shed) + len(rp.deadline_shed)
+        failures += not check(
+            f"{name}: conservation",
+            executed + sheds == len(events),
+            f"{executed} executed + {sheds} shed == {len(events)} arrivals")
+        seen = set()
+        dup = False
+        for w in rp.windows:
+            for idx in w["live"] + w["shed"]:
+                dup = dup or idx in seen
+                seen.add(idx)
+        for idx in rp.admit_shed:
+            dup = dup or idx in seen
+            seen.add(idx)
+        failures += not check(f"{name}: no request duplicated or lost",
+                              not dup and len(seen) == len(events))
+        if name == "slow_reader":
+            failures += not check(f"{name}: sheds under backpressure",
+                                  0 < sheds < len(events), f"{sheds} shed")
+        else:
+            failures += not check(f"{name}: no sheds intended",
+                                  sheds == 0, f"{sheds} shed")
+        # Serial virtual pipe per tenant.
+        ok = True
+        for t in range(max(sc["tenants"], 1)):
+            last = 0
+            for w in (w for w in rp.windows if w["tenant"] == t):
+                ok = ok and w["exec_start_us"] >= max(w["formed_us"], last)
+                last = w["completion_us"]
+        failures += not check(f"{name}: virtual pipe serial per tenant", ok)
+        docs.append(scenario_report(sc, seed, events, rp))
+
+    # Schedule-level zipf skew (the cache-level half runs in
+    # check_scenarios.py against the Rust engine run).
+    for name, min_ratio in (("zipf09", 2.0), ("zipf12", 2.5)):
+        sc = next(s for s in canned_scenarios() if s["name"] == name)
+        events = generate(sc, seed)
+        counts = [0] * N_PROFILES
+        for ev in events:
+            counts[ev[1]] += 1
+        top = -(-N_PROFILES // 10)
+        share = sum(sorted(counts, reverse=True)[:top])
+        ratio = (share / len(events)) / (top / N_PROFILES)
+        failures += not check(
+            f"{name}: top-decile profile ratio >= {min_ratio}",
+            ratio >= min_ratio, f"{ratio:.2f}x proportional")
+
+    sc = next(s for s in canned_scenarios() if s["name"] == "bursty")
+    rp = replay(sc, generate(sc, seed))
+    reasons = {w["reason"] for w in rp.windows}
+    failures += not check("bursty: forms Full and Linger windows",
+                          FULL in reasons and LINGER in reasons,
+                          ",".join(sorted(reasons)))
+
+    if write_report:
+        os.makedirs("reports", exist_ok=True)
+        doc = {
+            "bench": "scenarios",
+            "source": "python-sim",
+            "kernel": None,
+            "seed": seed,
+            "vworkers": None,
+            "scenarios": docs,
+        }
+        with open("reports/BENCH_scenarios.json", "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print("  report -> reports/BENCH_scenarios.json (source python-sim)")
+
+    if failures:
+        sys.exit(f"sim_loadgen: {failures} check(s) failed")
+    print("sim_loadgen OK")
+
+
+if __name__ == "__main__":
+    main()
