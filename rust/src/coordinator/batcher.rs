@@ -25,7 +25,7 @@
 //! latency/throughput trade without a rebuild.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Window-forming policy: flush at `max_batch` requests, or once the
@@ -215,6 +215,254 @@ pub fn next_window<T>(
     }
 }
 
+/// Non-blocking sibling of [`next_window`] for a worker whose decode lane
+/// is active: drain whatever is already sitting in `rx`, then ask the
+/// state machine for a window at the current virtual time — never sleeps,
+/// so the decode batch keeps stepping between polls. Returns `None` both
+/// when no flush condition holds yet and when the batcher has drained
+/// after close; `batcher.is_closed() && batcher.is_idle()` distinguishes
+/// shutdown.
+pub fn poll_window<T>(
+    rx: &Receiver<T>,
+    batcher: &mut Batcher<T>,
+    epoch: Instant,
+) -> Option<Window<T>> {
+    loop {
+        match rx.try_recv() {
+            Ok(item) => {
+                let now = epoch.elapsed().as_micros() as u64;
+                batcher.push(item, now);
+            }
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                batcher.close();
+                break;
+            }
+        }
+    }
+    batcher.poll(epoch.elapsed().as_micros() as u64)
+}
+
+// --------------------------------------------------------------- decode
+
+/// Decode-lane policy: how many sequences one iteration-level decode
+/// batch may hold. `RESMOE_DECODE_BATCH` overrides (0 clamps to 1 — a
+/// zero-wide decode batch could never finish a request).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodePolicy {
+    pub max_batch: usize,
+}
+
+impl Default for DecodePolicy {
+    fn default() -> Self {
+        DecodePolicy { max_batch: 8 }
+    }
+}
+
+impl DecodePolicy {
+    pub fn from_env() -> DecodePolicy {
+        Self::from_lookup(|name| std::env::var(name).ok())
+    }
+
+    pub fn from_lookup(lookup: impl Fn(&str) -> Option<String>) -> DecodePolicy {
+        let d = DecodePolicy::default();
+        DecodePolicy {
+            max_batch: crate::util::env::knob_usize(&lookup, "RESMOE_DECODE_BATCH", d.max_batch)
+                .max(1),
+        }
+    }
+}
+
+/// One sequence inside the decode scheduler.
+#[derive(Debug)]
+struct DecodeSeq {
+    ticket: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    max_seq: usize,
+    /// Tokens fed through the model so far (prompt prefix + produced
+    /// continuation, minus the final produced token, which is never fed —
+    /// its logits would be discarded).
+    fed: usize,
+    produced: Vec<u32>,
+}
+
+/// A retired sequence handed back by [`DecodeScheduler::record`].
+#[derive(Debug)]
+pub struct DecodeFinished {
+    pub ticket: u64,
+    pub produced: Vec<u32>,
+    /// Tokens this sequence fed through the model (the conservation-law
+    /// operand: `fed == prompt_len + max(produced_len, 1) - 1` for every
+    /// sequence that retired by producing at least one token).
+    pub fed: usize,
+    pub prompt_len: usize,
+}
+
+/// The iteration-level decode scheduler: a **pure token-bookkeeping state
+/// machine** (no model, no I/O, no clock) deciding which token each
+/// active sequence feeds next and when a sequence retires. The server
+/// drives it: `plan` → run one batched model step over the planned tokens
+/// → `record` the resulting logits (greedy argmax happens here so batched
+/// and solo serving share one sampling rule) → reply to whatever
+/// `record` retired. Admission may happen between any two steps — that is
+/// the continuous-batching property; a joining sequence simply starts
+/// feeding its prompt while its neighbors are mid-generation.
+///
+/// Token semantics match the serial reference exactly: a sequence
+/// produces `min(max_new, max_seq - prompt_len)` tokens (greedy argmax
+/// with the same tie-break fold as [`crate::moe::Model::generate`]),
+/// except the final produced token is never fed
+/// back — the serial loop feeds it and discards the logits, a wasted step
+/// the batched lane skips.
+///
+/// Conservation laws (pinned by the relaxed-parity harness):
+/// `admitted == finished + active`, `tokens_fed == Σ fed` over all
+/// sequences, and every retired sequence satisfies the `fed` identity on
+/// [`DecodeFinished`].
+#[derive(Debug)]
+pub struct DecodeScheduler {
+    policy: DecodePolicy,
+    /// Active sequences in admission order — also the batch row order of
+    /// every `plan`/`record` pair, so step composition is deterministic.
+    seqs: Vec<DecodeSeq>,
+    next_ticket: u64,
+    admitted: u64,
+    finished: u64,
+    steps: u64,
+    tokens_fed: u64,
+}
+
+impl DecodeScheduler {
+    pub fn new(policy: DecodePolicy) -> DecodeScheduler {
+        DecodeScheduler {
+            policy,
+            seqs: Vec::new(),
+            next_ticket: 0,
+            admitted: 0,
+            finished: 0,
+            steps: 0,
+            tokens_fed: 0,
+        }
+    }
+
+    pub fn has_room(&self) -> bool {
+        self.seqs.len() < self.policy.max_batch
+    }
+
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn tokens_fed(&self) -> u64 {
+        self.tokens_fed
+    }
+
+    /// Admit a sequence; returns its ticket. The caller is responsible
+    /// for capacity (`has_room`) and for prompt validity (non-empty,
+    /// shorter than `max_seq`) — the server's shape check runs first.
+    pub fn admit(&mut self, prompt: Vec<u32>, max_new: usize, max_seq: usize) -> u64 {
+        debug_assert!(self.has_room(), "admit past decode batch cap");
+        debug_assert!(!prompt.is_empty() && prompt.len() < max_seq);
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.admitted += 1;
+        self.seqs.push(DecodeSeq {
+            ticket,
+            prompt,
+            max_new,
+            max_seq,
+            fed: 0,
+            produced: Vec::new(),
+        });
+        ticket
+    }
+
+    /// The next step's feed: `(ticket, token)` for every active sequence
+    /// in admission order. Empty when idle.
+    pub fn plan(&self) -> Vec<(u64, u32)> {
+        self.seqs
+            .iter()
+            .map(|s| {
+                let tok = if s.fed < s.prompt.len() {
+                    s.prompt[s.fed]
+                } else {
+                    // Invariant: past the prompt, the previous `record`
+                    // sampled a token that has not been fed yet.
+                    *s.produced.last().expect("sampled token pending feed")
+                };
+                (s.ticket, tok)
+            })
+            .collect()
+    }
+
+    /// Complete one step: `logits[i]` is the model output for the i-th
+    /// entry of the step's `plan`. Samples greedily where a sequence has
+    /// finished its prompt, retires sequences that hit `max_new`, a
+    /// `max_seq`-bounded budget, or produced their final token. Returns
+    /// the retired sequences, in admission order.
+    pub fn record(&mut self, logits: &[Vec<f32>]) -> Vec<DecodeFinished> {
+        assert_eq!(logits.len(), self.seqs.len(), "one logit row per active sequence");
+        self.steps += 1;
+        self.tokens_fed += logits.len() as u64;
+        let mut done = Vec::new();
+        let mut keep = Vec::with_capacity(self.seqs.len());
+        for (seq, lg) in std::mem::take(&mut self.seqs).into_iter().zip(logits) {
+            let mut s = seq;
+            s.fed += 1;
+            let mut retire = false;
+            if s.fed >= s.prompt.len() {
+                // Same produce condition as the serial loop: token k
+                // exists iff k < max_new and prompt_len + k < max_seq.
+                let k = s.produced.len();
+                if k < s.max_new && s.prompt.len() + k < s.max_seq {
+                    let next = lg
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as u32)
+                        .unwrap();
+                    s.produced.push(next);
+                    // The final token is sampled but never fed back.
+                    let k = s.produced.len();
+                    retire = k >= s.max_new || s.prompt.len() + k >= s.max_seq;
+                } else {
+                    retire = true;
+                }
+            }
+            if retire {
+                self.finished += 1;
+                done.push(DecodeFinished {
+                    ticket: s.ticket,
+                    produced: s.produced,
+                    fed: s.fed,
+                    prompt_len: s.prompt.len(),
+                });
+            } else {
+                keep.push(s);
+            }
+        }
+        self.seqs = keep;
+        done
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,6 +648,120 @@ mod tests {
         assert_eq!(b.deadline_us(), Some(u64::MAX));
     }
 
+    // ---------------------------------------------------- decode scheduler
+
+    /// Drive a scheduler against a fake "model" whose logits always argmax
+    /// to `fed_token + 1 (mod 32)` — enough to check token bookkeeping
+    /// without a transformer.
+    fn fake_logits(tok: u32) -> Vec<f32> {
+        let mut v = vec![0.0f32; 32];
+        v[((tok + 1) % 32) as usize] = 1.0;
+        v
+    }
+
+    #[test]
+    fn decode_scheduler_matches_serial_token_semantics() {
+        // produced == min(max_new, max_seq - prompt_len), greedy chain
+        // tok+1, and the fed identity holds on retire.
+        let mut s = DecodeScheduler::new(DecodePolicy { max_batch: 4 });
+        let t = s.admit(vec![5, 6], 3, 24);
+        let mut finished = Vec::new();
+        while !s.is_idle() {
+            let plan = s.plan();
+            let logits: Vec<Vec<f32>> = plan.iter().map(|&(_, tok)| fake_logits(tok)).collect();
+            finished.extend(s.record(&logits));
+        }
+        assert_eq!(finished.len(), 1);
+        let f = &finished[0];
+        assert_eq!(f.ticket, t);
+        assert_eq!(f.produced, vec![7, 8, 9], "greedy chain from last prompt token");
+        assert_eq!(f.fed, 2 + 3 - 1, "final produced token is never fed");
+        assert_eq!(s.admitted(), 1);
+        assert_eq!(s.finished(), 1);
+    }
+
+    #[test]
+    fn decode_scheduler_caps_at_max_seq() {
+        let mut s = DecodeScheduler::new(DecodePolicy { max_batch: 1 });
+        let prompt: Vec<u32> = (0..20).collect();
+        s.admit(prompt, 100, 24);
+        let mut finished = Vec::new();
+        while !s.is_idle() {
+            let logits: Vec<Vec<f32>> =
+                s.plan().iter().map(|&(_, tok)| fake_logits(tok)).collect();
+            finished.extend(s.record(&logits));
+        }
+        assert_eq!(finished[0].produced.len(), 4, "max_seq - prompt_len");
+    }
+
+    #[test]
+    fn decode_scheduler_interleaves_mid_decode_admissions() {
+        // The continuous-batching property: a sequence admitted while
+        // another is mid-generation joins the running batch, and both
+        // finish with exactly the tokens they would produce alone.
+        let mut s = DecodeScheduler::new(DecodePolicy { max_batch: 4 });
+        let a = s.admit(vec![1, 2, 3], 4, 32);
+        // Two steps of A alone (still feeding its prompt).
+        for _ in 0..2 {
+            let logits: Vec<Vec<f32>> =
+                s.plan().iter().map(|&(_, tok)| fake_logits(tok)).collect();
+            assert!(s.record(&logits).is_empty());
+        }
+        // B joins mid-flight.
+        let b = s.admit(vec![9], 2, 32);
+        assert_eq!(s.active(), 2);
+        let plan = s.plan();
+        assert_eq!(plan.len(), 2, "joined batch plans both sequences");
+        assert_eq!(plan[0], (a, 3), "A feeds its last prompt token");
+        assert_eq!(plan[1], (b, 9), "B starts its prompt in the same step");
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while !s.is_idle() {
+            let logits: Vec<Vec<f32>> =
+                s.plan().iter().map(|&(_, tok)| fake_logits(tok)).collect();
+            done.extend(s.record(&logits));
+            guard += 1;
+            assert!(guard < 32, "must terminate");
+        }
+        let fa = done.iter().find(|f| f.ticket == a).unwrap();
+        let fb = done.iter().find(|f| f.ticket == b).unwrap();
+        assert_eq!(fa.produced, vec![4, 5, 6, 7], "A unaffected by B joining");
+        assert_eq!(fb.produced, vec![10, 11]);
+        // Conservation: admitted == finished + active, tokens_fed == Σ fed.
+        assert_eq!(s.admitted(), 2);
+        assert_eq!(s.finished(), 2);
+        assert_eq!(s.active(), 0);
+        assert_eq!(s.tokens_fed(), (fa.fed + fb.fed) as u64);
+    }
+
+    #[test]
+    fn decode_scheduler_zero_max_new_retires_after_prompt() {
+        let mut s = DecodeScheduler::new(DecodePolicy { max_batch: 1 });
+        s.admit(vec![3, 4], 0, 32);
+        let mut done = Vec::new();
+        while !s.is_idle() {
+            let logits: Vec<Vec<f32>> =
+                s.plan().iter().map(|&(_, tok)| fake_logits(tok)).collect();
+            done.extend(s.record(&logits));
+        }
+        assert_eq!(done[0].produced, Vec::<u32>::new());
+        assert_eq!(done[0].fed, 2, "prompt still fully fed");
+    }
+
+    #[test]
+    fn decode_policy_from_lookup_clamps() {
+        let p = DecodePolicy::from_lookup(|n| {
+            (n == "RESMOE_DECODE_BATCH").then(|| "16".to_string())
+        });
+        assert_eq!(p.max_batch, 16);
+        let p = DecodePolicy::from_lookup(|n| {
+            (n == "RESMOE_DECODE_BATCH").then(|| "0".to_string())
+        });
+        assert_eq!(p.max_batch, 1, "zero-wide decode batch clamps to 1");
+        let p = DecodePolicy::from_lookup(|_| None);
+        assert_eq!(p.max_batch, DecodePolicy::default().max_batch);
+    }
+
     // ------------------------------------------------- wall-clock driver
 
     #[test]
@@ -452,6 +814,32 @@ mod tests {
         let w = next_window(&rx, &mut b, Instant::now()).unwrap();
         sender.join().unwrap();
         assert!(w.items.len() >= 3, "items={:?}", w.items);
+    }
+
+    #[test]
+    fn poll_window_never_blocks_and_drains_ready_items() {
+        let (tx, rx) = channel();
+        let epoch = Instant::now();
+        let mut b = Batcher::new(policy(2, 1_000_000));
+        // Empty channel: returns immediately with nothing.
+        assert!(poll_window(&rx, &mut b, epoch).is_none());
+        assert!(!b.is_closed());
+        // Two queued items fill a window without waiting on linger.
+        tx.send(1u32).unwrap();
+        tx.send(2).unwrap();
+        let w = poll_window(&rx, &mut b, epoch).expect("full window");
+        assert_eq!(w.items, vec![1, 2]);
+        assert_eq!(w.reason, FlushReason::Full);
+        // One pending item below max: stays pending (no blocking, no
+        // premature flush), then drains on disconnect.
+        tx.send(3).unwrap();
+        assert!(poll_window(&rx, &mut b, epoch).is_none());
+        assert_eq!(b.pending_len(), 1);
+        drop(tx);
+        let w = poll_window(&rx, &mut b, epoch).expect("close drains");
+        assert_eq!(w.items, vec![3]);
+        assert_eq!(w.reason, FlushReason::Closed);
+        assert!(b.is_closed() && b.is_idle());
     }
 
     #[test]

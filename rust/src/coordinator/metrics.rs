@@ -325,6 +325,109 @@ impl BatchCounters {
     }
 }
 
+/// Point-in-time decode-lane snapshot: how the iteration-level decode
+/// batch formed (admissions, mid-flight joins, step occupancy) and how the
+/// KV page pool behaved (leases, refusals, serial fallbacks).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct DecodeMetrics {
+    /// Batched decode model steps executed (one layer-major forward over
+    /// all active sequences).
+    pub steps: u64,
+    /// Tokens fed across all steps (Σ step batch sizes).
+    pub tokens: u64,
+    /// Sequences admitted into a decode batch.
+    pub seqs: u64,
+    /// Sequences that joined while at least one other sequence was
+    /// mid-generation — the continuous-batching admissions.
+    pub joins: u64,
+    /// KV page-pool leases granted / refused. A refusal never fails the
+    /// request; it falls back to the serial decode path (`solo_fallbacks`).
+    pub kv_leases: u64,
+    pub kv_refusals: u64,
+    pub solo_fallbacks: u64,
+}
+
+impl DecodeMetrics {
+    /// Mean sequences per decode step — the decode analog of window
+    /// occupancy; the throughput multiplier over serial decode.
+    pub fn mean_step_batch(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.steps as f64
+        }
+    }
+}
+
+/// Lock-free `decode.*` twins of [`DecodeMetrics`], registered
+/// unconditionally at engine construction so every tenant snapshot exports
+/// the same instrument schema whether or not decode traffic arrived.
+pub struct DecodeCounters {
+    pub steps: Arc<Counter>,
+    pub tokens: Arc<Counter>,
+    pub seqs: Arc<Counter>,
+    pub joins: Arc<Counter>,
+    pub kv_leases: Arc<Counter>,
+    pub kv_refusals: Arc<Counter>,
+    pub solo_fallbacks: Arc<Counter>,
+    /// Step batch-size histogram (sequences per batched decode step).
+    pub step_batch: Arc<Histogram>,
+}
+
+impl DecodeCounters {
+    pub fn new(reg: &Registry) -> DecodeCounters {
+        DecodeCounters {
+            steps: reg.counter("decode.steps"),
+            tokens: reg.counter("decode.tokens"),
+            seqs: reg.counter("decode.seqs"),
+            joins: reg.counter("decode.joins"),
+            kv_leases: reg.counter("decode.kv_leases"),
+            kv_refusals: reg.counter("decode.kv_refusals"),
+            solo_fallbacks: reg.counter("decode.solo_fallbacks"),
+            step_batch: reg.histogram("decode.step_batch"),
+        }
+    }
+
+    /// Record one batched decode step over `batch` active sequences.
+    pub fn record_step(&self, batch: usize) {
+        self.steps.inc();
+        self.tokens.add(batch as u64);
+        self.step_batch.record(batch as u64);
+    }
+
+    pub fn snapshot(&self) -> DecodeMetrics {
+        DecodeMetrics {
+            steps: self.steps.get(),
+            tokens: self.tokens.get(),
+            seqs: self.seqs.get(),
+            joins: self.joins.get(),
+            kv_leases: self.kv_leases.get(),
+            kv_refusals: self.kv_refusals.get(),
+            solo_fallbacks: self.solo_fallbacks.get(),
+        }
+    }
+}
+
+/// One-line decode-lane story. Separate from [`batch_summary`] so the
+/// golden prefill-batching format stays byte-stable; quiet segments only
+/// appear once the lane has actually seen traffic.
+pub fn decode_summary(dm: &DecodeMetrics) -> String {
+    let mut line = format!(
+        "decode: {} steps | {:.2} mean step batch | {} seqs ({} joins)",
+        dm.steps,
+        dm.mean_step_batch(),
+        dm.seqs,
+        dm.joins,
+    );
+    if dm.kv_leases + dm.kv_refusals > 0 {
+        line.push_str(&format!(
+            " | kv: {} leases, {} refusals, {} solo fallbacks",
+            dm.kv_leases, dm.kv_refusals, dm.solo_fallbacks
+        ));
+    }
+    line
+}
+
 /// One-line continuous-batching story — the `cache_summary` analog for the
 /// window scheduler: occupancy, flush split, linger, and per-expert row
 /// fusion.
@@ -524,6 +627,36 @@ mod tests {
         assert_eq!(snap.counter("batch.windows"), Some(3));
         assert_eq!(snap.counter("batch.occupancy.b3_4"), Some(1));
         assert_eq!(snap.counter("batch.rows_per_expert.gt8"), Some(1));
+    }
+
+    #[test]
+    fn decode_counters_snapshot_and_summary() {
+        let reg = Registry::new();
+        let dc = DecodeCounters::new(&reg);
+        // Quiet lane: zero everything, no kv segment.
+        let quiet = decode_summary(&dc.snapshot());
+        assert_eq!(quiet, "decode: 0 steps | 0.00 mean step batch | 0 seqs (0 joins)");
+        dc.seqs.add(3);
+        dc.joins.inc();
+        dc.record_step(2);
+        dc.record_step(3);
+        dc.record_step(3);
+        dc.kv_leases.add(3);
+        dc.kv_refusals.inc();
+        dc.solo_fallbacks.inc();
+        let dm = dc.snapshot();
+        assert_eq!(dm.steps, 3);
+        assert_eq!(dm.tokens, 8);
+        assert!((dm.mean_step_batch() - 8.0 / 3.0).abs() < 1e-9);
+        let busy = decode_summary(&dm);
+        assert!(busy.contains("3 steps"));
+        assert!(busy.contains("3 seqs (1 joins)"));
+        assert!(busy.contains("kv: 3 leases, 1 refusals, 1 solo fallbacks"));
+        // Addressable through the registry under the decode.* names.
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("decode.steps"), Some(3));
+        assert_eq!(snap.counter("decode.tokens"), Some(8));
+        assert_eq!(snap.histogram("decode.step_batch").unwrap().count, 3);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! L3 serving coordinator: cross-request continuous batching (admission
-//! windows, one fused forward per window, bit-identical to serial), a
-//! thread-pool server, and the restored-expert LRU cache that turns the
-//! paper's Algorithm 2 into a first-class runtime feature ("barycenter
-//! resident, residuals restored on router demand under a byte budget").
+//! windows, one fused forward per window, bit-identical to serial for
+//! prefill), iteration-level decode batching over a paged KV cache
+//! (relaxed parity — see `server.rs` module docs), a thread-pool server,
+//! and the restored-expert LRU cache that turns the paper's Algorithm 2
+//! into a first-class runtime feature ("barycenter resident, residuals
+//! restored on router demand under a byte budget").
 
 pub mod batcher;
 pub mod cache;
@@ -10,7 +12,13 @@ pub mod demo;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{next_window, BatchPolicy, Batcher, FlushReason, Window};
+pub use batcher::{
+    next_window, poll_window, BatchPolicy, Batcher, DecodeFinished, DecodePolicy,
+    DecodeScheduler, FlushReason, Window,
+};
 pub use cache::{classify_error, CacheMetrics, ErrorClass, ExpertCache, Serve};
-pub use metrics::{batch_summary, cache_summary, BatchMetrics, ServerMetrics, ServerStats};
+pub use metrics::{
+    batch_summary, cache_summary, decode_summary, BatchMetrics, DecodeMetrics, ServerMetrics,
+    ServerStats,
+};
 pub use server::{Engine, Request, Response, Server, ServerConfig};

@@ -17,13 +17,14 @@
 //! once for every concurrent client, and each expert materializes at most
 //! once per window.
 //!
-//! **Bit-for-bit parity**: a batched window produces responses byte-
-//! identical to serving the same requests one-at-a-time, under every cache
-//! budget. Two ingredients: every per-row kernel (norms, routing, expert
-//! matmuls, combine, lm_head) is row-independent, and the cache replays
-//! per-request serve decisions in serial (request-major) order against
-//! per-block-partitioned state (see `cache.rs`), so the decision sequence
-//! each block sees is literally the serial one.
+//! **Bit-for-bit parity (prefill)**: a batched window of prefill-shaped
+//! requests produces responses byte-identical to serving the same
+//! requests one-at-a-time, under every cache budget. Two ingredients:
+//! every per-row kernel (norms, routing, expert matmuls, combine,
+//! lm_head) is row-independent, and the cache replays per-request serve
+//! decisions in serial (request-major) order against per-block-
+//! partitioned state (see `cache.rs`), so the decision sequence each
+//! block sees is literally the serial one.
 //! `tests/prop_batching.rs` pins the property across request mixes,
 //! methods, rates, budgets, and both engine modes. One caveat: the
 //! guarantee is about the *request-driven* serve sequence, so it requires
@@ -32,15 +33,38 @@
 //! reference can reproduce, batched or not ([`Engine::disable_prefetch`]
 //! is the determinism knob; the parity tests use it on both sides).
 //!
-//! Sequential requests (Generate) run one-at-a-time at their admission
-//! position — decode steps share the warm cache but not a forward. Error
-//! semantics under batching match serial serving exactly: a store or
+//! # Decode batching (relaxed parity)
+//!
+//! Since PR 10, runs of consecutive Generate requests decode TOGETHER:
+//! an iteration-level scheduler ([`super::batcher::DecodeScheduler`])
+//! feeds one layer-major forward per step over every active sequence
+//! ([`Model::decode_step_batch_hooked`]), admitting later sequences into
+//! the running batch as earlier ones retire. Each sequence reserves its
+//! worst-case KV footprint from a shared page pool before joining
+//! ([`crate::moe::KvPagePool`]); a refused lease falls back to the solo
+//! path — reservations are never revoked from a live sequence.
+//!
+//! Decode batching carries a RELAXED parity contract, not the prefill
+//! theorem: per-row kernels are still bit-identical, but interleaving
+//! sequences step-major changes the ORDER the stateful cost model sees
+//! serves in (and the whole window amortizes `RESTORE_AMORTIZE_TOKENS`),
+//! so a slot can be answered fused where the serial reference restored,
+//! and logits then differ at float-summation-order magnitude. What holds
+//! instead, pinned by `tests/prop_decode.rs`: greedy token sequences
+//! equal the sequential reference under roomy budgets (decisions
+//! coincide ⇒ bit parity), per-token logits stay within a tight relative
+//! error under thrashing budgets, and the decision-metric conservation
+//! laws survive every schedule. `RESMOE_DECODE_BATCH=1` (or
+//! [`Engine::set_decode_batch`]) disables the lane and restores the
+//! pre-PR-10 serial semantics exactly.
+//!
+//! Error semantics under batching match serial serving: a store or
 //! integrity failure mid-window is pinned on the requests whose rows
 //! routed to the failing expert (each answers `Response::Error` with the
 //! same message serial serving would produce), and every other request in
-//! the window still gets its bit-exact answer. When the failing expert's
-//! block has a resident barycenter center, the cache degrades the serve
-//! instead of failing it and the affected responses come back wrapped in
+//! the window still gets its answer. When the failing expert's block has
+//! a resident barycenter center, the cache degrades the serve instead of
+//! failing it and the affected responses come back wrapped in
 //! [`Response::Degraded`] — approximate, never silent.
 //!
 //! # Observability
@@ -55,20 +79,24 @@
 //! and counter sequences are bit-for-bit identical: observation never
 //! feeds back into serving decisions.
 
-use super::batcher::{next_window, BatchPolicy, Batcher, FlushReason};
+use super::batcher::{
+    next_window, BatchPolicy, Batcher, DecodePolicy, DecodeScheduler, FlushReason,
+};
 use super::cache::{CacheMetrics, ExpertCache, Serve};
-use super::metrics::{BatchCounters, BatchMetrics, ServerMetrics, ServerStats};
+use super::metrics::{
+    BatchCounters, BatchMetrics, DecodeCounters, DecodeMetrics, ServerMetrics, ServerStats,
+};
 use crate::compress::{center_shared_act, fused_forward_expert, CompressedLayer, SharedAct};
 use crate::moe::{
-    combine_slot_output, gather_rows, group_parts, route_dispatch_combine, route_groups, Ffn,
-    FfnHook, Model,
+    combine_slot_output, gather_rows, group_parts, kv_lease_bytes, route_dispatch_combine,
+    route_groups, Ffn, FfnHook, KvCache, KvLease, KvPagePool, Model,
 };
 use crate::obs::{trace, MetricsSnapshot, Registry};
 use crate::store::{ExpertStore, Prefetcher};
 use crate::tensor::{kernel_label, Matrix};
 use crate::util::stats::logsumexp;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -203,8 +231,9 @@ enum Shape {
     /// One transformer forward over the token rows — batchable across
     /// requests (Score/Classify).
     Prefill,
-    /// Token-by-token decode (Generate) — runs alone at its admission
-    /// position.
+    /// Token-by-token decode (Generate) — joins the window's batched
+    /// decode run, or runs alone when decode batching is disabled
+    /// (Metrics is Sequential too and always answers solo).
     Sequential,
     /// Fails validation; answered without touching the engine.
     Invalid(String),
@@ -229,6 +258,18 @@ pub struct Engine {
     obs: Arc<Registry>,
     /// Continuous-batching counters (lock-free, shared across clones).
     batch: Arc<BatchCounters>,
+    /// Decode-lane counters (`decode.*`) — registered unconditionally so
+    /// every tenant snapshot exports the same instrument schema.
+    decode: Arc<DecodeCounters>,
+    /// KV page pool decode sequences lease from: the cache's (one extra
+    /// per-block share of the cache budget) or an effectively-unbounded
+    /// pool for dense engines.
+    kv_pool: Arc<KvPagePool>,
+    /// Max sequences per batched decode step (`RESMOE_DECODE_BATCH`);
+    /// <= 1 disables decode batching — every Generate runs through the
+    /// sequential reference path, restoring pre-PR-10 bit-for-bit window
+    /// parity (the configuration `prop_batching` pins).
+    decode_max: usize,
     /// Optional tenant tag (multi-tenant deployments: several engines over
     /// one shared store). Tags exported snapshots; no serving behavior.
     tenant: Option<Arc<str>>,
@@ -239,6 +280,7 @@ impl Engine {
     pub fn dense(model: Model) -> Engine {
         let obs = Arc::new(Registry::new());
         let batch = Arc::new(BatchCounters::new(&obs));
+        let decode = Arc::new(DecodeCounters::new(&obs));
         Engine {
             model: Arc::new(model),
             cache: None,
@@ -246,6 +288,11 @@ impl Engine {
             next_block: Arc::new(HashMap::new()),
             obs,
             batch,
+            decode,
+            // No cache budget to charge KV against — cap far below the
+            // `cur + bytes` overflow line but above any real demand.
+            kv_pool: Arc::new(KvPagePool::new(usize::MAX / 2)),
+            decode_max: DecodePolicy::from_env().max_batch,
             tenant: None,
         }
     }
@@ -262,6 +309,8 @@ impl Engine {
         let cache = Arc::new(ExpertCache::new(layers, cache_budget_bytes));
         let obs = cache.registry().clone();
         let batch = Arc::new(BatchCounters::new(&obs));
+        let decode = Arc::new(DecodeCounters::new(&obs));
+        let kv_pool = cache.kv_pool().clone();
         Engine {
             model: Arc::new(stripped),
             cache: Some(cache),
@@ -269,6 +318,9 @@ impl Engine {
             next_block: Arc::new(HashMap::new()),
             obs,
             batch,
+            decode,
+            kv_pool,
+            decode_max: DecodePolicy::from_env().max_batch,
             tenant: None,
         }
     }
@@ -302,6 +354,8 @@ impl Engine {
         let prefetcher = Arc::new(Prefetcher::new(cache.clone(), store));
         let obs = cache.registry().clone();
         let batch = Arc::new(BatchCounters::new(&obs));
+        let decode = Arc::new(DecodeCounters::new(&obs));
+        let kv_pool = cache.kv_pool().clone();
         Ok(Engine {
             model: Arc::new(model),
             cache: Some(cache),
@@ -309,6 +363,9 @@ impl Engine {
             next_block: Arc::new(next_block),
             obs,
             batch,
+            decode,
+            kv_pool,
+            decode_max: DecodePolicy::from_env().max_batch,
             tenant: None,
         })
     }
@@ -375,6 +432,28 @@ impl Engine {
     /// [`super::metrics::batch_summary`]).
     pub fn batch_metrics(&self) -> BatchMetrics {
         self.batch.snapshot()
+    }
+
+    /// Snapshot of the decode-lane counters (see
+    /// [`super::metrics::decode_summary`]).
+    pub fn decode_metrics(&self) -> DecodeMetrics {
+        self.decode.snapshot()
+    }
+
+    /// Set the max sequences per batched decode step on THIS engine handle
+    /// (clones made earlier keep theirs). `n <= 1` disables decode
+    /// batching entirely: every Generate runs the sequential reference
+    /// path and windows regain pre-PR-10 bit-for-bit parity — the
+    /// determinism knob `prop_batching` uses, mirroring
+    /// [`Engine::disable_prefetch`].
+    pub fn set_decode_batch(&mut self, n: usize) {
+        self.decode_max = n.max(1);
+    }
+
+    /// The KV page pool decode sequences lease from (the cache's pool, or
+    /// a dense engine's unbounded stand-in).
+    pub fn kv_pool(&self) -> &Arc<KvPagePool> {
+        &self.kv_pool
     }
 
     /// Record a flushed window's reason + linger wait on the batch
@@ -565,13 +644,13 @@ impl Engine {
         }
     }
 
-    /// Execute one batch window: responses are **byte-identical** to
-    /// calling [`Engine::handle`] on each request in order (see the module
-    /// docs for why). Consecutive prefill-shaped requests (Score/Classify)
-    /// share one concatenated transformer forward; sequential requests
-    /// (Generate) run alone at their admission position; invalid requests
-    /// answer immediately and — since they never touch the cache — do not
-    /// split a prefill run.
+    /// Execute one batch window. Consecutive prefill-shaped requests
+    /// (Score/Classify) share one concatenated transformer forward with
+    /// responses **byte-identical** to calling [`Engine::handle`] on each
+    /// in order; consecutive Generate requests share one batched decode
+    /// loop under the relaxed parity contract (module docs); invalid
+    /// requests answer immediately and — since they never touch the
+    /// cache — split neither kind of run.
     pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Response> {
         self.handle_batch_traced(reqs, None)
     }
@@ -611,21 +690,52 @@ impl Engine {
             self.batch.record_window(reqs.len());
         }
         let mut out: Vec<Option<Response>> = vec![None; reqs.len()];
-        let mut run: Vec<usize> = Vec::new();
+        // Two run accumulators: consecutive prefill-shaped requests share
+        // one concatenated forward, consecutive Generates share one
+        // batched decode loop. A request of the other shape (or a
+        // non-Generate sequential request like Metrics) flushes the
+        // opposing run, so both runs execute at their first member's
+        // admission position and responses keep window order.
+        let mut prefill: Vec<usize> = Vec::new();
+        let mut decode: Vec<usize> = Vec::new();
         for i in 0..=reqs.len() {
             let shape = (i < reqs.len()).then(|| self.shape(&reqs[i]));
             match shape {
-                Some(Shape::Prefill) => run.push(i),
+                // Invalid requests never touch the engine, so they split
+                // neither run.
                 Some(Shape::Invalid(msg)) => {
                     out[i] = Some(Response::Error(msg));
                     self.batch.solo_requests.inc();
                 }
-                Some(Shape::Sequential) | None => {
-                    if !run.is_empty() {
-                        self.execute_prefill_run(reqs, &run, &mut out);
-                        run.clear();
+                Some(Shape::Prefill) => {
+                    if !decode.is_empty() {
+                        self.execute_decode_run(reqs, &decode, &mut out);
+                        decode.clear();
                     }
-                    if matches!(shape, Some(Shape::Sequential)) {
+                    prefill.push(i);
+                }
+                Some(Shape::Sequential)
+                    if matches!(&reqs[i], Request::Generate { .. }) =>
+                {
+                    if !prefill.is_empty() {
+                        self.execute_prefill_run(reqs, &prefill, &mut out);
+                        prefill.clear();
+                    }
+                    decode.push(i);
+                }
+                // Non-Generate sequential requests (Metrics) flush both
+                // runs and answer solo at their admission position; the
+                // end-of-window sentinel flushes whatever remains.
+                Some(Shape::Sequential) | None => {
+                    if !decode.is_empty() {
+                        self.execute_decode_run(reqs, &decode, &mut out);
+                        decode.clear();
+                    }
+                    if !prefill.is_empty() {
+                        self.execute_prefill_run(reqs, &prefill, &mut out);
+                        prefill.clear();
+                    }
+                    if i < reqs.len() {
                         out[i] = Some(self.handle(&reqs[i]));
                         self.batch.solo_requests.inc();
                     }
@@ -723,6 +833,208 @@ impl Engine {
                 });
             }
         }
+    }
+
+    /// Iteration-level continuous batching over a run of validated
+    /// Generate requests: one layer-major forward per decode step over
+    /// every active sequence ([`Model::decode_step_batch_hooked`]), with
+    /// sequences admitted into the running batch as earlier ones retire —
+    /// the decode analog of [`Engine::execute_prefill_run`].
+    ///
+    /// Parity is the RELAXED contract (module docs): each sequence's
+    /// per-row kernels are bit-identical to its solo decode, but the
+    /// interleaved serve order means the stateful cost model can answer a
+    /// slot from a different arm (fused vs dense) than the serial
+    /// reference would, so outputs agree bitwise only when the decisions
+    /// do (e.g. roomy budgets). `tests/prop_decode.rs` pins the contract.
+    ///
+    /// KV admission is reservation-only: a sequence enters the batch only
+    /// after leasing its worst-case page footprint from the shared
+    /// [`KvPagePool`]; a refused lease falls back to the sequential path
+    /// for that request (guaranteed progress) and NOTHING is ever revoked
+    /// from a live sequence.
+    fn execute_decode_run(
+        &self,
+        reqs: &[Request],
+        idxs: &[usize],
+        out: &mut [Option<Response>],
+    ) {
+        if idxs.len() == 1 || self.decode_max <= 1 {
+            // Nothing to batch (or batching disabled): the sequential
+            // reference path, bit-identical to pre-batching serving.
+            for &i in idxs {
+                out[i] = Some(self.handle(&reqs[i]));
+                self.batch.solo_requests.inc();
+            }
+            return;
+        }
+        let _s = trace::span("decode.batch");
+        let mut driver = DecodeDriver::new(self);
+        let mut pending: VecDeque<usize> = idxs.iter().copied().collect();
+        loop {
+            // Admit while the batch has room — on the first pass this
+            // fills the batch, afterwards it backfills slots freed by
+            // retired sequences (the continuous-batching joins).
+            while driver.has_room() {
+                let Some(i) = pending.pop_front() else { break };
+                match driver.admit(i, &reqs[i]) {
+                    Some(resp) => {
+                        self.batch.solo_requests.inc();
+                        out[i] = Some(resp);
+                    }
+                    None => self.batch.batched_requests.inc(),
+                }
+            }
+            let finished = driver.step();
+            if finished.is_empty() && driver.is_idle() && pending.is_empty() {
+                break;
+            }
+            for (i, resp) in finished {
+                out[i] = Some(resp);
+            }
+        }
+    }
+}
+
+/// One active sequence of a [`DecodeDriver`]: its KV cache stack, the KV
+/// pool lease reserving its worst-case page footprint, and the fault
+/// attribution accumulated across its steps.
+struct LiveSeq {
+    key: usize,
+    caches: Vec<KvCache>,
+    _lease: Option<KvLease>,
+    error: Option<String>,
+    degraded: bool,
+}
+
+/// The iteration-level decode loop, factored so two callers share one
+/// implementation: [`Engine::execute_decode_run`] (batching the Generate
+/// run of a single window) and the live server's per-worker decode lane
+/// (admitting Generates from LATER windows into the running batch between
+/// steps — cross-window continuous batching). Sequences are keyed by a
+/// caller-chosen `usize` (request index / job slot) that comes back with
+/// the finished response.
+pub(crate) struct DecodeDriver<'e> {
+    engine: &'e Engine,
+    sched: DecodeScheduler,
+    live: HashMap<u64, LiveSeq>,
+}
+
+impl<'e> DecodeDriver<'e> {
+    pub(crate) fn new(engine: &'e Engine) -> DecodeDriver<'e> {
+        DecodeDriver {
+            engine,
+            sched: DecodeScheduler::new(DecodePolicy { max_batch: engine.decode_max }),
+            live: HashMap::new(),
+        }
+    }
+
+    pub(crate) fn has_room(&self) -> bool {
+        self.sched.has_room()
+    }
+
+    pub(crate) fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    /// Admit a VALIDATED Generate request into the batch under `key`.
+    /// Returns `None` when the sequence joined; `Some(response)` when the
+    /// KV pool refused the lease and the request was served through the
+    /// sequential path instead (the caller answers it immediately —
+    /// guaranteed progress, and nothing is ever revoked from a live
+    /// sequence to make room).
+    pub(crate) fn admit(&mut self, key: usize, req: &Request) -> Option<Response> {
+        debug_assert!(self.has_room(), "admit past decode batch cap");
+        let Request::Generate { prompt, max_new } = req else {
+            unreachable!("decode lanes hold only Generate requests")
+        };
+        let cfg = &self.engine.model.cfg;
+        let want = (prompt.len() + max_new).min(cfg.max_seq);
+        let lease = match self
+            .engine
+            .kv_pool
+            .lease(kv_lease_bytes(want, cfg.d_model, cfg.n_layers))
+        {
+            Some(l) => {
+                self.engine.decode.kv_leases.inc();
+                Some(l)
+            }
+            None => {
+                self.engine.decode.kv_refusals.inc();
+                self.engine.decode.solo_fallbacks.inc();
+                return Some(self.engine.handle(req));
+            }
+        };
+        if !self.sched.is_idle() {
+            self.engine.decode.joins.inc();
+        }
+        self.engine.decode.seqs.inc();
+        let ticket = self.sched.admit(prompt.clone(), *max_new, cfg.max_seq);
+        self.live.insert(
+            ticket,
+            LiveSeq {
+                key,
+                caches: self.engine.model.fresh_caches(),
+                _lease: lease,
+                error: None,
+                degraded: false,
+            },
+        );
+        None
+    }
+
+    /// One batched decode step over every active sequence (a no-op when
+    /// idle). Returns the sequences that retired this step as
+    /// `(key, response)` pairs; their KV leases are released on return.
+    pub(crate) fn step(&mut self) -> Vec<(usize, Response)> {
+        let plan = self.sched.plan();
+        if plan.is_empty() {
+            return Vec::new();
+        }
+        let engine = self.engine;
+        let hook = engine.hook();
+        let tokens: Vec<u32> = plan.iter().map(|&(_, t)| t).collect();
+        let mut stacks: Vec<Vec<KvCache>> = plan
+            .iter()
+            .map(|&(tk, _)| std::mem::take(&mut self.live.get_mut(&tk).expect("live").caches))
+            .collect();
+        let _ = take_forward_faults();
+        let logits = engine.model.decode_step_batch_hooked(&tokens, &mut stacks, &hook);
+        // Fault attribution per STEP: the hook's part index is the row's
+        // position in this step's plan, which maps back to one owning
+        // sequence. Drained every step because retirements shift rows
+        // between steps. First error wins per sequence, matching serial
+        // attribution.
+        let faults = take_forward_faults();
+        for (part, msg) in faults.errors {
+            let s = self.live.get_mut(&plan[part].0).expect("live");
+            if s.error.is_none() {
+                s.error = Some(msg);
+            }
+        }
+        for part in faults.degraded {
+            self.live.get_mut(&plan[part].0).expect("live").degraded = true;
+        }
+        for (k, &(tk, _)) in plan.iter().enumerate() {
+            self.live.get_mut(&tk).expect("live").caches = std::mem::take(&mut stacks[k]);
+        }
+        engine.decode.record_step(plan.len());
+        let mut out = Vec::new();
+        for fin in self.sched.record(&logits) {
+            let s = self.live.remove(&fin.ticket).expect("finished seq is live");
+            out.push((
+                s.key,
+                match (s.error, s.degraded) {
+                    (Some(msg), _) => Response::Error(msg),
+                    (None, true) => {
+                        Response::Degraded(Box::new(Response::Generate(fin.produced)))
+                    }
+                    (None, false) => Response::Generate(fin.produced),
+                },
+            ));
+            // `s._lease` drops here, returning the KV pages.
+        }
+        out
     }
 }
 
@@ -1005,6 +1317,17 @@ struct Job {
     reply: Sender<(Response, Duration)>,
 }
 
+/// Render a worker-loop panic payload as the error message every affected
+/// request answers with.
+fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into());
+    format!("engine panicked while serving: {msg}")
+}
+
 /// Thread-pool server with cross-request continuous batching: each worker
 /// drains whole admission windows and executes them through
 /// [`Engine::handle_batch`].
@@ -1042,91 +1365,193 @@ impl Server {
             handles.push(std::thread::spawn(move || {
                 let mut batcher = Batcher::new(policy);
                 let epoch = Instant::now();
+                // The worker's decode lane: Generate jobs peel off their
+                // windows into a batch that PERSISTS across windows, so a
+                // Generate arriving three windows later joins sequences
+                // already mid-decode (iteration-level continuous
+                // batching). While the lane is active the worker polls
+                // for new windows between steps instead of blocking.
+                let mut driver = DecodeDriver::new(&engine);
+                let mut lane: HashMap<usize, (Instant, Sender<(Response, Duration)>)> =
+                    HashMap::new();
+                let mut waiting: VecDeque<(usize, Request)> = VecDeque::new();
+                let mut next_key = 0usize;
                 loop {
+                    let lane_idle = driver.is_idle() && waiting.is_empty();
                     // Hold the receiver lock only while forming one window;
-                    // execution runs unlocked so workers overlap.
+                    // execution runs unlocked so workers overlap. An idle
+                    // lane blocks exactly like the pre-decode-lane worker;
+                    // an active lane must keep stepping, so it only polls.
                     let window = {
                         let guard = rx.lock().unwrap();
-                        next_window(&guard, &mut batcher, epoch)
+                        if lane_idle {
+                            next_window(&guard, &mut batcher, epoch)
+                        } else {
+                            poll_window(&guard, &mut batcher, epoch)
+                        }
                     };
-                    let Some(window) = window else { break };
-                    depth.fetch_sub(window.items.len(), Ordering::Relaxed);
-                    engine.note_flush(window.reason, window.waited_us);
-                    // Deadline shedding: a job still queued past its
-                    // deadline answers Overloaded instead of executing
-                    // doomed work that its client has given up on. With
-                    // deadline_ms == 0 this branch never runs and the
-                    // window executes exactly as admitted.
-                    let mut items = window.items;
-                    if deadline_ms > 0 {
-                        let deadline = Duration::from_millis(deadline_ms);
-                        let now = Instant::now();
-                        let mut live = Vec::with_capacity(items.len());
+                    if window.is_none() && lane_idle {
+                        // Blocking pickup returns None only when the
+                        // channel is closed and the batcher drained.
+                        break;
+                    }
+                    if let Some(window) = window {
+                        depth.fetch_sub(window.items.len(), Ordering::Relaxed);
+                        engine.note_flush(window.reason, window.waited_us);
+                        // Deadline shedding: a job still queued past its
+                        // deadline answers Overloaded instead of executing
+                        // doomed work that its client has given up on. With
+                        // deadline_ms == 0 this branch never runs and the
+                        // window executes exactly as admitted.
+                        let mut items = window.items;
+                        if deadline_ms > 0 {
+                            let deadline = Duration::from_millis(deadline_ms);
+                            let now = Instant::now();
+                            let mut live = Vec::with_capacity(items.len());
+                            for j in items {
+                                if now.saturating_duration_since(j.submitted) > deadline {
+                                    stats.record_shed();
+                                    let _ = j.reply.send((
+                                        Response::Overloaded(
+                                            "deadline exceeded before execution".into(),
+                                        ),
+                                        j.submitted.elapsed(),
+                                    ));
+                                } else {
+                                    live.push(j);
+                                }
+                            }
+                            items = live;
+                        }
+                        let size = items.len();
+                        let tokens: u64 = items.iter().map(|j| j.req.token_count()).sum();
+                        // Peel valid Generates into the decode lane (when
+                        // batching is enabled); everything else executes
+                        // through the window path below. Invalid Generates
+                        // stay in the window so validation answers them.
+                        let mut rest: Vec<Job> = Vec::with_capacity(items.len());
                         for j in items {
-                            if now.saturating_duration_since(j.submitted) > deadline {
-                                stats.record_shed();
-                                let _ = j.reply.send((
-                                    Response::Overloaded(
-                                        "deadline exceeded before execution".into(),
-                                    ),
-                                    j.submitted.elapsed(),
-                                ));
+                            let decodes = engine.decode_max > 1
+                                && matches!(j.req, Request::Generate { .. })
+                                && matches!(engine.shape(&j.req), Shape::Sequential);
+                            if decodes {
+                                let key = next_key;
+                                next_key += 1;
+                                lane.insert(key, (j.submitted, j.reply));
+                                waiting.push_back((key, j.req));
                             } else {
-                                live.push(j);
+                                rest.push(j);
                             }
                         }
-                        items = live;
-                        if items.is_empty() {
-                            continue;
+                        if size > 0 {
+                            stats.record_batch(size, tokens);
+                        }
+                        if !rest.is_empty() {
+                            // Decompose jobs so handle_batch borrows the
+                            // owned requests — no token-buffer clones on
+                            // the hot path.
+                            let n = rest.len();
+                            let (reqs, replies): (Vec<Request>, Vec<(Instant, Sender<_>)>) =
+                                rest.into_iter()
+                                    .map(|j| (j.req, (j.submitted, j.reply)))
+                                    .unzip();
+                            // Per-request admission waits feed the traces'
+                            // `queue.wait` spans; the clock reads are
+                            // skipped entirely when tracing is off.
+                            let queue_waits: Option<Vec<u64>> = trace::enabled().then(|| {
+                                let now = Instant::now();
+                                replies
+                                    .iter()
+                                    .map(|(sub, _)| {
+                                        now.saturating_duration_since(*sub).as_nanos() as u64
+                                    })
+                                    .collect()
+                            });
+                            // Store and integrity failures are handled
+                            // inside the engine (per-request error pinning,
+                            // degraded serves), so this catch_unwind is a
+                            // last-resort backstop for genuine bugs: a
+                            // panic must not take the worker down — answer
+                            // every request of THIS window with an error
+                            // carrying the panic message and keep draining.
+                            let responses = catch_unwind(AssertUnwindSafe(|| {
+                                engine.handle_batch_traced(&reqs, queue_waits.as_deref())
+                            }))
+                            .unwrap_or_else(|payload| {
+                                vec![Response::Error(panic_msg(payload)); n]
+                            });
+                            debug_assert_eq!(responses.len(), n);
+                            for ((submitted, reply), resp) in
+                                replies.into_iter().zip(responses)
+                            {
+                                let latency = submitted.elapsed();
+                                let _ = reply.send((resp, latency));
+                                stats.record_request(latency);
+                            }
                         }
                     }
-                    let size = items.len();
-                    // Decompose jobs so handle_batch borrows the owned
-                    // requests — no token-buffer clones on the hot path.
-                    let (reqs, replies): (Vec<Request>, Vec<(Instant, Sender<_>)>) = items
-                        .into_iter()
-                        .map(|j| (j.req, (j.submitted, j.reply)))
-                        .unzip();
-                    let tokens: u64 = reqs.iter().map(|r| r.token_count()).sum();
-                    // Per-request admission waits feed the traces'
-                    // `queue.wait` spans; the clock reads are skipped
-                    // entirely when tracing is off.
-                    let queue_waits: Option<Vec<u64>> = trace::enabled().then(|| {
-                        let now = Instant::now();
-                        replies
-                            .iter()
-                            .map(|(sub, _)| now.saturating_duration_since(*sub).as_nanos() as u64)
-                            .collect()
-                    });
-                    // Store and integrity failures are handled inside the
-                    // engine (per-request error pinning, degraded serves),
-                    // so this catch_unwind is a last-resort backstop for
-                    // genuine bugs: a panic must not take the worker down —
-                    // answer every request of THIS window with an error
-                    // carrying the panic message and keep draining.
-                    let responses = catch_unwind(AssertUnwindSafe(|| {
-                        engine.handle_batch_traced(&reqs, queue_waits.as_deref())
-                    }))
-                    .unwrap_or_else(|payload| {
-                        let msg = payload
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| payload.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "unknown panic".into());
-                        vec![
-                            Response::Error(format!(
-                                "engine panicked while serving: {msg}"
+                    // Backfill the decode batch from the waiting queue
+                    // (sheds stale jobs first), then run ONE step; newly
+                    // freed slots and newly polled windows are picked up
+                    // on the next loop iteration.
+                    while driver.has_room() {
+                        let Some((key, req)) = waiting.pop_front() else { break };
+                        let submitted = lane[&key].0;
+                        if deadline_ms > 0
+                            && submitted.elapsed() > Duration::from_millis(deadline_ms)
+                        {
+                            let (submitted, reply) = lane.remove(&key).expect("waiting");
+                            stats.record_shed();
+                            let _ = reply.send((
+                                Response::Overloaded(
+                                    "deadline exceeded before decode admission".into(),
+                                ),
+                                submitted.elapsed(),
                             ));
-                            size
-                        ]
-                    });
-                    debug_assert_eq!(responses.len(), size);
-                    for ((submitted, reply), resp) in replies.into_iter().zip(responses) {
-                        let latency = submitted.elapsed();
-                        let _ = reply.send((resp, latency));
-                        stats.record_request(latency);
+                            continue;
+                        }
+                        match driver.admit(key, &req) {
+                            Some(resp) => {
+                                let (submitted, reply) =
+                                    lane.remove(&key).expect("waiting");
+                                engine.batch.solo_requests.inc();
+                                let latency = submitted.elapsed();
+                                let _ = reply.send((resp, latency));
+                                stats.record_request(latency);
+                            }
+                            None => engine.batch.batched_requests.inc(),
+                        }
                     }
-                    stats.record_batch(size, tokens);
+                    if !driver.is_idle() {
+                        let finished =
+                            catch_unwind(AssertUnwindSafe(|| driver.step()));
+                        match finished {
+                            Ok(finished) => {
+                                for (key, resp) in finished {
+                                    let (submitted, reply) =
+                                        lane.remove(&key).expect("lane job");
+                                    let latency = submitted.elapsed();
+                                    let _ = reply.send((resp, latency));
+                                    stats.record_request(latency);
+                                }
+                            }
+                            Err(payload) => {
+                                // A panicked step poisons the whole lane:
+                                // answer every in-flight and waiting job
+                                // with the panic error and start a fresh
+                                // driver (leases drop with the old one).
+                                let msg = panic_msg(payload);
+                                for (_, (submitted, reply)) in lane.drain() {
+                                    let latency = submitted.elapsed();
+                                    let _ =
+                                        reply.send((Response::Error(msg.clone()), latency));
+                                    stats.record_request(latency);
+                                }
+                                waiting.clear();
+                                driver = DecodeDriver::new(&engine);
+                            }
+                        }
+                    }
                 }
             }));
         }
@@ -1622,5 +2047,155 @@ mod tests {
         let (compressed_bytes, cached) = engine.resident_expert_bytes().unwrap();
         assert!(compressed_bytes > 0);
         assert_eq!(cached, 0);
+    }
+
+    fn gen_reqs() -> Vec<Request> {
+        vec![
+            Request::Generate { prompt: vec![1, 2, 3], max_new: 1 },
+            Request::Generate { prompt: vec![4, 5], max_new: 3 },
+            Request::Generate { prompt: vec![6, 7, 8, 9], max_new: 2 },
+            Request::Generate { prompt: vec![2, 2], max_new: 2 },
+        ]
+    }
+
+    #[test]
+    fn decode_run_batches_generates_and_matches_serial_under_roomy_budget() {
+        // Under a roomy budget every slot restores on both sides, so the
+        // relaxed contract collapses to bitwise equality: the batched
+        // decode rows ARE the solo decode rows (pinned per-kernel in
+        // moe::transformer), and the cost model makes the same decisions.
+        let m = tiny_model(50);
+        let mut rng = Rng::new(51);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let reqs = gen_reqs();
+        let serial = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+        let mut batched = Engine::compressed(m.clone(), cm.layers.clone(), usize::MAX);
+        // Cap the batch at 2 so retirements open slots for the pending
+        // sequences — the continuous-batching join path, not just a
+        // static batch.
+        batched.set_decode_batch(2);
+        let got = batched.handle_batch(&reqs);
+        assert_eq!(got, want, "roomy budget: batched decode must equal serial bitwise");
+        for r in &got {
+            assert!(matches!(r, Response::Generate(_)), "{r:?}");
+        }
+        let dm = batched.decode_metrics();
+        assert_eq!(dm.seqs, 4);
+        assert!(dm.joins >= 1, "backfilled admissions must count as joins: {dm:?}");
+        assert!(dm.steps > 0);
+        assert!(dm.mean_step_batch() > 1.0, "{dm:?}");
+        assert_eq!(dm.kv_leases, 4);
+        assert_eq!(dm.kv_refusals, 0);
+        assert_eq!(dm.solo_fallbacks, 0);
+        let bm = batched.batch_metrics();
+        assert_eq!(bm.batched_requests, 4);
+        assert_eq!(bm.solo_requests, 0);
+        // Every lease returned when its sequence retired.
+        let pool = batched.kv_pool();
+        assert_eq!(pool.used_bytes(), 0);
+        assert_eq!(pool.leases_granted(), pool.leases_released());
+    }
+
+    #[test]
+    fn decode_kv_refusal_falls_back_to_sequential_path() {
+        // A zero budget gives the KV pool a zero cap: the first sequence
+        // still enters (the single-over-budget exception guarantees
+        // progress), every later admission is refused and served through
+        // the sequential path instead. Nothing is revoked, nothing is
+        // dropped, and with every serve fused (over budget) the outputs
+        // are order-independent, so they still equal the serial reference.
+        let m = tiny_model(52);
+        let mut rng = Rng::new(53);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 1, None, &mut rng);
+        let reqs = gen_reqs();
+        let serial = Engine::compressed(m.clone(), cm.layers.clone(), 0);
+        let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+        let batched = Engine::compressed(m.clone(), cm.layers.clone(), 0);
+        let got = batched.handle_batch(&reqs);
+        assert_eq!(got, want, "all-fused serving is order-independent");
+        let dm = batched.decode_metrics();
+        assert_eq!(dm.kv_leases, 1, "only the over-budget exception admits: {dm:?}");
+        assert_eq!(dm.kv_refusals, 3);
+        assert_eq!(dm.solo_fallbacks, 3);
+        assert_eq!(dm.seqs, 1);
+        let bm = batched.batch_metrics();
+        assert_eq!(bm.batched_requests, 1);
+        assert_eq!(bm.solo_requests, 3);
+        let pool = batched.kv_pool();
+        assert_eq!(pool.used_bytes(), 0);
+        assert_eq!(pool.refusals(), 3);
+    }
+
+    #[test]
+    fn decode_batch_disabled_restores_serial_semantics() {
+        // RESMOE_DECODE_BATCH=1 (set_decode_batch(1)) is the off-switch:
+        // a window of Generates runs through the sequential path in
+        // admission order — bit-for-bit the pre-batching behavior, even
+        // under a tight budget where the interleaved order would diverge.
+        let m = tiny_model(54);
+        let mut rng = Rng::new(55);
+        let cm = compress_model(&m, &ResMoE::up(), 0.25, 2, None, &mut rng);
+        let one_expert = 32 * (2 * 16 + 1) * 4 + 16 * 4;
+        let reqs = gen_reqs();
+        for budget in [usize::MAX, 0, 2 * one_expert] {
+            let serial = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+            let want: Vec<Response> = reqs.iter().map(|r| serial.handle(r)).collect();
+            let mut off = Engine::compressed(m.clone(), cm.layers.clone(), budget);
+            off.set_decode_batch(1);
+            let got = off.handle_batch(&reqs);
+            assert_eq!(got, want, "budget {budget}");
+            let (ms, mo) = (
+                serial.cache_metrics().unwrap(),
+                off.cache_metrics().unwrap(),
+            );
+            assert_eq!(ms.misses, mo.misses, "budget {budget}");
+            assert_eq!(ms.restore_serves, mo.restore_serves, "budget {budget}");
+            assert_eq!(ms.fused_serves, mo.fused_serves, "budget {budget}");
+            let dm = off.decode_metrics();
+            assert_eq!(dm.steps, 0, "disabled decode batching must not step");
+            assert_eq!(off.batch_metrics().solo_requests, 4);
+        }
+    }
+
+    #[test]
+    fn server_decode_lane_roundtrip_matches_serial() {
+        // Generates submitted to the live server peel out of admission
+        // windows into the per-worker decode lane. A dense engine has no
+        // cost model, so lane answers are bit-identical to solo decoding
+        // no matter how the steps interleave.
+        let m = tiny_model(56);
+        let reference = Engine::dense(m.clone());
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request::Generate {
+                prompt: (0..2 + (i % 3)).map(|t| ((t * 5 + i) % 32) as u32).collect(),
+                max_new: 1 + (i % 4),
+            })
+            .collect();
+        let want: Vec<Response> = reqs.iter().map(|r| reference.handle(r)).collect();
+        let engine = Engine::dense(m);
+        let server = Server::start(
+            engine.clone(),
+            ServerConfig { batch_max: 4, batch_wait_us: 200, workers: 1, ..Default::default() },
+        );
+        let replies: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+        // An invalid Generate never enters the lane: it stays in the
+        // window and answers as an inline error.
+        let bad = server.submit(Request::Generate { prompt: vec![], max_new: 3 });
+        for (r, want) in replies.into_iter().zip(&want) {
+            let (resp, latency) = r.recv().unwrap();
+            assert_eq!(&resp, want);
+            assert!(latency.as_secs() < 5);
+        }
+        assert!(matches!(bad.recv().unwrap().0, Response::Error(_)));
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests, 9);
+        let dm = engine.decode_metrics();
+        assert_eq!(dm.seqs, 8, "every valid Generate decodes through the lane");
+        assert!(dm.steps > 0);
+        assert_eq!(dm.kv_refusals, 0);
+        let pool = engine.kv_pool();
+        assert_eq!(pool.used_bytes(), 0, "all leases returned at retirement");
+        assert_eq!(pool.leases_granted(), pool.leases_released());
     }
 }

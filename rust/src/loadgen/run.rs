@@ -149,7 +149,7 @@ fn fold_response(mut h: u64, r: &Response) -> u64 {
 /// wall workers (earliest-free pickup) and report what request latency
 /// would have looked like. Purely observational — decisions (membership,
 /// sheds, ordering) are fixed upstream, so this never breaks replay.
-fn pool_latencies(rp: &Replay, events: &[Event], k: usize) -> Vec<u64> {
+fn pool_latencies(rp: &Replay, k: usize) -> Vec<u64> {
     let k = k.max(1);
     let mut free_at = vec![0u64; k];
     let mut out = Vec::new();
@@ -166,7 +166,7 @@ fn pool_latencies(rp: &Replay, events: &[Event], k: usize) -> Vec<u64> {
         let completion = start + w.dur_us;
         free_at[slot] = completion;
         for &idx in &w.live {
-            out.push(completion.saturating_sub(events[idx].t_us));
+            out.push(completion.saturating_sub(rp.arrival_us[idx]));
         }
     }
     out
@@ -288,19 +288,21 @@ pub fn run_scenario(
     // Virtual latency distributions.
     let lat: Vec<u64> = rp.latency_us.iter().filter_map(|&l| l).collect();
     let ttft: Vec<u64> = rp.ttft_us.iter().filter_map(|&l| l).collect();
+    // Closed-loop replays reissue arrivals, so the span starts at the
+    // first EFFECTIVE arrival (identical to the schedule's in open loop).
     let makespan_us = rp
         .windows
         .iter()
         .map(|w| w.completion_us)
         .max()
         .unwrap_or(0)
-        .saturating_sub(events.first().map_or(0, |e| e.t_us));
+        .saturating_sub(rp.arrival_us.first().copied().unwrap_or(0));
     let tok_s = if makespan_us > 0 {
         live_tokens as f64 * 1e6 / makespan_us as f64
     } else {
         0.0
     };
-    let pool = pool_latencies(&rp, &events, vworkers);
+    let pool = pool_latencies(&rp, vworkers);
 
     // Cache-decision metrics, summed across tenants (each engine has its
     // own cache; dense engines report none).
@@ -577,9 +579,32 @@ mod tests {
         let sc = Scenario::by_name("bursty").unwrap();
         let events = schedule::generate(&sc, 7);
         let rp = schedule::replay(&sc, &events);
-        let one = pool_latencies(&rp, &events, 1);
-        let four = pool_latencies(&rp, &events, 4);
+        let one = pool_latencies(&rp, 1);
+        let four = pool_latencies(&rp, 4);
         assert_eq!(one.len(), four.len(), "membership never changes with k");
         assert!(four.iter().zip(&one).all(|(f, o)| f <= o));
+    }
+
+    #[test]
+    fn gen_storm_batches_decode_and_replays() {
+        // The closed-loop decode storm: Generate-dominated windows run
+        // through the iteration-level decode lane, error-free, and the
+        // whole run (responses AND counters, decode.* included) replays
+        // bit-identically under a fixed seed.
+        let sc = Scenario::by_name("gen_storm").unwrap();
+        let a = run_scenario(&tiny_fleet(1), &sc, 7, 4).unwrap();
+        assert_eq!(a.errors, 0, "the storm must not error");
+        assert_eq!(a.shed_admission + a.shed_deadline, 0, "closed loop never sheds");
+        assert_eq!(a.executed, a.arrivals);
+        let b = run_scenario(&tiny_fleet(1), &sc, 7, 1).unwrap();
+        assert_eq!(a.responses_fp, b.responses_fp, "decode batching must replay");
+        assert_eq!(a.counters_fp, b.counters_fp);
+        // The decode lane actually engaged: multi-Generate windows step
+        // with batch > 1 somewhere in 96 requests at 8:1:1.
+        let fleet = tiny_fleet(1);
+        let _ = run_scenario(&fleet, &sc, 7, 4).unwrap();
+        let dm = fleet.engines[0].decode_metrics();
+        assert!(dm.seqs > 0, "storm windows must admit decode sequences: {dm:?}");
+        assert!(dm.mean_step_batch() > 1.0, "storm must actually batch: {dm:?}");
     }
 }

@@ -126,6 +126,14 @@ pub struct Scenario {
     pub drain_gap_us: u64,
     /// Engines sharing one store (1 = single tenant).
     pub tenants: usize,
+    /// 0 = open loop (arrivals come straight from the schedule). N > 0 =
+    /// closed loop: a fixed pool of N virtual clients, each issuing its
+    /// next request only after its previous response completes plus a
+    /// think time (the schedule's inter-arrival gap for that event). In-
+    /// flight requests are bounded by N, so throughput self-limits at
+    /// saturation instead of queueing without bound — the regime
+    /// `check_scenarios.py` probes for decode saturation.
+    pub closed_loop_clients: usize,
 }
 
 impl Scenario {
@@ -142,6 +150,7 @@ impl Scenario {
             service: ServiceModel { base_us: 300, per_token_us: 40 },
             drain_gap_us: 0,
             tenants: 1,
+            closed_loop_clients: 0,
         }
     }
 
@@ -202,6 +211,20 @@ impl Scenario {
                 routing: Routing::Zipf { weights: ZIPF12.to_vec() },
                 tenants: 2,
                 ..Scenario::base("multi_tenant")
+            },
+            // Decode-heavy storm: 8:1:1 Generate/Score/Classify under the
+            // strong Zipf skew, issued by a fixed pool of closed-loop
+            // clients (think time = the schedule's inter-arrival gaps).
+            // The decode-lane saturation scenario: offered load self-
+            // limits at the pool size, so it must neither shed nor error
+            // while the windows stay Generate-dominated.
+            Scenario {
+                arrivals: Arrivals::Poisson { mean_gap_us: 250 },
+                routing: Routing::Zipf { weights: ZIPF12.to_vec() },
+                mix: Mix { score: 1, generate: 8, classify: 1 },
+                policy: BatchPolicy { max_batch: 8, linger_us: 800 },
+                closed_loop_clients: 8,
+                ..Scenario::base("gen_storm")
             },
         ]
     }

@@ -177,6 +177,10 @@ pub struct Replay {
     pub latency_us: Vec<Option<u64>>,
     /// Virtual time-to-first-token for executed Generate requests.
     pub ttft_us: Vec<Option<u64>>,
+    /// Effective arrival instant per schedule index. Open loop: the
+    /// schedule's `t_us` verbatim. Closed loop: when the issuing client
+    /// actually became ready (previous completion + think time).
+    pub arrival_us: Vec<u64>,
 }
 
 struct TenantState {
@@ -225,7 +229,7 @@ fn execute_window(
     let exec_start_us = formed_us.max(st.busy_until_us);
     let (mut live, mut shed) = (Vec::new(), Vec::new());
     for idx in idxs {
-        let waited = exec_start_us.saturating_sub(events[idx].t_us);
+        let waited = exec_start_us.saturating_sub(out.arrival_us[idx]);
         if sc.deadline_us > 0 && waited > sc.deadline_us {
             shed.push(idx);
         } else {
@@ -241,12 +245,12 @@ fn execute_window(
     let completion_us = exec_start_us.saturating_add(dur_us);
     st.busy_until_us = completion_us;
     for &idx in &live {
-        out.latency_us[idx] = Some(completion_us.saturating_sub(events[idx].t_us));
+        out.latency_us[idx] = Some(completion_us.saturating_sub(out.arrival_us[idx]));
         if events[idx].kind == 1 {
             out.ttft_us[idx] = Some(
                 exec_start_us
                     .saturating_add(sc.service.base_us)
-                    .saturating_sub(events[idx].t_us),
+                    .saturating_sub(out.arrival_us[idx]),
             );
         }
         let drain = completion_us.max(st.drain_cursor_us);
@@ -291,12 +295,19 @@ fn flush_due(
 
 /// Replay the schedule through per-tenant admission queues and virtual
 /// service pipes. Pure: same `(scenario, events)` in, same `Replay` out.
+/// Dispatches on the client model: open loop (arrivals verbatim) or
+/// closed loop ([`Scenario::closed_loop_clients`] > 0).
 pub fn replay(sc: &Scenario, events: &[Event]) -> Replay {
     let mut out = Replay {
         latency_us: vec![None; events.len()],
         ttft_us: vec![None; events.len()],
+        arrival_us: events.iter().map(|e| e.t_us).collect(),
         ..Replay::default()
     };
+    if sc.closed_loop_clients > 0 {
+        replay_closed(sc, events, &mut out);
+        return out;
+    }
     let mut tenants: Vec<TenantState> =
         (0..sc.tenants.max(1)).map(|_| TenantState::new(sc)).collect();
     for (i, ev) in events.iter().enumerate() {
@@ -335,6 +346,126 @@ pub fn replay(sc: &Scenario, events: &[Event]) -> Replay {
         }
     }
     out
+}
+
+/// Unblock clients whose requests finished in `windows[seen..]`: live
+/// members become ready at the window's completion, shed members at
+/// pickup (when the real server would answer `Overloaded`). Returns the
+/// new high-water mark.
+fn unblock_clients(
+    windows: &[VWindow],
+    seen: usize,
+    owner: &[usize],
+    ready: &mut [u64],
+) -> usize {
+    for w in &windows[seen..] {
+        for &i in &w.live {
+            if owner[i] != usize::MAX {
+                ready[owner[i]] = w.completion_us;
+            }
+        }
+        for &i in &w.shed {
+            if owner[i] != usize::MAX {
+                ready[owner[i]] = w.exec_start_us;
+            }
+        }
+    }
+    windows.len()
+}
+
+/// Closed-loop replay: a pool of `closed_loop_clients` virtual clients
+/// issues the schedule's events IN ORDER, at most one outstanding request
+/// per client. Event `i`'s think time is the schedule's inter-arrival gap
+/// (`t_us[i] - t_us[i-1]`), so the same seeded draws parameterize both
+/// client models; its effective arrival is `ready + think` where `ready`
+/// is the instant the issuing client's previous response completed.
+/// In-flight work is bounded by the pool size, which is what makes this
+/// the saturation probe: a slow service pipe slows the offered load down
+/// instead of growing the queue without bound.
+///
+/// Determinism: clients are selected min-(ready, id); time never moves
+/// backwards (`now` clamps); when every client is blocked, virtual time
+/// jumps to the earliest linger deadline, whose flush completes a window
+/// and unblocks its owners. Pure integer arithmetic throughout — the
+/// Python replica (`scripts/sim_loadgen.py`) ports this loop verbatim.
+fn replay_closed(sc: &Scenario, events: &[Event], out: &mut Replay) {
+    let clients = sc.closed_loop_clients;
+    let mut tenants: Vec<TenantState> =
+        (0..sc.tenants.max(1)).map(|_| TenantState::new(sc)).collect();
+    // Per-client next-issue instant; u64::MAX while awaiting a response.
+    let mut ready = vec![0u64; clients];
+    // Schedule index → issuing client, for unblocking at completion.
+    let mut owner = vec![usize::MAX; events.len()];
+    let mut seen = 0usize;
+    let mut next = 0usize;
+    let mut now = 0u64;
+    while next < events.len() {
+        let (c, &r) = ready
+            .iter()
+            .enumerate()
+            .min_by_key(|&(id, &t)| (t, id))
+            .expect("closed loop requires at least one client");
+        if r == u64::MAX {
+            // Every client is waiting: the only way forward is a linger
+            // flush (a blocked client's request is either pending in a
+            // batcher — which then carries a deadline — or already
+            // windowed, in which case it was unblocked above).
+            let dl = tenants
+                .iter()
+                .filter_map(|t| t.batcher.deadline_us())
+                .min()
+                .expect("blocked clients imply a pending linger window");
+            now = now.max(dl);
+            for tn in 0..tenants.len() {
+                flush_due(sc, events, &mut tenants[tn], tn as u32, now, out);
+            }
+            seen = unblock_clients(&out.windows, seen, &owner, &mut ready);
+            continue;
+        }
+        let i = next;
+        next += 1;
+        let think = if i == 0 {
+            events[0].t_us
+        } else {
+            events[i].t_us - events[i - 1].t_us
+        };
+        let t = now.max(r.saturating_add(think));
+        now = t;
+        out.arrival_us[i] = t;
+        for tn in 0..tenants.len() {
+            flush_due(sc, events, &mut tenants[tn], tn as u32, t, out);
+        }
+        let tn = events[i].tenant as usize;
+        let st = &mut tenants[tn];
+        let depth = st.batcher.pending_len() + st.undrained_at(t);
+        if sc.max_queue > 0 && depth >= sc.max_queue {
+            // Instant Overloaded answer: the client thinks again from `t`.
+            out.admit_shed.push(i);
+            ready[c] = t;
+        } else {
+            owner[i] = c;
+            ready[c] = u64::MAX;
+            st.batcher.push(i, t);
+            if let Some(w) = st.batcher.poll(t) {
+                execute_window(
+                    sc, events, st, tn as u32, w.items, w.reason, t, w.waited_us, out,
+                );
+            }
+        }
+        seen = unblock_clients(&out.windows, seen, &owner, &mut ready);
+    }
+    // Tail: outstanding linger windows fire, then the pool hangs up and
+    // close-flushes whatever remains at the last issue instant.
+    for tn in 0..tenants.len() {
+        flush_due(sc, events, &mut tenants[tn], tn as u32, u64::MAX, out);
+        tenants[tn].batcher.close();
+        while let Some(w) = tenants[tn].batcher.poll(now) {
+            execute_window(
+                sc, events, &mut tenants[tn], tn as u32, w.items, w.reason, now, w.waited_us,
+                out,
+            );
+        }
+    }
 }
 
 // ------------------------------------------------------------- percentiles
@@ -474,6 +605,58 @@ mod tests {
         let linger = rp.windows.iter().filter(|w| w.reason == FlushReason::Linger).count();
         assert!(full > 0, "bursts must fill windows");
         assert!(linger > 0, "idle gaps must strand stragglers");
+    }
+
+    #[test]
+    fn closed_loop_bounds_in_flight_requests() {
+        let sc = Scenario::by_name("gen_storm").unwrap();
+        assert!(sc.closed_loop_clients > 0, "gen_storm is the closed-loop scenario");
+        let ev = generate(&sc, 7);
+        let rp = replay(&sc, &ev);
+        // The pool issues events in schedule order; virtual time never
+        // runs backwards.
+        assert!(rp.arrival_us.windows(2).all(|w| w[0] <= w[1]));
+        // Reconstruct per-request completion instants.
+        let mut done = vec![0u64; ev.len()];
+        for w in &rp.windows {
+            for &i in &w.live {
+                done[i] = w.completion_us;
+            }
+            for &i in &w.shed {
+                done[i] = w.exec_start_us;
+            }
+        }
+        for &i in &rp.admit_shed {
+            done[i] = rp.arrival_us[i];
+        }
+        // The closed-loop invariant: never more outstanding requests than
+        // clients, at any arrival instant.
+        for i in 0..ev.len() {
+            let a = rp.arrival_us[i];
+            let in_flight = (0..ev.len())
+                .filter(|&j| rp.arrival_us[j] <= a && done[j] > a)
+                .count();
+            assert!(
+                in_flight <= sc.closed_loop_clients,
+                "event {i}: {in_flight} in flight > pool of {}",
+                sc.closed_loop_clients
+            );
+        }
+        // The storm is decode-dominated and sheds nothing (also pinned
+        // scenario-wide by slow_reader_sheds_and_others_do_not).
+        let gens = ev.iter().filter(|e| e.kind == 1).count();
+        assert!(gens * 2 >= ev.len(), "{gens}/{} generates", ev.len());
+        assert!(rp.admit_shed.is_empty() && rp.deadline_shed.is_empty());
+    }
+
+    #[test]
+    fn open_loop_arrivals_pass_through_verbatim() {
+        // Open-loop replays must report the schedule's own arrival
+        // instants (the closed-loop field is a strict generalization).
+        let sc = Scenario::by_name("mixed").unwrap();
+        let ev = generate(&sc, 7);
+        let rp = replay(&sc, &ev);
+        assert!(rp.arrival_us.iter().zip(&ev).all(|(&a, e)| a == e.t_us));
     }
 
     #[test]

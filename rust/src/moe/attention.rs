@@ -1,10 +1,161 @@
 //! Multi-head causal self-attention with an optional KV cache, used by the
 //! decoder-only evaluation models.
+//!
+//! The KV cache is **block-paged** (vLLM-style): instead of one
+//! `max_seq × d` slab per layer reserved up front, K and V grow in
+//! fixed-size pages of [`KV_PAGE_TOKENS`] rows allocated lazily as decode
+//! advances. Sequence admission charges a worst-case page reservation
+//! against a shared [`KvPagePool`] so a decode step can never fail
+//! mid-sequence on memory: either the lease is granted at admission and
+//! every page the sequence can touch is covered, or the request is refused
+//! before any state exists. Pages live in the cache itself (the pool is
+//! byte accounting, not an allocator), so releasing a lease never has to
+//! claw memory back from a live sequence.
+//!
+//! Paging changes only *where* a K/V row lives, never its contents or the
+//! attention arithmetic — `forward_step` reads the same rows in the same
+//! order as the old contiguous layout, so decode outputs are bit-identical
+//! to the pre-paging cache.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Arc;
 
 use crate::tensor::kernel;
 use crate::tensor::Matrix;
 use crate::util::stats::softmax;
 use crate::util::Rng;
+
+/// Rows (tokens) per KV page. Small enough that a 4-token Generate
+/// request wastes at most one page per layer, large enough that page
+/// arithmetic stays off the profile.
+pub const KV_PAGE_TOKENS: usize = 16;
+
+/// Bytes one cached token occupies in one layer: a K row and a V row of
+/// `d` f32 lanes each.
+pub fn kv_token_bytes(d: usize) -> usize {
+    2 * d * std::mem::size_of::<f32>()
+}
+
+/// Worst-case lease for a sequence that may reach `tokens` positions
+/// across `n_layers` layers, rounded up to whole pages — the amount a
+/// [`KvPagePool`] admission must cover so mid-decode allocation can never
+/// exceed it.
+pub fn kv_lease_bytes(tokens: usize, d: usize, n_layers: usize) -> usize {
+    let pages = tokens.div_ceil(KV_PAGE_TOKENS);
+    n_layers * pages * KV_PAGE_TOKENS * kv_token_bytes(d)
+}
+
+/// Shared byte budget for KV pages across all concurrently-decoding
+/// sequences. Pure accounting: `lease` reserves worst-case bytes at
+/// admission, dropping the returned [`KvLease`] releases them. The pool
+/// never revokes a live lease — refusal happens only at admission, so a
+/// sequence that got in always finishes (the eviction-refusal contract
+/// the page-pool tests pin).
+///
+/// One over-budget sequence is admitted when the pool is otherwise empty,
+/// mirroring the expert cache's single-over-budget-entry precedent:
+/// a budget smaller than one sequence must degrade to serial decode, not
+/// deadlock.
+#[derive(Debug)]
+pub struct KvPagePool {
+    max_bytes: usize,
+    used: AtomicUsize,
+    live: AtomicUsize,
+    leases_granted: AtomicU64,
+    leases_released: AtomicU64,
+    refusals: AtomicU64,
+    peak_bytes: AtomicUsize,
+}
+
+impl KvPagePool {
+    pub fn new(max_bytes: usize) -> KvPagePool {
+        KvPagePool {
+            max_bytes,
+            used: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            leases_granted: AtomicU64::new(0),
+            leases_released: AtomicU64::new(0),
+            refusals: AtomicU64::new(0),
+            peak_bytes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used.load(Relaxed)
+    }
+
+    pub fn live_leases(&self) -> usize {
+        self.live.load(Relaxed)
+    }
+
+    pub fn leases_granted(&self) -> u64 {
+        self.leases_granted.load(Relaxed)
+    }
+
+    pub fn leases_released(&self) -> u64 {
+        self.leases_released.load(Relaxed)
+    }
+
+    pub fn refusals(&self) -> u64 {
+        self.refusals.load(Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes.load(Relaxed)
+    }
+
+    /// Try to reserve `bytes` for one sequence. `None` means the caller
+    /// must not admit the sequence now (retry after a live sequence
+    /// retires). Single-over-budget exception: an empty pool grants any
+    /// size.
+    pub fn lease(self: &Arc<Self>, bytes: usize) -> Option<KvLease> {
+        // CAS loop: admission decisions race across workers, and a
+        // check-then-add pair would let two over-budget sequences through
+        // one budget slot.
+        let mut cur = self.used.load(Relaxed);
+        loop {
+            let fits = cur + bytes <= self.max_bytes || cur == 0;
+            if !fits {
+                self.refusals.fetch_add(1, Relaxed);
+                return None;
+            }
+            match self.used.compare_exchange_weak(cur, cur + bytes, Relaxed, Relaxed) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+        self.live.fetch_add(1, Relaxed);
+        self.leases_granted.fetch_add(1, Relaxed);
+        self.peak_bytes.fetch_max(cur + bytes, Relaxed);
+        Some(KvLease { pool: Arc::clone(self), bytes })
+    }
+}
+
+/// RAII reservation of KV pool bytes for one sequence's lifetime.
+/// Dropping it returns the bytes; the pool cannot take them back earlier.
+#[derive(Debug)]
+pub struct KvLease {
+    pool: Arc<KvPagePool>,
+    bytes: usize,
+}
+
+impl KvLease {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for KvLease {
+    fn drop(&mut self) {
+        self.pool.used.fetch_sub(self.bytes, Relaxed);
+        self.pool.live.fetch_sub(1, Relaxed);
+        self.pool.leases_released.fetch_add(1, Relaxed);
+    }
+}
 
 /// Attention projection weights; all `d × d`, stored `[out, in]` so
 /// application is `x.matmul_nt(w)`.
@@ -17,21 +168,74 @@ pub struct Attention {
     pub n_heads: usize,
 }
 
-/// Per-layer KV cache for incremental decoding.
+/// Per-layer block-paged KV cache for incremental decoding. Pages of
+/// [`KV_PAGE_TOKENS`] K rows and V rows are allocated lazily as `len`
+/// crosses page boundaries; `max_seq` stays the hard capacity (the
+/// "KV cache overflow" panic the decode loop relies on).
 #[derive(Debug, Clone)]
 pub struct KvCache {
-    pub k: Matrix,
-    pub v: Matrix,
+    pages_k: Vec<Matrix>,
+    pages_v: Vec<Matrix>,
     pub len: usize,
+    max_seq: usize,
+    d: usize,
 }
 
 impl KvCache {
+    /// An empty cache able to hold `max_seq` positions of width `d`.
+    /// No pages are allocated until the first append — a cache built for
+    /// a long context but used for a short one pays only for the pages it
+    /// touches.
     pub fn new(max_seq: usize, d: usize) -> KvCache {
-        KvCache { k: Matrix::zeros(max_seq, d), v: Matrix::zeros(max_seq, d), len: 0 }
+        KvCache { pages_k: Vec::new(), pages_v: Vec::new(), len: 0, max_seq, d }
     }
 
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Pages currently materialized (K and V pages count as one: they
+    /// always allocate together).
+    pub fn pages_allocated(&self) -> usize {
+        self.pages_k.len()
+    }
+
+    /// Bytes of K/V page storage currently materialized.
+    pub fn allocated_bytes(&self) -> usize {
+        self.pages_k.len() * KV_PAGE_TOKENS * kv_token_bytes(self.d)
+    }
+
+    /// Reset to empty. Pages are kept for reuse — `clear` is the
+    /// same-request reset path, where the next decode refills them.
     pub fn clear(&mut self) {
         self.len = 0;
+    }
+
+    #[inline]
+    fn k_row(&self, j: usize) -> &[f32] {
+        self.pages_k[j / KV_PAGE_TOKENS].row(j % KV_PAGE_TOKENS)
+    }
+
+    #[inline]
+    fn v_row(&self, j: usize) -> &[f32] {
+        self.pages_v[j / KV_PAGE_TOKENS].row(j % KV_PAGE_TOKENS)
+    }
+
+    /// Append one K/V row pair at position `len`, allocating the page it
+    /// lands on if this is the first visit. Panics with "KV cache
+    /// overflow" past `max_seq` — same contract as the contiguous layout.
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let pos = self.len;
+        assert!(pos < self.max_seq, "KV cache overflow");
+        let page = pos / KV_PAGE_TOKENS;
+        if page == self.pages_k.len() {
+            self.pages_k.push(Matrix::zeros(KV_PAGE_TOKENS, self.d));
+            self.pages_v.push(Matrix::zeros(KV_PAGE_TOKENS, self.d));
+        }
+        let slot = pos % KV_PAGE_TOKENS;
+        self.pages_k[page].row_mut(slot).copy_from_slice(k);
+        self.pages_v[page].row_mut(slot).copy_from_slice(v);
+        self.len += 1;
     }
 }
 
@@ -104,23 +308,19 @@ impl Attention {
         let q = x.matmul_nt(&self.wq);
         let k_new = x.matmul_nt(&self.wk);
         let v_new = x.matmul_nt(&self.wv);
-        let pos = cache.len;
-        assert!(pos < cache.k.rows, "KV cache overflow");
-        cache.k.row_mut(pos).copy_from_slice(k_new.row(0));
-        cache.v.row_mut(pos).copy_from_slice(v_new.row(0));
-        cache.len += 1;
+        cache.append(k_new.row(0), v_new.row(0));
         let mut ctx = Matrix::zeros(1, d);
         for h in 0..self.n_heads {
             let lo = h * hd;
             let hi = lo + hd;
             let qh = &q.row(0)[lo..hi];
             let scores: Vec<f32> = (0..cache.len)
-                .map(|j| kernel::dot(qh, &cache.k.row(j)[lo..hi]) * scale)
+                .map(|j| kernel::dot(qh, &cache.k_row(j)[lo..hi]) * scale)
                 .collect();
             let probs = softmax(&scores);
             let dst = &mut ctx.row_mut(0)[lo..hi];
             for (j, &p) in probs.iter().enumerate() {
-                kernel::axpy(dst, p, &cache.v.row(j)[lo..hi]);
+                kernel::axpy(dst, p, &cache.v_row(j)[lo..hi]);
             }
         }
         ctx.matmul_nt(&self.wo)
@@ -203,5 +403,110 @@ mod tests {
         let mut cache = KvCache::new(1, 8);
         a.forward_step(&x, &mut cache);
         a.forward_step(&x, &mut cache);
+    }
+
+    // ------------------------------------------------------ paged layout
+
+    #[test]
+    fn pages_allocate_lazily_and_only_when_crossed() {
+        let mut rng = Rng::new(6);
+        let a = Attention::random(8, 2, &mut rng);
+        let mut cache = KvCache::new(3 * KV_PAGE_TOKENS, 8);
+        assert_eq!(cache.pages_allocated(), 0, "no pages before first token");
+        assert_eq!(cache.allocated_bytes(), 0);
+        for i in 0..(2 * KV_PAGE_TOKENS + 1) {
+            let x = Matrix::randn(1, 8, 1.0, &mut rng);
+            a.forward_step(&x, &mut cache);
+            let want = (i / KV_PAGE_TOKENS) + 1;
+            assert_eq!(cache.pages_allocated(), want, "token {i}");
+        }
+        assert_eq!(cache.allocated_bytes(), 3 * KV_PAGE_TOKENS * kv_token_bytes(8));
+        // clear keeps pages (reuse) but resets the write head.
+        cache.clear();
+        assert_eq!(cache.len, 0);
+        assert_eq!(cache.pages_allocated(), 3, "pages retained for reuse");
+    }
+
+    #[test]
+    fn paged_decode_is_identical_across_page_boundaries() {
+        // The paged layout must reproduce full-forward attention exactly
+        // even when the causal prefix spans multiple pages.
+        let mut rng = Rng::new(7);
+        let a = Attention::random(12, 3, &mut rng);
+        let t = 2 * KV_PAGE_TOKENS + 3;
+        let x = Matrix::randn(t, 12, 1.0, &mut rng);
+        let y_full = a.forward_full(&x);
+        let mut cache = KvCache::new(t, 12);
+        for i in 0..t {
+            let xi = x.slice_rows(i, i + 1);
+            let yi = a.forward_step(&xi, &mut cache);
+            for c in 0..12 {
+                assert!(
+                    (y_full.at(i, c) - yi.at(0, c)).abs() < 1e-4,
+                    "pos {i} col {c}"
+                );
+            }
+        }
+    }
+
+    // -------------------------------------------------------- page pool
+
+    #[test]
+    fn pool_lease_release_conserves_bytes() {
+        let pool = Arc::new(KvPagePool::new(10_000));
+        let b = kv_lease_bytes(20, 8, 2);
+        let l1 = pool.lease(b).expect("fits");
+        let l2 = pool.lease(b).expect("fits");
+        assert_eq!(pool.used_bytes(), 2 * b);
+        assert_eq!(pool.live_leases(), 2);
+        drop(l1);
+        assert_eq!(pool.used_bytes(), b);
+        drop(l2);
+        assert_eq!(pool.used_bytes(), 0);
+        assert_eq!(pool.leases_granted(), 2);
+        assert_eq!(pool.leases_released(), 2);
+        assert_eq!(pool.peak_bytes(), 2 * b);
+    }
+
+    #[test]
+    fn pool_refuses_when_full_but_never_revokes() {
+        let b = kv_lease_bytes(KV_PAGE_TOKENS, 4, 1);
+        let pool = Arc::new(KvPagePool::new(2 * b));
+        let l1 = pool.lease(b).expect("first fits");
+        let l2 = pool.lease(b).expect("second fits exactly");
+        assert!(pool.lease(b).is_none(), "third must be refused");
+        assert_eq!(pool.refusals(), 1);
+        // The live leases are untouched by the refusal.
+        assert_eq!(pool.live_leases(), 2);
+        assert_eq!(pool.used_bytes(), 2 * b);
+        drop(l2);
+        let l3 = pool.lease(b).expect("slot freed by release");
+        drop(l1);
+        drop(l3);
+        assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn pool_admits_single_over_budget_sequence() {
+        // A pool smaller than one sequence degrades to serial decode
+        // instead of deadlocking: the empty pool grants anything, but a
+        // second over-budget sequence waits.
+        let pool = Arc::new(KvPagePool::new(16));
+        let big = pool.lease(1_000_000).expect("empty pool grants any size");
+        assert!(pool.lease(1).is_none(), "pool no longer empty");
+        drop(big);
+        let ok = pool.lease(8).expect("empty again");
+        drop(ok);
+    }
+
+    #[test]
+    fn lease_bytes_round_to_whole_pages() {
+        let d = 8;
+        let one_page = KV_PAGE_TOKENS * kv_token_bytes(d);
+        assert_eq!(kv_lease_bytes(1, d, 1), one_page);
+        assert_eq!(kv_lease_bytes(KV_PAGE_TOKENS, d, 1), one_page);
+        assert_eq!(kv_lease_bytes(KV_PAGE_TOKENS + 1, d, 1), 2 * one_page);
+        assert_eq!(kv_lease_bytes(KV_PAGE_TOKENS, d, 3), 3 * one_page);
+        assert_eq!(kv_lease_bytes(0, d, 1), 0);
     }
 }

@@ -11,6 +11,9 @@ pub mod model_io;
 pub mod router;
 pub mod transformer;
 
+pub use attention::{
+    kv_lease_bytes, kv_token_bytes, KvCache, KvLease, KvPagePool, KV_PAGE_TOKENS,
+};
 pub use config::{ExpertArch, ExpertInit, ModelConfig};
 pub use expert::{ExpertForward, ExpertWeights};
 pub use layer::{

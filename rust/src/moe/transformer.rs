@@ -386,6 +386,68 @@ impl Model {
         self.lm_head.matvec(final_h.row(0))
     }
 
+    /// One decode step for several independent sequences at once — the
+    /// iteration-level continuous-batching path. `tokens[s]` is the token
+    /// fed to sequence `s` this step and `caches[s]` its per-block KV
+    /// stack; positions may differ per sequence (`caches[s][0].len`).
+    /// Returns per-sequence next-token logits.
+    ///
+    /// Layer-major like the prefill batch path: embeddings/norms run once
+    /// over the stacked `S × d` activations, attention runs per sequence
+    /// against its own cache (row-local, so each row is bit-identical to a
+    /// solo [`Self::decode_step_hooked`]), and the FFN goes through
+    /// [`FfnHook::ffn_forward_batch`] with one row per part — so the MoE
+    /// block routes ONCE per layer for the whole decode batch and the
+    /// serving hook's `try_serve_batch` sees all S sequences' expert wants
+    /// in a single window. Logits use the same per-row `matvec` as the
+    /// solo path. With a row-independent hook (or none) the batch is
+    /// bit-identical to S solo steps; under the serving engine's stateful
+    /// cost model only the *decisions* may differ, which is exactly what
+    /// the relaxed-parity harness bounds.
+    pub fn decode_step_batch_hooked(
+        &self,
+        tokens: &[u32],
+        caches: &mut [Vec<KvCache>],
+        hook: &dyn FfnHook,
+    ) -> Vec<Vec<f32>> {
+        let n = tokens.len();
+        assert_eq!(caches.len(), n, "one cache stack per sequence");
+        let d = self.cfg.d_model;
+        let mut h = Matrix::zeros(n, d);
+        for (s, &tok) in tokens.iter().enumerate() {
+            let posn = caches[s][0].len;
+            assert!(posn < self.cfg.max_seq);
+            for ((o, &e), &p) in h
+                .row_mut(s)
+                .iter_mut()
+                .zip(self.embed.row(tok as usize))
+                .zip(self.pos.row(posn))
+            {
+                *o = e + p;
+            }
+        }
+        // One row per part: sequence s owns row s.
+        let offsets: Vec<usize> = (0..=n).collect();
+        for (bi, block) in self.blocks.iter().enumerate() {
+            let normed = rmsnorm_mat(&h, &block.norm1);
+            for s in 0..n {
+                let attn_out =
+                    block.attn.forward_step(&normed.slice_rows(s, s + 1), &mut caches[s][bi]);
+                for (o, &v) in h.row_mut(s).iter_mut().zip(attn_out.row(0)) {
+                    *o += v;
+                }
+            }
+            let normed = rmsnorm_mat(&h, &block.norm2);
+            let ffn_out = match hook.ffn_forward_batch(bi, &normed, &offsets) {
+                Some(out) => out,
+                None => block.ffn.forward(&normed, None),
+            };
+            h.add_assign(&ffn_out);
+        }
+        let final_h = rmsnorm_mat(&h, &self.final_norm);
+        (0..n).map(|s| self.lm_head.matvec(final_h.row(s))).collect()
+    }
+
     /// Greedy generation from a prompt.
     pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
         let mut caches = self.fresh_caches();
@@ -544,6 +606,87 @@ mod tests {
             let span = h.slice_rows(offsets[r], offsets[r + 1]);
             assert_eq!(span.data, solo.data, "sequence {r} must match bitwise");
         }
+    }
+
+    #[test]
+    fn batched_decode_step_is_bit_identical_to_solo_steps() {
+        // The decode analogue of the prefill theorem: one batched step
+        // over S sequences at DIFFERENT positions must reproduce each
+        // sequence's solo decode_step bit-for-bit (attention is per-cache,
+        // everything else row-independent, logits per-row matvec).
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(9);
+        let m = Model::random(&cfg, &mut rng);
+        let prompts: [&[u32]; 3] = [&[3, 7, 1, 30], &[12, 8], &[0, 5, 9, 2, 31, 4]];
+
+        // Solo reference: run each sequence alone, recording every logit
+        // vector.
+        let mut solo_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        for p in prompts {
+            let mut caches = m.fresh_caches();
+            let mut per_step = Vec::new();
+            for &t in p {
+                per_step.push(m.decode_step(t, &mut caches));
+            }
+            // two greedy continuation steps
+            for _ in 0..2 {
+                let next = argmax(per_step.last().unwrap());
+                per_step.push(m.decode_step(next, &mut caches));
+            }
+            solo_logits.push(per_step);
+        }
+
+        // Batched: drive all three through decode_step_batch_hooked. The
+        // sequences have different lengths, so later steps feed a batch
+        // whose positions differ per sequence.
+        let mut caches: Vec<Vec<KvCache>> =
+            (0..3).map(|_| m.fresh_caches()).collect();
+        let steps = prompts.iter().map(|p| p.len()).max().unwrap() + 2;
+        let mut last: Vec<Option<Vec<f32>>> = vec![None; 3];
+        for step in 0..steps {
+            let mut idxs = Vec::new();
+            let mut toks = Vec::new();
+            for (s, p) in prompts.iter().enumerate() {
+                let fed = caches[s][0].len;
+                if fed >= p.len() + 2 {
+                    continue; // retired
+                }
+                let tok = if fed < p.len() {
+                    p[fed]
+                } else {
+                    argmax(last[s].as_ref().unwrap())
+                };
+                idxs.push(s);
+                toks.push(tok);
+            }
+            if idxs.is_empty() {
+                break;
+            }
+            // Pull out the active sequences' cache stacks in order.
+            let mut active: Vec<Vec<KvCache>> =
+                idxs.iter().map(|&s| std::mem::take(&mut caches[s])).collect();
+            let logits = m.decode_step_batch_hooked(&toks, &mut active, &NoHook);
+            for (k, &s) in idxs.iter().enumerate() {
+                caches[s] = std::mem::take(&mut active[k]);
+                let pos = caches[s][0].len - 1;
+                assert_eq!(
+                    logits[k], solo_logits[s][pos],
+                    "seq {s} step {step}: batched logits must equal solo bitwise"
+                );
+                last[s] = Some(logits[k].clone());
+            }
+        }
+        for (s, c) in caches.iter().enumerate() {
+            assert_eq!(c[0].len, prompts[s].len() + 2, "seq {s} ran to completion");
+        }
+    }
+
+    fn argmax(v: &[f32]) -> u32 {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u32)
+            .unwrap()
     }
 
     #[test]

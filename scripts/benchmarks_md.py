@@ -18,13 +18,25 @@ Anything else falls back to a top-level scalar dump. Graceful when
 it. Deterministic: files are processed in sorted order and nothing
 timestamps the output.
 
-Usage: benchmarks_md.py [--out BENCHMARKS.md]
+The page also carries a **Trends** section diffing key metrics across
+commits: every run appends (or, for a repeated commit, replaces) an
+entry in `reports/history.json` keyed by `git rev-parse --short HEAD`,
+and the table shows the last few commits side by side with a delta
+column against the previous one. `--no-history` renders without touching
+the history file (for read-only inspection).
+
+Usage: benchmarks_md.py [--out BENCHMARKS.md] [--no-history]
 """
 
 import glob
 import json
 import os
+import subprocess
 import sys
+
+HISTORY_PATH = os.path.join("reports", "history.json")
+HISTORY_KEEP = 20  # entries retained (one per distinct commit run)
+TREND_COLS = 5  # commits shown side by side in the Trends table
 
 
 def fmt(v, unit=""):
@@ -107,15 +119,121 @@ def render_generic(doc):
     return md_table(["field", "value"], [[k, fmt(v)] for k, v in sorted(scalars)])
 
 
+# ------------------------------------------------------------------ trends
+
+
+def trend_metrics(stem, doc):
+    """The flat scalar metrics one report contributes to the cross-commit
+    trend table, keyed `<stem>.<metric>`."""
+    m = {}
+    if doc.get("bench") == "scenarios":
+        for s in doc.get("scenarios", []):
+            tok = (s.get("virtual") or {}).get("tok_s")
+            if tok is not None:
+                m[f"{s['scenario']}.tok_s"] = round(tok, 1)
+    elif doc.get("bench") == "decode":
+        if doc.get("speedup") is not None:
+            m["speedup"] = round(doc["speedup"], 2)
+        for lane in ("sequential", "batched"):
+            tok = (doc.get(lane) or {}).get("tok_s")
+            if tok is not None:
+                m[f"{lane}.tok_s"] = round(tok, 1)
+        err = (doc.get("parity") or {}).get("max_rel_err")
+        if err is not None:
+            m["max_rel_err"] = float(f"{err:.2e}")
+    if "pass" in doc:
+        m["pass"] = bool(doc["pass"])
+    return {f"{stem}.{k}": v for k, v in m.items()}
+
+
+def git_head():
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        head = out.stdout.strip()
+        return head if out.returncode == 0 and head else None
+    except OSError:
+        return None
+
+
+def update_history(metrics):
+    """Append (or replace, for a re-run on the same commit) the current
+    metrics under HEAD's short hash; returns the trimmed history."""
+    commit = git_head() or "worktree"
+    history = []
+    if os.path.exists(HISTORY_PATH):
+        try:
+            with open(HISTORY_PATH) as f:
+                history = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            history = []
+    history = [e for e in history
+               if isinstance(e, dict) and "commit" in e and "metrics" in e]
+    if history and history[-1]["commit"] == commit:
+        history[-1]["metrics"] = metrics
+    else:
+        history.append({"commit": commit, "metrics": metrics})
+    history = history[-HISTORY_KEEP:]
+    os.makedirs("reports", exist_ok=True)
+    with open(HISTORY_PATH, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+    return history
+
+
+def delta(prev, cur):
+    if (prev is None or cur is None
+            or not isinstance(prev, (int, float)) or isinstance(prev, bool)
+            or not isinstance(cur, (int, float)) or isinstance(cur, bool)):
+        return "-"
+    d = cur - prev
+    if d == 0:
+        return "0"
+    pct = f" ({d / prev:+.1%})" if prev else ""
+    return f"{d:+.3g}{pct}"
+
+
+def render_trends(history):
+    shown = history[-TREND_COLS:]
+    lines = [f"Key metrics per commit (last {len(shown)} of {len(history)} "
+             f"recorded in `reports/history.json`; delta is newest vs "
+             f"previous).", ""]
+
+    def tfmt(v):
+        if v is None:
+            return "-"
+        if isinstance(v, bool):
+            return str(v).lower()
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    keys = sorted({k for e in shown for k in e["metrics"]})
+    header = (["metric"] + [e["commit"] for e in shown]
+              + (["delta"] if len(shown) > 1 else []))
+    rows = []
+    for k in keys:
+        vals = [e["metrics"].get(k) for e in shown]
+        row = [k] + [tfmt(v) for v in vals]
+        if len(shown) > 1:
+            row.append(delta(vals[-2], vals[-1]))
+        rows.append(row)
+    return lines + md_table(header, rows)
+
+
 def main():
     out_path = "BENCHMARKS.md"
+    with_history = True
     args = sys.argv[1:]
     while args:
         a = args.pop(0)
         if a == "--out":
             out_path = args.pop(0)
+        elif a == "--no-history":
+            with_history = False
         else:
-            sys.exit(f"usage: {sys.argv[0]} [--out BENCHMARKS.md]")
+            sys.exit(f"usage: {sys.argv[0]} [--out BENCHMARKS.md] "
+                     "[--no-history]")
 
     paths = sorted(glob.glob(os.path.join("reports", "BENCH_*.json")))
     lines = [
@@ -130,6 +248,7 @@ def main():
         lines += ["No reports found. Run `scripts/ci.sh` (or "
                   "`python3 scripts/sim_loadgen.py` on a toolchain-less "
                   "host) to populate `reports/`.", ""]
+    metrics = {}
     for path in paths:
         stem = os.path.basename(path)[len("BENCH_"):-len(".json")]
         try:
@@ -148,6 +267,11 @@ def main():
         else:
             lines += render_generic(doc)
         lines += [""]
+        metrics.update(trend_metrics(stem, doc))
+
+    if with_history and metrics:
+        history = update_history(metrics)
+        lines += ["## Trends", ""] + render_trends(history) + [""]
 
     with open(out_path, "w") as f:
         f.write("\n".join(lines).rstrip() + "\n")

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Decode-lane CI gate: throughput + relaxed-parity pins over a
+`BENCH_decode.json` document (from `scripts/sim_decode.py`, or a future
+engine-backed decode bench emitting the same shape).
+
+Gates:
+
+1. **Throughput** — batched decode tok/s >= `RESMOE_DECODE_SPEEDUP`
+   (default 2.0) x the sequential lane at the document's client count,
+   and the mean step batch actually exceeds 1 (batching happened).
+2. **Relaxed parity** — bit-identical greedy sequences in both
+   order-independent regimes (roomy = all-restore, zero = all-fused),
+   and the max per-token logit relative error against the sequential
+   reference stays under `RESMOE_DECODE_RELERR` (default 0.05) AND under
+   the document's own fused-approximation bound.
+3. **Conservation** — zero scheduler bookkeeping violations; KV page
+   pool drains (granted == released, used == 0) in the roomy run and
+   under refusals in the tight run.
+
+Writes gate outcomes merged into `reports/BENCH_decode.json`. Exits
+non-zero on any failed gate.
+
+Usage: check_decode.py BENCH_DECODE_JSON
+"""
+
+import sys
+
+from gatelib import GateSet, env_f, load_json
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit(f"usage: {sys.argv[0]} BENCH_DECODE_JSON")
+    doc = load_json(sys.argv[1])
+
+    gates = GateSet("check_decode")
+    gate = gates.gate
+
+    gate("document is a decode bench", doc.get("bench") == "decode",
+         f"bench={doc.get('bench')} source={doc.get('source')}")
+
+    speedup_min = env_f("RESMOE_DECODE_SPEEDUP", 2.0)
+    relerr_max = env_f("RESMOE_DECODE_RELERR", 0.05)
+
+    seq, bat = doc.get("sequential", {}), doc.get("batched", {})
+    gate(f"batched >= {speedup_min:g}x sequential tok/s "
+         f"at {doc.get('clients')} clients",
+         doc.get("speedup", 0.0) >= speedup_min,
+         f"{bat.get('tok_s', 0):.0f} vs {seq.get('tok_s', 0):.0f} tok/s "
+         f"({doc.get('speedup', 0.0):.2f}x)")
+    gate("decode steps actually batch",
+         bat.get("mean_step_batch", 0.0) > 1.0,
+         f"mean step batch {bat.get('mean_step_batch', 0.0):.2f}")
+
+    p = doc.get("parity", {})
+    for regime in ("roomy", "zero"):
+        gate(f"{regime} budget greedy sequences bit-identical",
+             p.get(f"greedy_match_{regime}") is True,
+             f"greedy_match_{regime}={p.get(f'greedy_match_{regime}')}")
+    bound = min(relerr_max, p.get("rel_err_bound", relerr_max))
+    gate(f"per-token logit rel-err <= {bound:.2e}",
+         p.get("max_rel_err", float("inf")) <= bound,
+         f"max {p.get('max_rel_err', float('inf')):.2e} over "
+         f"{p.get('rows_compared', 0)} rows")
+
+    s = doc.get("scheduler", {})
+    gate("scheduler bookkeeping conserves",
+         s.get("violations") == 0 and s.get("traces", 0) > 0,
+         f"{s.get('violations')} violation(s) over {s.get('traces')} traces")
+    for label in ("kv_pool", "kv_pool_tight"):
+        kp = doc.get(label, {})
+        gate(f"{label} conserves",
+             kp.get("conserved") is True
+             and kp.get("used") == 0
+             and kp.get("granted") == kp.get("released"),
+             f"granted {kp.get('granted')} released {kp.get('released')} "
+             f"used {kp.get('used')} refusals {kp.get('refusals')}")
+    gate("tight pool exercises the refusal path",
+         doc.get("kv_pool_tight", {}).get("refusals", 0) > 0,
+         f"{doc.get('kv_pool_tight', {}).get('refusals', 0)} refusal(s)")
+
+    report = dict(doc)
+    report["gates"] = {"speedup_min": speedup_min, "relerr_max": relerr_max}
+    gates.write_report("decode", report)
+    gates.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,7 @@ import sys
 from gatelib import GateSet, env_f, load_json, snapshot_schema
 
 EXPECTED = ("zipf09", "zipf12", "bursty", "mixed", "slow_reader",
-            "multi_tenant")
+            "multi_tenant", "gen_storm")
 
 
 def by_name(doc):

@@ -89,7 +89,9 @@ echo "== traffic scenarios: loadgen sweep + replay-identity gate =="
 # counter fingerprints across the two (fixed seed + worker invariance),
 # zero errors/degraded, sheds only in slow_reader, counter conservation,
 # and super-proportional top-decile expert skew in the zipf scenarios
-# -> reports/BENCH_scenarios.json. BENCHMARKS.md then re-renders every
+# -> reports/BENCH_scenarios.json. The set now includes gen_storm — the
+# closed-loop decode-heavy storm that drives the iteration-level decode
+# batcher inside the engine. BENCHMARKS.md then re-renders every
 # reports/BENCH_*.json produced above.
 cargo run --release --quiet -- loadgen --artifact "$PACK_DIR/model-q8.rmes" \
   --scenario all --seed 7 --vworkers 4 --cache-mb 1 \
@@ -99,6 +101,14 @@ cargo run --release --quiet -- loadgen --artifact "$PACK_DIR/model-q8.rmes" \
   --out "$PACK_DIR/scenarios_replay.json"
 python3 scripts/check_scenarios.py \
   "$PACK_DIR/scenarios_run.json" "$PACK_DIR/scenarios_replay.json"
+
+echo "== decode continuous batching: relaxed-parity sim + throughput gate =="
+# Seeded sequential-vs-batched decode simulation (scheduler conservation,
+# bit-parity in the order-independent budget regimes, logit rel-err bound,
+# KV page-pool accounting, >= 2x batched tok/s at 8 clients) -> the gate
+# (scripts/check_decode.py) pins all of it from reports/BENCH_decode.json.
+python3 scripts/sim_decode.py
+python3 scripts/check_decode.py reports/BENCH_decode.json
 python3 scripts/benchmarks_md.py
 
 echo "== batching scheduler/parity simulation (no-toolchain fallback validator) =="

@@ -21,6 +21,9 @@ Checks (mirroring rust/tests + rust/src/loadgen unit tests):
      bursty scenario forms both Full and Linger windows.
   5. the virtual service pipe is serial per tenant and latencies are
      exactly completion - arrival.
+  6. the closed-loop client pool (gen_storm) issues monotone arrivals,
+     never exceeds its in-flight bound, stays decode-dominated; open-loop
+     scenarios report the schedule's arrivals verbatim.
 
 Writes `reports/BENCH_scenarios.json` (source "python-sim"; the
 engine-only fields — response/counter fingerprints, cache decisions,
@@ -132,6 +135,7 @@ def base_scenario(name):
         "per_token_us": 40,
         "drain_gap_us": 0,
         "tenants": 1,
+        "closed_loop_clients": 0,
     }
 
 
@@ -157,7 +161,14 @@ def canned_scenarios():
                         arrivals={"kind": "poisson", "mean_gap_us": 300},
                         routing={"kind": "zipf", "weights": ZIPF12},
                         tenants=2)
-    return [zipf09, zipf12, bursty, mixed, slow_reader, multi_tenant]
+    gen_storm = dict(base_scenario("gen_storm"),
+                     arrivals={"kind": "poisson", "mean_gap_us": 250},
+                     routing={"kind": "zipf", "weights": ZIPF12},
+                     mix=(1, 8, 1),
+                     max_batch=8, linger_us=800,
+                     closed_loop_clients=8)
+    return [zipf09, zipf12, bursty, mixed, slow_reader, multi_tenant,
+            gen_storm]
 
 
 # --------------------------------------------------------------- schedule
@@ -296,6 +307,9 @@ class Replay:
         self.deadline_shed = []
         self.latency_us = [None] * n
         self.ttft_us = [None] * n
+        # Effective arrival per schedule index: t_us verbatim (open loop)
+        # or when the issuing client became ready (closed loop).
+        self.arrival_us = [0] * n
 
 
 def execute_window(sc, events, st, tenant, idxs, reason, formed_us,
@@ -303,7 +317,7 @@ def execute_window(sc, events, st, tenant, idxs, reason, formed_us,
     exec_start = max(formed_us, st.busy_until_us)
     live, shed = [], []
     for idx in idxs:
-        waited = max(exec_start - events[idx][0], 0)
+        waited = max(exec_start - out.arrival_us[idx], 0)
         if sc["deadline_us"] > 0 and waited > sc["deadline_us"]:
             shed.append(idx)
         else:
@@ -313,9 +327,10 @@ def execute_window(sc, events, st, tenant, idxs, reason, formed_us,
     completion = exec_start + dur
     st.busy_until_us = completion
     for idx in live:
-        out.latency_us[idx] = completion - events[idx][0]
+        out.latency_us[idx] = completion - out.arrival_us[idx]
         if events[idx][2] == 1:
-            out.ttft_us[idx] = exec_start + sc["base_us"] - events[idx][0]
+            out.ttft_us[idx] = (
+                max(exec_start + sc["base_us"] - out.arrival_us[idx], 0))
         drain = max(completion, st.drain_cursor_us)
         st.drain_cursor_us = drain + sc["drain_gap_us"]
         st.drains_us.append(drain)
@@ -342,6 +357,10 @@ def flush_due(sc, events, st, tenant, now_us, out):
 
 def replay(sc, events):
     out = Replay(len(events))
+    out.arrival_us = [ev[0] for ev in events]
+    if sc["closed_loop_clients"] > 0:
+        replay_closed(sc, events, out)
+        return out
     tenants = [TenantState(sc) for _ in range(max(sc["tenants"], 1))]
     for i, ev in enumerate(events):
         for t, st in enumerate(tenants):
@@ -371,6 +390,78 @@ def replay(sc, events):
     return out
 
 
+def unblock_clients(windows, seen, owner, ready):
+    """Mark clients whose requests finished in windows[seen:] ready: live
+    members at the window completion, shed members at pickup."""
+    for w in windows[seen:]:
+        for i in w["live"]:
+            if owner[i] != -1:
+                ready[owner[i]] = w["completion_us"]
+        for i in w["shed"]:
+            if owner[i] != -1:
+                ready[owner[i]] = w["exec_start_us"]
+    return len(windows)
+
+
+def replay_closed(sc, events, out):
+    """Closed-loop replay: a fixed pool issues events in schedule order,
+    at most one outstanding request per client; event i's think time is
+    the schedule's inter-arrival gap. Ported from schedule.rs verbatim."""
+    clients = sc["closed_loop_clients"]
+    tenants = [TenantState(sc) for _ in range(max(sc["tenants"], 1))]
+    ready = [0] * clients  # next-issue instant; MASK while blocked
+    owner = [-1] * len(events)  # schedule index -> issuing client
+    seen = 0
+    next_ev = 0
+    now = 0
+    while next_ev < len(events):
+        c, r = min(enumerate(ready), key=lambda p: (p[1], p[0]))
+        if r == MASK:
+            # Every client is blocked: jump to the earliest linger
+            # deadline, whose flush completes a window and unblocks it.
+            deadlines = [st.batcher.deadline_us() for st in tenants]
+            dl = min(d for d in deadlines if d is not None)
+            now = max(now, dl)
+            for tn, st in enumerate(tenants):
+                flush_due(sc, events, st, tn, now, out)
+            seen = unblock_clients(out.windows, seen, owner, ready)
+            continue
+        i = next_ev
+        next_ev += 1
+        think = events[0][0] if i == 0 else events[i][0] - events[i - 1][0]
+        t = max(now, min(r + think, MASK))
+        now = t
+        out.arrival_us[i] = t
+        for tn, st in enumerate(tenants):
+            flush_due(sc, events, st, tn, t, out)
+        tn = events[i][4]
+        st = tenants[tn]
+        depth = st.batcher.pending_len() + st.undrained_at(t)
+        if sc["max_queue"] > 0 and depth >= sc["max_queue"]:
+            out.admit_shed.append(i)
+            ready[c] = t  # instant Overloaded answer; think again from t
+        else:
+            owner[i] = c
+            ready[c] = MASK
+            st.batcher.push(i, t)
+            w = st.batcher.poll(t)
+            if w is not None:
+                items, reason, waited = w
+                execute_window(sc, events, st, tn, items, reason, t,
+                               waited, out)
+        seen = unblock_clients(out.windows, seen, owner, ready)
+    for tn, st in enumerate(tenants):
+        flush_due(sc, events, st, tn, MASK, out)
+        st.batcher.close()
+        while True:
+            w = st.batcher.poll(now)
+            if w is None:
+                break
+            items, reason, waited = w
+            execute_window(sc, events, st, tn, items, reason, now, waited,
+                           out)
+
+
 def percentile_us(sample, q):
     """Nearest-rank on the sorted sample: index (n-1)*q//100 (integer)."""
     if not sample:
@@ -394,7 +485,7 @@ def scenario_report(sc, seed, events, rp):
     live_tokens = sum(event_tokens(events[i])
                       for w in rp.windows for i in w["live"])
     makespan = (max((w["completion_us"] for w in rp.windows), default=0)
-                - (events[0][0] if events else 0))
+                - (rp.arrival_us[0] if rp.arrival_us else 0))
     reasons = [w["reason"] for w in rp.windows]
     nonempty = sum(1 for w in rp.windows if w["live"])
 
@@ -517,6 +608,44 @@ def main():
     failures += not check("bursty: forms Full and Linger windows",
                           FULL in reasons and LINGER in reasons,
                           ",".join(sorted(reasons)))
+
+    # Closed-loop client model (gen_storm): arrivals monotone, in-flight
+    # never exceeds the pool, and the mix is decode-dominated. Mirrors
+    # closed_loop_bounds_in_flight_requests in schedule.rs.
+    sc = next(s for s in canned_scenarios() if s["name"] == "gen_storm")
+    events = generate(sc, seed)
+    rp = replay(sc, events)
+    failures += not check(
+        "gen_storm: closed-loop arrivals monotone",
+        all(a <= b for a, b in zip(rp.arrival_us, rp.arrival_us[1:])))
+    done = [0] * len(events)
+    for w in rp.windows:
+        for i in w["live"]:
+            done[i] = w["completion_us"]
+        for i in w["shed"]:
+            done[i] = w["exec_start_us"]
+    for i in rp.admit_shed:
+        done[i] = rp.arrival_us[i]
+    pool = sc["closed_loop_clients"]
+    worst = max(
+        (sum(1 for j in range(len(events))
+             if rp.arrival_us[j] <= a and done[j] > a)
+         for a in rp.arrival_us),
+        default=0)
+    failures += not check(
+        f"gen_storm: in-flight bounded by pool of {pool}",
+        worst <= pool, f"peak {worst} in flight")
+    gens = sum(1 for ev in events if ev[2] == 1)
+    failures += not check(
+        "gen_storm: decode-dominated mix",
+        gens * 2 >= len(events), f"{gens}/{len(events)} generates")
+    # Open loop leaves arrivals verbatim (closed loop generalizes them).
+    sc = next(s for s in canned_scenarios() if s["name"] == "mixed")
+    events = generate(sc, seed)
+    rp = replay(sc, events)
+    failures += not check(
+        "mixed: open-loop arrivals pass through verbatim",
+        all(a == ev[0] for a, ev in zip(rp.arrival_us, events)))
 
     if write_report:
         os.makedirs("reports", exist_ok=True)
